@@ -1,0 +1,122 @@
+//! Hogwild! training (§5.4): multiple worker processes updating *shared*
+//! model parameters lock-free through `torsk::multiproc` shared-memory
+//! tensors — "transparently handles sharing … making it easy to implement
+//! techniques like Hogwild".
+//!
+//! Task: logistic regression on a planted linearly-separable problem.
+//! Each of 4 forked workers pulls its own minibatches and applies SGD
+//! updates directly into the shared parameter tensors without any locks.
+//!
+//! Run: `cargo run --release --example hogwild`
+
+use std::path::PathBuf;
+
+use torsk::multiproc::{fork_workers, SharedTensor};
+use torsk::prelude::*;
+use torsk::rng::Rng;
+
+const DIM: usize = 16;
+const WORKERS: usize = 4;
+const STEPS_PER_WORKER: usize = 300;
+const BATCH: usize = 16;
+
+/// Ground-truth weights used to plant the labels.
+fn truth() -> Vec<f32> {
+    (0..DIM).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect()
+}
+
+fn make_batch(r: &mut Rng) -> (Tensor, Tensor) {
+    let w = truth();
+    let mut xs = Vec::with_capacity(BATCH * DIM);
+    let mut ys = Vec::with_capacity(BATCH);
+    for _ in 0..BATCH {
+        let x: Vec<f32> = (0..DIM).map(|_| r.normal()).collect();
+        let dot: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        ys.push(if dot > 0.0 { 1.0f32 } else { 0.0 });
+        xs.extend(x);
+    }
+    (Tensor::from_vec(xs, &[BATCH, DIM]), Tensor::from_vec(ys, &[BATCH, 1]))
+}
+
+fn accuracy(w: &Tensor, b: &Tensor, n: usize, seed: u64) -> f32 {
+    let mut r = Rng::new(seed);
+    let mut correct = 0;
+    no_grad(|| {
+        for _ in 0..n {
+            let (x, y) = make_batch(&mut r);
+            let p = ops::sigmoid(&ops::add(&ops::matmul(&x, &w.reshape(&[DIM, 1])), b));
+            let pv = p.to_vec::<f32>();
+            let yv = y.to_vec::<f32>();
+            correct += pv.iter().zip(&yv).filter(|(p, y)| (**p > 0.5) == (**y > 0.5)).count();
+        }
+    });
+    correct as f32 / (n * BATCH) as f32
+}
+
+fn shm_dir() -> PathBuf {
+    let d = PathBuf::from("/dev/shm");
+    if d.exists() {
+        d
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+fn main() {
+    torsk::rng::manual_seed(3);
+    let wpath = shm_dir().join(format!("torsk_hogwild_w_{}", std::process::id()));
+    let bpath = shm_dir().join(format!("torsk_hogwild_b_{}", std::process::id()));
+
+    // Shared parameters, initialized to zero.
+    let shared_w = SharedTensor::create(&wpath, &[DIM], DType::F32).unwrap();
+    let shared_b = SharedTensor::create(&bpath, &[1, 1], DType::F32).unwrap();
+
+    let acc0 = accuracy(&shared_w.tensor(), &shared_b.tensor(), 20, 777);
+    println!("accuracy before training: {:.1}%", acc0 * 100.0);
+
+    let (wp, bp) = (wpath.clone(), bpath.clone());
+    fork_workers(WORKERS, move |rank| {
+        // Each worker maps the same shared parameters...
+        let sw = SharedTensor::open(&wp).unwrap();
+        let sb = SharedTensor::open(&bp).unwrap();
+        let w = sw.tensor(); // zero-copy views
+        let b = sb.tensor();
+        let mut r = Rng::new(1000 + rank as u64);
+        for _ in 0..STEPS_PER_WORKER {
+            let (x, y) = make_batch(&mut r);
+            // Manual forward/backward on a *snapshot-free* read of the
+            // shared weights (Hogwild reads may be torn; that's the point).
+            let w_col = w.detach().reshape(&[DIM, 1]).requires_grad(true);
+            let b_leaf = b.detach().contiguous().requires_grad(true);
+            let p = ops::sigmoid(&ops::add(&ops::matmul(&x, &w_col), &b_leaf));
+            let loss = ops::bce_loss(&p, &y);
+            loss.backward();
+            // ...and writes updates straight into shared memory, no locks.
+            no_grad(|| {
+                w.axpy_(-0.1, &w_col.grad().unwrap().reshape(&[DIM]));
+                b.axpy_(-0.1, &b_leaf.grad().unwrap());
+            });
+        }
+    })
+    .expect("hogwild workers");
+
+    let w = shared_w.tensor();
+    let b = shared_b.tensor();
+    let acc = accuracy(&w, &b, 20, 777);
+    println!("accuracy after {WORKERS} hogwild workers x {STEPS_PER_WORKER} steps: {:.1}%", acc * 100.0);
+
+    // Learned weights should align with the planted signs.
+    let wv = w.to_vec::<f32>();
+    let aligned = wv
+        .iter()
+        .zip(truth().iter())
+        .filter(|(l, t)| l.signum() == t.signum())
+        .count();
+    println!("sign agreement with planted weights: {aligned}/{DIM}");
+
+    shared_w.unlink();
+    shared_b.unlink();
+    assert!(acc > 0.9, "hogwild training should reach >90% (got {acc})");
+    assert!(aligned >= DIM - 2);
+    println!("hogwild OK");
+}

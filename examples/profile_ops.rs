@@ -1,0 +1,41 @@
+use torsk::models::{BenchModel, ResNet50, Vgg19};
+use torsk::profiler::{self, Track};
+use std::collections::HashMap;
+
+fn main() {
+    torsk::rng::manual_seed(0);
+    let which = std::env::args().nth(1).unwrap_or_else(|| "resnet".into());
+    let model: Box<dyn BenchModel> = if which == "vgg" {
+        Box::new(Vgg19::new(3, 32, 10, 16))
+    } else {
+        Box::new(ResNet50::new(3, 32, 10, 16))
+    };
+    let batch = model.make_batch(0);
+    // Warmup
+    model.loss(&batch).backward();
+    for p in model.parameters() { p.set_grad(None); }
+
+    let t0 = std::time::Instant::now();
+    profiler::start();
+    let loss = model.loss(&batch);
+    let t_fwd = t0.elapsed();
+    loss.backward();
+    let t_tot = t0.elapsed();
+    let events = profiler::stop();
+    println!("forward: {:?}  backward: {:?}", t_fwd, t_tot - t_fwd);
+
+    let mut agg: HashMap<String, (u64, usize)> = HashMap::new();
+    for e in &events {
+        if e.track == Track::Host {
+            let entry = agg.entry(e.name.clone()).or_default();
+            entry.0 += e.dur_ns();
+            entry.1 += 1;
+        }
+    }
+    let mut rows: Vec<_> = agg.into_iter().collect();
+    rows.sort_by_key(|(_, (ns, _))| std::cmp::Reverse(*ns));
+    println!("{:<24} {:>10} {:>8}", "op", "total ms", "count");
+    for (name, (ns, count)) in rows.iter().take(20) {
+        println!("{:<24} {:>10.1} {:>8}", name, *ns as f64 / 1e6, count);
+    }
+}

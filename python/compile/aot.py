@@ -1,0 +1,102 @@
+"""AOT pipeline: lower every L2 train-step graph to HLO text + manifest.
+
+Run once by ``make artifacts``:
+
+    python -m compile.aot --out-dir ../artifacts [--only name,name]
+
+Emits ``artifacts/<name>.hlo.txt`` (HLO **text** — xla_extension 0.5.1
+rejects jax>=0.5 serialized protos with 64-bit ids; the text parser
+reassigns ids) and ``artifacts/manifest.tsv`` consumed by
+``rust/src/runtime``: ``name \\t num_outputs \\t spec;spec;…``.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+# The Rust boundary uses i64 indices (PyTorch convention); without x64 JAX
+# silently lowers int64 specs as int32 and the PJRT executable rejects the
+# 8-byte buffers.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_string(s) -> str:
+    if s.dtype == jnp.float32:
+        ty = "f32"
+    elif s.dtype in (jnp.int64, jnp.dtype("int64")):
+        ty = "i64"
+    else:
+        raise ValueError(f"unsupported dtype {s.dtype}")
+    return f"{ty}[{','.join(str(d) for d in s.shape)}]"
+
+
+def lower_spec(spec: model.ModelSpec, out_dir: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(spec.fn).lower(*spec.example_inputs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Output arity: run the traced fn abstractly.
+    out_shapes = jax.eval_shape(spec.fn, *spec.example_inputs)
+    n_out = len(out_shapes) if isinstance(out_shapes, tuple) else 1
+    dt = time.time() - t0
+    print(f"  {spec.name}: {len(text) / 1e6:.1f} MB HLO, {n_out} outputs, {dt:.1f}s")
+    return {
+        "name": spec.name,
+        "n_out": n_out,
+        "inputs": [spec_string(s) for s in spec.example_inputs],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(x for x in args.only.split(",") if x)
+    entries = []
+    specs = [s for s in model.all_specs() if not only or s.name in only]
+    print(f"lowering {len(specs)} artifacts -> {args.out_dir}")
+    for spec in specs:
+        entries.append(lower_spec(spec, args.out_dir))
+
+    manifest_path = os.path.join(args.out_dir, "manifest.tsv")
+    existing = {}
+    if os.path.exists(manifest_path) and only:
+        # Partial regeneration keeps other entries.
+        with open(manifest_path) as f:
+            for line in f:
+                if line.strip() and not line.startswith("#"):
+                    existing[line.split("\t")[0]] = line.rstrip("\n")
+    for e in entries:
+        existing[e["name"]] = f"{e['name']}\t{e['n_out']}\t{';'.join(e['inputs'])}"
+    with open(manifest_path, "w") as f:
+        f.write("# torsk AOT manifest: name \\t num_outputs \\t input specs\n")
+        for name in sorted(existing):
+            f.write(existing[name] + "\n")
+    print(f"wrote {manifest_path} ({len(existing)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""L1 kernel composition: conv2d = im2col (data movement) + Pallas matmul
+(MXU compute).
+
+Hardware adaptation (DESIGN.md §2): GPU convs tile threadblocks over
+output pixels with shared-memory staging; on TPU the winning strategy is
+to reshape convolution into the MXU's native matmul. im2col materializes
+the patch matrix (pure layout work XLA fuses into the surrounding
+computation), and the 128x128-tiled Pallas matmul does the FLOPs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as pk_matmul
+
+
+def _im2col(x, kh, kw, stride, padding):
+    """x [N,C,H,W] -> patches [N, C*KH*KW, HO*WO]."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    # Gather kh*kw strided slices; unrolled at trace time (kh,kw static).
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = jax.lax.slice(
+                xp,
+                (0, 0, ky, kx),
+                (n, c, ky + (ho - 1) * stride + 1, kx + (wo - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )  # [N, C, HO, WO]
+            cols.append(sl.reshape(n, c, 1, ho * wo))
+    col = jnp.concatenate(cols, axis=2)  # [N, C, KH*KW, HO*WO]
+    return col.reshape(n, c * kh * kw, ho * wo), ho, wo
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "groups"))
+def conv2d(x, w, b=None, stride=1, padding=0, groups=1):
+    """NCHW conv, weights OIHW [C_out, C_in/groups, KH, KW]."""
+    n, c_in, _, _ = x.shape
+    c_out, cg_in, kh, kw = w.shape
+    assert c_in % groups == 0 and c_out % groups == 0
+    assert cg_in == c_in // groups
+
+    outs = []
+    cg_out = c_out // groups
+    for g in range(groups):
+        xg = x[:, g * cg_in:(g + 1) * cg_in]
+        wg = w[g * cg_out:(g + 1) * cg_out].reshape(cg_out, cg_in * kh * kw)
+        col, ho, wo = _im2col(xg, kh, kw, stride, padding)  # [N, R, P]
+        # Batch the N dimension into the matmul M dimension:
+        # [N, R, P] -> [R, N*P] so one big MXU matmul covers the batch.
+        r = col.shape[1]
+        col2 = col.transpose(1, 0, 2).reshape(r, -1)
+        yg = pk_matmul.matmul(wg, col2)  # [cg_out, N*P]
+        yg = yg.reshape(cg_out, n, ho * wo).transpose(1, 0, 2)
+        outs.append(yg.reshape(n, cg_out, ho, wo))
+    out = outs[0] if groups == 1 else jnp.concatenate(outs, axis=1)
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out

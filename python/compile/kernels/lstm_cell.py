@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused LSTM gate math.
+
+The gate projections (two matmuls) go through the MXU via the Pallas
+matmul; this kernel fuses the remaining VPU work — 3 sigmoids, 2 tanhs,
+2 multiplies, 1 add — into one VMEM pass over the [N, 4H] preactivations,
+instead of 8 separate elementwise HLO ops bouncing through HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as pk_matmul
+
+BLOCK_ROWS = 32
+
+
+def _gates_kernel(pre_ref, c_ref, h_out_ref, c_out_ref):
+    pre = pre_ref[...]  # [R, 4H]
+    c = c_ref[...]  # [R, H]
+    hsz = c.shape[-1]
+    i = jax.nn.sigmoid(pre[:, 0 * hsz:1 * hsz])
+    f = jax.nn.sigmoid(pre[:, 1 * hsz:2 * hsz])
+    g = jnp.tanh(pre[:, 2 * hsz:3 * hsz])
+    o = jax.nn.sigmoid(pre[:, 3 * hsz:4 * hsz])
+    c_new = f * c + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def _lstm_gates_forward(preact, c):
+    """Fused gate math: preact [N, 4H], c [N, H] -> (h', c')."""
+    n, hsz4 = preact.shape
+    hsz = hsz4 // 4
+    pad = (-n) % BLOCK_ROWS
+    pre_p = jnp.pad(preact, ((0, pad), (0, 0)))
+    c_p = jnp.pad(c, ((0, pad), (0, 0)))
+    rows = pre_p.shape[0]
+
+    h_new, c_new = pl.pallas_call(
+        _gates_kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, 4 * hsz), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, hsz), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, hsz), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, hsz), jnp.float32),
+            jax.ShapeDtypeStruct((rows, hsz), jnp.float32),
+        ],
+        interpret=True,
+    )(pre_p, c_p)
+    return h_new[:n], c_new[:n]
+
+
+@jax.custom_vjp
+def lstm_gates(preact, c):
+    """Differentiable fused LSTM gate math (VJP via gate formulas)."""
+    return _lstm_gates_forward(preact, c)
+
+
+def _gates_fwd(preact, c):
+    out = _lstm_gates_forward(preact, c)
+    return out, (preact, c)
+
+
+def _gates_bwd(res, grads):
+    preact, c = res
+    gh, gc_out = grads
+    hsz = c.shape[-1]
+    i = jax.nn.sigmoid(preact[:, 0 * hsz:1 * hsz])
+    f = jax.nn.sigmoid(preact[:, 1 * hsz:2 * hsz])
+    g = jnp.tanh(preact[:, 2 * hsz:3 * hsz])
+    o = jax.nn.sigmoid(preact[:, 3 * hsz:4 * hsz])
+    c_new = f * c + i * g
+    tc = jnp.tanh(c_new)
+    # dL/dc_new from both outputs.
+    dc_new = gc_out + gh * o * (1.0 - tc * tc)
+    do = gh * tc
+    di = dc_new * g
+    df = dc_new * c
+    dg = dc_new * i
+    dpre = jnp.concatenate([
+        di * i * (1 - i),
+        df * f * (1 - f),
+        dg * (1 - g * g),
+        do * o * (1 - o),
+    ], axis=-1)
+    dc = dc_new * f
+    return dpre, dc
+
+
+lstm_gates.defvjp(_gates_fwd, _gates_bwd)
+
+
+def lstm_cell(x, h, c, w_ih, w_hh, b):
+    """Full LSTM step: MXU projections + fused gates.
+
+    x [N, I], h/c [N, H], w_ih [4H, I], w_hh [4H, H], b [4H].
+    """
+    preact = pk_matmul.linear(x, w_ih, b) + pk_matmul.matmul(h, w_hh.T)
+    return lstm_gates(preact, c)

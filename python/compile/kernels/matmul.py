@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: MXU-tiled blocked matmul.
+
+The compute hot-spot of every Table 1 model (fc layers, im2col'd convs,
+LSTM gate projections, attention). Tiled for the TPU memory hierarchy:
+
+- block shapes default to 128x128x128 — MXU-aligned (the systolic array is
+  128x128) and VMEM-frugal: 3 f32 blocks live = 192 KiB out of ~16 MiB, so
+  the scheduler has ample room to double-buffer HBM->VMEM copies;
+- the K loop is the innermost grid dimension, accumulating into the output
+  block resident in VMEM (revisited across the K grid steps);
+- operands are zero-padded to block multiples by the wrapper, keeping the
+  kernel branch-free (dimension-order guarantees in Mosaic).
+
+Runs under ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation for
+estimated real-TPU characteristics).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: o[m,n] += a[m,k] @ b[k,n]."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_raw(a, b, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """C = A @ B via the Pallas kernel, any (m, k) x (k, n) f32 shapes.
+
+    Forward-only primitive; use [`matmul`] for the differentiable op.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    a_p = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b_p = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = a_p.shape
+    _, np_ = b_p.shape
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def linear(x, w, b=None):
+    """PyTorch-layout linear: x [N, in] @ w[out, in].T + b."""
+    y = matmul(x, w.T)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# Differentiable wrapper: Pallas kernels are forward primitives; the VJP is
+# expressed with the same kernel (dA = G @ Bᵀ, dB = Aᵀ @ G), exactly how
+# production frameworks register hand-written backward kernels.
+@jax.custom_vjp
+def matmul(a, b):
+    return matmul_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul_raw(g, b.T), matmul_raw(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every L1 kernel in this package has a reference implementation here, and
+``python/tests/test_kernels.py`` sweeps shapes/dtypes (hypothesis) asserting
+``assert_allclose(kernel(...), ref(...))``. These oracles are also what the
+L2 models are differentiated against conceptually — the kernels must be
+drop-in replacements.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """C = A @ B for 2-D f32 operands."""
+    return jnp.matmul(a, b)
+
+
+def linear_ref(x, w, b):
+    """PyTorch Linear layout: y = x @ w.T + b with w [out, in]."""
+    return jnp.matmul(x, w.T) + b
+
+
+def conv2d_ref(x, w, b=None, stride=1, padding=0, groups=1):
+    """NCHW conv via lax.conv_general_dilated (the cuDNN-equivalent)."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out
+
+
+def softmax_ref(x):
+    """Row softmax over the last dim, numerically stable."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def log_softmax_ref(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    return x - m - jnp.log(jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True))
+
+
+def softmax_xent_ref(logits, targets):
+    """Mean cross-entropy of i32/i64 targets against [N, C] logits."""
+    lp = log_softmax_ref(logits)
+    n = logits.shape[0]
+    picked = lp[jnp.arange(n), targets]
+    return -jnp.mean(picked)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dim."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def lstm_gates_ref(preact, c):
+    """Fused LSTM gate math: preact [N, 4H] (i,f,g,o blocks), cell c [N, H].
+
+    Returns (h', c').
+    """
+    hsz = c.shape[-1]
+    i = jax.nn.sigmoid(preact[:, 0 * hsz:1 * hsz])
+    f = jax.nn.sigmoid(preact[:, 1 * hsz:2 * hsz])
+    g = jnp.tanh(preact[:, 2 * hsz:3 * hsz])
+    o = jax.nn.sigmoid(preact[:, 3 * hsz:4 * hsz])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

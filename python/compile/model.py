@@ -1,0 +1,491 @@
+"""L2: JAX train-step graphs for the torsk benchmark models.
+
+Each model here mirrors its Rust eager twin (rust/src/models/*) and is
+lowered once by ``aot.py`` into a whole-train-step XLA graph
+
+    step(batch..., *params) -> (loss, *updated_params)
+
+with the SGD update fused into the graph — the static-graph execution
+mode that stands in for TensorFlow/CNTK/MXNet in Table 1 (DESIGN.md §2).
+Compute hot-spots go through the L1 Pallas kernels (matmul/linear,
+softmax-xent, LSTM gates); convolutions use lax.conv (the XLA "vendor
+kernel") in the big CNN graphs, with the Pallas im2col+matmul conv
+exercised by the standalone `conv_block` artifact and the kernel tests.
+
+Parameter order is the flattened list order of each model's `init()`;
+the Rust side reads shapes from the manifest, so only the *order* is a
+contract (documented per model below).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as pk_conv
+from .kernels import lstm_cell as pk_lstm
+from .kernels import matmul as pk_matmul
+from .kernels import ref
+from .kernels import softmax_xent as pk_sx
+
+
+# ----------------------------------------------------------------------
+# Common pieces
+# ----------------------------------------------------------------------
+
+def _sgd(params, grads, lr):
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+def _kaiming(key, shape):
+    fan_in = 1
+    for d in shape[1:]:
+        fan_in *= d
+    bound = (2.0 ** 0.5) * (3.0 / fan_in) ** 0.5
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound)
+
+
+def _keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+class ModelSpec:
+    """What aot.py needs to lower one artifact."""
+
+    def __init__(self, name, fn, example_inputs, n_batch_inputs):
+        self.name = name
+        self.fn = fn
+        self.example_inputs = example_inputs
+        self.n_batch_inputs = n_batch_inputs
+
+
+# ----------------------------------------------------------------------
+# MLP (quickstart + eager-vs-graph agreement tests)
+# Params: [w1 [H,I], b1 [H], w2 [C,H], b2 [C]]
+# ----------------------------------------------------------------------
+
+MLP_IN, MLP_HIDDEN, MLP_CLASSES, MLP_BATCH = 16, 32, 4, 8
+
+
+def mlp_forward(x, params):
+    w1, b1, w2, b2 = params
+    h = jax.nn.relu(pk_matmul.linear(x, w1, b1))
+    return pk_matmul.linear(h, w2, b2)
+
+
+def mlp_loss(params, x, y):
+    return pk_sx.softmax_xent(mlp_forward(x, params), y)
+
+
+def mlp_step(lr, x, y, *params):
+    params = list(params)
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y)
+    return tuple([loss] + _sgd(params, grads, lr))
+
+
+def mlp_init(seed=0):
+    ks = _keys(jax.random.PRNGKey(seed), 4)
+    return [
+        _kaiming(ks[0], (MLP_HIDDEN, MLP_IN)),
+        jnp.zeros((MLP_HIDDEN,), jnp.float32),
+        _kaiming(ks[1], (MLP_CLASSES, MLP_HIDDEN)),
+        jnp.zeros((MLP_CLASSES,), jnp.float32),
+    ]
+
+
+def mlp_spec():
+    x = jax.ShapeDtypeStruct((MLP_BATCH, MLP_IN), jnp.float32)
+    y = jax.ShapeDtypeStruct((MLP_BATCH,), jnp.int64)
+    params = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in mlp_init()]
+    return ModelSpec("mlp_step", functools.partial(mlp_step, 0.1), [x, y] + params, 2)
+
+
+# ----------------------------------------------------------------------
+# Generic CNN builder mirroring the Rust model configs.
+# A layer spec is one of:
+#   ("conv", c_in, c_out, k, stride, pad, groups)  [+ bias]
+#   ("relu",) ("maxpool", k, s) ("gap",) ("flatten",)
+#   ("linear", d_in, d_out)
+# Params: for each conv: w, b ; for each linear: w, b — in layer order.
+# ----------------------------------------------------------------------
+
+def cnn_forward(x, params, layers):
+    i = 0
+    for spec in layers:
+        kind = spec[0]
+        if kind == "conv":
+            _, c_in, c_out, k, stride, pad, groups = spec
+            w, b = params[i], params[i + 1]
+            i += 2
+            x = ref.conv2d_ref(x, w, b, stride=stride, padding=pad, groups=groups)
+        elif kind == "relu":
+            x = jax.nn.relu(x)
+        elif kind == "maxpool":
+            _, k, s = spec
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, s, s), "VALID"
+            )
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(2, 3))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "linear":
+            w, b = params[i], params[i + 1]
+            i += 2
+            x = pk_matmul.linear(x, w, b)
+        else:
+            raise ValueError(kind)
+    assert i == len(params), f"consumed {i} of {len(params)} params"
+    return x
+
+
+def cnn_init(layers, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for spec in layers:
+        if spec[0] == "conv":
+            _, c_in, c_out, k, stride, pad, groups = spec
+            key, k1 = jax.random.split(key)
+            params.append(_kaiming(k1, (c_out, c_in // groups, k, k)))
+            params.append(jnp.zeros((c_out,), jnp.float32))
+        elif spec[0] == "linear":
+            _, d_in, d_out = spec
+            key, k1 = jax.random.split(key)
+            params.append(_kaiming(k1, (d_out, d_in)))
+            params.append(jnp.zeros((d_out,), jnp.float32))
+    return params
+
+
+def cnn_step(layers, lr, x, y, *params):
+    params = list(params)
+
+    def loss_fn(ps):
+        return pk_sx.softmax_xent(cnn_forward(x, ps, layers), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return tuple([loss] + _sgd(params, grads, lr))
+
+
+def _cnn_spec(name, layers, batch, hw=32, classes=10, lr=0.05):
+    x = jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int64)
+    params = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in cnn_init(layers)]
+    return ModelSpec(name, functools.partial(cnn_step, layers, lr), [x, y] + params, 2)
+
+
+def alexnet_layers():
+    """Mirror of rust/src/models/alexnet.rs (width/4, 32x32)."""
+    return [
+        ("conv", 3, 16, 3, 1, 1, 1), ("relu",), ("maxpool", 2, 2),
+        ("conv", 16, 48, 3, 1, 1, 1), ("relu",), ("maxpool", 2, 2),
+        ("conv", 48, 96, 3, 1, 1, 1), ("relu",),
+        ("conv", 96, 64, 3, 1, 1, 1), ("relu",),
+        ("conv", 64, 64, 3, 1, 1, 1), ("relu",), ("maxpool", 2, 2),
+        ("flatten",),
+        ("linear", 64 * 4 * 4, 512), ("relu",),
+        ("linear", 512, 256), ("relu",),
+        ("linear", 256, 10),
+    ]
+
+
+def vgg19_layers():
+    layers = []
+    c = 3
+    for width, convs in [(16, 2), (32, 2), (64, 4), (128, 4), (128, 4)]:
+        for _ in range(convs):
+            layers += [("conv", c, width, 3, 1, 1, 1), ("relu",)]
+            c = width
+        layers.append(("maxpool", 2, 2))
+    layers += [
+        ("flatten",),
+        ("linear", 128, 256), ("relu",),
+        ("linear", 256, 256), ("relu",),
+        ("linear", 256, 10),
+    ]
+    return layers
+
+
+def mobilenet_layers():
+    """Depthwise-separable stack (width/2), no BN in the graph twin."""
+    layers = [("conv", 3, 16, 3, 1, 1, 1), ("relu",)]
+
+    def sep(c_in, c_out, stride):
+        return [
+            ("conv", c_in, c_in, 3, stride, 1, c_in), ("relu",),
+            ("conv", c_in, c_out, 1, 1, 0, 1), ("relu",),
+        ]
+
+    layers += sep(16, 32, 1)
+    layers += sep(32, 64, 2)
+    layers += sep(64, 64, 1)
+    layers += sep(64, 128, 2)
+    layers += sep(128, 128, 1)
+    layers += sep(128, 256, 2)
+    for _ in range(5):
+        layers += sep(256, 256, 1)
+    layers += sep(256, 512, 2)
+    layers += sep(512, 512, 1)
+    layers += [("gap",), ("linear", 512, 10)]
+    return layers
+
+
+# ResNet-50 graph twin: bottleneck blocks, BN replaced by bias (graph
+# baselines in Table 1 share kernels, not training semantics; the eager
+# twin's BN is exercised in Rust).
+def resnet50_layers_blocks():
+    widths = [16, 32, 64, 128]
+    blocks = [3, 4, 6, 3]
+    return widths, blocks
+
+
+def resnet50_init(seed=0):
+    widths, blocks = resnet50_layers_blocks()
+    key = jax.random.PRNGKey(seed)
+    params = []
+
+    def conv_param(c_in, c_out, k):
+        nonlocal key
+        key, k1 = jax.random.split(key)
+        params.append(_kaiming(k1, (c_out, c_in, k, k)))
+        params.append(jnp.zeros((c_out,), jnp.float32))
+
+    conv_param(3, 16, 3)  # stem
+    c = 16
+    for s, (w, n) in enumerate(zip(widths, blocks)):
+        for b in range(n):
+            c_out = w * 4
+            conv_param(c, w, 1)
+            conv_param(w, w, 3)
+            conv_param(w, c_out, 1)
+            if b == 0:  # downsample projection
+                conv_param(c, c_out, 1)
+            c = c_out
+    # fc
+    key, k1 = jax.random.split(key)
+    params.append(_kaiming(k1, (10, 512)))
+    params.append(jnp.zeros((10,), jnp.float32))
+    return params
+
+
+def resnet50_forward(x, params):
+    widths, blocks = resnet50_layers_blocks()
+    i = 0
+
+    def conv(x, stride=1, pad=0):
+        nonlocal i
+        w, b = params[i], params[i + 1]
+        i += 2
+        return ref.conv2d_ref(x, w, b, stride=stride, padding=pad)
+
+    x = jax.nn.relu(conv(x, stride=1, pad=1))  # stem
+    for s, (w_, n) in enumerate(zip(widths, blocks)):
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            out = jax.nn.relu(conv(x, stride=1, pad=0))
+            out = jax.nn.relu(conv(out, stride=stride, pad=1))
+            out = conv(out, stride=1, pad=0)
+            if b == 0:
+                identity = conv(x, stride=stride, pad=0)
+            else:
+                identity = x
+            x = jax.nn.relu(out + identity)
+    x = jnp.mean(x, axis=(2, 3))
+    w, b = params[i], params[i + 1]
+    i += 2
+    assert i == len(params)
+    return pk_matmul.linear(x, w, b)
+
+
+def resnet50_step(lr, x, y, *params):
+    params = list(params)
+
+    def loss_fn(ps):
+        return pk_sx.softmax_xent(resnet50_forward(x, ps), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return tuple([loss] + _sgd(params, grads, lr))
+
+
+def resnet50_spec(batch=16):
+    x = jax.ShapeDtypeStruct((batch, 3, 32, 32), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int64)
+    params = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in resnet50_init()]
+    return ModelSpec("resnet50_step", functools.partial(resnet50_step, 0.05), [x, y] + params, 2)
+
+
+# ----------------------------------------------------------------------
+# GNMT: LSTM encoder/decoder + dot attention (scaled like the Rust twin).
+# Params: [embed, enc(w_ih,w_hh,b)x2, dec(w_ih,w_hh,b)x2, attn_w, attn_b,
+#          proj_w, proj_b]
+# ----------------------------------------------------------------------
+
+GNMT_VOCAB, GNMT_DIM, GNMT_LAYERS = 4096, 128, 2
+GNMT_BATCH, GNMT_SRC, GNMT_TGT = 32, 16, 16
+
+
+def gnmt_init(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    key, k1 = jax.random.split(key)
+    params.append(jax.random.normal(k1, (GNMT_VOCAB, GNMT_DIM), jnp.float32))
+    for _ in range(2 * GNMT_LAYERS):  # enc layers then dec layers
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append(_kaiming(k1, (4 * GNMT_DIM, GNMT_DIM)))
+        params.append(_kaiming(k2, (4 * GNMT_DIM, GNMT_DIM)))
+        params.append(jnp.zeros((4 * GNMT_DIM,), jnp.float32))
+    key, k1, k2 = jax.random.split(key, 3)
+    params.append(_kaiming(k1, (GNMT_DIM, 2 * GNMT_DIM)))  # attn_out
+    params.append(jnp.zeros((GNMT_DIM,), jnp.float32))
+    params.append(_kaiming(k2, (GNMT_VOCAB, GNMT_DIM)))  # proj
+    params.append(jnp.zeros((GNMT_VOCAB,), jnp.float32))
+    return params
+
+
+def _run_lstm(xs, cells):
+    """xs [T, N, D]; cells = [(w_ih, w_hh, b), ...]. Returns (ys, finals)."""
+    n = xs.shape[1]
+    h0 = [(jnp.zeros((n, GNMT_DIM), jnp.float32), jnp.zeros((n, GNMT_DIM), jnp.float32)) for _ in cells]
+
+    def step(state, x):
+        new_state = []
+        inp = x
+        for (h, c), (w_ih, w_hh, b) in zip(state, cells):
+            h2, c2 = pk_lstm.lstm_cell(inp, h, c, w_ih, w_hh, b)
+            new_state.append((h2, c2))
+            inp = h2
+        return new_state, inp
+
+    finals, ys = jax.lax.scan(step, h0, xs)
+    return ys, finals
+
+
+def gnmt_forward_loss(params, src, tgt):
+    embed = params[0]
+    idx = 1
+    enc_cells = []
+    for _ in range(GNMT_LAYERS):
+        enc_cells.append((params[idx], params[idx + 1], params[idx + 2]))
+        idx += 3
+    dec_cells = []
+    for _ in range(GNMT_LAYERS):
+        dec_cells.append((params[idx], params[idx + 1], params[idx + 2]))
+        idx += 3
+    attn_w, attn_b = params[idx], params[idx + 1]
+    proj_w, proj_b = params[idx + 2], params[idx + 3]
+
+    n, t_len = tgt.shape
+    src_emb = embed[src].transpose(1, 0, 2)  # [S, N, D]
+    enc_states, _ = _run_lstm(src_emb, enc_cells)  # [S, N, D]
+    memory = enc_states.transpose(1, 0, 2)  # [N, S, D]
+
+    bos = jnp.zeros((n, 1), tgt.dtype)
+    tgt_in = jnp.concatenate([bos, tgt[:, : t_len - 1]], axis=1)
+    tgt_emb = embed[tgt_in].transpose(1, 0, 2)  # [T, N, D]
+    dec_states, _ = _run_lstm(tgt_emb, dec_cells)  # [T, N, D]
+    dec_btd = dec_states.transpose(1, 0, 2)  # [N, T, D]
+
+    scores = jnp.einsum("ntd,nsd->nts", dec_btd, memory) / (GNMT_DIM ** 0.5)
+    weights = jax.nn.softmax(scores, axis=-1)
+    context = jnp.einsum("nts,nsd->ntd", weights, memory)
+    combined = jnp.concatenate([context, dec_btd], axis=-1)  # [N, T, 2D]
+    attn = jnp.tanh(
+        pk_matmul.linear(combined.reshape(-1, 2 * GNMT_DIM), attn_w, attn_b)
+    )
+    logits = pk_matmul.linear(attn, proj_w, proj_b)  # [N*T, V]
+    return pk_sx.softmax_xent(logits, tgt.reshape(-1))
+
+
+def gnmt_step(lr, src, tgt, *params):
+    params = list(params)
+    loss, grads = jax.value_and_grad(gnmt_forward_loss)(params, src, tgt)
+    return tuple([loss] + _sgd(params, grads, lr))
+
+
+def gnmt_spec():
+    src = jax.ShapeDtypeStruct((GNMT_BATCH, GNMT_SRC), jnp.int64)
+    tgt = jax.ShapeDtypeStruct((GNMT_BATCH, GNMT_TGT), jnp.int64)
+    params = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in gnmt_init()]
+    return ModelSpec("gnmt_step", functools.partial(gnmt_step, 0.05), [src, tgt] + params, 2)
+
+
+# ----------------------------------------------------------------------
+# NCF: GMF + MLP towers, BCE loss.
+# Params: [u_gmf, i_gmf, u_mlp, i_mlp, w1,b1, w2,b2, w3,b3, head_w, head_b]
+# ----------------------------------------------------------------------
+
+NCF_USERS, NCF_ITEMS, NCF_DIM, NCF_BATCH = 16384, 16384, 32, 1024
+
+
+def ncf_forward(params, users, items):
+    u_gmf, i_gmf, u_mlp, i_mlp, w1, b1, w2, b2, w3, b3, hw, hb = params
+    gmf = u_gmf[users] * i_gmf[items]
+    h = jnp.concatenate([u_mlp[users], i_mlp[items]], axis=1)
+    h = jax.nn.relu(pk_matmul.linear(h, w1, b1))
+    h = jax.nn.relu(pk_matmul.linear(h, w2, b2))
+    h = jax.nn.relu(pk_matmul.linear(h, w3, b3))
+    fused = jnp.concatenate([gmf, h], axis=1)
+    return jax.nn.sigmoid(pk_matmul.linear(fused, hw, hb))[:, 0]
+
+
+def ncf_loss(params, users, items, labels):
+    p = jnp.clip(ncf_forward(params, users, items), 1e-7, 1 - 1e-7)
+    return -jnp.mean(labels * jnp.log(p) + (1 - labels) * jnp.log(1 - p))
+
+
+def ncf_init(seed=0):
+    ks = _keys(jax.random.PRNGKey(seed), 12)
+    d = NCF_DIM
+    return [
+        jax.random.normal(ks[0], (NCF_USERS, d), jnp.float32),
+        jax.random.normal(ks[1], (NCF_ITEMS, d), jnp.float32),
+        jax.random.normal(ks[2], (NCF_USERS, d), jnp.float32),
+        jax.random.normal(ks[3], (NCF_ITEMS, d), jnp.float32),
+        _kaiming(ks[4], (2 * d, 2 * d)), jnp.zeros((2 * d,), jnp.float32),
+        _kaiming(ks[5], (d, 2 * d)), jnp.zeros((d,), jnp.float32),
+        _kaiming(ks[6], (d // 2, d)), jnp.zeros((d // 2,), jnp.float32),
+        _kaiming(ks[7], (1, d + d // 2)), jnp.zeros((1,), jnp.float32),
+    ]
+
+
+def ncf_step(lr, users, items, labels, *params):
+    params = list(params)
+    loss, grads = jax.value_and_grad(ncf_loss)(params, users, items, labels)
+    return tuple([loss] + _sgd(params, grads, lr))
+
+
+def ncf_spec():
+    users = jax.ShapeDtypeStruct((NCF_BATCH,), jnp.int64)
+    items = jax.ShapeDtypeStruct((NCF_BATCH,), jnp.int64)
+    labels = jax.ShapeDtypeStruct((NCF_BATCH,), jnp.float32)
+    params = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in ncf_init()]
+    return ModelSpec("ncf_step", functools.partial(ncf_step, 0.05), [users, items, labels] + params, 3)
+
+
+# ----------------------------------------------------------------------
+# Standalone fused-kernel artifact: a conv block through the Pallas
+# im2col+matmul conv (proves the L1 conv path lowers and runs via PJRT).
+# ----------------------------------------------------------------------
+
+def conv_block(x, w, b):
+    return jax.nn.relu(pk_conv.conv2d(x, w, b, stride=1, padding=1))
+
+
+def conv_block_spec():
+    x = jax.ShapeDtypeStruct((4, 8, 16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 8, 3, 3), jnp.float32)
+    b = jax.ShapeDtypeStruct((16,), jnp.float32)
+    return ModelSpec("conv_block", lambda x, w, b: (conv_block(x, w, b),), [x, w, b], 3)
+
+
+def all_specs():
+    """Every artifact aot.py should produce."""
+    return [
+        mlp_spec(),
+        _cnn_spec("alexnet_step", alexnet_layers(), batch=32),
+        _cnn_spec("vgg19_step", vgg19_layers(), batch=16),
+        resnet50_spec(batch=16),
+        _cnn_spec("mobilenet_step", mobilenet_layers(), batch=32),
+        gnmt_spec(),
+        ncf_spec(),
+        conv_block_spec(),
+    ]

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes; every kernel must be a drop-in replacement for
+its reference — this is the CORE correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as pk_conv
+from compile.kernels import layernorm as pk_ln
+from compile.kernels import lstm_cell as pk_lstm
+from compile.kernels import matmul as pk_matmul
+from compile.kernels import ref
+from compile.kernels import softmax_xent as pk_sx
+
+DIMS = st.integers(min_value=1, max_value=40)
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ----------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        pk_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_exact_block_multiple():
+    a = rand(0, (128, 256))
+    b = rand(1, (256, 128))
+    np.testing.assert_allclose(pk_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_larger_than_one_block():
+    a = rand(2, (200, 300))
+    b = rand(3, (300, 150))
+    np.testing.assert_allclose(pk_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_linear_matches_ref():
+    x, w, b = rand(4, (7, 13)), rand(5, (5, 13)), rand(6, (5,))
+    np.testing.assert_allclose(
+        pk_matmul.linear(x, w, b), ref.linear_ref(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_is_differentiable():
+    a, b = rand(7, (6, 5)), rand(8, (5, 4))
+    g1 = jax.grad(lambda a: jnp.sum(pk_matmul.matmul(a, b)))(a)
+    g2 = jax.grad(lambda a: jnp.sum(ref.matmul_ref(a, b)))(a)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ softmax/xent
+
+@settings(max_examples=20, deadline=None)
+@given(n=DIMS, c=st.integers(2, 30), seed=st.integers(0, 2**16))
+def test_softmax_xent_matches_ref(n, c, seed):
+    logits = rand(seed, (n, c), -5, 5)
+    targets = jax.random.randint(jax.random.PRNGKey(seed + 9), (n,), 0, c)
+    np.testing.assert_allclose(
+        pk_sx.softmax_xent(logits, targets),
+        ref.softmax_xent_ref(logits, targets),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_softmax_matches_ref():
+    x = rand(11, (33, 17), -8, 8)
+    np.testing.assert_allclose(pk_sx.softmax(x), ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_stable_for_huge_logits():
+    x = jnp.array([[1000.0, 1001.0, 999.0]])
+    out = np.asarray(pk_sx.softmax(x))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-5)
+
+
+def test_xent_gradient_matches_ref():
+    logits = rand(12, (9, 6), -3, 3)
+    targets = jax.random.randint(jax.random.PRNGKey(13), (9,), 0, 6)
+    g1 = jax.grad(lambda l: pk_sx.softmax_xent(l, targets))(logits)
+    g2 = jax.grad(lambda l: ref.softmax_xent_ref(l, targets))(logits)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c_in=st.integers(1, 4),
+    c_out=st.integers(1, 4),
+    hw=st.integers(4, 12),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(n, c_in, c_out, hw, k, stride, seed):
+    pad = k // 2
+    x = rand(seed, (n, c_in, hw, hw))
+    w = rand(seed + 1, (c_out, c_in, k, k))
+    b = rand(seed + 2, (c_out,))
+    np.testing.assert_allclose(
+        pk_conv.conv2d(x, w, b, stride=stride, padding=pad),
+        ref.conv2d_ref(x, w, b, stride=stride, padding=pad),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_depthwise_groups():
+    x = rand(20, (2, 6, 8, 8))
+    w = rand(21, (6, 1, 3, 3))
+    np.testing.assert_allclose(
+        pk_conv.conv2d(x, w, None, stride=1, padding=1, groups=6),
+        ref.conv2d_ref(x, w, None, stride=1, padding=1, groups=6),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+# -------------------------------------------------------------- layernorm
+
+@settings(max_examples=15, deadline=None)
+@given(n=DIMS, d=st.integers(2, 64), seed=st.integers(0, 2**16))
+def test_layernorm_matches_ref(n, d, seed):
+    x = rand(seed, (n, d), -3, 3)
+    g = rand(seed + 1, (d,), 0.5, 1.5)
+    b = rand(seed + 2, (d,), -0.5, 0.5)
+    np.testing.assert_allclose(
+        pk_ln.layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- lstm gates
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 16), h=st.integers(1, 32), seed=st.integers(0, 2**16))
+def test_lstm_gates_match_ref(n, h, seed):
+    pre = rand(seed, (n, 4 * h), -2, 2)
+    c = rand(seed + 1, (n, h), -1, 1)
+    h1, c1 = pk_lstm.lstm_gates(pre, c)
+    h2, c2 = ref.lstm_gates_ref(pre, c)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_full_step():
+    x = rand(30, (4, 8))
+    h = rand(31, (4, 16))
+    c = rand(32, (4, 16))
+    w_ih = rand(33, (64, 8))
+    w_hh = rand(34, (64, 16))
+    b = rand(35, (64,))
+    h1, c1 = pk_lstm.lstm_cell(x, h, c, w_ih, w_hh, b)
+    pre = ref.linear_ref(x, w_ih, b) + jnp.matmul(h, w_hh.T)
+    h2, c2 = ref.lstm_gates_ref(pre, c)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-5)
+
+
+def test_lstm_hidden_bounded():
+    pre = rand(36, (8, 64), -50, 50)
+    c = rand(37, (8, 16), -5, 5)
+    h1, _ = pk_lstm.lstm_gates(pre, c)
+    assert np.abs(np.asarray(h1)).max() <= 1.0 + 1e-5

@@ -1,0 +1,112 @@
+"""L2 model-graph shape/semantics checks (pre-lowering)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def run_spec_once(spec):
+    """Materialize example inputs and run the step function eagerly."""
+    rng = np.random.default_rng(0)
+    args = []
+    for s in spec.example_inputs:
+        if s.dtype == jnp.float32:
+            args.append(jnp.asarray(rng.normal(0, 0.1, s.shape), jnp.float32))
+        else:
+            args.append(jnp.asarray(rng.integers(0, 4, s.shape), s.dtype))
+    return spec.fn(*args), args
+
+
+@pytest.mark.parametrize("make", [model.mlp_spec, model.ncf_spec, model.conv_block_spec])
+def test_small_specs_run_and_return_declared_arity(make):
+    spec = make()
+    out, args = run_spec_once(spec)
+    assert isinstance(out, tuple)
+    n_out = len(out)
+    # Train steps: loss + one updated tensor per param input.
+    if spec.name.endswith("_step"):
+        assert n_out == 1 + (len(args) - spec.n_batch_inputs)
+        loss = out[0]
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+        for p_in, p_out in zip(args[spec.n_batch_inputs:], out[1:]):
+            assert p_in.shape == p_out.shape
+            assert p_in.dtype == p_out.dtype
+
+
+def test_mlp_step_decreases_loss_on_fixed_batch():
+    spec = model.mlp_spec()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (model.MLP_BATCH, model.MLP_IN)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, model.MLP_CLASSES, (model.MLP_BATCH,)))
+    params = model.mlp_init(1)
+    losses = []
+    for _ in range(10):
+        out = model.mlp_step(0.1, x, y, *params)
+        losses.append(float(out[0]))
+        params = list(out[1:])
+    assert losses[-1] < losses[0], losses
+
+
+def test_mlp_forward_matches_manual_composition():
+    params = model.mlp_init(2)
+    x = jnp.ones((4, model.MLP_IN), jnp.float32)
+    got = model.mlp_forward(x, params)
+    w1, b1, w2, b2 = params
+    want = jnp.maximum(x @ w1.T + b1, 0.0) @ w2.T + b2
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cnn_param_layout_matches_layer_list():
+    layers = model.alexnet_layers()
+    params = model.cnn_init(layers)
+    convs = sum(1 for l in layers if l[0] == "conv")
+    linears = sum(1 for l in layers if l[0] == "linear")
+    assert len(params) == 2 * (convs + linears)
+    # AlexNet: 5 convs + 3 linears.
+    assert convs == 5 and linears == 3
+
+
+def test_vgg19_has_19_weight_layers():
+    layers = model.vgg19_layers()
+    convs = sum(1 for l in layers if l[0] == "conv")
+    linears = sum(1 for l in layers if l[0] == "linear")
+    assert convs + linears == 19
+
+
+def test_resnet50_param_count_and_forward_shape():
+    params = model.resnet50_init()
+    # 53 convs + fc, each with weight+bias.
+    assert len(params) == 2 * 54
+    x = jnp.zeros((2, 3, 32, 32), jnp.float32)
+    logits = model.resnet50_forward(x, params)
+    assert logits.shape == (2, 10)
+
+
+def test_gnmt_loss_near_log_vocab_at_init():
+    params = model.gnmt_init(0)
+    rng = np.random.default_rng(3)
+    src = jnp.asarray(rng.integers(0, model.GNMT_VOCAB, (4, model.GNMT_SRC)))
+    tgt = jnp.asarray(rng.integers(0, model.GNMT_VOCAB, (4, model.GNMT_TGT)))
+    loss = float(model.gnmt_forward_loss(params, src, tgt))
+    assert abs(loss - np.log(model.GNMT_VOCAB)) < 2.0, loss
+
+
+def test_ncf_predictions_are_probabilities():
+    params = model.ncf_init(0)
+    users = jnp.asarray([0, 5, 9])
+    items = jnp.asarray([1, 2, 3])
+    p = model.ncf_forward(params, users, items)
+    assert p.shape == (3,)
+    assert ((p >= 0) & (p <= 1)).all()
+
+
+def test_all_specs_have_unique_names_and_valid_arity():
+    specs = model.all_specs()
+    names = [s.name for s in specs]
+    assert len(set(names)) == len(names)
+    for s in specs:
+        assert 0 < s.n_batch_inputs <= len(s.example_inputs)

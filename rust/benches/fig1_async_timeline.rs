@@ -1,0 +1,78 @@
+//! Figure 1: asynchronous dataflow timeline.
+//!
+//! Profiles the first operators of a ResNet-50 forward pass on the
+//! simulated accelerator and renders the paper's two-row view: the host
+//! CPU queueing work (top) racing ahead of the stream executing it
+//! (bottom). Reports the paper's quantities:
+//!   - time the host takes to *queue* an op vs the device to *execute* it
+//!     (paper: "GPU execution takes around three times longer than CPU
+//!     scheduling" on their hardware);
+//!   - device utilization (paper: "almost perfect device utilization").
+//!
+//! Also writes a chrome://tracing JSON to target/fig1_trace.json.
+
+use torsk::device::Device;
+use torsk::models::{BenchModel, ResNet50};
+use torsk::profiler::{self, Track};
+
+fn main() {
+    torsk::rng::manual_seed(0);
+    torsk::ctx::use_caching_sim_allocator();
+    let model = torsk::device::with_default_device(Device::Sim, || ResNet50::new(3, 32, 10, 16));
+    let batch = model.make_batch(0).to_device(Device::Sim);
+
+    // Warm the allocator cache so the timeline is steady-state (Fig 2
+    // effects are measured separately).
+    let _ = torsk::autograd::no_grad(|| BenchModel::loss(&model, &batch)).item();
+
+    profiler::start();
+    let loss = torsk::autograd::no_grad(|| BenchModel::loss(&model, &batch));
+    let _ = loss.item(); // host blocks here; device drains
+    let events = profiler::stop();
+
+    // The Figure-1 window: launches + kernel executions only.
+    let launches: Vec<_> = events
+        .iter()
+        .filter(|e| e.track == Track::Host && e.name.starts_with("launch "))
+        .take(40)
+        .cloned()
+        .collect();
+    let end_window = launches.last().map(|e| e.end_ns).unwrap_or(u64::MAX);
+    let kernels: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.track, Track::Stream(_)) && e.start_ns <= end_window * 4)
+        .take(40)
+        .cloned()
+        .collect();
+
+    let mut window = launches.clone();
+    window.extend(kernels.iter().cloned());
+    window.sort_by_key(|e| e.start_ns);
+    println!("== Figure 1: first ~40 operators of ResNet-50 (steady state) ==\n");
+    println!("{}", profiler::ascii_timeline(&window, 110));
+
+    let queue_ns: u64 = launches.iter().map(|e| e.dur_ns()).sum();
+    let exec_ns: u64 = kernels.iter().map(|e| e.dur_ns()).sum();
+    let n = launches.len().min(kernels.len()).max(1);
+    println!("host queue time  : {:>10.1} µs total, {:.2} µs/op", queue_ns as f64 / 1e3, queue_ns as f64 / 1e3 / n as f64);
+    println!("device exec time : {:>10.1} µs total, {:.2} µs/op", exec_ns as f64 / 1e3, exec_ns as f64 / 1e3 / n as f64);
+    println!(
+        "execute/queue ratio: {:.1}x  (paper's GP100/Xeon: ~3x; higher means the host\n\
+         runs even further ahead on this testbed)",
+        exec_ns as f64 / queue_ns.max(1) as f64
+    );
+
+    let dev = profiler::track_stats(&events, Track::Stream(0));
+    println!(
+        "device utilization over the full pass: {:.1}% ({} kernels, busy {:.2} ms / extent {:.2} ms)",
+        100.0 * dev.utilization(),
+        dev.spans,
+        dev.busy_ns as f64 / 1e6,
+        dev.extent_ns() as f64 / 1e6
+    );
+
+    let json = profiler::to_chrome_trace(&events);
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/fig1_trace.json", &json).ok();
+    println!("\nchrome trace written to target/fig1_trace.json ({} events)", events.len());
+}

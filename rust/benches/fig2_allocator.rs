@@ -1,0 +1,105 @@
+//! Figure 2: memory-management traces.
+//!
+//! Trains ResNet-50 for several iterations and reports, per iteration,
+//! the number of device-driver allocations, driver stall time, and wall
+//! time — once with the caching allocator (the paper's annotated trace:
+//! iteration 1 dominated by cudaMalloc/cudaFree, later iterations reuse
+//! the cache) and once with the naive pass-through allocator (every
+//! iteration looks like iteration 1).
+
+use std::time::Instant;
+
+use torsk::alloc::Allocator;
+use torsk::device::Device;
+use torsk::models::{BenchModel, ResNet50};
+use torsk::optim::{Optimizer, Sgd};
+
+struct IterRow {
+    driver_allocs: u64,
+    driver_frees: u64,
+    stall_us: f64,
+    cache_hits: u64,
+    wall_ms: f64,
+    loss: f32,
+}
+
+fn run(iters: usize, caching: bool) -> Vec<IterRow> {
+    torsk::rng::manual_seed(0);
+    let alloc: std::sync::Arc<dyn Allocator> = if caching {
+        torsk::ctx::use_caching_sim_allocator()
+    } else {
+        torsk::ctx::use_naive_sim_allocator()
+    };
+    let driver = torsk::ctx::sim_driver();
+    let model = torsk::device::with_default_device(Device::Sim, || ResNet50::new(3, 32, 10, 8));
+    let mut opt = Sgd::new(BenchModel::parameters(&model), 0.01);
+
+    let mut rows = vec![];
+    for i in 0..iters {
+        let before = alloc.stats();
+        let stall0 = driver.stall_ns.load(std::sync::atomic::Ordering::Relaxed);
+        let t0 = Instant::now();
+        opt.zero_grad();
+        let batch = model.make_batch(i as u64).to_device(Device::Sim);
+        let loss = model.loss(&batch);
+        loss.backward();
+        opt.step();
+        torsk::device::synchronize();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let d = alloc.stats().delta(&before);
+        let stall1 = driver.stall_ns.load(std::sync::atomic::Ordering::Relaxed);
+        rows.push(IterRow {
+            driver_allocs: d.driver_allocs,
+            driver_frees: d.driver_frees,
+            stall_us: (stall1 - stall0) as f64 / 1e3,
+            cache_hits: d.cache_hits,
+            wall_ms,
+            loss: loss.item(),
+        });
+    }
+    rows
+}
+
+fn print_rows(title: &str, rows: &[IterRow]) {
+    println!("\n-- {title} --");
+    println!(
+        "{:<5} {:>13} {:>12} {:>12} {:>11} {:>9} {:>8}",
+        "iter", "driver-allocs", "driver-frees", "stall(µs)", "cache-hits", "wall(ms)", "loss"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "{:<5} {:>13} {:>12} {:>12.0} {:>11} {:>9.0} {:>8.3}",
+            i, r.driver_allocs, r.driver_frees, r.stall_us, r.cache_hits, r.wall_ms, r.loss
+        );
+    }
+}
+
+fn main() {
+    let iters = std::env::var("TORSK_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    println!("== Figure 2: allocator behaviour across ResNet-50 training iterations ==");
+
+    let caching = run(iters, true);
+    print_rows("caching allocator (torsk/PyTorch §5.3)", &caching);
+    let naive = run(iters, false);
+    print_rows("naive allocator (every op hits cudaMalloc/cudaFree)", &naive);
+
+    let first = &caching[0];
+    let steady: f64 =
+        caching[1..].iter().map(|r| r.driver_allocs as f64).sum::<f64>() / (iters - 1) as f64;
+    let naive_avg: f64 = naive.iter().map(|r| r.driver_allocs as f64).sum::<f64>() / iters as f64;
+    let caching_wall: f64 = caching[1..].iter().map(|r| r.wall_ms).sum::<f64>() / (iters - 1) as f64;
+    let naive_wall: f64 = naive[1..].iter().map(|r| r.wall_ms).sum::<f64>() / (iters - 1) as f64;
+
+    println!("\n== shape check (paper Figure 2) ==");
+    println!(
+        "caching: iteration 0 made {} driver allocations; steady state averages {:.1}",
+        first.driver_allocs, steady
+    );
+    println!("naive  : every iteration averages {naive_avg:.0} driver allocations");
+    println!(
+        "steady-state iteration time: caching {caching_wall:.0} ms vs naive {naive_wall:.0} ms \
+         ({:.2}x speedup from the caching allocator)",
+        naive_wall / caching_wall
+    );
+    assert!(steady < first.driver_allocs as f64 * 0.1, "cache must eliminate driver calls");
+}

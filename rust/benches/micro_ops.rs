@@ -1,0 +1,125 @@
+//! Micro-benchmarks of the subsystems the paper optimizes (§5.1–§5.3):
+//! allocator latency, dispatch overhead, kernel throughput. These are the
+//! knobs the §Perf pass iterates on; numbers land in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use torsk::alloc::driver::HostMem;
+use torsk::alloc::{caching::CachingAllocator, naive::NaiveAllocator, Allocator, StreamId};
+use torsk::device::{self, Device};
+use torsk::ops;
+use torsk::Tensor;
+
+fn time_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    for _ in 0..3.min(reps) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / reps as f64
+}
+
+fn main() {
+    println!("== micro-benchmarks ==\n");
+
+    // ---- allocator -----------------------------------------------------
+    println!("-- allocator: alloc+free latency (1 MiB block) --");
+    let caching = CachingAllocator::new(std::sync::Arc::new(HostMem::default()));
+    let naive = NaiveAllocator::new(std::sync::Arc::new(HostMem::default()));
+    // Prime the cache.
+    let b = caching.allocate(1 << 20, StreamId::DEFAULT);
+    caching.deallocate(b);
+    let t_cached = time_ns(10_000, || {
+        let b = caching.allocate(1 << 20, StreamId::DEFAULT);
+        caching.deallocate(b);
+    });
+    let t_naive = time_ns(10_000, || {
+        let b = naive.allocate(1 << 20, StreamId::DEFAULT);
+        naive.deallocate(b);
+    });
+    println!("  caching (hit) : {t_cached:>9.0} ns");
+    println!("  pass-through  : {t_naive:>9.0} ns   ({:.1}x)", t_naive / t_cached);
+    // Against the simulated device driver the gap is the Figure 2 story;
+    // here both use host malloc so the delta is pure allocator overhead.
+
+    // ---- dispatch ------------------------------------------------------
+    println!("\n-- dispatch: per-op overhead --");
+    let t_queue = {
+        let x = Tensor::ones(&[16]).to_sim();
+        device::synchronize();
+        let t = time_ns(5_000, || {
+            let y = ops::add_scalar(&x, 1.0);
+            std::hint::black_box(&y);
+        });
+        device::synchronize();
+        t
+    };
+    let t_inline = {
+        let x = Tensor::ones(&[16]);
+        time_ns(5_000, || {
+            let y = ops::add_scalar(&x, 1.0);
+            std::hint::black_box(&y);
+        })
+    };
+    println!("  queue on stream (async)  : {t_queue:>9.0} ns/op (host-side cost)");
+    println!("  execute inline on host   : {t_inline:>9.0} ns/op");
+
+    // ---- kernels ---------------------------------------------------------
+    println!("\n-- matmul GFLOP/s (f32, square) --");
+    for &n in &[64usize, 128, 256, 512, 1024] {
+        torsk::rng::manual_seed(0);
+        let a = Tensor::randn(&[n, n]);
+        let b = Tensor::randn(&[n, n]);
+        let reps = (1usize << 28) / (2 * n * n * n).max(1);
+        let ns = time_ns(reps.clamp(2, 50), || {
+            std::hint::black_box(ops::matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / ns;
+        println!("  {n:>5}x{n:<5} {gflops:>7.2} GFLOP/s");
+    }
+
+    println!("\n-- conv2d (N=8, C=32->32, 16x16, k=3) --");
+    {
+        torsk::rng::manual_seed(0);
+        let x = Tensor::randn(&[8, 32, 16, 16]);
+        let w = Tensor::randn(&[32, 32, 3, 3]);
+        let ns = time_ns(10, || {
+            std::hint::black_box(ops::conv2d(&x, &w, None, 1, 1, 1));
+        });
+        let flops = 2.0 * 8.0 * 32.0 * 16.0 * 16.0 * 32.0 * 9.0;
+        println!("  forward: {:.2} ms, {:.2} GFLOP/s", ns / 1e6, flops / ns);
+    }
+
+    println!("\n-- elementwise bandwidth (add, 16M elems) --");
+    {
+        let n = 16 * 1024 * 1024;
+        let a = Tensor::ones(&[n]);
+        let b = Tensor::ones(&[n]);
+        let ns = time_ns(10, || {
+            std::hint::black_box(ops::add(&a, &b));
+        });
+        // 2 reads + 1 write, 4 bytes each.
+        println!("  {:.1} GB/s", 3.0 * 4.0 * n as f64 / ns);
+    }
+
+    println!("\n-- backward engine: graph overhead (chain of 100 tiny ops) --");
+    {
+        let x = Tensor::ones(&[4]).requires_grad(true);
+        let ns = time_ns(200, || {
+            let mut y = x.clone();
+            for _ in 0..100 {
+                y = ops::mul_scalar(&y, 1.001);
+            }
+            ops::sum(&y).backward();
+            x.set_grad(None);
+        });
+        println!("  {:.1} µs per fwd+bwd of 100-op chain ({:.0} ns/op)", ns / 1e3, ns / 200.0);
+    }
+
+    // Keep the Sim device drained so the process exits cleanly.
+    let _ = Device::Sim;
+    device::synchronize();
+}

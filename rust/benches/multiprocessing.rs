@@ -1,0 +1,132 @@
+//! §5.4 microbenchmark: shared-memory tensor transport vs pipe
+//! serialization.
+//!
+//! The paper: the stock multiprocessing primitives use "the same form of
+//! serialization used for on-disk persistence, which is inefficient when
+//! dealing with large arrays", so torch.multiprocessing moves tensor data
+//! to shared memory instead. We measure both transports across sizes and
+//! an all-reduce built on the shared-memory primitives.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use torsk::multiproc::{allreduce_mean, fork_workers, pipe_roundtrip, SharedTensor, ShmBarrier};
+use torsk::{DType, Tensor};
+
+fn shm_dir() -> PathBuf {
+    let d = PathBuf::from("/dev/shm");
+    if d.exists() {
+        d
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+fn bench_pipe(n_elems: usize, reps: usize) -> f64 {
+    let t = Tensor::rand(&[n_elems]);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let back = pipe_roundtrip(&t).expect("pipe");
+        std::hint::black_box(back);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (n_elems * 4 * reps) as f64 / secs / 1e6 // MB/s
+}
+
+fn bench_shm(n_elems: usize, reps: usize) -> f64 {
+    let path = shm_dir().join(format!("torsk_bench_shm_{}_{n_elems}", std::process::id()));
+    let st = SharedTensor::create(&path, &[n_elems], DType::F32).unwrap();
+    let t = Tensor::rand(&[n_elems]);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        // "Send": producer writes into shared memory once...
+        st.copy_from(&t);
+        // ..."receive": consumer maps and reads (zero-copy view + one copy
+        // out to make the comparison fair with the pipe's full roundtrip).
+        let back = st.tensor().to_vec::<f32>();
+        std::hint::black_box(back);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    st.unlink();
+    (n_elems * 4 * reps) as f64 / secs / 1e6
+}
+
+fn bench_shm_zero_copy(n_elems: usize, reps: usize) -> f64 {
+    // The §4.2 claim: handing over a shared tensor is O(1) — "extremely
+    // cheap, constant time no matter how large the converted arrays are".
+    let path = shm_dir().join(format!("torsk_bench_shm0_{}_{n_elems}", std::process::id()));
+    let st = SharedTensor::create(&path, &[n_elems], DType::F32).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let view = st.tensor(); // map, no data movement
+        std::hint::black_box(view.shape());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    st.unlink();
+    secs / reps as f64 * 1e9 // ns per handover
+}
+
+fn main() {
+    println!("== §5.4: tensor transport between processes ==\n");
+    println!(
+        "{:>10} {:>14} {:>14} {:>10}   {:>17}",
+        "size", "pipe MB/s", "shm MB/s", "speedup", "zero-copy ns/send"
+    );
+    for &kb in &[4usize, 64, 1024, 16 * 1024, 65 * 1024] {
+        let n = kb * 1024 / 4;
+        let reps = (64 * 1024 / kb).clamp(2, 64);
+        let pipe = bench_pipe(n, reps);
+        let shm = bench_shm(n, reps);
+        let zc = bench_shm_zero_copy(n, 1000);
+        println!(
+            "{:>8}KB {:>14.0} {:>14.0} {:>9.1}x   {:>17.0}",
+            kb,
+            pipe,
+            shm,
+            shm / pipe,
+            zc
+        );
+    }
+
+    // All-reduce latency across 4 worker processes.
+    println!("\nall-reduce (mean) across 4 forked workers:");
+    for &len in &[1024usize, 262_144] {
+        let scratch_path = shm_dir().join(format!("torsk_bench_ar_{}_{len}", std::process::id()));
+        let timing_path = shm_dir().join(format!("torsk_bench_art_{}_{len}", std::process::id()));
+        let scratch = SharedTensor::create(&scratch_path, &[len], DType::F32).unwrap();
+        let timings = SharedTensor::create(&timing_path, &[4], DType::F32).unwrap();
+        let (p1, p2) = (scratch_path.clone(), timing_path.clone());
+        fork_workers(4, move |rank| {
+            let scratch = SharedTensor::open(&p1).unwrap();
+            let timings = SharedTensor::open(&p2).unwrap();
+            let barrier = ShmBarrier::on(&scratch, 4);
+            let local = Tensor::full(&[len], rank as f32);
+            let t0 = Instant::now();
+            let reps = 5;
+            for _ in 0..reps {
+                // Zero the accumulator between rounds (rank 0).
+                if rank == 0 {
+                    scratch.tensor().zero_();
+                }
+                barrier.wait();
+                let out = allreduce_mean(&local, &scratch, &barrier, 4);
+                std::hint::black_box(out);
+                barrier.wait();
+            }
+            let us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+            let slot = timings.tensor().narrow(0, rank, 1);
+            torsk::ops::copy_into_view_public(&slot, &Tensor::from_slice(&[us as f32]));
+        })
+        .expect("allreduce workers");
+        let per_rank = timings.tensor().to_vec::<f32>();
+        println!(
+            "  {len:>7} elems: {:>8.0} µs/op (max over ranks {:?})",
+            per_rank.iter().cloned().fold(0.0f32, f32::max),
+            per_rank.iter().map(|v| *v as i64).collect::<Vec<_>>()
+        );
+        scratch.unlink();
+        timings.unlink();
+    }
+    println!("\nshape check (paper §5.4): shared memory beats serialization by a widening\n\
+              margin as tensors grow; handing over a mapped tensor is O(1).");
+}

@@ -1,0 +1,225 @@
+//! Figure 3: framework-adoption analysis.
+//!
+//! The paper counts, for each month since PyTorch's release, the share of
+//! arXiv e-prints mentioning deep-learning frameworks that mention
+//! PyTorch — "tools mentioned multiple times in a given paper only once,
+//! and … case insensitive". We cannot query arXiv offline (DESIGN.md §2
+//! substitution), so this module implements (a) the *counting pipeline*
+//! exactly as described, and (b) a synthetic corpus generator with a
+//! logistic adoption model whose parameters mimic the paper's observed
+//! trajectory (PyTorch rising from 0% in Jan 2017 toward ~50% by mid-2019).
+
+use crate::rng::Rng;
+
+/// The frameworks the paper searches for.
+pub const FRAMEWORKS: [&str; 8] =
+    ["caffe", "chainer", "cntk", "keras", "mxnet", "pytorch", "tensorflow", "theano"];
+
+/// One synthetic paper: an id and its abstract text.
+#[derive(Clone, Debug)]
+pub struct Paper {
+    pub month: usize,
+    pub text: String,
+}
+
+/// Case-insensitive, dedup-per-paper mention counting — the Figure 3
+/// methodology.
+pub fn count_mentions(papers: &[Paper], months: usize) -> Vec<MonthCounts> {
+    let mut out = vec![MonthCounts::default(); months];
+    for p in papers {
+        if p.month >= months {
+            continue;
+        }
+        let lower = p.text.to_lowercase();
+        let mentioned: Vec<&str> =
+            FRAMEWORKS.iter().copied().filter(|f| lower.contains(f)).collect();
+        if mentioned.is_empty() {
+            continue;
+        }
+        let mc = &mut out[p.month];
+        mc.papers_mentioning_any += 1;
+        for f in mentioned {
+            let idx = FRAMEWORKS.iter().position(|&x| x == f).unwrap();
+            mc.by_framework[idx] += 1;
+        }
+    }
+    out
+}
+
+/// Per-month counts.
+#[derive(Clone, Debug, Default)]
+pub struct MonthCounts {
+    /// Papers mentioning at least one framework.
+    pub papers_mentioning_any: usize,
+    /// Papers mentioning each framework (dedup within a paper).
+    pub by_framework: [usize; 8],
+}
+
+impl MonthCounts {
+    /// Percentage of framework-mentioning papers that mention `name`.
+    pub fn percent(&self, name: &str) -> f64 {
+        let idx = FRAMEWORKS.iter().position(|&x| x == name).expect("known framework");
+        if self.papers_mentioning_any == 0 {
+            0.0
+        } else {
+            100.0 * self.by_framework[idx] as f64 / self.papers_mentioning_any as f64
+        }
+    }
+}
+
+/// Parameters of the synthetic adoption model.
+#[derive(Clone, Copy, Debug)]
+pub struct AdoptionModel {
+    /// Months simulated (paper: Jan 2017 – mid 2019 ≈ 30).
+    pub months: usize,
+    /// Framework-mentioning papers per month.
+    pub papers_per_month: usize,
+    /// Logistic ceiling for PyTorch share (paper trajectory ≈ 0.5).
+    pub ceiling: f64,
+    /// Logistic growth rate per month.
+    pub rate: f64,
+    /// Logistic midpoint month.
+    pub midpoint: f64,
+}
+
+impl Default for AdoptionModel {
+    fn default() -> Self {
+        AdoptionModel { months: 30, papers_per_month: 400, ceiling: 0.55, rate: 0.25, midpoint: 14.0 }
+    }
+}
+
+impl AdoptionModel {
+    /// Ground-truth PyTorch mention probability at `month`.
+    pub fn pytorch_prob(&self, month: usize) -> f64 {
+        self.ceiling / (1.0 + (-self.rate * (month as f64 - self.midpoint)).exp())
+    }
+
+    /// Generate the corpus: each paper mentions 1–3 frameworks, PyTorch
+    /// with the logistic probability, the rest drawn from a slowly
+    /// decaying incumbent mix (TensorFlow/Keras heavy, like 2017 arXiv).
+    pub fn generate(&self, seed: u64) -> Vec<Paper> {
+        let mut r = Rng::new(seed);
+        let mut papers = Vec::with_capacity(self.months * self.papers_per_month);
+        let fillers = ["We train a deep network", "Our method uses", "Experiments implemented in", "Baselines run on"];
+        for month in 0..self.months {
+            let p_pt = self.pytorch_prob(month);
+            for _ in 0..self.papers_per_month {
+                let mut text = String::new();
+                text.push_str(fillers[r.below(fillers.len() as u64) as usize]);
+                // Incumbents: always at least one to make the paper count.
+                let incumbent = match r.below(100) {
+                    0..=44 => "TensorFlow",
+                    45..=69 => "Keras",
+                    70..=79 => "Caffe",
+                    80..=87 => "MXNet",
+                    88..=93 => "Theano",
+                    94..=97 => "CNTK",
+                    _ => "Chainer",
+                };
+                text.push(' ');
+                text.push_str(incumbent);
+                if (r.uniform() as f64) < p_pt {
+                    // Vary spelling/case — the pipeline must be
+                    // case-insensitive, per the paper.
+                    let spellings = ["PyTorch", "pytorch", "Pytorch", "PYTORCH"];
+                    text.push_str(" and ");
+                    text.push_str(spellings[r.below(4) as usize]);
+                    // Mention it twice sometimes: dedup must count once.
+                    if r.bernoulli(0.3) {
+                        text.push_str(". PyTorch was fast");
+                    }
+                }
+                papers.push(Paper { month, text });
+            }
+        }
+        papers
+    }
+}
+
+/// The Figure 3 series: PyTorch share per month (percent).
+pub fn pytorch_share_series(counts: &[MonthCounts]) -> Vec<f64> {
+    counts.iter().map(|m| m.percent("pytorch")).collect()
+}
+
+/// Render the series as an ASCII chart (the Figure 3 plot).
+pub fn ascii_chart(series: &[f64], height: usize) -> String {
+    let maxv = series.iter().cloned().fold(1.0f64, f64::max);
+    let mut out = String::new();
+    for row in (0..height).rev() {
+        let threshold = maxv * (row as f64 + 0.5) / height as f64;
+        out.push_str(&format!("{:5.1}% |", maxv * (row as f64 + 1.0) / height as f64));
+        for &v in series {
+            out.push(if v >= threshold { '#' } else { ' ' });
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("       +{}\n", "-".repeat(series.len())));
+    out.push_str("        Jan'17 ->  months  -> mid'19\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_is_case_insensitive() {
+        let papers = vec![
+            Paper { month: 0, text: "We use PYTORCH and TensorFlow".into() },
+            Paper { month: 0, text: "we use pytorch".into() },
+            Paper { month: 0, text: "keras only".into() },
+        ];
+        let counts = count_mentions(&papers, 1);
+        assert_eq!(counts[0].papers_mentioning_any, 3);
+        assert_eq!(counts[0].percent("pytorch"), 100.0 * 2.0 / 3.0);
+    }
+
+    #[test]
+    fn multiple_mentions_count_once() {
+        let papers = vec![Paper { month: 0, text: "PyTorch pytorch PyTorch!".into() }];
+        let counts = count_mentions(&papers, 1);
+        assert_eq!(counts[0].by_framework[5], 1);
+    }
+
+    #[test]
+    fn papers_without_frameworks_are_excluded() {
+        let papers = vec![Paper { month: 0, text: "a paper about biology".into() }];
+        let counts = count_mentions(&papers, 1);
+        assert_eq!(counts[0].papers_mentioning_any, 0);
+        assert_eq!(counts[0].percent("pytorch"), 0.0);
+    }
+
+    #[test]
+    fn synthetic_series_rises_monotonically_in_trend() {
+        let model = AdoptionModel::default();
+        let papers = model.generate(7);
+        let counts = count_mentions(&papers, model.months);
+        let series = pytorch_share_series(&counts);
+        // Start low, end near ceiling (the Figure 3 shape).
+        assert!(series[0] < 10.0, "start {}", series[0]);
+        assert!(series[model.months - 1] > 40.0, "end {}", series[model.months - 1]);
+        // Trend: late average well above early average.
+        let early: f64 = series[..6].iter().sum::<f64>() / 6.0;
+        let late: f64 = series[model.months - 6..].iter().sum::<f64>() / 6.0;
+        assert!(late > early + 25.0, "early {early} late {late}");
+    }
+
+    #[test]
+    fn measured_share_tracks_ground_truth() {
+        let model = AdoptionModel::default();
+        let papers = model.generate(11);
+        let counts = count_mentions(&papers, model.months);
+        for month in [0usize, 10, 20, 29] {
+            let measured = counts[month].percent("pytorch") / 100.0;
+            let truth = model.pytorch_prob(month);
+            assert!((measured - truth).abs() < 0.08, "month {month}: {measured} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn chart_renders() {
+        let chart = ascii_chart(&[1.0, 5.0, 20.0, 45.0], 5);
+        assert!(chart.contains('#'));
+        assert!(chart.lines().count() >= 6);
+    }
+}

@@ -1,0 +1,318 @@
+//! The caching allocator (paper §5.3).
+//!
+//! "PyTorch implements a custom allocator which incrementally builds up a
+//! cache of CUDA memory and reassigns it to later allocations without
+//! further use of CUDA APIs."
+//!
+//! Implementation: a best-fit free list per stream, keyed by rounded block
+//! size in a `BTreeMap`. Requests round up to 512 B ([`crate::alloc::round_up`]);
+//! a cached block up to 2× the request (or within one granule) is reused
+//! directly, a much larger one is split. Blocks freed on one stream are
+//! cached in *that stream's* pool only — the one-pool-per-stream design the
+//! paper argues is safe because streams serialize execution. Requesting a
+//! block on a different stream than it was freed on therefore never reuses
+//! the foreign pool; cross-stream movement only happens through
+//! `empty_cache` + driver.
+
+use std::collections::BTreeMap;
+use std::ptr::NonNull;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::driver::MemDriver;
+use super::{round_up, AllocCounters, AllocStats, Allocator, Block, StreamId, ROUND_BYTES};
+
+/// Reuse a cached block without splitting if it is at most this factor
+/// larger than the request (beyond one granule).
+const SPLIT_THRESHOLD_FACTOR: usize = 2;
+
+/// Smallest remainder worth keeping after a split.
+const MIN_SPLIT_REMAINDER: usize = ROUND_BYTES;
+
+#[derive(Debug)]
+struct CachedRegion {
+    ptr: NonNull<u8>,
+    size: usize,
+    /// Size the driver allocated; only regions with `driver_size == size`
+    /// (i.e. never split) can be returned to the driver on `empty_cache`.
+    driver_root: Option<usize>,
+}
+
+// SAFETY: raw region handles; contents synchronized by stream discipline.
+unsafe impl Send for CachedRegion {}
+
+#[derive(Default)]
+struct StreamPool {
+    /// size -> stack of free regions of exactly that size.
+    free: BTreeMap<usize, Vec<CachedRegion>>,
+    cached_bytes: usize,
+}
+
+impl StreamPool {
+    /// Best-fit lookup: smallest cached region with size >= want.
+    fn take(&mut self, want: usize) -> Option<CachedRegion> {
+        let key = *self.free.range(want..).next()?.0;
+        let list = self.free.get_mut(&key).expect("key exists");
+        let region = list.pop().expect("non-empty list");
+        if list.is_empty() {
+            self.free.remove(&key);
+        }
+        self.cached_bytes -= region.size;
+        Some(region)
+    }
+
+    fn put(&mut self, region: CachedRegion) {
+        self.cached_bytes += region.size;
+        self.free.entry(region.size).or_default().push(region);
+    }
+}
+
+/// The caching allocator. One instance per device; shared via `Arc`.
+pub struct CachingAllocator {
+    driver: Arc<dyn MemDriver>,
+    pools: Mutex<std::collections::HashMap<StreamId, StreamPool>>,
+    counters: AllocCounters,
+}
+
+impl CachingAllocator {
+    pub fn new(driver: Arc<dyn MemDriver>) -> Self {
+        CachingAllocator {
+            driver,
+            pools: Mutex::new(Default::default()),
+            counters: AllocCounters::default(),
+        }
+    }
+
+    /// Access to the underlying driver (used by Fig. 2 to read call counts).
+    pub fn driver(&self) -> &Arc<dyn MemDriver> {
+        &self.driver
+    }
+
+    fn driver_alloc(&self, size: usize) -> NonNull<u8> {
+        let t0 = Instant::now();
+        let p = self.driver.alloc(size);
+        self.counters
+            .driver_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters.driver_allocs.fetch_add(1, Ordering::Relaxed);
+        p
+    }
+}
+
+impl Allocator for CachingAllocator {
+    fn allocate(&self, bytes: usize, stream: StreamId) -> Block {
+        let want = round_up(bytes);
+        let mut pools = self.pools.lock().unwrap();
+        let pool = pools.entry(stream).or_default();
+
+        if let Some(mut region) = pool.take(want) {
+            // Cache hit. Split if the region is much larger than needed so
+            // a single huge block doesn't get pinned under small tensors.
+            if region.size > want * SPLIT_THRESHOLD_FACTOR
+                && region.size - want >= MIN_SPLIT_REMAINDER
+            {
+                // SAFETY: want < region.size, both within the region.
+                let rest_ptr = unsafe { NonNull::new_unchecked(region.ptr.as_ptr().add(want)) };
+                let rest = CachedRegion { ptr: rest_ptr, size: region.size - want, driver_root: None };
+                pool.put(rest);
+                region.size = want;
+                region.driver_root = None;
+            }
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .cached_bytes
+                .store(pool.cached_bytes as u64, Ordering::Relaxed);
+            self.counters.on_alloc(region.size);
+            let root = matches!(region.driver_root, Some(sz) if sz == region.size);
+            return Block { ptr: region.ptr, size: region.size, requested: bytes, stream, root };
+        }
+        drop(pools);
+
+        // Cache miss: go to the driver.
+        let ptr = self.driver_alloc(want);
+        self.counters.on_alloc(want);
+        Block { ptr, size: want, requested: bytes, stream, root: true }
+    }
+
+    fn deallocate(&self, block: Block) {
+        self.counters.on_free(block.size);
+        let mut pools = self.pools.lock().unwrap();
+        let pool = pools.entry(block.stream).or_default();
+        pool.put(CachedRegion {
+            ptr: block.ptr,
+            size: block.size,
+            driver_root: if block.root { Some(block.size) } else { None },
+        });
+        self.counters
+            .cached_bytes
+            .store(pool.cached_bytes as u64, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> AllocStats {
+        let mut s = self.counters.snapshot();
+        let pools = self.pools.lock().unwrap();
+        s.cached_bytes = pools.values().map(|p| p.cached_bytes as u64).sum();
+        s
+    }
+
+    fn empty_cache(&self) {
+        let mut pools = self.pools.lock().unwrap();
+        for pool in pools.values_mut() {
+            for (_, regions) in std::mem::take(&mut pool.free) {
+                for r in regions {
+                    // Split fragments cannot be individually returned to the
+                    // driver (their base pointer is interior); they are
+                    // intentionally leaked until process exit, matching the
+                    // paper's "almost never returns memory" posture. Root
+                    // regions go back to the driver.
+                    if let Some(root) = r.driver_root {
+                        debug_assert_eq!(root, r.size);
+                        self.driver.free(r.ptr, r.size);
+                        self.counters.driver_frees.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            pool.cached_bytes = 0;
+        }
+        self.counters.cached_bytes.store(0, Ordering::Relaxed);
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+    }
+}
+
+impl Drop for CachingAllocator {
+    fn drop(&mut self) {
+        self.empty_cache();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::driver::HostMem;
+
+    fn mk() -> CachingAllocator {
+        CachingAllocator::new(Arc::new(HostMem::default()))
+    }
+
+    #[test]
+    fn first_alloc_hits_driver_second_hits_cache() {
+        let a = mk();
+        let s = StreamId::DEFAULT;
+        let b1 = a.allocate(1000, s);
+        assert_eq!(a.stats().driver_allocs, 1);
+        a.deallocate(b1);
+        let b2 = a.allocate(900, s); // rounds to same 1024 granule class
+        assert_eq!(a.stats().driver_allocs, 1, "should reuse cache");
+        assert_eq!(a.stats().cache_hits, 1);
+        a.deallocate(b2);
+    }
+
+    #[test]
+    fn sizes_round_to_512() {
+        let a = mk();
+        let b = a.allocate(1, StreamId::DEFAULT);
+        assert_eq!(b.size, 512);
+        assert_eq!(b.requested, 1);
+        a.deallocate(b);
+    }
+
+    #[test]
+    fn one_pool_per_stream_no_cross_reuse() {
+        let a = mk();
+        let b1 = a.allocate(2048, StreamId(0));
+        let p1 = b1.ptr;
+        a.deallocate(b1);
+        // Same size on another stream must NOT reuse stream 0's block.
+        let b2 = a.allocate(2048, StreamId(1));
+        assert_ne!(b2.ptr, p1, "cross-stream reuse violates §5.3");
+        assert_eq!(a.stats().driver_allocs, 2);
+        a.deallocate(b2);
+        // But stream 0 reuses its own.
+        let b3 = a.allocate(2048, StreamId(0));
+        assert_eq!(b3.ptr, p1);
+        a.deallocate(b3);
+    }
+
+    #[test]
+    fn large_block_is_split() {
+        let a = mk();
+        let big = a.allocate(1 << 20, StreamId::DEFAULT);
+        let base = big.ptr;
+        a.deallocate(big);
+        let small = a.allocate(4096, StreamId::DEFAULT);
+        assert_eq!(small.ptr, base, "split should serve from region base");
+        assert_eq!(small.size, 4096);
+        // Remainder still cached: another medium alloc is a cache hit.
+        let med = a.allocate(1 << 19, StreamId::DEFAULT);
+        assert_eq!(a.stats().driver_allocs, 1, "remainder should satisfy this");
+        a.deallocate(small);
+        a.deallocate(med);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let a = mk();
+        let s = StreamId::DEFAULT;
+        let b1 = a.allocate(512, s);
+        let b2 = a.allocate(4096, s);
+        let (p_small, p_big) = (b1.ptr, b2.ptr);
+        a.deallocate(b2);
+        a.deallocate(b1);
+        let c = a.allocate(512, s);
+        assert_eq!(c.ptr, p_small, "best fit should pick the 512B block");
+        let d = a.allocate(4096, s);
+        assert_eq!(d.ptr, p_big);
+        a.deallocate(c);
+        a.deallocate(d);
+    }
+
+    #[test]
+    fn empty_cache_returns_root_blocks() {
+        let driver = Arc::new(HostMem::default());
+        let a = CachingAllocator::new(driver.clone());
+        let b = a.allocate(8192, StreamId::DEFAULT);
+        a.deallocate(b);
+        assert_eq!(driver.free_calls(), 0);
+        a.empty_cache();
+        assert_eq!(driver.free_calls(), 1);
+        assert_eq!(a.stats().cached_bytes, 0);
+    }
+
+    #[test]
+    fn in_use_accounting() {
+        let a = mk();
+        let b1 = a.allocate(1000, StreamId::DEFAULT);
+        let b2 = a.allocate(2000, StreamId::DEFAULT);
+        let s = a.stats();
+        assert_eq!(s.in_use_bytes, (round_up(1000) + round_up(2000)) as u64);
+        a.deallocate(b1);
+        a.deallocate(b2);
+        assert_eq!(a.stats().in_use_bytes, 0);
+        assert!(a.stats().cached_bytes > 0);
+    }
+
+    #[test]
+    fn steady_state_has_zero_driver_calls() {
+        // The Figure 2 claim in miniature: a repeating alloc/free pattern
+        // stops calling the driver after the first "iteration".
+        let a = mk();
+        let s = StreamId::DEFAULT;
+        let pattern = [3000usize, 1500, 6000, 512, 3000];
+        let mut iter_driver_calls = vec![];
+        for _ in 0..4 {
+            let before = a.stats().driver_allocs;
+            let blocks: Vec<Block> = pattern.iter().map(|&n| a.allocate(n, s)).collect();
+            for b in blocks {
+                a.deallocate(b);
+            }
+            iter_driver_calls.push(a.stats().driver_allocs - before);
+        }
+        assert!(iter_driver_calls[0] > 0);
+        assert_eq!(iter_driver_calls[2], 0, "{iter_driver_calls:?}");
+        assert_eq!(iter_driver_calls[3], 0, "{iter_driver_calls:?}");
+    }
+}

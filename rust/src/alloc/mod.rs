@@ -1,0 +1,237 @@
+//! Memory allocation subsystem (paper §5.3, Figure 2).
+//!
+//! The paper's key observation: eager frameworks allocate an output tensor
+//! for almost every operator, and on an accelerator the raw driver calls
+//! (`cudaMalloc` / `cudaFree`) are catastrophically expensive — `cudaFree`
+//! blocks the host until all queued work on the device drains. PyTorch's
+//! answer is a *caching* allocator that requests memory from the driver
+//! once and reassigns it forever after, with three tuning decisions we
+//! reproduce exactly:
+//!
+//! 1. sizes round up to multiples of 512 bytes to limit fragmentation,
+//! 2. one pool per stream, so a block freed on the host can be reused
+//!    immediately by later work on the *same* stream (stream FIFO ordering
+//!    makes this safe even though the device may not have executed the
+//!    freeing op's consumers yet),
+//! 3. freed blocks are never returned to the driver until `empty_cache`.
+//!
+//! Layout of this module:
+//! - [`driver`]  — the raw memory "drivers": [`driver::HostMem`] (plain
+//!   aligned system allocation) and [`driver::SimDeviceMem`], a simulated
+//!   `cudaMalloc`/`cudaFree` whose free blocks on stream drain (the GPU
+//!   substitute; see DESIGN.md §2).
+//! - [`caching`] — the caching allocator itself.
+//! - [`naive`]   — a pass-through allocator (every request hits the
+//!   driver), the baseline for Figure 2 / the Chainer-like mode.
+//! - [`gc`]      — a deferred-reclamation arena used by the §5.5
+//!   refcounting-vs-GC comparison bench.
+
+pub mod caching;
+pub mod driver;
+pub mod gc;
+pub mod naive;
+
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Identifies a device work queue (see [`crate::device`]). Stream 0 is the
+/// default stream; host-side allocations use [`StreamId::HOST`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct StreamId(pub u32);
+
+impl StreamId {
+    /// Pseudo-stream for host (CPU) memory.
+    pub const HOST: StreamId = StreamId(u32::MAX);
+    /// The default device stream.
+    pub const DEFAULT: StreamId = StreamId(0);
+}
+
+/// Allocation granularity: the paper rounds all requests up to multiples of
+/// 512 bytes "to avoid fragmentation issues".
+pub const ROUND_BYTES: usize = 512;
+
+/// Round a byte count up to the allocator granularity.
+#[inline]
+pub fn round_up(bytes: usize) -> usize {
+    if bytes == 0 {
+        ROUND_BYTES
+    } else {
+        (bytes + ROUND_BYTES - 1) / ROUND_BYTES * ROUND_BYTES
+    }
+}
+
+/// A block of device (or host) memory handed out by an [`Allocator`].
+#[derive(Debug)]
+pub struct Block {
+    /// Base address. Valid until the owning allocator's `empty_cache` (for
+    /// cached blocks) or `deallocate` (for pass-through allocators).
+    pub ptr: NonNull<u8>,
+    /// Rounded capacity of the block in bytes.
+    pub size: usize,
+    /// The caller's original request, `<= size`.
+    pub requested: usize,
+    /// Stream whose pool this block belongs to.
+    pub stream: StreamId,
+    /// True iff `ptr`/`size` are exactly what the driver returned — only
+    /// such blocks may ever be handed back to the driver. Split fragments
+    /// (interior pointers / shrunk sizes) must stay cached forever.
+    pub root: bool,
+}
+
+// SAFETY: blocks are raw memory regions; synchronization of the *contents*
+// is the responsibility of the stream discipline (see crate::device). The
+// handle itself is freely sendable.
+unsafe impl Send for Block {}
+unsafe impl Sync for Block {}
+
+/// The allocator interface used by tensor storage.
+pub trait Allocator: Send + Sync {
+    /// Allocate at least `bytes` bytes for use on `stream`.
+    fn allocate(&self, bytes: usize, stream: StreamId) -> Block;
+    /// Return a block. Depending on the implementation this may cache it,
+    /// hand it back to the driver, or defer reclamation.
+    fn deallocate(&self, block: Block);
+    /// Statistics snapshot.
+    fn stats(&self) -> AllocStats;
+    /// Drop all cached blocks back to the driver (like
+    /// `torch.cuda.empty_cache()`). Pass-through allocators are a no-op.
+    fn empty_cache(&self) {}
+    /// Reset the statistics counters (not the cache).
+    fn reset_stats(&self);
+}
+
+/// Counters shared by all allocator implementations; the Figure 2 bench
+/// reads these to report driver-call counts per training iteration.
+#[derive(Default, Debug)]
+pub struct AllocCounters {
+    /// Requests served from the cache.
+    pub cache_hits: AtomicU64,
+    /// Requests that had to call the driver.
+    pub driver_allocs: AtomicU64,
+    /// Blocks returned to the driver (naive mode or `empty_cache`).
+    pub driver_frees: AtomicU64,
+    /// Total nanoseconds spent inside driver calls (the "stall" time that
+    /// dominates iteration 1 in Figure 2).
+    pub driver_ns: AtomicU64,
+    /// Bytes currently held by user tensors.
+    pub in_use_bytes: AtomicU64,
+    /// Peak of `in_use_bytes`.
+    pub peak_in_use_bytes: AtomicU64,
+    /// Bytes parked in the cache (0 for pass-through allocators).
+    pub cached_bytes: AtomicU64,
+}
+
+impl AllocCounters {
+    pub(crate) fn on_alloc(&self, bytes: usize) {
+        let now = self.in_use_bytes.fetch_add(bytes as u64, Ordering::Relaxed) + bytes as u64;
+        self.peak_in_use_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+    pub(crate) fn on_free(&self, bytes: usize) {
+        self.in_use_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
+    }
+    pub(crate) fn snapshot(&self) -> AllocStats {
+        AllocStats {
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            driver_allocs: self.driver_allocs.load(Ordering::Relaxed),
+            driver_frees: self.driver_frees.load(Ordering::Relaxed),
+            driver_ns: self.driver_ns.load(Ordering::Relaxed),
+            in_use_bytes: self.in_use_bytes.load(Ordering::Relaxed),
+            peak_in_use_bytes: self.peak_in_use_bytes.load(Ordering::Relaxed),
+            cached_bytes: self.cached_bytes.load(Ordering::Relaxed),
+        }
+    }
+    pub(crate) fn reset(&self) {
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.driver_allocs.store(0, Ordering::Relaxed);
+        self.driver_frees.store(0, Ordering::Relaxed);
+        self.driver_ns.store(0, Ordering::Relaxed);
+        self.peak_in_use_bytes
+            .store(self.in_use_bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time view of an allocator's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    pub cache_hits: u64,
+    pub driver_allocs: u64,
+    pub driver_frees: u64,
+    pub driver_ns: u64,
+    pub in_use_bytes: u64,
+    pub peak_in_use_bytes: u64,
+    pub cached_bytes: u64,
+}
+
+impl AllocStats {
+    /// Difference of two snapshots (for per-iteration deltas in Fig. 2).
+    pub fn delta(&self, earlier: &AllocStats) -> AllocStats {
+        AllocStats {
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            driver_allocs: self.driver_allocs - earlier.driver_allocs,
+            driver_frees: self.driver_frees - earlier.driver_frees,
+            driver_ns: self.driver_ns - earlier.driver_ns,
+            in_use_bytes: self.in_use_bytes,
+            peak_in_use_bytes: self.peak_in_use_bytes,
+            cached_bytes: self.cached_bytes,
+        }
+    }
+}
+
+/// Streams must be drainable for the simulated `cudaFree` blocking
+/// semantics; `crate::device::Streams` implements this. A no-op impl is
+/// provided for host-only tests.
+pub trait DrainAll: Send + Sync {
+    /// Block the calling thread until all queued device work completes.
+    fn drain_all(&self);
+}
+
+/// No-op drainer for tests / host memory.
+pub struct NoDrain;
+impl DrainAll for NoDrain {
+    fn drain_all(&self) {}
+}
+
+/// Convenience: the allocator type used everywhere (`Arc`-shared trait object).
+pub type ArcAllocator = Arc<dyn Allocator>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_is_multiple_of_512() {
+        for req in [0usize, 1, 4, 511, 512, 513, 1000, 4096, 123_457] {
+            let r = round_up(req);
+            assert_eq!(r % ROUND_BYTES, 0, "req={req}");
+            assert!(r >= req.max(1));
+            assert!(r < req + ROUND_BYTES + 1);
+        }
+    }
+
+    #[test]
+    fn round_up_zero_gives_one_granule() {
+        assert_eq!(round_up(0), ROUND_BYTES);
+    }
+
+    #[test]
+    fn counters_track_peak() {
+        let c = AllocCounters::default();
+        c.on_alloc(1000);
+        c.on_alloc(2000);
+        c.on_free(1000);
+        c.on_alloc(500);
+        let s = c.snapshot();
+        assert_eq!(s.in_use_bytes, 2500);
+        assert_eq!(s.peak_in_use_bytes, 3000);
+    }
+
+    #[test]
+    fn stats_delta() {
+        let a = AllocStats { cache_hits: 10, driver_allocs: 5, ..Default::default() };
+        let b = AllocStats { cache_hits: 25, driver_allocs: 6, ..Default::default() };
+        let d = b.delta(&a);
+        assert_eq!(d.cache_hits, 15);
+        assert_eq!(d.driver_allocs, 1);
+    }
+}

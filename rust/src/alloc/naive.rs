@@ -1,0 +1,92 @@
+//! Pass-through allocator: every allocation and free is a driver call.
+//!
+//! This is the behaviour of a framework *without* the paper's caching
+//! allocator — what Figure 2's first iteration looks like all the time.
+//! Used as the baseline in `fig2_allocator` and as part of the
+//! Chainer-stand-in "NaiveEager" execution mode in Table 1.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::driver::MemDriver;
+use super::{round_up, AllocCounters, AllocStats, Allocator, Block, StreamId};
+
+/// Allocator that forwards every request straight to the driver.
+pub struct NaiveAllocator {
+    driver: Arc<dyn MemDriver>,
+    counters: AllocCounters,
+}
+
+impl NaiveAllocator {
+    pub fn new(driver: Arc<dyn MemDriver>) -> Self {
+        NaiveAllocator { driver, counters: AllocCounters::default() }
+    }
+
+    pub fn driver(&self) -> &Arc<dyn MemDriver> {
+        &self.driver
+    }
+}
+
+impl Allocator for NaiveAllocator {
+    fn allocate(&self, bytes: usize, stream: StreamId) -> Block {
+        let size = round_up(bytes);
+        let t0 = Instant::now();
+        let ptr = self.driver.alloc(size);
+        self.counters
+            .driver_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters.driver_allocs.fetch_add(1, Ordering::Relaxed);
+        self.counters.on_alloc(size);
+        Block { ptr, size, requested: bytes, stream, root: true }
+    }
+
+    fn deallocate(&self, block: Block) {
+        self.counters.on_free(block.size);
+        let t0 = Instant::now();
+        self.driver.free(block.ptr, block.size);
+        self.counters
+            .driver_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters.driver_frees.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.counters.snapshot()
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::driver::HostMem;
+
+    #[test]
+    fn every_cycle_hits_driver() {
+        let driver = Arc::new(HostMem::default());
+        let a = NaiveAllocator::new(driver.clone());
+        for _ in 0..5 {
+            let b = a.allocate(1000, StreamId::DEFAULT);
+            a.deallocate(b);
+        }
+        assert_eq!(driver.alloc_calls(), 5);
+        assert_eq!(driver.free_calls(), 5);
+        let s = a.stats();
+        assert_eq!(s.driver_allocs, 5);
+        assert_eq!(s.driver_frees, 5);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.in_use_bytes, 0);
+    }
+
+    #[test]
+    fn rounds_like_the_caching_allocator() {
+        let a = NaiveAllocator::new(Arc::new(HostMem::default()));
+        let b = a.allocate(700, StreamId::DEFAULT);
+        assert_eq!(b.size, 1024);
+        a.deallocate(b);
+    }
+}

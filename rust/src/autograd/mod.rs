@@ -1,0 +1,331 @@
+//! Reverse-mode automatic differentiation (§4.3).
+//!
+//! torsk uses the *operator overloading* approach the paper describes: each
+//! eager op that touches a gradient-requiring tensor records a [`Node`]
+//! (a `grad_fn`) holding the op's backward closure and edges to the nodes
+//! that produced its inputs. `backward` then runs the recorded graph in
+//! reverse with the multithreaded [`engine`] (§5.1: a "multithreaded
+//! evaluator which does not require holding the Python global interpreter
+//! lock" — here, no lock at all beyond per-buffer accumulation).
+//!
+//! Mutation safety (§4.3): tensors saved for backward snapshot the storage
+//! version ([`SavedTensor`]); if an in-place op bumped it before backward
+//! runs, unpacking panics with the PyTorch error message rather than
+//! silently using stale data. Copy-on-write is deliberately *not*
+//! implemented — the paper argues surfacing a user error avoids hidden
+//! performance cliffs.
+
+pub mod engine;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+use crate::torsk_assert;
+
+/// Per-tensor autograd state.
+#[derive(Default)]
+pub struct AutogradMeta {
+    /// Set on leaves by the user; interior tensors derive it from grad_fn.
+    pub requires_grad: bool,
+    /// Accumulated gradient (leaves, after backward).
+    pub grad: Option<Tensor>,
+    /// The function that produced this tensor, if recorded.
+    pub grad_fn: Option<Arc<Node>>,
+}
+
+/// A backward function: maps the output gradient to per-input gradients.
+pub trait Function: Send + Sync {
+    /// Op name for diagnostics/profiling.
+    fn name(&self) -> &str;
+    /// Compute input gradients. `None` entries mean "input did not require
+    /// grad". Must return exactly one entry per recorded edge.
+    fn backward(&self, grad_output: &Tensor) -> Vec<Option<Tensor>>;
+}
+
+/// Backward function defined by a closure — the common case; ops capture
+/// their [`SavedTensor`]s in the closure.
+pub struct ClosureFunction {
+    name: &'static str,
+    f: Box<dyn Fn(&Tensor) -> Vec<Option<Tensor>> + Send + Sync>,
+}
+
+impl ClosureFunction {
+    pub fn new(
+        name: &'static str,
+        f: impl Fn(&Tensor) -> Vec<Option<Tensor>> + Send + Sync + 'static,
+    ) -> Box<dyn Function> {
+        Box::new(ClosureFunction { name, f: Box::new(f) })
+    }
+}
+
+impl Function for ClosureFunction {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn backward(&self, grad_output: &Tensor) -> Vec<Option<Tensor>> {
+        (self.f)(grad_output)
+    }
+}
+
+/// Where a node's input gradient flows next.
+pub enum Edge {
+    /// Into another recorded function.
+    Node(Arc<Node>),
+    /// Into a leaf tensor's `.grad` (PyTorch's `AccumulateGrad`).
+    Leaf(Tensor),
+    /// Nowhere (input doesn't require grad).
+    None,
+}
+
+static NEXT_NODE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A node in the dynamically-recorded backward graph.
+pub struct Node {
+    pub(crate) function: Box<dyn Function>,
+    pub(crate) edges: Vec<Edge>,
+    pub(crate) id: u64,
+}
+
+impl Node {
+    pub fn new(function: Box<dyn Function>, edges: Vec<Edge>) -> Arc<Node> {
+        Arc::new(Node { function, edges, id: NEXT_NODE_ID.fetch_add(1, Ordering::Relaxed) })
+    }
+
+    /// Op name of the recorded function.
+    pub fn name(&self) -> &str {
+        self.function.name()
+    }
+
+    /// Number of input edges.
+    pub fn num_inputs(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Grad mode (torch.no_grad / torch.enable_grad)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static GRAD_ENABLED: Cell<bool> = const { Cell::new(true) };
+}
+
+/// Is graph recording enabled on this thread?
+pub fn grad_enabled() -> bool {
+    GRAD_ENABLED.with(|c| c.get())
+}
+
+/// Run `f` with graph recording disabled (like `torch.no_grad()`).
+pub fn no_grad<R>(f: impl FnOnce() -> R) -> R {
+    with_grad_mode(false, f)
+}
+
+/// Run `f` with a specific grad-recording mode.
+pub fn with_grad_mode<R>(enabled: bool, f: impl FnOnce() -> R) -> R {
+    let prev = GRAD_ENABLED.with(|c| c.replace(enabled));
+    struct Reset(bool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            GRAD_ENABLED.with(|c| c.set(self.0));
+        }
+    }
+    let _reset = Reset(prev);
+    f()
+}
+
+// ---------------------------------------------------------------------
+// Saved tensors + versioning (§4.3)
+// ---------------------------------------------------------------------
+
+/// A tensor saved for the backward pass, with its storage version pinned.
+pub struct SavedTensor {
+    tensor: Tensor,
+    saved_version: u64,
+}
+
+impl SavedTensor {
+    /// Save `t` for backward, snapshotting its mutation version.
+    pub fn save(t: &Tensor) -> SavedTensor {
+        SavedTensor { tensor: t.detach(), saved_version: t.version() }
+    }
+
+    /// Retrieve the tensor, panicking if it was mutated in place since the
+    /// save (the paper's deliberate fail-fast choice over copy-on-write).
+    pub fn unpack(&self) -> Tensor {
+        let now = self.tensor.version();
+        torsk_assert!(
+            now == self.saved_version,
+            "one of the variables needed for gradient computation has been \
+             modified by an inplace operation: expected version {}, found \
+             version {}",
+            self.saved_version,
+            now
+        );
+        self.tensor.clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Graph recording (called by the ops layer)
+// ---------------------------------------------------------------------
+
+/// Record `function` as the producer of `output`, with one edge per entry
+/// of `inputs`. No-op if recording is off or no input requires grad.
+pub fn record(inputs: &[&Tensor], output: &Tensor, function: impl FnOnce() -> Box<dyn Function>) {
+    if !grad_enabled() {
+        return;
+    }
+    if !inputs.iter().any(|t| t.requires_grad_flag()) {
+        return;
+    }
+    let edges: Vec<Edge> = inputs
+        .iter()
+        .map(|t| match t.grad_fn() {
+            Some(node) => Edge::Node(node),
+            None if t.requires_grad_flag() => Edge::Leaf((*t).clone()),
+            None => Edge::None,
+        })
+        .collect();
+    output.set_grad_fn(Node::new(function(), edges));
+}
+
+/// Would an op over `inputs` record a graph node right now? Ops use this
+/// to skip saving activations entirely during inference — one of the
+/// "pragmatic performance" details of §3.
+pub fn should_record(inputs: &[&Tensor]) -> bool {
+    grad_enabled() && inputs.iter().any(|t| t.requires_grad_flag())
+}
+
+/// Accumulate `g` into a leaf tensor's `.grad` (AccumulateGrad).
+pub(crate) fn accumulate_grad(leaf: &Tensor, g: Tensor) {
+    torsk_assert!(
+        leaf.shape() == g.shape(),
+        "grad shape {:?} does not match leaf shape {:?}",
+        g.shape(),
+        leaf.shape()
+    );
+    let current = leaf.grad();
+    let new = match current {
+        Some(cur) => no_grad(|| crate::ops::add(&cur, &g)),
+        None => g,
+    };
+    leaf.set_grad(Some(new));
+}
+
+/// Entry point used by `Tensor::backward`.
+pub fn backward(root: &Tensor, grad: Option<Tensor>) {
+    let seed = match grad {
+        Some(g) => {
+            torsk_assert!(
+                g.shape() == root.shape(),
+                "backward seed shape {:?} vs root {:?}",
+                g.shape(),
+                root.shape()
+            );
+            g
+        }
+        None => {
+            torsk_assert!(
+                root.numel() == 1,
+                "grad can be implicitly created only for scalar outputs"
+            );
+            crate::tensor::Tensor::full(root.shape(), 1.0).to_device(root.device())
+        }
+    };
+    match root.grad_fn() {
+        Some(node) => engine::run_backward(node, seed),
+        None => {
+            torsk_assert!(
+                root.requires_grad_flag(),
+                "element 0 of tensors does not require grad and does not have a grad_fn"
+            );
+            accumulate_grad(root, seed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_mode_scoping() {
+        assert!(grad_enabled());
+        no_grad(|| {
+            assert!(!grad_enabled());
+            with_grad_mode(true, || assert!(grad_enabled()));
+            assert!(!grad_enabled());
+        });
+        assert!(grad_enabled());
+    }
+
+    #[test]
+    fn grad_mode_restored_on_panic() {
+        let _ = std::panic::catch_unwind(|| {
+            no_grad(|| panic!("boom"));
+        });
+        assert!(grad_enabled());
+    }
+
+    #[test]
+    fn saved_tensor_unpacks_when_unmodified() {
+        let t = Tensor::ones(&[2]);
+        let s = SavedTensor::save(&t);
+        let u = s.unpack();
+        assert!(u.shares_storage(&t));
+    }
+
+    #[test]
+    #[should_panic(expected = "modified by an inplace operation")]
+    fn saved_tensor_detects_mutation() {
+        let t = Tensor::ones(&[2]);
+        let s = SavedTensor::save(&t);
+        t.storage().bump_version(); // stand-in for an in-place op
+        s.unpack();
+    }
+
+    #[test]
+    fn record_skipped_without_requires_grad() {
+        let a = Tensor::ones(&[2]);
+        let b = Tensor::ones(&[2]);
+        let out = Tensor::ones(&[2]);
+        record(&[&a, &b], &out, || {
+            ClosureFunction::new("test", |_| vec![None, None])
+        });
+        assert!(out.grad_fn().is_none());
+    }
+
+    #[test]
+    fn record_creates_node_with_leaf_edges() {
+        let a = Tensor::ones(&[2]).requires_grad(true);
+        let b = Tensor::ones(&[2]);
+        let out = Tensor::ones(&[2]);
+        record(&[&a, &b], &out, || {
+            ClosureFunction::new("test", |_| vec![None, None])
+        });
+        let node = out.grad_fn().expect("node recorded");
+        assert_eq!(node.num_inputs(), 2);
+        assert_eq!(node.name(), "test");
+        assert!(matches!(node.edges[0], Edge::Leaf(_)));
+        assert!(matches!(node.edges[1], Edge::None));
+    }
+
+    #[test]
+    fn record_respects_no_grad() {
+        let a = Tensor::ones(&[2]).requires_grad(true);
+        let out = Tensor::ones(&[2]);
+        no_grad(|| {
+            record(&[&a], &out, || ClosureFunction::new("test", |_| vec![None]));
+        });
+        assert!(out.grad_fn().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "implicitly created only for scalar")]
+    fn backward_on_nonscalar_without_seed_panics() {
+        let t = Tensor::ones(&[2]).requires_grad(true);
+        backward(&t, None);
+    }
+}

@@ -1,0 +1,235 @@
+//! `torsk` command-line launcher.
+//!
+//! Subcommands (offline crate set has no clap; parsing is hand-rolled):
+//!
+//! ```text
+//! torsk train --model resnet50 --steps 20 [--mode eager|naive] [--device cpu|sim]
+//! torsk bench --model alexnet --steps 10      one-off throughput probe
+//! torsk profile --model resnet50 --ops 40     Figure 1 style timeline
+//! torsk artifacts                             list AOT artifacts
+//! torsk adoption                              Figure 3 pipeline demo
+//! torsk info                                  build/config summary
+//! ```
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::device::Device;
+use crate::models::{self};
+use crate::optim::{Optimizer, Sgd};
+use crate::{adoption, device, profiler};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+/// Entry point used by `main.rs`.
+pub fn run() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let code = match cmd {
+        "train" => cmd_train(&flags),
+        "bench" => cmd_bench(&flags),
+        "profile" => cmd_profile(&flags),
+        "artifacts" => cmd_artifacts(),
+        "adoption" => cmd_adoption(&flags),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "torsk — an imperative-style, high-performance deep learning library\n\
+         \n\
+         USAGE: torsk <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           train     --model <name> --steps N [--mode eager|naive] [--device cpu|sim] [--lr F]\n\
+           bench     --model <name> --steps N [--device cpu|sim]\n\
+           profile   --model <name> [--ops N]     (Figure 1 timeline)\n\
+           artifacts                              (list AOT graphs)\n\
+           adoption  [--months N]                 (Figure 3 pipeline)\n\
+           info\n\
+         \n\
+         MODELS: {}",
+        models::TABLE1_MODELS.join(", ")
+    );
+}
+
+fn resolve_device(flags: &HashMap<String, String>) -> Device {
+    match get(flags, "device", "cpu") {
+        "sim" => Device::Sim,
+        _ => Device::Cpu,
+    }
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> i32 {
+    let name = get(flags, "model", "alexnet");
+    let steps: usize = get(flags, "steps", "10").parse().unwrap_or(10);
+    let lr: f32 = get(flags, "lr", "0.05").parse().unwrap_or(0.05);
+    let device = resolve_device(flags);
+    let mode = get(flags, "mode", "eager");
+    if mode == "naive" {
+        device::set_async_enabled(false);
+        crate::ctx::use_naive_sim_allocator();
+    }
+    let Some(model) = models::by_name_on(name, device) else {
+        eprintln!("unknown model `{name}`");
+        return 2;
+    };
+    println!("training {name} for {steps} steps (mode={mode}, device={device}, lr={lr})");
+    let mut opt = Sgd::new(model.parameters(), lr).with_momentum(0.9);
+    let t0 = Instant::now();
+    let mut units = 0usize;
+    for step in 0..steps {
+        opt.zero_grad();
+        let batch = model.make_batch(step as u64).to_device(device);
+        let loss = model.loss(&batch);
+        loss.backward();
+        opt.step();
+        units += batch.units();
+        println!("  step {step:>4}  loss {:.4}", loss.item());
+    }
+    device::synchronize();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("done: {:.2} units/s over {dt:.2}s", units as f64 / dt);
+    0
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) -> i32 {
+    let name = get(flags, "model", "alexnet");
+    let steps: usize = get(flags, "steps", "10").parse().unwrap_or(10);
+    let device = resolve_device(flags);
+    let Some(model) = models::by_name_on(name, device) else {
+        eprintln!("unknown model `{name}`");
+        return 2;
+    };
+    let mut opt = Sgd::new(model.parameters(), 0.05);
+    // Warmup step outside the timed region.
+    let batch = model.make_batch(0).to_device(device);
+    model.loss(&batch).backward();
+    opt.zero_grad();
+    device::synchronize();
+    let t0 = Instant::now();
+    let mut units = 0;
+    for step in 0..steps {
+        opt.zero_grad();
+        let batch = model.make_batch(step as u64).to_device(device);
+        model.loss(&batch).backward();
+        opt.step();
+        units += batch.units();
+    }
+    device::synchronize();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name}: {:.2} units/s ({steps} steps, {dt:.3}s)", units as f64 / dt);
+    0
+}
+
+fn cmd_profile(flags: &HashMap<String, String>) -> i32 {
+    let name = get(flags, "model", "resnet50");
+    let max_ops: usize = get(flags, "ops", "40").parse().unwrap_or(40);
+    let Some(model) = models::by_name_on(name, Device::Sim) else {
+        eprintln!("unknown model `{name}`");
+        return 2;
+    };
+    let batch = model.make_batch(0).to_device(Device::Sim);
+    profiler::start();
+    let loss = crate::autograd::no_grad(|| model.loss(&batch));
+    let _ = loss.item(); // force sync
+    let events = profiler::stop();
+    let shown: Vec<profiler::TraceEvent> = events.into_iter().take(max_ops * 2).collect();
+    println!("{}", profiler::ascii_timeline(&shown, 100));
+    let host = profiler::track_stats(&shown, profiler::Track::Host);
+    let dev = profiler::track_stats(&shown, profiler::Track::Stream(0));
+    println!(
+        "host busy {:.2} ms over {} spans; stream busy {:.2} ms, utilization {:.1}%",
+        host.busy_ns as f64 / 1e6,
+        host.spans,
+        dev.busy_ns as f64 / 1e6,
+        100.0 * dev.utilization()
+    );
+    0
+}
+
+fn cmd_artifacts() -> i32 {
+    match crate::runtime::Runtime::global().list() {
+        Ok(names) => {
+            println!("AOT artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot read artifacts: {e} (run `make artifacts`)");
+            1
+        }
+    }
+}
+
+fn cmd_adoption(flags: &HashMap<String, String>) -> i32 {
+    let months: usize = get(flags, "months", "30").parse().unwrap_or(30);
+    let model = adoption::AdoptionModel { months, ..Default::default() };
+    let papers = model.generate(7);
+    let counts = adoption::count_mentions(&papers, months);
+    let series = adoption::pytorch_share_series(&counts);
+    println!("{}", adoption::ascii_chart(&series, 12));
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("torsk {} — PyTorch (NeurIPS 2019) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("kernel threads: {}", crate::kernels::num_threads());
+    println!("async dispatch: {}", device::async_enabled());
+    println!(
+        "artifacts dir : {}",
+        std::env::var("TORSK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    );
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> =
+            ["--model", "resnet50", "--steps", "5", "--verbose"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args);
+        assert_eq!(get(&f, "model", ""), "resnet50");
+        assert_eq!(get(&f, "steps", "0"), "5");
+        assert_eq!(get(&f, "verbose", "false"), "true");
+        assert_eq!(get(&f, "missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flag_parsing_empty() {
+        let f = parse_flags(&[]);
+        assert!(f.is_empty());
+    }
+}

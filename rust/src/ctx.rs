@@ -1,0 +1,101 @@
+//! Global library context: per-device allocators and their wiring.
+//!
+//! Mirrors PyTorch's process-global singletons: the CUDA caching allocator
+//! instance, the stream registry, the profiler. The simulated-device
+//! allocator is swappable at runtime so the Figure 2 bench can compare the
+//! caching allocator against the naive pass-through one on identical
+//! workloads. Tensors capture an `Arc` to the allocator they came from, so
+//! swapping never frees a live block into the wrong pool.
+
+use std::sync::{Arc, RwLock};
+
+use crate::alloc::caching::CachingAllocator;
+use crate::alloc::driver::{HostMem, MemDriver, SimDeviceMem, SimDriverConfig};
+use crate::alloc::naive::NaiveAllocator;
+use crate::alloc::ArcAllocator;
+use crate::device::{self, Device};
+
+struct Ctx {
+    host_alloc: ArcAllocator,
+    sim_driver: Arc<SimDeviceMem>,
+    sim_alloc: RwLock<ArcAllocator>,
+}
+
+static CTX: once_cell::sync::Lazy<Ctx> = once_cell::sync::Lazy::new(|| {
+    let sim_driver = Arc::new(SimDeviceMem::new(SimDriverConfig::default(), device::streams()));
+    let sim_alloc: ArcAllocator = Arc::new(CachingAllocator::new(sim_driver.clone() as Arc<dyn MemDriver>));
+    Ctx {
+        host_alloc: Arc::new(CachingAllocator::new(Arc::new(HostMem::default()))),
+        sim_driver,
+        sim_alloc: RwLock::new(sim_alloc),
+    }
+});
+
+/// Allocator for host (CPU) tensors.
+pub fn host_allocator() -> ArcAllocator {
+    CTX.host_alloc.clone()
+}
+
+/// Allocator for simulated-device tensors (caching by default).
+pub fn sim_allocator() -> ArcAllocator {
+    CTX.sim_alloc.read().unwrap().clone()
+}
+
+/// The allocator serving `device`.
+pub fn allocator_for(device: Device) -> ArcAllocator {
+    match device {
+        Device::Cpu => host_allocator(),
+        Device::Sim => sim_allocator(),
+    }
+}
+
+/// The simulated `cudaMalloc/cudaFree` driver (for stats in benches).
+pub fn sim_driver() -> Arc<SimDeviceMem> {
+    CTX.sim_driver.clone()
+}
+
+/// Replace the simulated-device allocator. Existing tensors keep (and
+/// eventually free into) the allocator they were created from.
+pub fn set_sim_allocator(a: ArcAllocator) {
+    *CTX.sim_alloc.write().unwrap() = a;
+}
+
+/// Install a fresh *caching* allocator on the simulated device and return it.
+pub fn use_caching_sim_allocator() -> Arc<CachingAllocator> {
+    let a = Arc::new(CachingAllocator::new(CTX.sim_driver.clone() as Arc<dyn MemDriver>));
+    set_sim_allocator(a.clone() as ArcAllocator);
+    a
+}
+
+/// Install a fresh *naive* allocator on the simulated device and return it
+/// (the no-caching baseline of Figure 2).
+pub fn use_naive_sim_allocator() -> Arc<NaiveAllocator> {
+    let a = Arc::new(NaiveAllocator::new(CTX.sim_driver.clone() as Arc<dyn MemDriver>));
+    set_sim_allocator(a.clone() as ArcAllocator);
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{Allocator, StreamId};
+
+    #[test]
+    fn host_allocator_is_shared_singleton() {
+        let a = host_allocator();
+        let b = host_allocator();
+        let blk = a.allocate(100, StreamId::HOST);
+        b.deallocate(blk);
+        assert!(a.stats().driver_allocs >= 1);
+    }
+
+    #[test]
+    fn sim_allocator_swap_is_visible() {
+        let naive = use_naive_sim_allocator();
+        let blk = sim_allocator().allocate(256, StreamId::DEFAULT);
+        sim_allocator().deallocate(blk);
+        assert_eq!(naive.stats().driver_frees, 1);
+        // Restore the default for other tests.
+        use_caching_sim_allocator();
+    }
+}

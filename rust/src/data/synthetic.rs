@@ -1,0 +1,160 @@
+//! Synthetic datasets for the Table 1 workloads (DESIGN.md §2: stand-ins
+//! for ImageNet / WMT / ml-20m, generated deterministically from a seed so
+//! every execution mode sees identical data).
+
+use super::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Random images + labels (the AlexNet/VGG/ResNet/MobileNet workload).
+pub struct SyntheticImages {
+    pub n: usize,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+    pub seed: u64,
+}
+
+impl SyntheticImages {
+    pub fn new(n: usize, channels: usize, height: usize, width: usize, classes: usize) -> Self {
+        SyntheticImages { n, channels, height, width, classes, seed: 0 }
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x2545F491));
+        let mut img = vec![0.0f32; self.channels * self.height * self.width];
+        r.fill_normal(&mut img, 0.0, 1.0);
+        let label = r.below(self.classes as u64) as i64;
+        (
+            Tensor::from_vec(img, &[self.channels, self.height, self.width]),
+            Tensor::from_vec(vec![label], &[]),
+        )
+    }
+}
+
+/// Random token sequences (the GNMTv2 workload): source and target
+/// sequences of fixed length from a vocabulary.
+pub struct SyntheticSeq2Seq {
+    pub n: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl SyntheticSeq2Seq {
+    pub fn new(n: usize, src_len: usize, tgt_len: usize, vocab: usize) -> Self {
+        SyntheticSeq2Seq { n, src_len, tgt_len, vocab, seed: 0 }
+    }
+}
+
+impl Dataset for SyntheticSeq2Seq {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x9E3779B9));
+        let src: Vec<i64> = (0..self.src_len).map(|_| r.below(self.vocab as u64) as i64).collect();
+        let tgt: Vec<i64> = (0..self.tgt_len).map(|_| r.below(self.vocab as u64) as i64).collect();
+        (
+            Tensor::from_vec(src, &[self.src_len]),
+            Tensor::from_vec(tgt, &[self.tgt_len]),
+        )
+    }
+}
+
+/// Random (user, item) -> click interactions (the NCF workload).
+pub struct SyntheticInteractions {
+    pub n: usize,
+    pub users: usize,
+    pub items: usize,
+    pub seed: u64,
+}
+
+impl SyntheticInteractions {
+    pub fn new(n: usize, users: usize, items: usize) -> Self {
+        SyntheticInteractions { n, users, items, seed: 0 }
+    }
+}
+
+impl Dataset for SyntheticInteractions {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x85EBCA6B));
+        let user = r.below(self.users as u64) as i64;
+        let item = r.below(self.items as u64) as i64;
+        // Planted structure: interaction likelihood depends on id parity so
+        // models can actually learn something.
+        let label = if (user + item) % 2 == 0 { r.bernoulli(0.8) } else { r.bernoulli(0.2) };
+        (
+            Tensor::from_vec(vec![user, item], &[2]),
+            Tensor::from_vec(vec![if label { 1.0f32 } else { 0.0 }], &[1]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_are_deterministic_per_index() {
+        let d = SyntheticImages::new(10, 3, 4, 4, 5);
+        let (x1, y1) = d.get(3);
+        let (x2, y2) = d.get(3);
+        assert_eq!(x1.to_vec::<f32>(), x2.to_vec::<f32>());
+        assert_eq!(y1.to_vec::<i64>(), y2.to_vec::<i64>());
+        let (x3, _) = d.get(4);
+        assert_ne!(x1.to_vec::<f32>(), x3.to_vec::<f32>());
+    }
+
+    #[test]
+    fn image_labels_in_range() {
+        let d = SyntheticImages::new(50, 1, 2, 2, 7);
+        for i in 0..50 {
+            let (_, y) = d.get(i);
+            let l = y.to_vec::<i64>()[0];
+            assert!((0..7).contains(&l));
+        }
+    }
+
+    #[test]
+    fn seq2seq_shapes_and_vocab() {
+        let d = SyntheticSeq2Seq::new(5, 12, 9, 100);
+        let (src, tgt) = d.get(0);
+        assert_eq!(src.shape(), &[12]);
+        assert_eq!(tgt.shape(), &[9]);
+        assert!(src.to_vec::<i64>().iter().all(|&t| (0..100).contains(&t)));
+    }
+
+    #[test]
+    fn interactions_have_planted_signal() {
+        let d = SyntheticInteractions::new(20_000, 100, 100);
+        let (mut even_pos, mut even_n, mut odd_pos, mut odd_n) = (0f32, 0, 0f32, 0);
+        for i in 0..d.len() {
+            let (x, y) = d.get(i);
+            let v = x.to_vec::<i64>();
+            let label = y.to_vec::<f32>()[0];
+            if (v[0] + v[1]) % 2 == 0 {
+                even_pos += label;
+                even_n += 1;
+            } else {
+                odd_pos += label;
+                odd_n += 1;
+            }
+        }
+        assert!(even_pos / even_n as f32 > 0.7);
+        assert!((odd_pos / odd_n as f32) < 0.3);
+    }
+}

@@ -1,0 +1,494 @@
+//! Simulated accelerator: streams, events, async kernel dispatch (§5.2).
+//!
+//! The paper's performance story hinges on *separating control flow from
+//! data flow*: the host thread resolves Python control flow and merely
+//! **queues** kernel launches into a CUDA stream (a hardware FIFO), so the
+//! slow interpreted host can run ahead of the device and keep it saturated
+//! (Figure 1).
+//!
+//! We reproduce that architecture with a software device: a [`Stream`] is a
+//! worker thread consuming a FIFO of kernel closures. `launch` returns as
+//! soon as the closure is enqueued; the host only blocks on an explicit
+//! [`Stream::synchronize`], an [`Event`] wait, or a data-dependent read
+//! (`Tensor::to_vec` etc.). In-stream ordering is FIFO — the property the
+//! caching allocator's one-pool-per-stream design relies on (§5.3).
+//!
+//! The hardware adaptation rationale is in DESIGN.md §2: the kernels the
+//! stream executes are the real native kernels, so timelines measured on
+//! this device reflect genuine queue-vs-execute dynamics rather than
+//! scripted delays.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::alloc::{DrainAll, StreamId};
+use crate::profiler;
+
+/// Where a tensor lives and where its ops execute.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Device {
+    /// Host: ops run synchronously on the calling thread.
+    Cpu,
+    /// Simulated accelerator: ops are queued on the current stream.
+    Sim,
+}
+
+impl Device {
+    /// True if ops on this device are asynchronous w.r.t. the host.
+    pub fn is_async(self) -> bool {
+        matches!(self, Device::Sim)
+    }
+}
+
+impl std::fmt::Display for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Device::Cpu => write!(f, "cpu"),
+            Device::Sim => write!(f, "sim"),
+        }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct QueueState {
+    jobs: VecDeque<(String, Job)>,
+    /// Jobs enqueued but not yet completed (includes the one executing).
+    outstanding: usize,
+    shutdown: bool,
+}
+
+struct StreamShared {
+    state: Mutex<QueueState>,
+    /// Signalled when a job is pushed or shutdown is requested.
+    work_cv: Condvar,
+    /// Signalled when `outstanding` reaches zero.
+    idle_cv: Condvar,
+}
+
+/// A device work queue with FIFO execution semantics (a CUDA stream).
+pub struct Stream {
+    pub id: StreamId,
+    shared: Arc<StreamShared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    launched: AtomicU64,
+}
+
+impl Stream {
+    fn spawn(id: StreamId) -> Arc<Stream> {
+        let shared = Arc::new(StreamShared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), outstanding: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let worker_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("torsk-stream-{}", id.0))
+            .spawn(move || Self::worker_loop(id, worker_shared))
+            .expect("spawn stream worker");
+        Arc::new(Stream {
+            id,
+            shared,
+            worker: Mutex::new(Some(handle)),
+            launched: AtomicU64::new(0),
+        })
+    }
+
+    fn worker_loop(id: StreamId, shared: Arc<StreamShared>) {
+        loop {
+            let (name, job) = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if let Some(j) = st.jobs.pop_front() {
+                        break j;
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = shared.work_cv.wait(st).unwrap();
+                }
+            };
+            // Execute outside the lock; this is the "device" doing work.
+            let span = profiler::begin(profiler::Track::Stream(id.0), &name);
+            job();
+            profiler::end(span);
+            let mut st = shared.state.lock().unwrap();
+            st.outstanding -= 1;
+            if st.outstanding == 0 {
+                shared.idle_cv.notify_all();
+            }
+        }
+    }
+
+    /// Queue a kernel for execution. Returns immediately — this is the
+    /// `<<<...>>>`-style async launch of §5.2. `name` labels the op in
+    /// profiler timelines.
+    pub fn launch(&self, name: &str, job: impl FnOnce() + Send + 'static) {
+        let span = profiler::begin(profiler::Track::Host, &format!("launch {name}"));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(!st.shutdown, "launch on shut-down stream");
+            st.outstanding += 1;
+            st.jobs.push_back((name.to_string(), Box::new(job)));
+        }
+        self.shared.work_cv.notify_one();
+        self.launched.fetch_add(1, Ordering::Relaxed);
+        profiler::end(span);
+    }
+
+    /// Block the host until every queued kernel has finished
+    /// (`cudaStreamSynchronize`).
+    pub fn synchronize(&self) {
+        let span = profiler::begin(profiler::Track::Host, "synchronize");
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+        drop(st);
+        profiler::end(span);
+    }
+
+    /// Number of kernels launched on this stream since creation.
+    pub fn launch_count(&self) -> u64 {
+        self.launched.load(Ordering::Relaxed)
+    }
+
+    /// Jobs queued or running right now (0 = idle).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().outstanding
+    }
+
+    fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Stream {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A synchronization marker (CUDA event): record on one stream, wait on
+/// another (or on the host). Used by the data loader and multi-stream
+/// utilities, which "carefully insert additional synchronization" (§5.3).
+#[derive(Clone)]
+pub struct Event {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Event {
+    pub fn new() -> Event {
+        Event { inner: Arc::new((Mutex::new(false), Condvar::new())) }
+    }
+
+    /// Enqueue a marker on `stream`; the event fires when the device
+    /// reaches it.
+    pub fn record(&self, stream: &Stream) {
+        let inner = self.inner.clone();
+        stream.launch("event_record", move || {
+            let (lock, cv) = &*inner;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+    }
+
+    /// Fire the event immediately from the host.
+    pub fn record_host(&self) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    /// Make `stream` wait (on the device, without blocking the host) until
+    /// the event fires.
+    pub fn wait_stream(&self, stream: &Stream) {
+        let inner = self.inner.clone();
+        stream.launch("event_wait", move || {
+            let (lock, cv) = &*inner;
+            let mut fired = lock.lock().unwrap();
+            while !*fired {
+                fired = cv.wait(fired).unwrap();
+            }
+        });
+    }
+
+    /// Block the host until the event fires.
+    pub fn wait_host(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut fired = lock.lock().unwrap();
+        while !*fired {
+            fired = cv.wait(fired).unwrap();
+        }
+    }
+
+    /// Non-blocking check.
+    pub fn query(&self) -> bool {
+        *self.inner.0.lock().unwrap()
+    }
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The set of live streams on the simulated device. Implements [`DrainAll`]
+/// so the simulated driver's `cudaFree` can synchronize the whole device.
+pub struct Streams {
+    streams: Mutex<Vec<Arc<Stream>>>,
+}
+
+impl Streams {
+    fn new() -> Streams {
+        Streams { streams: Mutex::new(Vec::new()) }
+    }
+
+    /// Get (creating on first use) the stream with the given id.
+    pub fn get(&self, id: StreamId) -> Arc<Stream> {
+        let mut streams = self.streams.lock().unwrap();
+        if let Some(s) = streams.iter().find(|s| s.id == id) {
+            return s.clone();
+        }
+        let s = Stream::spawn(id);
+        streams.push(s.clone());
+        s
+    }
+
+    /// The default stream (id 0) — "in practice PyTorch almost never uses
+    /// multiple streams" (§5.3).
+    pub fn default_stream(&self) -> Arc<Stream> {
+        self.get(StreamId::DEFAULT)
+    }
+
+    /// Synchronize every stream (`cudaDeviceSynchronize`).
+    pub fn synchronize_all(&self) {
+        let streams: Vec<Arc<Stream>> = self.streams.lock().unwrap().clone();
+        for s in streams {
+            s.synchronize();
+        }
+    }
+}
+
+impl DrainAll for Streams {
+    fn drain_all(&self) {
+        self.synchronize_all();
+    }
+}
+
+static STREAMS: once_cell::sync::Lazy<Arc<Streams>> =
+    once_cell::sync::Lazy::new(|| Arc::new(Streams::new()));
+
+/// Global stream registry for the (single) simulated device.
+pub fn streams() -> Arc<Streams> {
+    STREAMS.clone()
+}
+
+thread_local! {
+    static CURRENT_STREAM: std::cell::Cell<StreamId> = const { std::cell::Cell::new(StreamId::DEFAULT) };
+    static DEFAULT_DEVICE: std::cell::Cell<Device> = const { std::cell::Cell::new(Device::Cpu) };
+}
+
+/// The device new tensors are created on (like `torch.set_default_device`).
+pub fn default_device() -> Device {
+    DEFAULT_DEVICE.with(|c| c.get())
+}
+
+/// Set this thread's default tensor device.
+pub fn set_default_device(d: Device) {
+    DEFAULT_DEVICE.with(|c| c.set(d));
+}
+
+/// Run `f` with a scoped default device (models built inside are placed
+/// on `d`).
+pub fn with_default_device<R>(d: Device, f: impl FnOnce() -> R) -> R {
+    let prev = DEFAULT_DEVICE.with(|c| c.replace(d));
+    let out = f();
+    DEFAULT_DEVICE.with(|c| c.set(prev));
+    out
+}
+
+/// The stream new Sim-device work is queued on from this thread.
+pub fn current_stream() -> Arc<Stream> {
+    let id = CURRENT_STREAM.with(|c| c.get());
+    streams().get(id)
+}
+
+/// Current stream id without materializing the stream.
+pub fn current_stream_id() -> StreamId {
+    CURRENT_STREAM.with(|c| c.get())
+}
+
+/// Run `f` with a different current stream (RAII-style scoping).
+pub fn with_stream<R>(id: StreamId, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT_STREAM.with(|c| c.replace(id));
+    let out = f();
+    CURRENT_STREAM.with(|c| c.set(prev));
+    out
+}
+
+/// Synchronize the whole simulated device.
+pub fn synchronize() {
+    streams().synchronize_all();
+}
+
+static ASYNC_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally disable async dispatch: launches run inline on the host thread.
+/// This is the "NaiveEager" (Chainer-like) mode used as a Table 1 baseline
+/// and is also handy for deterministic debugging — mirroring
+/// `CUDA_LAUNCH_BLOCKING=1`.
+pub fn set_async_enabled(enabled: bool) {
+    ASYNC_ENABLED.store(enabled, Ordering::SeqCst);
+}
+
+/// Whether async dispatch is enabled (see [`set_async_enabled`]).
+pub fn async_enabled() -> bool {
+    ASYNC_ENABLED.load(Ordering::SeqCst)
+}
+
+/// Dispatch a kernel for a tensor op on `device`: inline for CPU (or when
+/// launch-blocking), queued on the current stream for Sim.
+pub fn dispatch(device: Device, name: &str, job: impl FnOnce() + Send + 'static) {
+    match device {
+        Device::Cpu => {
+            let span = profiler::begin(profiler::Track::Host, name);
+            job();
+            profiler::end(span);
+        }
+        Device::Sim => {
+            if async_enabled() {
+                current_stream().launch(name, job);
+            } else {
+                let stream_id = current_stream_id();
+                let span = profiler::begin(profiler::Track::Stream(stream_id.0), name);
+                job();
+                profiler::end(span);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn launch_returns_before_execution_completes() {
+        let s = Stream::spawn(StreamId(100));
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = flag.clone();
+        s.launch("slow", move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            f2.store(true, Ordering::SeqCst);
+        });
+        // Host got control back before the job finished.
+        assert!(!flag.load(Ordering::SeqCst));
+        s.synchronize();
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn fifo_ordering_within_stream() {
+        let s = Stream::spawn(StreamId(101));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..64 {
+            let o = order.clone();
+            s.launch("step", move || o.lock().unwrap().push(i));
+        }
+        s.synchronize();
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn synchronize_on_idle_stream_is_immediate() {
+        let s = Stream::spawn(StreamId(102));
+        s.synchronize();
+        assert_eq!(s.queue_depth(), 0);
+    }
+
+    #[test]
+    fn event_orders_two_streams() {
+        let a = Stream::spawn(StreamId(103));
+        let b = Stream::spawn(StreamId(104));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let ev = Event::new();
+
+        let l1 = log.clone();
+        a.launch("producer", move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            l1.lock().unwrap().push("produced");
+        });
+        ev.record(&a);
+        ev.wait_stream(&b);
+        let l2 = log.clone();
+        b.launch("consumer", move || l2.lock().unwrap().push("consumed"));
+
+        a.synchronize();
+        b.synchronize();
+        assert_eq!(*log.lock().unwrap(), vec!["produced", "consumed"]);
+    }
+
+    #[test]
+    fn event_query_and_host_wait() {
+        let s = Stream::spawn(StreamId(105));
+        let ev = Event::new();
+        assert!(!ev.query());
+        s.launch("work", || std::thread::sleep(std::time::Duration::from_millis(20)));
+        ev.record(&s);
+        ev.wait_host();
+        assert!(ev.query());
+    }
+
+    #[test]
+    fn streams_registry_reuses_instances() {
+        let st = streams();
+        let a = st.get(StreamId(7));
+        let b = st.get(StreamId(7));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn with_stream_scopes_current() {
+        assert_eq!(current_stream_id(), StreamId::DEFAULT);
+        with_stream(StreamId(3), || {
+            assert_eq!(current_stream_id(), StreamId(3));
+        });
+        assert_eq!(current_stream_id(), StreamId::DEFAULT);
+    }
+
+    #[test]
+    fn dispatch_cpu_runs_inline() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        dispatch(Device::Cpu, "inline", move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn host_runs_ahead_queue_depth_grows() {
+        // The Figure 1 phenomenon: queueing is much faster than executing,
+        // so the FIFO depth grows while the device churns.
+        let s = Stream::spawn(StreamId(106));
+        for _ in 0..32 {
+            s.launch("ms_kernel", || std::thread::sleep(std::time::Duration::from_micros(500)));
+        }
+        assert!(s.queue_depth() > 8, "host should outpace device");
+        s.synchronize();
+        assert_eq!(s.queue_depth(), 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Error types for torsk.
+//!
+//! Shape/dtype misuse panics with a descriptive message (mirroring the
+//! eager, fail-fast semantics of the paper's Python API, §4.3: "the really
+//! complicated cases result in a user error"). Runtime failures that a
+//! caller can reasonably handle (I/O, PJRT, IPC) are `Result`-based.
+
+use thiserror::Error;
+
+/// Errors surfaced through `Result` on fallible torsk APIs.
+#[derive(Error, Debug)]
+pub enum TorskError {
+    /// An artifact (AOT-compiled HLO module) could not be found or loaded.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The XLA/PJRT runtime reported an error.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Shared-memory / multiprocessing failure.
+    #[error("multiprocessing error: {0}")]
+    Multiproc(String),
+
+    /// I/O error (artifact files, corpora, traces).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// A saved-for-backward tensor was mutated in place before the backward
+    /// pass ran (§4.3's tensor versioning system).
+    #[error(
+        "one of the variables needed for gradient computation has been \
+         modified by an inplace operation: expected version {expected}, \
+         found version {found}"
+    )]
+    Version { expected: u64, found: u64 },
+
+    /// Generic configuration / usage error.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<anyhow::Error> for TorskError {
+    fn from(e: anyhow::Error) -> Self {
+        TorskError::Xla(format!("{e:#}"))
+    }
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, TorskError>;
+
+/// Panic with a consistent prefix on API misuse (shape/dtype errors).
+#[macro_export]
+macro_rules! torsk_bail {
+    ($($arg:tt)*) => {
+        panic!("torsk: {}", format!($($arg)*))
+    };
+}
+
+/// Assert a usage invariant, panicking with a torsk-prefixed message.
+#[macro_export]
+macro_rules! torsk_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            panic!("torsk: {}", format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_error_message_mentions_inplace() {
+        let e = TorskError::Version { expected: 3, found: 5 };
+        let s = e.to_string();
+        assert!(s.contains("inplace"));
+        assert!(s.contains("expected version 3"));
+    }
+
+    #[test]
+    fn msg_error_displays_inner() {
+        let e = TorskError::Msg("bad config".into());
+        assert_eq!(e.to_string(), "bad config");
+    }
+
+    #[test]
+    #[should_panic(expected = "torsk: boom 7")]
+    fn bail_macro_panics_with_prefix() {
+        torsk_bail!("boom {}", 7);
+    }
+
+    #[test]
+    fn assert_macro_passes_on_true() {
+        torsk_assert!(1 + 1 == 2, "math broke");
+    }
+
+    #[test]
+    #[should_panic(expected = "torsk: sizes differ")]
+    fn assert_macro_panics_on_false() {
+        torsk_assert!(false, "sizes differ");
+    }
+}

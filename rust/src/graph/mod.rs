@@ -1,0 +1,102 @@
+//! Static-graph execution mode — the stand-in for the graph-based
+//! frameworks of Table 1 (TensorFlow/CNTK/MXNet; DESIGN.md §2).
+//!
+//! A whole train step (forward + backward + SGD update) is AOT-compiled by
+//! the Python path into one XLA executable with signature
+//! `(batch…, params…) -> (loss, params’…)`. [`GraphTrainer`] keeps the
+//! parameters resident as PJRT device buffers and feeds each step's output
+//! state into the next step's input — no per-op host dispatch at all,
+//! which is precisely the property that makes static-graph frameworks
+//! fast and inflexible.
+
+use std::sync::Arc;
+
+use crate::error::{Result, TorskError};
+use crate::runtime::{literal_to_tensor, tensor_to_literal, CompiledGraph, Runtime};
+use crate::tensor::Tensor;
+
+/// Drives an AOT-compiled train-step graph, keeping the parameter state as
+/// XLA literals that feed each step's outputs into the next step's inputs.
+pub struct GraphTrainer {
+    graph: Arc<CompiledGraph>,
+    /// Parameters (and optimizer state, if the graph carries any), in
+    /// graph input order after the batch inputs.
+    state: Vec<xla::Literal>,
+    /// Number of leading batch inputs in the graph signature.
+    n_batch_inputs: usize,
+    pub steps_run: u64,
+}
+
+impl GraphTrainer {
+    /// Load `name` from the artifact manifest and upload `init_state`.
+    /// The graph signature must be `(batch[0..n_batch], state…) ->
+    /// (loss, state’…)`.
+    pub fn new(name: &str, n_batch_inputs: usize, init_state: &[Tensor]) -> Result<GraphTrainer> {
+        let rt = Runtime::global();
+        let graph = rt.load(name)?;
+        let expected_state = graph.meta.inputs.len() - n_batch_inputs;
+        if init_state.len() != expected_state {
+            return Err(TorskError::Msg(format!(
+                "graph {name}: {} state tensors given, signature expects {expected_state}",
+                init_state.len()
+            )));
+        }
+        let state: Vec<xla::Literal> =
+            init_state.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        Ok(GraphTrainer { graph, state, n_batch_inputs, steps_run: 0 })
+    }
+
+    /// Run one training step; returns the scalar loss. Parameter literals
+    /// feed straight back into the next step (no torsk-tensor roundtrip).
+    pub fn step(&mut self, batch: &[Tensor]) -> Result<f32> {
+        crate::torsk_assert!(batch.len() == self.n_batch_inputs, "batch arity mismatch");
+        let batch_lits: Vec<xla::Literal> =
+            batch.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let mut inputs: Vec<&xla::Literal> = batch_lits.iter().collect();
+        inputs.extend(self.state.iter());
+        let mut outputs = self.graph.run_literals(&inputs)?;
+        if outputs.len() != self.state.len() + 1 {
+            return Err(TorskError::Xla(format!(
+                "graph {} returned {} outputs, expected {}",
+                self.graph.meta.name,
+                outputs.len(),
+                self.state.len() + 1
+            )));
+        }
+        let loss_lit = outputs.remove(0);
+        self.state = outputs;
+        self.steps_run += 1;
+        Ok(literal_to_tensor(&loss_lit)?.item())
+    }
+
+    /// Download the current parameter state to host tensors.
+    pub fn state_tensors(&self) -> Result<Vec<Tensor>> {
+        self.state.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Underlying compiled graph metadata.
+    pub fn graph(&self) -> &CompiledGraph {
+        &self.graph
+    }
+}
+
+/// Run a pure inference/eval graph once with host tensors.
+pub fn run_graph(name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let rt = Runtime::global();
+    let graph = rt.load(name)?;
+    graph.run(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_graph_errors_cleanly() {
+        let r = GraphTrainer::new("no_such_graph", 1, &[]);
+        assert!(r.is_err());
+    }
+
+    // End-to-end GraphTrainer tests live in rust/tests/graph_vs_eager.rs —
+    // they need `make artifacts` to have produced the AOT graphs.
+}

@@ -1,0 +1,452 @@
+//! 2-D convolution kernels (the cuDNN stand-in): im2col + GEMM forward,
+//! col2im backward-data, im2col-GEMM backward-weight. Supports stride,
+//! zero padding and groups (groups == in_channels gives the depthwise
+//! convolutions MobileNet needs).
+//!
+//! Layouts: input NCHW, weight [C_out, C_in/groups, KH, KW], output NCHW.
+
+use super::matmul::sgemm;
+use super::parallel_for;
+
+/// Static shape/config descriptor for one conv op.
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dArgs {
+    pub batch: usize,
+    pub c_in: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub groups: usize,
+}
+
+impl Conv2dArgs {
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.padding - self.kh) / self.stride + 1
+    }
+    pub fn w_out(&self) -> usize {
+        (self.w_in + 2 * self.padding - self.kw) / self.stride + 1
+    }
+    /// Channels per group on the input side.
+    pub fn cg_in(&self) -> usize {
+        self.c_in / self.groups
+    }
+    /// Channels per group on the output side.
+    pub fn cg_out(&self) -> usize {
+        self.c_out / self.groups
+    }
+    pub fn out_len(&self) -> usize {
+        self.batch * self.c_out * self.h_out() * self.w_out()
+    }
+    pub fn validate(&self) {
+        crate::torsk_assert!(self.c_in % self.groups == 0, "c_in % groups != 0");
+        crate::torsk_assert!(self.c_out % self.groups == 0, "c_out % groups != 0");
+        crate::torsk_assert!(self.stride >= 1, "stride must be >= 1");
+        crate::torsk_assert!(
+            self.h_in + 2 * self.padding >= self.kh && self.w_in + 2 * self.padding >= self.kw,
+            "kernel larger than padded input"
+        );
+    }
+}
+
+/// Unfold one image's group-slice into columns.
+/// `input` is the [cg_in, H, W] slice; output `col` is
+/// [cg_in*kh*kw, h_out*w_out], row-major.
+fn im2col(args: &Conv2dArgs, input: &[f32], col: &mut [f32]) {
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let (kh, kw, stride, pad) = (args.kh, args.kw, args.stride, args.padding);
+    let (h_in, w_in) = (args.h_in, args.w_in);
+    let cols = h_out * w_out;
+    for c in 0..args.cg_in() {
+        let img = &input[c * h_in * w_in..(c + 1) * h_in * w_in];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = ((c * kh + ky) * kw + kx) * cols;
+                for oy in 0..h_out {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    let dst = &mut col[row + oy * w_out..row + (oy + 1) * w_out];
+                    if iy < 0 || iy >= h_in as isize {
+                        dst.fill(0.0);
+                        continue;
+                    }
+                    let src_row = &img[iy as usize * w_in..(iy as usize + 1) * w_in];
+                    if stride == 1 {
+                        // §Perf: copy the valid contiguous run, zero edges.
+                        let ox_lo = pad.saturating_sub(kx);
+                        let ox_hi = (w_in + pad - kx).min(w_out);
+                        dst[..ox_lo].fill(0.0);
+                        dst[ox_lo..ox_hi]
+                            .copy_from_slice(&src_row[ox_lo + kx - pad..ox_hi + kx - pad]);
+                        dst[ox_hi..].fill(0.0);
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            *d = if ix < 0 || ix >= w_in as isize { 0.0 } else { src_row[ix as usize] };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fold columns back into an image (transpose of im2col); accumulates.
+fn col2im(args: &Conv2dArgs, col: &[f32], input_grad: &mut [f32]) {
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let (kh, kw, stride, pad) = (args.kh, args.kw, args.stride, args.padding);
+    let (h_in, w_in) = (args.h_in, args.w_in);
+    let cols = h_out * w_out;
+    for c in 0..args.cg_in() {
+        let img = &mut input_grad[c * h_in * w_in..(c + 1) * h_in * w_in];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = ((c * kh + ky) * kw + kx) * cols;
+                for oy in 0..h_out {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h_in as isize {
+                        continue;
+                    }
+                    let src = &col[row + oy * w_out..row + (oy + 1) * w_out];
+                    if stride == 1 {
+                        // §Perf: branch-free inner loop over the valid ox
+                        // range (ix = ox + kx - pad in [0, w_in)).
+                        let ox_lo = pad.saturating_sub(kx);
+                        let ox_hi = (w_in + pad - kx).min(w_out);
+                        let base = iy as usize * w_in + kx;
+                        for ox in ox_lo..ox_hi {
+                            img[base + ox - pad] += src[ox];
+                        }
+                    } else {
+                        for (ox, &v) in src.iter().enumerate() {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix >= 0 && ix < w_in as isize {
+                                img[iy as usize * w_in + ix as usize] += v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forward: `out[N, C_out, H_out, W_out] = conv(input, weight) + bias?`.
+pub fn conv2d_forward(args: &Conv2dArgs, input: &[f32], weight: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    args.validate();
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let cols = h_out * w_out;
+    let (cg_in, cg_out) = (args.cg_in(), args.cg_out());
+    let col_rows = cg_in * args.kh * args.kw;
+    let in_img = args.c_in * args.h_in * args.w_in;
+    let out_img = args.c_out * cols;
+
+    let out_addr = out.as_mut_ptr() as usize;
+    let out_len = out.len();
+    parallel_for(args.batch, 1, move |n0, n1| {
+        let out_all = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        let mut col = vec![0.0f32; col_rows * cols];
+        for n in n0..n1 {
+            for g in 0..args.groups {
+                let in_slice = &input[n * in_img + g * cg_in * args.h_in * args.w_in
+                    ..n * in_img + (g + 1) * cg_in * args.h_in * args.w_in];
+                im2col(args, in_slice, &mut col);
+                // weight group: [cg_out, col_rows] @ col [col_rows, cols]
+                let w_slice = &weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
+                let o_slice = &mut out_all[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
+                // Serial gemm per (image, group); parallelism is over batch.
+                gemm_serial(cg_out, cols, col_rows, w_slice, &col, o_slice);
+                if let Some(b) = bias {
+                    for oc in 0..cg_out {
+                        let bv = b[g * cg_out + oc];
+                        for v in o_slice[oc * cols..(oc + 1) * cols].iter_mut() {
+                            *v += bv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Backward w.r.t. input: scatter `weightᵀ @ grad_out` columns via col2im.
+pub fn conv2d_backward_input(args: &Conv2dArgs, grad_out: &[f32], weight: &[f32], grad_in: &mut [f32]) {
+    args.validate();
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let cols = h_out * w_out;
+    let (cg_in, cg_out) = (args.cg_in(), args.cg_out());
+    let col_rows = cg_in * args.kh * args.kw;
+    let in_img = args.c_in * args.h_in * args.w_in;
+    let out_img = args.c_out * cols;
+
+    grad_in.fill(0.0);
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    // Hoist the weight transpose out of the batch loop (§Perf): it is
+    // constant across images.
+    let mut wt_all = vec![0.0f32; args.groups * col_rows * cg_out];
+    for g in 0..args.groups {
+        let w_slice = &weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
+        let wt = &mut wt_all[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
+        for i in 0..cg_out {
+            for j in 0..col_rows {
+                wt[j * cg_out + i] = w_slice[i * col_rows + j];
+            }
+        }
+    }
+    let wt_all = &wt_all;
+    parallel_for(args.batch, 1, move |n0, n1| {
+        let gi_all = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        let mut col = vec![0.0f32; col_rows * cols];
+        for n in n0..n1 {
+            for g in 0..args.groups {
+                let wt = &wt_all[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
+                let go = &grad_out[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
+                gemm_serial(col_rows, cols, cg_out, wt, go, &mut col);
+                let gi = &mut gi_all[n * in_img + g * cg_in * args.h_in * args.w_in
+                    ..n * in_img + (g + 1) * cg_in * args.h_in * args.w_in];
+                col2im(args, &col, gi);
+            }
+        }
+    });
+}
+
+/// Backward w.r.t. weight (+ bias): accumulate `grad_out @ colᵀ` per image.
+pub fn conv2d_backward_weight(
+    args: &Conv2dArgs,
+    input: &[f32],
+    grad_out: &[f32],
+    grad_weight: &mut [f32],
+    mut grad_bias: Option<&mut [f32]>,
+) {
+    args.validate();
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let cols = h_out * w_out;
+    let (cg_in, cg_out) = (args.cg_in(), args.cg_out());
+    let col_rows = cg_in * args.kh * args.kw;
+    let in_img = args.c_in * args.h_in * args.w_in;
+    let out_img = args.c_out * cols;
+
+    grad_weight.fill(0.0);
+    if let Some(gb) = grad_bias.as_deref_mut() {
+        gb.fill(0.0);
+    }
+    // §Perf: accumulate the *transposed* weight gradient gwT [col_rows,
+    // cg_out] = Σ_n col @ goT — transposing go (cg_out x cols, small) per
+    // image instead of col (col_rows x cols, ~kh*kw/cg_out times larger),
+    // and un-transposing gwT once at the end.
+    let mut col = vec![0.0f32; col_rows * cols];
+    let mut got = vec![0.0f32; cols * cg_out];
+    let mut gwt = vec![0.0f32; args.groups * col_rows * cg_out];
+    for n in 0..args.batch {
+        for g in 0..args.groups {
+            let in_slice = &input[n * in_img + g * cg_in * args.h_in * args.w_in
+                ..n * in_img + (g + 1) * cg_in * args.h_in * args.w_in];
+            im2col(args, in_slice, &mut col);
+            let go = &grad_out[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
+            // goT: [cols, cg_out]
+            for i in 0..cg_out {
+                for (j, &v) in go[i * cols..(i + 1) * cols].iter().enumerate() {
+                    got[j * cg_out + i] = v;
+                }
+            }
+            let gw_t = &mut gwt[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
+            // gwT += col [col_rows, cols] @ goT [cols, cg_out]
+            sgemm(col_rows, cg_out, cols, 1.0, &col, &got, 1.0, gw_t);
+            if let Some(gb) = grad_bias.as_deref_mut() {
+                for oc in 0..cg_out {
+                    let s: f32 = go[oc * cols..(oc + 1) * cols].iter().sum();
+                    gb[g * cg_out + oc] += s;
+                }
+            }
+        }
+    }
+    for g in 0..args.groups {
+        let gw = &mut grad_weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
+        let gw_t = &gwt[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
+        for i in 0..cg_out {
+            for j in 0..col_rows {
+                gw[i * col_rows + j] = gw_t[j * cg_out + i];
+            }
+        }
+    }
+}
+
+/// Small serial gemm (C = A@B) used inside batch-parallel regions;
+/// shares the 8-row microkernel with the main SGEMM (§Perf).
+fn gemm_serial(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    c.fill(0.0);
+    super::matmul::gemm_panel(0, m, n, k, 1.0, a, b, c);
+}
+
+/// Direct (quadruple-loop) reference convolution for tests.
+pub fn conv2d_ref(args: &Conv2dArgs, input: &[f32], weight: &[f32], bias: Option<&[f32]>) -> Vec<f32> {
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let (cg_in, cg_out) = (args.cg_in(), args.cg_out());
+    let mut out = vec![0.0f32; args.out_len()];
+    for n in 0..args.batch {
+        for g in 0..args.groups {
+            for oc in 0..cg_out {
+                let ocg = g * cg_out + oc;
+                for oy in 0..h_out {
+                    for ox in 0..w_out {
+                        let mut acc = bias.map(|b| b[ocg]).unwrap_or(0.0) as f64;
+                        for ic in 0..cg_in {
+                            let icg = g * cg_in + ic;
+                            for ky in 0..args.kh {
+                                for kx in 0..args.kw {
+                                    let iy = (oy * args.stride + ky) as isize - args.padding as isize;
+                                    let ix = (ox * args.stride + kx) as isize - args.padding as isize;
+                                    if iy < 0 || ix < 0 || iy >= args.h_in as isize || ix >= args.w_in as isize {
+                                        continue;
+                                    }
+                                    let iv = input[((n * args.c_in + icg) * args.h_in + iy as usize) * args.w_in + ix as usize];
+                                    let wv = weight[((ocg * cg_in + ic) * args.kh + ky) * args.kw + kx];
+                                    acc += (iv * wv) as f64;
+                                }
+                            }
+                        }
+                        out[((n * args.c_out + ocg) * h_out + oy) * w_out + ox] = acc as f32;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.uniform_range(-1.0, 1.0)).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - y).abs() <= tol + tol * y.abs(), "{what} idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn check_forward(args: Conv2dArgs, seed: u64) {
+        let mut r = Rng::new(seed);
+        let input = rand_vec(&mut r, args.batch * args.c_in * args.h_in * args.w_in);
+        let weight = rand_vec(&mut r, args.c_out * args.cg_in() * args.kh * args.kw);
+        let bias = rand_vec(&mut r, args.c_out);
+        let mut out = vec![0.0f32; args.out_len()];
+        conv2d_forward(&args, &input, &weight, Some(&bias), &mut out);
+        let expect = conv2d_ref(&args, &input, &weight, Some(&bias));
+        assert_close(&out, &expect, 1e-4, "forward");
+    }
+
+    #[test]
+    fn forward_basic_3x3() {
+        check_forward(
+            Conv2dArgs { batch: 2, c_in: 3, h_in: 8, w_in: 8, c_out: 4, kh: 3, kw: 3, stride: 1, padding: 1, groups: 1 },
+            1,
+        );
+    }
+
+    #[test]
+    fn forward_stride_2_no_pad() {
+        check_forward(
+            Conv2dArgs { batch: 1, c_in: 2, h_in: 9, w_in: 7, c_out: 3, kh: 3, kw: 3, stride: 2, padding: 0, groups: 1 },
+            2,
+        );
+    }
+
+    #[test]
+    fn forward_1x1_conv() {
+        check_forward(
+            Conv2dArgs { batch: 2, c_in: 8, h_in: 5, w_in: 5, c_out: 16, kh: 1, kw: 1, stride: 1, padding: 0, groups: 1 },
+            3,
+        );
+    }
+
+    #[test]
+    fn forward_depthwise_groups() {
+        check_forward(
+            Conv2dArgs { batch: 2, c_in: 6, h_in: 8, w_in: 8, c_out: 6, kh: 3, kw: 3, stride: 1, padding: 1, groups: 6 },
+            4,
+        );
+    }
+
+    #[test]
+    fn forward_grouped_conv() {
+        check_forward(
+            Conv2dArgs { batch: 1, c_in: 4, h_in: 6, w_in: 6, c_out: 8, kh: 3, kw: 3, stride: 1, padding: 1, groups: 2 },
+            5,
+        );
+    }
+
+    #[test]
+    fn forward_large_kernel_big_pad() {
+        check_forward(
+            Conv2dArgs { batch: 1, c_in: 1, h_in: 10, w_in: 10, c_out: 2, kh: 5, kw: 5, stride: 1, padding: 2, groups: 1 },
+            6,
+        );
+    }
+
+    /// Finite-difference check of backward-input and backward-weight.
+    #[test]
+    fn backward_matches_finite_difference() {
+        let args = Conv2dArgs { batch: 1, c_in: 2, h_in: 5, w_in: 5, c_out: 3, kh: 3, kw: 3, stride: 2, padding: 1, groups: 1 };
+        let mut r = Rng::new(7);
+        let input = rand_vec(&mut r, args.batch * args.c_in * args.h_in * args.w_in);
+        let weight = rand_vec(&mut r, args.c_out * args.cg_in() * args.kh * args.kw);
+        // Loss = sum(conv(x, w) * G) with fixed random G.
+        let gvec = rand_vec(&mut r, args.out_len());
+        let loss = |inp: &[f32], w: &[f32]| -> f64 {
+            let out = conv2d_ref(&args, inp, w, None);
+            out.iter().zip(gvec.iter()).map(|(&o, &g)| (o * g) as f64).sum()
+        };
+
+        let mut gi = vec![0.0f32; input.len()];
+        conv2d_backward_input(&args, &gvec, &weight, &mut gi);
+        let mut gw = vec![0.0f32; weight.len()];
+        conv2d_backward_weight(&args, &input, &gvec, &mut gw, None);
+
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 13, input.len() - 1] {
+            let mut ip = input.clone();
+            ip[idx] += eps;
+            let mut im = input.clone();
+            im[idx] -= eps;
+            let fd = ((loss(&ip, &weight) - loss(&im, &weight)) / (2.0 * eps as f64)) as f32;
+            assert!((gi[idx] - fd).abs() < 2e-2, "input grad idx {idx}: {} vs fd {}", gi[idx], fd);
+        }
+        for idx in [0usize, 5, weight.len() - 1] {
+            let mut wp = weight.clone();
+            wp[idx] += eps;
+            let mut wm = weight.clone();
+            wm[idx] -= eps;
+            let fd = ((loss(&input, &wp) - loss(&input, &wm)) / (2.0 * eps as f64)) as f32;
+            assert!((gw[idx] - fd).abs() < 2e-2, "weight grad idx {idx}: {} vs fd {}", gw[idx], fd);
+        }
+    }
+
+    #[test]
+    fn backward_bias_sums_grad() {
+        let args = Conv2dArgs { batch: 2, c_in: 1, h_in: 4, w_in: 4, c_out: 2, kh: 3, kw: 3, stride: 1, padding: 1, groups: 1 };
+        let input = vec![0.5f32; 2 * 16];
+        let grad_out = vec![1.0f32; args.out_len()];
+        let mut gw = vec![0.0f32; 2 * 9];
+        let mut gb = vec![0.0f32; 2];
+        conv2d_backward_weight(&args, &input, &grad_out, &mut gw, Some(&mut gb));
+        // Each output channel has batch*h_out*w_out = 2*16 grad ones.
+        assert_eq!(gb, vec![32.0, 32.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "groups")]
+    fn invalid_groups_panics() {
+        let args = Conv2dArgs { batch: 1, c_in: 3, h_in: 4, w_in: 4, c_out: 4, kh: 1, kw: 1, stride: 1, padding: 0, groups: 2 };
+        let mut out = vec![0.0; args.out_len()];
+        conv2d_forward(&args, &[0.0; 48], &[0.0; 8], None, &mut out);
+    }
+}

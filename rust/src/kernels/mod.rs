@@ -1,0 +1,217 @@
+//! Native CPU kernels — torsk's stand-in for the vendor libraries
+//! (cuDNN/cuBLAS) that all frameworks in the paper's Table 1 share (§6.3:
+//! "these tools offload most of the computation to the same version of the
+//! cuDNN and cuBLAS libraries").
+//!
+//! Kernels are plain functions over raw `f32` slices. They run either
+//! inline on the host (CPU tensors) or inside a stream worker (simulated
+//! device). A small persistent thread pool parallelizes the heavy ones;
+//! the "basic parallel primitives" of the paper's C++ core (§5.1).
+
+pub mod conv;
+pub mod matmul;
+pub mod norm;
+pub mod pool;
+pub mod softmax;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// A persistent worker pool for data-parallel kernel loops.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+impl ThreadPool {
+    fn new(workers: usize) -> ThreadPool {
+        let shared = Arc::new(PoolShared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        for i in 0..workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("torsk-kernel-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.pop_front() {
+                                break j;
+                            }
+                            q = sh.cv.wait(q).unwrap();
+                        }
+                    };
+                    job();
+                })
+                .expect("spawn kernel worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    fn submit(&self, job: Job) {
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.cv.notify_one();
+    }
+}
+
+fn pool() -> &'static ThreadPool {
+    static POOL: once_cell::sync::Lazy<ThreadPool> = once_cell::sync::Lazy::new(|| {
+        let n = std::env::var("TORSK_KERNEL_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+            .max(1);
+        ThreadPool::new(n)
+    });
+    &POOL
+}
+
+/// Number of kernel worker threads.
+pub fn num_threads() -> usize {
+    pool().workers
+}
+
+/// Work below this many "items" runs inline — parallelism has overhead.
+pub const PAR_GRAIN: usize = 16 * 1024;
+
+/// Split `0..n` into chunks and run `f(start, end)` on the pool, blocking
+/// until every chunk completes. `f` must be safe to run concurrently on
+/// disjoint ranges (the standard parallel-for contract).
+pub fn parallel_for<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Send + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = pool().workers;
+    if n <= grain || workers <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunks = workers.min(n.div_ceil(grain)).max(1);
+    let chunk = n.div_ceil(chunks);
+
+    // Run chunk 0 on the caller; the rest on the pool.
+    let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let nspawned = chunks - 1;
+    // SAFETY of lifetime: we block until all jobs signal completion, so `f`
+    // outlives every job. Erase the lifetime with a raw pointer.
+    let f_ptr = &f as *const F as usize;
+    for c in 1..chunks {
+        let start = c * chunk;
+        let end = ((c + 1) * chunk).min(n);
+        if start >= end {
+            let (lock, cv) = &*done;
+            *lock.lock().unwrap() += 1;
+            cv.notify_one();
+            continue;
+        }
+        let done2 = done.clone();
+        pool().submit(Box::new(move || {
+            // SAFETY: see above — caller blocks until completion.
+            let f = unsafe { &*(f_ptr as *const F) };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(start, end)));
+            let (lock, cv) = &*done2;
+            *lock.lock().unwrap() += 1;
+            cv.notify_one();
+            if let Err(e) = result {
+                std::panic::resume_unwind(e);
+            }
+        }));
+    }
+    f(0, chunk.min(n));
+    // Wait for the spawned chunks, *helping* with queued work while we
+    // block — this keeps nested parallel_for calls deadlock-free (a worker
+    // waiting on inner chunks drains the queue instead of sleeping).
+    let (lock, cv) = &*done;
+    loop {
+        {
+            let count = lock.lock().unwrap();
+            if *count >= nspawned {
+                break;
+            }
+        }
+        let stolen = pool().shared.queue.lock().unwrap().pop_front();
+        match stolen {
+            Some(job) => job(),
+            None => {
+                let count = lock.lock().unwrap();
+                if *count >= nspawned {
+                    break;
+                }
+                let (c, _timeout) = cv
+                    .wait_timeout(count, std::time::Duration::from_micros(100))
+                    .unwrap();
+                if *c >= nspawned {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 100_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 1000, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_small_runs_inline() {
+        let count = AtomicUsize::new(0);
+        parallel_for(10, 1000, |a, b| {
+            count.fetch_add(b - a, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_for_zero_is_noop() {
+        parallel_for(0, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<f32> = (0..250_000).map(|i| (i % 7) as f32).collect();
+        let total = Mutex::new(0f64);
+        parallel_for(data.len(), 10_000, |a, b| {
+            let part: f64 = data[a..b].iter().map(|&x| x as f64).sum();
+            *total.lock().unwrap() += part;
+        });
+        let serial: f64 = data.iter().map(|&x| x as f64).sum();
+        assert_eq!(*total.lock().unwrap(), serial);
+    }
+
+    #[test]
+    fn nested_parallel_for_does_not_deadlock() {
+        // Outer inline chunk calls parallel_for again; pool must not
+        // deadlock because the caller always participates.
+        parallel_for(4, 1, |a, b| {
+            for _ in a..b {
+                parallel_for(50_000, 10_000, |x, y| {
+                    std::hint::black_box(y - x);
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Fused batch-norm kernels (§Perf): the compositional BN built from
+//! broadcast ops costs ~16 full-tensor passes forward+backward; these
+//! kernels do it in 5 (stats, normalize; bwd: two reductions, one dx pass).
+
+/// Per-channel mean/var over N,H,W of an NCHW tensor.
+pub fn bn_stats(n: usize, c: usize, hw: usize, x: &[f32], mean: &mut [f32], var: &mut [f32]) {
+    let m = (n * hw) as f32;
+    mean.fill(0.0);
+    var.fill(0.0);
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * hw;
+            let mut acc = 0f32;
+            for &v in &x[base..base + hw] {
+                acc += v;
+            }
+            mean[ch] += acc;
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= m;
+    }
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * hw;
+            let mu = mean[ch];
+            let mut acc = 0f32;
+            for &v in &x[base..base + hw] {
+                let d = v - mu;
+                acc += d * d;
+            }
+            var[ch] += acc;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= m;
+    }
+}
+
+/// y = (x - mean) * inv_std * gamma + beta, one pass.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_normalize(
+    n: usize,
+    c: usize,
+    hw: usize,
+    x: &[f32],
+    mean: &[f32],
+    inv_std: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    y: &mut [f32],
+) {
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * hw;
+            let scale = inv_std[ch] * gamma[ch];
+            let shift = beta[ch] - mean[ch] * scale;
+            for (o, &v) in y[base..base + hw].iter_mut().zip(&x[base..base + hw]) {
+                *o = v * scale + shift;
+            }
+        }
+    }
+}
+
+/// Backward: given g = dL/dy, produce dx, dgamma, dbeta.
+/// dx = gamma*inv_std*(g - mean(g) - xhat*mean(g*xhat)) per channel.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward(
+    n: usize,
+    c: usize,
+    hw: usize,
+    x: &[f32],
+    mean: &[f32],
+    inv_std: &[f32],
+    gamma: &[f32],
+    g: &[f32],
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let m = (n * hw) as f32;
+    dgamma.fill(0.0);
+    dbeta.fill(0.0);
+    // Pass 1: per-channel sums of g and g*xhat.
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * hw;
+            let (mu, istd) = (mean[ch], inv_std[ch]);
+            let (mut sg, mut sgx) = (0f32, 0f32);
+            for (&gv, &xv) in g[base..base + hw].iter().zip(&x[base..base + hw]) {
+                sg += gv;
+                sgx += gv * (xv - mu) * istd;
+            }
+            dbeta[ch] += sg;
+            dgamma[ch] += sgx;
+        }
+    }
+    // Pass 2: dx.
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * hw;
+            let (mu, istd, gam) = (mean[ch], inv_std[ch], gamma[ch]);
+            let k1 = dbeta[ch] / m;
+            let k2 = dgamma[ch] / m;
+            let scale = gam * istd;
+            for ((o, &gv), &xv) in
+                dx[base..base + hw].iter_mut().zip(&g[base..base + hw]).zip(&x[base..base + hw])
+            {
+                let xhat = (xv - mu) * istd;
+                *o = scale * (gv - k1 - xhat * k2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn setup(n: usize, c: usize, hw: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        let x: Vec<f32> = (0..n * c * hw).map(|_| r.uniform_range(-2.0, 2.0)).collect();
+        let gamma: Vec<f32> = (0..c).map(|_| r.uniform_range(0.5, 1.5)).collect();
+        let beta: Vec<f32> = (0..c).map(|_| r.uniform_range(-0.5, 0.5)).collect();
+        (x, gamma, beta)
+    }
+
+    #[test]
+    fn stats_match_naive() {
+        let (x, _, _) = setup(3, 2, 8, 1);
+        let mut mean = vec![0.0; 2];
+        let mut var = vec![0.0; 2];
+        bn_stats(3, 2, 8, &x, &mut mean, &mut var);
+        for ch in 0..2 {
+            let vals: Vec<f32> = (0..3)
+                .flat_map(|img| x[(img * 2 + ch) * 8..(img * 2 + ch + 1) * 8].to_vec())
+                .collect();
+            let mu: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let vr: f32 = vals.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / vals.len() as f32;
+            assert!((mean[ch] - mu).abs() < 1e-5);
+            assert!((var[ch] - vr).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalize_produces_unit_stats() {
+        let (x, gamma, beta) = setup(4, 3, 16, 2);
+        let (n, c, hw) = (4usize, 3usize, 16usize);
+        let mut mean = vec![0.0; c];
+        let mut var = vec![0.0; c];
+        bn_stats(n, c, hw, &x, &mut mean, &mut var);
+        let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v + 1e-5).sqrt()).collect();
+        let mut y = vec![0.0; x.len()];
+        bn_normalize(n, c, hw, &x, &mean, &inv_std, &gamma, &beta, &mut y);
+        // Undo affine and check unit stats per channel.
+        for ch in 0..c {
+            let vals: Vec<f32> = (0..n)
+                .flat_map(|img| {
+                    y[(img * c + ch) * hw..(img * c + ch + 1) * hw]
+                        .iter()
+                        .map(|v| (v - beta[ch]) / gamma[ch])
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let mu: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let vr: f32 = vals.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / vals.len() as f32;
+            assert!(mu.abs() < 1e-4, "mean {mu}");
+            assert!((vr - 1.0).abs() < 1e-2, "var {vr}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let (x, gamma, beta) = setup(2, 2, 6, 3);
+        let (n, c, hw) = (2usize, 2usize, 6usize);
+        let mut r = Rng::new(9);
+        let gout: Vec<f32> = (0..x.len()).map(|_| r.uniform_range(-1.0, 1.0)).collect();
+        let eps_bn = 1e-5f32;
+
+        let forward = |x: &[f32], gamma: &[f32], beta: &[f32]| -> Vec<f32> {
+            let mut mean = vec![0.0; c];
+            let mut var = vec![0.0; c];
+            bn_stats(n, c, hw, x, &mut mean, &mut var);
+            let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v + eps_bn).sqrt()).collect();
+            let mut y = vec![0.0; x.len()];
+            bn_normalize(n, c, hw, x, &mean, &inv_std, gamma, beta, &mut y);
+            y
+        };
+        let loss = |x: &[f32], gamma: &[f32], beta: &[f32]| -> f64 {
+            forward(x, gamma, beta).iter().zip(&gout).map(|(&y, &g)| (y * g) as f64).sum()
+        };
+
+        let mut mean = vec![0.0; c];
+        let mut var = vec![0.0; c];
+        bn_stats(n, c, hw, &x, &mut mean, &mut var);
+        let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v + eps_bn).sqrt()).collect();
+        let mut dx = vec![0.0; x.len()];
+        let mut dgamma = vec![0.0; c];
+        let mut dbeta = vec![0.0; c];
+        bn_backward(n, c, hw, &x, &mean, &inv_std, &gamma, &gout, &mut dx, &mut dgamma, &mut dbeta);
+
+        let h = 1e-3f32;
+        for idx in [0usize, 5, 11, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let fd = ((loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * h as f64)) as f32;
+            assert!((dx[idx] - fd).abs() < 2e-2, "dx[{idx}] {} vs {}", dx[idx], fd);
+        }
+        for ch in 0..c {
+            let mut gp = gamma.clone();
+            gp[ch] += h;
+            let mut gm = gamma.clone();
+            gm[ch] -= h;
+            let fd = ((loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * h as f64)) as f32;
+            assert!((dgamma[ch] - fd).abs() < 2e-2, "dgamma[{ch}] {} vs {}", dgamma[ch], fd);
+            let mut bp = beta.clone();
+            bp[ch] += h;
+            let mut bm = beta.clone();
+            bm[ch] -= h;
+            let fd = ((loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * h as f64)) as f32;
+            assert!((dbeta[ch] - fd).abs() < 2e-2, "dbeta[{ch}] {} vs {}", dbeta[ch], fd);
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Pooling kernels: max-pool (with argmax indices for backward) and
+//! average-pool over NCHW.
+
+use super::parallel_for;
+
+/// Shape/config for a 2-D pooling op.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool2dArgs {
+    pub batch: usize,
+    pub channels: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Pool2dArgs {
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+    pub fn w_out(&self) -> usize {
+        (self.w_in + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+    pub fn out_len(&self) -> usize {
+        self.batch * self.channels * self.h_out() * self.w_out()
+    }
+}
+
+/// Max-pool forward; writes pooled values and the flat input index of each
+/// max (per channel image) for the backward scatter.
+pub fn maxpool2d_forward(args: &Pool2dArgs, input: &[f32], out: &mut [f32], indices: &mut [i64]) {
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let planes = args.batch * args.channels;
+    let in_plane = args.h_in * args.w_in;
+    let out_plane = h_out * w_out;
+    let out_addr = out.as_mut_ptr() as usize;
+    let idx_addr = indices.as_mut_ptr() as usize;
+    let (out_len, idx_len) = (out.len(), indices.len());
+    parallel_for(planes, 4, move |p0, p1| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        let indices = unsafe { std::slice::from_raw_parts_mut(idx_addr as *mut i64, idx_len) };
+        for p in p0..p1 {
+            let img = &input[p * in_plane..(p + 1) * in_plane];
+            for oy in 0..h_out {
+                for ox in 0..w_out {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0i64;
+                    for ky in 0..args.kernel {
+                        let iy = (oy * args.stride + ky) as isize - args.padding as isize;
+                        if iy < 0 || iy >= args.h_in as isize {
+                            continue;
+                        }
+                        for kx in 0..args.kernel {
+                            let ix = (ox * args.stride + kx) as isize - args.padding as isize;
+                            if ix < 0 || ix >= args.w_in as isize {
+                                continue;
+                            }
+                            let idx = iy as usize * args.w_in + ix as usize;
+                            let v = img[idx];
+                            if v > best {
+                                best = v;
+                                best_idx = idx as i64;
+                            }
+                        }
+                    }
+                    out[p * out_plane + oy * w_out + ox] = best;
+                    indices[p * out_plane + oy * w_out + ox] = best_idx;
+                }
+            }
+        }
+    });
+}
+
+/// Max-pool backward: scatter grad to the recorded argmax positions.
+pub fn maxpool2d_backward(args: &Pool2dArgs, grad_out: &[f32], indices: &[i64], grad_in: &mut [f32]) {
+    grad_in.fill(0.0);
+    let planes = args.batch * args.channels;
+    let in_plane = args.h_in * args.w_in;
+    let out_plane = args.h_out() * args.w_out();
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    parallel_for(planes, 4, move |p0, p1| {
+        let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        for p in p0..p1 {
+            let gi = &mut grad_in[p * in_plane..(p + 1) * in_plane];
+            let go = &grad_out[p * out_plane..(p + 1) * out_plane];
+            let ids = &indices[p * out_plane..(p + 1) * out_plane];
+            for (g, &i) in go.iter().zip(ids.iter()) {
+                gi[i as usize] += g;
+            }
+        }
+    });
+}
+
+/// Average-pool forward (count includes padding like PyTorch's default
+/// `count_include_pad=True` for stride-covering windows; we use the
+/// simpler fixed k*k divisor, which matches when padding = 0).
+pub fn avgpool2d_forward(args: &Pool2dArgs, input: &[f32], out: &mut [f32]) {
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let planes = args.batch * args.channels;
+    let in_plane = args.h_in * args.w_in;
+    let out_plane = h_out * w_out;
+    let denom = (args.kernel * args.kernel) as f32;
+    let out_addr = out.as_mut_ptr() as usize;
+    let out_len = out.len();
+    parallel_for(planes, 4, move |p0, p1| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        for p in p0..p1 {
+            let img = &input[p * in_plane..(p + 1) * in_plane];
+            for oy in 0..h_out {
+                for ox in 0..w_out {
+                    let mut acc = 0f32;
+                    for ky in 0..args.kernel {
+                        let iy = (oy * args.stride + ky) as isize - args.padding as isize;
+                        if iy < 0 || iy >= args.h_in as isize {
+                            continue;
+                        }
+                        for kx in 0..args.kernel {
+                            let ix = (ox * args.stride + kx) as isize - args.padding as isize;
+                            if ix < 0 || ix >= args.w_in as isize {
+                                continue;
+                            }
+                            acc += img[iy as usize * args.w_in + ix as usize];
+                        }
+                    }
+                    out[p * out_plane + oy * w_out + ox] = acc / denom;
+                }
+            }
+        }
+    });
+}
+
+/// Average-pool backward: spread grad uniformly over each window.
+pub fn avgpool2d_backward(args: &Pool2dArgs, grad_out: &[f32], grad_in: &mut [f32]) {
+    grad_in.fill(0.0);
+    let (h_out, w_out) = (args.h_out(), args.w_out());
+    let planes = args.batch * args.channels;
+    let in_plane = args.h_in * args.w_in;
+    let out_plane = h_out * w_out;
+    let denom = (args.kernel * args.kernel) as f32;
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    parallel_for(planes, 4, move |p0, p1| {
+        let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        for p in p0..p1 {
+            let gi = &mut grad_in[p * in_plane..(p + 1) * in_plane];
+            let go = &grad_out[p * out_plane..(p + 1) * out_plane];
+            for oy in 0..h_out {
+                for ox in 0..w_out {
+                    let g = go[oy * w_out + ox] / denom;
+                    for ky in 0..args.kernel {
+                        let iy = (oy * args.stride + ky) as isize - args.padding as isize;
+                        if iy < 0 || iy >= args.h_in as isize {
+                            continue;
+                        }
+                        for kx in 0..args.kernel {
+                            let ix = (ox * args.stride + kx) as isize - args.padding as isize;
+                            if ix < 0 || ix >= args.w_in as isize {
+                                continue;
+                            }
+                            gi[iy as usize * args.w_in + ix as usize] += g;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_2x2() -> Pool2dArgs {
+        Pool2dArgs { batch: 1, channels: 1, h_in: 4, w_in: 4, kernel: 2, stride: 2, padding: 0 }
+    }
+
+    #[test]
+    fn maxpool_picks_window_max() {
+        let args = args_2x2();
+        #[rustfmt::skip]
+        let input = vec![
+            1.0f32, 2.0, 5.0, 6.0,
+            3.0, 4.0, 7.0, 8.0,
+            -1.0, -2.0, 0.0, 0.5,
+            -3.0, -4.0, 0.25, 0.75,
+        ];
+        let mut out = vec![0.0; 4];
+        let mut idx = vec![0i64; 4];
+        maxpool2d_forward(&args, &input, &mut out, &mut idx);
+        assert_eq!(out, vec![4.0, 8.0, -1.0, 0.75]);
+        assert_eq!(idx, vec![5, 7, 8, 15]);
+    }
+
+    #[test]
+    fn maxpool_backward_routes_to_argmax() {
+        let args = args_2x2();
+        let idx = vec![5i64, 7, 8, 15];
+        let go = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut gi = vec![0.0f32; 16];
+        maxpool2d_backward(&args, &go, &idx, &mut gi);
+        assert_eq!(gi[5], 1.0);
+        assert_eq!(gi[7], 2.0);
+        assert_eq!(gi[8], 3.0);
+        assert_eq!(gi[15], 4.0);
+        assert_eq!(gi.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn maxpool_overlapping_windows_accumulate_grad() {
+        let args = Pool2dArgs { batch: 1, channels: 1, h_in: 3, w_in: 3, kernel: 2, stride: 1, padding: 0 };
+        // Max at center (idx 4) for all 4 windows.
+        let input = vec![0.0f32, 0.0, 0.0, 0.0, 9.0, 0.0, 0.0, 0.0, 0.0];
+        let mut out = vec![0.0; 4];
+        let mut idx = vec![0i64; 4];
+        maxpool2d_forward(&args, &input, &mut out, &mut idx);
+        assert_eq!(out, vec![9.0; 4]);
+        let mut gi = vec![0.0f32; 9];
+        maxpool2d_backward(&args, &[1.0; 4], &idx, &mut gi);
+        assert_eq!(gi[4], 4.0);
+    }
+
+    #[test]
+    fn avgpool_averages() {
+        let args = args_2x2();
+        let input: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 4];
+        avgpool2d_forward(&args, &input, &mut out);
+        assert_eq!(out, vec![2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn avgpool_backward_uniform() {
+        let args = args_2x2();
+        let mut gi = vec![0.0f32; 16];
+        avgpool2d_backward(&args, &[4.0, 8.0, 12.0, 16.0], &mut gi);
+        assert_eq!(gi[0], 1.0); // 4/4
+        assert_eq!(gi[2], 2.0); // 8/4
+        assert_eq!(gi[10], 4.0); // 16/4
+        assert_eq!(gi.iter().sum::<f32>(), 40.0);
+    }
+
+    #[test]
+    fn global_avgpool_as_full_kernel() {
+        let args = Pool2dArgs { batch: 1, channels: 2, h_in: 4, w_in: 4, kernel: 4, stride: 4, padding: 0 };
+        let mut input = vec![1.0f32; 32];
+        for v in input[16..].iter_mut() {
+            *v = 3.0;
+        }
+        let mut out = vec![0.0; 2];
+        avgpool2d_forward(&args, &input, &mut out);
+        assert_eq!(out, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn maxpool_with_padding_ignores_border() {
+        let args = Pool2dArgs { batch: 1, channels: 1, h_in: 2, w_in: 2, kernel: 3, stride: 1, padding: 1 };
+        let input = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0; args.out_len()];
+        let mut idx = vec![0i64; args.out_len()];
+        maxpool2d_forward(&args, &input, &mut out, &mut idx);
+        // Every window sees element 4.0 except... all windows contain it here.
+        assert_eq!(out, vec![4.0; 4]);
+    }
+}

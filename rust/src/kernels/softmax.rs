@@ -1,0 +1,261 @@
+//! Row-wise softmax / log-softmax and fused cross-entropy kernels.
+//! Numerically stable (max-subtraction), parallel over rows.
+
+use super::parallel_for;
+
+/// Softmax over the last dimension: `input`/`out` are [rows, cols].
+pub fn softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
+    let out_addr = out.as_mut_ptr() as usize;
+    let out_len = out.len();
+    parallel_for(rows, 64, move |r0, r1| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        for r in r0..r1 {
+            let x = &input[r * cols..(r + 1) * cols];
+            let o = &mut out[r * cols..(r + 1) * cols];
+            let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0f32;
+            for (oi, &xi) in o.iter_mut().zip(x.iter()) {
+                let e = (xi - m).exp();
+                *oi = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for oi in o.iter_mut() {
+                *oi *= inv;
+            }
+        }
+    });
+}
+
+/// Backward of softmax: `gi = y * (go - sum(go * y))` per row, where y is
+/// the forward output.
+pub fn softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f32], grad_in: &mut [f32]) {
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    parallel_for(rows, 64, move |r0, r1| {
+        let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        for r in r0..r1 {
+            let yr = &y[r * cols..(r + 1) * cols];
+            let gr = &grad_out[r * cols..(r + 1) * cols];
+            let gi = &mut grad_in[r * cols..(r + 1) * cols];
+            let dot: f32 = yr.iter().zip(gr.iter()).map(|(&a, &b)| a * b).sum();
+            for ((o, &yv), &gv) in gi.iter_mut().zip(yr.iter()).zip(gr.iter()) {
+                *o = yv * (gv - dot);
+            }
+        }
+    });
+}
+
+/// Log-softmax over the last dimension.
+pub fn log_softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
+    let out_addr = out.as_mut_ptr() as usize;
+    let out_len = out.len();
+    parallel_for(rows, 64, move |r0, r1| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        for r in r0..r1 {
+            let x = &input[r * cols..(r + 1) * cols];
+            let o = &mut out[r * cols..(r + 1) * cols];
+            let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0f32;
+            for &xi in x.iter() {
+                sum += (xi - m).exp();
+            }
+            let lse = m + sum.ln();
+            for (oi, &xi) in o.iter_mut().zip(x.iter()) {
+                *oi = xi - lse;
+            }
+        }
+    });
+}
+
+/// Backward of log-softmax: `gi = go - exp(y) * sum(go)` per row (y is the
+/// forward log-softmax output).
+pub fn log_softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f32], grad_in: &mut [f32]) {
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    parallel_for(rows, 64, move |r0, r1| {
+        let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        for r in r0..r1 {
+            let yr = &y[r * cols..(r + 1) * cols];
+            let gr = &grad_out[r * cols..(r + 1) * cols];
+            let gi = &mut grad_in[r * cols..(r + 1) * cols];
+            let gsum: f32 = gr.iter().sum();
+            for ((o, &yv), &gv) in gi.iter_mut().zip(yr.iter()).zip(gr.iter()) {
+                *o = gv - yv.exp() * gsum;
+            }
+        }
+    });
+}
+
+/// Fused cross-entropy forward: mean over rows of `-log_softmax(x)[target]`.
+/// Returns the scalar loss; also writes per-row log-probs if `log_probs`
+/// is provided (saved for backward).
+pub fn cross_entropy_forward(
+    rows: usize,
+    cols: usize,
+    logits: &[f32],
+    targets: &[i64],
+    log_probs: &mut [f32],
+) -> f32 {
+    log_softmax_rows(rows, cols, logits, log_probs);
+    let mut loss = 0f64;
+    for r in 0..rows {
+        let t = targets[r];
+        assert!((0..cols as i64).contains(&t), "target {t} out of range 0..{cols}");
+        loss -= log_probs[r * cols + t as usize] as f64;
+    }
+    (loss / rows as f64) as f32
+}
+
+/// Fused cross-entropy backward: `gi = (softmax(x) - onehot(t)) * g / rows`.
+pub fn cross_entropy_backward(
+    rows: usize,
+    cols: usize,
+    log_probs: &[f32],
+    targets: &[i64],
+    grad_scalar: f32,
+    grad_in: &mut [f32],
+) {
+    let scale = grad_scalar / rows as f32;
+    let gi_addr = grad_in.as_mut_ptr() as usize;
+    let gi_len = grad_in.len();
+    parallel_for(rows, 64, move |r0, r1| {
+        let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
+        for r in r0..r1 {
+            let lp = &log_probs[r * cols..(r + 1) * cols];
+            let gi = &mut grad_in[r * cols..(r + 1) * cols];
+            for (o, &l) in gi.iter_mut().zip(lp.iter()) {
+                *o = l.exp() * scale;
+            }
+            gi[targets[r] as usize] -= scale;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut r = Rng::new(1);
+        let (rows, cols) = (17, 31);
+        let x: Vec<f32> = (0..rows * cols).map(|_| r.uniform_range(-5.0, 5.0)).collect();
+        let mut y = vec![0.0; rows * cols];
+        softmax_rows(rows, cols, &x, &mut y);
+        for rr in 0..rows {
+            let s: f32 = y[rr * cols..(rr + 1) * cols].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {rr} sums to {s}");
+            assert!(y[rr * cols..(rr + 1) * cols].iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_stable_for_large_logits() {
+        let x = vec![1000.0f32, 1001.0, 999.0];
+        let mut y = vec![0.0; 3];
+        softmax_rows(1, 3, &x, &mut y);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(y[1] > y[0] && y[0] > y[2]);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax_log() {
+        let x = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut ls = vec![0.0; 4];
+        let mut s = vec![0.0; 4];
+        log_softmax_rows(1, 4, &x, &mut ls);
+        softmax_rows(1, 4, &x, &mut s);
+        for i in 0..4 {
+            assert!((ls[i] - s[i].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_backward_finite_difference() {
+        let mut r = Rng::new(3);
+        let cols = 5;
+        let x: Vec<f32> = (0..cols).map(|_| r.uniform_range(-2.0, 2.0)).collect();
+        let g: Vec<f32> = (0..cols).map(|_| r.uniform_range(-1.0, 1.0)).collect();
+        let mut y = vec![0.0; cols];
+        softmax_rows(1, cols, &x, &mut y);
+        let mut gi = vec![0.0; cols];
+        softmax_backward_rows(1, cols, &y, &g, &mut gi);
+
+        let f = |x: &[f32]| -> f64 {
+            let mut y = vec![0.0; cols];
+            softmax_rows(1, cols, x, &mut y);
+            y.iter().zip(g.iter()).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..cols {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = ((f(&xp) - f(&xm)) / (2.0 * eps as f64)) as f32;
+            assert!((gi[i] - fd).abs() < 1e-3, "idx {i}: {} vs {}", gi[i], fd);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let (rows, cols) = (4, 10);
+        let logits = vec![0.0f32; rows * cols];
+        let targets = vec![0i64, 3, 7, 9];
+        let mut lp = vec![0.0; rows * cols];
+        let loss = cross_entropy_forward(rows, cols, &logits, &targets, &mut lp);
+        assert!((loss - (cols as f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_backward_sums_to_zero() {
+        let mut r = Rng::new(5);
+        let (rows, cols) = (3, 7);
+        let logits: Vec<f32> = (0..rows * cols).map(|_| r.uniform_range(-2.0, 2.0)).collect();
+        let targets = vec![1i64, 0, 6];
+        let mut lp = vec![0.0; rows * cols];
+        cross_entropy_forward(rows, cols, &logits, &targets, &mut lp);
+        let mut gi = vec![0.0; rows * cols];
+        cross_entropy_backward(rows, cols, &lp, &targets, 1.0, &mut gi);
+        // Per row, softmax sums to 1 and the onehot subtracts 1 => sum 0.
+        for rr in 0..rows {
+            let s: f32 = gi[rr * cols..(rr + 1) * cols].iter().sum();
+            assert!(s.abs() < 1e-5, "row {rr}: {s}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_backward_finite_difference() {
+        let mut r = Rng::new(7);
+        let (rows, cols) = (2, 4);
+        let logits: Vec<f32> = (0..rows * cols).map(|_| r.uniform_range(-1.0, 1.0)).collect();
+        let targets = vec![2i64, 0];
+        let f = |x: &[f32]| -> f64 {
+            let mut lp = vec![0.0; rows * cols];
+            cross_entropy_forward(rows, cols, x, &targets, &mut lp) as f64
+        };
+        let mut lp = vec![0.0; rows * cols];
+        cross_entropy_forward(rows, cols, &logits, &targets, &mut lp);
+        let mut gi = vec![0.0; rows * cols];
+        cross_entropy_backward(rows, cols, &lp, &targets, 1.0, &mut gi);
+        let eps = 1e-3;
+        for i in 0..rows * cols {
+            let mut xp = logits.clone();
+            xp[i] += eps;
+            let mut xm = logits.clone();
+            xm[i] -= eps;
+            let fd = ((f(&xp) - f(&xm)) / (2.0 * eps as f64)) as f32;
+            assert!((gi[i] - fd).abs() < 1e-3, "idx {i}: {} vs fd {}", gi[i], fd);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn cross_entropy_bad_target_panics() {
+        let mut lp = vec![0.0; 4];
+        cross_entropy_forward(1, 4, &[0.0; 4], &[4], &mut lp);
+    }
+}

@@ -1,0 +1,76 @@
+//! # torsk — an imperative-style, high-performance deep learning library
+//!
+//! A Rust reproduction of **"PyTorch: An Imperative Style, High-Performance
+//! Deep Learning Library"** (Paszke et al., NeurIPS 2019) as a three-layer
+//! Rust + JAX + Pallas stack. See `DESIGN.md` for the full system map and
+//! `EXPERIMENTS.md` for the paper-vs-measured results.
+//!
+//! The crate provides:
+//! - [`tensor`] — strided, reference-counted tensors with mutation
+//!   versioning (§5.5, §4.3);
+//! - [`autograd`] — define-by-run reverse-mode AD with a multithreaded
+//!   backward engine (§4.3, §5.1);
+//! - [`ops`] — eager operators dispatched synchronously on CPU or
+//!   asynchronously onto simulated device streams (§5.2);
+//! - [`alloc`] — the caching device allocator and its baselines (§5.3);
+//! - [`device`] — streams, events, and the simulated accelerator (§5.2);
+//! - [`nn`], [`optim`], [`data`] — the "just Python programs" model,
+//!   optimizer and data-loading APIs, in Rust (§4.1, §4.2);
+//! - [`multiproc`] — shared-memory tensor transport + Hogwild (§5.4);
+//! - [`runtime`] / [`graph`] — AOT-compiled XLA graph execution via PJRT,
+//!   the static-graph baseline of §6.3;
+//! - [`models`] — the six Table 1 benchmark models;
+//! - [`profiler`] — the Figure 1/2 instrumentation;
+//! - [`adoption`] — the Figure 3 mention-counting pipeline.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the xla_extension
+//! # // rpath, so they cannot load libstdc++ at runtime. The same code is
+//! # // exercised (and executed) in examples/quickstart.rs and the tests.
+//! use torsk::prelude::*;
+//!
+//! torsk::rng::manual_seed(0);
+//! let x = Tensor::randn(&[8, 4]);
+//! let w = Tensor::randn(&[3, 4]).requires_grad(true);
+//! let b = Tensor::zeros(&[3]).requires_grad(true);
+//! let y = ops::linear(&x, &w, Some(&b)).relu();
+//! let loss = y.mean();
+//! loss.backward();
+//! assert_eq!(w.grad().unwrap().shape(), &[3, 4]);
+//! ```
+
+pub mod adoption;
+pub mod alloc;
+pub mod autograd;
+pub mod cli;
+pub mod ctx;
+pub mod data;
+pub mod device;
+pub mod error;
+pub mod graph;
+pub mod kernels;
+pub mod models;
+pub mod multiproc;
+pub mod nn;
+pub mod ops;
+pub mod optim;
+pub mod profiler;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+
+pub use error::{Result, TorskError};
+pub use tensor::{DType, Tensor};
+
+/// Common imports for user programs.
+pub mod prelude {
+    pub use crate::autograd::{self, no_grad};
+    pub use crate::device::Device;
+    pub use crate::nn::{self, Module};
+    pub use crate::ops;
+    pub use crate::optim::{self, Optimizer};
+    pub use crate::tensor::{assert_close, DType, Tensor};
+}

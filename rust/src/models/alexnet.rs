@@ -1,0 +1,111 @@
+//! AlexNet (Krizhevsky et al. 2012), scaled to 32×32 inputs at width/4.
+
+use super::{image_batch, image_loss, Batch, BenchModel};
+use crate::nn::{Conv2d, Dropout, Flatten, Linear, MaxPool2d, Module, ReLU, Sequential};
+use crate::tensor::Tensor;
+
+/// AlexNet-style CNN: 5 conv + 3 fc.
+pub struct AlexNet {
+    net: Sequential,
+    pub classes: usize,
+    pub batch: usize,
+    pub input: (usize, usize, usize),
+}
+
+impl AlexNet {
+    /// width/4, 32×32 configuration used for Table 1.
+    pub fn table1() -> AlexNet {
+        AlexNet::new(3, 32, 10, 32)
+    }
+
+    pub fn new(c_in: usize, hw: usize, classes: usize, batch: usize) -> AlexNet {
+        // Original widths /4: 64,192,384,256,256 -> 16,48,96,64,64.
+        let net = Sequential::new()
+            .add(Conv2d::new(c_in, 16, 3, 1, 1))
+            .add(ReLU)
+            .add(MaxPool2d::new(2, 2)) // 16x16
+            .add(Conv2d::new(16, 48, 3, 1, 1))
+            .add(ReLU)
+            .add(MaxPool2d::new(2, 2)) // 8x8
+            .add(Conv2d::new(48, 96, 3, 1, 1))
+            .add(ReLU)
+            .add(Conv2d::new(96, 64, 3, 1, 1))
+            .add(ReLU)
+            .add(Conv2d::new(64, 64, 3, 1, 1))
+            .add(ReLU)
+            .add(MaxPool2d::new(2, 2)) // 4x4
+            .add(Flatten)
+            .add(Dropout::new(0.5))
+            .add(Linear::new(64 * (hw / 8) * (hw / 8), 512))
+            .add(ReLU)
+            .add(Dropout::new(0.5))
+            .add(Linear::new(512, 256))
+            .add(ReLU)
+            .add(Linear::new(256, classes));
+        AlexNet { net, classes, batch, input: (c_in, hw, hw) }
+    }
+}
+
+impl Module for AlexNet {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.net.forward(x)
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+    fn name(&self) -> &'static str {
+        "AlexNet"
+    }
+}
+
+impl BenchModel for AlexNet {
+    fn name(&self) -> &'static str {
+        "alexnet"
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn loss(&self, batch: &Batch) -> Tensor {
+        image_loss(&self.net, batch)
+    }
+    fn make_batch(&self, seed: u64) -> Batch {
+        let (c, h, w) = self.input;
+        image_batch(seed, self.batch, c, h, w, self.classes)
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModuleExt;
+
+    #[test]
+    fn forward_shape_and_backward() {
+        crate::rng::manual_seed(0);
+        let mut m = AlexNet::new(3, 32, 10, 2);
+        BenchModel::set_training(&mut m, true);
+        let batch = m.make_batch(1);
+        let loss = BenchModel::loss(&m, &batch);
+        assert_eq!(loss.shape(), &[] as &[usize]);
+        assert!(loss.item().is_finite());
+        loss.backward();
+        let with_grad = BenchModel::parameters(&m).iter().filter(|p| p.grad().is_some()).count();
+        assert_eq!(with_grad, BenchModel::parameters(&m).len());
+    }
+
+    #[test]
+    fn parameter_count_in_expected_range() {
+        crate::rng::manual_seed(0);
+        let m = AlexNet::table1();
+        let n = Module::parameters(&m).iter().map(|p| p.numel()).sum::<usize>();
+        // Scaled model: roughly 0.8M-2M params.
+        assert!((500_000..3_000_000).contains(&n), "params={n}");
+        let _ = m.num_parameters();
+    }
+}

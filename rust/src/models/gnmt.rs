@@ -1,0 +1,171 @@
+//! GNMTv2-style attentional seq2seq (Wu et al. 2016, as benchmarked in the
+//! paper): LSTM encoder, LSTM decoder with dot-product attention over
+//! encoder states, shared output projection. Scaled: d=128, 2+2 layers,
+//! vocab 4k, len 16. Throughput unit: target tokens/s (Table 1).
+
+use super::{Batch, BenchModel};
+use crate::nn::{Embedding, Linear, Module, LSTM};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// Scaled GNMTv2.
+pub struct Gnmt {
+    pub embed: Embedding,
+    pub encoder: LSTM,
+    pub decoder: LSTM,
+    pub attn_out: Linear,
+    pub proj: Linear,
+    pub vocab: usize,
+    pub dim: usize,
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+}
+
+impl Gnmt {
+    pub fn table1() -> Gnmt {
+        Gnmt::new(4096, 128, 2, 32, 16, 16)
+    }
+
+    pub fn new(vocab: usize, dim: usize, layers: usize, batch: usize, src_len: usize, tgt_len: usize) -> Gnmt {
+        Gnmt {
+            embed: Embedding::new(vocab, dim),
+            encoder: LSTM::new(dim, dim, layers),
+            decoder: LSTM::new(dim, dim, layers),
+            attn_out: Linear::new(2 * dim, dim),
+            proj: Linear::new(dim, vocab),
+            vocab,
+            dim,
+            batch,
+            src_len,
+            tgt_len,
+        }
+    }
+
+    /// Embed a [N, T] i64 token tensor into [T, N, D] (time-major).
+    fn embed_seq(&self, tokens: &Tensor) -> Tensor {
+        let emb = self.embed.forward(tokens); // [N, T, D]
+        emb.permute(&[1, 0, 2]).contiguous() // [T, N, D]
+    }
+
+    /// Forward + mean cross-entropy over target positions (teacher forcing:
+    /// input is tgt shifted right via zero BOS; label is tgt itself).
+    pub fn seq_loss(&self, src: &Tensor, tgt: &Tensor) -> Tensor {
+        let n = src.size(0);
+        let t_len = tgt.size(1);
+
+        // Encode.
+        let src_emb = self.embed_seq(src);
+        let (enc_states, final_state) = self.encoder.run(&src_emb, None); // [S, N, D]
+        // Attention memory: [N, S, D].
+        let memory = enc_states.permute(&[1, 0, 2]).contiguous();
+        let memory_t = memory.transpose(1, 2).contiguous(); // [N, D, S]
+
+        // Decoder input: BOS (zeros) + tgt[:-1].
+        let tgt_in = {
+            let bos = Tensor::zeros_on(&[n, 1], crate::tensor::DType::I64, tgt.device());
+            let shifted = tgt.narrow(1, 0, t_len - 1);
+            ops::cat(&[&bos, &shifted], 1)
+        };
+        let tgt_emb = self.embed_seq(&tgt_in); // [T, N, D]
+        let (dec_states, _) = self.decoder.run(&tgt_emb, Some(final_state)); // [T, N, D]
+
+        // Dot attention for all steps at once: scores [N, T, S].
+        let dec_btd = dec_states.permute(&[1, 0, 2]).contiguous(); // [N, T, D]
+        let scores = ops::bmm(&dec_btd, &memory_t); // [N, T, S]
+        let weights = ops::softmax_last(&ops::mul_scalar(&scores, 1.0 / (self.dim as f32).sqrt()));
+        let context = ops::bmm(&weights, &memory); // [N, T, D]
+        let combined = ops::cat(&[&context, &dec_btd], 2); // [N, T, 2D]
+        let attn = ops::tanh(&self.attn_out.forward(&combined)); // [N, T, D]
+
+        // Project to vocab and compute token-level cross entropy.
+        let logits = self.proj.forward(&attn); // [N, T, V]
+        let flat_logits = logits.reshape(&[n * t_len, self.vocab]);
+        let flat_tgt = tgt.reshape(&[n * t_len]);
+        ops::cross_entropy(&flat_logits, &flat_tgt)
+    }
+}
+
+impl BenchModel for Gnmt {
+    fn name(&self) -> &'static str {
+        "gnmt"
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        let mut p = self.embed.parameters();
+        p.extend(Module::parameters(&self.encoder));
+        p.extend(Module::parameters(&self.decoder));
+        p.extend(self.attn_out.parameters());
+        p.extend(self.proj.parameters());
+        p
+    }
+
+    fn loss(&self, batch: &Batch) -> Tensor {
+        match batch {
+            Batch::Seq2Seq(src, tgt) => self.seq_loss(src, tgt),
+            _ => crate::torsk_bail!("gnmt expects a seq2seq batch"),
+        }
+    }
+
+    fn make_batch(&self, seed: u64) -> Batch {
+        let mut r = crate::rng::Rng::new(seed);
+        let src: Vec<i64> =
+            (0..self.batch * self.src_len).map(|_| r.below(self.vocab as u64) as i64).collect();
+        let tgt: Vec<i64> =
+            (0..self.batch * self.tgt_len).map(|_| r.below(self.vocab as u64) as i64).collect();
+        Batch::Seq2Seq(
+            Tensor::from_vec(src, &[self.batch, self.src_len]),
+            Tensor::from_vec(tgt, &[self.batch, self.tgt_len]),
+        )
+    }
+
+    fn set_training(&mut self, _training: bool) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Gnmt {
+        crate::rng::manual_seed(0);
+        Gnmt::new(50, 16, 1, 2, 5, 4)
+    }
+
+    #[test]
+    fn loss_is_near_log_vocab_at_init() {
+        let m = tiny();
+        let b = m.make_batch(1);
+        let loss = m.loss(&b).item();
+        let expect = (50f32).ln();
+        assert!((loss - expect).abs() < 1.0, "loss {loss} vs ln(V) {expect}");
+    }
+
+    #[test]
+    fn backward_reaches_all_components() {
+        let m = tiny();
+        let b = m.make_batch(1);
+        m.loss(&b).backward();
+        assert!(m.embed.weight.grad().is_some(), "embedding grad");
+        assert!(m.proj.weight.grad().is_some(), "projection grad");
+        assert!(m.attn_out.weight.grad().is_some(), "attention grad");
+        for p in Module::parameters(&m.encoder) {
+            assert!(p.grad().is_some(), "encoder grad");
+        }
+        for p in Module::parameters(&m.decoder) {
+            assert!(p.grad().is_some(), "decoder grad");
+        }
+    }
+
+    #[test]
+    fn one_sgd_step_reduces_loss() {
+        use crate::optim::{Optimizer, Sgd};
+        let m = tiny();
+        let b = m.make_batch(2);
+        let mut opt = Sgd::new(m.parameters(), 0.5);
+        let l0 = m.loss(&b);
+        l0.backward();
+        opt.step();
+        let l1 = m.loss(&b);
+        assert!(l1.item() < l0.item(), "{} -> {}", l0.item(), l1.item());
+    }
+}

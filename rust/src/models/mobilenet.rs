@@ -1,0 +1,117 @@
+//! MobileNetV1 (Howard et al. 2017): depthwise-separable convolutions, at
+//! width/2 on 32×32 inputs. Exercises grouped convolution (groups = C).
+
+use super::{image_batch, image_loss, Batch, BenchModel};
+use crate::nn::{BatchNorm2d, Conv2d, GlobalAvgPool, Linear, Module, ReLU, Sequential};
+use crate::tensor::Tensor;
+
+/// One depthwise-separable unit: DW 3×3 + BN + ReLU, PW 1×1 + BN + ReLU.
+fn separable(net: &mut Sequential, c_in: usize, c_out: usize, stride: usize) {
+    net.push(Box::new(Conv2d::with_groups(c_in, c_in, 3, stride, 1, c_in, false)));
+    net.push(Box::new(BatchNorm2d::new(c_in)));
+    net.push(Box::new(ReLU));
+    net.push(Box::new(Conv2d::with_groups(c_in, c_out, 1, 1, 0, 1, false)));
+    net.push(Box::new(BatchNorm2d::new(c_out)));
+    net.push(Box::new(ReLU));
+}
+
+/// MobileNetV1 backbone + classifier.
+pub struct MobileNetV1 {
+    net: Sequential,
+    pub classes: usize,
+    pub batch: usize,
+    pub input: (usize, usize, usize),
+}
+
+impl MobileNetV1 {
+    pub fn table1() -> MobileNetV1 {
+        MobileNetV1::new(3, 32, 10, 32)
+    }
+
+    pub fn new(c_in: usize, hw: usize, classes: usize, batch: usize) -> MobileNetV1 {
+        // Original widths /2: 32,64,128,256,512,1024 -> 16,32,64,128,256,512.
+        let mut net = Sequential::new();
+        net.push(Box::new(Conv2d::with_groups(c_in, 16, 3, 1, 1, 1, false)));
+        net.push(Box::new(BatchNorm2d::new(16)));
+        net.push(Box::new(ReLU));
+        separable(&mut net, 16, 32, 1);
+        separable(&mut net, 32, 64, 2); // 16
+        separable(&mut net, 64, 64, 1);
+        separable(&mut net, 64, 128, 2); // 8
+        separable(&mut net, 128, 128, 1);
+        separable(&mut net, 128, 256, 2); // 4
+        for _ in 0..5 {
+            separable(&mut net, 256, 256, 1);
+        }
+        separable(&mut net, 256, 512, 2); // 2
+        separable(&mut net, 512, 512, 1);
+        net.push(Box::new(GlobalAvgPool));
+        net.push(Box::new(Linear::new(512, classes)));
+        MobileNetV1 { net, classes, batch, input: (c_in, hw, hw) }
+    }
+}
+
+impl Module for MobileNetV1 {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.net.forward(x)
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn buffers(&self) -> Vec<Tensor> {
+        self.net.buffers()
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+    fn name(&self) -> &'static str {
+        "MobileNetV1"
+    }
+}
+
+impl BenchModel for MobileNetV1 {
+    fn name(&self) -> &'static str {
+        "mobilenet"
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn loss(&self, batch: &Batch) -> Tensor {
+        image_loss(&self.net, batch)
+    }
+    fn make_batch(&self, seed: u64) -> Batch {
+        let (c, h, w) = self.input;
+        image_batch(seed, self.batch, c, h, w, self.classes)
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_separable_blocks() {
+        crate::rng::manual_seed(0);
+        let m = MobileNetV1::new(3, 32, 10, 1);
+        // DW conv weights have weight.size(1) == 1 (groups == channels).
+        let dw = Module::parameters(&m)
+            .iter()
+            .filter(|p| p.ndim() == 4 && p.size(1) == 1 && p.size(2) == 3)
+            .count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn forward_backward() {
+        crate::rng::manual_seed(0);
+        let m = MobileNetV1::new(3, 32, 10, 1);
+        let b = m.make_batch(0);
+        let loss = BenchModel::loss(&m, &b);
+        assert!(loss.item().is_finite());
+        loss.backward();
+        assert!(Module::parameters(&m)[0].grad().is_some());
+    }
+}

@@ -1,0 +1,133 @@
+//! The model zoo for the paper's Table 1: AlexNet, VGG-19, ResNet-50,
+//! MobileNetV1, a GNMTv2-style attentional seq2seq, and NCF.
+//!
+//! Architectures follow the originals; input resolution and widths are
+//! scaled (DESIGN.md §6) so CPU training is tractable — Table 1 compares
+//! *execution modes on identical models*, so the mode ratios (not absolute
+//! img/s) are the reproduced quantity.
+
+pub mod alexnet;
+pub mod gnmt;
+pub mod mobilenet;
+pub mod ncf;
+pub mod resnet;
+pub mod vgg;
+
+pub use alexnet::AlexNet;
+pub use gnmt::Gnmt;
+pub use mobilenet::MobileNetV1;
+pub use ncf::Ncf;
+pub use resnet::ResNet50;
+pub use vgg::Vgg19;
+
+use crate::nn::Module;
+use crate::tensor::Tensor;
+
+/// A batch of training data, generic over task type.
+pub enum Batch {
+    /// images [N,C,H,W] + labels [N] (i64)
+    Images(Tensor, Tensor),
+    /// src tokens [N, S] + tgt tokens [N, T] (both i64)
+    Seq2Seq(Tensor, Tensor),
+    /// (user,item) pairs [N,2] (i64) + click labels [N,1] (f32)
+    Interactions(Tensor, Tensor),
+}
+
+impl Batch {
+    /// Units processed per step for throughput reporting: images for CNNs,
+    /// target tokens for GNMT, samples for NCF — matching Table 1's units.
+    pub fn units(&self) -> usize {
+        match self {
+            Batch::Images(x, _) => x.size(0),
+            Batch::Seq2Seq(_, tgt) => tgt.numel(),
+            Batch::Interactions(x, _) => x.size(0),
+        }
+    }
+
+    /// Move the batch's tensors to a device.
+    pub fn to_device(&self, d: crate::device::Device) -> Batch {
+        match self {
+            Batch::Images(x, y) => Batch::Images(x.to_device(d), y.to_device(d)),
+            Batch::Seq2Seq(s, t) => Batch::Seq2Seq(s.to_device(d), t.to_device(d)),
+            Batch::Interactions(x, y) => Batch::Interactions(x.to_device(d), y.to_device(d)),
+        }
+    }
+}
+
+/// A Table 1 benchmark model: forward + loss over a [`Batch`].
+pub trait BenchModel: Send {
+    fn name(&self) -> &'static str;
+    fn parameters(&self) -> Vec<Tensor>;
+    /// Forward pass + loss (the thing `backward()` is called on).
+    fn loss(&self, batch: &Batch) -> Tensor;
+    /// Generate a deterministic synthetic batch of the benchmark size.
+    fn make_batch(&self, seed: u64) -> Batch;
+    fn set_training(&mut self, training: bool);
+}
+
+/// Image-classifier helper: wraps a `Module` backbone + cross-entropy.
+pub(crate) fn image_loss(backbone: &dyn Module, batch: &Batch) -> Tensor {
+    match batch {
+        Batch::Images(x, y) => {
+            let logits = backbone.forward(x);
+            crate::ops::cross_entropy(&logits, y)
+        }
+        _ => crate::torsk_bail!("image model expects an image batch"),
+    }
+}
+
+/// Deterministic synthetic image batch.
+pub(crate) fn image_batch(seed: u64, n: usize, c: usize, h: usize, w: usize, classes: usize) -> Batch {
+    let mut r = crate::rng::Rng::new(seed);
+    let mut img = vec![0.0f32; n * c * h * w];
+    r.fill_normal(&mut img, 0.0, 1.0);
+    let labels: Vec<i64> = (0..n).map(|_| r.below(classes as u64) as i64).collect();
+    Batch::Images(Tensor::from_vec(img, &[n, c, h, w]), Tensor::from_vec(labels, &[n]))
+}
+
+/// Construct a benchmark model by name, placing parameters on `device`.
+pub fn by_name_on(name: &str, device: crate::device::Device) -> Option<Box<dyn BenchModel>> {
+    crate::device::with_default_device(device, || by_name(name))
+}
+
+/// Construct a benchmark model by Table 1 name.
+pub fn by_name(name: &str) -> Option<Box<dyn BenchModel>> {
+    match name {
+        "alexnet" => Some(Box::new(AlexNet::table1())),
+        "vgg19" => Some(Box::new(Vgg19::table1())),
+        "resnet50" => Some(Box::new(ResNet50::table1())),
+        "mobilenet" => Some(Box::new(MobileNetV1::table1())),
+        "gnmt" => Some(Box::new(Gnmt::table1())),
+        "ncf" => Some(Box::new(Ncf::table1())),
+        _ => None,
+    }
+}
+
+/// The six Table 1 model names, in the paper's column order.
+pub const TABLE1_MODELS: [&str; 6] = ["alexnet", "vgg19", "resnet50", "mobilenet", "gnmt", "ncf"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all_table1_models() {
+        crate::rng::manual_seed(0);
+        for name in TABLE1_MODELS {
+            let m = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!m.parameters().is_empty(), "{name} has params");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn batch_units_match_table1_semantics() {
+        let img = image_batch(0, 4, 3, 8, 8, 10);
+        assert_eq!(img.units(), 4);
+        let s2s = Batch::Seq2Seq(
+            Tensor::from_vec(vec![0i64; 2 * 5], &[2, 5]),
+            Tensor::from_vec(vec![0i64; 2 * 7], &[2, 7]),
+        );
+        assert_eq!(s2s.units(), 14, "tokens per step");
+    }
+}

@@ -1,0 +1,246 @@
+//! ResNet-50 (He et al. 2015): full [3,4,6,3] bottleneck layout at width/4
+//! on 32×32 inputs. The residual additions exercise the autograd engine's
+//! fan-in accumulation (the diamond pattern).
+
+use super::{image_batch, Batch, BenchModel};
+use crate::nn::{BatchNorm2d, Conv2d, GlobalAvgPool, Linear, Module};
+use crate::ops;
+use crate::tensor::Tensor;
+
+struct Bottleneck {
+    conv1: Conv2d,
+    bn1: BatchNorm2d,
+    conv2: Conv2d,
+    bn2: BatchNorm2d,
+    conv3: Conv2d,
+    bn3: BatchNorm2d,
+    downsample: Option<(Conv2d, BatchNorm2d)>,
+}
+
+const EXPANSION: usize = 4;
+
+impl Bottleneck {
+    fn new(c_in: usize, width: usize, stride: usize) -> Bottleneck {
+        let c_out = width * EXPANSION;
+        let downsample = if stride != 1 || c_in != c_out {
+            Some((
+                Conv2d::with_groups(c_in, c_out, 1, stride, 0, 1, false),
+                BatchNorm2d::new(c_out),
+            ))
+        } else {
+            None
+        };
+        Bottleneck {
+            conv1: Conv2d::with_groups(c_in, width, 1, 1, 0, 1, false),
+            bn1: BatchNorm2d::new(width),
+            conv2: Conv2d::with_groups(width, width, 3, stride, 1, 1, false),
+            bn2: BatchNorm2d::new(width),
+            conv3: Conv2d::with_groups(width, c_out, 1, 1, 0, 1, false),
+            bn3: BatchNorm2d::new(c_out),
+            downsample,
+        }
+    }
+}
+
+impl Module for Bottleneck {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let mut out = ops::relu(&self.bn1.forward(&self.conv1.forward(x)));
+        out = ops::relu(&self.bn2.forward(&self.conv2.forward(&out)));
+        out = self.bn3.forward(&self.conv3.forward(&out));
+        let identity = match &self.downsample {
+            Some((conv, bn)) => bn.forward(&conv.forward(x)),
+            None => x.clone(),
+        };
+        ops::relu(&ops::add(&out, &identity))
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        let mut p = vec![];
+        p.extend(self.conv1.parameters());
+        p.extend(self.bn1.parameters());
+        p.extend(self.conv2.parameters());
+        p.extend(self.bn2.parameters());
+        p.extend(self.conv3.parameters());
+        p.extend(self.bn3.parameters());
+        if let Some((c, b)) = &self.downsample {
+            p.extend(c.parameters());
+            p.extend(b.parameters());
+        }
+        p
+    }
+
+    fn buffers(&self) -> Vec<Tensor> {
+        let mut b = vec![];
+        b.extend(self.bn1.buffers());
+        b.extend(self.bn2.buffers());
+        b.extend(self.bn3.buffers());
+        if let Some((_, bn)) = &self.downsample {
+            b.extend(bn.buffers());
+        }
+        b
+    }
+
+    fn set_training(&mut self, training: bool) {
+        self.bn1.set_training(training);
+        self.bn2.set_training(training);
+        self.bn3.set_training(training);
+        if let Some((_, bn)) = &mut self.downsample {
+            bn.set_training(training);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Bottleneck"
+    }
+}
+
+/// ResNet-50: stem + [3,4,6,3] bottleneck stages + fc.
+pub struct ResNet50 {
+    stem_conv: Conv2d,
+    stem_bn: BatchNorm2d,
+    stages: Vec<Bottleneck>,
+    pool: GlobalAvgPool,
+    fc: Linear,
+    pub classes: usize,
+    pub batch: usize,
+    pub input: (usize, usize, usize),
+}
+
+impl ResNet50 {
+    pub fn table1() -> ResNet50 {
+        ResNet50::new(3, 32, 10, 16)
+    }
+
+    pub fn new(c_in: usize, hw: usize, classes: usize, batch: usize) -> ResNet50 {
+        // Original stage widths /4: 64,128,256,512 -> 16,32,64,128.
+        let widths = [16usize, 32, 64, 128];
+        let blocks = [3usize, 4, 6, 3];
+        let mut stages = Vec::new();
+        let mut c = 16;
+        for (s, (&w, &n)) in widths.iter().zip(blocks.iter()).enumerate() {
+            for b in 0..n {
+                // CIFAR-style: stage 0 keeps resolution, later stages stride 2
+                // on their first block.
+                let stride = if b == 0 && s > 0 { 2 } else { 1 };
+                stages.push(Bottleneck::new(c, w, stride));
+                c = w * EXPANSION;
+            }
+        }
+        ResNet50 {
+            stem_conv: Conv2d::with_groups(c_in, 16, 3, 1, 1, 1, false),
+            stem_bn: BatchNorm2d::new(16),
+            stages,
+            pool: GlobalAvgPool,
+            fc: Linear::new(128 * EXPANSION, classes),
+            classes,
+            batch,
+            input: (c_in, hw, hw),
+        }
+    }
+
+    /// Number of bottleneck blocks (should be 16 for ResNet-50).
+    pub fn num_blocks(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+impl Module for ResNet50 {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let mut out = ops::relu(&self.stem_bn.forward(&self.stem_conv.forward(x)));
+        for block in &self.stages {
+            out = block.forward(&out);
+        }
+        self.fc.forward(&self.pool.forward(&out))
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        let mut p = self.stem_conv.parameters();
+        p.extend(self.stem_bn.parameters());
+        for b in &self.stages {
+            p.extend(b.parameters());
+        }
+        p.extend(self.fc.parameters());
+        p
+    }
+
+    fn buffers(&self) -> Vec<Tensor> {
+        let mut b = self.stem_bn.buffers();
+        for s in &self.stages {
+            b.extend(s.buffers());
+        }
+        b
+    }
+
+    fn set_training(&mut self, training: bool) {
+        self.stem_bn.set_training(training);
+        for b in &mut self.stages {
+            b.set_training(training);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ResNet50"
+    }
+}
+
+impl BenchModel for ResNet50 {
+    fn name(&self) -> &'static str {
+        "resnet50"
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        Module::parameters(self)
+    }
+    fn loss(&self, batch: &Batch) -> Tensor {
+        match batch {
+            Batch::Images(x, y) => {
+                let logits = self.forward(x);
+                ops::cross_entropy(&logits, y)
+            }
+            _ => crate::torsk_bail!("resnet expects image batch"),
+        }
+    }
+    fn make_batch(&self, seed: u64) -> Batch {
+        let (c, h, w) = self.input;
+        image_batch(seed, self.batch, c, h, w, self.classes)
+    }
+    fn set_training(&mut self, training: bool) {
+        Module::set_training(self, training);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_16_bottlenecks_and_53_convs() {
+        crate::rng::manual_seed(0);
+        let m = ResNet50::new(3, 32, 10, 1);
+        assert_eq!(m.num_blocks(), 16); // 3+4+6+3
+        // conv weights: stem 1 + 16*3 + 4 downsamples = 53; plus fc weight.
+        let conv_weights = Module::parameters(&m)
+            .iter()
+            .filter(|p| p.ndim() == 4)
+            .count();
+        assert_eq!(conv_weights, 53);
+    }
+
+    #[test]
+    fn forward_shape() {
+        crate::rng::manual_seed(0);
+        let m = ResNet50::new(3, 32, 10, 1);
+        let x = Tensor::randn(&[1, 3, 32, 32]);
+        let y = m.forward(&x);
+        assert_eq!(y.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn residual_gradient_flows_to_stem() {
+        crate::rng::manual_seed(0);
+        let m = ResNet50::new(3, 32, 10, 1);
+        let batch = m.make_batch(0);
+        BenchModel::loss(&m, &batch).backward();
+        let g = m.stem_conv.weight.grad().expect("stem grad");
+        assert!(g.to_vec::<f32>().iter().any(|&v| v != 0.0));
+    }
+}

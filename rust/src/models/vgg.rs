@@ -1,0 +1,101 @@
+//! VGG-19 (Simonyan & Zisserman 2014), scaled to 32×32 at width/4.
+
+use super::{image_batch, image_loss, Batch, BenchModel};
+use crate::nn::{Conv2d, Flatten, Linear, MaxPool2d, Module, ReLU, Sequential};
+use crate::tensor::Tensor;
+
+/// VGG-19: 16 conv + 3 fc layers in five pooled blocks.
+pub struct Vgg19 {
+    net: Sequential,
+    pub classes: usize,
+    pub batch: usize,
+    pub input: (usize, usize, usize),
+}
+
+impl Vgg19 {
+    pub fn table1() -> Vgg19 {
+        Vgg19::new(3, 32, 10, 16)
+    }
+
+    pub fn new(c_in: usize, hw: usize, classes: usize, batch: usize) -> Vgg19 {
+        // Original widths /4: 64,128,256,512,512 -> 16,32,64,128,128.
+        // Conv counts per block (VGG-19): 2,2,4,4,4.
+        let cfg: [(usize, usize); 5] = [(16, 2), (32, 2), (64, 4), (128, 4), (128, 4)];
+        let mut net = Sequential::new();
+        let mut c = c_in;
+        for (width, convs) in cfg {
+            for _ in 0..convs {
+                net.push(Box::new(Conv2d::new(c, width, 3, 1, 1)));
+                net.push(Box::new(ReLU));
+                c = width;
+            }
+            net.push(Box::new(MaxPool2d::new(2, 2)));
+        }
+        let spatial = hw / 32; // five 2x pools
+        net.push(Box::new(Flatten));
+        net.push(Box::new(Linear::new(128 * spatial * spatial, 256)));
+        net.push(Box::new(ReLU));
+        net.push(Box::new(Linear::new(256, 256)));
+        net.push(Box::new(ReLU));
+        net.push(Box::new(Linear::new(256, classes)));
+        Vgg19 { net, classes, batch, input: (c_in, hw, hw) }
+    }
+}
+
+impl Module for Vgg19 {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.net.forward(x)
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+    fn name(&self) -> &'static str {
+        "Vgg19"
+    }
+}
+
+impl BenchModel for Vgg19 {
+    fn name(&self) -> &'static str {
+        "vgg19"
+    }
+    fn parameters(&self) -> Vec<Tensor> {
+        self.net.parameters()
+    }
+    fn loss(&self, batch: &Batch) -> Tensor {
+        image_loss(&self.net, batch)
+    }
+    fn make_batch(&self, seed: u64) -> Batch {
+        let (c, h, w) = self.input;
+        image_batch(seed, self.batch, c, h, w, self.classes)
+    }
+    fn set_training(&mut self, training: bool) {
+        self.net.set_training(training);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nineteen_weight_layers() {
+        crate::rng::manual_seed(0);
+        let m = Vgg19::table1();
+        // 16 convs + 3 fcs, each with weight+bias.
+        assert_eq!(Module::parameters(&m).len(), 19 * 2);
+    }
+
+    #[test]
+    fn forward_and_backward_small() {
+        crate::rng::manual_seed(0);
+        let m = Vgg19::new(3, 32, 10, 1);
+        let batch = m.make_batch(0);
+        let loss = BenchModel::loss(&m, &batch);
+        assert!(loss.item().is_finite());
+        loss.backward();
+        assert!(Module::parameters(&m)[0].grad().is_some());
+    }
+}

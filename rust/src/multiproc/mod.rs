@@ -1,0 +1,529 @@
+//! Multiprocessing with shared-memory tensors (§5.4).
+//!
+//! Python's GIL forces parallelism across *processes*; the paper's
+//! `torch.multiprocessing` makes that cheap by moving tensor data to
+//! shared memory instead of serializing it through a pipe — "a programming
+//! model which more closely resembles regular threaded programs".
+//!
+//! torsk reproduces the machinery:
+//! - [`SharedRegion`] — a file-backed `mmap(MAP_SHARED)` region (under
+//!   `/dev/shm` by default) usable across `fork` *and* independent
+//!   processes;
+//! - [`SharedTensor`] — a tensor whose storage lives in a shared region
+//!   (self-describing header, so another process can `open` it by path);
+//!   `.tensor()` is a zero-copy view, like `torch.Tensor.share_memory_()`;
+//! - [`fork_workers`] — spawn N child processes running a closure (the
+//!   `torch.multiprocessing.spawn` analog);
+//! - [`allreduce_mean`] / [`ShmLock`] / [`ShmBarrier`] — the "all-reduce
+//!   style primitives" users build data-parallel training from;
+//! - Hogwild (lock-free shared-parameter SGD, §5.4's closing example) is
+//!   exercised in `examples/hogwild.rs` and the integration tests.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::alloc::{AllocStats, Allocator, Block, StreamId};
+use crate::error::{Result, TorskError};
+use crate::tensor::{DType, Tensor};
+
+/// Magic bytes identifying a torsk shared tensor file.
+const MAGIC: u32 = 0x7052_534B; // "pRSK"
+/// Header layout: magic, dtype, ndim, dims[8], lock, barrier{count,sense},
+/// all u64-aligned u32s padded to 64 bytes * 2.
+const HEADER_BYTES: usize = 128;
+const MAX_DIMS: usize = 8;
+
+/// A shared, file-backed memory mapping.
+pub struct SharedRegion {
+    ptr: *mut u8,
+    len: usize,
+    path: PathBuf,
+    owner: bool,
+}
+
+unsafe impl Send for SharedRegion {}
+unsafe impl Sync for SharedRegion {}
+
+impl SharedRegion {
+    /// Create (or overwrite) a shared region of `len` bytes at `path`.
+    pub fn create(path: &Path, len: usize) -> Result<SharedRegion> {
+        let cpath = std::ffi::CString::new(path.as_os_str().to_str().unwrap()).unwrap();
+        // SAFETY: standard open/ftruncate/mmap sequence.
+        unsafe {
+            let fd = libc::open(cpath.as_ptr(), libc::O_RDWR | libc::O_CREAT, 0o600);
+            if fd < 0 {
+                return Err(TorskError::Multiproc(format!("open {}", path.display())));
+            }
+            if libc::ftruncate(fd, len as libc::off_t) != 0 {
+                libc::close(fd);
+                return Err(TorskError::Multiproc("ftruncate failed".into()));
+            }
+            let ptr = libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            libc::close(fd);
+            if ptr == libc::MAP_FAILED {
+                return Err(TorskError::Multiproc("mmap failed".into()));
+            }
+            Ok(SharedRegion { ptr: ptr as *mut u8, len, path: path.to_path_buf(), owner: true })
+        }
+    }
+
+    /// Map an existing shared region.
+    pub fn open(path: &Path) -> Result<SharedRegion> {
+        let cpath = std::ffi::CString::new(path.as_os_str().to_str().unwrap()).unwrap();
+        unsafe {
+            let fd = libc::open(cpath.as_ptr(), libc::O_RDWR, 0);
+            if fd < 0 {
+                return Err(TorskError::Multiproc(format!("open {}", path.display())));
+            }
+            let mut st: libc::stat = std::mem::zeroed();
+            if libc::fstat(fd, &mut st) != 0 {
+                libc::close(fd);
+                return Err(TorskError::Multiproc("fstat failed".into()));
+            }
+            let len = st.st_size as usize;
+            let ptr = libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            libc::close(fd);
+            if ptr == libc::MAP_FAILED {
+                return Err(TorskError::Multiproc("mmap failed".into()));
+            }
+            Ok(SharedRegion { ptr: ptr as *mut u8, len, path: path.to_path_buf(), owner: false })
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn header_u32(&self, idx: usize) -> &AtomicU32 {
+        debug_assert!(idx * 4 < HEADER_BYTES);
+        // SAFETY: header region is within the mapping and properly aligned.
+        unsafe { &*(self.ptr.add(idx * 4) as *const AtomicU32) }
+    }
+
+    fn data_ptr(&self) -> *mut u8 {
+        // SAFETY: len > HEADER_BYTES enforced at creation.
+        unsafe { self.ptr.add(HEADER_BYTES) }
+    }
+
+    /// Remove the backing file (call once, from the owner).
+    pub fn unlink(&self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for SharedRegion {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len from our own mmap.
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len);
+        }
+        let _ = self.owner; // files are unlinked explicitly
+    }
+}
+
+/// Allocator facade that keeps a shared region alive and never frees —
+/// lets shared memory masquerade as regular tensor storage.
+struct RegionAllocator {
+    _region: Arc<SharedRegion>,
+}
+
+impl Allocator for RegionAllocator {
+    fn allocate(&self, _bytes: usize, _stream: StreamId) -> Block {
+        crate::torsk_bail!("RegionAllocator cannot allocate");
+    }
+    fn deallocate(&self, _block: Block) {}
+    fn stats(&self) -> AllocStats {
+        AllocStats::default()
+    }
+    fn reset_stats(&self) {}
+}
+
+/// A tensor living in cross-process shared memory.
+pub struct SharedTensor {
+    region: Arc<SharedRegion>,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl SharedTensor {
+    /// Create a shared f32/i64 tensor at `path`.
+    pub fn create(path: &Path, shape: &[usize], dtype: DType) -> Result<SharedTensor> {
+        let n: usize = shape.iter().product();
+        crate::torsk_assert!(shape.len() <= MAX_DIMS, "too many dims");
+        let region = SharedRegion::create(path, HEADER_BYTES + n * dtype.size())?;
+        region.header_u32(0).store(MAGIC, Ordering::SeqCst);
+        region.header_u32(1).store(
+            match dtype {
+                DType::F32 => 0,
+                DType::I64 => 1,
+            },
+            Ordering::SeqCst,
+        );
+        region.header_u32(2).store(shape.len() as u32, Ordering::SeqCst);
+        for (i, &d) in shape.iter().enumerate() {
+            region.header_u32(3 + i).store(d as u32, Ordering::SeqCst);
+        }
+        Ok(SharedTensor { region: Arc::new(region), shape: shape.to_vec(), dtype })
+    }
+
+    /// Open a shared tensor created by another process.
+    pub fn open(path: &Path) -> Result<SharedTensor> {
+        let region = SharedRegion::open(path)?;
+        if region.header_u32(0).load(Ordering::SeqCst) != MAGIC {
+            return Err(TorskError::Multiproc("bad magic in shared tensor".into()));
+        }
+        let dtype = match region.header_u32(1).load(Ordering::SeqCst) {
+            0 => DType::F32,
+            1 => DType::I64,
+            _ => return Err(TorskError::Multiproc("bad dtype".into())),
+        };
+        let ndim = region.header_u32(2).load(Ordering::SeqCst) as usize;
+        let shape: Vec<usize> =
+            (0..ndim).map(|i| region.header_u32(3 + i).load(Ordering::SeqCst) as usize).collect();
+        Ok(SharedTensor { region: Arc::new(region), shape, dtype })
+    }
+
+    /// Zero-copy tensor view over the shared data (like `share_memory_()`;
+    /// "objects on both sides only describe how to interpret a memory
+    /// region which is shared among them", §4.2).
+    pub fn tensor(&self) -> Tensor {
+        let n: usize = self.shape.iter().product();
+        let nbytes = n * self.dtype.size();
+        let block = Block {
+            ptr: std::ptr::NonNull::new(self.region.data_ptr()).unwrap(),
+            size: nbytes,
+            requested: nbytes,
+            stream: StreamId::HOST,
+            root: false,
+        };
+        let alloc: Arc<dyn Allocator> = Arc::new(RegionAllocator { _region: self.region.clone() });
+        Tensor::from_external_block(block, nbytes, self.shape.clone(), self.dtype, alloc)
+    }
+
+    /// Copy data from a regular tensor into shared memory.
+    pub fn copy_from(&self, t: &Tensor) {
+        crate::torsk_assert!(t.shape() == self.shape, "shape mismatch");
+        let view = self.tensor();
+        view.copy_(&t.to_cpu().contiguous());
+    }
+
+    /// Spin-lock guarding the region (slot 12).
+    pub fn lock(&self) -> ShmLock<'_> {
+        ShmLock::acquire(self.region.header_u32(12))
+    }
+
+    /// Remove the backing file.
+    pub fn unlink(&self) {
+        self.region.unlink();
+    }
+
+    pub fn path(&self) -> &Path {
+        self.region.path()
+    }
+}
+
+/// Simple cross-process spin lock living in a shared header word.
+pub struct ShmLock<'a> {
+    word: &'a AtomicU32,
+}
+
+impl<'a> ShmLock<'a> {
+    fn acquire(word: &'a AtomicU32) -> ShmLock<'a> {
+        while word.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
+            std::hint::spin_loop();
+        }
+        ShmLock { word }
+    }
+}
+
+impl Drop for ShmLock<'_> {
+    fn drop(&mut self) {
+        self.word.store(0, Ordering::Release);
+    }
+}
+
+/// Sense-reversing barrier in shared memory (slots 13=count, 14=sense).
+pub struct ShmBarrier {
+    region: Arc<SharedRegion>,
+    parties: u32,
+}
+
+impl ShmBarrier {
+    /// Attach a barrier to a shared tensor's region.
+    pub fn on(tensor: &SharedTensor, parties: u32) -> ShmBarrier {
+        ShmBarrier { region: tensor.region.clone(), parties }
+    }
+
+    /// Wait until all parties arrive.
+    pub fn wait(&self) {
+        let count = self.region.header_u32(13);
+        let sense = self.region.header_u32(14);
+        let my_sense = sense.load(Ordering::Acquire);
+        let arrived = count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.parties {
+            count.store(0, Ordering::Release);
+            sense.store(my_sense ^ 1, Ordering::Release);
+        } else {
+            while sense.load(Ordering::Acquire) == my_sense {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// Fork `n` worker processes running `f(rank)`; returns once all exit.
+/// Exit status != 0 in any child is reported as an error.
+///
+/// Note: `fork` without `exec` — children must not rely on threads from
+/// the parent (stream workers, kernel pool) and should stick to compute +
+/// shared memory, like the paper's data-loader workers.
+pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
+    let mut pids = Vec::with_capacity(n);
+    for rank in 0..n {
+        // SAFETY: standard fork/waitpid usage.
+        let pid = unsafe { libc::fork() };
+        if pid < 0 {
+            return Err(TorskError::Multiproc("fork failed".into()));
+        }
+        if pid == 0 {
+            // Child: run and _exit without unwinding into parent state.
+            let code = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(rank))) {
+                Ok(()) => 0,
+                Err(_) => 101,
+            };
+            unsafe { libc::_exit(code) };
+        }
+        pids.push(pid);
+    }
+    let mut failures = 0;
+    for pid in pids {
+        let mut status = 0;
+        unsafe { libc::waitpid(pid, &mut status, 0) };
+        if !libc::WIFEXITED(status) || libc::WEXITSTATUS(status) != 0 {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        return Err(TorskError::Multiproc(format!("{failures} workers failed")));
+    }
+    Ok(())
+}
+
+/// All-reduce (mean) across ranks: each rank adds its `local` into the
+/// shared accumulator under the lock, waits at the barrier, then reads
+/// back the mean. `scratch` must be a shared tensor of the same shape,
+/// zeroed before the collective.
+pub fn allreduce_mean(
+    local: &Tensor,
+    scratch: &SharedTensor,
+    barrier: &ShmBarrier,
+    parties: u32,
+) -> Tensor {
+    {
+        let _guard = scratch.lock();
+        let acc = scratch.tensor();
+        acc.add_(&local.to_cpu().contiguous());
+    }
+    barrier.wait();
+    let mean = crate::ops::mul_scalar(&scratch.tensor().detach(), 1.0 / parties as f32);
+    barrier.wait(); // don't let a fast rank re-zero while others read
+    mean.contiguous()
+}
+
+/// Serialize-through-pipe baseline for the §5.4 bench: what transport
+/// costs *without* shared memory (the `multiprocessing` default the paper
+/// calls "inefficient when dealing with large arrays").
+pub fn pipe_roundtrip(t: &Tensor) -> Result<Tensor> {
+    let mut fds = [0i32; 2];
+    // SAFETY: pipe/write/read/fork is standard POSIX.
+    unsafe {
+        if libc::pipe(fds.as_mut_ptr()) != 0 {
+            return Err(TorskError::Multiproc("pipe failed".into()));
+        }
+        let data = t.to_vec::<f32>();
+        let bytes = std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4);
+
+        let pid = libc::fork();
+        if pid < 0 {
+            return Err(TorskError::Multiproc("fork failed".into()));
+        }
+        if pid == 0 {
+            // Child: "serialize" (copy) the tensor into the pipe.
+            libc::close(fds[0]);
+            let mut written = 0usize;
+            while written < bytes.len() {
+                let n = libc::write(
+                    fds[1],
+                    bytes[written..].as_ptr() as *const libc::c_void,
+                    bytes.len() - written,
+                );
+                if n <= 0 {
+                    libc::_exit(1);
+                }
+                written += n as usize;
+            }
+            libc::close(fds[1]);
+            libc::_exit(0);
+        }
+        libc::close(fds[1]);
+        let mut buf = vec![0u8; bytes.len()];
+        let mut read = 0usize;
+        while read < buf.len() {
+            let n = libc::read(
+                fds[0],
+                buf[read..].as_mut_ptr() as *mut libc::c_void,
+                buf.len() - read,
+            );
+            if n <= 0 {
+                break;
+            }
+            read += n as usize;
+        }
+        libc::close(fds[0]);
+        let mut status = 0;
+        libc::waitpid(pid, &mut status, 0);
+        if read != buf.len() {
+            return Err(TorskError::Multiproc("short pipe read".into()));
+        }
+        let floats = std::slice::from_raw_parts(buf.as_ptr() as *const f32, data.len()).to_vec();
+        Ok(Tensor::from_vec(floats, t.shape()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = PathBuf::from("/dev/shm");
+        let dir = if dir.exists() { dir } else { std::env::temp_dir() };
+        dir.join(format!("torsk_test_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn shared_tensor_roundtrip_same_process() {
+        let path = tmp("roundtrip");
+        let st = SharedTensor::create(&path, &[2, 3], DType::F32).unwrap();
+        let src = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        st.copy_from(&src);
+        let view = st.tensor();
+        assert_eq!(view.to_vec::<f32>(), src.to_vec::<f32>());
+        // Re-open by path like another process would.
+        let st2 = SharedTensor::open(&path).unwrap();
+        assert_eq!(st2.shape, vec![2, 3]);
+        assert_eq!(st2.tensor().to_vec::<f32>(), src.to_vec::<f32>());
+        st.unlink();
+    }
+
+    #[test]
+    fn shared_view_is_zero_copy() {
+        let path = tmp("zerocopy");
+        let st = SharedTensor::create(&path, &[4], DType::F32).unwrap();
+        let a = st.tensor();
+        let b = st.tensor();
+        a.fill_(7.0);
+        assert_eq!(b.to_vec::<f32>(), vec![7.0; 4]);
+        st.unlink();
+    }
+
+    #[test]
+    fn fork_workers_write_disjoint_ranks() {
+        let path = tmp("ranks");
+        let st = SharedTensor::create(&path, &[4], DType::F32).unwrap();
+        let p = path.clone();
+        fork_workers(4, move |rank| {
+            let st = SharedTensor::open(&p).unwrap();
+            let view = st.tensor();
+            // Write rank+1 at slot `rank` via narrow view.
+            let slot = view.narrow(0, rank, 1);
+            crate::ops::copy_into_view_public(&slot, &Tensor::from_slice(&[(rank + 1) as f32]));
+        })
+        .unwrap();
+        assert_eq!(st.tensor().to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+        st.unlink();
+    }
+
+    #[test]
+    fn fork_worker_failure_is_reported() {
+        let r = fork_workers(2, |rank| {
+            if rank == 1 {
+                panic!("worker bug");
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn allreduce_mean_across_processes() {
+        let path = tmp("allreduce");
+        let scratch = SharedTensor::create(&path, &[3], DType::F32).unwrap();
+        let out_path = tmp("allreduce_out");
+        let out = SharedTensor::create(&out_path, &[4, 3], DType::F32).unwrap();
+        let (p1, p2) = (path.clone(), out_path.clone());
+        fork_workers(4, move |rank| {
+            let scratch = SharedTensor::open(&p1).unwrap();
+            let outs = SharedTensor::open(&p2).unwrap();
+            let barrier = ShmBarrier::on(&scratch, 4);
+            let local = Tensor::full(&[3], (rank + 1) as f32);
+            let mean = allreduce_mean(&local, &scratch, &barrier, 4);
+            let row = outs.tensor().narrow(0, rank, 1).reshape(&[3]);
+            crate::ops::copy_into_view_public(&row, &mean);
+        })
+        .unwrap();
+        // mean of 1,2,3,4 = 2.5 for every rank.
+        assert_eq!(out.tensor().to_vec::<f32>(), vec![2.5; 12]);
+        scratch.unlink();
+        out.unlink();
+    }
+
+    #[test]
+    fn pipe_roundtrip_preserves_data() {
+        let t = Tensor::from_vec((0..1000).map(|i| i as f32).collect(), &[1000]);
+        let back = pipe_roundtrip(&t).unwrap();
+        assert_eq!(back.to_vec::<f32>(), t.to_vec::<f32>());
+    }
+
+    #[test]
+    fn shm_lock_mutual_exclusion_threads() {
+        let path = tmp("lock");
+        let st = Arc::new(SharedTensor::create(&path, &[1], DType::F32).unwrap());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let st = st.clone();
+                s.spawn(move || {
+                    for _ in 0..250 {
+                        let _g = st.lock();
+                        let t = st.tensor();
+                        let v = t.to_vec::<f32>()[0];
+                        t.fill_(v + 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(st.tensor().to_vec::<f32>(), vec![1000.0]);
+        st.unlink();
+    }
+}

@@ -1,0 +1,148 @@
+//! Convolution and pooling modules.
+
+use super::{init, Module};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// 2-D convolution layer (NCHW).
+pub struct Conv2d {
+    pub weight: Tensor,
+    pub bias: Option<Tensor>,
+    pub stride: usize,
+    pub padding: usize,
+    pub groups: usize,
+}
+
+impl Conv2d {
+    pub fn new(in_ch: usize, out_ch: usize, kernel: usize, stride: usize, padding: usize) -> Conv2d {
+        Conv2d::with_groups(in_ch, out_ch, kernel, stride, padding, 1, true)
+    }
+
+    /// Full constructor (groups=in_ch gives depthwise conv).
+    pub fn with_groups(
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+        bias: bool,
+    ) -> Conv2d {
+        let weight =
+            init::kaiming_uniform(&[out_ch, in_ch / groups, kernel, kernel]).requires_grad(true);
+        let bias = if bias {
+            Some(init::linear_bias(in_ch / groups * kernel * kernel, out_ch).requires_grad(true))
+        } else {
+            None
+        };
+        Conv2d { weight, bias, stride, padding, groups }
+    }
+}
+
+impl Module for Conv2d {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::conv2d(input, &self.weight, self.bias.as_ref(), self.stride, self.padding, self.groups)
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        let mut p = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            p.push(b.clone());
+        }
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv2d"
+    }
+}
+
+/// Max-pooling module.
+pub struct MaxPool2d {
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(kernel: usize, stride: usize) -> MaxPool2d {
+        MaxPool2d { kernel, stride, padding: 0 }
+    }
+}
+
+impl Module for MaxPool2d {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::maxpool2d(input, self.kernel, self.stride, self.padding)
+    }
+    fn name(&self) -> &'static str {
+        "MaxPool2d"
+    }
+}
+
+/// Average-pooling module.
+pub struct AvgPool2d {
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+impl AvgPool2d {
+    pub fn new(kernel: usize, stride: usize) -> AvgPool2d {
+        AvgPool2d { kernel, stride }
+    }
+}
+
+impl Module for AvgPool2d {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::avgpool2d(input, self.kernel, self.stride, 0)
+    }
+    fn name(&self) -> &'static str {
+        "AvgPool2d"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_module_shape() {
+        crate::rng::manual_seed(0);
+        let c = Conv2d::new(3, 8, 3, 1, 1);
+        let y = c.forward(&Tensor::randn(&[2, 3, 16, 16]));
+        assert_eq!(y.shape(), &[2, 8, 16, 16]);
+        assert_eq!(c.parameters().len(), 2);
+    }
+
+    #[test]
+    fn conv_stride_downsamples() {
+        crate::rng::manual_seed(0);
+        let c = Conv2d::new(1, 4, 3, 2, 1);
+        let y = c.forward(&Tensor::randn(&[1, 1, 8, 8]));
+        assert_eq!(y.shape(), &[1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn depthwise_conv_module() {
+        crate::rng::manual_seed(0);
+        let c = Conv2d::with_groups(8, 8, 3, 1, 1, 8, false);
+        let y = c.forward(&Tensor::randn(&[1, 8, 6, 6]));
+        assert_eq!(y.shape(), &[1, 8, 6, 6]);
+        assert_eq!(c.parameters().len(), 1);
+    }
+
+    #[test]
+    fn pool_modules() {
+        let x = Tensor::randn(&[1, 2, 8, 8]);
+        assert_eq!(MaxPool2d::new(2, 2).forward(&x).shape(), &[1, 2, 4, 4]);
+        assert_eq!(AvgPool2d::new(2, 2).forward(&x).shape(), &[1, 2, 4, 4]);
+    }
+
+    #[test]
+    fn conv_backward_through_module() {
+        crate::rng::manual_seed(0);
+        let c = Conv2d::new(2, 4, 3, 1, 1);
+        c.forward(&Tensor::randn(&[1, 2, 5, 5])).sum().backward();
+        assert!(c.weight.grad().is_some());
+        assert!(c.bias.as_ref().unwrap().grad().is_some());
+    }
+}

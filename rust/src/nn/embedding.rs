@@ -1,0 +1,66 @@
+//! Embedding table module.
+
+use super::{init, Module};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// Lookup table `[vocab, dim]` indexed by i64 tensors.
+pub struct Embedding {
+    pub weight: Tensor,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, dim: usize) -> Embedding {
+        Embedding { weight: init::normal(&[vocab, dim], 0.0, 1.0).requires_grad(true) }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.weight.size(0)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.weight.size(1)
+    }
+}
+
+impl Module for Embedding {
+    fn forward(&self, indices: &Tensor) -> Tensor {
+        ops::embedding(&self.weight, indices)
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        vec![self.weight.clone()]
+    }
+
+    fn name(&self) -> &'static str {
+        "Embedding"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_module_lookup() {
+        crate::rng::manual_seed(0);
+        let e = Embedding::new(10, 4);
+        let idx = Tensor::from_vec(vec![1i64, 3, 1], &[3]);
+        let y = e.forward(&idx);
+        assert_eq!(y.shape(), &[3, 4]);
+        let v = y.to_vec::<f32>();
+        assert_eq!(&v[0..4], &v[8..12], "same index same row");
+    }
+
+    #[test]
+    fn embedding_grad_sparse_accumulation() {
+        crate::rng::manual_seed(0);
+        let e = Embedding::new(5, 2);
+        let idx = Tensor::from_vec(vec![0i64, 0, 4], &[3]);
+        e.forward(&idx).sum().backward();
+        let g = e.weight.grad().unwrap().to_vec::<f32>();
+        assert_eq!(&g[0..2], &[2.0, 2.0]);
+        assert_eq!(&g[8..10], &[1.0, 1.0]);
+        assert_eq!(&g[2..8], &[0.0; 6]);
+    }
+}

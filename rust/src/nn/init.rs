@@ -1,0 +1,86 @@
+//! Parameter initialization schemes (Kaiming/He, Xavier/Glorot, uniform).
+
+use crate::rng;
+use crate::tensor::Tensor;
+
+/// Kaiming-uniform initialization for a weight of shape
+/// `[fan_out, fan_in, ...]` (ReLU gain), PyTorch's Linear/Conv default.
+pub fn kaiming_uniform(shape: &[usize]) -> Tensor {
+    let fan_in: usize = shape[1..].iter().product::<usize>().max(1);
+    let gain = (2.0f32).sqrt();
+    let bound = gain * (3.0 / fan_in as f32).sqrt();
+    uniform(shape, -bound, bound)
+}
+
+/// Xavier/Glorot-uniform initialization.
+pub fn xavier_uniform(shape: &[usize]) -> Tensor {
+    let fan_in: usize = shape[1..].iter().product::<usize>().max(1);
+    let fan_out = shape[0];
+    let bound = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    uniform(shape, -bound, bound)
+}
+
+/// Uniform initialization in [lo, hi).
+pub fn uniform(shape: &[usize], lo: f32, hi: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng::with_rng(|r| r.fill_uniform(&mut data, lo, hi));
+    Tensor::from_vec(data, shape)
+}
+
+/// Normal initialization.
+pub fn normal(shape: &[usize], mean: f32, std: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng::with_rng(|r| r.fill_normal(&mut data, mean, std));
+    Tensor::from_vec(data, shape)
+}
+
+/// Bias bound matching PyTorch's Linear default: U(-1/sqrt(fan_in), ...).
+pub fn linear_bias(fan_in: usize, len: usize) -> Tensor {
+    let bound = 1.0 / (fan_in as f32).sqrt();
+    uniform(&[len], -bound, bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kaiming_bound_respected() {
+        rng::manual_seed(1);
+        let w = kaiming_uniform(&[64, 128]);
+        let bound = (2.0f32).sqrt() * (3.0f32 / 128.0).sqrt();
+        for v in w.to_vec::<f32>() {
+            assert!(v.abs() <= bound + 1e-6);
+        }
+    }
+
+    #[test]
+    fn kaiming_variance_close_to_theory() {
+        rng::manual_seed(2);
+        let w = kaiming_uniform(&[256, 256]);
+        let v = w.to_vec::<f32>();
+        let var: f32 = v.iter().map(|x| x * x).sum::<f32>() / v.len() as f32;
+        // Var of U(-b, b) = b^2/3 = 2/fan_in.
+        let expect = 2.0 / 256.0;
+        assert!((var - expect).abs() / expect < 0.1, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn xavier_bound() {
+        rng::manual_seed(3);
+        let w = xavier_uniform(&[32, 64]);
+        let bound = (6.0 / 96.0f32).sqrt();
+        assert!(w.to_vec::<f32>().iter().all(|v| v.abs() <= bound + 1e-6));
+    }
+
+    #[test]
+    fn normal_moments() {
+        rng::manual_seed(4);
+        let w = normal(&[10_000], 1.0, 0.5);
+        let v = w.to_vec::<f32>();
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!((mean - 1.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,117 @@
+//! Fully-connected layer — Listing 1's `LinearLayer`, as a library module.
+
+use super::{init, Module};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// `y = x @ Wᵀ + b` with `W [out, in]`.
+pub struct Linear {
+    pub weight: Tensor,
+    pub bias: Option<Tensor>,
+}
+
+impl Linear {
+    /// New layer with Kaiming-uniform weights and PyTorch-default bias.
+    pub fn new(in_features: usize, out_features: usize) -> Linear {
+        Linear {
+            weight: init::kaiming_uniform(&[out_features, in_features]).requires_grad(true),
+            bias: Some(init::linear_bias(in_features, out_features).requires_grad(true)),
+        }
+    }
+
+    /// Without bias.
+    pub fn new_no_bias(in_features: usize, out_features: usize) -> Linear {
+        Linear {
+            weight: init::kaiming_uniform(&[out_features, in_features]).requires_grad(true),
+            bias: None,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.weight.size(1)
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.weight.size(0)
+    }
+}
+
+impl Module for Linear {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        // Accept [N, in] or [..., in] by flattening leading dims.
+        if input.ndim() == 2 {
+            ops::linear(input, &self.weight, self.bias.as_ref())
+        } else {
+            let in_f = self.in_features();
+            let lead: Vec<usize> = input.shape()[..input.ndim() - 1].to_vec();
+            let x2 = input.reshape(&[usize::MAX, in_f]);
+            let y = ops::linear(&x2, &self.weight, self.bias.as_ref());
+            let mut out_shape = lead;
+            out_shape.push(self.out_features());
+            y.reshape(&out_shape)
+        }
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        let mut p = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            p.push(b.clone());
+        }
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "Linear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape() {
+        crate::rng::manual_seed(0);
+        let l = Linear::new(3, 5);
+        let y = l.forward(&Tensor::randn(&[7, 3]));
+        assert_eq!(y.shape(), &[7, 5]);
+    }
+
+    #[test]
+    fn forward_3d_input() {
+        crate::rng::manual_seed(0);
+        let l = Linear::new(4, 2);
+        let y = l.forward(&Tensor::randn(&[2, 3, 4]));
+        assert_eq!(y.shape(), &[2, 3, 2]);
+    }
+
+    #[test]
+    fn no_bias_has_one_param() {
+        crate::rng::manual_seed(0);
+        let l = Linear::new_no_bias(3, 3);
+        assert_eq!(l.parameters().len(), 1);
+    }
+
+    #[test]
+    fn gradients_reach_parameters() {
+        crate::rng::manual_seed(0);
+        let l = Linear::new(3, 2);
+        l.forward(&Tensor::randn(&[4, 3])).sum().backward();
+        assert_eq!(l.weight.grad().unwrap().shape(), &[2, 3]);
+        assert_eq!(l.bias.as_ref().unwrap().grad().unwrap().to_vec::<f32>(), vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn listing1_custom_layer_equivalent() {
+        // The paper's Listing 1 LinearLayer: t = x @ w ; t + b — written
+        // directly with ops, no Module required ("models are just programs").
+        crate::rng::manual_seed(1);
+        let w = Tensor::randn(&[3, 2]).requires_grad(true);
+        let b = Tensor::randn(&[2]).requires_grad(true);
+        let x = Tensor::randn(&[5, 3]);
+        let y = ops::add(&ops::matmul(&x, &w), &b);
+        assert_eq!(y.shape(), &[5, 2]);
+        y.sum().backward();
+        assert!(w.grad().is_some() && b.grad().is_some());
+    }
+}

@@ -1,0 +1,236 @@
+//! Neural-network modules — "layers … are typically expressed as Python
+//! classes whose constructors create and initialize their parameters, and
+//! whose forward methods process an input activation" (§4.1). In torsk a
+//! layer is a Rust struct implementing [`Module`]; nothing forces users to
+//! structure code this way (any function over tensors differentiates).
+
+pub mod conv;
+pub mod embedding;
+pub mod init;
+pub mod linear;
+pub mod norm;
+pub mod rnn;
+
+pub use conv::{AvgPool2d, Conv2d, MaxPool2d};
+pub use embedding::Embedding;
+pub use linear::Linear;
+pub use norm::{BatchNorm2d, Dropout, LayerNorm};
+pub use rnn::{LSTMCell, LSTM};
+
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// A composable neural-network component: parameters + a forward function.
+pub trait Module: Send {
+    /// Apply the module.
+    fn forward(&self, input: &Tensor) -> Tensor;
+
+    /// All learnable parameters (leaves with `requires_grad`).
+    fn parameters(&self) -> Vec<Tensor> {
+        vec![]
+    }
+
+    /// Non-learnable state (running stats) that should follow the module
+    /// across devices / into checkpoints.
+    fn buffers(&self) -> Vec<Tensor> {
+        vec![]
+    }
+
+    /// Toggle training/eval behaviour (dropout, batch-norm).
+    fn set_training(&mut self, _training: bool) {}
+
+    /// Short type name for printing.
+    fn name(&self) -> &'static str {
+        "Module"
+    }
+}
+
+/// Helpers available on every module.
+pub trait ModuleExt: Module {
+    /// Total parameter count.
+    fn num_parameters(&self) -> usize {
+        self.parameters().iter().map(|p| p.numel()).sum()
+    }
+
+    /// Zero all parameter gradients.
+    fn zero_grad(&self) {
+        for p in self.parameters() {
+            p.set_grad(None);
+        }
+    }
+}
+
+impl<M: Module + ?Sized> ModuleExt for M {}
+
+/// A linear chain of modules (`nn.Sequential`).
+pub struct Sequential {
+    mods: Vec<Box<dyn Module>>,
+}
+
+impl Sequential {
+    pub fn new() -> Sequential {
+        Sequential { mods: Vec::new() }
+    }
+
+    /// Builder-style append.
+    pub fn add(mut self, m: impl Module + 'static) -> Sequential {
+        self.mods.push(Box::new(m));
+        self
+    }
+
+    /// Append a boxed module.
+    pub fn push(&mut self, m: Box<dyn Module>) {
+        self.mods.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.mods.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mods.is_empty()
+    }
+}
+
+impl Default for Sequential {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Module for Sequential {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        let mut x = input.clone();
+        for m in &self.mods {
+            x = m.forward(&x);
+        }
+        x
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        self.mods.iter().flat_map(|m| m.parameters()).collect()
+    }
+
+    fn buffers(&self) -> Vec<Tensor> {
+        self.mods.iter().flat_map(|m| m.buffers()).collect()
+    }
+
+    fn set_training(&mut self, training: bool) {
+        for m in &mut self.mods {
+            m.set_training(training);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Sequential"
+    }
+}
+
+/// ReLU as a module (for Sequential chains).
+pub struct ReLU;
+impl Module for ReLU {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::relu(input)
+    }
+    fn name(&self) -> &'static str {
+        "ReLU"
+    }
+}
+
+/// Sigmoid as a module.
+pub struct Sigmoid;
+impl Module for Sigmoid {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::sigmoid(input)
+    }
+    fn name(&self) -> &'static str {
+        "Sigmoid"
+    }
+}
+
+/// Tanh as a module.
+pub struct Tanh;
+impl Module for Tanh {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::tanh(input)
+    }
+    fn name(&self) -> &'static str {
+        "Tanh"
+    }
+}
+
+/// Flatten all dims after the batch dim.
+pub struct Flatten;
+impl Module for Flatten {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        let n = input.size(0);
+        input.reshape(&[n, usize::MAX])
+    }
+    fn name(&self) -> &'static str {
+        "Flatten"
+    }
+}
+
+/// Global average pooling NCHW -> NC as a module.
+pub struct GlobalAvgPool;
+impl Module for GlobalAvgPool {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::global_avgpool2d(input)
+    }
+    fn name(&self) -> &'static str {
+        "GlobalAvgPool"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_chains_modules() {
+        crate::rng::manual_seed(0);
+        let model = Sequential::new()
+            .add(Linear::new(4, 8))
+            .add(ReLU)
+            .add(Linear::new(8, 2));
+        let x = Tensor::randn(&[3, 4]);
+        let y = model.forward(&x);
+        assert_eq!(y.shape(), &[3, 2]);
+        assert_eq!(model.parameters().len(), 4); // 2x (weight, bias)
+    }
+
+    #[test]
+    fn zero_grad_clears() {
+        crate::rng::manual_seed(0);
+        let model = Sequential::new().add(Linear::new(2, 2));
+        let x = Tensor::randn(&[1, 2]);
+        model.forward(&x).sum().backward();
+        assert!(model.parameters()[0].grad().is_some());
+        model.zero_grad();
+        assert!(model.parameters()[0].grad().is_none());
+    }
+
+    #[test]
+    fn flatten_module() {
+        let x = Tensor::ones(&[2, 3, 4]);
+        let y = Flatten.forward(&x);
+        assert_eq!(y.shape(), &[2, 12]);
+    }
+
+    #[test]
+    fn num_parameters_counts_elements() {
+        crate::rng::manual_seed(0);
+        let l = Linear::new(3, 5);
+        assert_eq!(l.num_parameters(), 3 * 5 + 5);
+    }
+
+    #[test]
+    fn set_training_propagates() {
+        let mut model = Sequential::new().add(Dropout::new(0.5)).add(ReLU);
+        model.set_training(false);
+        let x = Tensor::ones(&[64]);
+        // In eval mode dropout is identity.
+        let y = model.forward(&x);
+        assert_eq!(y.to_vec::<f32>(), vec![1.0; 64]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Normalization & regularization modules: BatchNorm2d, LayerNorm, Dropout.
+
+use super::Module;
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// 2-D batch normalization with learnable affine + running statistics.
+pub struct BatchNorm2d {
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    pub running_mean: Tensor,
+    pub running_var: Tensor,
+    pub momentum: f32,
+    pub eps: f32,
+    training: bool,
+}
+
+impl BatchNorm2d {
+    pub fn new(channels: usize) -> BatchNorm2d {
+        BatchNorm2d {
+            gamma: Tensor::ones(&[channels]).requires_grad(true),
+            beta: Tensor::zeros(&[channels]).requires_grad(true),
+            running_mean: Tensor::zeros(&[channels]),
+            running_var: Tensor::ones(&[channels]),
+            momentum: 0.1,
+            eps: 1e-5,
+            training: true,
+        }
+    }
+}
+
+impl Module for BatchNorm2d {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::batch_norm2d(
+            input,
+            &self.gamma,
+            &self.beta,
+            &self.running_mean,
+            &self.running_var,
+            self.training,
+            self.momentum,
+            self.eps,
+        )
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+
+    fn buffers(&self) -> Vec<Tensor> {
+        vec![self.running_mean.clone(), self.running_var.clone()]
+    }
+
+    fn set_training(&mut self, training: bool) {
+        self.training = training;
+    }
+
+    fn name(&self) -> &'static str {
+        "BatchNorm2d"
+    }
+}
+
+/// Layer normalization over the last dimension.
+pub struct LayerNorm {
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    pub eps: f32,
+}
+
+impl LayerNorm {
+    pub fn new(dim: usize) -> LayerNorm {
+        LayerNorm {
+            gamma: Tensor::ones(&[dim]).requires_grad(true),
+            beta: Tensor::zeros(&[dim]).requires_grad(true),
+            eps: 1e-5,
+        }
+    }
+}
+
+impl Module for LayerNorm {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::layer_norm(input, &self.gamma, &self.beta, self.eps)
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+
+    fn name(&self) -> &'static str {
+        "LayerNorm"
+    }
+}
+
+/// Inverted dropout.
+pub struct Dropout {
+    pub p: f32,
+    training: bool,
+}
+
+impl Dropout {
+    pub fn new(p: f32) -> Dropout {
+        Dropout { p, training: true }
+    }
+}
+
+impl Module for Dropout {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::dropout(input, self.p, self.training)
+    }
+
+    fn set_training(&mut self, training: bool) {
+        self.training = training;
+    }
+
+    fn name(&self) -> &'static str {
+        "Dropout"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batchnorm_module_roundtrip() {
+        crate::rng::manual_seed(0);
+        let mut bn = BatchNorm2d::new(3);
+        let x = Tensor::randn(&[4, 3, 5, 5]);
+        let y = bn.forward(&x);
+        assert_eq!(y.shape(), x.shape());
+        assert_eq!(bn.parameters().len(), 2);
+        assert_eq!(bn.buffers().len(), 2);
+        // Eval mode must not change running stats.
+        bn.set_training(false);
+        let rm_before = bn.running_mean.to_vec::<f32>();
+        bn.forward(&x);
+        assert_eq!(bn.running_mean.to_vec::<f32>(), rm_before);
+    }
+
+    #[test]
+    fn layernorm_module() {
+        crate::rng::manual_seed(0);
+        let ln = LayerNorm::new(8);
+        let y = ln.forward(&Tensor::randn(&[3, 8]));
+        assert_eq!(y.shape(), &[3, 8]);
+    }
+
+    #[test]
+    fn dropout_module_training_toggle() {
+        crate::rng::manual_seed(0);
+        let mut d = Dropout::new(0.9);
+        let x = Tensor::ones(&[1000]);
+        let y_train = d.forward(&x);
+        let zeros = y_train.to_vec::<f32>().iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 800);
+        d.set_training(false);
+        let y_eval = d.forward(&x);
+        assert_eq!(y_eval.to_vec::<f32>(), vec![1.0; 1000]);
+    }
+}

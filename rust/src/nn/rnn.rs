@@ -1,0 +1,181 @@
+//! Recurrent layers: LSTM cell and multi-step LSTM — the control-flow-heavy
+//! models the paper's define-by-run design exists for (§4.1: "numerical
+//! programs often composed of many loops and recursive functions"). The
+//! time loop is a plain Rust `for`; autograd unrolls through it naturally.
+
+use super::{init, Module};
+use crate::ops;
+use crate::tensor::Tensor;
+
+/// One LSTM step: gates = x @ Wihᵀ + h @ Whhᵀ + b; standard i,f,g,o split.
+pub struct LSTMCell {
+    pub w_ih: Tensor, // [4H, I]
+    pub w_hh: Tensor, // [4H, H]
+    pub b: Tensor,    // [4H]
+    pub hidden: usize,
+}
+
+impl LSTMCell {
+    pub fn new(input: usize, hidden: usize) -> LSTMCell {
+        LSTMCell {
+            w_ih: init::xavier_uniform(&[4 * hidden, input]).requires_grad(true),
+            w_hh: init::xavier_uniform(&[4 * hidden, hidden]).requires_grad(true),
+            b: Tensor::zeros(&[4 * hidden]).requires_grad(true),
+            hidden,
+        }
+    }
+
+    /// `(h, c) -> (h', c')` for a batch `x [N, I]`.
+    pub fn step(&self, x: &Tensor, h: &Tensor, c: &Tensor) -> (Tensor, Tensor) {
+        let gates = ops::add(
+            &ops::linear(x, &self.w_ih, Some(&self.b)),
+            &ops::linear(h, &self.w_hh, None),
+        ); // [N, 4H]
+        let hsz = self.hidden;
+        let i = ops::sigmoid(&gates.narrow(1, 0, hsz));
+        let f = ops::sigmoid(&gates.narrow(1, hsz, hsz));
+        let g = ops::tanh(&gates.narrow(1, 2 * hsz, hsz));
+        let o = ops::sigmoid(&gates.narrow(1, 3 * hsz, hsz));
+        let c_new = ops::add(&ops::mul(&f, c), &ops::mul(&i, &g));
+        let h_new = ops::mul(&o, &ops::tanh(&c_new));
+        (h_new, c_new)
+    }
+
+    pub fn parameters(&self) -> Vec<Tensor> {
+        vec![self.w_ih.clone(), self.w_hh.clone(), self.b.clone()]
+    }
+}
+
+/// Multi-layer LSTM over a sequence `[T, N, I]`, returning all top-layer
+/// hidden states `[T, N, H]` plus the final (h, c) per layer.
+pub struct LSTM {
+    pub cells: Vec<LSTMCell>,
+    pub hidden: usize,
+}
+
+impl LSTM {
+    pub fn new(input: usize, hidden: usize, layers: usize) -> LSTM {
+        let mut cells = Vec::new();
+        for l in 0..layers {
+            cells.push(LSTMCell::new(if l == 0 { input } else { hidden }, hidden));
+        }
+        LSTM { cells, hidden }
+    }
+
+    /// Run the sequence; `init` optionally provides (h0, c0) per layer.
+    pub fn run(
+        &self,
+        xs: &Tensor,
+        init_state: Option<Vec<(Tensor, Tensor)>>,
+    ) -> (Tensor, Vec<(Tensor, Tensor)>) {
+        let (t_len, n) = (xs.size(0), xs.size(1));
+        let mut state: Vec<(Tensor, Tensor)> = init_state.unwrap_or_else(|| {
+            self.cells
+                .iter()
+                .map(|_| {
+                    (
+                        Tensor::zeros(&[n, self.hidden]).to_device(xs.device()),
+                        Tensor::zeros(&[n, self.hidden]).to_device(xs.device()),
+                    )
+                })
+                .collect()
+        });
+        let mut outputs: Vec<Tensor> = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            let mut x = xs.select(0, t); // [N, I]
+            for (l, cell) in self.cells.iter().enumerate() {
+                let (h, c) = cell.step(&x, &state[l].0, &state[l].1);
+                state[l] = (h.clone(), c);
+                x = h;
+            }
+            outputs.push(x);
+        }
+        let refs: Vec<&Tensor> = outputs.iter().collect();
+        (ops::stack(&refs, 0), state)
+    }
+}
+
+impl Module for LSTM {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        self.run(input, None).0
+    }
+
+    fn parameters(&self) -> Vec<Tensor> {
+        self.cells.iter().flat_map(|c| c.parameters()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "LSTM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_step_shapes() {
+        crate::rng::manual_seed(0);
+        let cell = LSTMCell::new(3, 5);
+        let x = Tensor::randn(&[2, 3]);
+        let h = Tensor::zeros(&[2, 5]);
+        let c = Tensor::zeros(&[2, 5]);
+        let (h1, c1) = cell.step(&x, &h, &c);
+        assert_eq!(h1.shape(), &[2, 5]);
+        assert_eq!(c1.shape(), &[2, 5]);
+    }
+
+    #[test]
+    fn lstm_sequence_shapes() {
+        crate::rng::manual_seed(0);
+        let lstm = LSTM::new(4, 6, 2);
+        let xs = Tensor::randn(&[5, 3, 4]); // T=5, N=3
+        let (ys, state) = lstm.run(&xs, None);
+        assert_eq!(ys.shape(), &[5, 3, 6]);
+        assert_eq!(state.len(), 2);
+        assert_eq!(state[0].0.shape(), &[3, 6]);
+    }
+
+    #[test]
+    fn lstm_backward_through_time() {
+        crate::rng::manual_seed(0);
+        let lstm = LSTM::new(2, 3, 1);
+        let xs = Tensor::randn(&[4, 2, 2]);
+        let (ys, _) = lstm.run(&xs, None);
+        ys.sum().backward();
+        for p in lstm.parameters() {
+            let g = p.grad().expect("param has grad");
+            assert!(g.to_vec::<f32>().iter().any(|&v| v != 0.0), "non-trivial grad");
+        }
+    }
+
+    #[test]
+    fn hidden_state_bounded_by_tanh() {
+        crate::rng::manual_seed(0);
+        let lstm = LSTM::new(2, 4, 1);
+        let xs = Tensor::randn(&[8, 2, 2]).mul_scalar(10.0);
+        let (ys, _) = lstm.run(&xs, None);
+        assert!(ys.to_vec::<f32>().iter().all(|&v| v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn forgetful_cell_ignores_history() {
+        // With f-gate bias pushed very negative, c' ≈ i*g regardless of c.
+        crate::rng::manual_seed(0);
+        let cell = LSTMCell::new(1, 1);
+        crate::autograd::no_grad(|| {
+            // b layout: [i, f, g, o]; set f-bias to -100.
+            let b = cell.b.to_vec::<f32>();
+            let mut nb = b;
+            nb[1] = -100.0;
+            cell.b.copy_(&Tensor::from_vec(nb, &[4]));
+        });
+        let x = Tensor::zeros(&[1, 1]);
+        let h = Tensor::zeros(&[1, 1]);
+        let big_c = Tensor::full(&[1, 1], 100.0);
+        let small_c = Tensor::zeros(&[1, 1]);
+        let (_, c1) = cell.step(&x, &h, &big_c);
+        let (_, c2) = cell.step(&x, &h, &small_c);
+        assert!((c1.item() - c2.item()).abs() < 1e-4);
+    }
+}

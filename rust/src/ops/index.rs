@@ -1,0 +1,114 @@
+//! Indexing ops: embedding lookup (gather rows) with scatter-add backward,
+//! and one-hot encoding.
+
+use crate::autograd::{self, ClosureFunction};
+use crate::device;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+/// Embedding lookup: `weight [V, D]` gathered by i64 `indices [..]` ->
+/// `[.., D]`. Backward scatter-adds into the weight gradient.
+pub fn embedding(weight: &Tensor, indices: &Tensor) -> Tensor {
+    torsk_assert!(weight.ndim() == 2, "embedding: weight must be [V, D]");
+    torsk_assert!(indices.dtype() == DType::I64, "embedding: indices must be i64");
+    let (v, d) = (weight.size(0), weight.size(1));
+    let w = weight.contiguous();
+    let idx = indices.contiguous();
+    let n = idx.numel();
+    let mut out_shape = indices.shape().to_vec();
+    out_shape.push(d);
+    let out = Tensor::empty(&out_shape, DType::F32, weight.device());
+    {
+        let (wp, ip, op) = (w.data_ptr(), idx.data_ptr(), out.data_ptr());
+        device::dispatch(weight.device(), "embedding", move || unsafe {
+            let wv = wp.as_slice::<f32>(0, v * d);
+            let iv = ip.as_slice::<i64>(0, n);
+            let ov = op.as_mut_slice::<f32>(0, n * d);
+            for (r, &i) in iv.iter().enumerate() {
+                assert!((0..v as i64).contains(&i), "embedding index {i} out of range 0..{v}");
+                ov[r * d..(r + 1) * d].copy_from_slice(&wv[i as usize * d..(i as usize + 1) * d]);
+            }
+        });
+    }
+    if autograd::should_record(&[weight]) {
+        let idx2 = idx.clone();
+        let dev = weight.device();
+        autograd::record(&[weight], &out, || {
+            ClosureFunction::new("embedding", move |g| {
+                let g = g.contiguous();
+                let gv = g.to_vec::<f32>();
+                let iv = idx2.to_vec::<i64>();
+                let mut gw = vec![0.0f32; v * d];
+                for (r, &i) in iv.iter().enumerate() {
+                    let row = &gv[r * d..(r + 1) * d];
+                    let acc = &mut gw[i as usize * d..(i as usize + 1) * d];
+                    for (a, &x) in acc.iter_mut().zip(row.iter()) {
+                        *a += x;
+                    }
+                }
+                vec![Some(Tensor::from_vec(gw, &[v, d]).to_device(dev))]
+            })
+        });
+    }
+    out
+}
+
+/// One-hot encode i64 `indices [N]` into f32 `[N, classes]`.
+pub fn one_hot(indices: &Tensor, classes: usize) -> Tensor {
+    torsk_assert!(indices.dtype() == DType::I64, "one_hot: indices must be i64");
+    let iv = indices.to_vec::<i64>();
+    let n = iv.len();
+    let mut data = vec![0.0f32; n * classes];
+    for (r, &i) in iv.iter().enumerate() {
+        torsk_assert!((0..classes as i64).contains(&i), "one_hot: index {i} out of range");
+        data[r * classes + i as usize] = 1.0;
+    }
+    let mut shape = indices.shape().to_vec();
+    shape.push(classes);
+    Tensor::from_vec(data, &shape).to_device(indices.device())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_gathers_rows() {
+        let w = Tensor::from_vec((0..6).map(|x| x as f32).collect(), &[3, 2]);
+        let idx = Tensor::from_vec(vec![2i64, 0, 2], &[3]);
+        let e = embedding(&w, &idx);
+        assert_eq!(e.shape(), &[3, 2]);
+        assert_eq!(e.to_vec::<f32>(), vec![4.0, 5.0, 0.0, 1.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn embedding_2d_indices() {
+        let w = Tensor::from_vec((0..8).map(|x| x as f32).collect(), &[4, 2]);
+        let idx = Tensor::from_vec(vec![0i64, 1, 2, 3], &[2, 2]);
+        let e = embedding(&w, &idx);
+        assert_eq!(e.shape(), &[2, 2, 2]);
+    }
+
+    #[test]
+    fn embedding_backward_scatter_adds() {
+        let w = Tensor::zeros(&[3, 2]).requires_grad(true);
+        let idx = Tensor::from_vec(vec![1i64, 1, 0], &[3]);
+        embedding(&w, &idx).sum().backward();
+        let g = w.grad().unwrap().to_vec::<f32>();
+        // Row 1 hit twice, row 0 once, row 2 never.
+        assert_eq!(g, vec![1.0, 1.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn one_hot_basic() {
+        let idx = Tensor::from_vec(vec![0i64, 2], &[2]);
+        let oh = one_hot(&idx, 3);
+        assert_eq!(oh.to_vec::<f32>(), vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn one_hot_out_of_range_panics() {
+        one_hot(&Tensor::from_vec(vec![3i64], &[1]), 3);
+    }
+}

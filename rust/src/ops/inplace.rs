@@ -1,0 +1,206 @@
+//! In-place mutation ops (`add_`, `mul_`, `zero_`, `copy_`, `fill_`).
+//!
+//! Every mutation bumps the storage version (§4.3). Mutating a leaf that
+//! requires grad outside `no_grad` is an error, mirroring PyTorch's
+//! "a leaf Variable that requires grad is being used in an in-place
+//! operation". Optimizers mutate parameters inside `no_grad` (§4.1's
+//! "optimizers are just programs" — they run the same ops).
+
+use crate::autograd;
+use crate::device;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+fn check_inplace_allowed(t: &Tensor, name: &str) {
+    torsk_assert!(
+        !(autograd::grad_enabled() && t.requires_grad_flag() && t.grad_fn().is_none()),
+        "a leaf tensor that requires grad is being used in an in-place \
+         operation ({name}); wrap the update in no_grad()"
+    );
+}
+
+fn inplace_binary(name: &'static str, dst: &Tensor, src: &Tensor, f: fn(f32, f32) -> f32) {
+    check_inplace_allowed(dst, name);
+    torsk_assert!(dst.shape() == src.shape(), "{name}: shape {:?} vs {:?}", dst.shape(), src.shape());
+    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
+    let dev = super::same_device(&[dst, src]);
+    let src = src.contiguous();
+    let n = dst.numel();
+    let (dp, sp) = (dst.data_ptr(), src.data_ptr());
+    device::dispatch(dev, name, move || unsafe {
+        let d = dp.as_mut_slice::<f32>(0, n);
+        let s = sp.as_slice::<f32>(0, n);
+        for i in 0..n {
+            d[i] = f(d[i], s[i]);
+        }
+    });
+    dst.bump_version();
+}
+
+fn inplace_scalar(name: &'static str, dst: &Tensor, s: f32, f: fn(f32, f32) -> f32) {
+    check_inplace_allowed(dst, name);
+    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
+    let n = dst.numel();
+    let dp = dst.data_ptr();
+    device::dispatch(dst.device(), name, move || unsafe {
+        let d = dp.as_mut_slice::<f32>(0, n);
+        for x in d.iter_mut() {
+            *x = f(*x, s);
+        }
+    });
+    dst.bump_version();
+}
+
+impl Tensor {
+    /// `self += other` in place.
+    pub fn add_(&self, other: &Tensor) {
+        inplace_binary("add_", self, other, |a, b| a + b);
+    }
+
+    /// `self -= other` in place.
+    pub fn sub_(&self, other: &Tensor) {
+        inplace_binary("sub_", self, other, |a, b| a - b);
+    }
+
+    /// `self *= other` in place.
+    pub fn mul_(&self, other: &Tensor) {
+        inplace_binary("mul_", self, other, |a, b| a * b);
+    }
+
+    /// `self += alpha * other` in place (the SGD update primitive).
+    pub fn axpy_(&self, alpha: f32, other: &Tensor) {
+        check_inplace_allowed(self, "axpy_");
+        torsk_assert!(self.shape() == other.shape(), "axpy_: shape mismatch");
+        torsk_assert!(self.is_contiguous(), "axpy_: destination must be contiguous");
+        let dev = super::same_device(&[self, other]);
+        let other = other.contiguous();
+        let n = self.numel();
+        let (dp, sp) = (self.data_ptr(), other.data_ptr());
+        device::dispatch(dev, "axpy_", move || unsafe {
+            let d = dp.as_mut_slice::<f32>(0, n);
+            let s = sp.as_slice::<f32>(0, n);
+            for i in 0..n {
+                d[i] += alpha * s[i];
+            }
+        });
+        self.bump_version();
+    }
+
+    /// `self *= s` in place.
+    pub fn mul_scalar_(&self, s: f32) {
+        inplace_scalar("mul_scalar_", self, s, |a, b| a * b);
+    }
+
+    /// `self += s` in place.
+    pub fn add_scalar_(&self, s: f32) {
+        inplace_scalar("add_scalar_", self, s, |a, b| a + b);
+    }
+
+    /// Fill with a constant.
+    pub fn fill_(&self, v: f32) {
+        inplace_scalar("fill_", self, v, |_, b| b);
+    }
+
+    /// Zero in place (`optimizer.zero_grad` style).
+    pub fn zero_(&self) {
+        self.fill_(0.0);
+    }
+
+    /// Copy data from `src` (same shape) in place.
+    pub fn copy_(&self, src: &Tensor) {
+        torsk_assert!(self.dtype() == src.dtype(), "copy_: dtype mismatch");
+        match self.dtype() {
+            DType::F32 => inplace_binary("copy_", self, src, |_, b| b),
+            DType::I64 => {
+                check_inplace_allowed(self, "copy_");
+                torsk_assert!(self.shape() == src.shape(), "copy_: shape mismatch");
+                let src = src.contiguous();
+                let n = self.numel();
+                let (dp, sp) = (self.data_ptr(), src.data_ptr());
+                device::dispatch(self.device(), "copy_", move || unsafe {
+                    let d = dp.as_mut_slice::<i64>(0, n);
+                    let s = sp.as_slice::<i64>(0, n);
+                    d.copy_from_slice(s);
+                });
+                self.bump_version();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::no_grad;
+
+    #[test]
+    fn add_inplace() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        let b = Tensor::from_slice(&[10.0f32, 20.0]);
+        a.add_(&b);
+        assert_eq!(a.to_vec::<f32>(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn inplace_bumps_version() {
+        let a = Tensor::ones(&[2]);
+        let v0 = a.version();
+        a.mul_scalar_(2.0);
+        assert_eq!(a.version(), v0 + 1);
+        a.zero_();
+        assert_eq!(a.version(), v0 + 2);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let p = Tensor::from_slice(&[1.0f32, 1.0]);
+        let g = Tensor::from_slice(&[0.5f32, 1.0]);
+        p.axpy_(-0.1, &g);
+        let v = p.to_vec::<f32>();
+        assert!((v[0] - 0.95).abs() < 1e-6);
+        assert!((v[1] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "in-place")]
+    fn inplace_on_grad_leaf_panics() {
+        let p = Tensor::ones(&[2]).requires_grad(true);
+        p.add_(&Tensor::ones(&[2]));
+    }
+
+    #[test]
+    fn inplace_on_grad_leaf_ok_under_no_grad() {
+        let p = Tensor::ones(&[2]).requires_grad(true);
+        no_grad(|| p.add_(&Tensor::ones(&[2])));
+        assert_eq!(p.to_vec::<f32>(), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn inplace_invalidates_saved_backward() {
+        // The §4.3 end-to-end story: mutate an op input in place between
+        // forward and backward -> backward must error, not silently use
+        // stale data.
+        let a = Tensor::from_slice(&[2.0f32]).requires_grad(true);
+        let b = Tensor::from_slice(&[3.0f32]);
+        let y = crate::ops::mul(&a, &b);
+        b.fill_(100.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| y.backward()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn copy_roundtrip() {
+        let a = Tensor::zeros(&[3]);
+        let b = Tensor::from_slice(&[1.0f32, 2.0, 3.0]);
+        a.copy_(&b);
+        assert_eq!(a.to_vec::<f32>(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn copy_i64() {
+        let a = Tensor::from_vec(vec![0i64; 2], &[2]);
+        let b = Tensor::from_vec(vec![5i64, -9], &[2]);
+        a.copy_(&b);
+        assert_eq!(a.to_vec::<i64>(), vec![5, -9]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Matrix multiplication ops: `matmul`, batched `bmm`, and fused
+//! `linear` (x @ Wᵀ + b, the nn.Linear hot path).
+
+use crate::autograd::{self, ClosureFunction, SavedTensor};
+use crate::device;
+use crate::kernels::matmul::{sgemm, sgemm_batched};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::same_device;
+
+fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
+    let dev = same_device(&[a, b]);
+    torsk_assert!(a.ndim() == 2 && b.ndim() == 2, "matmul: need 2-D, got {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = (a.size(0), a.size(1));
+    let (k2, n) = (b.size(0), b.size(1));
+    torsk_assert!(k == k2, "matmul: inner dims {k} vs {k2}");
+    let a = a.contiguous();
+    let b = b.contiguous();
+    let out = Tensor::empty(&[m, n], DType::F32, dev);
+    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    device::dispatch(dev, "matmul", move || unsafe {
+        sgemm(
+            m,
+            n,
+            k,
+            1.0,
+            ap.as_slice::<f32>(0, m * k),
+            bp.as_slice::<f32>(0, k * n),
+            0.0,
+            op.as_mut_slice::<f32>(0, m * n),
+        );
+    });
+    out
+}
+
+/// 2-D matrix product with autograd.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let out = matmul_raw(a, b);
+    if autograd::should_record(&[a, b]) {
+        let (va, vb) = (SavedTensor::save(a), SavedTensor::save(b));
+        autograd::record(&[a, b], &out, || {
+            ClosureFunction::new("matmul", move |g| {
+                let a = va.unpack();
+                let b = vb.unpack();
+                // dA = G @ Bᵀ ; dB = Aᵀ @ G
+                let ga = matmul_raw(g, &b.t().contiguous());
+                let gb = matmul_raw(&a.t().contiguous(), g);
+                vec![Some(ga), Some(gb)]
+            })
+        });
+    }
+    out
+}
+
+fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
+    let dev = same_device(&[a, b]);
+    torsk_assert!(a.ndim() == 3 && b.ndim() == 3, "bmm: need 3-D");
+    let (batch, m, k) = (a.size(0), a.size(1), a.size(2));
+    let (b2, k2, n) = (b.size(0), b.size(1), b.size(2));
+    torsk_assert!(batch == b2 && k == k2, "bmm: shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    let a = a.contiguous();
+    let b = b.contiguous();
+    let out = Tensor::empty(&[batch, m, n], DType::F32, dev);
+    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    device::dispatch(dev, "bmm", move || unsafe {
+        sgemm_batched(
+            batch,
+            m,
+            n,
+            k,
+            ap.as_slice::<f32>(0, batch * m * k),
+            bp.as_slice::<f32>(0, batch * k * n),
+            op.as_mut_slice::<f32>(0, batch * m * n),
+        );
+    });
+    out
+}
+
+/// Batched matrix product [B,m,k] @ [B,k,n] with autograd.
+pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
+    let out = bmm_raw(a, b);
+    if autograd::should_record(&[a, b]) {
+        let (va, vb) = (SavedTensor::save(a), SavedTensor::save(b));
+        autograd::record(&[a, b], &out, || {
+            ClosureFunction::new("bmm", move |g| {
+                let a = va.unpack();
+                let b = vb.unpack();
+                let bt = b.transpose(1, 2).contiguous();
+                let at = a.transpose(1, 2).contiguous();
+                vec![Some(bmm_raw(g, &bt)), Some(bmm_raw(&at, g))]
+            })
+        });
+    }
+    out
+}
+
+/// Fused linear layer: `x [N,in] @ Wᵀ [in,out] + b`, PyTorch weight layout
+/// `W [out,in]`.
+pub fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
+    torsk_assert!(x.ndim() == 2 && w.ndim() == 2, "linear: x 2-D, w 2-D");
+    torsk_assert!(x.size(1) == w.size(1), "linear: in_features {} vs {}", x.size(1), w.size(1));
+    let wt = w.t().contiguous();
+    let y = matmul_raw(x, &wt);
+    let out = match b {
+        Some(bias) => super::binary_map("add_bias", &y, bias, |p, q| p + q),
+        None => y,
+    };
+    let mut inputs: Vec<&Tensor> = vec![x, w];
+    if let Some(bias) = b {
+        inputs.push(bias);
+    }
+    if autograd::should_record(&inputs) {
+        let (vx, vw) = (SavedTensor::save(x), SavedTensor::save(w));
+        let has_bias = b.is_some();
+        autograd::record(&inputs, &out, || {
+            ClosureFunction::new("linear", move |g| {
+                let x = vx.unpack();
+                let w = vw.unpack();
+                // gx = G @ W ; gw = Gᵀ @ x ; gb = sum rows of G
+                let gx = matmul_raw(g, &w);
+                let gw = matmul_raw(&g.t().contiguous(), &x);
+                let mut grads = vec![Some(gx), Some(gw)];
+                if has_bias {
+                    grads.push(Some(super::sum_dims(g, &[0], false)));
+                }
+                grads
+            })
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::assert_close;
+
+    #[test]
+    fn matmul_values() {
+        let a = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![5.0f32, 6.0, 7.0, 8.0], &[2, 2]);
+        assert_eq!(matmul(&a, &b).to_vec::<f32>(), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::from_vec((1..=6).map(|x| x as f32).collect(), &[2, 3]);
+        let b = Tensor::from_vec((1..=3).map(|x| x as f32).collect(), &[3, 1]);
+        assert_eq!(matmul(&a, &b).to_vec::<f32>(), vec![14.0, 32.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_shape_mismatch_panics() {
+        matmul(&Tensor::ones(&[2, 3]), &Tensor::ones(&[4, 2]));
+    }
+
+    #[test]
+    fn matmul_backward_matches_finite_difference() {
+        crate::rng::manual_seed(1);
+        let a = Tensor::randn(&[3, 4]).requires_grad(true);
+        let b = Tensor::randn(&[4, 2]).requires_grad(true);
+        let g = Tensor::randn(&[3, 2]);
+        matmul(&a, &b).backward_with(g.clone());
+
+        // Finite differences on a couple of entries.
+        let f = |av: &Tensor, bv: &Tensor| -> f32 {
+            crate::autograd::no_grad(|| super::super::mul(&matmul_raw(av, bv), &g).sum().item())
+        };
+        let eps = 1e-2;
+        let ga = a.grad().unwrap().to_vec::<f32>();
+        for idx in [0usize, 5, 11] {
+            let mut ap = a.to_vec::<f32>();
+            ap[idx] += eps;
+            let mut am = a.to_vec::<f32>();
+            am[idx] -= eps;
+            let fd = (f(&Tensor::from_vec(ap, &[3, 4]), &b.detach())
+                - f(&Tensor::from_vec(am, &[3, 4]), &b.detach()))
+                / (2.0 * eps);
+            assert!((ga[idx] - fd).abs() < 1e-2, "idx {idx}: {} vs {}", ga[idx], fd);
+        }
+    }
+
+    #[test]
+    fn bmm_values() {
+        let a = Tensor::from_vec(vec![1.0f32, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 2.0], &[2, 2, 2]);
+        let b = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &[2, 2, 2]);
+        let c = bmm(&a, &b);
+        assert_eq!(c.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0, 10.0, 12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn bmm_backward_shapes() {
+        let a = Tensor::randn(&[2, 3, 4]).requires_grad(true);
+        let b = Tensor::randn(&[2, 4, 5]).requires_grad(true);
+        bmm(&a, &b).sum().backward();
+        assert_eq!(a.grad().unwrap().shape(), &[2, 3, 4]);
+        assert_eq!(b.grad().unwrap().shape(), &[2, 4, 5]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = Tensor::from_vec(vec![1.0f32, 2.0], &[1, 2]);
+        let w = Tensor::from_vec(vec![1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]);
+        let b = Tensor::from_slice(&[0.1f32, 0.2, 0.3]);
+        let y = linear(&x, &w, Some(&b));
+        assert_eq!(y.shape(), &[1, 3]);
+        let v = y.to_vec::<f32>();
+        assert!((v[0] - 1.1).abs() < 1e-6);
+        assert!((v[1] - 2.2).abs() < 1e-6);
+        assert!((v[2] - 3.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_backward_bias_is_row_sum() {
+        let x = Tensor::ones(&[4, 3]);
+        let w = Tensor::zeros(&[2, 3]).requires_grad(true);
+        let b = Tensor::zeros(&[2]).requires_grad(true);
+        linear(&x, &w, Some(&b)).sum().backward();
+        assert_eq!(b.grad().unwrap().to_vec::<f32>(), vec![4.0, 4.0]);
+        assert_eq!(w.grad().unwrap().to_vec::<f32>(), vec![4.0; 6]);
+    }
+
+    #[test]
+    fn linear_agrees_with_matmul_composition() {
+        crate::rng::manual_seed(3);
+        let x = Tensor::randn(&[5, 7]);
+        let w = Tensor::randn(&[4, 7]);
+        let b = Tensor::randn(&[4]);
+        let y1 = linear(&x, &w, Some(&b));
+        let y2 = super::super::add(&matmul(&x, &w.t()), &b);
+        assert_close(&y1, &y2, 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,193 @@
+//! Eager operators over [`Tensor`] with autograd recording.
+//!
+//! Every op follows the paper's execution model (§5.2): the *host* thread
+//! resolves shapes/broadcasting, allocates the output, records the
+//! backward node, and dispatches the kernel — inline for CPU tensors,
+//! queued on the current stream for simulated-device tensors. The op
+//! returns as soon as the kernel is dispatched; data-dependent reads
+//! synchronize.
+//!
+//! Ops are free functions (`ops::add(&a, &b)`) plus ergonomic `Tensor`
+//! methods (`a.add(&b)`), mirroring `torch.add` / `Tensor.add`.
+
+mod binary;
+mod conv;
+mod index;
+mod inplace;
+mod linalg;
+mod loss;
+mod norm;
+mod pool;
+mod reduce;
+mod unary;
+mod views;
+
+pub use binary::*;
+pub use conv::*;
+pub use index::*;
+#[allow(unused_imports)]
+pub use inplace::*;
+pub use linalg::*;
+pub use loss::*;
+pub use norm::*;
+pub use pool::*;
+pub use reduce::*;
+pub use unary::*;
+pub use views::*;
+
+use crate::device::Device;
+use crate::tensor::Tensor;
+use crate::torsk_assert;
+
+/// Check all tensors share a device; return it. Mirrors PyTorch's
+/// "expected all tensors on the same device" error.
+pub(crate) fn same_device(tensors: &[&Tensor]) -> Device {
+    let d = tensors[0].device();
+    for t in tensors.iter().skip(1) {
+        torsk_assert!(
+            t.device() == d,
+            "expected all tensors to be on the same device, found {} and {}",
+            d,
+            t.device()
+        );
+    }
+    d
+}
+
+// ------------------------------------------------------------------
+// Ergonomic Tensor methods (the `x.relu().matmul(&w)` chaining style
+// of Listing 1).
+// ------------------------------------------------------------------
+
+impl Tensor {
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        add(self, other)
+    }
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        sub(self, other)
+    }
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        mul(self, other)
+    }
+    pub fn div(&self, other: &Tensor) -> Tensor {
+        div(self, other)
+    }
+    pub fn add_scalar(&self, s: f32) -> Tensor {
+        add_scalar(self, s)
+    }
+    pub fn mul_scalar(&self, s: f32) -> Tensor {
+        mul_scalar(self, s)
+    }
+    pub fn neg(&self) -> Tensor {
+        neg(self)
+    }
+    pub fn exp(&self) -> Tensor {
+        exp(self)
+    }
+    pub fn log(&self) -> Tensor {
+        log(self)
+    }
+    pub fn sqrt(&self) -> Tensor {
+        sqrt(self)
+    }
+    pub fn relu(&self) -> Tensor {
+        relu(self)
+    }
+    pub fn sigmoid(&self) -> Tensor {
+        sigmoid(self)
+    }
+    pub fn tanh(&self) -> Tensor {
+        tanh(self)
+    }
+    pub fn pow_scalar(&self, p: f32) -> Tensor {
+        pow_scalar(self, p)
+    }
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        matmul(self, other)
+    }
+    pub fn bmm(&self, other: &Tensor) -> Tensor {
+        bmm(self, other)
+    }
+    pub fn sum(&self) -> Tensor {
+        sum(self)
+    }
+    pub fn mean(&self) -> Tensor {
+        mean(self)
+    }
+    pub fn sum_dims(&self, dims: &[usize], keepdim: bool) -> Tensor {
+        sum_dims(self, dims, keepdim)
+    }
+    pub fn mean_dims(&self, dims: &[usize], keepdim: bool) -> Tensor {
+        mean_dims(self, dims, keepdim)
+    }
+    pub fn max_all(&self) -> Tensor {
+        max_all(self)
+    }
+    pub fn argmax_dim(&self, dim: usize) -> Tensor {
+        argmax_dim(self, dim)
+    }
+    pub fn softmax(&self, dim_last: ()) -> Tensor {
+        let _ = dim_last;
+        softmax_last(self)
+    }
+    pub fn log_softmax_last(&self) -> Tensor {
+        log_softmax_last(self)
+    }
+    pub fn cross_entropy(&self, targets: &Tensor) -> Tensor {
+        cross_entropy(self, targets)
+    }
+    pub fn mse_loss(&self, target: &Tensor) -> Tensor {
+        mse_loss(self, target)
+    }
+}
+
+impl std::ops::Add<&Tensor> for &Tensor {
+    type Output = Tensor;
+    fn add(self, rhs: &Tensor) -> Tensor {
+        add(self, rhs)
+    }
+}
+
+impl std::ops::Sub<&Tensor> for &Tensor {
+    type Output = Tensor;
+    fn sub(self, rhs: &Tensor) -> Tensor {
+        sub(self, rhs)
+    }
+}
+
+impl std::ops::Mul<&Tensor> for &Tensor {
+    type Output = Tensor;
+    fn mul(self, rhs: &Tensor) -> Tensor {
+        mul(self, rhs)
+    }
+}
+
+impl std::ops::Neg for &Tensor {
+    type Output = Tensor;
+    fn neg(self) -> Tensor {
+        neg(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operator_overloads() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        let b = Tensor::from_slice(&[10.0f32, 20.0]);
+        assert_eq!((&a + &b).to_vec::<f32>(), vec![11.0, 22.0]);
+        assert_eq!((&b - &a).to_vec::<f32>(), vec![9.0, 18.0]);
+        assert_eq!((&a * &b).to_vec::<f32>(), vec![10.0, 40.0]);
+        assert_eq!((-&a).to_vec::<f32>(), vec![-1.0, -2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "same device")]
+    fn mixed_device_panics() {
+        let a = Tensor::ones(&[2]);
+        let b = Tensor::ones(&[2]).to_sim();
+        add(&a, &b);
+    }
+}

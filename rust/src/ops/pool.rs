@@ -1,0 +1,144 @@
+//! Pooling ops (max / avg / global-avg) with autograd.
+
+use crate::autograd::{self, ClosureFunction};
+use crate::device;
+use crate::kernels::pool::{
+    avgpool2d_backward, avgpool2d_forward, maxpool2d_backward, maxpool2d_forward, Pool2dArgs,
+};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+fn pool_args(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Pool2dArgs {
+    torsk_assert!(input.ndim() == 4, "pool2d: input must be NCHW");
+    Pool2dArgs {
+        batch: input.size(0),
+        channels: input.size(1),
+        h_in: input.size(2),
+        w_in: input.size(3),
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+/// Max pooling over 2-D spatial dims.
+pub fn maxpool2d(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Tensor {
+    let args = pool_args(input, kernel, stride, padding);
+    let input_c = input.contiguous();
+    let dev = input.device();
+    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
+    let indices = Tensor::empty(out.shape(), DType::I64, dev);
+    {
+        let (ip, op, xp) = (input_c.data_ptr(), out.data_ptr(), indices.data_ptr());
+        let (in_len, out_len) = (input_c.numel(), out.numel());
+        device::dispatch(dev, "maxpool2d", move || unsafe {
+            maxpool2d_forward(
+                &args,
+                ip.as_slice::<f32>(0, in_len),
+                op.as_mut_slice::<f32>(0, out_len),
+                xp.as_mut_slice::<i64>(0, out_len),
+            );
+        });
+    }
+    if autograd::should_record(&[input]) {
+        let in_shape = input.shape().to_vec();
+        autograd::record(&[input], &out, || {
+            ClosureFunction::new("maxpool2d", move |g| {
+                let g = g.contiguous();
+                let gv = g.to_vec::<f32>();
+                let iv = indices.to_vec::<i64>();
+                let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
+                maxpool2d_backward(&args, &gv, &iv, &mut gi);
+                vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
+            })
+        });
+    }
+    out
+}
+
+/// Average pooling over 2-D spatial dims.
+pub fn avgpool2d(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Tensor {
+    let args = pool_args(input, kernel, stride, padding);
+    let input_c = input.contiguous();
+    let dev = input.device();
+    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
+    {
+        let (ip, op) = (input_c.data_ptr(), out.data_ptr());
+        let (in_len, out_len) = (input_c.numel(), out.numel());
+        device::dispatch(dev, "avgpool2d", move || unsafe {
+            avgpool2d_forward(&args, ip.as_slice::<f32>(0, in_len), op.as_mut_slice::<f32>(0, out_len));
+        });
+    }
+    if autograd::should_record(&[input]) {
+        let in_shape = input.shape().to_vec();
+        autograd::record(&[input], &out, || {
+            ClosureFunction::new("avgpool2d", move |g| {
+                let g = g.contiguous();
+                let gv = g.to_vec::<f32>();
+                let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
+                avgpool2d_backward(&args, &gv, &mut gi);
+                vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
+            })
+        });
+    }
+    out
+}
+
+/// Global average pooling NCHW -> NC (adaptive_avg_pool2d(1) + flatten).
+pub fn global_avgpool2d(input: &Tensor) -> Tensor {
+    torsk_assert!(input.ndim() == 4, "global_avgpool2d: input must be NCHW");
+    let (n, c) = (input.size(0), input.size(1));
+    let pooled = super::mean_dims(input, &[2, 3], false);
+    pooled.reshape(&[n, c])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_forward_and_backward() {
+        let x = Tensor::from_vec(
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0],
+            &[1, 1, 4, 4],
+        )
+        .requires_grad(true);
+        let y = maxpool2d(&x, 2, 2, 0);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.to_vec::<f32>(), vec![6.0, 8.0, 14.0, 16.0]);
+        y.sum().backward();
+        let g = x.grad().unwrap().to_vec::<f32>();
+        assert_eq!(g.iter().sum::<f32>(), 4.0);
+        assert_eq!(g[5], 1.0);
+        assert_eq!(g[15], 1.0);
+    }
+
+    #[test]
+    fn avgpool_forward_and_backward() {
+        let x = Tensor::ones(&[1, 1, 4, 4]).requires_grad(true);
+        let y = avgpool2d(&x, 2, 2, 0);
+        assert_eq!(y.to_vec::<f32>(), vec![1.0; 4]);
+        y.sum().backward();
+        assert_eq!(x.grad().unwrap().to_vec::<f32>(), vec![0.25; 16]);
+    }
+
+    #[test]
+    fn global_avgpool_shape_and_grad() {
+        let x = Tensor::randn(&[2, 3, 4, 4]).requires_grad(true);
+        let y = global_avgpool2d(&x);
+        assert_eq!(y.shape(), &[2, 3]);
+        y.sum().backward();
+        let g = x.grad().unwrap();
+        assert_eq!(g.shape(), &[2, 3, 4, 4]);
+        let gv = g.to_vec::<f32>();
+        assert!(gv.iter().all(|&v| (v - 1.0 / 16.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn maxpool_stride_one() {
+        let x = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[1, 1, 2, 2]);
+        let y = maxpool2d(&x, 2, 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.item(), 4.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Unary elementwise ops with autograd.
+
+use crate::autograd::{self, ClosureFunction, SavedTensor};
+use crate::device;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+/// Elementwise map (f32), preserving shape; works on strided views via a
+/// contiguous materialization.
+pub(crate) fn unary_map(name: &'static str, a: &Tensor, f: fn(f32) -> f32) -> Tensor {
+    torsk_assert!(a.dtype() == DType::F32, "{name}: f32 only");
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), DType::F32, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || unsafe {
+        let av = ap.as_slice::<f32>(0, n);
+        crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
+            let ov = std::slice::from_raw_parts_mut(op.as_f32_mut(), n);
+            for i in s..e {
+                ov[i] = f(av[i]);
+            }
+        });
+    });
+    out
+}
+
+macro_rules! unary_with_saved_output {
+    ($name:literal, $fn_name:ident, $fwd:expr, $bwd_from_out:expr) => {
+        #[doc = concat!("Elementwise `", $name, "` with autograd.")]
+        pub fn $fn_name(a: &Tensor) -> Tensor {
+            let out = unary_map($name, a, $fwd);
+            if autograd::should_record(&[a]) {
+                let saved_out = SavedTensor::save(&out);
+                autograd::record(&[a], &out, || {
+                    ClosureFunction::new($name, move |g| {
+                        let y = saved_out.unpack();
+                        let dydx = unary_map(concat!($name, "_bwd"), &y, $bwd_from_out);
+                        vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
+                    })
+                });
+            }
+            out
+        }
+    };
+}
+
+macro_rules! unary_with_saved_input {
+    ($name:literal, $fn_name:ident, $fwd:expr, $bwd_from_in:expr) => {
+        #[doc = concat!("Elementwise `", $name, "` with autograd.")]
+        pub fn $fn_name(a: &Tensor) -> Tensor {
+            let out = unary_map($name, a, $fwd);
+            if autograd::should_record(&[a]) {
+                let saved_in = SavedTensor::save(a);
+                autograd::record(&[a], &out, || {
+                    ClosureFunction::new($name, move |g| {
+                        let x = saved_in.unpack();
+                        let dydx = unary_map(concat!($name, "_bwd"), &x, $bwd_from_in);
+                        vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
+                    })
+                });
+            }
+            out
+        }
+    };
+}
+
+// d(exp)/dx = exp(x) = y ; d(sigmoid)/dx = y(1-y) ; d(tanh)/dx = 1-y^2;
+// d(sqrt)/dx = 1/(2y) ; d(relu)/dx = [y > 0].
+unary_with_saved_output!("exp", exp, |x| x.exp(), |y| y);
+unary_with_saved_output!("sigmoid", sigmoid, |x| 1.0 / (1.0 + (-x).exp()), |y| y * (1.0 - y));
+unary_with_saved_output!("tanh", tanh, |x| x.tanh(), |y| 1.0 - y * y);
+unary_with_saved_output!("sqrt", sqrt, |x| x.sqrt(), |y| 0.5 / y);
+unary_with_saved_output!("relu", relu, |x| x.max(0.0), |y| if y > 0.0 { 1.0 } else { 0.0 });
+
+// d(log)/dx = 1/x needs the input.
+unary_with_saved_input!("log", log, |x| x.ln(), |x| 1.0 / x);
+
+/// Negation.
+pub fn neg(a: &Tensor) -> Tensor {
+    let out = unary_map("neg", a, |x| -x);
+    if autograd::should_record(&[a]) {
+        autograd::record(&[a], &out, || {
+            ClosureFunction::new("neg", move |g| vec![Some(neg_nograd(g))])
+        });
+    }
+    out
+}
+
+fn neg_nograd(g: &Tensor) -> Tensor {
+    unary_map("neg", g, |x| -x)
+}
+
+/// Add a scalar.
+pub fn add_scalar(a: &Tensor, s: f32) -> Tensor {
+    // Closure over `s`: build via mul trick — use a dedicated dispatch.
+    let out = scalar_map("add_scalar", a, s, |x, s| x + s);
+    if autograd::should_record(&[a]) {
+        autograd::record(&[a], &out, || {
+            ClosureFunction::new("add_scalar", move |g| vec![Some(g.clone())])
+        });
+    }
+    out
+}
+
+/// Multiply by a scalar.
+pub fn mul_scalar(a: &Tensor, s: f32) -> Tensor {
+    let out = scalar_map("mul_scalar", a, s, |x, s| x * s);
+    if autograd::should_record(&[a]) {
+        autograd::record(&[a], &out, || {
+            ClosureFunction::new("mul_scalar", move |g| {
+                vec![Some(scalar_map("mul_scalar", g, s, |x, s| x * s))]
+            })
+        });
+    }
+    out
+}
+
+/// Elementwise power with scalar exponent.
+pub fn pow_scalar(a: &Tensor, p: f32) -> Tensor {
+    let out = scalar_map("pow", a, p, |x, p| x.powf(p));
+    if autograd::should_record(&[a]) {
+        let saved = SavedTensor::save(a);
+        autograd::record(&[a], &out, || {
+            ClosureFunction::new("pow", move |g| {
+                let x = saved.unpack();
+                let dydx = scalar_map("pow_bwd", &x, p, |x, p| p * x.powf(p - 1.0));
+                vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
+            })
+        });
+    }
+    out
+}
+
+/// Clamp to [lo, hi] (gradient flows where not clamped).
+pub fn clamp(a: &Tensor, lo: f32, hi: f32) -> Tensor {
+    let out = scalar2_map("clamp", a, lo, hi, |x, lo, hi| x.clamp(lo, hi));
+    if autograd::should_record(&[a]) {
+        let saved = SavedTensor::save(a);
+        autograd::record(&[a], &out, || {
+            ClosureFunction::new("clamp", move |g| {
+                let x = saved.unpack();
+                let mask = scalar2_map("clamp_mask", &x, lo, hi, |x, lo, hi| {
+                    if x >= lo && x <= hi {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                });
+                vec![Some(super::binary_map("mul", g, &mask, |x, w| x * w))]
+            })
+        });
+    }
+    out
+}
+
+/// Elementwise map with one scalar parameter.
+pub(crate) fn scalar_map(name: &'static str, a: &Tensor, s: f32, f: fn(f32, f32) -> f32) -> Tensor {
+    torsk_assert!(a.dtype() == DType::F32, "{name}: f32 only");
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), DType::F32, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || unsafe {
+        let av = ap.as_slice::<f32>(0, n);
+        let ov = op.as_mut_slice::<f32>(0, n);
+        for i in 0..n {
+            ov[i] = f(av[i], s);
+        }
+    });
+    out
+}
+
+fn scalar2_map(name: &'static str, a: &Tensor, s1: f32, s2: f32, f: fn(f32, f32, f32) -> f32) -> Tensor {
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), DType::F32, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || unsafe {
+        let av = ap.as_slice::<f32>(0, n);
+        let ov = op.as_mut_slice::<f32>(0, n);
+        for i in 0..n {
+            ov[i] = f(av[i], s1, s2);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_of(f: impl Fn(&Tensor) -> Tensor, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let t = Tensor::from_slice(x).requires_grad(true);
+        let y = f(&t);
+        y.backward_with(Tensor::ones(&[x.len()]));
+        (y.to_vec::<f32>(), t.grad().unwrap().to_vec::<f32>())
+    }
+
+    #[test]
+    fn relu_forward_backward() {
+        let (y, g) = grad_of(|t| relu(t), &[-1.0, 0.0, 2.0]);
+        assert_eq!(y, vec![0.0, 0.0, 2.0]);
+        assert_eq!(g, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn exp_grad_is_output() {
+        let (y, g) = grad_of(|t| exp(t), &[0.0, 1.0]);
+        assert_eq!(y, g);
+        assert!((y[1] - std::f32::consts::E).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_grad_is_reciprocal() {
+        let (_, g) = grad_of(|t| log(t), &[2.0, 4.0]);
+        assert!((g[0] - 0.5).abs() < 1e-6);
+        assert!((g[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_values_and_grad() {
+        let (y, g) = grad_of(|t| sigmoid(t), &[0.0]);
+        assert!((y[0] - 0.5).abs() < 1e-6);
+        assert!((g[0] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tanh_grad() {
+        let (y, g) = grad_of(|t| tanh(t), &[0.5]);
+        assert!((g[0] - (1.0 - y[0] * y[0])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sqrt_grad() {
+        let (_, g) = grad_of(|t| sqrt(t), &[4.0]);
+        assert!((g[0] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pow_scalar_grad() {
+        let (y, g) = grad_of(|t| pow_scalar(t, 3.0), &[2.0]);
+        assert_eq!(y, vec![8.0]);
+        assert!((g[0] - 12.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clamp_masks_grad() {
+        let (y, g) = grad_of(|t| clamp(t, 0.0, 1.0), &[-0.5, 0.5, 1.5]);
+        assert_eq!(y, vec![0.0, 0.5, 1.0]);
+        assert_eq!(g, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn scalar_ops() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        assert_eq!(add_scalar(&a, 0.5).to_vec::<f32>(), vec![1.5, 2.5]);
+        assert_eq!(mul_scalar(&a, -2.0).to_vec::<f32>(), vec![-2.0, -4.0]);
+    }
+
+    #[test]
+    fn mul_scalar_grad_scales() {
+        let (_, g) = grad_of(|t| mul_scalar(t, 3.0), &[1.0, 2.0]);
+        assert_eq!(g, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn chained_unary_composition() {
+        // f(x) = exp(relu(x)); f'(2) = exp(2)
+        let t = Tensor::from_slice(&[2.0f32]).requires_grad(true);
+        let y = exp(&relu(&t));
+        y.backward_with(Tensor::ones(&[1]));
+        let g = t.grad().unwrap().item();
+        assert!((g - 2.0f32.exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn no_graph_recorded_under_no_grad() {
+        let t = Tensor::from_slice(&[1.0f32]).requires_grad(true);
+        let y = crate::autograd::no_grad(|| relu(&t));
+        assert!(y.grad_fn().is_none());
+    }
+}

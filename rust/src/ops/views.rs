@@ -1,0 +1,266 @@
+//! Gradient plumbing for view/layout ops (reshape, transpose, permute,
+//! narrow, device moves) plus concatenation/stacking.
+
+use crate::autograd::{self, ClosureFunction};
+use crate::device::Device;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+/// Backward hookup for shape-preserving-data ops (reshape, squeeze,
+/// contiguous, to_device): gradient reshapes/moves back.
+pub(crate) fn register_view_grad(src: &Tensor, out: &Tensor) {
+    if !autograd::should_record(&[src]) {
+        return;
+    }
+    let src_shape = src.shape().to_vec();
+    let src_dev = src.device();
+    autograd::record(&[src], out, || {
+        ClosureFunction::new("view", move |g| {
+            let g = g.to_device(src_dev);
+            vec![Some(g.reshape(&src_shape))]
+        })
+    });
+}
+
+/// Backward hookup for transpose: transpose the gradient back.
+pub(crate) fn register_transpose_grad(src: &Tensor, out: &Tensor, d0: usize, d1: usize) {
+    if !autograd::should_record(&[src]) {
+        return;
+    }
+    autograd::record(&[src], out, || {
+        ClosureFunction::new("transpose", move |g| {
+            vec![Some(g.transpose(d0, d1).contiguous())]
+        })
+    });
+}
+
+/// Backward hookup for permute: apply the inverse permutation.
+pub(crate) fn register_permute_grad(src: &Tensor, out: &Tensor, perm: &[usize]) {
+    if !autograd::should_record(&[src]) {
+        return;
+    }
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    autograd::record(&[src], out, || {
+        ClosureFunction::new("permute", move |g| {
+            vec![Some(g.permute(&inv).contiguous())]
+        })
+    });
+}
+
+/// Backward hookup for narrow: embed the gradient into zeros.
+pub(crate) fn register_narrow_grad(src: &Tensor, out: &Tensor, dim: usize, start: usize) {
+    if !autograd::should_record(&[src]) {
+        return;
+    }
+    let src_shape = src.shape().to_vec();
+    autograd::record(&[src], out, || {
+        ClosureFunction::new("narrow", move |g| {
+            let full = Tensor::zeros_on(&src_shape, DType::F32, g.device());
+            // Write g into the slice region (raw, in-place on fresh zeros).
+            let dst = full.narrow(dim, start, g.size(dim));
+            copy_into_view(&dst, g);
+            vec![Some(full)]
+        })
+    });
+}
+
+/// Raw strided copy of `src` (contiguous) into a strided `view`. Internal:
+/// used for narrow backward and `cat`.
+pub(crate) fn copy_into_view(view: &Tensor, src: &Tensor) {
+    torsk_assert!(view.shape() == src.shape(), "copy_into_view: shape mismatch");
+    torsk_assert!(view.dtype() == src.dtype(), "copy_into_view: dtype mismatch");
+    let src = src.contiguous();
+    let n = src.numel();
+    if n == 0 {
+        return;
+    }
+    let (sp, vp) = (src.data_ptr(), view.data_ptr());
+    let shape = view.shape().to_vec();
+    let strides = view.strides().to_vec();
+    let dtype = view.dtype();
+    // Keep host sources alive until the (possibly queued) copy runs.
+    let keep = src.detach();
+    crate::device::dispatch(view.device(), "copy_into_view", move || unsafe {
+        match dtype {
+            DType::F32 => {
+                let sv = sp.as_slice::<f32>(0, n);
+                for (i, off) in crate::tensor::shape::StridedIter::new(&shape, &strides).enumerate() {
+                    *vp.as_f32_mut().add(off) = sv[i];
+                }
+            }
+            DType::I64 => {
+                let sv = sp.as_slice::<i64>(0, n);
+                for (i, off) in crate::tensor::shape::StridedIter::new(&shape, &strides).enumerate() {
+                    *(vp.ptr() as *mut i64).add(off) = sv[i];
+                }
+            }
+        }
+        drop(keep);
+    });
+}
+
+/// Backward hookup for expand: sum the gradient back to the source shape.
+pub(crate) fn register_expand_grad(src: &Tensor, out: &Tensor) {
+    if !autograd::should_record(&[src]) {
+        return;
+    }
+    let src_shape = src.shape().to_vec();
+    autograd::record(&[src], out, || {
+        ClosureFunction::new("expand", move |g| {
+            vec![Some(super::sum_to_shape(g, &src_shape))]
+        })
+    });
+}
+
+/// Public wrapper over the internal strided copy (used by multiprocessing
+/// helpers and tests to write into zero-copy views).
+pub fn copy_into_view_public(view: &Tensor, src: &Tensor) {
+    copy_into_view(view, src);
+    view.bump_version();
+}
+
+/// Concatenate tensors along `dim`.
+pub fn cat(tensors: &[&Tensor], dim: usize) -> Tensor {
+    torsk_assert!(!tensors.is_empty(), "cat: empty input list");
+    let first = tensors[0];
+    let dev = super::same_device(tensors);
+    let mut out_shape = first.shape().to_vec();
+    torsk_assert!(dim < out_shape.len(), "cat: dim out of range");
+    let mut total = 0usize;
+    for t in tensors {
+        torsk_assert!(t.ndim() == first.ndim(), "cat: rank mismatch");
+        for d in 0..first.ndim() {
+            if d != dim {
+                torsk_assert!(t.size(d) == first.size(d), "cat: dim {d} mismatch");
+            }
+        }
+        total += t.size(dim);
+    }
+    out_shape[dim] = total;
+    let out = Tensor::empty(&out_shape, first.dtype(), dev);
+    let mut offset = 0usize;
+    let mut sizes = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let view = out.detach().narrow(dim, offset, t.size(dim));
+        copy_into_view(&view, t);
+        sizes.push(t.size(dim));
+        offset += t.size(dim);
+    }
+    if autograd::should_record(tensors) {
+        autograd::record(tensors, &out, || {
+            ClosureFunction::new("cat", move |g| {
+                let mut grads = Vec::with_capacity(sizes.len());
+                let mut off = 0usize;
+                for &s in &sizes {
+                    grads.push(Some(g.narrow(dim, off, s).contiguous()));
+                    off += s;
+                }
+                grads
+            })
+        });
+    }
+    out
+}
+
+/// Stack tensors along a new leading `dim`.
+pub fn stack(tensors: &[&Tensor], dim: usize) -> Tensor {
+    let unsqueezed: Vec<Tensor> = tensors.iter().map(|t| t.unsqueeze(dim)).collect();
+    let refs: Vec<&Tensor> = unsqueezed.iter().collect();
+    cat(&refs, dim)
+}
+
+/// Move a batch of tensors to a device (convenience for data loaders).
+pub fn to_device_all(tensors: &[Tensor], device: Device) -> Vec<Tensor> {
+    tensors.iter().map(|t| t.to_device(device)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cat_dim0() {
+        let a = Tensor::from_vec(vec![1.0f32, 2.0], &[1, 2]);
+        let b = Tensor::from_vec(vec![3.0f32, 4.0, 5.0, 6.0], &[2, 2]);
+        let c = cat(&[&a, &b], 0);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn cat_dim1() {
+        let a = Tensor::from_vec(vec![1.0f32, 2.0], &[2, 1]);
+        let b = Tensor::from_vec(vec![3.0f32, 4.0], &[2, 1]);
+        let c = cat(&[&a, &b], 1);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.to_vec::<f32>(), vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn cat_backward_splits() {
+        let a = Tensor::zeros(&[1, 2]).requires_grad(true);
+        let b = Tensor::zeros(&[2, 2]).requires_grad(true);
+        let c = cat(&[&a, &b], 0);
+        c.backward_with(Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]));
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![1.0, 2.0]);
+        assert_eq!(b.grad().unwrap().to_vec::<f32>(), vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn stack_creates_new_dim() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        let b = Tensor::from_slice(&[3.0f32, 4.0]);
+        let s = stack(&[&a, &b], 0);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reshape_backward_flows() {
+        let a = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]).requires_grad(true);
+        let r = a.reshape(&[4]);
+        r.backward_with(Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0]));
+        assert_eq!(a.grad().unwrap().shape(), &[2, 2]);
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_backward_transposes_back() {
+        let a = Tensor::zeros(&[2, 3]).requires_grad(true);
+        let t = a.t();
+        t.backward_with(Tensor::from_vec((1..=6).map(|x| x as f32).collect(), &[3, 2]));
+        // g = [[1,2],[3,4],[5,6]] transposed back = [[1,3,5],[2,4,6]]
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn narrow_backward_pads_zeros() {
+        let a = Tensor::zeros(&[4]).requires_grad(true);
+        let nrw = a.narrow(0, 1, 2);
+        nrw.backward_with(Tensor::from_slice(&[5.0f32, 7.0]));
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![0.0, 5.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn permute_backward_inverts() {
+        let a = Tensor::zeros(&[2, 3, 4]).requires_grad(true);
+        let p = a.permute(&[2, 0, 1]);
+        p.sum().backward();
+        assert_eq!(a.grad().unwrap().shape(), &[2, 3, 4]);
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![1.0; 24]);
+    }
+
+    #[test]
+    fn to_device_backward_returns_home() {
+        let a = Tensor::ones(&[2]).requires_grad(true);
+        let d = a.to_sim();
+        let y = d.mul_scalar(2.0).sum();
+        y.backward();
+        let g = a.grad().unwrap();
+        assert_eq!(g.device(), Device::Cpu);
+        assert_eq!(g.to_vec::<f32>(), vec![2.0, 2.0]);
+    }
+}

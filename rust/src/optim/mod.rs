@@ -1,0 +1,260 @@
+//! Optimizers — "just Python programs" (§4.1): they read `.grad` and apply
+//! in-place updates under `no_grad`, exactly the loop a user could write.
+
+use crate::autograd::no_grad;
+use crate::tensor::Tensor;
+
+/// The optimizer interface (`torch.optim.Optimizer`).
+pub trait Optimizer {
+    /// Apply one update from the accumulated gradients.
+    fn step(&mut self);
+    /// Clear gradients (`optimizer.zero_grad()`).
+    fn zero_grad(&mut self);
+    /// The parameters being optimized.
+    fn parameters(&self) -> &[Tensor];
+    /// Current learning rate.
+    fn lr(&self) -> f32;
+    /// Set the learning rate (schedulers are user code too).
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// SGD with optional momentum and weight decay.
+pub struct Sgd {
+    params: Vec<Tensor>,
+    pub learning_rate: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<Option<Tensor>>,
+}
+
+impl Sgd {
+    pub fn new(params: Vec<Tensor>, lr: f32) -> Sgd {
+        let n = params.len();
+        Sgd { params, learning_rate: lr, momentum: 0.0, weight_decay: 0.0, velocity: vec![None; n] }
+    }
+
+    pub fn with_momentum(mut self, m: f32) -> Sgd {
+        self.momentum = m;
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Sgd {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self) {
+        no_grad(|| {
+            for (i, p) in self.params.iter().enumerate() {
+                let Some(g) = p.grad() else { continue };
+                let mut g = g;
+                if self.weight_decay != 0.0 {
+                    let wd = crate::ops::mul_scalar(&p.detach(), self.weight_decay);
+                    g = crate::ops::add(&g, &wd);
+                }
+                if self.momentum != 0.0 {
+                    let v = match &self.velocity[i] {
+                        Some(v) => {
+                            v.mul_scalar_(self.momentum);
+                            v.add_(&g);
+                            v.clone()
+                        }
+                        None => {
+                            let v = g.contiguous();
+                            self.velocity[i] = Some(v.clone());
+                            v
+                        }
+                    };
+                    p.axpy_(-self.learning_rate, &v);
+                } else {
+                    p.axpy_(-self.learning_rate, &g);
+                }
+            }
+        });
+    }
+
+    fn zero_grad(&mut self) {
+        for p in &self.params {
+            p.set_grad(None);
+        }
+    }
+
+    fn parameters(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    fn lr(&self) -> f32 {
+        self.learning_rate
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.learning_rate = lr;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    params: Vec<Tensor>,
+    pub learning_rate: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<Option<Tensor>>,
+    v: Vec<Option<Tensor>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(params: Vec<Tensor>, lr: f32) -> Adam {
+        let n = params.len();
+        Adam {
+            params,
+            learning_rate: lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: vec![None; n],
+            v: vec![None; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self) {
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        no_grad(|| {
+            for (i, p) in self.params.iter().enumerate() {
+                let Some(g) = p.grad() else { continue };
+                let mut g = g.contiguous();
+                if self.weight_decay != 0.0 {
+                    g = crate::ops::add(&g, &crate::ops::mul_scalar(&p.detach(), self.weight_decay));
+                }
+                let m = self.m[i].get_or_insert_with(|| Tensor::zeros(g.shape()).to_device(g.device()));
+                let v = self.v[i].get_or_insert_with(|| Tensor::zeros(g.shape()).to_device(g.device()));
+                // m = b1*m + (1-b1)*g
+                m.mul_scalar_(self.beta1);
+                m.axpy_(1.0 - self.beta1, &g);
+                // v = b2*v + (1-b2)*g^2
+                let g2 = crate::ops::mul(&g, &g);
+                v.mul_scalar_(self.beta2);
+                v.axpy_(1.0 - self.beta2, &g2);
+                // p -= lr * (m/bc1) / (sqrt(v/bc2) + eps)
+                let mhat = crate::ops::mul_scalar(m, 1.0 / bc1);
+                let vhat = crate::ops::mul_scalar(v, 1.0 / bc2);
+                let denom = crate::ops::add_scalar(&crate::ops::sqrt(&vhat), self.eps);
+                let update = crate::ops::div(&mhat, &denom);
+                p.axpy_(-self.learning_rate, &update);
+            }
+        });
+    }
+
+    fn zero_grad(&mut self) {
+        for p in &self.params {
+            p.set_grad(None);
+        }
+    }
+
+    fn parameters(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    fn lr(&self) -> f32 {
+        self.learning_rate
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.learning_rate = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    /// Minimize f(w) = (w - 3)^2 and check convergence.
+    fn quadratic_converges(mut opt: impl Optimizer, w: Tensor, steps: usize) -> f32 {
+        for _ in 0..steps {
+            opt.zero_grad();
+            let diff = ops::add_scalar(&w, -3.0);
+            let loss = ops::mul(&diff, &diff).sum();
+            loss.backward();
+            opt.step();
+        }
+        w.to_vec::<f32>()[0]
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let opt = Sgd::new(vec![w.clone()], 0.1);
+        let final_w = quadratic_converges(opt, w, 100);
+        assert!((final_w - 3.0).abs() < 1e-3, "w={final_w}");
+    }
+
+    #[test]
+    fn sgd_momentum_converges_faster_on_illconditioned() {
+        // f(w) = w0^2 + 100*w1^2 style: momentum should reach lower loss
+        // than plain SGD for the same step count and lr.
+        let run = |momentum: f32| -> f32 {
+            let w = Tensor::from_slice(&[5.0f32, 5.0]).requires_grad(true);
+            let scale = Tensor::from_slice(&[1.0f32, 25.0]);
+            let mut opt = Sgd::new(vec![w.clone()], 0.01).with_momentum(momentum);
+            for _ in 0..60 {
+                opt.zero_grad();
+                let loss = ops::mul(&scale, &ops::mul(&w, &w)).sum();
+                loss.backward();
+                opt.step();
+            }
+            ops::mul(&scale, &ops::mul(&w.detach(), &w.detach())).sum().item()
+        };
+        let plain = run(0.0);
+        let mom = run(0.9);
+        assert!(mom < plain, "momentum {mom} vs plain {plain}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let w = Tensor::from_slice(&[1.0f32]).requires_grad(true);
+        let mut opt = Sgd::new(vec![w.clone()], 0.1).with_weight_decay(0.5);
+        // Zero-gradient loss: only decay acts.
+        opt.zero_grad();
+        w.set_grad(Some(Tensor::zeros(&[1])));
+        opt.step();
+        assert!((w.to_vec::<f32>()[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let opt = Adam::new(vec![w.clone()], 0.2);
+        let final_w = quadratic_converges(opt, w, 200);
+        assert!((final_w - 3.0).abs() < 1e-2, "w={final_w}");
+    }
+
+    #[test]
+    fn adam_first_step_magnitude_is_lr() {
+        // Bias correction => first update ≈ lr * sign(g).
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let mut opt = Adam::new(vec![w.clone()], 0.1);
+        w.set_grad(Some(Tensor::from_slice(&[42.0f32])));
+        opt.step();
+        assert!((w.to_vec::<f32>()[0] + 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn step_skips_params_without_grad() {
+        let w = Tensor::from_slice(&[1.0f32]).requires_grad(true);
+        let mut opt = Sgd::new(vec![w.clone()], 0.1);
+        opt.step(); // no grad set
+        assert_eq!(w.to_vec::<f32>(), vec![1.0]);
+    }
+}

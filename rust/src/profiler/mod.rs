@@ -1,0 +1,313 @@
+//! Built-in profiler (§6.1, Figure 1 / Figure 2 instrumentation).
+//!
+//! Records (track, name, start, end) spans on two kinds of tracks: the
+//! host control-flow thread ([`Track::Host`]) and each device stream
+//! ([`Track::Stream`]). The Figure 1 bench renders the two rows of the
+//! paper's timeline from these spans; `to_chrome_trace` exports the same
+//! data for chrome://tracing.
+//!
+//! Disabled (the default) it costs one relaxed atomic load per op.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which timeline row a span belongs to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Track {
+    /// Host control-flow thread: op dispatch, launches, sync waits.
+    Host,
+    /// Device stream `n`: kernel execution.
+    Stream(u32),
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub track: Track,
+    pub name: String,
+    /// Nanoseconds since profiler start.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl TraceEvent {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+struct ProfilerState {
+    events: Mutex<Vec<TraceEvent>>,
+    epoch: Mutex<Instant>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Cap so a forgotten profiler can't eat all memory.
+const MAX_EVENTS: usize = 2_000_000;
+
+static STATE: once_cell::sync::Lazy<ProfilerState> = once_cell::sync::Lazy::new(|| ProfilerState {
+    events: Mutex::new(Vec::new()),
+    epoch: Mutex::new(Instant::now()),
+});
+
+/// An in-flight span returned by [`begin`]; finish it with [`end`].
+pub struct Span {
+    track: Track,
+    name: Option<String>,
+    start_ns: u64,
+}
+
+/// Start profiling (clears previously recorded events).
+pub fn start() {
+    let mut ev = STATE.events.lock().unwrap();
+    ev.clear();
+    *STATE.epoch.lock().unwrap() = Instant::now();
+    DROPPED.store(0, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop profiling and return the recorded events.
+pub fn stop() -> Vec<TraceEvent> {
+    ENABLED.store(false, Ordering::SeqCst);
+    std::mem::take(&mut *STATE.events.lock().unwrap())
+}
+
+/// Whether the profiler is currently recording.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    STATE.epoch.lock().unwrap().elapsed().as_nanos() as u64
+}
+
+/// Begin a span on `track`. Cheap no-op when the profiler is off.
+#[inline]
+pub fn begin(track: Track, name: &str) -> Span {
+    if !enabled() {
+        return Span { track, name: None, start_ns: 0 };
+    }
+    Span { track, name: Some(name.to_string()), start_ns: now_ns() }
+}
+
+/// Finish a span started with [`begin`].
+#[inline]
+pub fn end(span: Span) {
+    let Some(name) = span.name else { return };
+    if !enabled() {
+        return;
+    }
+    let end_ns = now_ns();
+    let mut ev = STATE.events.lock().unwrap();
+    if ev.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    ev.push(TraceEvent { track: span.track, name, start_ns: span.start_ns, end_ns });
+}
+
+/// Record a closed span directly (used by subsystems that time themselves).
+pub fn record(track: Track, name: &str, start_ns: u64, end_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut ev = STATE.events.lock().unwrap();
+    if ev.len() < MAX_EVENTS {
+        ev.push(TraceEvent { track, name: name.to_string(), start_ns, end_ns });
+    }
+}
+
+/// Events recorded so far without stopping.
+pub fn snapshot() -> Vec<TraceEvent> {
+    STATE.events.lock().unwrap().clone()
+}
+
+/// Aggregate statistics per track for a set of events.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TrackStats {
+    pub spans: usize,
+    pub busy_ns: u64,
+    pub first_start_ns: u64,
+    pub last_end_ns: u64,
+}
+
+impl TrackStats {
+    /// Wall-clock extent of the track.
+    pub fn extent_ns(&self) -> u64 {
+        self.last_end_ns.saturating_sub(self.first_start_ns)
+    }
+    /// Fraction of the extent the track was busy — "almost perfect device
+    /// utilization" reads as utilization ≈ 1.0 on the stream track.
+    pub fn utilization(&self) -> f64 {
+        if self.extent_ns() == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / self.extent_ns() as f64
+        }
+    }
+}
+
+/// Compute per-track statistics.
+pub fn track_stats(events: &[TraceEvent], track: Track) -> TrackStats {
+    let mut st = TrackStats { first_start_ns: u64::MAX, ..Default::default() };
+    for e in events.iter().filter(|e| e.track == track) {
+        st.spans += 1;
+        st.busy_ns += e.dur_ns();
+        st.first_start_ns = st.first_start_ns.min(e.start_ns);
+        st.last_end_ns = st.last_end_ns.max(e.end_ns);
+    }
+    if st.spans == 0 {
+        st.first_start_ns = 0;
+    }
+    st
+}
+
+/// Render the paper's Figure-1-style two-row ASCII timeline: host on top,
+/// one row per stream below, `width` characters across the time extent.
+pub fn ascii_timeline(events: &[TraceEvent], width: usize) -> String {
+    if events.is_empty() {
+        return "(no events)".into();
+    }
+    let t0 = events.iter().map(|e| e.start_ns).min().unwrap();
+    let t1 = events.iter().map(|e| e.end_ns).max().unwrap().max(t0 + 1);
+    let scale = |t: u64| -> usize {
+        (((t - t0) as u128 * (width as u128 - 1)) / (t1 - t0) as u128) as usize
+    };
+    let mut tracks: Vec<(String, Track)> = vec![("host  ".into(), Track::Host)];
+    let mut stream_ids: Vec<u32> = events
+        .iter()
+        .filter_map(|e| match e.track {
+            Track::Stream(i) => Some(i),
+            _ => None,
+        })
+        .collect();
+    stream_ids.sort_unstable();
+    stream_ids.dedup();
+    for id in stream_ids {
+        tracks.push((format!("strm {id}"), Track::Stream(id)));
+    }
+    let mut out = String::new();
+    for (label, track) in tracks {
+        let mut row = vec![b'.'; width];
+        for e in events.iter().filter(|e| e.track == track) {
+            let (a, b) = (scale(e.start_ns), scale(e.end_ns).max(scale(e.start_ns)));
+            let ch = e.name.bytes().next().unwrap_or(b'#');
+            for c in row.iter_mut().take(b + 1).skip(a) {
+                *c = if *c == b'.' { ch } else { b'#' };
+            }
+        }
+        out.push_str(&label);
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!("extent: {:.3} ms\n", (t1 - t0) as f64 / 1e6));
+    out
+}
+
+/// Export events as Chrome tracing JSON (load in chrome://tracing or
+/// Perfetto to see the Figure 1 arrows-between-rows view).
+pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        let tid = match e.track {
+            Track::Host => 0,
+            Track::Stream(s) => 1 + s as u64,
+        };
+        let name = e.name.replace('"', "'");
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": 1, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}{}\n",
+            name,
+            tid,
+            e.start_ns as f64 / 1e3,
+            e.dur_ns() as f64 / 1e3,
+            if i + 1 == events.len() { "" } else { "," }
+        ));
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // The profiler is global state; serialize tests touching it.
+    static GUARD: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let _g = GUARD.lock().unwrap();
+        ENABLED.store(false, Ordering::SeqCst);
+        let s = begin(Track::Host, "x");
+        end(s);
+        assert!(snapshot().is_empty() || !enabled());
+    }
+
+    #[test]
+    fn records_spans_with_monotonic_times() {
+        let _g = GUARD.lock().unwrap();
+        start();
+        let s = begin(Track::Host, "alpha");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        end(s);
+        let evs = stop();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "alpha");
+        assert!(evs[0].dur_ns() >= 1_000_000);
+    }
+
+    #[test]
+    fn track_stats_utilization() {
+        let evs = vec![
+            TraceEvent { track: Track::Stream(0), name: "k".into(), start_ns: 0, end_ns: 50 },
+            TraceEvent { track: Track::Stream(0), name: "k".into(), start_ns: 50, end_ns: 100 },
+            TraceEvent { track: Track::Host, name: "h".into(), start_ns: 0, end_ns: 10 },
+        ];
+        let st = track_stats(&evs, Track::Stream(0));
+        assert_eq!(st.spans, 2);
+        assert_eq!(st.busy_ns, 100);
+        assert!((st.utilization() - 1.0).abs() < 1e-9);
+        let host = track_stats(&evs, Track::Host);
+        assert_eq!(host.busy_ns, 10);
+    }
+
+    #[test]
+    fn ascii_timeline_has_expected_rows() {
+        let evs = vec![
+            TraceEvent { track: Track::Host, name: "launch".into(), start_ns: 0, end_ns: 10 },
+            TraceEvent { track: Track::Stream(0), name: "conv".into(), start_ns: 5, end_ns: 100 },
+        ];
+        let tl = ascii_timeline(&evs, 40);
+        assert!(tl.contains("host  |"));
+        assert!(tl.contains("strm 0|"));
+        assert!(tl.contains('c'), "stream row should show the conv span: {tl}");
+    }
+
+    #[test]
+    fn chrome_trace_is_json_array() {
+        let evs = vec![TraceEvent {
+            track: Track::Host,
+            name: "op".into(),
+            start_ns: 1000,
+            end_ns: 3000,
+        }];
+        let j = to_chrome_trace(&evs);
+        assert!(j.starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\"dur\": 2.000"));
+    }
+
+    #[test]
+    fn record_direct_span() {
+        let _g = GUARD.lock().unwrap();
+        start();
+        record(Track::Stream(2), "manual", 10, 20);
+        let evs = stop();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].track, Track::Stream(2));
+    }
+}

@@ -1,0 +1,282 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so torsk ships a small, fast,
+//! well-tested xoshiro256** generator plus the distributions the library
+//! needs (uniform, normal via Box–Muller, permutations, Bernoulli).
+//! A global seeded instance backs `Tensor::randn` etc. so whole training
+//! runs are reproducible via [`manual_seed`], mirroring `torch.manual_seed`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// xoshiro256** — public-domain generator by Blackman & Vigna.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        // 24 high bits -> [0,1) with full f32 mantissa coverage.
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform u64 in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (one value per call; spare cached).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-12 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        r * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli(p) trial.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.uniform() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Fill a slice with standard-normal samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for x in out.iter_mut() {
+            *x = mean + std * self.normal();
+        }
+    }
+
+    /// Fill a slice with uniform samples from [lo, hi).
+    pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for x in out.iter_mut() {
+            *x = self.uniform_range(lo, hi);
+        }
+    }
+
+    /// Split off an independent generator (for worker threads).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+}
+
+static GLOBAL_SEED: AtomicU64 = AtomicU64::new(0x5EED_0F_70_25_4C);
+static SEED_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_RNG: RefCell<(u64, Rng)> = RefCell::new((u64::MAX, Rng::new(0)));
+}
+
+/// Seed the global generator, like `torch.manual_seed`. Takes effect in all
+/// threads (each thread derives its stream from the seed + a fresh epoch).
+pub fn manual_seed(seed: u64) {
+    GLOBAL_SEED.store(seed, Ordering::SeqCst);
+    SEED_EPOCH.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Run a closure with the calling thread's global-derived generator.
+pub fn with_rng<R>(f: impl FnOnce(&mut Rng) -> R) -> R {
+    let epoch = SEED_EPOCH.load(Ordering::SeqCst);
+    THREAD_RNG.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        if guard.0 != epoch {
+            let seed = GLOBAL_SEED.load(Ordering::SeqCst);
+            // Mix in the thread id so threads get distinct streams.
+            let tid = std::thread::current().id();
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            use std::hash::{Hash, Hasher};
+            tid.hash(&mut h);
+            *guard = (epoch, Rng::new(seed ^ h.finish()));
+        }
+        f(&mut guard.1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough_and_in_range() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let mut sum = 0f64;
+        let mut sumsq = 0f64;
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(17);
+        let p = r.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn manual_seed_resets_stream() {
+        manual_seed(42);
+        let a = with_rng(|r| r.next_u64());
+        manual_seed(42);
+        let b = with_rng(|r| r.next_u64());
+        assert_eq!(a, b);
+        manual_seed(43);
+        let c = with_rng(|r| r.next_u64());
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut a = Rng::new(21);
+        let mut b = a.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(23);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((28_000..32_000).contains(&hits), "hits={hits}");
+    }
+}

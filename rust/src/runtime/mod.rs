@@ -1,0 +1,349 @@
+//! PJRT/XLA runtime: loads AOT-compiled HLO-text artifacts produced by the
+//! Python compile path (`python/compile/aot.py`) and executes them on the
+//! PJRT CPU client — Python is never on this path.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Artifacts live in `artifacts/` next to `manifest.tsv`, one line per
+//! graph: `name \t num_outputs \t spec;spec;…` with spec `f32[2,3]` /
+//! `i64[32]`. The manifest is deliberately TSV (no serde_json offline).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Result, TorskError};
+use crate::tensor::{DType, Tensor};
+
+/// Shape+dtype signature of one graph input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (ty, rest) = s
+            .split_once('[')
+            .ok_or_else(|| TorskError::Artifact(format!("bad spec: {s}")))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| TorskError::Artifact(format!("bad spec: {s}")))?;
+        let dtype = match ty {
+            "f32" => DType::F32,
+            "i64" => DType::I64,
+            other => return Err(TorskError::Artifact(format!("unknown dtype {other}"))),
+        };
+        let shape: Vec<usize> = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse().map_err(|_| TorskError::Artifact(format!("bad dim in {s}"))))
+                .collect::<Result<_>>()?
+        };
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn to_spec_string(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!(
+            "{}[{}]",
+            match self.dtype {
+                DType::F32 => "f32",
+                DType::I64 => "i64",
+            },
+            dims.join(",")
+        )
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub num_outputs: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub path: PathBuf,
+}
+
+/// Parse `manifest.tsv`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let manifest = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| TorskError::Artifact(format!("cannot read {}: {e}", manifest.display())))?;
+    let mut out = vec![];
+    for (lineno, line) in text.lines().enumerate() {
+        // Do NOT trim whole-line: a trailing tab (empty input list) is
+        // significant. Only strip a stray carriage return.
+        let line = line.trim_end_matches('\r');
+        if line.trim().is_empty() || line.trim_start().starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 3 {
+            return Err(TorskError::Artifact(format!(
+                "manifest line {}: expected 3 tab-separated fields",
+                lineno + 1
+            )));
+        }
+        let inputs = if parts[2].is_empty() {
+            vec![]
+        } else {
+            parts[2].split(';').map(TensorSpec::parse).collect::<Result<_>>()?
+        };
+        out.push(ArtifactMeta {
+            name: parts[0].to_string(),
+            num_outputs: parts[1]
+                .parse()
+                .map_err(|_| TorskError::Artifact(format!("bad output count on line {}", lineno + 1)))?,
+            inputs,
+            path: dir.join(format!("{}.hlo.txt", parts[0])),
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled XLA graph ready to execute.
+pub struct CompiledGraph {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe; executions are internally
+// synchronized by XLA.
+unsafe impl Send for CompiledGraph {}
+unsafe impl Sync for CompiledGraph {}
+
+impl CompiledGraph {
+    /// Validate inputs against the manifest signature.
+    fn check_inputs(&self, inputs: &[Tensor]) {
+        crate::torsk_assert!(
+            inputs.len() == self.meta.inputs.len(),
+            "graph {}: {} inputs given, {} expected",
+            self.meta.name,
+            inputs.len(),
+            self.meta.inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(self.meta.inputs.iter()).enumerate() {
+            crate::torsk_assert!(
+                t.dtype() == spec.dtype && t.shape() == spec.shape.as_slice(),
+                "graph {} input {i}: got {}{:?}, expected {}",
+                self.meta.name,
+                t.dtype(),
+                t.shape(),
+                spec.to_spec_string()
+            );
+        }
+    }
+
+    /// Execute with host tensors in/out.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs);
+        let literals: Vec<xla::Literal> = inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| TorskError::Xla(e.to_string()))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| TorskError::Xla(e.to_string()))?;
+        let elems = tuple.to_tuple().map_err(|e| TorskError::Xla(e.to_string()))?;
+        elems.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Execute with XLA literals in/out (no torsk-tensor conversion for
+    /// state that feeds straight back into the next step — the §6.3
+    /// graph-mode fast path; on the CPU PJRT client literals are host
+    /// buffers, so this is copy-minimal).
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| TorskError::Xla(e.to_string()))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| TorskError::Xla(e.to_string()))?;
+        tuple.to_tuple().map_err(|e| TorskError::Xla(e.to_string()))
+    }
+
+    /// Number of graph outputs (manifest).
+    pub fn num_outputs(&self) -> usize {
+        self.meta.num_outputs
+    }
+}
+
+/// Convert a (host, contiguous) tensor into an XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let t = t.to_cpu().contiguous();
+    let bytes = t.numel() * t.dtype().size();
+    let data: &[u8] = unsafe { std::slice::from_raw_parts(t.data_ptr().ptr(), bytes) };
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I64 => xla::ElementType::S64,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), data)
+        .map_err(|e| TorskError::Xla(e.to_string()))
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| TorskError::Xla(e.to_string()))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.primitive_type() {
+        xla::PrimitiveType::F32 => {
+            let v = l.to_vec::<f32>().map_err(|e| TorskError::Xla(e.to_string()))?;
+            Ok(Tensor::from_vec(v, &dims))
+        }
+        xla::PrimitiveType::S64 => {
+            let v = l.to_vec::<i64>().map_err(|e| TorskError::Xla(e.to_string()))?;
+            Ok(Tensor::from_vec(v, &dims))
+        }
+        other => Err(TorskError::Xla(format!("unsupported literal type {other:?}"))),
+    }
+}
+
+/// The global PJRT runtime: one CPU client + a compile cache keyed by
+/// artifact name (one compiled executable per model variant).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: Mutex<Option<HashMap<String, ArtifactMeta>>>,
+    cache: Mutex<HashMap<String, Arc<CompiledGraph>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a runtime reading artifacts from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| TorskError::Xla(e.to_string()))?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: dir.into(),
+            manifest: Mutex::new(None),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The process-wide runtime with the default `artifacts/` directory
+    /// (override with `TORSK_ARTIFACTS`).
+    pub fn global() -> &'static Runtime {
+        static RT: once_cell::sync::Lazy<Runtime> = once_cell::sync::Lazy::new(|| {
+            let dir = std::env::var("TORSK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Runtime::new(dir).expect("create PJRT CPU client")
+        });
+        &RT
+    }
+
+    fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        let mut guard = self.manifest.lock().unwrap();
+        if guard.is_none() {
+            let entries = parse_manifest(&self.artifacts_dir)?;
+            *guard = Some(entries.into_iter().map(|m| (m.name.clone(), m)).collect());
+        }
+        guard
+            .as_ref()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| TorskError::Artifact(format!("no artifact named `{name}` in manifest")))
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut guard = self.manifest.lock().unwrap();
+        if guard.is_none() {
+            let entries = parse_manifest(&self.artifacts_dir)?;
+            *guard = Some(entries.into_iter().map(|m| (m.name.clone(), m)).collect());
+        }
+        let mut names: Vec<String> = guard.as_ref().unwrap().keys().cloned().collect();
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load (compiling and caching on first use) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<CompiledGraph>> {
+        if let Some(g) = self.cache.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let meta = self.meta(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| TorskError::Artifact(format!("{}: {e}", meta.path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| TorskError::Xla(e.to_string()))?;
+        let graph = Arc::new(CompiledGraph { meta, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), graph.clone());
+        Ok(graph)
+    }
+
+    /// Drop compiled executables (tests).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+        *self.manifest.lock().unwrap() = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        let s = TensorSpec::parse("f32[32,3,224,224]").unwrap();
+        assert_eq!(s.dtype, DType::F32);
+        assert_eq!(s.shape, vec![32, 3, 224, 224]);
+        assert_eq!(s.to_spec_string(), "f32[32,3,224,224]");
+        let s2 = TensorSpec::parse("i64[8]").unwrap();
+        assert_eq!(s2.dtype, DType::I64);
+        let s3 = TensorSpec::parse("f32[]").unwrap();
+        assert!(s3.shape.is_empty());
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("q8[2]").is_err());
+        assert!(TensorSpec::parse("f32[a,b]").is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let dir = std::env::temp_dir().join("torsk_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# comment\nmlp_step\t2\tf32[8,4];i64[8]\nnoargs\t1\t\n",
+        )
+        .unwrap();
+        let m = parse_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "mlp_step");
+        assert_eq!(m[0].num_outputs, 2);
+        assert_eq!(m[0].inputs.len(), 2);
+        assert_eq!(m[1].inputs.len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(vec![1.0f32, -2.0, 3.5, 0.0, 9.0, 7.0], &[2, 3]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.to_vec::<f32>(), t.to_vec::<f32>());
+    }
+
+    #[test]
+    fn literal_roundtrip_i64() {
+        let t = Tensor::from_vec(vec![5i64, -7, 0], &[3]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.to_vec::<i64>(), vec![5, -7, 0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::new(std::env::temp_dir().join("definitely_missing_torsk")).unwrap();
+        assert!(rt.load("nope").is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Element types. The paper's benchmarks run in 32-bit floats (Table 1);
+//! torsk supports `f32` compute plus `i64` indices (labels, embeddings).
+
+/// Supported element types.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DType {
+    /// 32-bit IEEE float — the compute type.
+    F32,
+    /// 64-bit signed integer — index/label type.
+    I64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    /// Short display name (matches PyTorch's `torch.float32` style suffix).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I64 => "int64",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Rust scalar types that correspond to a [`DType`].
+pub trait Element: Copy + Send + Sync + 'static + std::fmt::Debug + Default + PartialEq {
+    const DTYPE: DType;
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::F32;
+}
+
+impl Element for i64 {
+    const DTYPE: DType = DType::I64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::I64.size(), 8);
+    }
+
+    #[test]
+    fn element_mapping() {
+        assert_eq!(<f32 as Element>::DTYPE, DType::F32);
+        assert_eq!(<i64 as Element>::DTYPE, DType::I64);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(DType::F32.to_string(), "float32");
+    }
+}

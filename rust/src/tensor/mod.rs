@@ -1,0 +1,772 @@
+//! The `Tensor`: a strided, reference-counted, device-placed array with
+//! autograd metadata — torsk's equivalent of `torch.Tensor` backed by the
+//! libtorch-style core (§5.1).
+//!
+//! Cloning a `Tensor` is a cheap `Arc` bump; views (reshape, transpose,
+//! narrow, expand) share storage. Interop is zero-copy where possible
+//! (§4.2): `from_vec` adopts host data, `to_vec` copies out.
+
+pub mod dtype;
+pub mod shape;
+pub mod storage;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::alloc::StreamId;
+use crate::autograd::{self, AutogradMeta};
+use crate::device::{self, Device};
+use crate::{rng, torsk_assert, torsk_bail};
+
+pub use dtype::{DType, Element};
+use storage::{SendPtr, Storage};
+
+static NEXT_TENSOR_ID: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) struct TensorImpl {
+    pub(crate) storage: Storage,
+    /// Offset into storage, in elements.
+    pub(crate) offset: usize,
+    pub(crate) shape: Vec<usize>,
+    pub(crate) strides: Vec<usize>,
+    pub(crate) dtype: DType,
+    pub(crate) autograd: Mutex<AutogradMeta>,
+    pub(crate) id: u64,
+}
+
+/// A multi-dimensional array handle. Cheap to clone; shares storage.
+#[derive(Clone)]
+pub struct Tensor {
+    pub(crate) inner: Arc<TensorImpl>,
+}
+
+fn stream_for(device: Device) -> StreamId {
+    match device {
+        Device::Cpu => StreamId::HOST,
+        Device::Sim => device::current_stream_id(),
+    }
+}
+
+impl Tensor {
+    // ------------------------------------------------------------------
+    // Construction
+    // ------------------------------------------------------------------
+
+    pub(crate) fn from_parts(
+        storage: Storage,
+        offset: usize,
+        shape: Vec<usize>,
+        strides: Vec<usize>,
+        dtype: DType,
+    ) -> Tensor {
+        Tensor {
+            inner: Arc::new(TensorImpl {
+                storage,
+                offset,
+                shape,
+                strides,
+                dtype,
+                autograd: Mutex::new(AutogradMeta::default()),
+                id: NEXT_TENSOR_ID.fetch_add(1, Ordering::Relaxed),
+            }),
+        }
+    }
+
+    /// Wrap an externally-owned memory block (shared memory, §5.4) as a
+    /// tensor. The allocator keeps the real owner alive and ignores the
+    /// block on drop.
+    pub fn from_external_block(
+        block: crate::alloc::Block,
+        nbytes: usize,
+        shape: Vec<usize>,
+        dtype: DType,
+        allocator: crate::alloc::ArcAllocator,
+    ) -> Tensor {
+        let strides = shape::contiguous_strides(&shape);
+        let storage = Storage::from_block(block, nbytes, Device::Cpu, allocator);
+        Tensor::from_parts(storage, 0, shape, strides, dtype)
+    }
+
+    /// Uninitialized tensor on `device` (contents unspecified).
+    pub fn empty(shape: &[usize], dtype: DType, device: Device) -> Tensor {
+        let n = shape::numel(shape);
+        let storage = Storage::new(n * dtype.size(), device, stream_for(device));
+        Tensor::from_parts(storage, 0, shape.to_vec(), shape::contiguous_strides(shape), dtype)
+    }
+
+    /// Adopt a host vector (zero further copies).
+    pub fn from_vec<T: Element>(data: Vec<T>, shape: &[usize]) -> Tensor {
+        torsk_assert!(
+            data.len() == shape::numel(shape),
+            "from_vec: {} elements for shape {:?}",
+            data.len(),
+            shape
+        );
+        let storage = Storage::from_slice(&data);
+        let t =
+            Tensor::from_parts(storage, 0, shape.to_vec(), shape::contiguous_strides(shape), T::DTYPE);
+        // Honor the thread's default device (torch.set_default_device).
+        let dev = device::default_device();
+        if dev != Device::Cpu {
+            t.to_device(dev)
+        } else {
+            t
+        }
+    }
+
+    /// 1-D helper.
+    pub fn from_slice<T: Element>(data: &[T]) -> Tensor {
+        Tensor::from_vec(data.to_vec(), &[data.len()])
+    }
+
+    /// Scalar (0-dim) tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::from_vec(vec![v], &[])
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 0.0)
+    }
+
+    /// Zeros with explicit dtype/device.
+    pub fn zeros_on(shape: &[usize], dtype: DType, device: Device) -> Tensor {
+        let t = Tensor::empty(shape, dtype, device);
+        t.fill_bytes_zero();
+        t
+    }
+
+    /// All-ones tensor.
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    /// Constant-filled f32 host tensor.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor::from_vec(vec![v; shape::numel(shape)], shape)
+    }
+
+    /// Standard-normal samples (global RNG; see [`crate::rng::manual_seed`]).
+    pub fn randn(shape: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; shape::numel(shape)];
+        rng::with_rng(|r| r.fill_normal(&mut data, 0.0, 1.0));
+        Tensor::from_vec(data, shape)
+    }
+
+    /// Uniform [0,1) samples.
+    pub fn rand(shape: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; shape::numel(shape)];
+        rng::with_rng(|r| r.fill_uniform(&mut data, 0.0, 1.0));
+        Tensor::from_vec(data, shape)
+    }
+
+    /// Random integers in [0, hi) as i64.
+    pub fn randint(hi: i64, shape: &[usize]) -> Tensor {
+        torsk_assert!(hi > 0, "randint: hi must be positive");
+        let data: Vec<i64> =
+            rng::with_rng(|r| (0..shape::numel(shape)).map(|_| r.below(hi as u64) as i64).collect());
+        Tensor::from_vec(data, shape)
+    }
+
+    /// `[0, 1, ..., n-1]` as f32.
+    pub fn arange(n: usize) -> Tensor {
+        Tensor::from_vec((0..n).map(|i| i as f32).collect(), &[n])
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut data = vec![0.0f32; n * n];
+        for i in 0..n {
+            data[i * n + i] = 1.0;
+        }
+        Tensor::from_vec(data, &[n, n])
+    }
+
+    fn fill_bytes_zero(&self) {
+        let ptr = SendPtr::new(unsafe { (self.inner.storage.ptr()).add(self.inner.offset * self.inner.dtype.size()) });
+        let nbytes = self.numel() * self.inner.dtype.size();
+        device::dispatch(self.device(), "zero_fill", move || unsafe {
+            std::ptr::write_bytes(ptr.ptr(), 0, nbytes);
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Metadata
+    // ------------------------------------------------------------------
+
+    /// Shape of the tensor.
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.inner.shape
+    }
+
+    /// Strides, in elements.
+    #[inline]
+    pub fn strides(&self) -> &[usize] {
+        &self.inner.strides
+    }
+
+    /// Number of dimensions.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.inner.shape.len()
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn numel(&self) -> usize {
+        shape::numel(&self.inner.shape)
+    }
+
+    /// Size along dimension `d`.
+    #[inline]
+    pub fn size(&self, d: usize) -> usize {
+        self.inner.shape[d]
+    }
+
+    #[inline]
+    pub fn dtype(&self) -> DType {
+        self.inner.dtype
+    }
+
+    #[inline]
+    pub fn device(&self) -> Device {
+        self.inner.storage.device()
+    }
+
+    /// Unique tensor id (diagnostics).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// Is the memory layout dense row-major?
+    pub fn is_contiguous(&self) -> bool {
+        shape::is_contiguous(&self.inner.shape, &self.inner.strides)
+    }
+
+    /// Underlying storage handle.
+    pub fn storage(&self) -> &Storage {
+        &self.inner.storage
+    }
+
+    /// Element offset into storage.
+    pub fn storage_offset(&self) -> usize {
+        self.inner.offset
+    }
+
+    /// Do two tensors share storage memory?
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        self.inner.storage.same_memory(&other.inner.storage)
+    }
+
+    // ------------------------------------------------------------------
+    // Autograd metadata (mechanics live in crate::autograd)
+    // ------------------------------------------------------------------
+
+    /// Builder-style: mark this tensor as requiring gradients.
+    pub fn requires_grad(self, on: bool) -> Tensor {
+        self.set_requires_grad(on);
+        self
+    }
+
+    /// Mark as requiring gradients (leaf tensor).
+    pub fn set_requires_grad(&self, on: bool) {
+        let mut meta = self.inner.autograd.lock().unwrap();
+        torsk_assert!(
+            !on || meta.grad_fn.is_none(),
+            "requires_grad can only be set on leaf tensors"
+        );
+        meta.requires_grad = on;
+    }
+
+    /// Whether gradients flow through this tensor.
+    pub fn requires_grad_flag(&self) -> bool {
+        let meta = self.inner.autograd.lock().unwrap();
+        meta.requires_grad || meta.grad_fn.is_some()
+    }
+
+    /// Accumulated gradient (leaves only, after `backward`).
+    pub fn grad(&self) -> Option<Tensor> {
+        self.inner.autograd.lock().unwrap().grad.clone()
+    }
+
+    /// Overwrite the gradient (used by optimizers' `zero_grad`).
+    pub fn set_grad(&self, g: Option<Tensor>) {
+        self.inner.autograd.lock().unwrap().grad = g;
+    }
+
+    /// The grad_fn node that produced this tensor, if any.
+    pub fn grad_fn(&self) -> Option<Arc<autograd::Node>> {
+        self.inner.autograd.lock().unwrap().grad_fn.clone()
+    }
+
+    pub(crate) fn set_grad_fn(&self, node: Arc<autograd::Node>) {
+        self.inner.autograd.lock().unwrap().grad_fn = Some(node);
+    }
+
+    /// A view sharing storage but detached from the autograd graph
+    /// (`tensor.detach()` in the paper's GAN listing).
+    pub fn detach(&self) -> Tensor {
+        Tensor::from_parts(
+            self.inner.storage.clone(),
+            self.inner.offset,
+            self.inner.shape.clone(),
+            self.inner.strides.clone(),
+            self.inner.dtype,
+        )
+    }
+
+    /// Run reverse-mode AD from this scalar (see [`autograd::backward`]).
+    pub fn backward(&self) {
+        autograd::backward(self, None);
+    }
+
+    /// Backward with an explicit seed gradient.
+    pub fn backward_with(&self, grad: Tensor) {
+        autograd::backward(self, Some(grad));
+    }
+
+    /// Storage mutation version (§4.3 versioning).
+    pub fn version(&self) -> u64 {
+        self.inner.storage.version()
+    }
+
+    /// Bump the version after an in-place mutation.
+    pub(crate) fn bump_version(&self) {
+        self.inner.storage.bump_version();
+    }
+
+    // ------------------------------------------------------------------
+    // Raw access for kernels
+    // ------------------------------------------------------------------
+
+    /// Base pointer at this tensor's storage offset.
+    pub(crate) fn data_ptr(&self) -> SendPtr {
+        // SAFETY: offset is within the storage by construction.
+        SendPtr::new(unsafe { self.inner.storage.ptr().add(self.inner.offset * self.inner.dtype.size()) })
+    }
+
+    /// Host-side typed slice. Requires contiguity; syncs the device first
+    /// if the tensor lives on the simulated accelerator.
+    pub fn with_data<T: Element, R>(&self, f: impl FnOnce(&[T]) -> R) -> R {
+        torsk_assert!(self.dtype() == T::DTYPE, "dtype mismatch: {} vs {}", self.dtype(), T::DTYPE);
+        torsk_assert!(self.is_contiguous(), "with_data requires contiguous tensor");
+        if self.device().is_async() {
+            device::synchronize();
+        }
+        let s: &[T] = unsafe { self.inner.storage.slice(self.inner.offset, self.numel()) };
+        f(s)
+    }
+
+    /// Copy the (contiguous view of the) tensor out to a host `Vec`.
+    pub fn to_vec<T: Element>(&self) -> Vec<T> {
+        let c = self.contiguous();
+        c.with_data::<T, Vec<T>>(|s| s.to_vec())
+    }
+
+    /// Extract the single element of a scalar tensor.
+    pub fn item(&self) -> f32 {
+        torsk_assert!(self.numel() == 1, "item() on tensor with {} elements", self.numel());
+        self.to_vec::<f32>()[0]
+    }
+
+    /// Extract a single i64 element.
+    pub fn item_i64(&self) -> i64 {
+        torsk_assert!(self.numel() == 1, "item_i64() on tensor with {} elements", self.numel());
+        self.to_vec::<i64>()[0]
+    }
+
+    // ------------------------------------------------------------------
+    // Views (share storage, no data movement)
+    // ------------------------------------------------------------------
+
+    fn view_of(&self, offset: usize, shape: Vec<usize>, strides: Vec<usize>) -> Tensor {
+        let t = Tensor::from_parts(self.inner.storage.clone(), offset, shape, strides, self.inner.dtype);
+        // Views participate in the graph through the ops layer; raw views
+        // here propagate requires_grad for leaves so mistakes surface.
+        t
+    }
+
+    /// Reshape. Zero-copy when contiguous, copying otherwise. `-1`-style
+    /// inference: pass `usize::MAX` for at most one dimension.
+    pub fn reshape(&self, new_shape: &[usize]) -> Tensor {
+        let mut dims: Vec<usize> = new_shape.to_vec();
+        let known: usize = dims.iter().filter(|&&d| d != usize::MAX).product();
+        let inferred = dims.iter().filter(|&&d| d == usize::MAX).count();
+        torsk_assert!(inferred <= 1, "reshape: at most one inferred dimension");
+        if inferred == 1 {
+            torsk_assert!(known > 0 && self.numel() % known == 0, "reshape: cannot infer dim");
+            for d in dims.iter_mut() {
+                if *d == usize::MAX {
+                    *d = self.numel() / known;
+                }
+            }
+        }
+        torsk_assert!(
+            shape::numel(&dims) == self.numel(),
+            "reshape: {:?} -> {:?} changes element count",
+            self.shape(),
+            dims
+        );
+        let base = if self.is_contiguous() { self.clone() } else { self.contiguous() };
+        let strides = shape::contiguous_strides(&dims);
+        let out = base.view_of(base.inner.offset, dims, strides);
+        crate::ops::register_view_grad(self, &out);
+        out
+    }
+
+    /// Swap two dimensions (zero-copy).
+    pub fn transpose(&self, d0: usize, d1: usize) -> Tensor {
+        let mut sh = self.inner.shape.clone();
+        let mut st = self.inner.strides.clone();
+        sh.swap(d0, d1);
+        st.swap(d0, d1);
+        let out = self.view_of(self.inner.offset, sh, st);
+        crate::ops::register_transpose_grad(self, &out, d0, d1);
+        out
+    }
+
+    /// Matrix transpose of a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        torsk_assert!(self.ndim() == 2, "t() requires 2-D, got {:?}", self.shape());
+        self.transpose(0, 1)
+    }
+
+    /// Permute dimensions (zero-copy).
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        torsk_assert!(perm.len() == self.ndim(), "permute: rank mismatch");
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            torsk_assert!(p < perm.len() && !seen[p], "permute: invalid permutation {:?}", perm);
+            seen[p] = true;
+        }
+        let sh: Vec<usize> = perm.iter().map(|&p| self.inner.shape[p]).collect();
+        let st: Vec<usize> = perm.iter().map(|&p| self.inner.strides[p]).collect();
+        let out = self.view_of(self.inner.offset, sh, st);
+        crate::ops::register_permute_grad(self, &out, perm);
+        out
+    }
+
+    /// Slice dimension `dim` to `[start, start+len)` (zero-copy).
+    pub fn narrow(&self, dim: usize, start: usize, len: usize) -> Tensor {
+        torsk_assert!(dim < self.ndim(), "narrow: dim {} out of range", dim);
+        torsk_assert!(
+            start + len <= self.inner.shape[dim],
+            "narrow: [{start}, {}) out of bounds for dim of size {}",
+            start + len,
+            self.inner.shape[dim]
+        );
+        let mut sh = self.inner.shape.clone();
+        sh[dim] = len;
+        let offset = self.inner.offset + start * self.inner.strides[dim];
+        let out = self.view_of(offset, sh, self.inner.strides.clone());
+        crate::ops::register_narrow_grad(self, &out, dim, start);
+        out
+    }
+
+    /// Index dimension `dim` at `idx`, removing it (zero-copy).
+    pub fn select(&self, dim: usize, idx: usize) -> Tensor {
+        let narrowed = self.narrow(dim, idx, 1);
+        narrowed.squeeze(dim)
+    }
+
+    /// Remove a size-1 dimension.
+    pub fn squeeze(&self, dim: usize) -> Tensor {
+        torsk_assert!(self.inner.shape[dim] == 1, "squeeze: dim {dim} has size != 1");
+        let mut sh = self.inner.shape.clone();
+        let mut st = self.inner.strides.clone();
+        sh.remove(dim);
+        st.remove(dim);
+        let out = self.view_of(self.inner.offset, sh, st);
+        crate::ops::register_view_grad(self, &out);
+        out
+    }
+
+    /// Insert a size-1 dimension.
+    pub fn unsqueeze(&self, dim: usize) -> Tensor {
+        torsk_assert!(dim <= self.ndim(), "unsqueeze: dim {dim} out of range");
+        let mut sh = self.inner.shape.clone();
+        let mut st = self.inner.strides.clone();
+        let stride = if dim < st.len() { st[dim] * sh.get(dim).copied().unwrap_or(1) } else { 1 };
+        sh.insert(dim, 1);
+        st.insert(dim, stride.max(1));
+        let out = self.view_of(self.inner.offset, sh, st);
+        crate::ops::register_view_grad(self, &out);
+        out
+    }
+
+    /// Broadcast view to `target` shape (stride-0 on expanded axes).
+    pub fn expand(&self, target: &[usize]) -> Tensor {
+        let st = shape::broadcast_strides(&self.inner.shape, &self.inner.strides, target);
+        let out = self.view_of(self.inner.offset, target.to_vec(), st);
+        crate::ops::register_expand_grad(self, &out);
+        out
+    }
+
+    /// Dense row-major copy (no-op clone of the handle when already
+    /// contiguous).
+    pub fn contiguous(&self) -> Tensor {
+        if self.is_contiguous() {
+            return self.clone();
+        }
+        let out = Tensor::empty(&self.inner.shape, self.inner.dtype, self.device());
+        let src = self.data_ptr();
+        let dst = out.data_ptr();
+        let sh = self.inner.shape.clone();
+        let st = self.inner.strides.clone();
+        let n = self.numel();
+        let dtype = self.inner.dtype;
+        device::dispatch(self.device(), "contiguous", move || match dtype {
+            DType::F32 => unsafe {
+                let d = dst.as_mut_slice::<f32>(0, n);
+                for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
+                    d[i] = *src.as_f32().add(off);
+                }
+            },
+            DType::I64 => unsafe {
+                let d = dst.as_mut_slice::<i64>(0, n);
+                for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
+                    d[i] = *(src.ptr() as *const i64).add(off);
+                }
+            },
+        });
+        crate::ops::register_view_grad(self, &out);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Device movement
+    // ------------------------------------------------------------------
+
+    /// Copy to `device` (returns self's clone when already there).
+    pub fn to_device(&self, device: Device) -> Tensor {
+        if self.device() == device {
+            return self.clone();
+        }
+        let src = self.contiguous();
+        if src.device().is_async() {
+            // d2h: wait for producers before reading.
+            crate::device::synchronize();
+        }
+        let out = Tensor::empty(src.shape(), src.dtype(), device);
+        let nbytes = src.numel() * src.dtype().size();
+        let s = src.data_ptr();
+        let d = out.data_ptr();
+        // h2d / d2h transfer: queued on the stream like cudaMemcpyAsync so
+        // it orders correctly with subsequent kernels on the same stream.
+        // The closure keeps the *host* source alive until the copy runs:
+        // host memory is not protected by the per-stream pool-reuse
+        // argument (§5.3 applies to device streams only), so a
+        // pointer-only capture could read a recycled host buffer. This is
+        // the cross-device hazard the paper says utilities must handle by
+        // "carefully inserting additional synchronization".
+        let keep_src = src.detach();
+        device::dispatch(device, "memcpy", move || unsafe {
+            std::ptr::copy_nonoverlapping(s.ptr(), d.ptr(), nbytes);
+            drop(keep_src);
+        });
+        crate::ops::register_view_grad(self, &out);
+        out
+    }
+
+    /// Shorthand: move to the simulated accelerator.
+    pub fn to_sim(&self) -> Tensor {
+        self.to_device(Device::Sim)
+    }
+
+    /// Shorthand: move to host.
+    pub fn to_cpu(&self) -> Tensor {
+        self.to_device(Device::Cpu)
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Tensor(shape={:?}, dtype={}, device={}{}{})",
+            self.shape(),
+            self.dtype(),
+            self.device(),
+            if self.requires_grad_flag() { ", requires_grad" } else { "" },
+            if self.grad_fn().is_some() { ", grad_fn" } else { "" },
+        )
+    }
+}
+
+/// Panic unless two tensors are elementwise close (test helper, mirrors
+/// `torch.testing.assert_close`).
+pub fn assert_close(a: &Tensor, b: &Tensor, atol: f32, rtol: f32) {
+    torsk_assert!(a.shape() == b.shape(), "shape mismatch {:?} vs {:?}", a.shape(), b.shape());
+    let av = a.to_vec::<f32>();
+    let bv = b.to_vec::<f32>();
+    for (i, (&x, &y)) in av.iter().zip(bv.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
+            torsk_bail!("tensors differ at flat index {i}: {x} vs {y} (tol {tol})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creation_and_metadata() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.device(), Device::Cpu);
+        assert!(t.is_contiguous());
+        assert_eq!(t.to_vec::<f32>(), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "from_vec")]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(vec![1.0f32; 3], &[2, 2]);
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let t = Tensor::ones(&[4]);
+        // Handle clones share the same TensorImpl (like Python references).
+        let u = t.clone();
+        assert!(t.shares_storage(&u));
+        assert_eq!(t.storage().ref_count(), 1);
+        // Views create a new TensorImpl over the same storage — the §5.5
+        // refcount observably increases.
+        let v = t.reshape(&[2, 2]);
+        assert!(t.shares_storage(&v));
+        assert_eq!(t.storage().ref_count(), 2);
+        drop(v);
+        assert_eq!(t.storage().ref_count(), 1);
+    }
+
+    #[test]
+    fn transpose_is_zero_copy_view() {
+        let t = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let tt = t.t();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert!(t.shares_storage(&tt));
+        assert!(!tt.is_contiguous());
+        assert_eq!(tt.to_vec::<f32>(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn reshape_infers_dimension() {
+        let t = Tensor::arange(12);
+        let r = t.reshape(&[3, usize::MAX]);
+        assert_eq!(r.shape(), &[3, 4]);
+        assert!(t.shares_storage(&r));
+    }
+
+    #[test]
+    fn narrow_and_select() {
+        let t = Tensor::from_vec((0..12).map(|i| i as f32).collect(), &[3, 4]);
+        let row = t.select(0, 1);
+        assert_eq!(row.shape(), &[4]);
+        assert_eq!(row.to_vec::<f32>(), vec![4.0, 5.0, 6.0, 7.0]);
+        let cols = t.narrow(1, 1, 2);
+        assert_eq!(cols.shape(), &[3, 2]);
+        assert_eq!(cols.to_vec::<f32>(), vec![1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn expand_broadcasts_with_stride_zero() {
+        let t = Tensor::from_vec(vec![1.0f32, 2.0, 3.0], &[3]);
+        let e = t.expand(&[2, 3]);
+        assert_eq!(e.shape(), &[2, 3]);
+        assert_eq!(e.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        assert!(t.shares_storage(&e));
+    }
+
+    #[test]
+    fn contiguous_copies_transposed_layout() {
+        let t = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        let tt = t.t().contiguous();
+        assert!(tt.is_contiguous());
+        assert!(!t.shares_storage(&tt));
+        assert_eq!(tt.to_vec::<f32>(), vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn squeeze_unsqueeze_roundtrip() {
+        let t = Tensor::ones(&[2, 3]);
+        let u = t.unsqueeze(1);
+        assert_eq!(u.shape(), &[2, 1, 3]);
+        let s = u.squeeze(1);
+        assert_eq!(s.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn item_scalar() {
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "item()")]
+    fn item_on_nonscalar_panics() {
+        Tensor::ones(&[2]).item();
+    }
+
+    #[test]
+    fn eye_and_arange() {
+        let e = Tensor::eye(2);
+        assert_eq!(e.to_vec::<f32>(), vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(Tensor::arange(3).to_vec::<f32>(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn randn_respects_manual_seed() {
+        rng::manual_seed(99);
+        let a = Tensor::randn(&[8]).to_vec::<f32>();
+        rng::manual_seed(99);
+        let b = Tensor::randn(&[8]).to_vec::<f32>();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn to_sim_and_back_preserves_data() {
+        let t = Tensor::from_vec(vec![1.0f32, -2.0, 3.5], &[3]);
+        let d = t.to_sim();
+        assert_eq!(d.device(), Device::Sim);
+        let h = d.to_cpu();
+        assert_eq!(h.to_vec::<f32>(), vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn detach_shares_memory_without_graph() {
+        let t = Tensor::ones(&[2]).requires_grad(true);
+        let d = t.detach();
+        assert!(t.shares_storage(&d));
+        assert!(!d.requires_grad_flag());
+    }
+
+    #[test]
+    fn randint_in_range() {
+        let t = Tensor::randint(5, &[100]);
+        for v in t.to_vec::<i64>() {
+            assert!((0..5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn assert_close_passes_and_fails() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        let b = Tensor::from_slice(&[1.0f32, 2.0 + 1e-7]);
+        assert_close(&a, &b, 1e-5, 1e-5);
+        let c = Tensor::from_slice(&[1.0f32, 3.0]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| assert_close(&a, &c, 1e-5, 1e-5)));
+        assert!(r.is_err());
+    }
+}

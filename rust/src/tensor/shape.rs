@@ -1,0 +1,238 @@
+//! Shape / stride arithmetic: contiguity, broadcasting (NumPy semantics,
+//! §4.2 interoperability), and index iteration for strided views.
+
+/// Number of elements for a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Row-major (C) contiguous strides for a shape, in elements.
+pub fn contiguous_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![0; shape.len()];
+    let mut acc = 1usize;
+    for i in (0..shape.len()).rev() {
+        strides[i] = acc;
+        acc *= shape[i].max(1);
+    }
+    strides
+}
+
+/// Whether (shape, strides) describes a dense row-major layout.
+pub fn is_contiguous(shape: &[usize], strides: &[usize]) -> bool {
+    let mut acc = 1usize;
+    for i in (0..shape.len()).rev() {
+        if shape[i] != 1 && strides[i] != acc {
+            return false;
+        }
+        acc *= shape[i].max(1);
+    }
+    true
+}
+
+/// NumPy-style broadcast of two shapes. Panics on incompatibility — eager
+/// fail-fast semantics (see crate::error).
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Vec<usize> {
+    match try_broadcast_shapes(a, b) {
+        Some(s) => s,
+        None => crate::torsk_bail!(
+            "shapes {:?} and {:?} are not broadcastable",
+            a,
+            b
+        ),
+    }
+}
+
+/// Broadcast two shapes, returning `None` on incompatibility.
+pub fn try_broadcast_shapes(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let n = a.len().max(b.len());
+    let mut out = vec![0; n];
+    for i in 0..n {
+        let da = if i < n - a.len() { 1 } else { a[i - (n - a.len())] };
+        let db = if i < n - b.len() { 1 } else { b[i - (n - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return None;
+        };
+    }
+    Some(out)
+}
+
+/// Strides to read a tensor of shape `from` as the broadcast shape `to`
+/// (stride 0 on expanded axes). `from` must be broadcastable to `to`.
+pub fn broadcast_strides(from: &[usize], strides: &[usize], to: &[usize]) -> Vec<usize> {
+    debug_assert_eq!(from.len(), strides.len());
+    let offset = to.len() - from.len();
+    let mut out = vec![0usize; to.len()];
+    for i in 0..from.len() {
+        let t = offset + i;
+        if from[i] == to[t] {
+            out[t] = strides[i];
+        } else if from[i] == 1 {
+            out[t] = 0;
+        } else {
+            crate::torsk_bail!("cannot broadcast axis {i}: {} -> {}", from[i], to[t]);
+        }
+    }
+    out
+}
+
+/// Axes of `grad_shape` that were broadcast from `orig_shape` and must be
+/// sum-reduced when propagating gradients through a broadcast op.
+/// Returns (leading axes to sum away, axes to sum keeping dim).
+pub fn reduce_axes_for_broadcast(orig_shape: &[usize], grad_shape: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let lead = grad_shape.len() - orig_shape.len();
+    let leading: Vec<usize> = (0..lead).collect();
+    let mut keepdim = vec![];
+    for (i, &d) in orig_shape.iter().enumerate() {
+        if d == 1 && grad_shape[lead + i] != 1 {
+            keepdim.push(lead + i);
+        }
+    }
+    (leading, keepdim)
+}
+
+/// Convert a linear index (row-major over `shape`) into a storage offset
+/// using `strides`.
+#[inline]
+pub fn linear_to_offset(mut lin: usize, shape: &[usize], strides: &[usize]) -> usize {
+    let mut off = 0;
+    for i in (0..shape.len()).rev() {
+        let d = shape[i];
+        if d > 0 {
+            off += (lin % d) * strides[i];
+            lin /= d;
+        }
+    }
+    off
+}
+
+/// Iterator over storage offsets of a strided view in row-major order.
+/// Specialized fast paths live in the kernels; this is the generic one.
+pub struct StridedIter<'a> {
+    shape: &'a [usize],
+    strides: &'a [usize],
+    index: Vec<usize>,
+    offset: usize,
+    remaining: usize,
+}
+
+impl<'a> StridedIter<'a> {
+    pub fn new(shape: &'a [usize], strides: &'a [usize]) -> Self {
+        StridedIter {
+            shape,
+            strides,
+            index: vec![0; shape.len()],
+            offset: 0,
+            remaining: numel(shape),
+        }
+    }
+}
+
+impl<'a> Iterator for StridedIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let out = self.offset;
+        self.remaining -= 1;
+        // Odometer increment.
+        for i in (0..self.shape.len()).rev() {
+            self.index[i] += 1;
+            self.offset += self.strides[i];
+            if self.index[i] < self.shape[i] {
+                break;
+            }
+            self.offset -= self.index[i] * self.strides[i];
+            self.index[i] = 0;
+        }
+        Some(out)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_strides_row_major() {
+        assert_eq!(contiguous_strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(contiguous_strides(&[5]), vec![1]);
+        assert_eq!(contiguous_strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn contiguity_checks() {
+        assert!(is_contiguous(&[2, 3], &[3, 1]));
+        assert!(!is_contiguous(&[2, 3], &[1, 2])); // transposed
+        assert!(is_contiguous(&[1, 3], &[99, 1])); // size-1 dims don't matter
+        assert!(is_contiguous(&[], &[]));
+    }
+
+    #[test]
+    fn broadcast_basic() {
+        assert_eq!(broadcast_shapes(&[2, 3], &[3]), vec![2, 3]);
+        assert_eq!(broadcast_shapes(&[2, 1, 4], &[3, 1]), vec![2, 3, 4]);
+        assert_eq!(broadcast_shapes(&[], &[2, 2]), vec![2, 2]);
+        assert_eq!(try_broadcast_shapes(&[2, 3], &[2, 4]), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "broadcastable")]
+    fn broadcast_incompatible_panics() {
+        broadcast_shapes(&[2, 3], &[4, 3, 2]);
+    }
+
+    #[test]
+    fn broadcast_strides_zeroes_expanded_axes() {
+        let s = broadcast_strides(&[3, 1], &[1, 1], &[2, 3, 4]);
+        assert_eq!(s, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn reduce_axes() {
+        let (lead, keep) = reduce_axes_for_broadcast(&[3, 1], &[2, 3, 4]);
+        assert_eq!(lead, vec![0]);
+        assert_eq!(keep, vec![2]);
+        let (lead, keep) = reduce_axes_for_broadcast(&[2, 3], &[2, 3]);
+        assert!(lead.is_empty() && keep.is_empty());
+    }
+
+    #[test]
+    fn strided_iter_matches_linear_for_contiguous() {
+        let shape = [2usize, 3, 2];
+        let strides = contiguous_strides(&shape);
+        let offs: Vec<usize> = StridedIter::new(&shape, &strides).collect();
+        assert_eq!(offs, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn strided_iter_transposed() {
+        // 2x3 transposed view of a 3x2 buffer: strides [1, 2].
+        let shape = [2usize, 3];
+        let strides = [1usize, 2];
+        let offs: Vec<usize> = StridedIter::new(&shape, &strides).collect();
+        assert_eq!(offs, vec![0, 2, 4, 1, 3, 5]);
+    }
+
+    #[test]
+    fn linear_to_offset_agrees_with_iter() {
+        let shape = [3usize, 4, 5];
+        let strides = [40usize, 5, 1]; // padded layout
+        let offs: Vec<usize> = StridedIter::new(&shape, &strides).collect();
+        for (lin, &off) in offs.iter().enumerate() {
+            assert_eq!(linear_to_offset(lin, &shape, &strides), off);
+        }
+    }
+}

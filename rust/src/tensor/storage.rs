@@ -1,0 +1,292 @@
+//! Tensor storage: reference-counted raw memory + the mutation version
+//! counter.
+//!
+//! Two load-bearing paper mechanisms live here:
+//!
+//! - **§5.5 reference counting.** `Storage` is an `Arc` around a block from
+//!   an [`Allocator`]; the moment the last reference drops, `Drop` returns
+//!   the block — memory is released *immediately* when tensors become
+//!   unneeded, not at some future GC pause. Rust is exactly the kind of
+//!   language the paper calls out as compatible ("allow for user-defined
+//!   behavior for assignment, copies, and moves (e.g. C++, Rust)").
+//!
+//! - **§4.3 versioning.** Every storage carries a monotonically increasing
+//!   version, bumped by each in-place mutation. The autograd system
+//!   snapshots the version when saving a tensor for backward and refuses
+//!   to use it if the version moved — the paper's deliberate
+//!   "user error instead of copy-on-write" tradeoff.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::alloc::{ArcAllocator, Block, StreamId};
+use crate::ctx;
+use crate::device::Device;
+use crate::tensor::dtype::Element;
+
+struct StorageImpl {
+    block: Block,
+    nbytes: usize,
+    device: Device,
+    allocator: ArcAllocator,
+    version: AtomicU64,
+}
+
+impl Drop for StorageImpl {
+    fn drop(&mut self) {
+        // Immediate reclamation (§5.5): hand the block straight back.
+        let block = Block {
+            ptr: self.block.ptr,
+            size: self.block.size,
+            requested: self.block.requested,
+            stream: self.block.stream,
+            root: self.block.root,
+        };
+        self.allocator.deallocate(block);
+    }
+}
+
+// SAFETY: raw memory region; cross-thread access is coordinated by the
+// stream discipline (device kernels) or exclusive ownership (host).
+unsafe impl Send for StorageImpl {}
+unsafe impl Sync for StorageImpl {}
+
+/// Reference-counted tensor storage.
+#[derive(Clone)]
+pub struct Storage {
+    inner: Arc<StorageImpl>,
+}
+
+impl Storage {
+    /// Allocate `nbytes` on `device` from that device's current allocator,
+    /// bound to `stream`'s pool.
+    pub fn new(nbytes: usize, device: Device, stream: StreamId) -> Storage {
+        let allocator = ctx::allocator_for(device);
+        let block = allocator.allocate(nbytes, stream);
+        Storage {
+            inner: Arc::new(StorageImpl {
+                block,
+                nbytes,
+                device,
+                allocator,
+                version: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Wrap an externally-owned block (e.g. shared memory). `allocator`
+    /// receives the block back on drop — pass a no-op allocator that keeps
+    /// the real owner alive.
+    pub fn from_block(block: Block, nbytes: usize, device: Device, allocator: ArcAllocator) -> Storage {
+        Storage {
+            inner: Arc::new(StorageImpl {
+                block,
+                nbytes,
+                device,
+                allocator,
+                version: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Host storage initialized from a slice.
+    pub fn from_slice<T: Element>(data: &[T]) -> Storage {
+        let nbytes = std::mem::size_of_val(data);
+        let s = Storage::new(nbytes, Device::Cpu, StreamId::HOST);
+        // SAFETY: freshly allocated, exclusively owned, sized for `data`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr() as *const u8, s.ptr(), nbytes);
+        }
+        s
+    }
+
+    /// Raw base pointer.
+    #[inline]
+    pub fn ptr(&self) -> *mut u8 {
+        self.inner.block.ptr.as_ptr()
+    }
+
+    /// Capacity in bytes actually requested (not the rounded block size).
+    #[inline]
+    pub fn nbytes(&self) -> usize {
+        self.inner.nbytes
+    }
+
+    #[inline]
+    pub fn device(&self) -> Device {
+        self.inner.device
+    }
+
+    /// Stream whose allocator pool owns the block.
+    #[inline]
+    pub fn stream(&self) -> StreamId {
+        self.inner.block.stream
+    }
+
+    /// Number of `Storage` handles sharing this memory (the §5.5 refcount,
+    /// observable for tests and the refcount-vs-GC bench).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+
+    /// Identity: do two storages share memory?
+    pub fn same_memory(&self, other: &Storage) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Current mutation version (§4.3).
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.inner.version.load(Ordering::Acquire)
+    }
+
+    /// Bump the version — called by every in-place mutation.
+    #[inline]
+    pub fn bump_version(&self) {
+        self.inner.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Typed view of `len` elements starting `offset` elements in.
+    ///
+    /// # Safety
+    /// Caller must ensure (a) the range is in bounds, (b) no concurrent
+    /// mutation — for device storage that means required stream syncs have
+    /// happened.
+    #[inline]
+    pub unsafe fn slice<T: Element>(&self, offset: usize, len: usize) -> &[T] {
+        debug_assert!((offset + len) * std::mem::size_of::<T>() <= self.inner.block.size);
+        std::slice::from_raw_parts((self.ptr() as *const T).add(offset), len)
+    }
+
+    /// Mutable typed view. Same safety contract as [`Storage::slice`] plus
+    /// exclusivity of the mutable range.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut<T: Element>(&self, offset: usize, len: usize) -> &mut [T] {
+        debug_assert!((offset + len) * std::mem::size_of::<T>() <= self.inner.block.size);
+        std::slice::from_raw_parts_mut((self.ptr() as *mut T).add(offset), len)
+    }
+}
+
+impl std::fmt::Debug for Storage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Storage({} bytes, {}, refs={}, v{})",
+            self.nbytes(),
+            self.device(),
+            self.ref_count(),
+            self.version()
+        )
+    }
+}
+
+/// Raw pointer wrapper that may cross into stream-kernel closures. The
+/// queued kernel holds the *pointer*, not a reference count — exactly the
+/// paper's model where the host may logically free memory before the
+/// device consumes it, made safe by FIFO streams + per-stream pools.
+/// Stored as a `usize` address (not a raw pointer) so closures capturing it
+/// are automatically `Send`/`Sync` and Rust-2021 disjoint field capture
+/// cannot smuggle a bare `*mut u8` into a kernel closure.
+#[derive(Clone, Copy)]
+pub struct SendPtr(usize);
+
+impl SendPtr {
+    #[inline]
+    pub fn new(p: *mut u8) -> SendPtr {
+        SendPtr(p as usize)
+    }
+    /// The raw pointer.
+    #[inline]
+    pub fn ptr(&self) -> *mut u8 {
+        self.0 as *mut u8
+    }
+    /// Typed const pointer.
+    #[inline]
+    pub fn as_f32(&self) -> *const f32 {
+        self.0 as *const f32
+    }
+    /// Typed mut pointer.
+    #[inline]
+    pub fn as_f32_mut(&self) -> *mut f32 {
+        self.0 as *mut f32
+    }
+    /// # Safety: caller guarantees bounds + no data race (stream FIFO).
+    #[inline]
+    pub unsafe fn as_slice<T: Element>(&self, offset: usize, len: usize) -> &'static [T] {
+        std::slice::from_raw_parts((self.0 as *const T).add(offset), len)
+    }
+    /// # Safety: as `as_slice`, plus exclusivity of the written range.
+    #[inline]
+    pub unsafe fn as_mut_slice<T: Element>(&self, offset: usize, len: usize) -> &'static mut [T] {
+        std::slice::from_raw_parts_mut((self.0 as *mut T).add(offset), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_slice_roundtrip() {
+        let s = Storage::from_slice(&[1.0f32, 2.0, 3.0]);
+        let back: &[f32] = unsafe { s.slice(0, 3) };
+        assert_eq!(back, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.nbytes(), 12);
+        assert_eq!(s.device(), Device::Cpu);
+    }
+
+    #[test]
+    fn refcount_observability() {
+        let s = Storage::from_slice(&[0.0f32; 8]);
+        assert_eq!(s.ref_count(), 1);
+        let s2 = s.clone();
+        assert_eq!(s.ref_count(), 2);
+        assert!(s.same_memory(&s2));
+        drop(s2);
+        assert_eq!(s.ref_count(), 1);
+    }
+
+    #[test]
+    fn drop_returns_block_immediately() {
+        // §5.5: memory must be released exactly when the last ref drops.
+        let alloc = ctx::host_allocator();
+        let before = alloc.stats();
+        let s = Storage::new(1 << 16, Device::Cpu, StreamId::HOST);
+        let during = alloc.stats();
+        assert!(during.in_use_bytes >= before.in_use_bytes + (1 << 16));
+        let s2 = s.clone();
+        drop(s);
+        // Still alive through s2.
+        assert!(alloc.stats().in_use_bytes >= before.in_use_bytes + (1 << 16));
+        drop(s2);
+        assert_eq!(alloc.stats().in_use_bytes, before.in_use_bytes);
+    }
+
+    #[test]
+    fn version_bumps() {
+        let s = Storage::from_slice(&[1.0f32]);
+        assert_eq!(s.version(), 0);
+        s.bump_version();
+        s.bump_version();
+        assert_eq!(s.version(), 2);
+        // Clones share the version counter (same memory => same version).
+        let s2 = s.clone();
+        s2.bump_version();
+        assert_eq!(s.version(), 3);
+    }
+
+    #[test]
+    fn i64_storage() {
+        let s = Storage::from_slice(&[7i64, -3]);
+        let v: &[i64] = unsafe { s.slice(0, 2) };
+        assert_eq!(v, &[7, -3]);
+    }
+
+    #[test]
+    fn slice_with_offset() {
+        let s = Storage::from_slice(&[0.0f32, 1.0, 2.0, 3.0]);
+        let tail: &[f32] = unsafe { s.slice(2, 2) };
+        assert_eq!(tail, &[2.0, 3.0]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Mini property-testing harness (proptest is unavailable in the offline
+//! crate set — DESIGN.md §7 documents the substitution): seeded random
+//! input generators + a `for_all` driver that reports the failing seed.
+
+use crate::rng::Rng;
+
+/// Run `prop` against `cases` generated inputs; panics with the seed of
+/// the first failing case so it can be replayed.
+pub fn for_all<T, G, P>(name: &str, cases: usize, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = 0xBEEF ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut r = Rng::new(seed);
+        let input = generate(&mut r);
+        if !prop(&input) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {input:?}");
+        }
+    }
+}
+
+/// Random shape with bounded rank/extent.
+pub fn gen_shape(r: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = 1 + r.below(max_rank as u64) as usize;
+    (0..rank).map(|_| 1 + r.below(max_dim as u64) as usize).collect()
+}
+
+/// Random f32 vector.
+pub fn gen_vec(r: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| r.uniform_range(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all("trivial", 25, |r| r.below(10), |_| { true });
+        for_all("count", 5, |_| (), |_| { count += 1; true });
+        assert_eq!(count, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_reports_seed() {
+        for_all("fails", 10, |r| r.below(100), |&x| x < 1_000_000 && false || x > 1_000_000);
+    }
+
+    #[test]
+    fn gen_shape_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..100 {
+            let s = gen_shape(&mut r, 4, 8);
+            assert!((1..=4).contains(&s.len()));
+            assert!(s.iter().all(|&d| (1..=8).contains(&d)));
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end integration tests: training convergence, device paths,
+//! data loading, the full eager stack composing.
+
+use std::sync::Arc;
+
+use torsk::data::{DataLoader, Dataset, SyntheticImages};
+use torsk::device::Device;
+use torsk::models::{BenchModel, Batch};
+use torsk::nn::{Linear, Module, ReLU, Sequential, Sigmoid};
+use torsk::optim::{Adam, Optimizer, Sgd};
+use torsk::prelude::*;
+
+#[test]
+fn xor_trains_to_high_accuracy() {
+    torsk::rng::manual_seed(1);
+    let model = Sequential::new()
+        .add(Linear::new(2, 8))
+        .add(ReLU)
+        .add(Linear::new(8, 1))
+        .add(Sigmoid);
+    let x = Tensor::from_vec(vec![0.0f32, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0], &[4, 2]);
+    let y = Tensor::from_vec(vec![0.0f32, 1.0, 1.0, 0.0], &[4, 1]);
+    let mut opt = Adam::new(model.parameters(), 0.05);
+    let mut final_loss = f32::MAX;
+    for _ in 0..500 {
+        opt.zero_grad();
+        let loss = ops::bce_loss(&model.forward(&x), &y);
+        loss.backward();
+        opt.step();
+        final_loss = loss.item();
+    }
+    assert!(final_loss < 0.05, "XOR should be solvable: loss={final_loss}");
+    let pred = no_grad(|| model.forward(&x)).to_vec::<f32>();
+    assert!(pred[0] < 0.2 && pred[3] < 0.2);
+    assert!(pred[1] > 0.8 && pred[2] > 0.8);
+}
+
+#[test]
+fn linear_regression_recovers_weights() {
+    torsk::rng::manual_seed(2);
+    let true_w = Tensor::from_slice(&[2.0f32, -3.0, 0.5]);
+    let w = Tensor::zeros(&[3, 1]).requires_grad(true);
+    let b = Tensor::zeros(&[1]).requires_grad(true);
+    let mut opt = Sgd::new(vec![w.clone(), b.clone()], 0.1);
+    for _ in 0..300 {
+        opt.zero_grad();
+        let x = Tensor::randn(&[32, 3]);
+        let target = ops::add_scalar(&ops::matmul(&x, &true_w.reshape(&[3, 1])), 0.7);
+        let pred = ops::add(&ops::matmul(&x, &w), &b);
+        ops::mse_loss(&pred, &target).backward();
+        opt.step();
+    }
+    let wv = w.to_vec::<f32>();
+    for (got, want) in wv.iter().zip([2.0, -3.0, 0.5]) {
+        assert!((got - want).abs() < 0.05, "{wv:?}");
+    }
+    assert!((b.item() - 0.7).abs() < 0.05);
+}
+
+#[test]
+fn conv_classifier_learns_planted_signal() {
+    torsk::rng::manual_seed(3);
+    struct Planted;
+    impl Dataset for Planted {
+        fn len(&self) -> usize {
+            128
+        }
+        fn get(&self, i: usize) -> (Tensor, Tensor) {
+            let base = SyntheticImages::new(128, 1, 8, 8, 2);
+            let (x, _) = base.get(i);
+            let label = (i % 2) as i64;
+            let mut v = x.to_vec::<f32>();
+            if label == 1 {
+                for p in v.iter_mut().take(16) {
+                    *p += 3.0;
+                }
+            }
+            (Tensor::from_vec(v, &[1, 8, 8]), Tensor::from_vec(vec![label], &[]))
+        }
+    }
+    let model = Sequential::new()
+        .add(torsk::nn::Conv2d::new(1, 4, 3, 1, 1))
+        .add(ReLU)
+        .add(torsk::nn::MaxPool2d::new(2, 2))
+        .add(torsk::nn::Flatten)
+        .add(Linear::new(4 * 16, 2));
+    let loader = DataLoader::new(Arc::new(Planted), 16).shuffle(true).seed(5);
+    let mut opt = Sgd::new(model.parameters(), 0.05).with_momentum(0.9);
+    for _epoch in 0..5 {
+        for (x, y) in loader.iter() {
+            opt.zero_grad();
+            model.forward(&x).cross_entropy(&y).backward();
+            opt.step();
+        }
+    }
+    // Evaluate.
+    let mut correct = 0;
+    no_grad(|| {
+        for (x, y) in DataLoader::new(Arc::new(Planted), 32).iter() {
+            let acc = ops::accuracy(&model.forward(&x), &y);
+            correct += (acc * x.size(0) as f32) as usize;
+        }
+    });
+    assert!(correct >= 120, "planted conv task: {correct}/128 correct");
+}
+
+#[test]
+fn training_on_sim_device_matches_cpu() {
+    // Same seed, same data: the simulated accelerator must produce the
+    // same numbers as the host (it runs the same kernels, §5.2).
+    let run = |device: Device| -> Vec<f32> {
+        torsk::rng::manual_seed(7);
+        let model = torsk::device::with_default_device(device, || {
+            Sequential::new().add(Linear::new(4, 8)).add(ReLU).add(Linear::new(8, 3))
+        });
+        let mut opt = Sgd::new(model.parameters(), 0.1);
+        torsk::rng::manual_seed(100);
+        let x = Tensor::randn(&[16, 4]).to_device(device);
+        let y = Tensor::randint(3, &[16]).to_device(device);
+        let mut losses = vec![];
+        for _ in 0..5 {
+            opt.zero_grad();
+            let loss = model.forward(&x).cross_entropy(&y);
+            losses.push(loss.item());
+            loss.backward();
+            opt.step();
+        }
+        torsk::device::synchronize();
+        losses
+    };
+    let cpu = run(Device::Cpu);
+    let sim = run(Device::Sim);
+    for (a, b) in cpu.iter().zip(sim.iter()) {
+        assert!((a - b).abs() < 1e-4, "cpu {cpu:?} vs sim {sim:?}");
+    }
+    assert!(cpu[4] < cpu[0], "loss should decrease: {cpu:?}");
+}
+
+#[test]
+fn bench_models_take_one_full_step() {
+    // Tiny variants of every Table 1 model run forward+backward+update.
+    torsk::rng::manual_seed(0);
+    let models: Vec<Box<dyn BenchModel>> = vec![
+        Box::new(torsk::models::AlexNet::new(3, 32, 10, 2)),
+        Box::new(torsk::models::Vgg19::new(3, 32, 10, 1)),
+        Box::new(torsk::models::ResNet50::new(3, 32, 10, 1)),
+        Box::new(torsk::models::MobileNetV1::new(3, 32, 10, 1)),
+        Box::new(torsk::models::Gnmt::new(64, 16, 1, 2, 4, 4)),
+        Box::new(torsk::models::Ncf::new(64, 64, 8, 16)),
+    ];
+    for m in models {
+        let mut opt = Sgd::new(m.parameters(), 0.01);
+        let b = m.make_batch(0);
+        let l0 = m.loss(&b);
+        assert!(l0.item().is_finite(), "{} loss finite", m.name());
+        l0.backward();
+        opt.step();
+        let l1 = m.loss(&b);
+        assert!(l1.item().is_finite());
+    }
+}
+
+#[test]
+fn parallel_dataloader_feeds_training() {
+    torsk::rng::manual_seed(4);
+    let ds = Arc::new(SyntheticImages::new(64, 1, 4, 4, 3));
+    let loader = DataLoader::new(ds, 8).workers(3).shuffle(true);
+    let model = Sequential::new().add(torsk::nn::Flatten).add(Linear::new(16, 3));
+    let mut opt = Sgd::new(model.parameters(), 0.01);
+    let mut batches = 0;
+    for (x, y) in loader.iter() {
+        opt.zero_grad();
+        model.forward(&x).cross_entropy(&y).backward();
+        opt.step();
+        batches += 1;
+    }
+    assert_eq!(batches, 8);
+}
+
+#[test]
+fn gnmt_batch_units_are_tokens() {
+    torsk::rng::manual_seed(0);
+    let m = torsk::models::Gnmt::new(64, 16, 1, 4, 6, 5);
+    match m.make_batch(0) {
+        Batch::Seq2Seq(src, tgt) => {
+            assert_eq!(src.shape(), &[4, 6]);
+            assert_eq!(tgt.shape(), &[4, 5]);
+        }
+        _ => panic!("wrong batch type"),
+    }
+    assert_eq!(m.make_batch(0).units(), 20);
+}
+
+#[test]
+fn memory_is_reclaimed_across_training_steps() {
+    // §5.5: steady-state training must not grow memory (refcounting frees
+    // every intermediate as soon as it is unreachable).
+    use torsk::alloc::Allocator;
+    torsk::rng::manual_seed(6);
+    let model = Sequential::new().add(Linear::new(32, 64)).add(ReLU).add(Linear::new(64, 8));
+    let mut opt = Sgd::new(model.parameters(), 0.01);
+    let alloc = torsk::ctx::host_allocator();
+    let mut in_use = vec![];
+    for step in 0..6 {
+        opt.zero_grad();
+        let x = Tensor::randn(&[16, 32]);
+        let y = Tensor::randint(8, &[16]);
+        model.forward(&x).cross_entropy(&y).backward();
+        opt.step();
+        let _ = step;
+        in_use.push(alloc.stats().in_use_bytes);
+    }
+    // After warmup the footprint must be flat.
+    assert_eq!(in_use[3], in_use[4], "{in_use:?}");
+    assert_eq!(in_use[4], in_use[5], "{in_use:?}");
+}

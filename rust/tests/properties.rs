@@ -1,0 +1,266 @@
+//! Property-based tests over core invariants (mini-harness in
+//! `torsk::testing`; proptest is unavailable offline — DESIGN.md §7).
+
+use torsk::alloc::{Allocator, StreamId};
+use torsk::prelude::*;
+use torsk::rng::Rng;
+use torsk::testing::{for_all, gen_shape, gen_vec};
+
+#[test]
+fn prop_broadcast_add_commutes() {
+    for_all(
+        "a+b == b+a under broadcasting",
+        40,
+        |r| {
+            let shape_a = gen_shape(r, 3, 5);
+            // b broadcast-compatible: drop leading dims / set some to 1.
+            let keep = r.below(shape_a.len() as u64 + 1) as usize;
+            let mut shape_b: Vec<usize> = shape_a[shape_a.len() - keep..].to_vec();
+            for d in shape_b.iter_mut() {
+                if r.bernoulli(0.4) {
+                    *d = 1;
+                }
+            }
+            if shape_b.is_empty() {
+                shape_b.push(1);
+            }
+            let na: usize = shape_a.iter().product();
+            let nb: usize = shape_b.iter().product();
+            (
+                Tensor::from_vec(gen_vec(r, na, -5.0, 5.0), &shape_a),
+                Tensor::from_vec(gen_vec(r, nb, -5.0, 5.0), &shape_b),
+            )
+        },
+        |(a, b)| {
+            let ab = ops::add(a, b).to_vec::<f32>();
+            let ba = ops::add(b, a).to_vec::<f32>();
+            ab == ba
+        },
+    );
+}
+
+#[test]
+fn prop_sum_to_shape_preserves_total() {
+    for_all(
+        "sum_to_shape conserves mass",
+        40,
+        |r| {
+            let shape = gen_shape(r, 4, 5);
+            let n: usize = shape.iter().product();
+            let t = Tensor::from_vec(gen_vec(r, n, -2.0, 2.0), &shape);
+            let target: Vec<usize> =
+                shape.iter().map(|&d| if r.bernoulli(0.5) { 1 } else { d }).collect();
+            (t, target)
+        },
+        |(t, target)| {
+            let reduced = ops::sum_to_shape(t, target);
+            let a = ops::sum(t).item();
+            let b = ops::sum(&reduced).item();
+            (a - b).abs() <= 1e-3 + 1e-4 * a.abs()
+        },
+    );
+}
+
+#[test]
+fn prop_autograd_is_linear_in_seed() {
+    // backward(k * g) must produce k * backward(g) for any op chain.
+    for_all(
+        "vjp linearity",
+        25,
+        |r| {
+            let n = 1 + r.below(20) as usize;
+            (gen_vec(r, n, -2.0, 2.0), gen_vec(r, n, -1.0, 1.0), r.uniform_range(0.5, 3.0))
+        },
+        |(xs, gs, k)| {
+            let run = |scale: f32| -> Vec<f32> {
+                let x = Tensor::from_slice(xs).requires_grad(true);
+                let y = ops::mul(&ops::tanh(&x), &ops::sigmoid(&x));
+                let seed = Tensor::from_slice(gs).mul_scalar(scale);
+                y.backward_with(seed);
+                x.grad().unwrap().to_vec::<f32>()
+            };
+            let g1 = run(1.0);
+            let gk = run(*k);
+            g1.iter().zip(&gk).all(|(a, b)| (a * k - b).abs() <= 1e-4 + 1e-4 * b.abs())
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_distributes_over_addition() {
+    for_all(
+        "A(B+C) == AB + AC",
+        25,
+        |r| {
+            let (m, k, n) = (
+                1 + r.below(12) as usize,
+                1 + r.below(12) as usize,
+                1 + r.below(12) as usize,
+            );
+            (
+                Tensor::from_vec(gen_vec(r, m * k, -1.0, 1.0), &[m, k]),
+                Tensor::from_vec(gen_vec(r, k * n, -1.0, 1.0), &[k, n]),
+                Tensor::from_vec(gen_vec(r, k * n, -1.0, 1.0), &[k, n]),
+            )
+        },
+        |(a, b, c)| {
+            let lhs = ops::matmul(a, &ops::add(b, c)).to_vec::<f32>();
+            let rhs = ops::add(&ops::matmul(a, b), &ops::matmul(a, c)).to_vec::<f32>();
+            lhs.iter().zip(&rhs).all(|(x, y)| (x - y).abs() <= 1e-3 + 1e-3 * y.abs())
+        },
+    );
+}
+
+#[test]
+fn prop_allocator_blocks_never_overlap() {
+    // Random alloc/free traces: live blocks must be disjoint and aligned,
+    // sizes rounded to 512.
+    for_all(
+        "caching allocator no-overlap",
+        15,
+        |r| {
+            let ops: Vec<(bool, usize)> = (0..120)
+                .map(|_| (r.bernoulli(0.6), 1 + r.below(8192) as usize))
+                .collect();
+            ops
+        },
+        |trace| {
+            let alloc = torsk::alloc::caching::CachingAllocator::new(std::sync::Arc::new(
+                torsk::alloc::driver::HostMem::default(),
+            ));
+            let mut live: Vec<torsk::alloc::Block> = vec![];
+            for &(is_alloc, size) in trace {
+                if is_alloc || live.is_empty() {
+                    let b = alloc.allocate(size, StreamId::DEFAULT);
+                    assert_eq!(b.size % 512, 0);
+                    assert!(b.size >= size);
+                    live.push(b);
+                } else {
+                    let b = live.swap_remove(live.len() / 2);
+                    alloc.deallocate(b);
+                }
+                // Check pairwise disjointness of live blocks.
+                for i in 0..live.len() {
+                    for j in i + 1..live.len() {
+                        let (a, b) = (&live[i], &live[j]);
+                        let (a0, a1) = (a.ptr.as_ptr() as usize, a.ptr.as_ptr() as usize + a.size);
+                        let (b0, b1) = (b.ptr.as_ptr() as usize, b.ptr.as_ptr() as usize + b.size);
+                        if a0 < b1 && b0 < a1 {
+                            return false;
+                        }
+                    }
+                }
+            }
+            for b in live {
+                alloc.deallocate(b);
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_reshape_roundtrip_preserves_data() {
+    for_all(
+        "reshape roundtrip",
+        30,
+        |r| {
+            let shape = gen_shape(r, 4, 6);
+            let n: usize = shape.iter().product();
+            (Tensor::from_vec(gen_vec(r, n, -9.0, 9.0), &shape), shape)
+        },
+        |(t, shape)| {
+            let n = t.numel();
+            let flat = t.reshape(&[n]);
+            let back = flat.reshape(shape);
+            back.to_vec::<f32>() == t.to_vec::<f32>()
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_rows_are_distributions() {
+    for_all(
+        "softmax simplex",
+        30,
+        |r| {
+            let rows = 1 + r.below(10) as usize;
+            let cols = 2 + r.below(20) as usize;
+            Tensor::from_vec(gen_vec(r, rows * cols, -20.0, 20.0), &[rows, cols])
+        },
+        |t| {
+            let s = ops::softmax_last(t);
+            let v = s.to_vec::<f32>();
+            let cols = t.size(1);
+            v.iter().all(|&p| (0.0..=1.0).contains(&p))
+                && v.chunks(cols).all(|row| (row.iter().sum::<f32>() - 1.0).abs() < 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_stream_results_match_host() {
+    // Any elementwise chain computed on the stream device equals the host
+    // result (stream FIFO + per-stream pools are sound).
+    for_all(
+        "sim == cpu",
+        20,
+        |r| {
+            let n = 1 + r.below(300) as usize;
+            (gen_vec(r, n, -3.0, 3.0), gen_vec(r, n, 0.1, 2.0))
+        },
+        |(a, b)| {
+            let compute = |dev: torsk::device::Device| {
+                let x = Tensor::from_slice(a).to_device(dev);
+                let y = Tensor::from_slice(b).to_device(dev);
+                let z = ops::mul(&ops::tanh(&ops::add(&x, &y)), &ops::sqrt(&y));
+                z.to_vec::<f32>()
+            };
+            let h = compute(torsk::device::Device::Cpu);
+            let d = compute(torsk::device::Device::Sim);
+            h.iter().zip(&d).all(|(x, y)| (x - y).abs() < 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_gradcheck_random_unary_chains() {
+    // Finite-difference gradcheck over random compositions of smooth ops.
+    for_all(
+        "gradcheck",
+        12,
+        |r| {
+            let n = 2 + r.below(6) as usize;
+            let chain: Vec<u64> = (0..3).map(|_| r.below(4)).collect();
+            (gen_vec(r, n, 0.2, 1.5), chain)
+        },
+        |(xs, chain)| {
+            let apply = |t: &Tensor| -> Tensor {
+                let mut y = t.clone();
+                for &c in chain {
+                    y = match c {
+                        0 => ops::tanh(&y),
+                        1 => ops::sigmoid(&y),
+                        2 => ops::exp(&ops::mul_scalar(&y, 0.3)),
+                        _ => ops::sqrt(&ops::add_scalar(&y, 2.0)),
+                    };
+                }
+                y
+            };
+            let x = Tensor::from_slice(xs).requires_grad(true);
+            ops::sum(&apply(&x)).backward();
+            let grad = x.grad().unwrap().to_vec::<f32>();
+            let eps = 1e-3f32;
+            let mut r2 = Rng::new(5);
+            let idx = r2.below(xs.len() as u64) as usize;
+            let mut xp = xs.clone();
+            xp[idx] += eps;
+            let mut xm = xs.clone();
+            xm[idx] -= eps;
+            let fp = ops::sum(&apply(&Tensor::from_slice(&xp))).item();
+            let fm = ops::sum(&apply(&Tensor::from_slice(&xm))).item();
+            let fd = (fp - fm) / (2.0 * eps);
+            (grad[idx] - fd).abs() <= 2e-2 + 1e-2 * fd.abs()
+        },
+    );
+}

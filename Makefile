@@ -1,0 +1,27 @@
+# Developer entry points. `make check` is what CI runs (see
+# .github/workflows/ci.yml): build, tests, formatting, lints.
+
+CARGO ?= cargo
+RUST_DIR := rust
+
+.PHONY: check build test fmt fmt-check clippy bench
+
+check: build test fmt-check clippy
+
+build:
+	cd $(RUST_DIR) && $(CARGO) build --release
+
+test:
+	cd $(RUST_DIR) && $(CARGO) test -q
+
+fmt:
+	cd $(RUST_DIR) && $(CARGO) fmt
+
+fmt-check:
+	cd $(RUST_DIR) && $(CARGO) fmt --check
+
+clippy:
+	cd $(RUST_DIR) && $(CARGO) clippy -- -D warnings
+
+bench:
+	cd $(RUST_DIR) && $(CARGO) bench --bench micro_ops

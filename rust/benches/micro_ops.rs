@@ -66,6 +66,9 @@ fn main() {
     };
     println!("  queue on stream (async)  : {t_queue:>9.0} ns/op (host-side cost)");
     println!("  execute inline on host   : {t_inline:>9.0} ns/op");
+    // Both paths above run through dispatch::call (registry lookup, schema
+    // check, key resolution) — the numbers are the all-in per-op cost.
+    println!("  registry: {} ops registered", torsk::dispatch::op_names().len());
 
     // ---- kernels ---------------------------------------------------------
     println!("\n-- matmul GFLOP/s (f32, square) --");

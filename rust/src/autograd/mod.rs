@@ -231,7 +231,8 @@ pub fn backward(root: &Tensor, grad: Option<Tensor>) {
                 root.numel() == 1,
                 "grad can be implicitly created only for scalar outputs"
             );
-            crate::tensor::Tensor::full(root.shape(), 1.0).to_device(root.device())
+            // Seed matches the root's dtype/device (f64 roots get f64 seeds).
+            root.ones_like()
         }
     };
     match root.grad_fn() {

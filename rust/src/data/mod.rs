@@ -156,7 +156,7 @@ fn stack_targets(ys: &[&Tensor]) -> Tensor {
                 Tensor::from_vec(data, &shape)
             }
         }
-        crate::tensor::DType::F32 => ops::stack(ys, 0),
+        crate::tensor::DType::F32 | crate::tensor::DType::F64 => ops::stack(ys, 0),
     }
 }
 

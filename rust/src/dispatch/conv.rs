@@ -1,0 +1,105 @@
+//! The conv2d kernel entry for the dispatcher (wraps the im2col kernels).
+
+use crate::autograd::{ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::kernels::conv::{conv2d_backward_input, conv2d_backward_weight, conv2d_forward, Conv2dArgs};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+fn conv_args(ctx: &OpCtx) -> Conv2dArgs {
+    let (input, weight) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(input.ndim() == 4, "conv2d: input must be NCHW, got {:?}", input.shape());
+    torsk_assert!(weight.ndim() == 4, "conv2d: weight must be 4-D, got {:?}", weight.shape());
+    let args = Conv2dArgs {
+        batch: input.size(0),
+        c_in: input.size(1),
+        h_in: input.size(2),
+        w_in: input.size(3),
+        c_out: weight.size(0),
+        kh: weight.size(2),
+        kw: weight.size(3),
+        stride: ctx.usize(0),
+        padding: ctx.usize(1),
+        groups: ctx.usize(2),
+    };
+    args.validate();
+    torsk_assert!(
+        weight.size(1) == args.cg_in(),
+        "conv2d: weight in-channels {} != input {}/groups {}",
+        weight.size(1),
+        args.c_in,
+        args.groups
+    );
+    if ctx.num_inputs() == 3 {
+        torsk_assert!(
+            ctx.input(2).shape() == [args.c_out],
+            "conv2d: bias shape {:?}",
+            ctx.input(2).shape()
+        );
+    }
+    args
+}
+
+/// 2-D convolution: input [N,C,H,W], weight [Cout, Cin/groups, KH, KW],
+/// optional bias [Cout] as the third input.
+fn k_conv2d(ctx: &OpCtx) -> Tensor {
+    let args = conv_args(ctx);
+    let dev = ctx.device;
+    let input_c = ctx.input(0).contiguous();
+    let weight_c = ctx.input(1).contiguous();
+    let bias_c = if ctx.num_inputs() == 3 { Some(ctx.input(2).contiguous()) } else { None };
+    let out = Tensor::empty(&[args.batch, args.c_out, args.h_out(), args.w_out()], DType::F32, dev);
+
+    let (ip, wp, op) = (input_c.data_ptr(), weight_c.data_ptr(), out.data_ptr());
+    let bp = bias_c.as_ref().map(|b| b.data_ptr());
+    let (in_len, w_len, out_len) = (input_c.numel(), weight_c.numel(), out.numel());
+    let c_out = args.c_out;
+    device::dispatch(dev, "conv2d", move || unsafe {
+        let iv = ip.as_slice::<f32>(0, in_len);
+        let wv = wp.as_slice::<f32>(0, w_len);
+        let bv = bp.map(|p| p.as_slice::<f32>(0, c_out));
+        let ov = op.as_mut_slice::<f32>(0, out_len);
+        conv2d_forward(&args, iv, wv, bv, ov);
+    });
+    out
+}
+
+fn bw_conv2d(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let args = conv_args(ctx);
+    let vi = SavedTensor::save(&ctx.input(0).contiguous());
+    let vw = SavedTensor::save(&ctx.input(1).contiguous());
+    let has_bias = ctx.num_inputs() == 3;
+    ClosureFunction::new("conv2d", move |g| {
+        let input = vi.unpack();
+        let weight = vw.unpack();
+        let g = g.contiguous();
+        if g.device().is_async() {
+            device::synchronize();
+        }
+        let gv = g.to_vec::<f32>();
+        let iv = input.to_vec::<f32>();
+        let wv = weight.to_vec::<f32>();
+
+        let mut gi = vec![0.0f32; iv.len()];
+        conv2d_backward_input(&args, &gv, &wv, &mut gi);
+        let mut gw = vec![0.0f32; wv.len()];
+        let mut gb = if has_bias { Some(vec![0.0f32; args.c_out]) } else { None };
+        conv2d_backward_weight(&args, &iv, &gv, &mut gw, gb.as_deref_mut());
+
+        let dev = input.device();
+        let mut grads = vec![
+            Some(Tensor::from_vec(gi, input.shape()).to_device(dev)),
+            Some(Tensor::from_vec(gw, weight.shape()).to_device(dev)),
+        ];
+        if let Some(gb) = gb {
+            grads.push(Some(Tensor::from_vec(gb, &[args.c_out]).to_device(dev)));
+        }
+        grads
+    })
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(OpDef::new("conv2d", 2, 3, &[DType::F32]).kernel_all(k_conv2d).backward(bw_conv2d));
+}

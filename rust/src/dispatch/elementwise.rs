@@ -1,0 +1,534 @@
+//! Elementwise kernels (binary, unary, scalar, cast) for the dispatcher.
+//!
+//! One generic driver per traversal shape, monomorphized over
+//! [`Element`]: F32, F64 and I64 run through the same registry entries.
+//! Mixed-dtype operands are promoted with [`DType::promote`] before the
+//! kernel instantiation is selected; gradients are cast back to each
+//! input's dtype so leaves always accumulate gradients of their own type.
+
+use crate::autograd::{ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::tensor::{DType, Element, Tensor};
+use crate::{torsk_assert, torsk_bail};
+
+use super::iter::{self, TensorIter};
+use super::{same_device, OpCtx, OpDef, Registry};
+
+pub(crate) const FLOATS: &[DType] = &[DType::F32, DType::F64];
+pub(crate) const NUMERIC: &[DType] = &[DType::F32, DType::F64, DType::I64];
+
+// ---------------------------------------------------------------------
+// Generic drivers
+// ---------------------------------------------------------------------
+
+/// Broadcasting binary map: host plans the traversal, the kernel runs
+/// inline (CPU) or queued on the current stream (Sim).
+pub(crate) fn binary_map_t<T: Element, O: Element>(
+    name: &'static str,
+    a: &Tensor,
+    b: &Tensor,
+    f: fn(T, T) -> O,
+) -> Tensor {
+    let dev = same_device(name, &[a, b]);
+    torsk_assert!(
+        a.dtype() == T::DTYPE && b.dtype() == T::DTYPE,
+        "{name}: kernel instantiated for {} got {} x {}",
+        T::DTYPE,
+        a.dtype(),
+        b.dtype()
+    );
+    let plan = TensorIter::binary(a, b);
+    let out = Tensor::empty(&plan.out_shape, O::DTYPE, dev);
+    if plan.n == 0 {
+        return out;
+    }
+    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    device::dispatch(dev, name, move || plan.run_binary::<T, O>(ap, bp, op, f));
+    out
+}
+
+/// Elementwise unary map, preserving shape; works on strided views via a
+/// contiguous materialization.
+pub(crate) fn unary_map_t<T: Element, O: Element>(
+    name: &'static str,
+    a: &Tensor,
+    f: fn(T) -> O,
+) -> Tensor {
+    torsk_assert!(a.dtype() == T::DTYPE, "{name}: kernel for {} got {}", T::DTYPE, a.dtype());
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), O::DTYPE, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || iter::run_unary::<T, O>(n, ap, op, f));
+    out
+}
+
+/// Elementwise map with one scalar parameter (already converted to `T`).
+pub(crate) fn scalar_map_t<T: Element>(
+    name: &'static str,
+    a: &Tensor,
+    s: T,
+    f: fn(T, T) -> T,
+) -> Tensor {
+    torsk_assert!(a.dtype() == T::DTYPE, "{name}: kernel for {} got {}", T::DTYPE, a.dtype());
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), T::DTYPE, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || unsafe {
+        let av = ap.as_slice::<T>(0, n);
+        let ov = op.as_mut_slice::<T>(0, n);
+        for i in 0..n {
+            ov[i] = f(av[i], s);
+        }
+    });
+    out
+}
+
+/// Elementwise map with two scalar parameters.
+pub(crate) fn scalar2_map_t<T: Element>(
+    name: &'static str,
+    a: &Tensor,
+    s1: T,
+    s2: T,
+    f: fn(T, T, T) -> T,
+) -> Tensor {
+    let a = a.contiguous();
+    let out = Tensor::empty(a.shape(), T::DTYPE, a.device());
+    let n = a.numel();
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    device::dispatch(a.device(), name, move || unsafe {
+        let av = ap.as_slice::<T>(0, n);
+        let ov = op.as_mut_slice::<T>(0, n);
+        for i in 0..n {
+            ov[i] = f(av[i], s1, s2);
+        }
+    });
+    out
+}
+
+fn cast_kernel_t<S: Element, D: Element>(a: &Tensor) -> Tensor {
+    unary_map_t::<S, D>("cast", a, |x| D::from_f64(x.to_f64()))
+}
+
+// ---------------------------------------------------------------------
+// Promotion + raw (non-recording) helpers for backward math
+// ---------------------------------------------------------------------
+
+/// Raw dtype conversion (no autograd); identity clone when already `dt`.
+pub(crate) fn cast_to(t: &Tensor, dt: DType) -> Tensor {
+    match (t.dtype(), dt) {
+        (a, b) if a == b => t.clone(),
+        (DType::F32, DType::F64) => cast_kernel_t::<f32, f64>(t),
+        (DType::F32, DType::I64) => cast_kernel_t::<f32, i64>(t),
+        (DType::F64, DType::F32) => cast_kernel_t::<f64, f32>(t),
+        (DType::F64, DType::I64) => cast_kernel_t::<f64, i64>(t),
+        (DType::I64, DType::F32) => cast_kernel_t::<i64, f32>(t),
+        (DType::I64, DType::F64) => cast_kernel_t::<i64, f64>(t),
+        _ => unreachable!(),
+    }
+}
+
+/// Promote both operands to their common dtype (cheap handle clones when
+/// the dtypes already match).
+pub(crate) fn promote_pair(a: &Tensor, b: &Tensor) -> (Tensor, Tensor) {
+    if a.dtype() == b.dtype() {
+        return (a.clone(), b.clone());
+    }
+    let dt = DType::promote(a.dtype(), b.dtype());
+    (cast_to(a, dt), cast_to(b, dt))
+}
+
+/// Instantiate a broadcasting binary kernel over the promoted dtype of
+/// two tensors. The closure body must be valid for f32, f64 and i64.
+macro_rules! binary_arith {
+    ($name:expr, $a:expr, $b:expr, |$x:ident, $y:ident| $body:expr) => {{
+        let (pa, pb) = promote_pair($a, $b);
+        match pa.dtype() {
+            DType::F32 => binary_map_t::<f32, f32>($name, &pa, &pb, |$x, $y| $body),
+            DType::F64 => binary_map_t::<f64, f64>($name, &pa, &pb, |$x, $y| $body),
+            DType::I64 => binary_map_t::<i64, i64>($name, &pa, &pb, |$x, $y| $body),
+        }
+    }};
+}
+
+/// Instantiate a unary kernel over f32/f64 (floating inputs only).
+macro_rules! float_unary {
+    ($name:expr, $a:expr, |$x:ident| $body:expr) => {{
+        let a = $a;
+        match a.dtype() {
+            DType::F32 => unary_map_t::<f32, f32>($name, a, |$x| $body),
+            DType::F64 => unary_map_t::<f64, f64>($name, a, |$x| $body),
+            other => torsk_bail!("{}: unsupported dtype {other}", $name),
+        }
+    }};
+}
+
+/// Instantiate a one-scalar kernel over f32/f64. The scalar travels as
+/// f64 and is narrowed per-dtype, so F64 tensors keep full scalar
+/// precision (e.g. `mean`'s 1/n factor).
+macro_rules! float_scalar {
+    ($name:expr, $a:expr, $s:expr, |$x:ident, $sv:ident| $body:expr) => {{
+        let a = $a;
+        let s: f64 = $s;
+        match a.dtype() {
+            DType::F32 => scalar_map_t::<f32>($name, a, s as f32, |$x, $sv| $body),
+            DType::F64 => scalar_map_t::<f64>($name, a, s, |$x, $sv| $body),
+            other => torsk_bail!("{}: unsupported dtype {other}", $name),
+        }
+    }};
+}
+
+pub(crate) fn raw_add(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_arith!("add", a, b, |x, y| x + y)
+}
+
+pub(crate) fn raw_sub(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_arith!("sub", a, b, |x, y| x - y)
+}
+
+pub(crate) fn raw_mul(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_arith!("mul", a, b, |x, y| x * y)
+}
+
+pub(crate) fn raw_div(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_arith!("div", a, b, |x, y| x / y)
+}
+
+pub(crate) fn raw_neg(a: &Tensor) -> Tensor {
+    match a.dtype() {
+        DType::F32 => unary_map_t::<f32, f32>("neg", a, |x| -x),
+        DType::F64 => unary_map_t::<f64, f64>("neg", a, |x| -x),
+        DType::I64 => unary_map_t::<i64, i64>("neg", a, |x| -x),
+    }
+}
+
+pub(crate) fn raw_mul_scalar(a: &Tensor, s: f64) -> Tensor {
+    float_scalar!("mul_scalar", a, s, |x, sv| x * sv)
+}
+
+/// 1/0 mask (in the operands' promoted dtype) where `a >= b`.
+fn mask_ge(a: &Tensor, b: &Tensor) -> Tensor {
+    let (pa, pb) = promote_pair(a, b);
+    match pa.dtype() {
+        DType::F32 => binary_map_t::<f32, f32>("ge_mask", &pa, &pb, |x, y| if x >= y { 1.0 } else { 0.0 }),
+        DType::F64 => binary_map_t::<f64, f64>("ge_mask", &pa, &pb, |x, y| if x >= y { 1.0 } else { 0.0 }),
+        DType::I64 => binary_map_t::<i64, i64>("ge_mask", &pa, &pb, |x, y| if x >= y { 1 } else { 0 }),
+    }
+}
+
+/// 1/0 mask where `a < b`.
+fn mask_lt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (pa, pb) = promote_pair(a, b);
+    match pa.dtype() {
+        DType::F32 => binary_map_t::<f32, f32>("lt_mask", &pa, &pb, |x, y| if x < y { 1.0 } else { 0.0 }),
+        DType::F64 => binary_map_t::<f64, f64>("lt_mask", &pa, &pb, |x, y| if x < y { 1.0 } else { 0.0 }),
+        DType::I64 => binary_map_t::<i64, i64>("lt_mask", &pa, &pb, |x, y| if x < y { 1 } else { 0 }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gradient plumbing shared by every broadcasting op
+// ---------------------------------------------------------------------
+
+/// Sum `grad` down to `shape` (undo broadcasting) — the standard binary-op
+/// backward reduction.
+pub fn reduce_grad_to_shape(grad: &Tensor, shape: &[usize]) -> Tensor {
+    if grad.shape() == shape {
+        return grad.clone();
+    }
+    super::reduce::sum_to_shape(grad, shape)
+}
+
+/// Reduce a broadcast gradient to an input's shape *and* dtype.
+pub(crate) fn grad_to(g: &Tensor, shape: &[usize], dtype: DType) -> Tensor {
+    cast_to(&reduce_grad_to_shape(g, shape), dtype)
+}
+
+/// Shape+dtype signature of one input, captured for the backward closure.
+fn sig(ctx: &OpCtx, i: usize) -> (Vec<usize>, DType) {
+    (ctx.input(i).shape().to_vec(), ctx.input(i).dtype())
+}
+
+// ---------------------------------------------------------------------
+// Binary ops
+// ---------------------------------------------------------------------
+
+fn k_add(ctx: &OpCtx) -> Tensor {
+    binary_arith!("add", ctx.input(0), ctx.input(1), |x, y| x + y)
+}
+
+fn bw_add(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (sa, da) = sig(ctx, 0);
+    let (sb, db) = sig(ctx, 1);
+    ClosureFunction::new("add", move |g| {
+        vec![Some(grad_to(g, &sa, da)), Some(grad_to(g, &sb, db))]
+    })
+}
+
+fn k_sub(ctx: &OpCtx) -> Tensor {
+    binary_arith!("sub", ctx.input(0), ctx.input(1), |x, y| x - y)
+}
+
+fn bw_sub(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (sa, da) = sig(ctx, 0);
+    let (sb, db) = sig(ctx, 1);
+    ClosureFunction::new("sub", move |g| {
+        vec![
+            Some(grad_to(g, &sa, da)),
+            Some(grad_to(&raw_neg(g), &sb, db)),
+        ]
+    })
+}
+
+fn k_mul(ctx: &OpCtx) -> Tensor {
+    binary_arith!("mul", ctx.input(0), ctx.input(1), |x, y| x * y)
+}
+
+fn bw_mul(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (sa, da) = sig(ctx, 0);
+    let (sb, db) = sig(ctx, 1);
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    let (va, vb) = (SavedTensor::save(&pa), SavedTensor::save(&pb));
+    ClosureFunction::new("mul", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        vec![
+            Some(grad_to(&raw_mul(g, &b), &sa, da)),
+            Some(grad_to(&raw_mul(g, &a), &sb, db)),
+        ]
+    })
+}
+
+fn k_div(ctx: &OpCtx) -> Tensor {
+    binary_arith!("div", ctx.input(0), ctx.input(1), |x, y| x / y)
+}
+
+fn bw_div(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (sa, da) = sig(ctx, 0);
+    let (sb, db) = sig(ctx, 1);
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    let (va, vb) = (SavedTensor::save(&pa), SavedTensor::save(&pb));
+    ClosureFunction::new("div", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        // d/da = g / b ; d/db = -g * a / b^2
+        let ga = raw_div(g, &b);
+        let gb = raw_neg(&raw_mul(g, &raw_div(&a, &raw_mul(&b, &b))));
+        vec![Some(grad_to(&ga, &sa, da)), Some(grad_to(&gb, &sb, db))]
+    })
+}
+
+fn k_maximum(ctx: &OpCtx) -> Tensor {
+    binary_arith!("maximum", ctx.input(0), ctx.input(1), |x, y| x.max(y))
+}
+
+fn bw_maximum(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (sa, da) = sig(ctx, 0);
+    let (sb, db) = sig(ctx, 1);
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    let (va, vb) = (SavedTensor::save(&pa), SavedTensor::save(&pb));
+    ClosureFunction::new("maximum", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        let ma = mask_ge(&a, &b);
+        let mb = mask_lt(&a, &b);
+        vec![
+            Some(grad_to(&raw_mul(g, &ma), &sa, da)),
+            Some(grad_to(&raw_mul(g, &mb), &sb, db)),
+        ]
+    })
+}
+
+fn k_eq(ctx: &OpCtx) -> Tensor {
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    match pa.dtype() {
+        DType::F32 => binary_map_t::<f32, f32>("eq", &pa, &pb, |x, y| if x == y { 1.0 } else { 0.0 }),
+        DType::F64 => binary_map_t::<f64, f64>("eq", &pa, &pb, |x, y| if x == y { 1.0 } else { 0.0 }),
+        DType::I64 => binary_map_t::<i64, i64>("eq", &pa, &pb, |x, y| if x == y { 1 } else { 0 }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Unary ops
+// ---------------------------------------------------------------------
+
+fn k_neg(ctx: &OpCtx) -> Tensor {
+    raw_neg(ctx.input(0))
+}
+
+fn bw_neg(_ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    ClosureFunction::new("neg", move |g| vec![Some(raw_neg(g))])
+}
+
+/// Unary ops whose derivative is a function of the *output* save the
+/// output (smaller live set than the input when the input is a temp).
+macro_rules! unary_from_output {
+    ($kname:ident, $bwname:ident, $opname:literal, |$x:ident| $fwd:expr, |$y:ident| $dbody:expr) => {
+        fn $kname(ctx: &OpCtx) -> Tensor {
+            float_unary!($opname, ctx.input(0), |$x| $fwd)
+        }
+        fn $bwname(_ctx: &OpCtx, out: &Tensor) -> Box<dyn Function> {
+            let saved = SavedTensor::save(out);
+            ClosureFunction::new($opname, move |g| {
+                let y = saved.unpack();
+                let dydx = float_unary!(concat!($opname, "_bwd"), &y, |$y| $dbody);
+                vec![Some(raw_mul(g, &dydx))]
+            })
+        }
+    };
+}
+
+unary_from_output!(k_exp, bw_exp, "exp", |x| x.exp(), |y| y);
+unary_from_output!(
+    k_sigmoid,
+    bw_sigmoid,
+    "sigmoid",
+    |x| 1.0 / (1.0 + (-x).exp()),
+    |y| y * (1.0 - y)
+);
+unary_from_output!(k_tanh, bw_tanh, "tanh", |x| x.tanh(), |y| 1.0 - y * y);
+unary_from_output!(k_sqrt, bw_sqrt, "sqrt", |x| x.sqrt(), |y| 0.5 / y);
+unary_from_output!(
+    k_relu,
+    bw_relu,
+    "relu",
+    |x| x.max(0.0),
+    |y| if y > 0.0 { 1.0 } else { 0.0 }
+);
+
+fn k_log(ctx: &OpCtx) -> Tensor {
+    float_unary!("log", ctx.input(0), |x| x.ln())
+}
+
+fn bw_log(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let saved = SavedTensor::save(ctx.input(0));
+    ClosureFunction::new("log", move |g| {
+        let x = saved.unpack();
+        let dydx = float_unary!("log_bwd", &x, |x| 1.0 / x);
+        vec![Some(raw_mul(g, &dydx))]
+    })
+}
+
+// ---------------------------------------------------------------------
+// Scalar-parameter ops
+// ---------------------------------------------------------------------
+
+fn k_add_scalar(ctx: &OpCtx) -> Tensor {
+    let s = ctx.scalar(0);
+    float_scalar!("add_scalar", ctx.input(0), s, |x, sv| x + sv)
+}
+
+fn bw_add_scalar(_ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    ClosureFunction::new("add_scalar", move |g| vec![Some(g.clone())])
+}
+
+fn k_mul_scalar(ctx: &OpCtx) -> Tensor {
+    raw_mul_scalar(ctx.input(0), ctx.scalar(0))
+}
+
+fn bw_mul_scalar(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let s = ctx.scalar(0);
+    ClosureFunction::new("mul_scalar", move |g| vec![Some(raw_mul_scalar(g, s))])
+}
+
+fn k_pow_scalar(ctx: &OpCtx) -> Tensor {
+    let p = ctx.scalar(0);
+    float_scalar!("pow", ctx.input(0), p, |x, pv| x.powf(pv))
+}
+
+fn bw_pow_scalar(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let p = ctx.scalar(0);
+    let saved = SavedTensor::save(ctx.input(0));
+    ClosureFunction::new("pow", move |g| {
+        let x = saved.unpack();
+        let dydx = float_scalar!("pow_bwd", &x, p, |x, pv| pv * x.powf(pv - 1.0));
+        vec![Some(raw_mul(g, &dydx))]
+    })
+}
+
+fn k_clamp(ctx: &OpCtx) -> Tensor {
+    let (lo, hi) = (ctx.scalar(0), ctx.scalar(1));
+    match ctx.input(0).dtype() {
+        DType::F32 => scalar2_map_t::<f32>("clamp", ctx.input(0), lo as f32, hi as f32, |x, a, b| {
+            x.clamp(a, b)
+        }),
+        DType::F64 => scalar2_map_t::<f64>("clamp", ctx.input(0), lo, hi, |x, a, b| x.clamp(a, b)),
+        other => torsk_bail!("clamp: unsupported dtype {other}"),
+    }
+}
+
+fn bw_clamp(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (lo, hi) = (ctx.scalar(0), ctx.scalar(1));
+    let saved = SavedTensor::save(ctx.input(0));
+    ClosureFunction::new("clamp", move |g| {
+        let x = saved.unpack();
+        let mask = match x.dtype() {
+            DType::F32 => scalar2_map_t::<f32>("clamp_mask", &x, lo as f32, hi as f32, |x, a, b| {
+                if x >= a && x <= b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }),
+            DType::F64 => scalar2_map_t::<f64>("clamp_mask", &x, lo, hi, |x, a, b| {
+                if x >= a && x <= b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }),
+            other => torsk_bail!("clamp: unsupported dtype {other}"),
+        };
+        vec![Some(raw_mul(g, &mask))]
+    })
+}
+
+// ---------------------------------------------------------------------
+// Cast
+// ---------------------------------------------------------------------
+
+fn k_cast(ctx: &OpCtx) -> Tensor {
+    let t = ctx.input(0);
+    let dt = ctx.dtype(0);
+    if t.dtype() == dt {
+        // Fresh impl so the dispatcher can attach a grad_fn without
+        // touching the input's own autograd metadata.
+        t.detach()
+    } else {
+        cast_to(t, dt)
+    }
+}
+
+fn bw_cast(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let dt = ctx.input(0).dtype();
+    ClosureFunction::new("cast", move |g| vec![Some(cast_to(g, dt))])
+}
+
+// ---------------------------------------------------------------------
+// Registration
+// ---------------------------------------------------------------------
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(OpDef::new("add", 2, 2, NUMERIC).kernel_all(k_add).backward(bw_add));
+    reg.add(OpDef::new("sub", 2, 2, NUMERIC).kernel_all(k_sub).backward(bw_sub));
+    reg.add(OpDef::new("mul", 2, 2, NUMERIC).kernel_all(k_mul).backward(bw_mul));
+    reg.add(OpDef::new("div", 2, 2, NUMERIC).kernel_all(k_div).backward(bw_div));
+    reg.add(OpDef::new("maximum", 2, 2, NUMERIC).kernel_all(k_maximum).backward(bw_maximum));
+    reg.add(OpDef::new("eq", 2, 2, NUMERIC).kernel_all(k_eq));
+
+    reg.add(OpDef::new("neg", 1, 1, NUMERIC).kernel_all(k_neg).backward(bw_neg));
+    reg.add(OpDef::new("exp", 1, 1, FLOATS).kernel_all(k_exp).backward(bw_exp));
+    reg.add(OpDef::new("log", 1, 1, FLOATS).kernel_all(k_log).backward(bw_log));
+    reg.add(OpDef::new("sqrt", 1, 1, FLOATS).kernel_all(k_sqrt).backward(bw_sqrt));
+    reg.add(OpDef::new("relu", 1, 1, FLOATS).kernel_all(k_relu).backward(bw_relu));
+    reg.add(OpDef::new("sigmoid", 1, 1, FLOATS).kernel_all(k_sigmoid).backward(bw_sigmoid));
+    reg.add(OpDef::new("tanh", 1, 1, FLOATS).kernel_all(k_tanh).backward(bw_tanh));
+
+    reg.add(OpDef::new("add_scalar", 1, 1, FLOATS).kernel_all(k_add_scalar).backward(bw_add_scalar));
+    reg.add(OpDef::new("mul_scalar", 1, 1, FLOATS).kernel_all(k_mul_scalar).backward(bw_mul_scalar));
+    reg.add(OpDef::new("pow_scalar", 1, 1, FLOATS).kernel_all(k_pow_scalar).backward(bw_pow_scalar));
+    reg.add(OpDef::new("clamp", 1, 1, FLOATS).kernel_all(k_clamp).backward(bw_clamp));
+
+    reg.add(OpDef::new("cast", 1, 1, NUMERIC).kernel_all(k_cast).backward(bw_cast));
+}

@@ -1,0 +1,82 @@
+//! Indexing kernel entries: embedding lookup (gather rows) with
+//! scatter-add backward, and one-hot encoding.
+
+use crate::autograd::{ClosureFunction, Function};
+use crate::device;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+/// Embedding lookup: `weight [V, D]` gathered by i64 `indices [..]` ->
+/// `[.., D]`. Inputs: [weight, indices].
+fn k_embedding(ctx: &OpCtx) -> Tensor {
+    let (weight, indices) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(weight.ndim() == 2, "embedding: weight must be [V, D]");
+    torsk_assert!(indices.dtype() == DType::I64, "embedding: indices must be i64");
+    let (v, d) = (weight.size(0), weight.size(1));
+    let w = weight.contiguous();
+    let idx = indices.contiguous();
+    let n = idx.numel();
+    let mut out_shape = indices.shape().to_vec();
+    out_shape.push(d);
+    let out = Tensor::empty(&out_shape, DType::F32, weight.device());
+    {
+        let (wp, ip, op) = (w.data_ptr(), idx.data_ptr(), out.data_ptr());
+        device::dispatch(weight.device(), "embedding", move || unsafe {
+            let wv = wp.as_slice::<f32>(0, v * d);
+            let iv = ip.as_slice::<i64>(0, n);
+            let ov = op.as_mut_slice::<f32>(0, n * d);
+            for (r, &i) in iv.iter().enumerate() {
+                assert!((0..v as i64).contains(&i), "embedding index {i} out of range 0..{v}");
+                ov[r * d..(r + 1) * d].copy_from_slice(&wv[i as usize * d..(i as usize + 1) * d]);
+            }
+        });
+    }
+    ctx.save(idx);
+    out
+}
+
+fn bw_embedding(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (v, d) = (ctx.input(0).size(0), ctx.input(0).size(1));
+    let dev = ctx.input(0).device();
+    let idx = ctx.saved(0);
+    ClosureFunction::new("embedding", move |g| {
+        let g = g.contiguous();
+        let gv = g.to_vec::<f32>();
+        let iv = idx.to_vec::<i64>();
+        let mut gw = vec![0.0f32; v * d];
+        for (r, &i) in iv.iter().enumerate() {
+            let row = &gv[r * d..(r + 1) * d];
+            let acc = &mut gw[i as usize * d..(i as usize + 1) * d];
+            for (a, &x) in acc.iter_mut().zip(row.iter()) {
+                *a += x;
+            }
+        }
+        vec![Some(Tensor::from_vec(gw, &[v, d]).to_device(dev)), None]
+    })
+}
+
+/// One-hot encode i64 `indices [N]` into f32 `[N, classes]`. No grad.
+fn k_one_hot(ctx: &OpCtx) -> Tensor {
+    let indices = ctx.input(0);
+    let classes = ctx.usize(0);
+    torsk_assert!(indices.dtype() == DType::I64, "one_hot: indices must be i64");
+    let iv = indices.to_vec::<i64>();
+    let n = iv.len();
+    let mut data = vec![0.0f32; n * classes];
+    for (r, &i) in iv.iter().enumerate() {
+        torsk_assert!((0..classes as i64).contains(&i), "one_hot: index {i} out of range");
+        data[r * classes + i as usize] = 1.0;
+    }
+    let mut shape = indices.shape().to_vec();
+    shape.push(classes);
+    Tensor::from_vec(data, &shape).to_device(indices.device())
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(
+        OpDef::new("embedding", 2, 2, &[DType::F32]).kernel_all(k_embedding).backward(bw_embedding),
+    );
+    reg.add(OpDef::new("one_hot", 1, 1, &[DType::I64]).kernel_all(k_one_hot));
+}

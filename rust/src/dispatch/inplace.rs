@@ -1,0 +1,177 @@
+//! In-place mutation kernel entries (`add_`, `mul_`, `zero_`, `copy_`,
+//! `fill_`, `axpy_`).
+//!
+//! Every mutation bumps the storage version (§4.3). Mutating a leaf that
+//! requires grad outside `no_grad` is an error, mirroring PyTorch's
+//! "a leaf Variable that requires grad is being used in an in-place
+//! operation". The destination is input 0; the (unchanged) handle is the
+//! op result. No backward entries: in-place ops never record.
+
+use crate::autograd;
+use crate::device;
+use crate::tensor::{DType, Element, Tensor};
+use crate::torsk_assert;
+
+use super::{same_device, OpCtx, OpDef, Registry};
+
+fn check_inplace_allowed(t: &Tensor, name: &str) {
+    torsk_assert!(
+        !(autograd::grad_enabled() && t.requires_grad_flag() && t.grad_fn().is_none()),
+        "a leaf tensor that requires grad is being used in an in-place \
+         operation ({name}); wrap the update in no_grad()"
+    );
+}
+
+fn inplace_binary_t<T: Element>(name: &'static str, dst: &Tensor, src: &Tensor, f: fn(T, T) -> T) {
+    check_inplace_allowed(dst, name);
+    torsk_assert!(
+        dst.shape() == src.shape(),
+        "{name}: shape {:?} vs {:?}",
+        dst.shape(),
+        src.shape()
+    );
+    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
+    let dev = same_device(name, &[dst, src]);
+    let src = src.contiguous();
+    let n = dst.numel();
+    let (dp, sp) = (dst.data_ptr(), src.data_ptr());
+    device::dispatch(dev, name, move || unsafe {
+        let d = dp.as_mut_slice::<T>(0, n);
+        let s = sp.as_slice::<T>(0, n);
+        for i in 0..n {
+            d[i] = f(d[i], s[i]);
+        }
+    });
+    dst.bump_version();
+}
+
+fn inplace_scalar_t<T: Element>(name: &'static str, dst: &Tensor, s: T, f: fn(T, T) -> T) {
+    check_inplace_allowed(dst, name);
+    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
+    let n = dst.numel();
+    let dp = dst.data_ptr();
+    device::dispatch(dst.device(), name, move || unsafe {
+        let d = dp.as_mut_slice::<T>(0, n);
+        for x in d.iter_mut() {
+            *x = f(*x, s);
+        }
+    });
+    dst.bump_version();
+}
+
+/// Instantiate an in-place binary kernel over the destination dtype. The
+/// source must match (no silent promotion into a fixed-size buffer).
+macro_rules! inplace_binary {
+    ($name:expr, $dst:expr, $src:expr, |$x:ident, $y:ident| $body:expr) => {{
+        let (dst, src) = ($dst, $src);
+        torsk_assert!(
+            dst.dtype() == src.dtype(),
+            "{}: dtype mismatch {} vs {}",
+            $name,
+            dst.dtype(),
+            src.dtype()
+        );
+        match dst.dtype() {
+            DType::F32 => inplace_binary_t::<f32>($name, dst, src, |$x, $y| $body),
+            DType::F64 => inplace_binary_t::<f64>($name, dst, src, |$x, $y| $body),
+            DType::I64 => inplace_binary_t::<i64>($name, dst, src, |$x, $y| $body),
+        }
+    }};
+}
+
+fn k_add_(ctx: &OpCtx) -> Tensor {
+    inplace_binary!("add_", ctx.input(0), ctx.input(1), |a, b| a + b);
+    ctx.input(0).clone()
+}
+
+fn k_sub_(ctx: &OpCtx) -> Tensor {
+    inplace_binary!("sub_", ctx.input(0), ctx.input(1), |a, b| a - b);
+    ctx.input(0).clone()
+}
+
+fn k_mul_(ctx: &OpCtx) -> Tensor {
+    inplace_binary!("mul_", ctx.input(0), ctx.input(1), |a, b| a * b);
+    ctx.input(0).clone()
+}
+
+fn k_copy_(ctx: &OpCtx) -> Tensor {
+    inplace_binary!("copy_", ctx.input(0), ctx.input(1), |_a, b| b);
+    ctx.input(0).clone()
+}
+
+/// `dst += alpha * src` — the SGD update primitive.
+fn k_axpy_(ctx: &OpCtx) -> Tensor {
+    let (dst, src) = (ctx.input(0), ctx.input(1));
+    let alpha = ctx.f32(0);
+    check_inplace_allowed(dst, "axpy_");
+    torsk_assert!(dst.shape() == src.shape(), "axpy_: shape mismatch");
+    torsk_assert!(dst.dtype() == src.dtype(), "axpy_: dtype mismatch");
+    torsk_assert!(dst.is_contiguous(), "axpy_: destination must be contiguous");
+    let dev = same_device("axpy_", &[dst, src]);
+    let src_c = src.contiguous();
+    let n = dst.numel();
+    let (dp, sp) = (dst.data_ptr(), src_c.data_ptr());
+    match dst.dtype() {
+        DType::F32 => device::dispatch(dev, "axpy_", move || unsafe {
+            let d = dp.as_mut_slice::<f32>(0, n);
+            let s = sp.as_slice::<f32>(0, n);
+            for i in 0..n {
+                d[i] += alpha * s[i];
+            }
+        }),
+        DType::F64 => {
+            let alpha = alpha as f64;
+            device::dispatch(dev, "axpy_", move || unsafe {
+                let d = dp.as_mut_slice::<f64>(0, n);
+                let s = sp.as_slice::<f64>(0, n);
+                for i in 0..n {
+                    d[i] += alpha * s[i];
+                }
+            })
+        }
+        other => crate::torsk_bail!("axpy_: unsupported dtype {other}"),
+    }
+    dst.bump_version();
+    dst.clone()
+}
+
+fn k_mul_scalar_(ctx: &OpCtx) -> Tensor {
+    let (dst, s) = (ctx.input(0), ctx.f32(0));
+    match dst.dtype() {
+        DType::F32 => inplace_scalar_t::<f32>("mul_scalar_", dst, s, |a, b| a * b),
+        DType::F64 => inplace_scalar_t::<f64>("mul_scalar_", dst, s as f64, |a, b| a * b),
+        other => crate::torsk_bail!("mul_scalar_: unsupported dtype {other}"),
+    }
+    dst.clone()
+}
+
+fn k_add_scalar_(ctx: &OpCtx) -> Tensor {
+    let (dst, s) = (ctx.input(0), ctx.f32(0));
+    match dst.dtype() {
+        DType::F32 => inplace_scalar_t::<f32>("add_scalar_", dst, s, |a, b| a + b),
+        DType::F64 => inplace_scalar_t::<f64>("add_scalar_", dst, s as f64, |a, b| a + b),
+        other => crate::torsk_bail!("add_scalar_: unsupported dtype {other}"),
+    }
+    dst.clone()
+}
+
+fn k_fill_(ctx: &OpCtx) -> Tensor {
+    let (dst, v) = (ctx.input(0), ctx.f32(0));
+    match dst.dtype() {
+        DType::F32 => inplace_scalar_t::<f32>("fill_", dst, v, |_a, b| b),
+        DType::F64 => inplace_scalar_t::<f64>("fill_", dst, v as f64, |_a, b| b),
+        DType::I64 => inplace_scalar_t::<i64>("fill_", dst, i64::from_f64(v as f64), |_a, b| b),
+    }
+    dst.clone()
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(OpDef::new("add_", 2, 2, &[]).kernel_all(k_add_));
+    reg.add(OpDef::new("sub_", 2, 2, &[]).kernel_all(k_sub_));
+    reg.add(OpDef::new("mul_", 2, 2, &[]).kernel_all(k_mul_));
+    reg.add(OpDef::new("copy_", 2, 2, &[]).kernel_all(k_copy_));
+    reg.add(OpDef::new("axpy_", 2, 2, super::elementwise::FLOATS).kernel_all(k_axpy_));
+    reg.add(OpDef::new("mul_scalar_", 1, 1, super::elementwise::FLOATS).kernel_all(k_mul_scalar_));
+    reg.add(OpDef::new("add_scalar_", 1, 1, super::elementwise::FLOATS).kernel_all(k_add_scalar_));
+    reg.add(OpDef::new("fill_", 1, 1, &[]).kernel_all(k_fill_));
+}

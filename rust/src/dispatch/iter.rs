@@ -1,0 +1,243 @@
+//! `TensorIter`-style shared iteration planning for elementwise kernels.
+//!
+//! Mirrors ATen's `TensorIterator`: the *host* resolves broadcasting and
+//! picks an execution strategy once, and every dtype-monomorphized kernel
+//! then drives the same plan. Three strategies, fastest first:
+//!
+//! 1. **Fast**: all operands dense and same-shape — one parallel flat loop.
+//! 2. **Suffix**: a trailing run of dims over which each operand advances
+//!    either contiguously (step 1) or not at all (step 0, broadcast); the
+//!    inner loop is tight and vectorizable, the odometer only walks the
+//!    leading dims. This is what keeps `x * gamma[1,C,1,1]`-style ops fast.
+//! 3. **Strided**: fully generic odometer walk (rare).
+
+use crate::tensor::shape::{broadcast_shapes, broadcast_strides, numel, StridedIter};
+use crate::tensor::storage::SendPtr;
+use crate::tensor::{Element, Tensor};
+
+/// Execution strategy for a planned elementwise traversal.
+enum BinMode {
+    Fast,
+    Suffix {
+        outer_shape: Vec<usize>,
+        outer_sa: Vec<usize>,
+        outer_sb: Vec<usize>,
+        inner: usize,
+        step_a: usize,
+        step_b: usize,
+    },
+    Strided {
+        sa: Vec<usize>,
+        sb: Vec<usize>,
+    },
+}
+
+/// A resolved two-operand broadcast traversal (the `TensorIter`).
+pub(crate) struct TensorIter {
+    pub out_shape: Vec<usize>,
+    pub n: usize,
+    mode: BinMode,
+}
+
+impl TensorIter {
+    /// Plan the traversal for `a OP b` with NumPy broadcasting.
+    pub(crate) fn binary(a: &Tensor, b: &Tensor) -> TensorIter {
+        let out_shape = broadcast_shapes(a.shape(), b.shape());
+        let n = numel(&out_shape);
+        let fast = a.shape() == out_shape.as_slice()
+            && b.shape() == out_shape.as_slice()
+            && a.is_contiguous()
+            && b.is_contiguous();
+        if fast {
+            return TensorIter { out_shape, n, mode: BinMode::Fast };
+        }
+        let sa = broadcast_strides(a.shape(), a.strides(), &out_shape);
+        let sb = broadcast_strides(b.shape(), b.strides(), &out_shape);
+        let (t, step_a, step_b) = linear_suffix(&out_shape, &sa, &sb);
+        let rank = out_shape.len();
+        let inner: usize = out_shape[rank - t..].iter().product();
+        if t > 0 && inner > 1 {
+            let mode = BinMode::Suffix {
+                outer_shape: out_shape[..rank - t].to_vec(),
+                outer_sa: sa[..rank - t].to_vec(),
+                outer_sb: sb[..rank - t].to_vec(),
+                inner,
+                step_a,
+                step_b,
+            };
+            TensorIter { out_shape, n, mode }
+        } else {
+            TensorIter { out_shape, n, mode: BinMode::Strided { sa, sb } }
+        }
+    }
+
+    /// Drive the planned traversal with a scalar kernel `f`, reading `T`
+    /// operands and writing `O` outputs. Runs on whatever thread executes
+    /// the kernel (host or stream worker). Caller guarantees `ap`/`bp`
+    /// point to `T` data valid for this plan's operand extents and `op`
+    /// to an exclusive `O` buffer of `n` elements.
+    pub(crate) fn run_binary<T: Element, O: Element>(
+        &self,
+        ap: SendPtr,
+        bp: SendPtr,
+        op: SendPtr,
+        f: fn(T, T) -> O,
+    ) {
+        let n = self.n;
+        if n == 0 {
+            return;
+        }
+        match &self.mode {
+            BinMode::Fast => unsafe {
+                let av = ap.as_slice::<T>(0, n);
+                let bv = bp.as_slice::<T>(0, n);
+                crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
+                    // SAFETY: disjoint ranges per chunk.
+                    let ov = std::slice::from_raw_parts_mut(op.ptr() as *mut O, n);
+                    for i in s..e {
+                        ov[i] = f(av[i], bv[i]);
+                    }
+                });
+            },
+            BinMode::Suffix { outer_shape, outer_sa, outer_sb, inner, step_a, step_b } => unsafe {
+                let inner = *inner;
+                let (step_a, step_b) = (*step_a, *step_b);
+                let ov = op.as_mut_slice::<O>(0, n);
+                let ia = StridedIter::new(outer_shape, outer_sa);
+                let ib = StridedIter::new(outer_shape, outer_sb);
+                let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
+                for (chunk, (offa, offb)) in ov.chunks_mut(inner).zip(ia.zip(ib)) {
+                    let pa = pa0.add(offa);
+                    let pb = pb0.add(offb);
+                    match (step_a, step_b) {
+                        (1, 0) => {
+                            let s = *pb;
+                            let av = std::slice::from_raw_parts(pa, inner);
+                            for (o, &x) in chunk.iter_mut().zip(av) {
+                                *o = f(x, s);
+                            }
+                        }
+                        (0, 1) => {
+                            let s = *pa;
+                            let bv = std::slice::from_raw_parts(pb, inner);
+                            for (o, &y) in chunk.iter_mut().zip(bv) {
+                                *o = f(s, y);
+                            }
+                        }
+                        (1, 1) => {
+                            let av = std::slice::from_raw_parts(pa, inner);
+                            let bv = std::slice::from_raw_parts(pb, inner);
+                            for ((o, &x), &y) in chunk.iter_mut().zip(av).zip(bv) {
+                                *o = f(x, y);
+                            }
+                        }
+                        _ => {
+                            let s = f(*pa, *pb);
+                            chunk.fill(s);
+                        }
+                    }
+                }
+            },
+            BinMode::Strided { sa, sb } => unsafe {
+                let ov = op.as_mut_slice::<O>(0, n);
+                let ia = StridedIter::new(&self.out_shape, sa);
+                let ib = StridedIter::new(&self.out_shape, sb);
+                let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
+                for ((o, offa), offb) in ov.iter_mut().zip(ia).zip(ib) {
+                    *o = f(*pa0.add(offa), *pb0.add(offb));
+                }
+            },
+        }
+    }
+}
+
+/// Flat parallel map for dense unary traversals (input made contiguous by
+/// the caller). Caller guarantees `ap` points to `n` valid `T`s and `op`
+/// to an exclusive `O` buffer of `n` elements.
+pub(crate) fn run_unary<T: Element, O: Element>(n: usize, ap: SendPtr, op: SendPtr, f: fn(T) -> O) {
+    if n == 0 {
+        return;
+    }
+    unsafe {
+        let av = ap.as_slice::<T>(0, n);
+        crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
+            // SAFETY: disjoint ranges per chunk.
+            let ov = std::slice::from_raw_parts_mut(op.ptr() as *mut O, n);
+            for i in s..e {
+                ov[i] = f(av[i]);
+            }
+        });
+    }
+}
+
+/// Longest trailing dim-suffix over which both stride vectors advance
+/// linearly (contiguously for the suffix's own shape, or with stride 0).
+/// Returns (suffix_len_in_dims, step_a, step_b) with steps in {0, 1}.
+pub(crate) fn linear_suffix(shape: &[usize], sa: &[usize], sb: &[usize]) -> (usize, usize, usize) {
+    let rank = shape.len();
+    let classify = |strides: &[usize], t: usize| -> Option<usize> {
+        // Suffix of length t: all-zero (step 0) or block-contiguous (step 1).
+        let suffix_shape = &shape[rank - t..];
+        let suffix = &strides[rank - t..];
+        if suffix.iter().zip(suffix_shape).all(|(&s, &d)| s == 0 || d == 1) {
+            return Some(0);
+        }
+        let mut acc = 1usize;
+        for d in (0..t).rev() {
+            if suffix_shape[d] != 1 && suffix[d] != acc {
+                return None;
+            }
+            acc *= suffix_shape[d].max(1);
+        }
+        Some(1)
+    };
+    let mut best = (0usize, 0usize, 0usize);
+    for t in 1..=rank {
+        match (classify(sa, t), classify(sb, t)) {
+            (Some(x), Some(y)) => best = (t, x, y),
+            _ => break,
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_fast_for_dense_same_shape() {
+        let a = Tensor::ones(&[2, 3]);
+        let b = Tensor::ones(&[2, 3]);
+        let it = TensorIter::binary(&a, &b);
+        assert_eq!(it.out_shape, vec![2, 3]);
+        assert!(matches!(it.mode, BinMode::Fast));
+    }
+
+    #[test]
+    fn plan_suffix_for_row_broadcast() {
+        let a = Tensor::ones(&[4, 8]);
+        let b = Tensor::ones(&[8]);
+        let it = TensorIter::binary(&a, &b);
+        assert_eq!(it.out_shape, vec![4, 8]);
+        assert!(matches!(it.mode, BinMode::Suffix { .. }));
+    }
+
+    #[test]
+    fn plan_zero_element_output() {
+        let a = Tensor::from_vec(Vec::<f32>::new(), &[2, 0]);
+        let b = Tensor::ones(&[2, 1]);
+        let it = TensorIter::binary(&a, &b);
+        assert_eq!(it.out_shape, vec![2, 0]);
+        assert_eq!(it.n, 0);
+    }
+
+    #[test]
+    fn linear_suffix_detects_contig_and_broadcast() {
+        let (t, sa, sb) = linear_suffix(&[2, 3], &[3, 1], &[0, 1]);
+        assert_eq!((t, sa, sb), (2, 1, 1));
+        let (t, sa, sb) = linear_suffix(&[2, 3], &[3, 1], &[1, 0]);
+        assert_eq!(t, 1);
+        assert_eq!((sa, sb), (1, 0));
+    }
+}

@@ -1,0 +1,187 @@
+//! Matrix-multiplication ops for the dispatcher: `matmul`, batched `bmm`,
+//! and the fused `linear` (x @ Wᵀ + b). F32 runs the blocked SGEMM; F64
+//! runs the precision-oriented DGEMM.
+
+use crate::autograd::{ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::kernels::matmul::{dgemm, dgemm_batched, sgemm, sgemm_batched};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::elementwise::{raw_add, FLOATS};
+use super::{same_device, OpCtx, OpDef, Registry};
+
+/// Raw 2-D matmul (no autograd) — shared by forward and backward math.
+pub(crate) fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
+    let dev = same_device("matmul", &[a, b]);
+    torsk_assert!(
+        a.ndim() == 2 && b.ndim() == 2,
+        "matmul: need 2-D, got {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    torsk_assert!(
+        a.dtype() == b.dtype(),
+        "matmul: dtype mismatch {} x {}",
+        a.dtype(),
+        b.dtype()
+    );
+    let (m, k) = (a.size(0), a.size(1));
+    let (k2, n) = (b.size(0), b.size(1));
+    torsk_assert!(k == k2, "matmul: inner dims {k} vs {k2}");
+    let a = a.contiguous();
+    let b = b.contiguous();
+    let dtype = a.dtype();
+    let out = Tensor::empty(&[m, n], dtype, dev);
+    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    device::dispatch(dev, "matmul", move || unsafe {
+        match dtype {
+            DType::F32 => sgemm(
+                m,
+                n,
+                k,
+                1.0,
+                ap.as_slice::<f32>(0, m * k),
+                bp.as_slice::<f32>(0, k * n),
+                0.0,
+                op.as_mut_slice::<f32>(0, m * n),
+            ),
+            DType::F64 => dgemm(
+                m,
+                n,
+                k,
+                ap.as_slice::<f64>(0, m * k),
+                bp.as_slice::<f64>(0, k * n),
+                op.as_mut_slice::<f64>(0, m * n),
+            ),
+            _ => unreachable!("matmul schema admits floats only"),
+        }
+    });
+    out
+}
+
+fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
+    let dev = same_device("bmm", &[a, b]);
+    torsk_assert!(a.ndim() == 3 && b.ndim() == 3, "bmm: need 3-D");
+    torsk_assert!(a.dtype() == b.dtype(), "bmm: dtype mismatch {} x {}", a.dtype(), b.dtype());
+    let (batch, m, k) = (a.size(0), a.size(1), a.size(2));
+    let (b2, k2, n) = (b.size(0), b.size(1), b.size(2));
+    torsk_assert!(
+        batch == b2 && k == k2,
+        "bmm: shape mismatch {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let a = a.contiguous();
+    let b = b.contiguous();
+    let dtype = a.dtype();
+    let out = Tensor::empty(&[batch, m, n], dtype, dev);
+    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    device::dispatch(dev, "bmm", move || unsafe {
+        match dtype {
+            DType::F32 => sgemm_batched(
+                batch,
+                m,
+                n,
+                k,
+                ap.as_slice::<f32>(0, batch * m * k),
+                bp.as_slice::<f32>(0, batch * k * n),
+                op.as_mut_slice::<f32>(0, batch * m * n),
+            ),
+            DType::F64 => dgemm_batched(
+                batch,
+                m,
+                n,
+                k,
+                ap.as_slice::<f64>(0, batch * m * k),
+                bp.as_slice::<f64>(0, batch * k * n),
+                op.as_mut_slice::<f64>(0, batch * m * n),
+            ),
+            _ => unreachable!("bmm schema admits floats only"),
+        }
+    });
+    out
+}
+
+fn k_matmul(ctx: &OpCtx) -> Tensor {
+    matmul_raw(ctx.input(0), ctx.input(1))
+}
+
+fn bw_matmul(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (va, vb) = (SavedTensor::save(ctx.input(0)), SavedTensor::save(ctx.input(1)));
+    ClosureFunction::new("matmul", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        // dA = G @ Bᵀ ; dB = Aᵀ @ G
+        let ga = matmul_raw(g, &b.t().contiguous());
+        let gb = matmul_raw(&a.t().contiguous(), g);
+        vec![Some(ga), Some(gb)]
+    })
+}
+
+fn k_bmm(ctx: &OpCtx) -> Tensor {
+    bmm_raw(ctx.input(0), ctx.input(1))
+}
+
+fn bw_bmm(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (va, vb) = (SavedTensor::save(ctx.input(0)), SavedTensor::save(ctx.input(1)));
+    ClosureFunction::new("bmm", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        let bt = b.transpose(1, 2).contiguous();
+        let at = a.transpose(1, 2).contiguous();
+        vec![Some(bmm_raw(g, &bt)), Some(bmm_raw(&at, g))]
+    })
+}
+
+/// Fused linear layer: `x [N,in] @ Wᵀ [in,out] + b`, PyTorch weight layout
+/// `W [out,in]`. Bias is the optional third input.
+fn k_linear(ctx: &OpCtx) -> Tensor {
+    let (x, w) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(x.ndim() == 2 && w.ndim() == 2, "linear: x 2-D, w 2-D");
+    torsk_assert!(
+        x.size(1) == w.size(1),
+        "linear: in_features {} vs {}",
+        x.size(1),
+        w.size(1)
+    );
+    let wt = w.t().contiguous();
+    let y = matmul_raw(x, &wt);
+    match ctx.num_inputs() {
+        2 => y,
+        _ => {
+            let bias = ctx.input(2);
+            torsk_assert!(
+                bias.shape() == [w.size(0)],
+                "linear: bias shape {:?} for {} out features",
+                bias.shape(),
+                w.size(0)
+            );
+            raw_add(&y, bias)
+        }
+    }
+}
+
+fn bw_linear(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (vx, vw) = (SavedTensor::save(ctx.input(0)), SavedTensor::save(ctx.input(1)));
+    let has_bias = ctx.num_inputs() == 3;
+    let bias_cols = if has_bias { ctx.input(1).size(0) } else { 0 };
+    ClosureFunction::new("linear", move |g| {
+        let x = vx.unpack();
+        let w = vw.unpack();
+        // gx = G @ W ; gw = Gᵀ @ x ; gb = sum rows of G
+        let gx = matmul_raw(g, &w);
+        let gw = matmul_raw(&g.t().contiguous(), &x);
+        let mut grads = vec![Some(gx), Some(gw)];
+        if has_bias {
+            grads.push(Some(super::reduce::sum_to_shape(g, &[bias_cols])));
+        }
+        grads
+    })
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(OpDef::new("matmul", 2, 2, FLOATS).kernel_all(k_matmul).backward(bw_matmul));
+    reg.add(OpDef::new("bmm", 2, 2, FLOATS).kernel_all(k_bmm).backward(bw_bmm));
+    reg.add(OpDef::new("linear", 2, 3, FLOATS).kernel_all(k_linear).backward(bw_linear));
+}

@@ -1,0 +1,158 @@
+//! Loss kernels for the dispatcher: fused softmax/log-softmax and
+//! cross-entropy (f32 hot path), plus composite MSE/BCE (any float dtype,
+//! gradient graph built by the inner dispatched ops).
+
+use crate::autograd::{ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::kernels::softmax::{
+    cross_entropy_backward, cross_entropy_forward, log_softmax_backward_rows, log_softmax_rows,
+    softmax_backward_rows, softmax_rows,
+};
+use crate::ops;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+fn rows_cols(t: &Tensor) -> (usize, usize) {
+    torsk_assert!(t.ndim() >= 1, "softmax: needs at least 1 dim");
+    let cols = *t.shape().last().unwrap();
+    (t.numel() / cols.max(1), cols)
+}
+
+fn k_softmax(ctx: &OpCtx) -> Tensor {
+    let input = ctx.input(0);
+    let (rows, cols) = rows_cols(input);
+    let x = input.contiguous();
+    let out = Tensor::empty(x.shape(), DType::F32, x.device());
+    let (xp, op) = (x.data_ptr(), out.data_ptr());
+    let n = x.numel();
+    device::dispatch(x.device(), "softmax", move || unsafe {
+        softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
+    });
+    out
+}
+
+fn bw_softmax(ctx: &OpCtx, out: &Tensor) -> Box<dyn Function> {
+    let (rows, cols) = rows_cols(ctx.input(0));
+    let saved_y = SavedTensor::save(out);
+    ClosureFunction::new("softmax", move |g| {
+        let y = saved_y.unpack().contiguous();
+        let g = g.contiguous();
+        let yv = y.to_vec::<f32>();
+        let gv = g.to_vec::<f32>();
+        let mut gi = vec![0.0f32; yv.len()];
+        softmax_backward_rows(rows, cols, &yv, &gv, &mut gi);
+        vec![Some(Tensor::from_vec(gi, y.shape()).to_device(g.device()))]
+    })
+}
+
+fn k_log_softmax(ctx: &OpCtx) -> Tensor {
+    let input = ctx.input(0);
+    let (rows, cols) = rows_cols(input);
+    let x = input.contiguous();
+    let out = Tensor::empty(x.shape(), DType::F32, x.device());
+    let (xp, op) = (x.data_ptr(), out.data_ptr());
+    let n = x.numel();
+    device::dispatch(x.device(), "log_softmax", move || unsafe {
+        log_softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
+    });
+    out
+}
+
+fn bw_log_softmax(ctx: &OpCtx, out: &Tensor) -> Box<dyn Function> {
+    let (rows, cols) = rows_cols(ctx.input(0));
+    let saved_y = SavedTensor::save(out);
+    ClosureFunction::new("log_softmax", move |g| {
+        let y = saved_y.unpack().contiguous();
+        let g = g.contiguous();
+        let yv = y.to_vec::<f32>();
+        let gv = g.to_vec::<f32>();
+        let mut gi = vec![0.0f32; yv.len()];
+        log_softmax_backward_rows(rows, cols, &yv, &gv, &mut gi);
+        vec![Some(Tensor::from_vec(gi, y.shape()).to_device(g.device()))]
+    })
+}
+
+/// Fused cross-entropy: logits [N, C] (f32) + i64 targets [N] -> scalar
+/// mean loss. Runs synchronously on host data (the scalar is consumed by
+/// control flow anyway); log-probs are stashed for the backward builder.
+fn k_cross_entropy(ctx: &OpCtx) -> Tensor {
+    let (logits, targets) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(logits.ndim() == 2, "cross_entropy: logits must be [N, C]");
+    torsk_assert!(targets.dtype() == DType::I64, "cross_entropy: targets must be i64");
+    torsk_assert!(
+        targets.numel() == logits.size(0),
+        "cross_entropy: {} targets for {} rows",
+        targets.numel(),
+        logits.size(0)
+    );
+    let (rows, cols) = (logits.size(0), logits.size(1));
+    let xv = logits.contiguous().to_vec::<f32>();
+    let tv = targets.to_vec::<i64>();
+    let mut log_probs = vec![0.0f32; rows * cols];
+    let loss = cross_entropy_forward(rows, cols, &xv, &tv, &mut log_probs);
+    // Stash log-probs on host for the backward builder.
+    ctx.save(Tensor::from_vec(log_probs, &[rows, cols]).to_cpu());
+    Tensor::scalar(loss).to_device(logits.device())
+}
+
+fn bw_cross_entropy(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (rows, cols) = (ctx.input(0).size(0), ctx.input(0).size(1));
+    let shape = ctx.input(0).shape().to_vec();
+    let dev = ctx.input(0).device();
+    let log_probs = ctx.saved(0);
+    let tv = ctx.input(1).to_vec::<i64>();
+    ClosureFunction::new("cross_entropy", move |g| {
+        let gs = g.item();
+        let lp = log_probs.to_vec::<f32>();
+        let mut gi = vec![0.0f32; rows * cols];
+        cross_entropy_backward(rows, cols, &lp, &tv, gs, &mut gi);
+        // Targets get no gradient (second input).
+        vec![Some(Tensor::from_vec(gi, &shape).to_device(dev)), None]
+    })
+}
+
+/// Composite mean-squared-error loss (mean reduction); works for any
+/// float dtype via the generic elementwise/reduce entries.
+fn k_mse_loss(ctx: &OpCtx) -> Tensor {
+    let (pred, target) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(pred.shape() == target.shape(), "mse_loss: shape mismatch");
+    let diff = ops::sub(pred, target);
+    let sq = ops::mul(&diff, &diff);
+    ops::mean(&sq)
+}
+
+/// Composite binary cross-entropy on probabilities in (0,1), mean
+/// reduction.
+fn k_bce_loss(ctx: &OpCtx) -> Tensor {
+    let (pred, target) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(pred.shape() == target.shape(), "bce_loss: shape mismatch");
+    let eps = 1e-7;
+    let p = ops::clamp(pred, eps, 1.0 - eps);
+    // -[t*log(p) + (1-t)*log(1-p)]
+    let log_p = ops::log(&p);
+    let one_minus_p = ops::add_scalar(&ops::neg(&p), 1.0);
+    let log_1p = ops::log(&one_minus_p);
+    let one_minus_t = ops::add_scalar(&ops::neg(target), 1.0);
+    let pos = ops::mul(target, &log_p);
+    let neg_term = ops::mul(&one_minus_t, &log_1p);
+    ops::neg(&ops::mean(&ops::add(&pos, &neg_term)))
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    const F32_ONLY: &[DType] = &[DType::F32];
+    reg.add(OpDef::new("softmax", 1, 1, F32_ONLY).kernel_all(k_softmax).backward(bw_softmax));
+    reg.add(
+        OpDef::new("log_softmax", 1, 1, F32_ONLY)
+            .kernel_all(k_log_softmax)
+            .backward(bw_log_softmax),
+    );
+    reg.add(
+        OpDef::new("cross_entropy", 2, 2, F32_ONLY)
+            .kernel_all(k_cross_entropy)
+            .backward(bw_cross_entropy),
+    );
+    reg.add(OpDef::new("mse_loss", 2, 2, super::elementwise::FLOATS).kernel_all(k_mse_loss));
+    reg.add(OpDef::new("bce_loss", 2, 2, super::elementwise::FLOATS).kernel_all(k_bce_loss));
+}

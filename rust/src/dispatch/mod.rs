@@ -1,0 +1,554 @@
+//! The central operator dispatcher — torsk's ATen-style registry (§5.1).
+//!
+//! Every eager operator is declared **once**, as an [`OpDef`]: a schema
+//! (name, arity, dtype constraints) plus per-[`DispatchKey`] kernel
+//! entries. The public `ops::*` functions are thin shims over
+//! [`call`], which is the single choke point that
+//!
+//! 1. validates the schema (arity, dtype support, same-device),
+//! 2. resolves the backend key from the inputs' device (`Cpu` or `Sim`),
+//! 3. emits a host-track profiler span for *every* op with zero per-op
+//!    code (the §6.1 instrumentation comes for free), and
+//! 4. composes the `Autograd` wrapping key: when recording is on and the
+//!    op registered a backward builder, the output's `grad_fn` is recorded
+//!    uniformly — individual ops no longer hand-roll
+//!    `autograd::record(...)` boilerplate.
+//!
+//! Broadcasting and dtype promotion are resolved by the shared
+//! [`iter::TensorIter`] helper, so F32, F64 and I64 run through the same
+//! registry entries instead of per-op `f32 only` asserts.
+//!
+//! # Registering a new op
+//!
+//! A new operator (or a new backend for an existing one) is a registry
+//! entry, not a code audit:
+//!
+//! ```no_run
+//! use torsk::dispatch::{self, DispatchKey, OpCtx, OpDef, Param};
+//! use torsk::tensor::{DType, Tensor};
+//!
+//! // 1. A kernel: host resolves shapes, computes (or queues) the result.
+//! fn shifted_relu(ctx: &OpCtx) -> Tensor {
+//!     let x = ctx.input(0);
+//!     let shift = ctx.f32(0);
+//!     // Compose existing dispatched ops, or write a raw kernel.
+//!     torsk::ops::relu(&torsk::ops::add_scalar(x, shift))
+//! }
+//!
+//! // 2. One declaration: schema + per-key kernels (+ optional backward).
+//! dispatch::register_op(
+//!     OpDef::new("shifted_relu", 1, 1, &[DType::F32, DType::F64])
+//!         .kernel(DispatchKey::Cpu, shifted_relu)
+//!         .kernel(DispatchKey::Sim, shifted_relu),
+//! );
+//!
+//! // 3. Call it — profiling, device routing and schema checks are free.
+//! let y = dispatch::call("shifted_relu", &[&Tensor::ones(&[4])], &[Param::F32(1.0)]);
+//! assert_eq!(y.shape(), &[4]);
+//! ```
+
+pub(crate) mod conv;
+pub(crate) mod elementwise;
+pub(crate) mod index;
+pub(crate) mod inplace;
+pub(crate) mod iter;
+pub(crate) mod linalg;
+pub(crate) mod loss;
+pub(crate) mod norm;
+pub(crate) mod pool;
+pub(crate) mod reduce;
+pub(crate) mod views;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::autograd::{self, Function};
+use crate::device::Device;
+use crate::profiler;
+use crate::tensor::{DType, Tensor};
+use crate::{torsk_assert, torsk_bail};
+
+// ---------------------------------------------------------------------
+// Keys
+// ---------------------------------------------------------------------
+
+/// Dispatch keys, highest priority first. `Autograd` is a *wrapping* key:
+/// it does not select a kernel but wraps the backend call with graph
+/// recording. `Sim` and `Cpu` are backend keys selecting kernel table
+/// entries.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DispatchKey {
+    /// Graph-recording wrapper (active when grad mode is on and an input
+    /// requires grad).
+    Autograd,
+    /// Simulated-accelerator backend: kernels queue on the current stream.
+    Sim,
+    /// Host backend: kernels run inline on the calling thread.
+    Cpu,
+}
+
+/// Number of backend (kernel-table) keys.
+const NUM_BACKEND_KEYS: usize = 2;
+
+impl DispatchKey {
+    /// The backend key serving tensors on `device`.
+    pub fn for_device(d: Device) -> DispatchKey {
+        match d {
+            Device::Cpu => DispatchKey::Cpu,
+            Device::Sim => DispatchKey::Sim,
+        }
+    }
+
+    fn backend_index(self) -> usize {
+        match self {
+            DispatchKey::Cpu => 0,
+            DispatchKey::Sim => 1,
+            DispatchKey::Autograd => {
+                crate::torsk_bail!("Autograd is a wrapping key, not a backend kernel slot")
+            }
+        }
+    }
+}
+
+/// The key stack [`call`] walks for a given op invocation (diagnostics /
+/// tests): `[Autograd, backend]` when recording would happen, else
+/// `[backend]`.
+pub fn key_stack(inputs: &[&Tensor]) -> Vec<DispatchKey> {
+    let mut keys = Vec::with_capacity(2);
+    if autograd::should_record(inputs) {
+        keys.push(DispatchKey::Autograd);
+    }
+    if let Some(first) = inputs.first() {
+        keys.push(DispatchKey::for_device(first.device()));
+    }
+    keys
+}
+
+// ---------------------------------------------------------------------
+// Non-tensor op arguments
+// ---------------------------------------------------------------------
+
+/// A non-tensor operator argument (the boxed-scalar side of an op call).
+#[derive(Clone, Debug)]
+pub enum Param {
+    F32(f32),
+    F64(f64),
+    I64(i64),
+    Usize(usize),
+    Bool(bool),
+    UsizeList(Vec<usize>),
+    DType(DType),
+}
+
+// ---------------------------------------------------------------------
+// Op call context
+// ---------------------------------------------------------------------
+
+/// Everything a kernel (and a backward builder) sees about one op call:
+/// tensor inputs, scalar params, resolved device, plus a stash for
+/// forward-computed intermediates the backward pass needs
+/// (`save`/`saved` — PyTorch's `ctx.save_for_backward`).
+pub struct OpCtx<'a> {
+    pub inputs: &'a [&'a Tensor],
+    pub params: &'a [Param],
+    pub device: Device,
+    saved: RefCell<Vec<Tensor>>,
+}
+
+impl<'a> OpCtx<'a> {
+    fn new(inputs: &'a [&'a Tensor], params: &'a [Param], device: Device) -> OpCtx<'a> {
+        OpCtx { inputs, params, device, saved: RefCell::new(Vec::new()) }
+    }
+
+    /// Tensor input `i`.
+    #[inline]
+    pub fn input(&self, i: usize) -> &Tensor {
+        self.inputs[i]
+    }
+
+    /// Number of tensor inputs (for ops with optional inputs, e.g. bias).
+    #[inline]
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Scalar param `i` as f32.
+    pub fn f32(&self, i: usize) -> f32 {
+        match self.param(i) {
+            Param::F32(v) => *v,
+            p => torsk_bail!("param {i}: expected f32, got {p:?}"),
+        }
+    }
+
+    /// Scalar param `i` widened to f64 (accepts `F32` — exact — or `F64`).
+    /// Kernels that instantiate per-dtype read through this so F64 tensors
+    /// never lose scalar precision to an f32 round-trip.
+    pub fn scalar(&self, i: usize) -> f64 {
+        match self.param(i) {
+            Param::F32(v) => *v as f64,
+            Param::F64(v) => *v,
+            p => torsk_bail!("param {i}: expected a float scalar, got {p:?}"),
+        }
+    }
+
+    /// Scalar param `i` as usize.
+    pub fn usize(&self, i: usize) -> usize {
+        match self.param(i) {
+            Param::Usize(v) => *v,
+            p => torsk_bail!("param {i}: expected usize, got {p:?}"),
+        }
+    }
+
+    /// Scalar param `i` as bool.
+    pub fn bool(&self, i: usize) -> bool {
+        match self.param(i) {
+            Param::Bool(v) => *v,
+            p => torsk_bail!("param {i}: expected bool, got {p:?}"),
+        }
+    }
+
+    /// Param `i` as a usize list (dims, kernel sizes).
+    pub fn usize_list(&self, i: usize) -> &[usize] {
+        match self.param(i) {
+            Param::UsizeList(v) => v,
+            p => torsk_bail!("param {i}: expected usize list, got {p:?}"),
+        }
+    }
+
+    /// Param `i` as a dtype.
+    pub fn dtype(&self, i: usize) -> DType {
+        match self.param(i) {
+            Param::DType(v) => *v,
+            p => torsk_bail!("param {i}: expected dtype, got {p:?}"),
+        }
+    }
+
+    fn param(&self, i: usize) -> &Param {
+        match self.params.get(i) {
+            Some(p) => p,
+            None => torsk_bail!("op called with {} params, kernel wants index {i}", self.params.len()),
+        }
+    }
+
+    /// Stash a forward-computed intermediate for the backward builder
+    /// (max-pool indices, batch-norm statistics, ...).
+    pub fn save(&self, t: Tensor) {
+        self.saved.borrow_mut().push(t);
+    }
+
+    /// Retrieve stash entry `i` (in `save` order).
+    pub fn saved(&self, i: usize) -> Tensor {
+        match self.saved.borrow().get(i) {
+            Some(t) => t.clone(),
+            None => torsk_bail!("backward wants saved tensor {i}, only {} stashed", self.saved.borrow().len()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Schema + definition
+// ---------------------------------------------------------------------
+
+/// A kernel entry: resolves shapes on the host, allocates the output and
+/// computes inline (CPU) or queues the computation (Sim).
+pub type KernelFn = fn(&OpCtx) -> Tensor;
+
+/// A backward builder: called at record time with the op context and the
+/// forward output; returns the backward [`Function`] whose `backward`
+/// yields one gradient per tensor input (in input order).
+pub type BackwardFn = fn(&OpCtx, &Tensor) -> Box<dyn Function>;
+
+/// Declared call signature of an op.
+#[derive(Clone, Copy, Debug)]
+pub struct OpSchema {
+    pub name: &'static str,
+    pub min_inputs: usize,
+    pub max_inputs: usize,
+    /// Allowed dtypes of the primary (first) input. Empty slice = any.
+    pub dtypes: &'static [DType],
+}
+
+impl OpSchema {
+    fn check(&self, inputs: &[&Tensor]) {
+        torsk_assert!(
+            inputs.len() >= self.min_inputs && inputs.len() <= self.max_inputs,
+            "{}: expected {}..={} tensor inputs, got {}",
+            self.name,
+            self.min_inputs,
+            self.max_inputs,
+            inputs.len()
+        );
+        if !self.dtypes.is_empty() {
+            let dt = inputs[0].dtype();
+            if !self.dtypes.contains(&dt) {
+                let supported: Vec<&str> = self.dtypes.iter().map(|d| d.name()).collect();
+                torsk_bail!(
+                    "{}: unsupported dtype {} (supported: {})",
+                    self.name,
+                    dt,
+                    supported.join(", ")
+                );
+            }
+        }
+    }
+}
+
+/// One operator: schema + per-backend kernels + optional backward builder.
+///
+/// Ops whose kernel *composes* other dispatched ops (layer-norm, losses)
+/// register no backward: their gradient graph is built by the inner calls.
+/// Fused ops register a [`BackwardFn`] and get recording for free.
+#[derive(Clone, Copy)]
+pub struct OpDef {
+    pub schema: OpSchema,
+    kernels: [Option<KernelFn>; NUM_BACKEND_KEYS],
+    backward: Option<BackwardFn>,
+}
+
+impl OpDef {
+    /// Start declaring an op: name, input arity range, allowed dtypes of
+    /// the first input (empty = any).
+    pub fn new(
+        name: &'static str,
+        min_inputs: usize,
+        max_inputs: usize,
+        dtypes: &'static [DType],
+    ) -> OpDef {
+        OpDef {
+            schema: OpSchema { name, min_inputs, max_inputs, dtypes },
+            kernels: [None; NUM_BACKEND_KEYS],
+            backward: None,
+        }
+    }
+
+    /// Attach a kernel for one backend key.
+    pub fn kernel(mut self, key: DispatchKey, f: KernelFn) -> OpDef {
+        self.kernels[key.backend_index()] = Some(f);
+        self
+    }
+
+    /// Attach the same kernel for every backend key (the common case: the
+    /// kernel body is queued or run inline by `device::dispatch`).
+    pub fn kernel_all(mut self, f: KernelFn) -> OpDef {
+        for slot in self.kernels.iter_mut() {
+            *slot = Some(f);
+        }
+        self
+    }
+
+    /// Attach the backward builder (enables the Autograd wrapping key).
+    pub fn backward(mut self, f: BackwardFn) -> OpDef {
+        self.backward = Some(f);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// The op registry. Built once with the built-in ops; extendable at
+/// runtime via [`register_op`].
+pub struct Registry {
+    ops: HashMap<&'static str, OpDef>,
+}
+
+impl Registry {
+    /// Insert an op definition; duplicate names are a bug.
+    pub fn add(&mut self, def: OpDef) {
+        let name = def.schema.name;
+        torsk_assert!(
+            self.ops.insert(name, def).is_none(),
+            "op '{name}' registered twice"
+        );
+    }
+}
+
+static REGISTRY: once_cell::sync::Lazy<RwLock<Registry>> = once_cell::sync::Lazy::new(|| {
+    let mut r = Registry { ops: HashMap::new() };
+    elementwise::register(&mut r);
+    linalg::register(&mut r);
+    reduce::register(&mut r);
+    loss::register(&mut r);
+    conv::register(&mut r);
+    pool::register(&mut r);
+    norm::register(&mut r);
+    index::register(&mut r);
+    inplace::register(&mut r);
+    views::register(&mut r);
+    RwLock::new(r)
+});
+
+/// Register an additional operator at runtime (new ops, new backends).
+pub fn register_op(def: OpDef) {
+    let name = def.schema.name;
+    // Check-then-insert without panicking under the lock (a poisoned
+    // registry would take every subsequent op call down with it).
+    let duplicate = {
+        let mut reg = REGISTRY.write().unwrap();
+        if reg.ops.contains_key(name) {
+            true
+        } else {
+            reg.ops.insert(name, def);
+            false
+        }
+    };
+    torsk_assert!(!duplicate, "op '{name}' registered twice");
+}
+
+/// Is an op with this name registered?
+pub fn has_op(name: &str) -> bool {
+    REGISTRY.read().unwrap().ops.contains_key(name)
+}
+
+/// Sorted names of all registered ops.
+pub fn op_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = REGISTRY.read().unwrap().ops.keys().copied().collect();
+    names.sort_unstable();
+    names
+}
+
+/// Check all tensors share a device; return it. Mirrors PyTorch's
+/// "expected all tensors on the same device" error.
+pub(crate) fn same_device(name: &str, tensors: &[&Tensor]) -> Device {
+    let d = tensors[0].device();
+    for t in tensors.iter().skip(1) {
+        torsk_assert!(
+            t.device() == d,
+            "{name}: expected all tensors to be on the same device, found {} and {}",
+            d,
+            t.device()
+        );
+    }
+    d
+}
+
+// ---------------------------------------------------------------------
+// The choke point
+// ---------------------------------------------------------------------
+
+/// Invoke operator `name` on `inputs` with scalar `params`.
+///
+/// This is the single path every eager op takes: schema validation, key
+/// resolution, per-op profiling and uniform autograd recording live here,
+/// once, instead of in ~40 op bodies.
+pub fn call(name: &str, inputs: &[&Tensor], params: &[Param]) -> Tensor {
+    let def = { REGISTRY.read().unwrap().ops.get(name).copied() };
+    let def = match def {
+        Some(d) => d,
+        None => {
+            let known = op_names().join(", ");
+            torsk_bail!("no operator named '{name}' is registered (known ops: {known})");
+        }
+    };
+    torsk_assert!(!inputs.is_empty(), "{name}: ops take at least one tensor input");
+    def.schema.check(inputs);
+    let device = same_device(name, inputs);
+    let key = DispatchKey::for_device(device);
+    let kernel = match def.kernels[key.backend_index()] {
+        Some(k) => k,
+        None => torsk_bail!("op '{name}' has no kernel registered for dispatch key {key:?}"),
+    };
+
+    // Free per-op profiling: one host span per dispatched op. The span name
+    // is only materialized when the profiler is recording.
+    let span = if profiler::enabled() {
+        Some(profiler::begin(profiler::Track::Host, &format!("op:{name}")))
+    } else {
+        None
+    };
+
+    let ctx = OpCtx::new(inputs, params, device);
+    let out = kernel(&ctx);
+
+    // The Autograd wrapping key: uniform graph recording.
+    if let Some(bw) = def.backward {
+        if autograd::should_record(inputs) {
+            autograd::record(inputs, &out, || bw(&ctx, &out));
+        }
+    }
+
+    if let Some(s) = span {
+        profiler::end(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_core_ops() {
+        for op in ["add", "mul", "matmul", "sum", "relu", "conv2d", "cross_entropy"] {
+            assert!(has_op(op), "missing builtin op {op}");
+        }
+        assert!(!has_op("definitely_not_an_op"));
+    }
+
+    #[test]
+    fn op_names_sorted_nonempty() {
+        let names = op_names();
+        assert!(names.len() >= 30, "expected a full registry, got {}", names.len());
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    #[should_panic(expected = "no operator named")]
+    fn unknown_op_panics_with_catalog() {
+        let a = Tensor::ones(&[1]);
+        call("definitely_not_an_op", &[&a], &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_registration_panics() {
+        register_op(OpDef::new("add", 2, 2, &[]));
+    }
+
+    #[test]
+    fn key_stack_reflects_autograd_and_device() {
+        let a = Tensor::ones(&[2]);
+        assert_eq!(key_stack(&[&a]), vec![DispatchKey::Cpu]);
+        let g = Tensor::ones(&[2]).requires_grad(true);
+        assert_eq!(key_stack(&[&g]), vec![DispatchKey::Autograd, DispatchKey::Cpu]);
+        let s = Tensor::ones(&[2]).to_sim();
+        assert_eq!(key_stack(&[&s]), vec![DispatchKey::Sim]);
+    }
+
+    #[test]
+    fn register_and_call_custom_op() {
+        fn double(ctx: &OpCtx) -> Tensor {
+            crate::ops::mul_scalar(ctx.input(0), 2.0)
+        }
+        register_op(
+            OpDef::new("test_double", 1, 1, &[DType::F32])
+                .kernel(DispatchKey::Cpu, double)
+                .kernel(DispatchKey::Sim, double),
+        );
+        let y = call("test_double", &[&Tensor::from_slice(&[1.5f32])], &[]);
+        assert_eq!(y.to_vec::<f32>(), vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no kernel registered for dispatch key Sim")]
+    fn missing_backend_kernel_panics() {
+        fn id(ctx: &OpCtx) -> Tensor {
+            ctx.input(0).clone()
+        }
+        register_op(OpDef::new("test_cpu_only", 1, 1, &[]).kernel(DispatchKey::Cpu, id));
+        let a = Tensor::ones(&[1]).to_sim();
+        call("test_cpu_only", &[&a], &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported dtype")]
+    fn dtype_mismatch_panics() {
+        let idx = Tensor::from_vec(vec![1i64], &[1]);
+        call("relu", &[&idx], &[]);
+    }
+
+}

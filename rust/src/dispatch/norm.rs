@@ -1,0 +1,185 @@
+//! Normalization kernel entries: fused training-mode batch-norm, composite
+//! eval-mode batch-norm / layer-norm / dropout.
+
+use crate::autograd::{no_grad, ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::kernels::norm::{bn_backward, bn_normalize, bn_stats};
+use crate::ops;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+fn bn_check(ctx: &OpCtx) -> usize {
+    let input = ctx.input(0);
+    torsk_assert!(input.ndim() == 4, "batch_norm2d: input must be NCHW");
+    let c = input.size(1);
+    torsk_assert!(
+        ctx.input(1).shape() == [c] && ctx.input(2).shape() == [c],
+        "batch_norm2d: affine shape"
+    );
+    c
+}
+
+/// Eval-mode batch norm: running-stat normalization via (fast-path)
+/// broadcast ops — composite, autograd comes from the inner ops.
+/// Inputs: [input, gamma, beta, running_mean, running_var]; params: [eps].
+fn k_batch_norm_eval(ctx: &OpCtx) -> Tensor {
+    let c = bn_check(ctx);
+    let eps = ctx.f32(0);
+    let input = ctx.input(0);
+    let cshape = [1, c, 1, 1];
+    let (mean, var) = (
+        ctx.input(3).detach().reshape(&cshape),
+        ctx.input(4).detach().reshape(&cshape),
+    );
+    let centered = ops::sub(input, &mean);
+    let inv_std = ops::pow_scalar(&ops::add_scalar(&var, eps), -0.5);
+    let xhat = ops::mul(&centered, &inv_std);
+    let g = ctx.input(1).reshape(&cshape);
+    let b = ctx.input(2).reshape(&cshape);
+    ops::add(&ops::mul(&xhat, &g), &b)
+}
+
+/// Fused training-mode batch norm (§Perf): single-kernel statistics +
+/// normalize with a hand-written backward. Updates the running stats in
+/// place (under `no_grad`). Inputs/params as `batch_norm`, plus momentum.
+fn k_batch_norm_train(ctx: &OpCtx) -> Tensor {
+    let c = bn_check(ctx);
+    let (momentum, eps) = (ctx.f32(0), ctx.f32(1));
+    let input = ctx.input(0);
+    let (n, h, w) = (input.size(0), input.size(2), input.size(3));
+    let hw = h * w;
+    let x = input.contiguous();
+    let gamma_c = ctx.input(1).contiguous();
+    let beta_c = ctx.input(2).contiguous();
+    let dev = x.device();
+
+    let out = Tensor::empty(x.shape(), DType::F32, dev);
+    let mean_t = Tensor::empty(&[c], DType::F32, dev);
+    let inv_std_t = Tensor::empty(&[c], DType::F32, dev);
+    {
+        let (xp, gp, bp, op) = (x.data_ptr(), gamma_c.data_ptr(), beta_c.data_ptr(), out.data_ptr());
+        let (mp, ip) = (mean_t.data_ptr(), inv_std_t.data_ptr());
+        let len = x.numel();
+        device::dispatch(dev, "batch_norm", move || unsafe {
+            let xv = xp.as_slice::<f32>(0, len);
+            let mean = mp.as_mut_slice::<f32>(0, c);
+            let inv_std = ip.as_mut_slice::<f32>(0, c);
+            let mut var = vec![0.0f32; c];
+            bn_stats(n, c, hw, xv, mean, &mut var);
+            for (o, &v) in inv_std.iter_mut().zip(var.iter()) {
+                *o = 1.0 / (v + eps).sqrt();
+            }
+            bn_normalize(
+                n,
+                c,
+                hw,
+                xv,
+                mean,
+                inv_std,
+                gp.as_slice::<f32>(0, c),
+                bp.as_slice::<f32>(0, c),
+                op.as_mut_slice::<f32>(0, len),
+            );
+        });
+    }
+    // Update running stats from the just-computed batch stats.
+    let (running_mean, running_var) = (ctx.input(3), ctx.input(4));
+    no_grad(|| {
+        let mean_h = mean_t.detach();
+        // var = 1/inv_std^2 - eps
+        let var_h = ops::add_scalar(&ops::pow_scalar(&inv_std_t.detach(), -2.0), -eps);
+        running_mean.mul_scalar_(1.0 - momentum);
+        running_mean.axpy_(momentum, &mean_h);
+        running_var.mul_scalar_(1.0 - momentum);
+        running_var.axpy_(momentum, &var_h);
+    });
+    // Stash what the hand-written backward needs.
+    ctx.save(x);
+    ctx.save(gamma_c);
+    ctx.save(mean_t);
+    ctx.save(inv_std_t);
+    out
+}
+
+fn bw_batch_norm_train(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let input = ctx.input(0);
+    let (n, c, h, w) = (input.size(0), input.size(1), input.size(2), input.size(3));
+    let hw = h * w;
+    let vx = SavedTensor::save(&ctx.saved(0));
+    let vgamma = SavedTensor::save(&ctx.saved(1));
+    let vmean = ctx.saved(2);
+    let vinv = ctx.saved(3);
+    ClosureFunction::new("batch_norm", move |g| {
+        let x = vx.unpack().contiguous();
+        let gamma = vgamma.unpack().contiguous();
+        let g = g.contiguous();
+        if g.device().is_async() {
+            device::synchronize();
+        }
+        let xv = x.to_vec::<f32>();
+        let gv = g.to_vec::<f32>();
+        let mean = vmean.to_vec::<f32>();
+        let inv_std = vinv.to_vec::<f32>();
+        let gam = gamma.to_vec::<f32>();
+        let mut dx = vec![0.0f32; xv.len()];
+        let mut dgamma = vec![0.0f32; c];
+        let mut dbeta = vec![0.0f32; c];
+        bn_backward(n, c, hw, &xv, &mean, &inv_std, &gam, &gv, &mut dx, &mut dgamma, &mut dbeta);
+        let dev = x.device();
+        vec![
+            Some(Tensor::from_vec(dx, x.shape()).to_device(dev)),
+            Some(Tensor::from_vec(dgamma, &[c]).to_device(dev)),
+            Some(Tensor::from_vec(dbeta, &[c]).to_device(dev)),
+            None, // running_mean: buffer, no grad
+            None, // running_var: buffer, no grad
+        ]
+    })
+}
+
+/// Composite layer normalization over the last dimension.
+/// Inputs: [input, gamma, beta]; params: [eps].
+fn k_layer_norm(ctx: &OpCtx) -> Tensor {
+    let (input, gamma, beta) = (ctx.input(0), ctx.input(1), ctx.input(2));
+    let eps = ctx.f32(0);
+    let last = input.ndim() - 1;
+    let d = input.size(last);
+    torsk_assert!(gamma.shape() == [d] && beta.shape() == [d], "layer_norm: affine shape");
+    let mean = ops::mean_dims(input, &[last], true);
+    let centered = ops::sub(input, &mean);
+    let var = ops::mean_dims(&ops::mul(&centered, &centered), &[last], true);
+    let inv_std = ops::pow_scalar(&ops::add_scalar(&var, eps), -0.5);
+    let xhat = ops::mul(&centered, &inv_std);
+    ops::add(&ops::mul(&xhat, gamma), beta)
+}
+
+/// Composite inverted dropout. Params: [p, training].
+fn k_dropout(ctx: &OpCtx) -> Tensor {
+    let input = ctx.input(0);
+    let (p, training) = (ctx.f32(0), ctx.bool(1));
+    if !training || p == 0.0 {
+        return input.clone();
+    }
+    torsk_assert!((0.0..1.0).contains(&p), "dropout: p must be in [0,1)");
+    let scale = 1.0 / (1.0 - p);
+    let mask_data: Vec<f32> = crate::rng::with_rng(|r| {
+        (0..input.numel())
+            .map(|_| if r.bernoulli(p) { 0.0 } else { scale })
+            .collect()
+    });
+    let mask = Tensor::from_vec(mask_data, input.shape()).to_device(input.device());
+    ops::mul(input, &super::elementwise::cast_to(&mask, input.dtype()))
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    const F32_ONLY: &[DType] = &[DType::F32];
+    reg.add(OpDef::new("batch_norm", 5, 5, F32_ONLY).kernel_all(k_batch_norm_eval));
+    reg.add(
+        OpDef::new("batch_norm_train", 5, 5, F32_ONLY)
+            .kernel_all(k_batch_norm_train)
+            .backward(bw_batch_norm_train),
+    );
+    reg.add(OpDef::new("layer_norm", 3, 3, super::elementwise::FLOATS).kernel_all(k_layer_norm));
+    reg.add(OpDef::new("dropout", 1, 1, super::elementwise::FLOATS).kernel_all(k_dropout));
+}

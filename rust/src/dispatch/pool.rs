@@ -1,0 +1,106 @@
+//! Pooling kernel entries for the dispatcher (max / avg / global-avg).
+
+use crate::autograd::{ClosureFunction, Function};
+use crate::device;
+use crate::kernels::pool::{
+    avgpool2d_backward, avgpool2d_forward, maxpool2d_backward, maxpool2d_forward, Pool2dArgs,
+};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+fn pool_args(ctx: &OpCtx) -> Pool2dArgs {
+    let input = ctx.input(0);
+    torsk_assert!(input.ndim() == 4, "pool2d: input must be NCHW");
+    Pool2dArgs {
+        batch: input.size(0),
+        channels: input.size(1),
+        h_in: input.size(2),
+        w_in: input.size(3),
+        kernel: ctx.usize(0),
+        stride: ctx.usize(1),
+        padding: ctx.usize(2),
+    }
+}
+
+/// Max pooling; the argmax index map is stashed for the backward builder.
+fn k_maxpool2d(ctx: &OpCtx) -> Tensor {
+    let args = pool_args(ctx);
+    let input_c = ctx.input(0).contiguous();
+    let dev = ctx.device;
+    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
+    let indices = Tensor::empty(out.shape(), DType::I64, dev);
+    {
+        let (ip, op, xp) = (input_c.data_ptr(), out.data_ptr(), indices.data_ptr());
+        let (in_len, out_len) = (input_c.numel(), out.numel());
+        device::dispatch(dev, "maxpool2d", move || unsafe {
+            maxpool2d_forward(
+                &args,
+                ip.as_slice::<f32>(0, in_len),
+                op.as_mut_slice::<f32>(0, out_len),
+                xp.as_mut_slice::<i64>(0, out_len),
+            );
+        });
+    }
+    ctx.save(indices);
+    out
+}
+
+fn bw_maxpool2d(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let args = pool_args(ctx);
+    let in_shape = ctx.input(0).shape().to_vec();
+    let indices = ctx.saved(0);
+    ClosureFunction::new("maxpool2d", move |g| {
+        let g = g.contiguous();
+        let gv = g.to_vec::<f32>();
+        let iv = indices.to_vec::<i64>();
+        let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
+        maxpool2d_backward(&args, &gv, &iv, &mut gi);
+        vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
+    })
+}
+
+/// Average pooling.
+fn k_avgpool2d(ctx: &OpCtx) -> Tensor {
+    let args = pool_args(ctx);
+    let input_c = ctx.input(0).contiguous();
+    let dev = ctx.device;
+    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
+    let (ip, op) = (input_c.data_ptr(), out.data_ptr());
+    let (in_len, out_len) = (input_c.numel(), out.numel());
+    device::dispatch(dev, "avgpool2d", move || unsafe {
+        avgpool2d_forward(&args, ip.as_slice::<f32>(0, in_len), op.as_mut_slice::<f32>(0, out_len));
+    });
+    out
+}
+
+fn bw_avgpool2d(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let args = pool_args(ctx);
+    let in_shape = ctx.input(0).shape().to_vec();
+    ClosureFunction::new("avgpool2d", move |g| {
+        let g = g.contiguous();
+        let gv = g.to_vec::<f32>();
+        let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
+        avgpool2d_backward(&args, &gv, &mut gi);
+        vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
+    })
+}
+
+/// Composite global average pooling NCHW -> NC.
+fn k_global_avgpool(ctx: &OpCtx) -> Tensor {
+    let input = ctx.input(0);
+    torsk_assert!(input.ndim() == 4, "global_avgpool2d: input must be NCHW");
+    let (n, c) = (input.size(0), input.size(1));
+    let pooled = crate::ops::mean_dims(input, &[2, 3], false);
+    pooled.reshape(&[n, c])
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    const F32_ONLY: &[DType] = &[DType::F32];
+    reg.add(OpDef::new("maxpool2d", 1, 1, F32_ONLY).kernel_all(k_maxpool2d).backward(bw_maxpool2d));
+    reg.add(OpDef::new("avgpool2d", 1, 1, F32_ONLY).kernel_all(k_avgpool2d).backward(bw_avgpool2d));
+    reg.add(
+        OpDef::new("global_avgpool2d", 1, 1, super::elementwise::FLOATS).kernel_all(k_global_avgpool),
+    );
+}

@@ -1,0 +1,302 @@
+//! Reduction kernels for the dispatcher: full/per-axis sums, means, max,
+//! argmax, plus the broadcast-gradient helpers (`sum_to_shape`,
+//! `broadcast_to`). Generic over f32/f64 (sums also handle i64).
+
+use crate::autograd::{ClosureFunction, Function};
+use crate::device;
+use crate::tensor::shape::{contiguous_strides, numel, StridedIter};
+use crate::tensor::{DType, Element, Tensor};
+use crate::{torsk_assert, torsk_bail};
+
+use super::elementwise::FLOATS;
+use super::iter::linear_suffix;
+use super::{OpCtx, OpDef, Registry};
+
+// ---------------------------------------------------------------------
+// Raw building blocks (no autograd)
+// ---------------------------------------------------------------------
+
+/// Sum a tensor down to a broadcast-compatible `target` shape (each target
+/// dim is either equal to the source dim or 1; the target may have fewer
+/// dims, which behave as leading 1s).
+pub(crate) fn sum_to_shape(a: &Tensor, target: &[usize]) -> Tensor {
+    match a.dtype() {
+        DType::F32 => sum_to_shape_t::<f32>(a, target),
+        DType::F64 => sum_to_shape_t::<f64>(a, target),
+        DType::I64 => sum_to_shape_t::<i64>(a, target),
+    }
+}
+
+fn sum_to_shape_t<T>(a: &Tensor, target: &[usize]) -> Tensor
+where
+    T: Element + std::ops::AddAssign,
+{
+    let a = a.contiguous();
+    let src_shape = a.shape().to_vec();
+    torsk_assert!(
+        target.len() <= src_shape.len(),
+        "sum_to_shape: target rank {} exceeds source rank {}",
+        target.len(),
+        src_shape.len()
+    );
+    // Pad target with leading 1s to the source rank.
+    let mut padded = vec![1usize; src_shape.len()];
+    let off = src_shape.len() - target.len();
+    padded[off..].copy_from_slice(target);
+    for (i, (&s, &t)) in src_shape.iter().zip(padded.iter()).enumerate() {
+        torsk_assert!(t == s || t == 1, "sum_to_shape: dim {i}: {s} -> {t}");
+    }
+
+    let out = Tensor::zeros_on(target, T::DTYPE, a.device());
+    let n = a.numel();
+    if n == 0 {
+        return out;
+    }
+    // Output strides aligned to the padded shape, 0 where target dim == 1.
+    let tstrides_dense = contiguous_strides(&padded);
+    let ostrides: Vec<usize> = padded
+        .iter()
+        .zip(tstrides_dense.iter())
+        .map(|(&d, &st)| if d == 1 { 0 } else { st })
+        .collect();
+
+    let (ap, op) = (a.data_ptr(), out.data_ptr());
+    let on = numel(target);
+    // §Perf: like the elementwise TensorIter, handle a trailing linear run
+    // specially — if the output does not advance over the suffix (reduced
+    // dims), the inner loop is a vectorizable sum; if it advances
+    // contiguously, it is a vectorizable elementwise accumulate.
+    let rank = src_shape.len();
+    let src_contig = contiguous_strides(&src_shape);
+    let (t, _sa, step_o) = linear_suffix(&src_shape, &src_contig, &ostrides);
+    let inner: usize = src_shape[rank - t..].iter().product();
+    if t > 0 && inner > 1 {
+        let outer_shape = src_shape[..rank - t].to_vec();
+        let outer_so = ostrides[..rank - t].to_vec();
+        device::dispatch(a.device(), "sum_to", move || unsafe {
+            let av = ap.as_slice::<T>(0, n);
+            let ov = op.as_mut_slice::<T>(0, on);
+            let io = StridedIter::new(&outer_shape, &outer_so);
+            for (chunk, ooff) in av.chunks(inner).zip(io) {
+                if step_o == 0 {
+                    let mut acc = T::default();
+                    for &v in chunk {
+                        acc += v;
+                    }
+                    ov[ooff] += acc;
+                } else {
+                    let dst = &mut ov[ooff..ooff + inner];
+                    for (d, &v) in dst.iter_mut().zip(chunk) {
+                        *d += v;
+                    }
+                }
+            }
+        });
+        return out;
+    }
+    device::dispatch(a.device(), "sum_to", move || unsafe {
+        let av = ap.as_slice::<T>(0, n);
+        let ov = op.as_mut_slice::<T>(0, on);
+        let mut idx = vec![0usize; src_shape.len()];
+        let mut ooff = 0usize;
+        for &v in av.iter() {
+            ov[ooff] += v;
+            for d in (0..src_shape.len()).rev() {
+                idx[d] += 1;
+                ooff += ostrides[d];
+                if idx[d] < src_shape[d] {
+                    break;
+                }
+                ooff -= idx[d] * ostrides[d];
+                idx[d] = 0;
+            }
+        }
+    });
+    out
+}
+
+/// Broadcast a tensor up to `target` shape (materialized copy, used by
+/// reduction backwards).
+pub(crate) fn broadcast_to(a: &Tensor, target: &[usize]) -> Tensor {
+    if a.shape() == target {
+        return a.clone();
+    }
+    a.expand(target).contiguous()
+}
+
+// ---------------------------------------------------------------------
+// Registered ops
+// ---------------------------------------------------------------------
+
+fn k_sum(ctx: &OpCtx) -> Tensor {
+    sum_to_shape(ctx.input(0), &[])
+}
+
+fn bw_sum(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let shape = ctx.input(0).shape().to_vec();
+    ClosureFunction::new("sum", move |g| vec![Some(broadcast_to(g, &shape))])
+}
+
+/// Reduced ("keepdim") shape for a dim-list reduction.
+fn kept_shape(a: &Tensor, dims: &[usize]) -> Vec<usize> {
+    let mut kept = a.shape().to_vec();
+    for &d in dims {
+        torsk_assert!(d < a.ndim(), "sum_dims: dim {d} out of range for {:?}", a.shape());
+        kept[d] = 1;
+    }
+    kept
+}
+
+fn k_sum_dims(ctx: &OpCtx) -> Tensor {
+    let a = ctx.input(0);
+    let dims = ctx.usize_list(0);
+    let keepdim = ctx.bool(1);
+    // dims = [] is a well-defined no-op reduction: kept == a.shape(), so
+    // sum_to_shape degenerates to a fresh identity copy (never an alias).
+    let kept = kept_shape(a, dims);
+    let reduced = sum_to_shape(a, &kept); // keepdim layout
+    if keepdim {
+        reduced
+    } else {
+        let final_shape: Vec<usize> = a
+            .shape()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !dims.contains(i))
+            .map(|(_, &d)| d)
+            .collect();
+        reduced.reshape(&final_shape)
+    }
+}
+
+fn bw_sum_dims(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let a = ctx.input(0);
+    let dims = ctx.usize_list(0);
+    let shape = a.shape().to_vec();
+    let kept = if dims.is_empty() { shape.clone() } else { kept_shape(a, dims) };
+    ClosureFunction::new("sum_dims", move |g| {
+        let g = g.reshape(&kept);
+        vec![Some(broadcast_to(&g, &shape))]
+    })
+}
+
+/// Dispatch a full-precision scalar multiply (the `1/n` of a mean): the
+/// factor travels as `Param::F64` so F64 tensors never see an f32 round.
+fn scale_full_precision(t: &Tensor, s: f64) -> Tensor {
+    super::call("mul_scalar", &[t], &[super::Param::F64(s)])
+}
+
+/// Composite: mean = sum * (1/n). The inner dispatched ops build the
+/// gradient graph, so no backward entry is registered.
+fn k_mean(ctx: &OpCtx) -> Tensor {
+    let a = ctx.input(0);
+    let n = a.numel().max(1) as f64;
+    scale_full_precision(&crate::ops::sum(a), 1.0 / n)
+}
+
+/// Composite: mean over dims. A 0-sized reduced dim yields zeros (the sum)
+/// rather than a divide-by-zero.
+fn k_mean_dims(ctx: &OpCtx) -> Tensor {
+    let a = ctx.input(0);
+    let dims = ctx.usize_list(0);
+    let keepdim = ctx.bool(1);
+    let count: usize = dims.iter().map(|&d| a.size(d)).product();
+    let s = crate::ops::sum_dims(a, dims, keepdim);
+    scale_full_precision(&s, 1.0 / count.max(1) as f64)
+}
+
+fn max_all_t<T: Element>(ctx: &OpCtx, a: &Tensor) -> Tensor {
+    let v = a.contiguous().to_vec::<T>();
+    let (mut best_i, mut best) = (0usize, v[0]);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best {
+            best = x;
+            best_i = i;
+        }
+    }
+    // Stash the winning flat index for the backward builder.
+    ctx.save(Tensor::from_vec(vec![best_i as i64], &[1]));
+    Tensor::from_vec(vec![best], &[]).to_device(a.device())
+}
+
+fn k_max_all(ctx: &OpCtx) -> Tensor {
+    let a = ctx.input(0);
+    torsk_assert!(a.numel() > 0, "max_all: cannot reduce an empty tensor");
+    match a.dtype() {
+        DType::F32 => max_all_t::<f32>(ctx, a),
+        DType::F64 => max_all_t::<f64>(ctx, a),
+        other => torsk_bail!("max_all: unsupported dtype {other}"),
+    }
+}
+
+fn bw_max_all(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let shape = ctx.input(0).shape().to_vec();
+    let dt = ctx.input(0).dtype();
+    let dev = ctx.input(0).device();
+    let best = ctx.saved(0);
+    ClosureFunction::new("max_all", move |g| {
+        let i = best.to_vec::<i64>()[0] as usize;
+        let grad = match dt {
+            DType::F32 => {
+                let mut data = vec![0.0f32; numel(&shape)];
+                data[i] = g.to_vec::<f32>()[0];
+                Tensor::from_vec(data, &shape)
+            }
+            DType::F64 => {
+                let mut data = vec![0.0f64; numel(&shape)];
+                data[i] = g.to_vec::<f64>()[0];
+                Tensor::from_vec(data, &shape)
+            }
+            _ => torsk_bail!("max_all backward: unsupported dtype {dt}"),
+        };
+        vec![Some(grad.to_device(dev))]
+    })
+}
+
+fn argmax_t<T: Element>(a: &Tensor, dim: usize) -> Tensor {
+    let v = a.contiguous().to_vec::<T>();
+    let shape = a.shape();
+    let inner: usize = shape[dim + 1..].iter().product();
+    let outer: usize = shape[..dim].iter().product();
+    let d = shape[dim];
+    let mut out_shape: Vec<usize> = shape.to_vec();
+    out_shape.remove(dim);
+    let mut out = vec![0i64; outer * inner];
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut best = v[o * d * inner + i];
+            let mut best_j = 0i64;
+            for j in 1..d {
+                let x = v[(o * d + j) * inner + i];
+                if x > best {
+                    best = x;
+                    best_j = j as i64;
+                }
+            }
+            out[o * inner + i] = best_j;
+        }
+    }
+    Tensor::from_vec(out, &out_shape).to_device(a.device())
+}
+
+fn k_argmax(ctx: &OpCtx) -> Tensor {
+    let a = ctx.input(0);
+    let dim = ctx.usize(0);
+    torsk_assert!(dim < a.ndim(), "argmax: dim out of range");
+    torsk_assert!(a.size(dim) > 0, "argmax: cannot reduce over an empty dim {dim}");
+    match a.dtype() {
+        DType::F32 => argmax_t::<f32>(a, dim),
+        DType::F64 => argmax_t::<f64>(a, dim),
+        DType::I64 => argmax_t::<i64>(a, dim),
+    }
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    use super::elementwise::NUMERIC;
+    reg.add(OpDef::new("sum", 1, 1, NUMERIC).kernel_all(k_sum).backward(bw_sum));
+    reg.add(OpDef::new("sum_dims", 1, 1, NUMERIC).kernel_all(k_sum_dims).backward(bw_sum_dims));
+    reg.add(OpDef::new("mean", 1, 1, FLOATS).kernel_all(k_mean));
+    reg.add(OpDef::new("mean_dims", 1, 1, FLOATS).kernel_all(k_mean_dims));
+    reg.add(OpDef::new("max_all", 1, 1, FLOATS).kernel_all(k_max_all).backward(bw_max_all));
+    reg.add(OpDef::new("argmax_dim", 1, 1, &[]).kernel_all(k_argmax));
+}

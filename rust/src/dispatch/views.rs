@@ -1,0 +1,89 @@
+//! Concatenation and the raw strided-copy kernel behind it.
+
+use crate::autograd::{ClosureFunction, Function};
+use crate::tensor::shape::StridedIter;
+use crate::tensor::{DType, Element, Tensor};
+use crate::torsk_assert;
+
+use super::{OpCtx, OpDef, Registry};
+
+fn copy_into_view_t<T: Element>(view: &Tensor, src: &Tensor) {
+    let src = src.contiguous();
+    let n = src.numel();
+    if n == 0 {
+        return;
+    }
+    let (sp, vp) = (src.data_ptr(), view.data_ptr());
+    let shape = view.shape().to_vec();
+    let strides = view.strides().to_vec();
+    // Keep host sources alive until the (possibly queued) copy runs.
+    let keep = src.detach();
+    crate::device::dispatch(view.device(), "copy_into_view", move || unsafe {
+        let sv = sp.as_slice::<T>(0, n);
+        let base = vp.ptr() as *mut T;
+        for (i, off) in StridedIter::new(&shape, &strides).enumerate() {
+            *base.add(off) = sv[i];
+        }
+        drop(keep);
+    });
+}
+
+/// Raw strided copy of `src` (made contiguous) into a strided `view`.
+/// Internal: used for narrow backward and `cat`.
+pub(crate) fn copy_into_view(view: &Tensor, src: &Tensor) {
+    torsk_assert!(view.shape() == src.shape(), "copy_into_view: shape mismatch");
+    torsk_assert!(view.dtype() == src.dtype(), "copy_into_view: dtype mismatch");
+    match view.dtype() {
+        DType::F32 => copy_into_view_t::<f32>(view, src),
+        DType::F64 => copy_into_view_t::<f64>(view, src),
+        DType::I64 => copy_into_view_t::<i64>(view, src),
+    }
+}
+
+/// Concatenate tensors along `dim` (param 0).
+fn k_cat(ctx: &OpCtx) -> Tensor {
+    let tensors = ctx.inputs;
+    let dim = ctx.usize(0);
+    let first = tensors[0];
+    let dev = ctx.device;
+    let mut out_shape = first.shape().to_vec();
+    torsk_assert!(dim < out_shape.len(), "cat: dim out of range");
+    let mut total = 0usize;
+    for t in tensors {
+        torsk_assert!(t.ndim() == first.ndim(), "cat: rank mismatch");
+        torsk_assert!(t.dtype() == first.dtype(), "cat: dtype mismatch");
+        for d in 0..first.ndim() {
+            if d != dim {
+                torsk_assert!(t.size(d) == first.size(d), "cat: dim {d} mismatch");
+            }
+        }
+        total += t.size(dim);
+    }
+    out_shape[dim] = total;
+    let out = Tensor::empty(&out_shape, first.dtype(), dev);
+    let mut offset = 0usize;
+    for t in tensors {
+        let view = out.detach().narrow(dim, offset, t.size(dim));
+        copy_into_view(&view, t);
+        offset += t.size(dim);
+    }
+    out
+}
+
+fn bw_cat(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let dim = ctx.usize(0);
+    let sizes: Vec<usize> = ctx.inputs.iter().map(|t| t.size(dim)).collect();
+    ClosureFunction::new("cat", move |g| {
+        let mut grads = Vec::with_capacity(sizes.len());
+        let mut off = 0usize;
+        for &s in &sizes {
+            grads.push(Some(g.narrow(dim, off, s).contiguous()));
+            off += s;
+        }
+        grads
+    })
+}
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(OpDef::new("cat", 1, usize::MAX, &[]).kernel_all(k_cat).backward(bw_cat));
+}

@@ -148,6 +148,60 @@ pub(crate) fn gemm_panel(
     }
 }
 
+/// Row-major `C = A @ B` in f64 — the precision-dtype GEMM behind the
+/// dispatcher's F64 matmul entries. Parallel over rows with an axpy inner
+/// loop; correctness-oriented (f64 is the gradcheck dtype, not the
+/// throughput one).
+pub fn dgemm(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k, "A size");
+    debug_assert_eq!(b.len(), k * n, "B size");
+    debug_assert_eq!(c.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    // SAFETY: parallel tasks write disjoint row-ranges of C.
+    let c_addr = c.as_mut_ptr() as usize;
+    parallel_for(m, 8, move |row_start, row_end| {
+        let c = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f64, m * n) };
+        for i in row_start..row_end {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            crow.fill(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += av * bj;
+                }
+            }
+        }
+    });
+}
+
+/// Batched f64 GEMM over the leading batch dim: C[b] = A[b] @ B[b].
+pub fn dgemm_batched(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), batch * m * k);
+    debug_assert_eq!(b.len(), batch * k * n);
+    debug_assert_eq!(c.len(), batch * m * n);
+    for i in 0..batch {
+        dgemm(
+            m,
+            n,
+            k,
+            &a[i * m * k..(i + 1) * m * k],
+            &b[i * k * n..(i + 1) * k * n],
+            &mut c[i * m * n..(i + 1) * m * n],
+        );
+    }
+}
+
 /// Naive reference for tests: straightforward triple loop.
 pub fn matmul_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     let mut c = vec![0.0f32; m * n];
@@ -221,6 +275,22 @@ mod tests {
         let mut c = vec![2.0f32; 4];
         sgemm(2, 2, 0, 1.0, &[], &[], 0.0, &mut c);
         assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn dgemm_matches_reference() {
+        let mut r = Rng::new(10);
+        let (m, n, k) = (7, 5, 9);
+        let a32 = rand_vec(&mut r, m * k);
+        let b32 = rand_vec(&mut r, k * n);
+        let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+        let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+        let mut c = vec![0.0f64; m * n];
+        dgemm(m, n, k, &a, &b, &mut c);
+        let expect = matmul_ref(m, n, k, &a32, &b32);
+        for (i, (&x, &y)) in c.iter().zip(expect.iter()).enumerate() {
+            assert!((x as f32 - y).abs() <= 1e-4 + 1e-4 * y.abs(), "idx {i}: {x} vs {y}");
+        }
     }
 
     #[test]

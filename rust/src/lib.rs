@@ -7,11 +7,15 @@
 //!
 //! The crate provides:
 //! - [`tensor`] — strided, reference-counted tensors with mutation
-//!   versioning (§5.5, §4.3);
+//!   versioning (§5.5, §4.3); f32/f64 compute plus i64 indices;
 //! - [`autograd`] — define-by-run reverse-mode AD with a multithreaded
 //!   backward engine (§4.3, §5.1);
-//! - [`ops`] — eager operators dispatched synchronously on CPU or
-//!   asynchronously onto simulated device streams (§5.2);
+//! - [`dispatch`] — the ATen-style central operator registry: every op is
+//!   declared once (schema + per-`DispatchKey` kernels) and every call
+//!   funnels through `dispatch::call`, which validates, routes to the
+//!   backend key, promotes dtypes, profiles, and records autograd (§5.1);
+//! - [`ops`] — the stable eager API: thin shims over the dispatcher, plus
+//!   `Tensor` methods and operator overloads (§5.2);
 //! - [`alloc`] — the caching device allocator and its baselines (§5.3);
 //! - [`device`] — streams, events, and the simulated accelerator (§5.2);
 //! - [`nn`], [`optim`], [`data`] — the "just Python programs" model,
@@ -48,6 +52,7 @@ pub mod cli;
 pub mod ctx;
 pub mod data;
 pub mod device;
+pub mod dispatch;
 pub mod error;
 pub mod graph;
 pub mod kernels;

@@ -179,6 +179,7 @@ impl SharedTensor {
             match dtype {
                 DType::F32 => 0,
                 DType::I64 => 1,
+                DType::F64 => 2,
             },
             Ordering::SeqCst,
         );
@@ -198,6 +199,7 @@ impl SharedTensor {
         let dtype = match region.header_u32(1).load(Ordering::SeqCst) {
             0 => DType::F32,
             1 => DType::I64,
+            2 => DType::F64,
             _ => return Err(TorskError::Multiproc("bad dtype".into())),
         };
         let ndim = region.header_u32(2).load(Ordering::SeqCst) as usize;

@@ -17,8 +17,11 @@ pub use linear::Linear;
 pub use norm::{BatchNorm2d, Dropout, LayerNorm};
 pub use rnn::{LSTMCell, LSTM};
 
+use std::collections::BTreeMap;
+
 use crate::ops;
 use crate::tensor::Tensor;
+use crate::{torsk_assert, torsk_bail};
 
 /// A composable neural-network component: parameters + a forward function.
 pub trait Module: Send {
@@ -34,6 +37,69 @@ pub trait Module: Send {
     /// across devices / into checkpoints.
     fn buffers(&self) -> Vec<Tensor> {
         vec![]
+    }
+
+    /// Named parameters. The default enumerates [`Module::parameters`]
+    /// positionally (`param.0`, `param.1`, ...); structured modules may
+    /// override with real names.
+    fn named_parameters(&self) -> Vec<(String, Tensor)> {
+        self.parameters()
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| (format!("param.{i}"), p))
+            .collect()
+    }
+
+    /// Named buffers (`buffer.0`, ...), same convention.
+    fn named_buffers(&self) -> Vec<(String, Tensor)> {
+        self.buffers()
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| (format!("buffer.{i}"), b))
+            .collect()
+    }
+
+    /// Snapshot of all state (parameters + buffers) as a name → Tensor
+    /// map. Values are *copies* (checkpoint semantics): later training
+    /// steps do not mutate a saved state dict.
+    fn state_dict(&self) -> BTreeMap<String, Tensor> {
+        let mut sd = BTreeMap::new();
+        for (name, t) in self.named_parameters().into_iter().chain(self.named_buffers()) {
+            let copy = Tensor::empty(t.shape(), t.dtype(), t.device());
+            crate::autograd::no_grad(|| copy.copy_(&t.detach().contiguous()));
+            torsk_assert!(
+                sd.insert(name.clone(), copy).is_none(),
+                "state_dict: duplicate entry name '{name}'"
+            );
+        }
+        sd
+    }
+
+    /// Load a state dict produced by [`Module::state_dict`] into this
+    /// module's parameters and buffers, in place. Strict: missing or
+    /// unexpected keys and shape mismatches are errors.
+    fn load_state_dict(&self, sd: &BTreeMap<String, Tensor>) {
+        let targets: Vec<(String, Tensor)> =
+            self.named_parameters().into_iter().chain(self.named_buffers()).collect();
+        for key in sd.keys() {
+            torsk_assert!(
+                targets.iter().any(|(n, _)| n == key),
+                "load_state_dict: unexpected key '{key}'"
+            );
+        }
+        for (name, dst) in targets {
+            let src = match sd.get(&name) {
+                Some(t) => t,
+                None => torsk_bail!("load_state_dict: missing key '{name}'"),
+            };
+            torsk_assert!(
+                src.shape() == dst.shape(),
+                "load_state_dict: shape mismatch for '{name}': {:?} vs {:?}",
+                src.shape(),
+                dst.shape()
+            );
+            crate::autograd::no_grad(|| dst.copy_(&src.to_device(dst.device())));
+        }
     }
 
     /// Toggle training/eval behaviour (dropout, batch-norm).
@@ -222,6 +288,73 @@ mod tests {
         crate::rng::manual_seed(0);
         let l = Linear::new(3, 5);
         assert_eq!(l.num_parameters(), 3 * 5 + 5);
+    }
+
+    #[test]
+    fn state_dict_round_trip_on_sequential() {
+        crate::rng::manual_seed(7);
+        let model = Sequential::new()
+            .add(Linear::new(4, 8))
+            .add(ReLU)
+            .add(Linear::new(8, 2));
+        let x = Tensor::randn(&[3, 4]);
+        let y0 = model.forward(&x).to_vec::<f32>();
+
+        // Snapshot, then perturb every parameter in place.
+        let saved = model.state_dict();
+        assert_eq!(saved.len(), model.parameters().len());
+        crate::autograd::no_grad(|| {
+            for p in model.parameters() {
+                p.add_scalar_(1.5);
+            }
+        });
+        let y1 = model.forward(&x).to_vec::<f32>();
+        assert_ne!(y0, y1, "perturbation must change the output");
+
+        // Restoring the snapshot restores the function.
+        model.load_state_dict(&saved);
+        let y2 = model.forward(&x).to_vec::<f32>();
+        assert_eq!(y0, y2);
+    }
+
+    #[test]
+    fn state_dict_is_a_copy_not_a_view() {
+        crate::rng::manual_seed(8);
+        let model = Sequential::new().add(Linear::new(2, 2));
+        let saved = model.state_dict();
+        let before = saved.get("param.0").unwrap().to_vec::<f32>();
+        crate::autograd::no_grad(|| model.parameters()[0].add_scalar_(3.0));
+        assert_eq!(saved.get("param.0").unwrap().to_vec::<f32>(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "unexpected key")]
+    fn load_state_dict_rejects_unknown_keys() {
+        crate::rng::manual_seed(9);
+        let model = Sequential::new().add(Linear::new(2, 2));
+        let mut sd = model.state_dict();
+        sd.insert("param.99".into(), Tensor::ones(&[1]));
+        model.load_state_dict(&sd);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing key")]
+    fn load_state_dict_rejects_missing_keys() {
+        crate::rng::manual_seed(10);
+        let model = Sequential::new().add(Linear::new(2, 2));
+        let mut sd = model.state_dict();
+        sd.remove("param.0");
+        model.load_state_dict(&sd);
+    }
+
+    #[test]
+    fn state_dict_includes_buffers() {
+        let bn = BatchNorm2d::new(3);
+        let sd = bn.state_dict();
+        // gamma, beta params + running mean/var buffers.
+        assert!(sd.contains_key("param.0"));
+        assert!(sd.contains_key("buffer.0"));
+        assert_eq!(sd.len(), bn.parameters().len() + bn.buffers().len());
     }
 
     #[test]

@@ -1,253 +1,39 @@
-//! Broadcasting binary elementwise ops with autograd.
+//! Broadcasting binary elementwise ops — shims over the dispatcher's
+//! multi-dtype registry entries (F32/F64/I64 with promotion).
 
-use crate::autograd::{self, ClosureFunction};
-use crate::device;
-use crate::tensor::shape::{broadcast_shapes, broadcast_strides, numel, StridedIter};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch;
+use crate::tensor::Tensor;
 
-use super::same_device;
-
-/// Execute `f` elementwise over broadcast inputs (f32). Host computes
-/// shapes/strides; the kernel closure runs wherever the tensors live.
-pub(crate) fn binary_map(name: &'static str, a: &Tensor, b: &Tensor, f: fn(f32, f32) -> f32) -> Tensor {
-    let dev = same_device(&[a, b]);
-    torsk_assert!(a.dtype() == DType::F32 && b.dtype() == DType::F32, "{name}: f32 only");
-    let out_shape = broadcast_shapes(a.shape(), b.shape());
-    let out = Tensor::empty(&out_shape, DType::F32, dev);
-    let n = numel(&out_shape);
-    if n == 0 {
-        return out;
-    }
-
-    let fast = a.shape() == out_shape.as_slice()
-        && b.shape() == out_shape.as_slice()
-        && a.is_contiguous()
-        && b.is_contiguous();
-
-    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
-    if fast {
-        device::dispatch(dev, name, move || unsafe {
-            let av = ap.as_slice::<f32>(0, n);
-            let bv = bp.as_slice::<f32>(0, n);
-            let ov = op.as_mut_slice::<f32>(0, n);
-            crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
-                // SAFETY: disjoint ranges.
-                let ov = std::slice::from_raw_parts_mut(ov.as_ptr() as *mut f32, n);
-                for i in s..e {
-                    ov[i] = f(av[i], bv[i]);
-                }
-            });
-        });
-    } else {
-        let sa = broadcast_strides(a.shape(), a.strides(), &out_shape);
-        let sb = broadcast_strides(b.shape(), b.strides(), &out_shape);
-        let osh = out_shape.clone();
-        // §Perf: split off the longest trailing "linear run" — a suffix of
-        // dims over which each operand advances either contiguously (step
-        // 1) or not at all (step 0, i.e. broadcast). Inside the run the
-        // kernel is a tight vectorizable loop; the generic odometer only
-        // walks the leading dims. This is what makes batch-norm's
-        // `x * gamma[1,C,1,1]` style ops fast.
-        let (t, step_a, step_b) = linear_suffix(&osh, &sa, &sb);
-        let inner: usize = osh[osh.len() - t..].iter().product();
-        if t > 0 && inner > 1 {
-            let outer_shape = osh[..osh.len() - t].to_vec();
-            let outer_sa = sa[..sa.len() - t].to_vec();
-            let outer_sb = sb[..sb.len() - t].to_vec();
-            device::dispatch(dev, name, move || unsafe {
-                let ov = op.as_mut_slice::<f32>(0, n);
-                let ia = StridedIter::new(&outer_shape, &outer_sa);
-                let ib = StridedIter::new(&outer_shape, &outer_sb);
-                for (chunk, (offa, offb)) in ov.chunks_mut(inner).zip(ia.zip(ib)) {
-                    let pa = ap.as_f32().add(offa);
-                    let pb = bp.as_f32().add(offb);
-                    match (step_a, step_b) {
-                        (1, 0) => {
-                            let s = *pb;
-                            let av = std::slice::from_raw_parts(pa, inner);
-                            for (o, &x) in chunk.iter_mut().zip(av) {
-                                *o = f(x, s);
-                            }
-                        }
-                        (0, 1) => {
-                            let s = *pa;
-                            let bv = std::slice::from_raw_parts(pb, inner);
-                            for (o, &y) in chunk.iter_mut().zip(bv) {
-                                *o = f(s, y);
-                            }
-                        }
-                        (1, 1) => {
-                            let av = std::slice::from_raw_parts(pa, inner);
-                            let bv = std::slice::from_raw_parts(pb, inner);
-                            for ((o, &x), &y) in chunk.iter_mut().zip(av).zip(bv) {
-                                *o = f(x, y);
-                            }
-                        }
-                        _ => {
-                            let s = f(*pa, *pb);
-                            chunk.fill(s);
-                        }
-                    }
-                }
-            });
-        } else {
-            device::dispatch(dev, name, move || unsafe {
-                let ov = op.as_mut_slice::<f32>(0, n);
-                let ia = StridedIter::new(&osh, &sa);
-                let ib = StridedIter::new(&osh, &sb);
-                for ((o, offa), offb) in ov.iter_mut().zip(ia).zip(ib) {
-                    *o = f(*ap.as_f32().add(offa), *bp.as_f32().add(offb));
-                }
-            });
-        }
-    }
-    out
-}
-
-/// Longest trailing dim-suffix over which both stride vectors advance
-/// linearly (contiguously for the suffix's own shape, or with stride 0).
-/// Returns (suffix_len_in_dims, step_a, step_b) with steps in {0, 1}.
-pub(crate) fn linear_suffix(shape: &[usize], sa: &[usize], sb: &[usize]) -> (usize, usize, usize) {
-    let rank = shape.len();
-    let classify = |strides: &[usize], t: usize| -> Option<usize> {
-        // Suffix of length t: all-zero (step 0) or block-contiguous (step 1).
-        let suffix_shape = &shape[rank - t..];
-        let suffix = &strides[rank - t..];
-        if suffix.iter().zip(suffix_shape).all(|(&s, &d)| s == 0 || d == 1) {
-            return Some(0);
-        }
-        let mut acc = 1usize;
-        for d in (0..t).rev() {
-            if suffix_shape[d] != 1 && suffix[d] != acc {
-                return None;
-            }
-            acc *= suffix_shape[d].max(1);
-        }
-        Some(1)
-    };
-    let mut best = (0usize, 0usize, 0usize);
-    for t in 1..=rank {
-        match (classify(sa, t), classify(sb, t)) {
-            (Some(x), Some(y)) => best = (t, x, y),
-            _ => break,
-        }
-    }
-    best
-}
-
-/// Sum `grad` down to `shape` (undo broadcasting) — the standard binary-op
-/// backward reduction.
-pub fn reduce_grad_to_shape(grad: &Tensor, shape: &[usize]) -> Tensor {
-    if grad.shape() == shape {
-        return grad.clone();
-    }
-    super::sum_to_shape(grad, shape)
-}
+pub use crate::dispatch::elementwise::reduce_grad_to_shape;
 
 /// Elementwise addition with broadcasting.
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = binary_map("add", a, b, |x, y| x + y);
-    if autograd::should_record(&[a, b]) {
-        let (sa, sb) = (a.shape().to_vec(), b.shape().to_vec());
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("add", move |g| {
-                vec![
-                    Some(reduce_grad_to_shape(g, &sa)),
-                    Some(reduce_grad_to_shape(g, &sb)),
-                ]
-            })
-        });
-    }
-    out
+    dispatch::call("add", &[a, b], &[])
 }
 
 /// Elementwise subtraction with broadcasting.
 pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = binary_map("sub", a, b, |x, y| x - y);
-    if autograd::should_record(&[a, b]) {
-        let (sa, sb) = (a.shape().to_vec(), b.shape().to_vec());
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("sub", move |g| {
-                vec![
-                    Some(reduce_grad_to_shape(g, &sa)),
-                    Some(reduce_grad_to_shape(&super::neg(g), &sb)),
-                ]
-            })
-        });
-    }
-    out
+    dispatch::call("sub", &[a, b], &[])
 }
 
 /// Elementwise multiplication with broadcasting.
 pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = binary_map("mul", a, b, |x, y| x * y);
-    if autograd::should_record(&[a, b]) {
-        let (sa, sb) = (a.shape().to_vec(), b.shape().to_vec());
-        let (va, vb) = (autograd::SavedTensor::save(a), autograd::SavedTensor::save(b));
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("mul", move |g| {
-                let a = va.unpack();
-                let b = vb.unpack();
-                vec![
-                    Some(reduce_grad_to_shape(&binary_map("mul", g, &b, |x, y| x * y), &sa)),
-                    Some(reduce_grad_to_shape(&binary_map("mul", g, &a, |x, y| x * y), &sb)),
-                ]
-            })
-        });
-    }
-    out
+    dispatch::call("mul", &[a, b], &[])
 }
 
 /// Elementwise division with broadcasting.
 pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = binary_map("div", a, b, |x, y| x / y);
-    if autograd::should_record(&[a, b]) {
-        let (sa, sb) = (a.shape().to_vec(), b.shape().to_vec());
-        let (va, vb) = (autograd::SavedTensor::save(a), autograd::SavedTensor::save(b));
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("div", move |g| {
-                let a = va.unpack();
-                let b = vb.unpack();
-                // d/da = g / b ; d/db = -g * a / b^2
-                let ga = binary_map("div", g, &b, |x, y| x / y);
-                let gb = binary_map("div_b", g, &binary_map("mul", &a, &binary_map("mul", &b, &b, |x, y| x * y), |x, y| x / y), |x, y| x * y);
-                let gb = super::neg(&gb);
-                vec![
-                    Some(reduce_grad_to_shape(&ga, &sa)),
-                    Some(reduce_grad_to_shape(&gb, &sb)),
-                ]
-            })
-        });
-    }
-    out
+    dispatch::call("div", &[a, b], &[])
 }
 
 /// Elementwise maximum of two tensors.
 pub fn maximum(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = binary_map("maximum", a, b, |x, y| x.max(y));
-    if autograd::should_record(&[a, b]) {
-        let (sa, sb) = (a.shape().to_vec(), b.shape().to_vec());
-        let (va, vb) = (autograd::SavedTensor::save(a), autograd::SavedTensor::save(b));
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("maximum", move |g| {
-                let a = va.unpack();
-                let b = vb.unpack();
-                let mask_a = binary_map("ge_mask", &a, &b, |x, y| if x >= y { 1.0 } else { 0.0 });
-                let mask_b = binary_map("lt_mask", &a, &b, |x, y| if x < y { 1.0 } else { 0.0 });
-                vec![
-                    Some(reduce_grad_to_shape(&binary_map("mul", g, &mask_a, |x, y| x * y), &sa)),
-                    Some(reduce_grad_to_shape(&binary_map("mul", g, &mask_b, |x, y| x * y), &sb)),
-                ]
-            })
-        });
-    }
-    out
+    dispatch::call("maximum", &[a, b], &[])
 }
 
-/// Elementwise equality as 0/1 f32 (no grad).
+/// Elementwise equality as a 0/1 mask in the promoted dtype (no grad).
 pub fn eq_mask(a: &Tensor, b: &Tensor) -> Tensor {
-    binary_map("eq", a, b, |x, y| if x == y { 1.0 } else { 0.0 })
+    dispatch::call("eq", &[a, b], &[])
 }
 
 #[cfg(test)]
@@ -352,5 +138,53 @@ mod tests {
         let c = add(&a, &b);
         assert_eq!(c.device(), crate::device::Device::Sim);
         assert_eq!(c.to_vec::<f32>(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn add_i64_tensors() {
+        let a = Tensor::from_vec(vec![1i64, -2], &[2]);
+        let b = Tensor::from_vec(vec![10i64, 20], &[2]);
+        assert_eq!(add(&a, &b).to_vec::<i64>(), vec![11, 18]);
+    }
+
+    #[test]
+    fn mixed_dtype_promotes_to_f64() {
+        let a = Tensor::from_slice(&[1.5f32, 2.5]);
+        let b = Tensor::from_vec(vec![1.0f64, 2.0], &[2]);
+        let c = add(&a, &b);
+        assert_eq!(c.dtype(), crate::tensor::DType::F64);
+        assert_eq!(c.to_vec::<f64>(), vec![2.5, 4.5]);
+    }
+
+    #[test]
+    fn mixed_dtype_backward_casts_grad_to_leaf_dtype() {
+        let a = Tensor::from_slice(&[2.0f32]).requires_grad(true);
+        let b = Tensor::from_vec(vec![3.0f64], &[1]).requires_grad(true);
+        let out = mul(&a, &b);
+        assert_eq!(out.dtype(), crate::tensor::DType::F64);
+        out.backward_with(Tensor::from_vec(vec![1.0f64], &[1]));
+        let ga = a.grad().unwrap();
+        assert_eq!(ga.dtype(), crate::tensor::DType::F32);
+        assert_eq!(ga.to_vec::<f32>(), vec![3.0]);
+        assert_eq!(b.grad().unwrap().to_vec::<f64>(), vec![2.0]);
+    }
+
+    #[test]
+    fn broadcast_with_zero_element_tensor() {
+        // 0-element operands broadcast to 0-element outputs, no panic.
+        let a = Tensor::from_vec(Vec::<f32>::new(), &[2, 0]);
+        let b = Tensor::ones(&[2, 1]);
+        let c = add(&a, &b);
+        assert_eq!(c.shape(), &[2, 0]);
+        assert_eq!(c.numel(), 0);
+        let s = Tensor::scalar(1.0);
+        assert_eq!(add(&a, &s).shape(), &[2, 0]);
+    }
+
+    #[test]
+    fn eq_mask_i64() {
+        let a = Tensor::from_vec(vec![1i64, 2, 3], &[3]);
+        let b = Tensor::from_vec(vec![1i64, 0, 3], &[3]);
+        assert_eq!(eq_mask(&a, &b).to_vec::<i64>(), vec![1, 0, 1]);
     }
 }

@@ -1,10 +1,7 @@
-//! The conv2d eager op with autograd (wraps the im2col kernels).
+//! The conv2d eager op — dispatcher shim over the im2col kernel entry.
 
-use crate::autograd::{self, ClosureFunction, SavedTensor};
-use crate::device;
-use crate::kernels::conv::{conv2d_backward_input, conv2d_backward_weight, conv2d_forward, Conv2dArgs};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 /// 2-D convolution: input [N,C,H,W], weight [Cout, Cin/groups, KH, KW],
 /// optional bias [Cout].
@@ -16,95 +13,17 @@ pub fn conv2d(
     padding: usize,
     groups: usize,
 ) -> Tensor {
-    torsk_assert!(input.ndim() == 4, "conv2d: input must be NCHW, got {:?}", input.shape());
-    torsk_assert!(weight.ndim() == 4, "conv2d: weight must be 4-D, got {:?}", weight.shape());
-    let args = Conv2dArgs {
-        batch: input.size(0),
-        c_in: input.size(1),
-        h_in: input.size(2),
-        w_in: input.size(3),
-        c_out: weight.size(0),
-        kh: weight.size(2),
-        kw: weight.size(3),
-        stride,
-        padding,
-        groups,
-    };
-    args.validate();
-    torsk_assert!(
-        weight.size(1) == args.cg_in(),
-        "conv2d: weight in-channels {} != input {}/groups {}",
-        weight.size(1),
-        args.c_in,
-        groups
-    );
-
-    let mut all_inputs: Vec<&Tensor> = vec![input, weight];
-    if let Some(b) = bias {
-        torsk_assert!(b.shape() == [args.c_out], "conv2d: bias shape {:?}", b.shape());
-        all_inputs.push(b);
+    let params = [Param::Usize(stride), Param::Usize(padding), Param::Usize(groups)];
+    match bias {
+        Some(b) => dispatch::call("conv2d", &[input, weight, b], &params),
+        None => dispatch::call("conv2d", &[input, weight], &params),
     }
-    let dev = super::same_device(&all_inputs);
-
-    let input_c = input.contiguous();
-    let weight_c = weight.contiguous();
-    let bias_c = bias.map(|b| b.contiguous());
-    let out = Tensor::empty(&[args.batch, args.c_out, args.h_out(), args.w_out()], DType::F32, dev);
-
-    {
-        let (ip, wp, op) = (input_c.data_ptr(), weight_c.data_ptr(), out.data_ptr());
-        let bp = bias_c.as_ref().map(|b| b.data_ptr());
-        let (in_len, w_len, out_len) = (input_c.numel(), weight_c.numel(), out.numel());
-        let c_out = args.c_out;
-        device::dispatch(dev, "conv2d", move || unsafe {
-            let iv = ip.as_slice::<f32>(0, in_len);
-            let wv = wp.as_slice::<f32>(0, w_len);
-            let bv = bp.map(|p| p.as_slice::<f32>(0, c_out));
-            let ov = op.as_mut_slice::<f32>(0, out_len);
-            conv2d_forward(&args, iv, wv, bv, ov);
-        });
-    }
-
-    if autograd::should_record(&all_inputs) {
-        let (vi, vw) = (SavedTensor::save(&input_c), SavedTensor::save(&weight_c));
-        let has_bias = bias.is_some();
-        autograd::record(&all_inputs, &out, || {
-            ClosureFunction::new("conv2d", move |g| {
-                let input = vi.unpack();
-                let weight = vw.unpack();
-                let g = g.contiguous();
-                if g.device().is_async() {
-                    device::synchronize();
-                }
-                let gv = g.to_vec::<f32>();
-                let iv = input.to_vec::<f32>();
-                let wv = weight.to_vec::<f32>();
-
-                let mut gi = vec![0.0f32; iv.len()];
-                conv2d_backward_input(&args, &gv, &wv, &mut gi);
-                let mut gw = vec![0.0f32; wv.len()];
-                let mut gb = if has_bias { Some(vec![0.0f32; args.c_out]) } else { None };
-                conv2d_backward_weight(&args, &iv, &gv, &mut gw, gb.as_deref_mut());
-
-                let dev = input.device();
-                let mut grads = vec![
-                    Some(Tensor::from_vec(gi, input.shape()).to_device(dev)),
-                    Some(Tensor::from_vec(gw, weight.shape()).to_device(dev)),
-                ];
-                if let Some(gb) = gb {
-                    grads.push(Some(Tensor::from_vec(gb, &[args.c_out]).to_device(dev)));
-                }
-                grads
-            })
-        });
-    }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::conv::conv2d_ref;
+    use crate::kernels::conv::{conv2d_ref, Conv2dArgs};
 
     #[test]
     fn conv2d_matches_reference() {
@@ -176,5 +95,21 @@ mod tests {
         assert_eq!(y.device(), crate::device::Device::Sim);
         assert_eq!(y.shape(), &[1, 2, 4, 4]);
         let _ = y.to_vec::<f32>(); // forces sync, checks no deadlock
+    }
+
+    #[test]
+    #[should_panic(expected = "conv2d")]
+    fn conv2d_bad_weight_shape_panics() {
+        let x = Tensor::ones(&[1, 3, 4, 4]);
+        let w = Tensor::ones(&[2, 2, 3, 3]); // in-channels mismatch
+        conv2d(&x, &w, None, 1, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported dtype")]
+    fn conv2d_rejects_f64() {
+        let x = Tensor::from_vec(vec![0.0f64; 16], &[1, 1, 4, 4]);
+        let w = Tensor::from_vec(vec![0.0f64; 9], &[1, 1, 3, 3]);
+        conv2d(&x, &w, None, 1, 1, 1);
     }
 }

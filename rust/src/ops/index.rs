@@ -1,71 +1,18 @@
 //! Indexing ops: embedding lookup (gather rows) with scatter-add backward,
-//! and one-hot encoding.
+//! and one-hot encoding — dispatcher shims.
 
-use crate::autograd::{self, ClosureFunction};
-use crate::device;
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 /// Embedding lookup: `weight [V, D]` gathered by i64 `indices [..]` ->
 /// `[.., D]`. Backward scatter-adds into the weight gradient.
 pub fn embedding(weight: &Tensor, indices: &Tensor) -> Tensor {
-    torsk_assert!(weight.ndim() == 2, "embedding: weight must be [V, D]");
-    torsk_assert!(indices.dtype() == DType::I64, "embedding: indices must be i64");
-    let (v, d) = (weight.size(0), weight.size(1));
-    let w = weight.contiguous();
-    let idx = indices.contiguous();
-    let n = idx.numel();
-    let mut out_shape = indices.shape().to_vec();
-    out_shape.push(d);
-    let out = Tensor::empty(&out_shape, DType::F32, weight.device());
-    {
-        let (wp, ip, op) = (w.data_ptr(), idx.data_ptr(), out.data_ptr());
-        device::dispatch(weight.device(), "embedding", move || unsafe {
-            let wv = wp.as_slice::<f32>(0, v * d);
-            let iv = ip.as_slice::<i64>(0, n);
-            let ov = op.as_mut_slice::<f32>(0, n * d);
-            for (r, &i) in iv.iter().enumerate() {
-                assert!((0..v as i64).contains(&i), "embedding index {i} out of range 0..{v}");
-                ov[r * d..(r + 1) * d].copy_from_slice(&wv[i as usize * d..(i as usize + 1) * d]);
-            }
-        });
-    }
-    if autograd::should_record(&[weight]) {
-        let idx2 = idx.clone();
-        let dev = weight.device();
-        autograd::record(&[weight], &out, || {
-            ClosureFunction::new("embedding", move |g| {
-                let g = g.contiguous();
-                let gv = g.to_vec::<f32>();
-                let iv = idx2.to_vec::<i64>();
-                let mut gw = vec![0.0f32; v * d];
-                for (r, &i) in iv.iter().enumerate() {
-                    let row = &gv[r * d..(r + 1) * d];
-                    let acc = &mut gw[i as usize * d..(i as usize + 1) * d];
-                    for (a, &x) in acc.iter_mut().zip(row.iter()) {
-                        *a += x;
-                    }
-                }
-                vec![Some(Tensor::from_vec(gw, &[v, d]).to_device(dev))]
-            })
-        });
-    }
-    out
+    dispatch::call("embedding", &[weight, indices], &[])
 }
 
 /// One-hot encode i64 `indices [N]` into f32 `[N, classes]`.
 pub fn one_hot(indices: &Tensor, classes: usize) -> Tensor {
-    torsk_assert!(indices.dtype() == DType::I64, "one_hot: indices must be i64");
-    let iv = indices.to_vec::<i64>();
-    let n = iv.len();
-    let mut data = vec![0.0f32; n * classes];
-    for (r, &i) in iv.iter().enumerate() {
-        torsk_assert!((0..classes as i64).contains(&i), "one_hot: index {i} out of range");
-        data[r * classes + i as usize] = 1.0;
-    }
-    let mut shape = indices.shape().to_vec();
-    shape.push(classes);
-    Tensor::from_vec(data, &shape).to_device(indices.device())
+    dispatch::call("one_hot", &[indices], &[Param::Usize(classes)])
 }
 
 #[cfg(test)]

@@ -1,4 +1,5 @@
-//! In-place mutation ops (`add_`, `mul_`, `zero_`, `copy_`, `fill_`).
+//! In-place mutation ops (`add_`, `mul_`, `zero_`, `copy_`, `fill_`) —
+//! dispatcher shims exposed as `Tensor` methods.
 //!
 //! Every mutation bumps the storage version (§4.3). Mutating a leaf that
 //! requires grad outside `no_grad` is an error, mirroring PyTorch's
@@ -6,99 +7,43 @@
 //! operation". Optimizers mutate parameters inside `no_grad` (§4.1's
 //! "optimizers are just programs" — they run the same ops).
 
-use crate::autograd;
-use crate::device;
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
-
-fn check_inplace_allowed(t: &Tensor, name: &str) {
-    torsk_assert!(
-        !(autograd::grad_enabled() && t.requires_grad_flag() && t.grad_fn().is_none()),
-        "a leaf tensor that requires grad is being used in an in-place \
-         operation ({name}); wrap the update in no_grad()"
-    );
-}
-
-fn inplace_binary(name: &'static str, dst: &Tensor, src: &Tensor, f: fn(f32, f32) -> f32) {
-    check_inplace_allowed(dst, name);
-    torsk_assert!(dst.shape() == src.shape(), "{name}: shape {:?} vs {:?}", dst.shape(), src.shape());
-    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
-    let dev = super::same_device(&[dst, src]);
-    let src = src.contiguous();
-    let n = dst.numel();
-    let (dp, sp) = (dst.data_ptr(), src.data_ptr());
-    device::dispatch(dev, name, move || unsafe {
-        let d = dp.as_mut_slice::<f32>(0, n);
-        let s = sp.as_slice::<f32>(0, n);
-        for i in 0..n {
-            d[i] = f(d[i], s[i]);
-        }
-    });
-    dst.bump_version();
-}
-
-fn inplace_scalar(name: &'static str, dst: &Tensor, s: f32, f: fn(f32, f32) -> f32) {
-    check_inplace_allowed(dst, name);
-    torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
-    let n = dst.numel();
-    let dp = dst.data_ptr();
-    device::dispatch(dst.device(), name, move || unsafe {
-        let d = dp.as_mut_slice::<f32>(0, n);
-        for x in d.iter_mut() {
-            *x = f(*x, s);
-        }
-    });
-    dst.bump_version();
-}
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 impl Tensor {
     /// `self += other` in place.
     pub fn add_(&self, other: &Tensor) {
-        inplace_binary("add_", self, other, |a, b| a + b);
+        dispatch::call("add_", &[self, other], &[]);
     }
 
     /// `self -= other` in place.
     pub fn sub_(&self, other: &Tensor) {
-        inplace_binary("sub_", self, other, |a, b| a - b);
+        dispatch::call("sub_", &[self, other], &[]);
     }
 
     /// `self *= other` in place.
     pub fn mul_(&self, other: &Tensor) {
-        inplace_binary("mul_", self, other, |a, b| a * b);
+        dispatch::call("mul_", &[self, other], &[]);
     }
 
     /// `self += alpha * other` in place (the SGD update primitive).
     pub fn axpy_(&self, alpha: f32, other: &Tensor) {
-        check_inplace_allowed(self, "axpy_");
-        torsk_assert!(self.shape() == other.shape(), "axpy_: shape mismatch");
-        torsk_assert!(self.is_contiguous(), "axpy_: destination must be contiguous");
-        let dev = super::same_device(&[self, other]);
-        let other = other.contiguous();
-        let n = self.numel();
-        let (dp, sp) = (self.data_ptr(), other.data_ptr());
-        device::dispatch(dev, "axpy_", move || unsafe {
-            let d = dp.as_mut_slice::<f32>(0, n);
-            let s = sp.as_slice::<f32>(0, n);
-            for i in 0..n {
-                d[i] += alpha * s[i];
-            }
-        });
-        self.bump_version();
+        dispatch::call("axpy_", &[self, other], &[Param::F32(alpha)]);
     }
 
     /// `self *= s` in place.
     pub fn mul_scalar_(&self, s: f32) {
-        inplace_scalar("mul_scalar_", self, s, |a, b| a * b);
+        dispatch::call("mul_scalar_", &[self], &[Param::F32(s)]);
     }
 
     /// `self += s` in place.
     pub fn add_scalar_(&self, s: f32) {
-        inplace_scalar("add_scalar_", self, s, |a, b| a + b);
+        dispatch::call("add_scalar_", &[self], &[Param::F32(s)]);
     }
 
     /// Fill with a constant.
     pub fn fill_(&self, v: f32) {
-        inplace_scalar("fill_", self, v, |_, b| b);
+        dispatch::call("fill_", &[self], &[Param::F32(v)]);
     }
 
     /// Zero in place (`optimizer.zero_grad` style).
@@ -106,32 +51,16 @@ impl Tensor {
         self.fill_(0.0);
     }
 
-    /// Copy data from `src` (same shape) in place.
+    /// Copy data from `src` (same shape and dtype) in place.
     pub fn copy_(&self, src: &Tensor) {
-        torsk_assert!(self.dtype() == src.dtype(), "copy_: dtype mismatch");
-        match self.dtype() {
-            DType::F32 => inplace_binary("copy_", self, src, |_, b| b),
-            DType::I64 => {
-                check_inplace_allowed(self, "copy_");
-                torsk_assert!(self.shape() == src.shape(), "copy_: shape mismatch");
-                let src = src.contiguous();
-                let n = self.numel();
-                let (dp, sp) = (self.data_ptr(), src.data_ptr());
-                device::dispatch(self.device(), "copy_", move || unsafe {
-                    let d = dp.as_mut_slice::<i64>(0, n);
-                    let s = sp.as_slice::<i64>(0, n);
-                    d.copy_from_slice(s);
-                });
-                self.bump_version();
-            }
-        }
+        dispatch::call("copy_", &[self, src], &[]);
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::autograd::no_grad;
+    use crate::tensor::Tensor;
 
     #[test]
     fn add_inplace() {
@@ -202,5 +131,14 @@ mod tests {
         let b = Tensor::from_vec(vec![5i64, -9], &[2]);
         a.copy_(&b);
         assert_eq!(a.to_vec::<i64>(), vec![5, -9]);
+    }
+
+    #[test]
+    fn inplace_f64() {
+        let a = Tensor::from_vec(vec![1.0f64, 2.0], &[2]);
+        a.add_(&Tensor::from_vec(vec![0.5f64, 0.5], &[2]));
+        a.mul_scalar_(2.0);
+        a.axpy_(1.0, &Tensor::from_vec(vec![1.0f64, 1.0], &[2]));
+        assert_eq!(a.to_vec::<f64>(), vec![4.0, 6.0]);
     }
 }

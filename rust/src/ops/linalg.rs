@@ -1,139 +1,32 @@
 //! Matrix multiplication ops: `matmul`, batched `bmm`, and fused
-//! `linear` (x @ Wᵀ + b, the nn.Linear hot path).
+//! `linear` (x @ Wᵀ + b, the nn.Linear hot path) — dispatcher shims.
 
-use crate::autograd::{self, ClosureFunction, SavedTensor};
-use crate::device;
-use crate::kernels::matmul::{sgemm, sgemm_batched};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch;
+use crate::tensor::Tensor;
 
-use super::same_device;
-
-fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
-    let dev = same_device(&[a, b]);
-    torsk_assert!(a.ndim() == 2 && b.ndim() == 2, "matmul: need 2-D, got {:?} x {:?}", a.shape(), b.shape());
-    let (m, k) = (a.size(0), a.size(1));
-    let (k2, n) = (b.size(0), b.size(1));
-    torsk_assert!(k == k2, "matmul: inner dims {k} vs {k2}");
-    let a = a.contiguous();
-    let b = b.contiguous();
-    let out = Tensor::empty(&[m, n], DType::F32, dev);
-    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
-    device::dispatch(dev, "matmul", move || unsafe {
-        sgemm(
-            m,
-            n,
-            k,
-            1.0,
-            ap.as_slice::<f32>(0, m * k),
-            bp.as_slice::<f32>(0, k * n),
-            0.0,
-            op.as_mut_slice::<f32>(0, m * n),
-        );
-    });
-    out
-}
-
-/// 2-D matrix product with autograd.
+/// 2-D matrix product with autograd (f32 or f64).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = matmul_raw(a, b);
-    if autograd::should_record(&[a, b]) {
-        let (va, vb) = (SavedTensor::save(a), SavedTensor::save(b));
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("matmul", move |g| {
-                let a = va.unpack();
-                let b = vb.unpack();
-                // dA = G @ Bᵀ ; dB = Aᵀ @ G
-                let ga = matmul_raw(g, &b.t().contiguous());
-                let gb = matmul_raw(&a.t().contiguous(), g);
-                vec![Some(ga), Some(gb)]
-            })
-        });
-    }
-    out
-}
-
-fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
-    let dev = same_device(&[a, b]);
-    torsk_assert!(a.ndim() == 3 && b.ndim() == 3, "bmm: need 3-D");
-    let (batch, m, k) = (a.size(0), a.size(1), a.size(2));
-    let (b2, k2, n) = (b.size(0), b.size(1), b.size(2));
-    torsk_assert!(batch == b2 && k == k2, "bmm: shape mismatch {:?} x {:?}", a.shape(), b.shape());
-    let a = a.contiguous();
-    let b = b.contiguous();
-    let out = Tensor::empty(&[batch, m, n], DType::F32, dev);
-    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
-    device::dispatch(dev, "bmm", move || unsafe {
-        sgemm_batched(
-            batch,
-            m,
-            n,
-            k,
-            ap.as_slice::<f32>(0, batch * m * k),
-            bp.as_slice::<f32>(0, batch * k * n),
-            op.as_mut_slice::<f32>(0, batch * m * n),
-        );
-    });
-    out
+    dispatch::call("matmul", &[a, b], &[])
 }
 
 /// Batched matrix product [B,m,k] @ [B,k,n] with autograd.
 pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
-    let out = bmm_raw(a, b);
-    if autograd::should_record(&[a, b]) {
-        let (va, vb) = (SavedTensor::save(a), SavedTensor::save(b));
-        autograd::record(&[a, b], &out, || {
-            ClosureFunction::new("bmm", move |g| {
-                let a = va.unpack();
-                let b = vb.unpack();
-                let bt = b.transpose(1, 2).contiguous();
-                let at = a.transpose(1, 2).contiguous();
-                vec![Some(bmm_raw(g, &bt)), Some(bmm_raw(&at, g))]
-            })
-        });
-    }
-    out
+    dispatch::call("bmm", &[a, b], &[])
 }
 
 /// Fused linear layer: `x [N,in] @ Wᵀ [in,out] + b`, PyTorch weight layout
 /// `W [out,in]`.
 pub fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
-    torsk_assert!(x.ndim() == 2 && w.ndim() == 2, "linear: x 2-D, w 2-D");
-    torsk_assert!(x.size(1) == w.size(1), "linear: in_features {} vs {}", x.size(1), w.size(1));
-    let wt = w.t().contiguous();
-    let y = matmul_raw(x, &wt);
-    let out = match b {
-        Some(bias) => super::binary_map("add_bias", &y, bias, |p, q| p + q),
-        None => y,
-    };
-    let mut inputs: Vec<&Tensor> = vec![x, w];
-    if let Some(bias) = b {
-        inputs.push(bias);
+    match b {
+        Some(bias) => dispatch::call("linear", &[x, w, bias], &[]),
+        None => dispatch::call("linear", &[x, w], &[]),
     }
-    if autograd::should_record(&inputs) {
-        let (vx, vw) = (SavedTensor::save(x), SavedTensor::save(w));
-        let has_bias = b.is_some();
-        autograd::record(&inputs, &out, || {
-            ClosureFunction::new("linear", move |g| {
-                let x = vx.unpack();
-                let w = vw.unpack();
-                // gx = G @ W ; gw = Gᵀ @ x ; gb = sum rows of G
-                let gx = matmul_raw(g, &w);
-                let gw = matmul_raw(&g.t().contiguous(), &x);
-                let mut grads = vec![Some(gx), Some(gw)];
-                if has_bias {
-                    grads.push(Some(super::sum_dims(g, &[0], false)));
-                }
-                grads
-            })
-        });
-    }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dispatch::linalg::matmul_raw;
     use crate::tensor::assert_close;
 
     #[test]
@@ -231,5 +124,24 @@ mod tests {
         let y1 = linear(&x, &w, Some(&b));
         let y2 = super::super::add(&matmul(&x, &w.t()), &b);
         assert_close(&y1, &y2, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn matmul_f64_values_and_grad() {
+        let a = Tensor::from_vec(vec![1.0f64, 2.0, 3.0, 4.0], &[2, 2]).requires_grad(true);
+        let b = Tensor::from_vec(vec![5.0f64, 6.0, 7.0, 8.0], &[2, 2]);
+        let y = matmul(&a, &b);
+        assert_eq!(y.dtype(), crate::tensor::DType::F64);
+        assert_eq!(y.to_vec::<f64>(), vec![19.0, 22.0, 43.0, 50.0]);
+        y.sum().backward();
+        // d(sum)/dA = ones @ Bᵀ
+        assert_eq!(a.grad().unwrap().to_vec::<f64>(), vec![11.0, 15.0, 11.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported dtype")]
+    fn matmul_rejects_i64() {
+        let a = Tensor::from_vec(vec![1i64, 2, 3, 4], &[2, 2]);
+        matmul(&a, &a);
     }
 }

@@ -1,131 +1,34 @@
-//! Loss ops: fused softmax/log-softmax, cross-entropy, MSE, BCE.
+//! Loss ops: fused softmax/log-softmax, cross-entropy, MSE, BCE —
+//! dispatcher shims.
 
-use crate::autograd::{self, ClosureFunction, SavedTensor};
-use crate::device;
-use crate::kernels::softmax::{
-    cross_entropy_backward, cross_entropy_forward, log_softmax_backward_rows, log_softmax_rows,
-    softmax_backward_rows, softmax_rows,
-};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
-
-fn rows_cols(t: &Tensor) -> (usize, usize) {
-    torsk_assert!(t.ndim() >= 1, "softmax: needs at least 1 dim");
-    let cols = *t.shape().last().unwrap();
-    (t.numel() / cols.max(1), cols)
-}
+use crate::dispatch;
+use crate::tensor::Tensor;
 
 /// Softmax over the last dimension.
 pub fn softmax_last(input: &Tensor) -> Tensor {
-    let (rows, cols) = rows_cols(input);
-    let x = input.contiguous();
-    let out = Tensor::empty(x.shape(), DType::F32, x.device());
-    let (xp, op) = (x.data_ptr(), out.data_ptr());
-    let n = x.numel();
-    device::dispatch(x.device(), "softmax", move || unsafe {
-        softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
-    });
-    if autograd::should_record(&[input]) {
-        let saved_y = SavedTensor::save(&out);
-        autograd::record(&[input], &out, || {
-            ClosureFunction::new("softmax", move |g| {
-                let y = saved_y.unpack().contiguous();
-                let g = g.contiguous();
-                let yv = y.to_vec::<f32>();
-                let gv = g.to_vec::<f32>();
-                let mut gi = vec![0.0f32; yv.len()];
-                softmax_backward_rows(rows, cols, &yv, &gv, &mut gi);
-                vec![Some(Tensor::from_vec(gi, y.shape()).to_device(g.device()))]
-            })
-        });
-    }
-    out
+    dispatch::call("softmax", &[input], &[])
 }
 
 /// Log-softmax over the last dimension.
 pub fn log_softmax_last(input: &Tensor) -> Tensor {
-    let (rows, cols) = rows_cols(input);
-    let x = input.contiguous();
-    let out = Tensor::empty(x.shape(), DType::F32, x.device());
-    let (xp, op) = (x.data_ptr(), out.data_ptr());
-    let n = x.numel();
-    device::dispatch(x.device(), "log_softmax", move || unsafe {
-        log_softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
-    });
-    if autograd::should_record(&[input]) {
-        let saved_y = SavedTensor::save(&out);
-        autograd::record(&[input], &out, || {
-            ClosureFunction::new("log_softmax", move |g| {
-                let y = saved_y.unpack().contiguous();
-                let g = g.contiguous();
-                let yv = y.to_vec::<f32>();
-                let gv = g.to_vec::<f32>();
-                let mut gi = vec![0.0f32; yv.len()];
-                log_softmax_backward_rows(rows, cols, &yv, &gv, &mut gi);
-                vec![Some(Tensor::from_vec(gi, y.shape()).to_device(g.device()))]
-            })
-        });
-    }
-    out
+    dispatch::call("log_softmax", &[input], &[])
 }
 
 /// Fused cross-entropy loss: logits [N, C] (f32) + targets [N] (i64)
-/// -> scalar mean loss. The hot-path classification loss (fuses
-/// log-softmax + NLL like `torch.nn.functional.cross_entropy`).
+/// -> scalar mean loss (fuses log-softmax + NLL like
+/// `torch.nn.functional.cross_entropy`).
 pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Tensor {
-    torsk_assert!(logits.ndim() == 2, "cross_entropy: logits must be [N, C]");
-    torsk_assert!(targets.dtype() == DType::I64, "cross_entropy: targets must be i64");
-    torsk_assert!(
-        targets.numel() == logits.size(0),
-        "cross_entropy: {} targets for {} rows",
-        targets.numel(),
-        logits.size(0)
-    );
-    let (rows, cols) = (logits.size(0), logits.size(1));
-    let x = logits.contiguous();
-    // Forward runs synchronously on host data (the scalar loss is consumed
-    // by control flow anyway); log-probs are saved for backward.
-    let xv = x.to_vec::<f32>();
-    let tv = targets.to_vec::<i64>();
-    let mut log_probs = vec![0.0f32; rows * cols];
-    let loss = cross_entropy_forward(rows, cols, &xv, &tv, &mut log_probs);
-    let out = Tensor::scalar(loss).to_device(logits.device());
-    if autograd::should_record(&[logits]) {
-        let shape = logits.shape().to_vec();
-        let dev = logits.device();
-        autograd::record(&[logits], &out, || {
-            ClosureFunction::new("cross_entropy", move |g| {
-                let gs = g.item();
-                let mut gi = vec![0.0f32; rows * cols];
-                cross_entropy_backward(rows, cols, &log_probs, &tv, gs, &mut gi);
-                vec![Some(Tensor::from_vec(gi, &shape).to_device(dev))]
-            })
-        });
-    }
-    out
+    dispatch::call("cross_entropy", &[logits, targets], &[])
 }
 
 /// Mean-squared-error loss (mean reduction).
 pub fn mse_loss(pred: &Tensor, target: &Tensor) -> Tensor {
-    torsk_assert!(pred.shape() == target.shape(), "mse_loss: shape mismatch");
-    let diff = super::sub(pred, target);
-    let sq = super::mul(&diff, &diff);
-    super::mean(&sq)
+    dispatch::call("mse_loss", &[pred, target], &[])
 }
 
 /// Binary cross-entropy on probabilities in (0,1), mean reduction.
 pub fn bce_loss(pred: &Tensor, target: &Tensor) -> Tensor {
-    torsk_assert!(pred.shape() == target.shape(), "bce_loss: shape mismatch");
-    let eps = 1e-7;
-    let p = super::clamp(pred, eps, 1.0 - eps);
-    // -[t*log(p) + (1-t)*log(1-p)]
-    let log_p = super::log(&p);
-    let one_minus_p = super::add_scalar(&super::neg(&p), 1.0);
-    let log_1p = super::log(&one_minus_p);
-    let one_minus_t = super::add_scalar(&super::neg(target), 1.0);
-    let pos = super::mul(target, &log_p);
-    let neg_term = super::mul(&one_minus_t, &log_1p);
-    super::neg(&super::mean(&super::add(&pos, &neg_term)))
+    dispatch::call("bce_loss", &[pred, target], &[])
 }
 
 /// Classification accuracy (no grad): logits [N, C] vs i64 targets [N].
@@ -205,6 +108,19 @@ mod tests {
         let g = p.grad().unwrap().to_vec::<f32>();
         assert!((g[0] - 1.0).abs() < 1e-6); // 2*1/2
         assert!((g[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_loss_f64() {
+        let p = Tensor::from_vec(vec![1.0f64, 2.0], &[2]).requires_grad(true);
+        let t = Tensor::from_vec(vec![0.0f64, 0.0], &[2]);
+        let l = mse_loss(&p, &t);
+        assert_eq!(l.dtype(), crate::tensor::DType::F64);
+        assert!((l.to_vec::<f64>()[0] - 2.5).abs() < 1e-12);
+        l.backward();
+        let g = p.grad().unwrap().to_vec::<f64>();
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[1] - 2.0).abs() < 1e-12);
     }
 
     #[test]

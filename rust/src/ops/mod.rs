@@ -1,14 +1,16 @@
-//! Eager operators over [`Tensor`] with autograd recording.
+//! Eager operators over [`Tensor`] — thin shims over the central
+//! [`crate::dispatch`] registry.
 //!
-//! Every op follows the paper's execution model (§5.2): the *host* thread
-//! resolves shapes/broadcasting, allocates the output, records the
-//! backward node, and dispatches the kernel — inline for CPU tensors,
-//! queued on the current stream for simulated-device tensors. The op
-//! returns as soon as the kernel is dispatched; data-dependent reads
-//! synchronize.
-//!
-//! Ops are free functions (`ops::add(&a, &b)`) plus ergonomic `Tensor`
-//! methods (`a.add(&b)`), mirroring `torch.add` / `Tensor.add`.
+//! Every public function here is one line: it names an op and forwards to
+//! [`dispatch::call`], the single choke point that validates the schema,
+//! resolves the backend key (`Cpu` runs inline, `Sim` queues on the
+//! current stream, §5.2), promotes dtypes, emits a per-op profiler span
+//! and records the autograd node. Op *semantics* (kernels + backward
+//! rules) live in `dispatch/`'s registry entries; this module is the
+//! stable user-facing API surface: free functions (`ops::add(&a, &b)`),
+//! ergonomic `Tensor` methods (`a.add(&b)`), and `std::ops` operator
+//! overloads (`&a * &b + &c`, `&a + 1.0`) mirroring `torch.add` /
+//! `Tensor.add` / Python operators.
 
 mod binary;
 mod conv;
@@ -35,24 +37,7 @@ pub use reduce::*;
 pub use unary::*;
 pub use views::*;
 
-use crate::device::Device;
-use crate::tensor::Tensor;
-use crate::torsk_assert;
-
-/// Check all tensors share a device; return it. Mirrors PyTorch's
-/// "expected all tensors on the same device" error.
-pub(crate) fn same_device(tensors: &[&Tensor]) -> Device {
-    let d = tensors[0].device();
-    for t in tensors.iter().skip(1) {
-        torsk_assert!(
-            t.device() == d,
-            "expected all tensors to be on the same device, found {} and {}",
-            d,
-            t.device()
-        );
-    }
-    d
-}
+use crate::tensor::{DType, Tensor};
 
 // ------------------------------------------------------------------
 // Ergonomic Tensor methods (the `x.relu().matmul(&w)` chaining style
@@ -102,6 +87,11 @@ impl Tensor {
     pub fn pow_scalar(&self, p: f32) -> Tensor {
         pow_scalar(self, p)
     }
+    /// Convert to another dtype (`tensor.to(torch.float64)`); routes
+    /// through the `cast` registry entry, so gradients cast back.
+    pub fn to_dtype(&self, dt: DType) -> Tensor {
+        cast(self, dt)
+    }
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         matmul(self, other)
     }
@@ -141,6 +131,12 @@ impl Tensor {
     }
 }
 
+// ------------------------------------------------------------------
+// Operator overloads: tensor ⊕ tensor and tensor ⊕ scalar, so user code
+// reads `&a * &b + &c` / `&x + 1.0` — the paper's "code as a model"
+// ergonomics. All route through the dispatcher like every other op.
+// ------------------------------------------------------------------
+
 impl std::ops::Add<&Tensor> for &Tensor {
     type Output = Tensor;
     fn add(self, rhs: &Tensor) -> Tensor {
@@ -162,10 +158,59 @@ impl std::ops::Mul<&Tensor> for &Tensor {
     }
 }
 
+impl std::ops::Div<&Tensor> for &Tensor {
+    type Output = Tensor;
+    fn div(self, rhs: &Tensor) -> Tensor {
+        div(self, rhs)
+    }
+}
+
 impl std::ops::Neg for &Tensor {
     type Output = Tensor;
     fn neg(self) -> Tensor {
         neg(self)
+    }
+}
+
+impl std::ops::Add<f32> for &Tensor {
+    type Output = Tensor;
+    fn add(self, rhs: f32) -> Tensor {
+        add_scalar(self, rhs)
+    }
+}
+
+impl std::ops::Sub<f32> for &Tensor {
+    type Output = Tensor;
+    fn sub(self, rhs: f32) -> Tensor {
+        add_scalar(self, -rhs)
+    }
+}
+
+impl std::ops::Mul<f32> for &Tensor {
+    type Output = Tensor;
+    fn mul(self, rhs: f32) -> Tensor {
+        mul_scalar(self, rhs)
+    }
+}
+
+impl std::ops::Div<f32> for &Tensor {
+    type Output = Tensor;
+    fn div(self, rhs: f32) -> Tensor {
+        mul_scalar(self, 1.0 / rhs)
+    }
+}
+
+impl std::ops::Add<&Tensor> for f32 {
+    type Output = Tensor;
+    fn add(self, rhs: &Tensor) -> Tensor {
+        add_scalar(rhs, self)
+    }
+}
+
+impl std::ops::Mul<&Tensor> for f32 {
+    type Output = Tensor;
+    fn mul(self, rhs: &Tensor) -> Tensor {
+        mul_scalar(rhs, self)
     }
 }
 
@@ -180,7 +225,31 @@ mod tests {
         assert_eq!((&a + &b).to_vec::<f32>(), vec![11.0, 22.0]);
         assert_eq!((&b - &a).to_vec::<f32>(), vec![9.0, 18.0]);
         assert_eq!((&a * &b).to_vec::<f32>(), vec![10.0, 40.0]);
+        assert_eq!((&b / &a).to_vec::<f32>(), vec![10.0, 10.0]);
         assert_eq!((-&a).to_vec::<f32>(), vec![-1.0, -2.0]);
+    }
+
+    #[test]
+    fn scalar_operator_overloads() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0]);
+        assert_eq!((&a + 1.0).to_vec::<f32>(), vec![2.0, 3.0]);
+        assert_eq!((&a - 1.0).to_vec::<f32>(), vec![0.0, 1.0]);
+        assert_eq!((&a * 3.0).to_vec::<f32>(), vec![3.0, 6.0]);
+        assert_eq!((&a / 2.0).to_vec::<f32>(), vec![0.5, 1.0]);
+        assert_eq!((2.0 + &a).to_vec::<f32>(), vec![3.0, 4.0]);
+        assert_eq!((2.0 * &a).to_vec::<f32>(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn operator_expression_reads_like_math() {
+        // &a * &b + &c — the Listing 1 style, end to end with grad.
+        let a = Tensor::from_slice(&[2.0f32]).requires_grad(true);
+        let b = Tensor::from_slice(&[3.0f32]);
+        let c = Tensor::from_slice(&[4.0f32]);
+        let y = &(&a * &b) + &c;
+        assert_eq!(y.to_vec::<f32>(), vec![10.0]);
+        y.backward_with(Tensor::ones(&[1]));
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![3.0]);
     }
 
     #[test]

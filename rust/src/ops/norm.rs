@@ -1,13 +1,9 @@
-//! Normalization ops: batch-norm (2d, NCHW) and layer-norm, built
-//! compositionally from differentiable primitives — the "models are just
-//! programs" philosophy (§4.1) applied to the library's own internals.
-//! Autograd handles their backward passes automatically.
+//! Normalization ops — dispatcher shims. Training-mode batch-norm routes
+//! to the fused `batch_norm_train` registry entry; eval mode to the
+//! composite `batch_norm` entry built from differentiable primitives.
 
-use crate::autograd::{self, no_grad, ClosureFunction, SavedTensor};
-use crate::device;
-use crate::kernels::norm::{bn_backward, bn_normalize, bn_stats};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 /// Batch normalization over NCHW input (normalizes per channel across
 /// N,H,W). In training mode computes batch statistics and updates the
@@ -24,151 +20,23 @@ pub fn batch_norm2d(
     momentum: f32,
     eps: f32,
 ) -> Tensor {
-    torsk_assert!(input.ndim() == 4, "batch_norm2d: input must be NCHW");
-    let c = input.size(1);
-    torsk_assert!(gamma.shape() == [c] && beta.shape() == [c], "batch_norm2d: affine shape");
-    let cshape = [1, c, 1, 1];
-
+    let inputs = [input, gamma, beta, running_mean, running_var];
     if training {
-        return batch_norm2d_fused(input, gamma, beta, running_mean, running_var, momentum, eps);
+        dispatch::call("batch_norm_train", &inputs, &[Param::F32(momentum), Param::F32(eps)])
+    } else {
+        dispatch::call("batch_norm", &inputs, &[Param::F32(eps)])
     }
-    // Eval mode: running-stat normalization via (fast-path) broadcast ops.
-    let (mean, var) = (
-        running_mean.detach().reshape(&cshape),
-        running_var.detach().reshape(&cshape),
-    );
-    let centered = super::sub(input, &mean);
-    let inv_std = super::pow_scalar(&super::add_scalar(&var, eps), -0.5);
-    let xhat = super::mul(&centered, &inv_std);
-    let g = gamma.reshape(&cshape);
-    let b = beta.reshape(&cshape);
-    super::add(&super::mul(&xhat, &g), &b)
-}
-
-/// Fused training-mode batch norm (§Perf): single-kernel statistics +
-/// normalize with a hand-written backward (the paper's "implementation
-/// accepts added complexity in order to deliver performance", §3).
-fn batch_norm2d_fused(
-    input: &Tensor,
-    gamma: &Tensor,
-    beta: &Tensor,
-    running_mean: &Tensor,
-    running_var: &Tensor,
-    momentum: f32,
-    eps: f32,
-) -> Tensor {
-    let (n, c, h, w) = (input.size(0), input.size(1), input.size(2), input.size(3));
-    let hw = h * w;
-    let x = input.contiguous();
-    let gamma_c = gamma.contiguous();
-    let beta_c = beta.contiguous();
-    let dev = x.device();
-
-    let out = Tensor::empty(x.shape(), DType::F32, dev);
-    let mean_t = Tensor::empty(&[c], DType::F32, dev);
-    let inv_std_t = Tensor::empty(&[c], DType::F32, dev);
-    {
-        let (xp, gp, bp, op) = (x.data_ptr(), gamma_c.data_ptr(), beta_c.data_ptr(), out.data_ptr());
-        let (mp, ip) = (mean_t.data_ptr(), inv_std_t.data_ptr());
-        let len = x.numel();
-        device::dispatch(dev, "batch_norm", move || unsafe {
-            let xv = xp.as_slice::<f32>(0, len);
-            let mean = mp.as_mut_slice::<f32>(0, c);
-            let inv_std = ip.as_mut_slice::<f32>(0, c);
-            let mut var = vec![0.0f32; c];
-            bn_stats(n, c, hw, xv, mean, &mut var);
-            for (o, &v) in inv_std.iter_mut().zip(var.iter()) {
-                *o = 1.0 / (v + eps).sqrt();
-            }
-            bn_normalize(
-                n,
-                c,
-                hw,
-                xv,
-                mean,
-                inv_std,
-                gp.as_slice::<f32>(0, c),
-                bp.as_slice::<f32>(0, c),
-                op.as_mut_slice::<f32>(0, len),
-            );
-        });
-    }
-    // Update running stats from the just-computed batch stats.
-    no_grad(|| {
-        let mean_h = mean_t.detach();
-        // var = 1/inv_std^2 - eps
-        let var_h = super::add_scalar(
-            &super::pow_scalar(&inv_std_t.detach(), -2.0),
-            -eps,
-        );
-        running_mean.mul_scalar_(1.0 - momentum);
-        running_mean.axpy_(momentum, &mean_h);
-        running_var.mul_scalar_(1.0 - momentum);
-        running_var.axpy_(momentum, &var_h);
-    });
-
-    if autograd::should_record(&[input, gamma, beta]) {
-        let vx = SavedTensor::save(&x);
-        let vgamma = SavedTensor::save(&gamma_c);
-        let vmean = mean_t.clone();
-        let vinv = inv_std_t.clone();
-        autograd::record(&[input, gamma, beta], &out, || {
-            ClosureFunction::new("batch_norm", move |g| {
-                let x = vx.unpack().contiguous();
-                let gamma = vgamma.unpack().contiguous();
-                let g = g.contiguous();
-                if g.device().is_async() {
-                    device::synchronize();
-                }
-                let xv = x.to_vec::<f32>();
-                let gv = g.to_vec::<f32>();
-                let mean = vmean.to_vec::<f32>();
-                let inv_std = vinv.to_vec::<f32>();
-                let gam = gamma.to_vec::<f32>();
-                let mut dx = vec![0.0f32; xv.len()];
-                let mut dgamma = vec![0.0f32; c];
-                let mut dbeta = vec![0.0f32; c];
-                bn_backward(n, c, hw, &xv, &mean, &inv_std, &gam, &gv, &mut dx, &mut dgamma, &mut dbeta);
-                let dev = x.device();
-                vec![
-                    Some(Tensor::from_vec(dx, x.shape()).to_device(dev)),
-                    Some(Tensor::from_vec(dgamma, &[c]).to_device(dev)),
-                    Some(Tensor::from_vec(dbeta, &[c]).to_device(dev)),
-                ]
-            })
-        });
-    }
-    out
 }
 
 /// Layer normalization over the last dimension.
 pub fn layer_norm(input: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor {
-    let last = input.ndim() - 1;
-    let d = input.size(last);
-    torsk_assert!(gamma.shape() == [d] && beta.shape() == [d], "layer_norm: affine shape");
-    let mean = super::mean_dims(input, &[last], true);
-    let centered = super::sub(input, &mean);
-    let var = super::mean_dims(&super::mul(&centered, &centered), &[last], true);
-    let inv_std = super::pow_scalar(&super::add_scalar(&var, eps), -0.5);
-    let xhat = super::mul(&centered, &inv_std);
-    super::add(&super::mul(&xhat, gamma), beta)
+    dispatch::call("layer_norm", &[input, gamma, beta], &[Param::F32(eps)])
 }
 
 /// Dropout: zeroes elements with probability `p` and scales survivors by
 /// `1/(1-p)` (inverted dropout). Identity in eval mode.
 pub fn dropout(input: &Tensor, p: f32, training: bool) -> Tensor {
-    if !training || p == 0.0 {
-        return input.clone();
-    }
-    torsk_assert!((0.0..1.0).contains(&p), "dropout: p must be in [0,1)");
-    let scale = 1.0 / (1.0 - p);
-    let mask_data: Vec<f32> = crate::rng::with_rng(|r| {
-        (0..input.numel())
-            .map(|_| if r.bernoulli(p) { 0.0 } else { scale })
-            .collect()
-    });
-    let mask = Tensor::from_vec(mask_data, input.shape()).to_device(input.device());
-    super::mul(input, &mask)
+    dispatch::call("dropout", &[input], &[Param::F32(p), Param::Bool(training)])
 }
 
 #[cfg(test)]

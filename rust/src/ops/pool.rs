@@ -1,95 +1,29 @@
-//! Pooling ops (max / avg / global-avg) with autograd.
+//! Pooling ops (max / avg / global-avg) — dispatcher shims.
 
-use crate::autograd::{self, ClosureFunction};
-use crate::device;
-use crate::kernels::pool::{
-    avgpool2d_backward, avgpool2d_forward, maxpool2d_backward, maxpool2d_forward, Pool2dArgs,
-};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
-
-fn pool_args(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Pool2dArgs {
-    torsk_assert!(input.ndim() == 4, "pool2d: input must be NCHW");
-    Pool2dArgs {
-        batch: input.size(0),
-        channels: input.size(1),
-        h_in: input.size(2),
-        w_in: input.size(3),
-        kernel,
-        stride,
-        padding,
-    }
-}
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 /// Max pooling over 2-D spatial dims.
 pub fn maxpool2d(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Tensor {
-    let args = pool_args(input, kernel, stride, padding);
-    let input_c = input.contiguous();
-    let dev = input.device();
-    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
-    let indices = Tensor::empty(out.shape(), DType::I64, dev);
-    {
-        let (ip, op, xp) = (input_c.data_ptr(), out.data_ptr(), indices.data_ptr());
-        let (in_len, out_len) = (input_c.numel(), out.numel());
-        device::dispatch(dev, "maxpool2d", move || unsafe {
-            maxpool2d_forward(
-                &args,
-                ip.as_slice::<f32>(0, in_len),
-                op.as_mut_slice::<f32>(0, out_len),
-                xp.as_mut_slice::<i64>(0, out_len),
-            );
-        });
-    }
-    if autograd::should_record(&[input]) {
-        let in_shape = input.shape().to_vec();
-        autograd::record(&[input], &out, || {
-            ClosureFunction::new("maxpool2d", move |g| {
-                let g = g.contiguous();
-                let gv = g.to_vec::<f32>();
-                let iv = indices.to_vec::<i64>();
-                let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
-                maxpool2d_backward(&args, &gv, &iv, &mut gi);
-                vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
-            })
-        });
-    }
-    out
+    dispatch::call(
+        "maxpool2d",
+        &[input],
+        &[Param::Usize(kernel), Param::Usize(stride), Param::Usize(padding)],
+    )
 }
 
 /// Average pooling over 2-D spatial dims.
 pub fn avgpool2d(input: &Tensor, kernel: usize, stride: usize, padding: usize) -> Tensor {
-    let args = pool_args(input, kernel, stride, padding);
-    let input_c = input.contiguous();
-    let dev = input.device();
-    let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
-    {
-        let (ip, op) = (input_c.data_ptr(), out.data_ptr());
-        let (in_len, out_len) = (input_c.numel(), out.numel());
-        device::dispatch(dev, "avgpool2d", move || unsafe {
-            avgpool2d_forward(&args, ip.as_slice::<f32>(0, in_len), op.as_mut_slice::<f32>(0, out_len));
-        });
-    }
-    if autograd::should_record(&[input]) {
-        let in_shape = input.shape().to_vec();
-        autograd::record(&[input], &out, || {
-            ClosureFunction::new("avgpool2d", move |g| {
-                let g = g.contiguous();
-                let gv = g.to_vec::<f32>();
-                let mut gi = vec![0.0f32; args.batch * args.channels * args.h_in * args.w_in];
-                avgpool2d_backward(&args, &gv, &mut gi);
-                vec![Some(Tensor::from_vec(gi, &in_shape).to_device(g.device()))]
-            })
-        });
-    }
-    out
+    dispatch::call(
+        "avgpool2d",
+        &[input],
+        &[Param::Usize(kernel), Param::Usize(stride), Param::Usize(padding)],
+    )
 }
 
 /// Global average pooling NCHW -> NC (adaptive_avg_pool2d(1) + flatten).
 pub fn global_avgpool2d(input: &Tensor) -> Tensor {
-    torsk_assert!(input.ndim() == 4, "global_avgpool2d: input must be NCHW");
-    let (n, c) = (input.size(0), input.size(1));
-    let pooled = super::mean_dims(input, &[2, 3], false);
-    pooled.reshape(&[n, c])
+    dispatch::call("global_avgpool2d", &[input], &[])
 }
 
 #[cfg(test)]

@@ -1,219 +1,52 @@
-//! Reductions: full and per-axis sums/means, max, argmax, and the
+//! Reductions — shims over the dispatcher's registry entries, plus the raw
 //! broadcast-gradient helpers (`sum_to_shape`, `broadcast_to`).
 
-use crate::autograd::{self, ClosureFunction};
-use crate::device;
-use crate::tensor::shape::{contiguous_strides, numel};
-use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 
 /// Sum a tensor down to a broadcast-compatible `target` shape (each target
 /// dim is either equal to the source dim or 1; the target may have fewer
-/// dims, which behave as leading 1s).
+/// dims, which behave as leading 1s). Raw helper: no autograd.
 pub fn sum_to_shape(a: &Tensor, target: &[usize]) -> Tensor {
-    let a = a.contiguous();
-    let src_shape = a.shape().to_vec();
-    // Pad target with leading 1s to the source rank.
-    let mut padded = vec![1usize; src_shape.len()];
-    let off = src_shape.len() - target.len();
-    padded[off..].copy_from_slice(target);
-    for (i, (&s, &t)) in src_shape.iter().zip(padded.iter()).enumerate() {
-        torsk_assert!(t == s || t == 1, "sum_to_shape: dim {i}: {s} -> {t}");
-    }
-
-    let out = Tensor::zeros_on(target, DType::F32, a.device());
-    let n = a.numel();
-    if n == 0 {
-        return out;
-    }
-    // Output strides aligned to the padded shape, 0 where target dim == 1.
-    let tstrides_dense = contiguous_strides(&padded);
-    let ostrides: Vec<usize> = padded
-        .iter()
-        .zip(tstrides_dense.iter())
-        .map(|(&d, &st)| if d == 1 { 0 } else { st })
-        .collect();
-
-    let (ap, op) = (a.data_ptr(), out.data_ptr());
-    let on = numel(target);
-    // §Perf: like binary_map, handle a trailing linear run specially —
-    // if the output does not advance over the suffix (reduced dims), the
-    // inner loop is a vectorizable sum; if it advances contiguously, it
-    // is a vectorizable elementwise accumulate.
-    let rank = src_shape.len();
-    let src_contig = contiguous_strides(&src_shape);
-    let (t, _sa, step_o) = super::binary::linear_suffix(&src_shape, &src_contig, &ostrides);
-    let inner: usize = src_shape[rank - t..].iter().product();
-    if t > 0 && inner > 1 {
-        let outer_shape = src_shape[..rank - t].to_vec();
-        let outer_so = ostrides[..rank - t].to_vec();
-        device::dispatch(a.device(), "sum_to", move || unsafe {
-            let av = ap.as_slice::<f32>(0, n);
-            let ov = op.as_mut_slice::<f32>(0, on);
-            let io = crate::tensor::shape::StridedIter::new(&outer_shape, &outer_so);
-            for (chunk, ooff) in av.chunks(inner).zip(io) {
-                if step_o == 0 {
-                    let mut acc = 0f32;
-                    for &v in chunk {
-                        acc += v;
-                    }
-                    ov[ooff] += acc;
-                } else {
-                    let dst = &mut ov[ooff..ooff + inner];
-                    for (d, &v) in dst.iter_mut().zip(chunk) {
-                        *d += v;
-                    }
-                }
-            }
-        });
-        return out;
-    }
-    device::dispatch(a.device(), "sum_to", move || unsafe {
-        let av = ap.as_slice::<f32>(0, n);
-        let ov = op.as_mut_slice::<f32>(0, on);
-        let mut idx = vec![0usize; src_shape.len()];
-        let mut ooff = 0usize;
-        for &v in av.iter() {
-            ov[ooff] += v;
-            for d in (0..src_shape.len()).rev() {
-                idx[d] += 1;
-                ooff += ostrides[d];
-                if idx[d] < src_shape[d] {
-                    break;
-                }
-                ooff -= idx[d] * ostrides[d];
-                idx[d] = 0;
-            }
-        }
-    });
-    out
+    crate::dispatch::reduce::sum_to_shape(a, target)
 }
 
 /// Broadcast a tensor up to `target` shape (materialized copy, used by
 /// reduction backwards).
 pub fn broadcast_to(a: &Tensor, target: &[usize]) -> Tensor {
-    if a.shape() == target {
-        return a.clone();
-    }
-    let expanded = a.expand(target);
-    expanded.contiguous()
+    crate::dispatch::reduce::broadcast_to(a, target)
 }
 
 /// Full sum to a scalar.
 pub fn sum(a: &Tensor) -> Tensor {
-    let out = sum_to_shape(a, &[]);
-    if autograd::should_record(&[a]) {
-        let shape = a.shape().to_vec();
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("sum", move |g| {
-                vec![Some(broadcast_to(g, &shape))]
-            })
-        });
-    }
-    out
+    dispatch::call("sum", &[a], &[])
 }
 
 /// Full mean to a scalar.
 pub fn mean(a: &Tensor) -> Tensor {
-    let n = a.numel().max(1) as f32;
-    let s = sum(a);
-    super::mul_scalar(&s, 1.0 / n)
+    dispatch::call("mean", &[a], &[])
 }
 
-/// Sum over `dims`; `keepdim` keeps reduced axes as size-1.
+/// Sum over `dims`; `keepdim` keeps reduced axes as size-1. `dims = []`
+/// is the identity (no axes reduced), not an error.
 pub fn sum_dims(a: &Tensor, dims: &[usize], keepdim: bool) -> Tensor {
-    let mut kept = a.shape().to_vec();
-    for &d in dims {
-        torsk_assert!(d < a.ndim(), "sum_dims: dim {d} out of range");
-        kept[d] = 1;
-    }
-    let reduced = sum_to_shape(a, &kept); // keepdim layout
-    let out = if keepdim {
-        reduced.clone()
-    } else {
-        let final_shape: Vec<usize> = a
-            .shape()
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| !dims.contains(i))
-            .map(|(_, &d)| d)
-            .collect();
-        reduced.reshape(&final_shape)
-    };
-    if autograd::should_record(&[a]) && out.grad_fn().is_none() {
-        let shape = a.shape().to_vec();
-        let kept2 = kept.clone();
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("sum_dims", move |g| {
-                let g = g.reshape(&kept2);
-                vec![Some(broadcast_to(&g, &shape))]
-            })
-        });
-    }
-    out
+    dispatch::call("sum_dims", &[a], &[Param::UsizeList(dims.to_vec()), Param::Bool(keepdim)])
 }
 
-/// Mean over `dims`.
+/// Mean over `dims`; `dims = []` is the identity.
 pub fn mean_dims(a: &Tensor, dims: &[usize], keepdim: bool) -> Tensor {
-    let count: usize = dims.iter().map(|&d| a.size(d)).product();
-    let s = sum_dims(a, dims, keepdim);
-    super::mul_scalar(&s, 1.0 / count.max(1) as f32)
+    dispatch::call("mean_dims", &[a], &[Param::UsizeList(dims.to_vec()), Param::Bool(keepdim)])
 }
 
-/// Max over all elements (scalar, grad to the (first) argmax).
+/// Max over all elements (scalar, grad to the (first) argmax). Errors on
+/// empty tensors.
 pub fn max_all(a: &Tensor) -> Tensor {
-    let c = a.contiguous();
-    let v = c.to_vec::<f32>();
-    let (mut best_i, mut best) = (0usize, f32::NEG_INFINITY);
-    for (i, &x) in v.iter().enumerate() {
-        if x > best {
-            best = x;
-            best_i = i;
-        }
-    }
-    let out = Tensor::scalar(best).to_device(a.device());
-    if autograd::should_record(&[a]) {
-        let shape = a.shape().to_vec();
-        let dev = a.device();
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("max_all", move |g| {
-                let gv = g.item();
-                let mut data = vec![0.0f32; numel(&shape)];
-                data[best_i] = gv;
-                vec![Some(Tensor::from_vec(data, &shape).to_device(dev))]
-            })
-        });
-    }
-    out
+    dispatch::call("max_all", &[a], &[])
 }
 
 /// Argmax along `dim` (returns i64 tensor; no grad). Synchronous.
 pub fn argmax_dim(a: &Tensor, dim: usize) -> Tensor {
-    torsk_assert!(dim < a.ndim(), "argmax: dim out of range");
-    let c = a.contiguous();
-    let v = c.to_vec::<f32>();
-    let shape = a.shape();
-    let inner: usize = shape[dim + 1..].iter().product();
-    let outer: usize = shape[..dim].iter().product();
-    let d = shape[dim];
-    let mut out_shape: Vec<usize> = shape.to_vec();
-    out_shape.remove(dim);
-    let mut out = vec![0i64; outer * inner];
-    for o in 0..outer {
-        for i in 0..inner {
-            let mut best = f32::NEG_INFINITY;
-            let mut best_j = 0i64;
-            for j in 0..d {
-                let x = v[(o * d + j) * inner + i];
-                if x > best {
-                    best = x;
-                    best_j = j as i64;
-                }
-            }
-            out[o * inner + i] = best_j;
-        }
-    }
-    Tensor::from_vec(out, &out_shape)
+    dispatch::call("argmax_dim", &[a], &[Param::Usize(dim)])
 }
 
 #[cfg(test)]
@@ -316,5 +149,62 @@ mod tests {
         let a = Tensor::from_vec(vec![1.0f32, 9.0, 2.0, 8.0, 0.0, 3.0], &[2, 3]);
         let am = argmax_dim(&a, 0);
         assert_eq!(am.to_vec::<i64>(), vec![1, 0, 1]);
+    }
+
+    // --- regression tests: empty-dims / empty-tensor edge cases ---
+
+    #[test]
+    fn sum_dims_empty_dims_is_identity_copy() {
+        let a = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        let s = sum_dims(&a, &[], false);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+        // A fresh buffer, not an alias: mutating it must not touch `a`.
+        assert!(!s.shares_storage(&a));
+        s.add_scalar_(1.0);
+        assert_eq!(a.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+        let s2 = sum_dims(&a, &[], true);
+        assert_eq!(s2.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sum_dims_empty_dims_backward_is_identity() {
+        let a = Tensor::ones(&[2, 2]).requires_grad(true);
+        let s = sum_dims(&a, &[], false);
+        s.backward_with(Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]));
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_dims_empty_dims_is_identity() {
+        let a = Tensor::from_vec(vec![2.0f32, 4.0], &[2]);
+        let m = mean_dims(&a, &[], false);
+        assert_eq!(m.to_vec::<f32>(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn reductions_over_zero_element_tensors() {
+        let a = Tensor::from_vec(Vec::<f32>::new(), &[0, 3]);
+        assert_eq!(sum(&a).item(), 0.0);
+        let s = sum_dims(&a, &[0], false);
+        assert_eq!(s.shape(), &[3]);
+        assert_eq!(s.to_vec::<f32>(), vec![0.0; 3]);
+        // mean over a 0-sized dim: zeros, not a divide-by-zero panic.
+        let m = mean_dims(&a, &[0], false);
+        assert_eq!(m.to_vec::<f32>(), vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty tensor")]
+    fn max_all_on_empty_errors_cleanly() {
+        max_all(&Tensor::from_vec(Vec::<f32>::new(), &[0]));
+    }
+
+    #[test]
+    fn sum_f64_matches_f32() {
+        let a = Tensor::from_vec(vec![1.0f64, 2.0, 3.0], &[3]);
+        assert_eq!(sum(&a).to_vec::<f64>(), vec![6.0]);
+        let s = sum_dims(&a, &[0], false);
+        assert_eq!(s.to_vec::<f64>(), vec![6.0]);
     }
 }

@@ -1,189 +1,67 @@
-//! Unary elementwise ops with autograd.
+//! Unary elementwise ops — shims over the dispatcher's generic (F32/F64)
+//! registry entries.
 
-use crate::autograd::{self, ClosureFunction, SavedTensor};
-use crate::device;
+use crate::dispatch::{self, Param};
 use crate::tensor::{DType, Tensor};
-use crate::torsk_assert;
 
-/// Elementwise map (f32), preserving shape; works on strided views via a
-/// contiguous materialization.
-pub(crate) fn unary_map(name: &'static str, a: &Tensor, f: fn(f32) -> f32) -> Tensor {
-    torsk_assert!(a.dtype() == DType::F32, "{name}: f32 only");
-    let a = a.contiguous();
-    let out = Tensor::empty(a.shape(), DType::F32, a.device());
-    let n = a.numel();
-    let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || unsafe {
-        let av = ap.as_slice::<f32>(0, n);
-        crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
-            let ov = std::slice::from_raw_parts_mut(op.as_f32_mut(), n);
-            for i in s..e {
-                ov[i] = f(av[i]);
-            }
-        });
-    });
-    out
+/// Elementwise `exp` with autograd.
+pub fn exp(a: &Tensor) -> Tensor {
+    dispatch::call("exp", &[a], &[])
 }
 
-macro_rules! unary_with_saved_output {
-    ($name:literal, $fn_name:ident, $fwd:expr, $bwd_from_out:expr) => {
-        #[doc = concat!("Elementwise `", $name, "` with autograd.")]
-        pub fn $fn_name(a: &Tensor) -> Tensor {
-            let out = unary_map($name, a, $fwd);
-            if autograd::should_record(&[a]) {
-                let saved_out = SavedTensor::save(&out);
-                autograd::record(&[a], &out, || {
-                    ClosureFunction::new($name, move |g| {
-                        let y = saved_out.unpack();
-                        let dydx = unary_map(concat!($name, "_bwd"), &y, $bwd_from_out);
-                        vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
-                    })
-                });
-            }
-            out
-        }
-    };
+/// Elementwise natural log with autograd.
+pub fn log(a: &Tensor) -> Tensor {
+    dispatch::call("log", &[a], &[])
 }
 
-macro_rules! unary_with_saved_input {
-    ($name:literal, $fn_name:ident, $fwd:expr, $bwd_from_in:expr) => {
-        #[doc = concat!("Elementwise `", $name, "` with autograd.")]
-        pub fn $fn_name(a: &Tensor) -> Tensor {
-            let out = unary_map($name, a, $fwd);
-            if autograd::should_record(&[a]) {
-                let saved_in = SavedTensor::save(a);
-                autograd::record(&[a], &out, || {
-                    ClosureFunction::new($name, move |g| {
-                        let x = saved_in.unpack();
-                        let dydx = unary_map(concat!($name, "_bwd"), &x, $bwd_from_in);
-                        vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
-                    })
-                });
-            }
-            out
-        }
-    };
+/// Elementwise `sqrt` with autograd.
+pub fn sqrt(a: &Tensor) -> Tensor {
+    dispatch::call("sqrt", &[a], &[])
 }
 
-// d(exp)/dx = exp(x) = y ; d(sigmoid)/dx = y(1-y) ; d(tanh)/dx = 1-y^2;
-// d(sqrt)/dx = 1/(2y) ; d(relu)/dx = [y > 0].
-unary_with_saved_output!("exp", exp, |x| x.exp(), |y| y);
-unary_with_saved_output!("sigmoid", sigmoid, |x| 1.0 / (1.0 + (-x).exp()), |y| y * (1.0 - y));
-unary_with_saved_output!("tanh", tanh, |x| x.tanh(), |y| 1.0 - y * y);
-unary_with_saved_output!("sqrt", sqrt, |x| x.sqrt(), |y| 0.5 / y);
-unary_with_saved_output!("relu", relu, |x| x.max(0.0), |y| if y > 0.0 { 1.0 } else { 0.0 });
+/// Elementwise `relu` with autograd.
+pub fn relu(a: &Tensor) -> Tensor {
+    dispatch::call("relu", &[a], &[])
+}
 
-// d(log)/dx = 1/x needs the input.
-unary_with_saved_input!("log", log, |x| x.ln(), |x| 1.0 / x);
+/// Elementwise logistic sigmoid with autograd.
+pub fn sigmoid(a: &Tensor) -> Tensor {
+    dispatch::call("sigmoid", &[a], &[])
+}
 
-/// Negation.
+/// Elementwise `tanh` with autograd.
+pub fn tanh(a: &Tensor) -> Tensor {
+    dispatch::call("tanh", &[a], &[])
+}
+
+/// Negation (any numeric dtype).
 pub fn neg(a: &Tensor) -> Tensor {
-    let out = unary_map("neg", a, |x| -x);
-    if autograd::should_record(&[a]) {
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("neg", move |g| vec![Some(neg_nograd(g))])
-        });
-    }
-    out
-}
-
-fn neg_nograd(g: &Tensor) -> Tensor {
-    unary_map("neg", g, |x| -x)
+    dispatch::call("neg", &[a], &[])
 }
 
 /// Add a scalar.
 pub fn add_scalar(a: &Tensor, s: f32) -> Tensor {
-    // Closure over `s`: build via mul trick — use a dedicated dispatch.
-    let out = scalar_map("add_scalar", a, s, |x, s| x + s);
-    if autograd::should_record(&[a]) {
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("add_scalar", move |g| vec![Some(g.clone())])
-        });
-    }
-    out
+    dispatch::call("add_scalar", &[a], &[Param::F32(s)])
 }
 
 /// Multiply by a scalar.
 pub fn mul_scalar(a: &Tensor, s: f32) -> Tensor {
-    let out = scalar_map("mul_scalar", a, s, |x, s| x * s);
-    if autograd::should_record(&[a]) {
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("mul_scalar", move |g| {
-                vec![Some(scalar_map("mul_scalar", g, s, |x, s| x * s))]
-            })
-        });
-    }
-    out
+    dispatch::call("mul_scalar", &[a], &[Param::F32(s)])
 }
 
 /// Elementwise power with scalar exponent.
 pub fn pow_scalar(a: &Tensor, p: f32) -> Tensor {
-    let out = scalar_map("pow", a, p, |x, p| x.powf(p));
-    if autograd::should_record(&[a]) {
-        let saved = SavedTensor::save(a);
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("pow", move |g| {
-                let x = saved.unpack();
-                let dydx = scalar_map("pow_bwd", &x, p, |x, p| p * x.powf(p - 1.0));
-                vec![Some(super::binary_map("mul", g, &dydx, |x, w| x * w))]
-            })
-        });
-    }
-    out
+    dispatch::call("pow_scalar", &[a], &[Param::F32(p)])
 }
 
 /// Clamp to [lo, hi] (gradient flows where not clamped).
 pub fn clamp(a: &Tensor, lo: f32, hi: f32) -> Tensor {
-    let out = scalar2_map("clamp", a, lo, hi, |x, lo, hi| x.clamp(lo, hi));
-    if autograd::should_record(&[a]) {
-        let saved = SavedTensor::save(a);
-        autograd::record(&[a], &out, || {
-            ClosureFunction::new("clamp", move |g| {
-                let x = saved.unpack();
-                let mask = scalar2_map("clamp_mask", &x, lo, hi, |x, lo, hi| {
-                    if x >= lo && x <= hi {
-                        1.0
-                    } else {
-                        0.0
-                    }
-                });
-                vec![Some(super::binary_map("mul", g, &mask, |x, w| x * w))]
-            })
-        });
-    }
-    out
+    dispatch::call("clamp", &[a], &[Param::F32(lo), Param::F32(hi)])
 }
 
-/// Elementwise map with one scalar parameter.
-pub(crate) fn scalar_map(name: &'static str, a: &Tensor, s: f32, f: fn(f32, f32) -> f32) -> Tensor {
-    torsk_assert!(a.dtype() == DType::F32, "{name}: f32 only");
-    let a = a.contiguous();
-    let out = Tensor::empty(a.shape(), DType::F32, a.device());
-    let n = a.numel();
-    let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || unsafe {
-        let av = ap.as_slice::<f32>(0, n);
-        let ov = op.as_mut_slice::<f32>(0, n);
-        for i in 0..n {
-            ov[i] = f(av[i], s);
-        }
-    });
-    out
-}
-
-fn scalar2_map(name: &'static str, a: &Tensor, s1: f32, s2: f32, f: fn(f32, f32, f32) -> f32) -> Tensor {
-    let a = a.contiguous();
-    let out = Tensor::empty(a.shape(), DType::F32, a.device());
-    let n = a.numel();
-    let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || unsafe {
-        let av = ap.as_slice::<f32>(0, n);
-        let ov = op.as_mut_slice::<f32>(0, n);
-        for i in 0..n {
-            ov[i] = f(av[i], s1, s2);
-        }
-    });
-    out
+/// Convert to `dt` (gradients cast back to the input dtype).
+pub fn cast(a: &Tensor, dt: DType) -> Tensor {
+    dispatch::call("cast", &[a], &[Param::DType(dt)])
 }
 
 #[cfg(test)]
@@ -279,5 +157,37 @@ mod tests {
         let t = Tensor::from_slice(&[1.0f32]).requires_grad(true);
         let y = crate::autograd::no_grad(|| relu(&t));
         assert!(y.grad_fn().is_none());
+    }
+
+    #[test]
+    fn unary_f64_end_to_end() {
+        let t = Tensor::from_vec(vec![4.0f64], &[1]).requires_grad(true);
+        let y = sqrt(&t);
+        assert_eq!(y.dtype(), DType::F64);
+        assert_eq!(y.to_vec::<f64>(), vec![2.0]);
+        y.backward_with(Tensor::from_vec(vec![1.0f64], &[1]));
+        let g = t.grad().unwrap().to_vec::<f64>();
+        assert!((g[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cast_roundtrip_and_grad() {
+        let t = Tensor::from_slice(&[1.5f32, -2.0]).requires_grad(true);
+        let d = cast(&t, DType::F64);
+        assert_eq!(d.dtype(), DType::F64);
+        assert_eq!(d.to_vec::<f64>(), vec![1.5, -2.0]);
+        d.backward_with(Tensor::from_vec(vec![1.0f64, 2.0], &[2]));
+        let g = t.grad().unwrap();
+        assert_eq!(g.dtype(), DType::F32);
+        assert_eq!(g.to_vec::<f32>(), vec![1.0, 2.0]);
+        // i64 casts work too (no grad).
+        let i = cast(&Tensor::from_slice(&[2.9f32]), DType::I64);
+        assert_eq!(i.to_vec::<i64>(), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported dtype")]
+    fn float_unary_rejects_i64() {
+        exp(&Tensor::from_vec(vec![1i64], &[1]));
     }
 }

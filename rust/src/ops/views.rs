@@ -1,9 +1,14 @@
 //! Gradient plumbing for view/layout ops (reshape, transpose, permute,
 //! narrow, device moves) plus concatenation/stacking.
+//!
+//! View creation itself lives on `Tensor` (zero-copy, §5.5); these hooks
+//! record the backward edges. `cat` routes through the dispatcher like
+//! every data-producing op.
 
 use crate::autograd::{self, ClosureFunction};
 use crate::device::Device;
-use crate::tensor::{DType, Tensor};
+use crate::dispatch::{self, Param};
+use crate::tensor::Tensor;
 use crate::torsk_assert;
 
 /// Backward hookup for shape-preserving-data ops (reshape, squeeze,
@@ -56,9 +61,10 @@ pub(crate) fn register_narrow_grad(src: &Tensor, out: &Tensor, dim: usize, start
         return;
     }
     let src_shape = src.shape().to_vec();
+    let dtype = src.dtype();
     autograd::record(&[src], out, || {
         ClosureFunction::new("narrow", move |g| {
-            let full = Tensor::zeros_on(&src_shape, DType::F32, g.device());
+            let full = Tensor::zeros_on(&src_shape, dtype, g.device());
             // Write g into the slice region (raw, in-place on fresh zeros).
             let dst = full.narrow(dim, start, g.size(dim));
             copy_into_view(&dst, g);
@@ -70,36 +76,7 @@ pub(crate) fn register_narrow_grad(src: &Tensor, out: &Tensor, dim: usize, start
 /// Raw strided copy of `src` (contiguous) into a strided `view`. Internal:
 /// used for narrow backward and `cat`.
 pub(crate) fn copy_into_view(view: &Tensor, src: &Tensor) {
-    torsk_assert!(view.shape() == src.shape(), "copy_into_view: shape mismatch");
-    torsk_assert!(view.dtype() == src.dtype(), "copy_into_view: dtype mismatch");
-    let src = src.contiguous();
-    let n = src.numel();
-    if n == 0 {
-        return;
-    }
-    let (sp, vp) = (src.data_ptr(), view.data_ptr());
-    let shape = view.shape().to_vec();
-    let strides = view.strides().to_vec();
-    let dtype = view.dtype();
-    // Keep host sources alive until the (possibly queued) copy runs.
-    let keep = src.detach();
-    crate::device::dispatch(view.device(), "copy_into_view", move || unsafe {
-        match dtype {
-            DType::F32 => {
-                let sv = sp.as_slice::<f32>(0, n);
-                for (i, off) in crate::tensor::shape::StridedIter::new(&shape, &strides).enumerate() {
-                    *vp.as_f32_mut().add(off) = sv[i];
-                }
-            }
-            DType::I64 => {
-                let sv = sp.as_slice::<i64>(0, n);
-                for (i, off) in crate::tensor::shape::StridedIter::new(&shape, &strides).enumerate() {
-                    *(vp.ptr() as *mut i64).add(off) = sv[i];
-                }
-            }
-        }
-        drop(keep);
-    });
+    crate::dispatch::views::copy_into_view(view, src);
 }
 
 /// Backward hookup for expand: sum the gradient back to the source shape.
@@ -125,44 +102,7 @@ pub fn copy_into_view_public(view: &Tensor, src: &Tensor) {
 /// Concatenate tensors along `dim`.
 pub fn cat(tensors: &[&Tensor], dim: usize) -> Tensor {
     torsk_assert!(!tensors.is_empty(), "cat: empty input list");
-    let first = tensors[0];
-    let dev = super::same_device(tensors);
-    let mut out_shape = first.shape().to_vec();
-    torsk_assert!(dim < out_shape.len(), "cat: dim out of range");
-    let mut total = 0usize;
-    for t in tensors {
-        torsk_assert!(t.ndim() == first.ndim(), "cat: rank mismatch");
-        for d in 0..first.ndim() {
-            if d != dim {
-                torsk_assert!(t.size(d) == first.size(d), "cat: dim {d} mismatch");
-            }
-        }
-        total += t.size(dim);
-    }
-    out_shape[dim] = total;
-    let out = Tensor::empty(&out_shape, first.dtype(), dev);
-    let mut offset = 0usize;
-    let mut sizes = Vec::with_capacity(tensors.len());
-    for t in tensors {
-        let view = out.detach().narrow(dim, offset, t.size(dim));
-        copy_into_view(&view, t);
-        sizes.push(t.size(dim));
-        offset += t.size(dim);
-    }
-    if autograd::should_record(tensors) {
-        autograd::record(tensors, &out, || {
-            ClosureFunction::new("cat", move |g| {
-                let mut grads = Vec::with_capacity(sizes.len());
-                let mut off = 0usize;
-                for &s in &sizes {
-                    grads.push(Some(g.narrow(dim, off, s).contiguous()));
-                    off += s;
-                }
-                grads
-            })
-        });
-    }
-    out
+    dispatch::call("cat", tensors, &[Param::Usize(dim)])
 }
 
 /// Stack tensors along a new leading `dim`.
@@ -216,6 +156,16 @@ mod tests {
         let s = stack(&[&a, &b], 0);
         assert_eq!(s.shape(), &[2, 2]);
         assert_eq!(s.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn cat_f64_and_i64() {
+        let a = Tensor::from_vec(vec![1.0f64, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0f64], &[1]);
+        assert_eq!(cat(&[&a, &b], 0).to_vec::<f64>(), vec![1.0, 2.0, 3.0]);
+        let i = Tensor::from_vec(vec![1i64, 2], &[2]);
+        let j = Tensor::from_vec(vec![3i64], &[1]);
+        assert_eq!(cat(&[&i, &j], 0).to_vec::<i64>(), vec![1, 2, 3]);
     }
 
     #[test]

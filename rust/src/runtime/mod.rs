@@ -34,6 +34,7 @@ impl TensorSpec {
             .ok_or_else(|| TorskError::Artifact(format!("bad spec: {s}")))?;
         let dtype = match ty {
             "f32" => DType::F32,
+            "f64" => DType::F64,
             "i64" => DType::I64,
             other => return Err(TorskError::Artifact(format!("unknown dtype {other}"))),
         };
@@ -53,6 +54,7 @@ impl TensorSpec {
             "{}[{}]",
             match self.dtype {
                 DType::F32 => "f32",
+                DType::F64 => "f64",
                 DType::I64 => "i64",
             },
             dims.join(",")
@@ -178,6 +180,7 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let data: &[u8] = unsafe { std::slice::from_raw_parts(t.data_ptr().ptr(), bytes) };
     let ty = match t.dtype() {
         DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
         DType::I64 => xla::ElementType::S64,
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), data)

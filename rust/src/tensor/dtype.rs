@@ -1,11 +1,15 @@
 //! Element types. The paper's benchmarks run in 32-bit floats (Table 1);
-//! torsk supports `f32` compute plus `i64` indices (labels, embeddings).
+//! torsk computes in `f32` or `f64` and uses `i64` for indices/labels.
+//! The dispatcher (see [`crate::dispatch`]) promotes mixed-dtype operands
+//! with [`DType::promote`] before selecting a kernel instantiation.
 
 /// Supported element types.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum DType {
-    /// 32-bit IEEE float — the compute type.
+    /// 32-bit IEEE float — the default compute type.
     F32,
+    /// 64-bit IEEE float — high-precision compute (gradcheck, science).
+    F64,
     /// 64-bit signed integer — index/label type.
     I64,
 }
@@ -15,6 +19,7 @@ impl DType {
     pub fn size(self) -> usize {
         match self {
             DType::F32 => 4,
+            DType::F64 => 8,
             DType::I64 => 8,
         }
     }
@@ -23,7 +28,30 @@ impl DType {
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "float32",
+            DType::F64 => "float64",
             DType::I64 => "int64",
+        }
+    }
+
+    /// Is this a floating-point type?
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+
+    /// Binary-op type promotion (NumPy-style, restricted to our lattice):
+    /// `F64 > F32 > I64`. Mixed float/int promotes to the float type.
+    pub fn promote(a: DType, b: DType) -> DType {
+        fn rank(d: DType) -> u8 {
+            match d {
+                DType::I64 => 0,
+                DType::F32 => 1,
+                DType::F64 => 2,
+            }
+        }
+        if rank(a) >= rank(b) {
+            a
+        } else {
+            b
         }
     }
 }
@@ -34,17 +62,53 @@ impl std::fmt::Display for DType {
     }
 }
 
-/// Rust scalar types that correspond to a [`DType`].
-pub trait Element: Copy + Send + Sync + 'static + std::fmt::Debug + Default + PartialEq {
+/// Rust scalar types that correspond to a [`DType`]. The `from_f64`/`to_f64`
+/// hooks let generic kernels (casts, scalar parameters) convert through a
+/// common wide type without per-dtype special cases.
+pub trait Element:
+    Copy + Send + Sync + 'static + std::fmt::Debug + Default + PartialEq + PartialOrd
+{
     const DTYPE: DType;
+    /// Convert from a (possibly lossy) f64 — used by `cast` and scalar ops.
+    fn from_f64(v: f64) -> Self;
+    /// Widen to f64 — used by `cast` and host-side comparisons.
+    fn to_f64(self) -> f64;
 }
 
 impl Element for f32 {
     const DTYPE: DType = DType::F32;
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Element for f64 {
+    const DTYPE: DType = DType::F64;
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
 }
 
 impl Element for i64 {
     const DTYPE: DType = DType::I64;
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as i64
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
 }
 
 #[cfg(test)]
@@ -54,17 +118,35 @@ mod tests {
     #[test]
     fn sizes() {
         assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F64.size(), 8);
         assert_eq!(DType::I64.size(), 8);
     }
 
     #[test]
     fn element_mapping() {
         assert_eq!(<f32 as Element>::DTYPE, DType::F32);
+        assert_eq!(<f64 as Element>::DTYPE, DType::F64);
         assert_eq!(<i64 as Element>::DTYPE, DType::I64);
     }
 
     #[test]
     fn display() {
         assert_eq!(DType::F32.to_string(), "float32");
+        assert_eq!(DType::F64.to_string(), "float64");
+    }
+
+    #[test]
+    fn promotion_lattice() {
+        assert_eq!(DType::promote(DType::F32, DType::F64), DType::F64);
+        assert_eq!(DType::promote(DType::F64, DType::F32), DType::F64);
+        assert_eq!(DType::promote(DType::I64, DType::F32), DType::F32);
+        assert_eq!(DType::promote(DType::I64, DType::I64), DType::I64);
+    }
+
+    #[test]
+    fn element_f64_roundtrip() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(i64::from_f64(3.9), 3);
+        assert!(DType::F64.is_float() && !DType::I64.is_float());
     }
 }

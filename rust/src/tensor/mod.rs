@@ -146,6 +146,25 @@ impl Tensor {
         Tensor::from_vec(vec![v; shape::numel(shape)], shape)
     }
 
+    /// Same shape/dtype/device as `self`, filled with `v`.
+    pub fn full_like(&self, v: f32) -> Tensor {
+        let t = Tensor::empty(self.shape(), self.dtype(), self.device());
+        t.fill_(v);
+        t
+    }
+
+    /// Same shape/dtype/device as `self`, all ones.
+    pub fn ones_like(&self) -> Tensor {
+        self.full_like(1.0)
+    }
+
+    /// Same shape/dtype/device as `self`, all zeros.
+    pub fn zeros_like(&self) -> Tensor {
+        let t = Tensor::empty(self.shape(), self.dtype(), self.device());
+        t.fill_bytes_zero();
+        t
+    }
+
     /// Standard-normal samples (global RNG; see [`crate::rng::manual_seed`]).
     pub fn randn(shape: &[usize]) -> Tensor {
         let mut data = vec![0.0f32; shape::numel(shape)];
@@ -365,10 +384,15 @@ impl Tensor {
         c.with_data::<T, Vec<T>>(|s| s.to_vec())
     }
 
-    /// Extract the single element of a scalar tensor.
+    /// Extract the single element of a scalar tensor as f32 (converting
+    /// from f64/i64 scalars).
     pub fn item(&self) -> f32 {
         torsk_assert!(self.numel() == 1, "item() on tensor with {} elements", self.numel());
-        self.to_vec::<f32>()[0]
+        match self.dtype() {
+            DType::F32 => self.to_vec::<f32>()[0],
+            DType::F64 => self.to_vec::<f64>()[0] as f32,
+            DType::I64 => self.to_vec::<i64>()[0] as f32,
+        }
     }
 
     /// Extract a single i64 element.
@@ -524,6 +548,12 @@ impl Tensor {
                     d[i] = *src.as_f32().add(off);
                 }
             },
+            DType::F64 => unsafe {
+                let d = dst.as_mut_slice::<f64>(0, n);
+                for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
+                    d[i] = *(src.ptr() as *const f64).add(off);
+                }
+            },
             DType::I64 => unsafe {
                 let d = dst.as_mut_slice::<i64>(0, n);
                 for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
@@ -595,14 +625,24 @@ impl std::fmt::Debug for Tensor {
     }
 }
 
+/// Host copy of any-dtype tensor data, widened to f64 (test/diagnostic
+/// helper).
+pub fn to_f64_vec(t: &Tensor) -> Vec<f64> {
+    match t.dtype() {
+        DType::F32 => t.to_vec::<f32>().into_iter().map(|x| x as f64).collect(),
+        DType::F64 => t.to_vec::<f64>(),
+        DType::I64 => t.to_vec::<i64>().into_iter().map(|x| x as f64).collect(),
+    }
+}
+
 /// Panic unless two tensors are elementwise close (test helper, mirrors
-/// `torch.testing.assert_close`).
+/// `torch.testing.assert_close`). Works across dtypes by comparing in f64.
 pub fn assert_close(a: &Tensor, b: &Tensor, atol: f32, rtol: f32) {
     torsk_assert!(a.shape() == b.shape(), "shape mismatch {:?} vs {:?}", a.shape(), b.shape());
-    let av = a.to_vec::<f32>();
-    let bv = b.to_vec::<f32>();
+    let av = to_f64_vec(a);
+    let bv = to_f64_vec(b);
     for (i, (&x, &y)) in av.iter().zip(bv.iter()).enumerate() {
-        let tol = atol + rtol * y.abs();
+        let tol = atol as f64 + rtol as f64 * y.abs();
         if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
             torsk_bail!("tensors differ at flat index {i}: {x} vs {y} (tol {tol})");
         }

@@ -1,0 +1,189 @@
+//! Integration tests for the central op dispatcher: per-key routing,
+//! error paths, free profiling, runtime registration, and an F64
+//! end-to-end gradcheck (linear → mse_loss → backward).
+
+use torsk::dispatch::{self, DispatchKey, OpCtx, OpDef, Param};
+use torsk::ops;
+use torsk::prelude::*;
+use torsk::tensor::to_f64_vec;
+
+fn panic_message(r: std::thread::Result<Tensor>) -> String {
+    match r {
+        Ok(_) => panic!("expected a panic"),
+        Err(e) => {
+            if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else if let Some(s) = e.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else {
+                String::from("<non-string panic>")
+            }
+        }
+    }
+}
+
+#[test]
+fn routes_per_backend_key() {
+    let a = Tensor::from_slice(&[1.0f32, 2.0]);
+    let b = Tensor::from_slice(&[3.0f32, 4.0]);
+    assert_eq!(dispatch::key_stack(&[&a]), vec![DispatchKey::Cpu]);
+    let cpu = ops::add(&a, &b);
+
+    let (sa, sb) = (a.to_sim(), b.to_sim());
+    assert_eq!(dispatch::key_stack(&[&sa]), vec![DispatchKey::Sim]);
+    let sim = ops::add(&sa, &sb);
+    assert_eq!(sim.device(), Device::Sim);
+    assert_eq!(cpu.to_vec::<f32>(), sim.to_vec::<f32>());
+}
+
+#[test]
+fn autograd_is_a_wrapping_key() {
+    let a = Tensor::from_slice(&[1.0f32]).requires_grad(true);
+    assert_eq!(dispatch::key_stack(&[&a]), vec![DispatchKey::Autograd, DispatchKey::Cpu]);
+    // Under no_grad the wrapping key disappears.
+    torsk::autograd::no_grad(|| {
+        assert_eq!(dispatch::key_stack(&[&a]), vec![DispatchKey::Cpu]);
+    });
+}
+
+#[test]
+fn unknown_op_lists_catalog() {
+    let a = Tensor::ones(&[1]);
+    let msg = panic_message(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dispatch::call("frobnicate", &[&a], &[])
+    })));
+    assert!(msg.contains("no operator named 'frobnicate'"), "msg: {msg}");
+    assert!(msg.contains("matmul"), "catalog should list known ops: {msg}");
+}
+
+#[test]
+fn dtype_mismatch_is_a_schema_error() {
+    let idx = Tensor::from_vec(vec![1i64, 2], &[2]);
+    let msg = panic_message(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        ops::relu(&idx)
+    })));
+    assert!(msg.contains("unsupported dtype int64"), "msg: {msg}");
+    assert!(msg.contains("float32"), "msg should list supported dtypes: {msg}");
+}
+
+#[test]
+fn every_op_profiles_for_free() {
+    torsk::profiler::start();
+    let a = Tensor::from_slice(&[1.0f32, -1.0]);
+    let b = Tensor::from_slice(&[2.0f32, 2.0]);
+    let _ = ops::add(&a, &b);
+    let _ = ops::relu(&a);
+    let _ = ops::matmul(&Tensor::ones(&[2, 2]), &Tensor::ones(&[2, 2]));
+    let events = torsk::profiler::stop();
+    let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+    for want in ["op:add", "op:relu", "op:matmul"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+}
+
+#[test]
+fn runtime_registration_via_public_api() {
+    fn triple(ctx: &OpCtx) -> Tensor {
+        ops::mul_scalar(ctx.input(0), 3.0)
+    }
+    dispatch::register_op(
+        OpDef::new("itest_triple", 1, 1, &[DType::F32])
+            .kernel(DispatchKey::Cpu, triple)
+            .kernel(DispatchKey::Sim, triple),
+    );
+    assert!(dispatch::has_op("itest_triple"));
+    let y = dispatch::call("itest_triple", &[&Tensor::from_slice(&[2.0f32])], &[Param::F32(0.0)]);
+    assert_eq!(y.to_vec::<f32>(), vec![6.0]);
+}
+
+#[test]
+fn f64_elementwise_matmul_backward_end_to_end() {
+    // The acceptance-criteria chain: one non-f32 dtype through elementwise
+    // + matmul + backward.
+    let a = Tensor::from_vec(vec![1.0f64, 2.0, 3.0, 4.0], &[2, 2]).requires_grad(true);
+    let b = Tensor::from_vec(vec![0.5f64, 1.5, 2.5, 3.5], &[2, 2]).requires_grad(true);
+    let y = ops::mul(&ops::matmul(&a, &b), &b);
+    let loss = ops::sum(&y);
+    loss.backward();
+    assert_eq!(a.grad().unwrap().dtype(), DType::F64);
+    assert_eq!(b.grad().unwrap().dtype(), DType::F64);
+}
+
+#[test]
+fn f64_linear_mse_backward_gradcheck() {
+    // linear → mse_loss → backward, checked against central differences
+    // at f64 precision (the whole point of the F64 path).
+    let xv: Vec<f64> = vec![0.3, -1.2, 0.7, 1.1, 0.05, -0.4, 0.9, -0.8, 0.25, 0.6, -1.5, 0.45];
+    let wv: Vec<f64> = vec![0.2, -0.5, 0.8, -0.3, 0.6, 0.1];
+    let bv: Vec<f64> = vec![0.05, -0.15];
+    let tv: Vec<f64> = vec![0.4, -0.2, 0.1, 0.3, -0.6, 0.2, 0.05, -0.1];
+
+    let x = Tensor::from_vec(xv, &[4, 3]);
+    let t = Tensor::from_vec(tv, &[4, 2]);
+    let w = Tensor::from_vec(wv.clone(), &[2, 3]).requires_grad(true);
+    let b = Tensor::from_vec(bv.clone(), &[2]).requires_grad(true);
+
+    let loss = ops::mse_loss(&ops::linear(&x, &w, Some(&b)), &t);
+    assert_eq!(loss.dtype(), DType::F64);
+    loss.backward();
+    let gw = w.grad().unwrap().to_vec::<f64>();
+    let gb = b.grad().unwrap().to_vec::<f64>();
+
+    let eval = |wv: &[f64], bv: &[f64]| -> f64 {
+        torsk::autograd::no_grad(|| {
+            let w2 = Tensor::from_vec(wv.to_vec(), &[2, 3]);
+            let b2 = Tensor::from_vec(bv.to_vec(), &[2]);
+            to_f64_vec(&ops::mse_loss(&ops::linear(&x, &w2, Some(&b2)), &t))[0]
+        })
+    };
+    let eps = 1e-6;
+    for idx in 0..wv.len() {
+        let mut wp = wv.clone();
+        wp[idx] += eps;
+        let mut wm = wv.clone();
+        wm[idx] -= eps;
+        let fd = (eval(&wp, &bv) - eval(&wm, &bv)) / (2.0 * eps);
+        assert!(
+            (gw[idx] - fd).abs() < 1e-7,
+            "dW[{idx}]: autograd {} vs finite-diff {fd}",
+            gw[idx]
+        );
+    }
+    for idx in 0..bv.len() {
+        let mut bp = bv.clone();
+        bp[idx] += eps;
+        let mut bm = bv.clone();
+        bm[idx] -= eps;
+        let fd = (eval(&wv, &bp) - eval(&wv, &bm)) / (2.0 * eps);
+        assert!(
+            (gb[idx] - fd).abs() < 1e-7,
+            "db[{idx}]: autograd {} vs finite-diff {fd}",
+            gb[idx]
+        );
+    }
+}
+
+#[test]
+fn f64_works_on_sim_device_too() {
+    let a = Tensor::from_vec(vec![1.0f64, 2.0], &[2]).to_sim();
+    let b = Tensor::from_vec(vec![3.0f64, 4.0], &[2]).to_sim();
+    let c = ops::mul(&a, &b);
+    assert_eq!(c.device(), Device::Sim);
+    assert_eq!(c.to_vec::<f64>(), vec![3.0, 8.0]);
+}
+
+#[test]
+fn registry_is_complete_for_the_public_surface() {
+    // Every data-producing public op name must be in the registry.
+    for op in [
+        "add", "sub", "mul", "div", "maximum", "eq", "neg", "exp", "log", "sqrt", "relu",
+        "sigmoid", "tanh", "add_scalar", "mul_scalar", "pow_scalar", "clamp", "cast", "matmul",
+        "bmm", "linear", "sum", "sum_dims", "mean", "mean_dims", "max_all", "argmax_dim",
+        "softmax", "log_softmax", "cross_entropy", "mse_loss", "bce_loss", "conv2d", "maxpool2d",
+        "avgpool2d", "global_avgpool2d", "batch_norm", "batch_norm_train", "layer_norm",
+        "dropout", "embedding", "one_hot", "cat", "add_", "sub_", "mul_", "copy_", "axpy_",
+        "mul_scalar_", "add_scalar_", "fill_",
+    ] {
+        assert!(dispatch::has_op(op), "op '{op}' missing from registry");
+    }
+}

@@ -144,6 +144,7 @@ fn table1_graph_artifacts_run_one_step() {
             .iter()
             .map(|s| match s.dtype {
                 DType::F32 => Tensor::randn(&s.shape).mul_scalar(0.1),
+                DType::F64 => Tensor::randn(&s.shape).mul_scalar(0.1).to_dtype(DType::F64),
                 DType::I64 => {
                     // Tokens/labels: keep small so they're valid indices.
                     Tensor::randint(4, &s.shape)

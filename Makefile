@@ -4,7 +4,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: check build test fmt fmt-check clippy bench
+.PHONY: check build test fmt fmt-check clippy bench bench-smoke
 
 check: build test fmt-check clippy
 
@@ -23,5 +23,12 @@ fmt-check:
 clippy:
 	cd $(RUST_DIR) && $(CARGO) clippy -- -D warnings
 
+# Full sweep; writes BENCH_ops.json at the repo root (the per-PR
+# trajectory — see the "Threading and memory model" docs in
+# rust/src/dispatch/mod.rs for how to read it).
 bench:
-	cd $(RUST_DIR) && $(CARGO) bench --bench micro_ops
+	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
+
+# One tiny iteration of every benchmark + JSON schema validation (CI).
+bench-smoke:
+	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops

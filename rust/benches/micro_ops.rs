@@ -1,128 +1,377 @@
-//! Micro-benchmarks of the subsystems the paper optimizes (§5.1–§5.3):
-//! allocator latency, dispatch overhead, kernel throughput. These are the
-//! knobs the §Perf pass iterates on; numbers land in EXPERIMENTS.md.
+//! The standing op-level benchmark harness (the repo's TorchBench):
+//! elementwise chains, broadcasts, reductions, softmax, matmul shapes and
+//! MLP / conv-block fwd+bwd, swept across sizes × thread counts, plus a
+//! 100-iteration training loop that exercises the caching allocator and
+//! the dispatcher's output-stealing.
+//!
+//! Every run emits `BENCH_ops.json` (override the path with `BENCH_OUT`)
+//! with one record per (op, size, threads):
+//!
+//! ```json
+//! {"op": "elementwise_chain", "size": 1048576, "threads": 4,
+//!  "ns_per_iter": 1234.5, "bytes_allocated": 4194304,
+//!  "cache_hit_rate": 0.98, "reused_outputs": 3}
+//! ```
+//!
+//! `bytes_allocated` and `reused_outputs` are per-iteration; the hit rate
+//! covers the measured window of the host caching allocator. Future PRs
+//! append their numbers next to these — this file is the trajectory to
+//! beat. `BENCH_SMOKE=1` runs one tiny iteration of everything and
+//! validates the JSON schema (wired into CI as `make bench-smoke`).
 
 use std::time::Instant;
 
-use torsk::alloc::driver::HostMem;
-use torsk::alloc::{caching::CachingAllocator, naive::NaiveAllocator, Allocator, StreamId};
-use torsk::device::{self, Device};
+use torsk::alloc::Allocator;
+use torsk::dispatch;
+use torsk::nn::{self, Module};
 use torsk::ops;
+use torsk::optim::{Optimizer, Sgd};
 use torsk::Tensor;
 
-fn time_ns(reps: usize, mut f: impl FnMut()) -> f64 {
-    // Warmup.
-    for _ in 0..3.min(reps) {
-        f();
+#[derive(Clone, Debug)]
+struct Record {
+    op: String,
+    size: usize,
+    threads: usize,
+    ns_per_iter: f64,
+    bytes_allocated: u64,
+    cache_hit_rate: f64,
+    reused_outputs: u64,
+}
+
+impl Record {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}, \
+             \"bytes_allocated\": {}, \"cache_hit_rate\": {:.4}, \"reused_outputs\": {}}}",
+            self.op,
+            self.size,
+            self.threads,
+            self.ns_per_iter,
+            self.bytes_allocated,
+            self.cache_hit_rate,
+            self.reused_outputs
+        )
     }
+}
+
+/// Time `f` for `reps` iterations at `threads` effective kernel threads,
+/// reading allocator + output-reuse deltas over the measured window.
+fn measure(op: &str, size: usize, threads: usize, reps: usize, mut f: impl FnMut()) -> Record {
+    torsk::kernels::set_num_threads(threads);
+    for _ in 0..2usize.min(reps) {
+        f(); // warm the allocator cache and the pool
+    }
+    let alloc = torsk::ctx::host_allocator();
+    let s0 = alloc.stats();
+    let (_, h0) = dispatch::output_reuse_stats();
     let t0 = Instant::now();
     for _ in 0..reps {
         f();
     }
-    t0.elapsed().as_nanos() as f64 / reps as f64
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let d = alloc.stats().delta(&s0);
+    let (_, h1) = dispatch::output_reuse_stats();
+    torsk::kernels::set_num_threads(0);
+    Record {
+        op: op.to_string(),
+        size,
+        threads,
+        ns_per_iter: ns,
+        bytes_allocated: d.allocated_bytes_total / reps as u64,
+        cache_hit_rate: d.cache_hit_rate(),
+        reused_outputs: (h1 - h0) / reps as u64,
+    }
+}
+
+fn thread_sweep() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut ts: Vec<usize> = [1usize, 2, 4, 8].iter().copied().filter(|&t| t <= max).collect();
+    if !ts.contains(&max) && max > 1 {
+        ts.push(max);
+    }
+    if ts.is_empty() {
+        ts.push(1);
+    }
+    ts
+}
+
+fn reps_for(size: usize, smoke: bool) -> usize {
+    if smoke {
+        1
+    } else if size <= 1 << 16 {
+        200
+    } else if size <= 1 << 20 {
+        40
+    } else {
+        12
+    }
 }
 
 fn main() {
-    println!("== micro-benchmarks ==\n");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_ops.json".to_string());
+    let threads = thread_sweep();
+    let mut records: Vec<Record> = Vec::new();
+    torsk::rng::manual_seed(0);
 
-    // ---- allocator -----------------------------------------------------
-    println!("-- allocator: alloc+free latency (1 MiB block) --");
-    let caching = CachingAllocator::new(std::sync::Arc::new(HostMem::default()));
-    let naive = NaiveAllocator::new(std::sync::Arc::new(HostMem::default()));
-    // Prime the cache.
-    let b = caching.allocate(1 << 20, StreamId::DEFAULT);
-    caching.deallocate(b);
-    let t_cached = time_ns(10_000, || {
-        let b = caching.allocate(1 << 20, StreamId::DEFAULT);
-        caching.deallocate(b);
-    });
-    let t_naive = time_ns(10_000, || {
-        let b = naive.allocate(1 << 20, StreamId::DEFAULT);
-        naive.deallocate(b);
-    });
-    println!("  caching (hit) : {t_cached:>9.0} ns");
-    println!("  pass-through  : {t_naive:>9.0} ns   ({:.1}x)", t_naive / t_cached);
-    // Against the simulated device driver the gap is the Figure 2 story;
-    // here both use host malloc so the delta is pure allocator overhead.
+    // ---- elementwise chain: relu(sigmoid(a*b) + a), owned hot path ----
+    let chain_sizes: &[usize] =
+        if smoke { &[1 << 12] } else { &[1 << 16, 1 << 20, 1 << 22] };
+    for &n in chain_sizes {
+        let a = Tensor::rand(&[n]);
+        let b = Tensor::rand(&[n]);
+        for &t in &threads {
+            records.push(measure("elementwise_chain", n, t, reps_for(n, smoke), || {
+                let tmp = &a * &b;
+                let tmp = dispatch::call_owned("sigmoid", vec![tmp], &[]);
+                let tmp = tmp + &a;
+                let y = dispatch::call_owned("relu", vec![tmp], &[]);
+                std::hint::black_box(&y);
+            }));
+        }
+    }
 
-    // ---- dispatch ------------------------------------------------------
-    println!("\n-- dispatch: per-op overhead --");
-    let t_queue = {
-        let x = Tensor::ones(&[16]).to_sim();
-        device::synchronize();
-        let t = time_ns(5_000, || {
-            let y = ops::add_scalar(&x, 1.0);
-            std::hint::black_box(&y);
-        });
-        device::synchronize();
-        t
-    };
-    let t_inline = {
-        let x = Tensor::ones(&[16]);
-        time_ns(5_000, || {
-            let y = ops::add_scalar(&x, 1.0);
-            std::hint::black_box(&y);
-        })
-    };
-    println!("  queue on stream (async)  : {t_queue:>9.0} ns/op (host-side cost)");
-    println!("  execute inline on host   : {t_inline:>9.0} ns/op");
-    // Both paths above run through dispatch::call (registry lookup, schema
-    // check, key resolution) — the numbers are the all-in per-op cost.
-    println!("  registry: {} ops registered", torsk::dispatch::op_names().len());
+    // ---- broadcast add: [R, C] + [C] (Suffix plan) ----
+    {
+        let (r, c) = if smoke { (64, 64) } else { (1024, 1024) };
+        let m = Tensor::rand(&[r, c]);
+        let v = Tensor::rand(&[c]);
+        for &t in &threads {
+            records.push(measure("broadcast_add", r * c, t, reps_for(r * c, smoke), || {
+                std::hint::black_box(ops::add(&m, &v));
+            }));
+        }
+    }
 
-    // ---- kernels ---------------------------------------------------------
-    println!("\n-- matmul GFLOP/s (f32, square) --");
-    for &n in &[64usize, 128, 256, 512, 1024] {
-        torsk::rng::manual_seed(0);
+    // ---- reductions ----
+    let sum_sizes: &[usize] = if smoke { &[1 << 12] } else { &[1 << 20, 1 << 22] };
+    for &n in sum_sizes {
+        let a = Tensor::rand(&[n]);
+        for &t in &threads {
+            records.push(measure("sum", n, t, reps_for(n, smoke), || {
+                std::hint::black_box(ops::sum(&a));
+            }));
+        }
+    }
+    {
+        let (r, c) = if smoke { (64, 64) } else { (1024, 1024) };
+        let a = Tensor::rand(&[r, c]);
+        for &t in &threads {
+            records.push(measure("sum_dims_rows", r * c, t, reps_for(r * c, smoke), || {
+                std::hint::black_box(ops::sum_dims(&a, &[1], false));
+            }));
+            records.push(measure("sum_dims_cols", r * c, t, reps_for(r * c, smoke), || {
+                std::hint::black_box(ops::sum_dims(&a, &[0], false));
+            }));
+        }
+    }
+
+    // ---- softmax over rows (>=1M elements in the full run) ----
+    {
+        let (r, c) = if smoke { (32, 64) } else { (1024, 1024) };
+        let x = Tensor::rand(&[r, c]);
+        for &t in &threads {
+            records.push(measure("softmax", r * c, t, reps_for(r * c, smoke), || {
+                std::hint::black_box(ops::softmax_last(&x));
+            }));
+        }
+    }
+
+    // ---- matmul: square and tall-skinny (the grain-fix shape) ----
+    {
+        let n = if smoke { 32 } else { 256 };
         let a = Tensor::randn(&[n, n]);
         let b = Tensor::randn(&[n, n]);
-        let reps = (1usize << 28) / (2 * n * n * n).max(1);
-        let ns = time_ns(reps.clamp(2, 50), || {
-            std::hint::black_box(ops::matmul(&a, &b));
-        });
-        let gflops = 2.0 * (n as f64).powi(3) / ns;
-        println!("  {n:>5}x{n:<5} {gflops:>7.2} GFLOP/s");
+        for &t in &threads {
+            records.push(measure("matmul_square", n * n, t, if smoke { 1 } else { 20 }, || {
+                std::hint::black_box(ops::matmul(&a, &b));
+            }));
+        }
+        let (m, k) = if smoke { (4, 64) } else { (8, 1024) };
+        let a = Tensor::randn(&[m, k]);
+        let b = Tensor::randn(&[k, k]);
+        for &t in &threads {
+            records.push(measure("matmul_tall_skinny", m * k, t, if smoke { 1 } else { 30 }, || {
+                std::hint::black_box(ops::matmul(&a, &b));
+            }));
+        }
     }
 
-    println!("\n-- conv2d (N=8, C=32->32, 16x16, k=3) --");
+    // ---- MLP forward+backward ----
     {
-        torsk::rng::manual_seed(0);
-        let x = Tensor::randn(&[8, 32, 16, 16]);
-        let w = Tensor::randn(&[32, 32, 3, 3]);
-        let ns = time_ns(10, || {
-            std::hint::black_box(ops::conv2d(&x, &w, None, 1, 1, 1));
-        });
-        let flops = 2.0 * 8.0 * 32.0 * 16.0 * 16.0 * 32.0 * 9.0;
-        println!("  forward: {:.2} ms, {:.2} GFLOP/s", ns / 1e6, flops / ns);
+        let (batch, din, dh, dout) = if smoke { (8, 32, 16, 4) } else { (128, 784, 256, 10) };
+        let model = nn::Sequential::new()
+            .add(nn::Linear::new(din, dh))
+            .add(nn::ReLU)
+            .add(nn::Linear::new(dh, dout));
+        let x = Tensor::randn(&[batch, din]);
+        let target = Tensor::randn(&[batch, dout]);
+        let params = model.parameters();
+        for &t in &threads {
+            records.push(measure("mlp_fwd_bwd", batch * din, t, if smoke { 1 } else { 20 }, || {
+                let loss = ops::mse_loss(&model.forward(&x), &target);
+                loss.backward();
+                for p in &params {
+                    p.set_grad(None);
+                }
+            }));
+        }
     }
 
-    println!("\n-- elementwise bandwidth (add, 16M elems) --");
+    // ---- conv residual block forward+backward ----
     {
-        let n = 16 * 1024 * 1024;
-        let a = Tensor::ones(&[n]);
-        let b = Tensor::ones(&[n]);
-        let ns = time_ns(10, || {
-            std::hint::black_box(ops::add(&a, &b));
-        });
-        // 2 reads + 1 write, 4 bytes each.
-        println!("  {:.1} GB/s", 3.0 * 4.0 * n as f64 / ns);
+        let (n, c, hw) = if smoke { (1, 4, 8) } else { (4, 16, 16) };
+        let x = Tensor::randn(&[n, c, hw, hw]);
+        let w = Tensor::randn(&[c, c, 3, 3]).requires_grad(true);
+        for &t in &threads {
+            records.push(measure(
+                "resnet_block_fwd_bwd",
+                n * c * hw * hw,
+                t,
+                if smoke { 1 } else { 10 },
+                || {
+                    let y = ops::conv2d(&x, &w, None, 1, 1, 1);
+                    let y = ops::relu(&y);
+                    let y = ops::add(&y, &x);
+                    ops::sum(&y).backward();
+                    w.set_grad(None);
+                },
+            ));
+        }
     }
 
-    println!("\n-- backward engine: graph overhead (chain of 100 tiny ops) --");
+    // ---- 100-iteration MLP training loop: the allocator/caching story ----
     {
-        let x = Tensor::ones(&[4]).requires_grad(true);
-        let ns = time_ns(200, || {
-            let mut y = x.clone();
-            for _ in 0..100 {
-                y = ops::mul_scalar(&y, 1.001);
+        let (batch, din, dh, dout) = if smoke { (8, 32, 16, 4) } else { (64, 256, 128, 10) };
+        let iters = if smoke { 2 } else { 100 };
+        let model = nn::Sequential::new()
+            .add(nn::Linear::new(din, dh))
+            .add(nn::Tanh)
+            .add(nn::Linear::new(dh, dout));
+        let x = Tensor::randn(&[batch, din]);
+        let target = Tensor::randn(&[batch, dout]);
+        let mut opt = Sgd::new(model.parameters(), 0.01);
+        let step = |opt: &mut Sgd| {
+            let loss = ops::mse_loss(&model.forward(&x), &target);
+            opt.zero_grad();
+            loss.backward();
+            opt.step();
+        };
+        // Warm the cache with a few steps, then measure the loop.
+        for _ in 0..3usize.min(iters) {
+            step(&mut opt);
+        }
+        let alloc = torsk::ctx::host_allocator();
+        let s0 = alloc.stats();
+        let (_, h0) = dispatch::output_reuse_stats();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            step(&mut opt);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let d = alloc.stats().delta(&s0);
+        let (_, h1) = dispatch::output_reuse_stats();
+        records.push(Record {
+            op: "mlp_train_loop".to_string(),
+            size: batch * din,
+            threads: torsk::kernels::num_threads(),
+            ns_per_iter: ns,
+            bytes_allocated: d.allocated_bytes_total / iters as u64,
+            cache_hit_rate: d.cache_hit_rate(),
+            reused_outputs: (h1 - h0) / iters as u64,
+        });
+    }
+
+    // ---- report ----
+    println!("== BENCH_ops ({} records{}) ==", records.len(), if smoke { ", smoke" } else { "" });
+    println!(
+        "{:<22} {:>10} {:>3} {:>14} {:>12} {:>6} {:>6}",
+        "op", "size", "t", "ns/iter", "bytes/iter", "hit%", "reuse"
+    );
+    for r in &records {
+        println!(
+            "{:<22} {:>10} {:>3} {:>14.0} {:>12} {:>5.1}% {:>6}",
+            r.op,
+            r.size,
+            r.threads,
+            r.ns_per_iter,
+            r.bytes_allocated,
+            r.cache_hit_rate * 100.0,
+            r.reused_outputs
+        );
+    }
+    for op in ["elementwise_chain", "softmax"] {
+        let big: Vec<&Record> =
+            records.iter().filter(|r| r.op == op && r.size >= 1 << 20).collect();
+        let t1 = big.iter().find(|r| r.threads == 1);
+        // Prefer the 4-thread row (the acceptance shape); fall back to the
+        // widest sweep point so <4-core hosts still report scaling.
+        let tn = big
+            .iter()
+            .find(|r| r.threads == 4)
+            .or_else(|| big.iter().filter(|r| r.threads > 1).max_by_key(|r| r.threads));
+        match (t1, tn) {
+            (Some(a), Some(b)) => println!(
+                "speedup {op} @ {} elems: {:.2}x at {} threads vs 1",
+                a.size,
+                a.ns_per_iter / b.ns_per_iter,
+                b.threads
+            ),
+            _ => println!("speedup {op}: skipped (no >=1M multi-thread records in this run)"),
+        }
+    }
+
+    // ---- emit + validate JSON ----
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"torsk.bench_ops.v1\",\n");
+    json.push_str(&format!(
+        "  \"threads_available\": {},\n  \"smoke\": {},\n  \"records\": [\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        smoke
+    ));
+    for (i, r) in records.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(&r.to_json());
+        json.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json).expect("write BENCH_ops.json");
+    println!("wrote {out_path}");
+
+    if let Err(e) = validate_schema(&json, records.len()) {
+        eprintln!("BENCH_ops.json schema validation FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("schema ok: torsk.bench_ops.v1, {} records", records.len());
+}
+
+/// Minimal schema check (no JSON dependency): the envelope declares the
+/// schema id and every record carries all six required keys.
+fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
+    if !json.contains("\"schema\": \"torsk.bench_ops.v1\"") {
+        return Err("missing schema id".into());
+    }
+    let recs: Vec<&str> = json.match_indices("{\"op\": ").map(|(i, _)| &json[i..]).collect();
+    if recs.len() != expected {
+        return Err(format!("expected {expected} records, found {}", recs.len()));
+    }
+    for (i, r) in recs.iter().enumerate() {
+        let end = r.find('}').ok_or_else(|| format!("record {i}: unterminated"))?;
+        let body = &r[..end];
+        for key in [
+            "\"op\"",
+            "\"size\"",
+            "\"threads\"",
+            "\"ns_per_iter\"",
+            "\"bytes_allocated\"",
+            "\"cache_hit_rate\"",
+            "\"reused_outputs\"",
+        ] {
+            if !body.contains(key) {
+                return Err(format!("record {i}: missing {key}"));
             }
-            ops::sum(&y).backward();
-            x.set_grad(None);
-        });
-        println!("  {:.1} µs per fwd+bwd of 100-op chain ({:.0} ns/op)", ns / 1e3, ns / 200.0);
+        }
     }
-
-    // Keep the Sim device drained so the process exits cleanly.
-    let _ = Device::Sim;
-    device::synchronize();
+    Ok(())
 }

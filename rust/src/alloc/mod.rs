@@ -120,12 +120,16 @@ pub struct AllocCounters {
     pub peak_in_use_bytes: AtomicU64,
     /// Bytes parked in the cache (0 for pass-through allocators).
     pub cached_bytes: AtomicU64,
+    /// Cumulative bytes handed out (cache hits *and* driver allocs) — the
+    /// per-iteration "bytes allocated" column of BENCH_ops.json.
+    pub allocated_bytes_total: AtomicU64,
 }
 
 impl AllocCounters {
     pub(crate) fn on_alloc(&self, bytes: usize) {
         let now = self.in_use_bytes.fetch_add(bytes as u64, Ordering::Relaxed) + bytes as u64;
         self.peak_in_use_bytes.fetch_max(now, Ordering::Relaxed);
+        self.allocated_bytes_total.fetch_add(bytes as u64, Ordering::Relaxed);
     }
     pub(crate) fn on_free(&self, bytes: usize) {
         self.in_use_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
@@ -139,6 +143,7 @@ impl AllocCounters {
             in_use_bytes: self.in_use_bytes.load(Ordering::Relaxed),
             peak_in_use_bytes: self.peak_in_use_bytes.load(Ordering::Relaxed),
             cached_bytes: self.cached_bytes.load(Ordering::Relaxed),
+            allocated_bytes_total: self.allocated_bytes_total.load(Ordering::Relaxed),
         }
     }
     pub(crate) fn reset(&self) {
@@ -146,6 +151,7 @@ impl AllocCounters {
         self.driver_allocs.store(0, Ordering::Relaxed);
         self.driver_frees.store(0, Ordering::Relaxed);
         self.driver_ns.store(0, Ordering::Relaxed);
+        self.allocated_bytes_total.store(0, Ordering::Relaxed);
         self.peak_in_use_bytes
             .store(self.in_use_bytes.load(Ordering::Relaxed), Ordering::Relaxed);
     }
@@ -161,6 +167,7 @@ pub struct AllocStats {
     pub in_use_bytes: u64,
     pub peak_in_use_bytes: u64,
     pub cached_bytes: u64,
+    pub allocated_bytes_total: u64,
 }
 
 impl AllocStats {
@@ -174,6 +181,18 @@ impl AllocStats {
             in_use_bytes: self.in_use_bytes,
             peak_in_use_bytes: self.peak_in_use_bytes,
             cached_bytes: self.cached_bytes,
+            allocated_bytes_total: self.allocated_bytes_total - earlier.allocated_bytes_total,
+        }
+    }
+
+    /// Fraction of allocation requests served from the cache (1.0 when no
+    /// requests happened — steady state with full output-reuse).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.driver_allocs;
+        if total == 0 {
+            1.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 }

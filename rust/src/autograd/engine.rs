@@ -174,8 +174,13 @@ fn worker(shared: &Shared) {
                 Edge::Node(next) => {
                     let mut st = shared.state.lock().unwrap();
                     let buf = st.buffers.remove(&next.id);
+                    // Both operands are owned and dead after the add, so
+                    // the dispatcher folds the accumulation into one of
+                    // the existing gradient buffers (no allocation).
                     let acc = match buf {
-                        Some(existing) => crate::ops::add(&existing, &grad),
+                        Some(existing) => {
+                            crate::dispatch::call_owned("add", vec![existing, grad], &[])
+                        }
                         None => grad,
                     };
                     st.buffers.insert(next.id, acc);

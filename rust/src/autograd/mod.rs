@@ -208,7 +208,10 @@ pub(crate) fn accumulate_grad(leaf: &Tensor, g: Tensor) {
     );
     let current = leaf.grad();
     let new = match current {
-        Some(cur) => no_grad(|| crate::ops::add(&cur, &g)),
+        // `g` is owned and dead after this add, so the dispatcher reuses
+        // its buffer for the sum (`cur` is still referenced by the leaf's
+        // metadata and is therefore never stolen).
+        Some(cur) => no_grad(|| crate::dispatch::call_owned("add", vec![cur, g], &[])),
         None => g,
     };
     leaf.set_grad(Some(new));

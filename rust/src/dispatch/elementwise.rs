@@ -59,7 +59,7 @@ pub(crate) fn unary_map_t<T: Element, O: Element>(
     let out = Tensor::empty(a.shape(), O::DTYPE, a.device());
     let n = a.numel();
     let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || iter::run_unary::<T, O>(n, ap, op, f));
+    device::dispatch(a.device(), name, move || iter::run_unary::<T, O, _>(n, ap, op, f));
     out
 }
 
@@ -75,13 +75,7 @@ pub(crate) fn scalar_map_t<T: Element>(
     let out = Tensor::empty(a.shape(), T::DTYPE, a.device());
     let n = a.numel();
     let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || unsafe {
-        let av = ap.as_slice::<T>(0, n);
-        let ov = op.as_mut_slice::<T>(0, n);
-        for i in 0..n {
-            ov[i] = f(av[i], s);
-        }
-    });
+    device::dispatch(a.device(), name, move || iter::run_unary::<T, T, _>(n, ap, op, move |x| f(x, s)));
     out
 }
 
@@ -97,13 +91,7 @@ pub(crate) fn scalar2_map_t<T: Element>(
     let out = Tensor::empty(a.shape(), T::DTYPE, a.device());
     let n = a.numel();
     let (ap, op) = (a.data_ptr(), out.data_ptr());
-    device::dispatch(a.device(), name, move || unsafe {
-        let av = ap.as_slice::<T>(0, n);
-        let ov = op.as_mut_slice::<T>(0, n);
-        for i in 0..n {
-            ov[i] = f(av[i], s1, s2);
-        }
-    });
+    device::dispatch(a.device(), name, move || iter::run_unary::<T, T, _>(n, ap, op, move |x| f(x, s1, s2)));
     out
 }
 
@@ -510,25 +498,54 @@ fn bw_cast(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
 // ---------------------------------------------------------------------
 
 pub(crate) fn register(reg: &mut Registry) {
-    reg.add(OpDef::new("add", 2, 2, NUMERIC).kernel_all(k_add).backward(bw_add));
-    reg.add(OpDef::new("sub", 2, 2, NUMERIC).kernel_all(k_sub).backward(bw_sub));
-    reg.add(OpDef::new("mul", 2, 2, NUMERIC).kernel_all(k_mul).backward(bw_mul));
-    reg.add(OpDef::new("div", 2, 2, NUMERIC).kernel_all(k_div).backward(bw_div));
-    reg.add(OpDef::new("maximum", 2, 2, NUMERIC).kernel_all(k_maximum).backward(bw_maximum));
-    reg.add(OpDef::new("eq", 2, 2, NUMERIC).kernel_all(k_eq));
+    // Every entry below except `cast` is index-aligned and dtype-preserving
+    // when operands share a shape, so all are `reuse_output` (the
+    // dispatcher may let the output steal a dead input's storage).
+    reg.add(OpDef::new("add", 2, 2, NUMERIC).kernel_all(k_add).backward(bw_add).reuse_output());
+    reg.add(OpDef::new("sub", 2, 2, NUMERIC).kernel_all(k_sub).backward(bw_sub).reuse_output());
+    reg.add(OpDef::new("mul", 2, 2, NUMERIC).kernel_all(k_mul).backward(bw_mul).reuse_output());
+    reg.add(OpDef::new("div", 2, 2, NUMERIC).kernel_all(k_div).backward(bw_div).reuse_output());
+    reg.add(
+        OpDef::new("maximum", 2, 2, NUMERIC)
+            .kernel_all(k_maximum)
+            .backward(bw_maximum)
+            .reuse_output(),
+    );
+    reg.add(OpDef::new("eq", 2, 2, NUMERIC).kernel_all(k_eq).reuse_output());
 
-    reg.add(OpDef::new("neg", 1, 1, NUMERIC).kernel_all(k_neg).backward(bw_neg));
-    reg.add(OpDef::new("exp", 1, 1, FLOATS).kernel_all(k_exp).backward(bw_exp));
-    reg.add(OpDef::new("log", 1, 1, FLOATS).kernel_all(k_log).backward(bw_log));
-    reg.add(OpDef::new("sqrt", 1, 1, FLOATS).kernel_all(k_sqrt).backward(bw_sqrt));
-    reg.add(OpDef::new("relu", 1, 1, FLOATS).kernel_all(k_relu).backward(bw_relu));
-    reg.add(OpDef::new("sigmoid", 1, 1, FLOATS).kernel_all(k_sigmoid).backward(bw_sigmoid));
-    reg.add(OpDef::new("tanh", 1, 1, FLOATS).kernel_all(k_tanh).backward(bw_tanh));
+    reg.add(OpDef::new("neg", 1, 1, NUMERIC).kernel_all(k_neg).backward(bw_neg).reuse_output());
+    reg.add(OpDef::new("exp", 1, 1, FLOATS).kernel_all(k_exp).backward(bw_exp).reuse_output());
+    reg.add(OpDef::new("log", 1, 1, FLOATS).kernel_all(k_log).backward(bw_log).reuse_output());
+    reg.add(OpDef::new("sqrt", 1, 1, FLOATS).kernel_all(k_sqrt).backward(bw_sqrt).reuse_output());
+    reg.add(OpDef::new("relu", 1, 1, FLOATS).kernel_all(k_relu).backward(bw_relu).reuse_output());
+    reg.add(
+        OpDef::new("sigmoid", 1, 1, FLOATS)
+            .kernel_all(k_sigmoid)
+            .backward(bw_sigmoid)
+            .reuse_output(),
+    );
+    reg.add(OpDef::new("tanh", 1, 1, FLOATS).kernel_all(k_tanh).backward(bw_tanh).reuse_output());
 
-    reg.add(OpDef::new("add_scalar", 1, 1, FLOATS).kernel_all(k_add_scalar).backward(bw_add_scalar));
-    reg.add(OpDef::new("mul_scalar", 1, 1, FLOATS).kernel_all(k_mul_scalar).backward(bw_mul_scalar));
-    reg.add(OpDef::new("pow_scalar", 1, 1, FLOATS).kernel_all(k_pow_scalar).backward(bw_pow_scalar));
-    reg.add(OpDef::new("clamp", 1, 1, FLOATS).kernel_all(k_clamp).backward(bw_clamp));
+    reg.add(
+        OpDef::new("add_scalar", 1, 1, FLOATS)
+            .kernel_all(k_add_scalar)
+            .backward(bw_add_scalar)
+            .reuse_output(),
+    );
+    reg.add(
+        OpDef::new("mul_scalar", 1, 1, FLOATS)
+            .kernel_all(k_mul_scalar)
+            .backward(bw_mul_scalar)
+            .reuse_output(),
+    );
+    reg.add(
+        OpDef::new("pow_scalar", 1, 1, FLOATS)
+            .kernel_all(k_pow_scalar)
+            .backward(bw_pow_scalar)
+            .reuse_output(),
+    );
+    reg.add(OpDef::new("clamp", 1, 1, FLOATS).kernel_all(k_clamp).backward(bw_clamp).reuse_output());
 
+    // `cast` may change the element size — never steal through it.
     reg.add(OpDef::new("cast", 1, 1, NUMERIC).kernel_all(k_cast).backward(bw_cast));
 }

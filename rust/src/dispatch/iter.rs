@@ -10,7 +10,16 @@
 //!    inner loop is tight and vectorizable, the odometer only walks the
 //!    leading dims. This is what keeps `x * gamma[1,C,1,1]`-style ops fast.
 //! 3. **Strided**: fully generic odometer walk (rare).
+//!
+//! Every strategy is multi-threaded (§5.1 "basic parallel primitives"):
+//! plans split into disjoint index ranges on [`crate::kernels::parallel_for`]
+//! with a grain that keeps work serial below
+//! [`crate::kernels::SERIAL_GRAIN`] elements. The shared reduction drivers
+//! ([`run_reduce`], [`run_reduce_flat`]) live here too, so reductions,
+//! softmax rows and losses parallelize with *deterministic* results: chunk
+//! boundaries never depend on the thread count.
 
+use crate::kernels::{parallel_for, SERIAL_GRAIN};
 use crate::tensor::shape::{broadcast_shapes, broadcast_strides, numel, StridedIter};
 use crate::tensor::storage::SendPtr;
 use crate::tensor::{Element, Tensor};
@@ -88,79 +97,126 @@ impl TensorIter {
             return;
         }
         match &self.mode {
-            BinMode::Fast => unsafe {
-                let av = ap.as_slice::<T>(0, n);
-                let bv = bp.as_slice::<T>(0, n);
-                crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
-                    // SAFETY: disjoint ranges per chunk.
-                    let ov = std::slice::from_raw_parts_mut(op.ptr() as *mut O, n);
-                    for i in s..e {
-                        ov[i] = f(av[i], bv[i]);
+            BinMode::Fast => {
+                // Output-reuse (dispatch::call_owned) may hand the kernel a
+                // stolen input buffer: the output then *aliases* one input.
+                // That case must stay on raw pointers — a `&[T]`/`&mut [O]`
+                // pair over the same memory is UB — and is index-aligned by
+                // construction (Fast = same shape, contiguous, same dtype).
+                let o = op.ptr() as usize;
+                let aliased = o == ap.ptr() as usize || o == bp.ptr() as usize;
+                if aliased {
+                    parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+                        let (pa, pb) = (ap.ptr() as *const T, bp.ptr() as *const T);
+                        let po = op.ptr() as *mut O;
+                        for i in s..e {
+                            let v = f(std::ptr::read(pa.add(i)), std::ptr::read(pb.add(i)));
+                            std::ptr::write(po.add(i), v);
+                        }
+                    });
+                } else {
+                    unsafe {
+                        let av = ap.as_slice::<T>(0, n);
+                        let bv = bp.as_slice::<T>(0, n);
+                        parallel_for(n, SERIAL_GRAIN, |s, e| {
+                            // SAFETY: disjoint ranges per chunk.
+                            let ov = std::slice::from_raw_parts_mut(op.ptr() as *mut O, n);
+                            for i in s..e {
+                                ov[i] = f(av[i], bv[i]);
+                            }
+                        });
                     }
-                });
-            },
-            BinMode::Suffix { outer_shape, outer_sa, outer_sb, inner, step_a, step_b } => unsafe {
+                }
+            }
+            BinMode::Suffix { outer_shape, outer_sa, outer_sb, inner, step_a, step_b } => {
                 let inner = *inner;
                 let (step_a, step_b) = (*step_a, *step_b);
-                let ov = op.as_mut_slice::<O>(0, n);
-                let ia = StridedIter::new(outer_shape, outer_sa);
-                let ib = StridedIter::new(outer_shape, outer_sb);
-                let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
-                for (chunk, (offa, offb)) in ov.chunks_mut(inner).zip(ia.zip(ib)) {
-                    let pa = pa0.add(offa);
-                    let pb = pb0.add(offb);
-                    match (step_a, step_b) {
-                        (1, 0) => {
-                            let s = *pb;
-                            let av = std::slice::from_raw_parts(pa, inner);
-                            for (o, &x) in chunk.iter_mut().zip(av) {
-                                *o = f(x, s);
+                let outer: usize = outer_shape.iter().product();
+                // Each outer step covers `inner` output elements; keep
+                // ~SERIAL_GRAIN elements per task.
+                let grain = (SERIAL_GRAIN / inner.max(1)).max(1);
+                parallel_for(outer, grain, |o0, o1| unsafe {
+                    let ov = op.as_mut_slice::<O>(o0 * inner, (o1 - o0) * inner);
+                    let ia = StridedIter::starting_at(outer_shape, outer_sa, o0, o1 - o0);
+                    let ib = StridedIter::starting_at(outer_shape, outer_sb, o0, o1 - o0);
+                    let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
+                    for (chunk, (offa, offb)) in ov.chunks_mut(inner).zip(ia.zip(ib)) {
+                        let pa = pa0.add(offa);
+                        let pb = pb0.add(offb);
+                        match (step_a, step_b) {
+                            (1, 0) => {
+                                let s = *pb;
+                                let av = std::slice::from_raw_parts(pa, inner);
+                                for (o, &x) in chunk.iter_mut().zip(av) {
+                                    *o = f(x, s);
+                                }
                             }
-                        }
-                        (0, 1) => {
-                            let s = *pa;
-                            let bv = std::slice::from_raw_parts(pb, inner);
-                            for (o, &y) in chunk.iter_mut().zip(bv) {
-                                *o = f(s, y);
+                            (0, 1) => {
+                                let s = *pa;
+                                let bv = std::slice::from_raw_parts(pb, inner);
+                                for (o, &y) in chunk.iter_mut().zip(bv) {
+                                    *o = f(s, y);
+                                }
                             }
-                        }
-                        (1, 1) => {
-                            let av = std::slice::from_raw_parts(pa, inner);
-                            let bv = std::slice::from_raw_parts(pb, inner);
-                            for ((o, &x), &y) in chunk.iter_mut().zip(av).zip(bv) {
-                                *o = f(x, y);
+                            (1, 1) => {
+                                let av = std::slice::from_raw_parts(pa, inner);
+                                let bv = std::slice::from_raw_parts(pb, inner);
+                                for ((o, &x), &y) in chunk.iter_mut().zip(av).zip(bv) {
+                                    *o = f(x, y);
+                                }
                             }
-                        }
-                        _ => {
-                            let s = f(*pa, *pb);
-                            chunk.fill(s);
+                            _ => {
+                                let s = f(*pa, *pb);
+                                chunk.fill(s);
+                            }
                         }
                     }
-                }
-            },
-            BinMode::Strided { sa, sb } => unsafe {
-                let ov = op.as_mut_slice::<O>(0, n);
-                let ia = StridedIter::new(&self.out_shape, sa);
-                let ib = StridedIter::new(&self.out_shape, sb);
-                let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
-                for ((o, offa), offb) in ov.iter_mut().zip(ia).zip(ib) {
-                    *o = f(*pa0.add(offa), *pb0.add(offb));
-                }
-            },
+                });
+            }
+            BinMode::Strided { sa, sb } => {
+                parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+                    let ov = op.as_mut_slice::<O>(s, e - s);
+                    let ia = StridedIter::starting_at(&self.out_shape, sa, s, e - s);
+                    let ib = StridedIter::starting_at(&self.out_shape, sb, s, e - s);
+                    let (pa0, pb0) = (ap.ptr() as *const T, bp.ptr() as *const T);
+                    for ((o, offa), offb) in ov.iter_mut().zip(ia).zip(ib) {
+                        *o = f(*pa0.add(offa), *pb0.add(offb));
+                    }
+                });
+            }
         }
     }
 }
 
 /// Flat parallel map for dense unary traversals (input made contiguous by
 /// the caller). Caller guarantees `ap` points to `n` valid `T`s and `op`
-/// to an exclusive `O` buffer of `n` elements.
-pub(crate) fn run_unary<T: Element, O: Element>(n: usize, ap: SendPtr, op: SendPtr, f: fn(T) -> O) {
+/// to an exclusive `O` buffer of `n` elements — or to the *same* buffer as
+/// `ap` (output-reuse), which takes a raw-pointer in-place path. Generic
+/// over the kernel closure so the scalar-parameter maps share this driver.
+pub(crate) fn run_unary<T, O, F>(n: usize, ap: SendPtr, op: SendPtr, f: F)
+where
+    T: Element,
+    O: Element,
+    F: Fn(T) -> O + Send + Sync,
+{
     if n == 0 {
+        return;
+    }
+    if ap.ptr() as usize == op.ptr() as usize {
+        // In-place (stolen output storage, same dtype): raw pointers only.
+        parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+            let pa = ap.ptr() as *const T;
+            let po = op.ptr() as *mut O;
+            for i in s..e {
+                let v = f(std::ptr::read(pa.add(i)));
+                std::ptr::write(po.add(i), v);
+            }
+        });
         return;
     }
     unsafe {
         let av = ap.as_slice::<T>(0, n);
-        crate::kernels::parallel_for(n, crate::kernels::PAR_GRAIN, |s, e| {
+        parallel_for(n, SERIAL_GRAIN, |s, e| {
             // SAFETY: disjoint ranges per chunk.
             let ov = std::slice::from_raw_parts_mut(op.ptr() as *mut O, n);
             for i in s..e {
@@ -168,6 +224,98 @@ pub(crate) fn run_unary<T: Element, O: Element>(n: usize, ap: SendPtr, op: SendP
             }
         });
     }
+}
+
+// ---------------------------------------------------------------------
+// Reduction drivers
+// ---------------------------------------------------------------------
+
+/// Fixed chunk width for flat reductions. A *constant* — never derived
+/// from the thread count — so partial-sum boundaries, and therefore
+/// floating-point rounding, are bit-for-bit identical at every
+/// `PALLAS_NUM_THREADS` setting.
+pub(crate) const REDUCE_CHUNK: usize = 64 * 1024;
+
+/// Row-wise reduction driver: `out[o] = finish(fold(init, row o))` where
+/// row `o` is the contiguous run `a[o*inner .. (o+1)*inner]`.
+///
+/// Parallel over `outer` rows with a grain keeping ~[`SERIAL_GRAIN`]
+/// elements per task. Deterministic at any thread count: each output
+/// element is folded serially, in index order, by exactly one task.
+pub(crate) fn run_reduce<T, A, F, G>(
+    outer: usize,
+    inner: usize,
+    ap: SendPtr,
+    op: SendPtr,
+    init: A,
+    fold: F,
+    finish: G,
+) where
+    T: Element,
+    A: Copy + Send + Sync,
+    F: Fn(A, T) -> A + Copy + Send + Sync,
+    G: Fn(A) -> T + Copy + Send + Sync,
+{
+    if outer == 0 || inner == 0 {
+        return;
+    }
+    let grain = (SERIAL_GRAIN / inner.max(1)).max(1);
+    parallel_for(outer, grain, |o0, o1| unsafe {
+        let ov = op.as_mut_slice::<T>(o0, o1 - o0);
+        for (k, o) in ov.iter_mut().enumerate() {
+            let row = ap.as_slice::<T>((o0 + k) * inner, inner);
+            let mut acc = init;
+            for &v in row {
+                acc = fold(acc, v);
+            }
+            *o = finish(acc);
+        }
+    });
+}
+
+/// Deterministic full reduction over `n` contiguous elements: per-chunk
+/// partials ([`REDUCE_CHUNK`] wide, fixed order) computed in parallel,
+/// then combined serially in chunk order — the same partial boundaries at
+/// 1, 2 or 8 threads.
+pub(crate) fn run_reduce_flat<T, A, F, C>(n: usize, ap: SendPtr, init: A, fold: F, combine: C) -> A
+where
+    T: Element,
+    A: Copy + Send + Sync,
+    F: Fn(A, T) -> A + Copy + Send + Sync,
+    C: Fn(A, A) -> A,
+{
+    if n == 0 {
+        return init;
+    }
+    let nchunks = n.div_ceil(REDUCE_CHUNK);
+    if nchunks == 1 {
+        let av = unsafe { ap.as_slice::<T>(0, n) };
+        let mut acc = init;
+        for &v in av {
+            acc = fold(acc, v);
+        }
+        return acc;
+    }
+    let mut partials: Vec<A> = vec![init; nchunks];
+    let pp = SendPtr::new(partials.as_mut_ptr() as *mut u8);
+    parallel_for(nchunks, 1, |c0, c1| unsafe {
+        for c in c0..c1 {
+            let s = c * REDUCE_CHUNK;
+            let e = ((c + 1) * REDUCE_CHUNK).min(n);
+            let av = ap.as_slice::<T>(s, e - s);
+            let mut acc = init;
+            for &v in av {
+                acc = fold(acc, v);
+            }
+            // SAFETY: each chunk index written by exactly one task.
+            std::ptr::write((pp.ptr() as *mut A).add(c), acc);
+        }
+    });
+    let mut acc = partials[0];
+    for p in &partials[1..] {
+        acc = combine(acc, *p);
+    }
+    acc
 }
 
 /// Longest trailing dim-suffix over which both stride vectors advance
@@ -230,6 +378,74 @@ mod tests {
         let it = TensorIter::binary(&a, &b);
         assert_eq!(it.out_shape, vec![2, 0]);
         assert_eq!(it.n, 0);
+    }
+
+    #[test]
+    fn run_reduce_rows_matches_serial_fold() {
+        let (outer, inner) = (100usize, 1000usize);
+        let data: Vec<f32> = (0..outer * inner).map(|i| ((i * 31) % 17) as f32 - 8.0).collect();
+        let t = Tensor::from_vec(data.clone(), &[outer, inner]);
+        let out = Tensor::zeros(&[outer]);
+        run_reduce::<f32, f32, _, _>(
+            outer,
+            inner,
+            t.data_ptr(),
+            out.data_ptr(),
+            0.0,
+            |a, v| a + v,
+            |a| a,
+        );
+        let got = out.to_vec::<f32>();
+        for o in 0..outer {
+            let expect = data[o * inner..(o + 1) * inner].iter().fold(0.0f32, |a, &v| a + v);
+            assert_eq!(got[o], expect, "row {o}");
+        }
+    }
+
+    #[test]
+    fn run_reduce_flat_matches_fixed_chunk_order() {
+        let n = 3 * REDUCE_CHUNK + 123;
+        let data: Vec<f32> = (0..n).map(|i| ((i * 37) % 11) as f32 * 0.5 - 2.0).collect();
+        let t = Tensor::from_vec(data.clone(), &[n]);
+        let total =
+            run_reduce_flat::<f32, f32, _, _>(n, t.data_ptr(), 0.0, |a, v| a + v, |a, b| a + b);
+        let partials: Vec<f32> = data
+            .chunks(REDUCE_CHUNK)
+            .map(|c| c.iter().fold(0.0f32, |a, &v| a + v))
+            .collect();
+        let expect = partials[1..].iter().fold(partials[0], |a, &p| a + p);
+        assert_eq!(total, expect, "must combine fixed-width partials in order");
+    }
+
+    #[test]
+    fn parallel_paths_match_reference_at_scale() {
+        // Fast: flat dense add above the serial grain.
+        let n = 200_000;
+        let a: Vec<f32> = (0..n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i % 7) as f32 + 1.0).collect();
+        let fast = crate::ops::add(&Tensor::from_vec(a.clone(), &[n]), &Tensor::from_vec(b.clone(), &[n]))
+            .to_vec::<f32>();
+        for i in (0..n).step_by(997) {
+            assert_eq!(fast[i], a[i] + b[i]);
+        }
+
+        // Suffix: [391, 512] + [512] row broadcast.
+        let (r, c) = (391usize, 512usize);
+        let m: Vec<f32> = (0..r * c).map(|i| i as f32 * 0.25).collect();
+        let v: Vec<f32> = (0..c).map(|i| i as f32).collect();
+        let tv = Tensor::from_vec(v.clone(), &[c]);
+        let out = crate::ops::add(&Tensor::from_vec(m.clone(), &[r, c]), &tv).to_vec::<f32>();
+        for i in (0..r * c).step_by(613) {
+            assert_eq!(out[i], m[i] + v[i % c]);
+        }
+
+        // Strided: a transposed lhs forces the generic odometer at scale.
+        let tt = Tensor::from_vec(m.clone(), &[c, r]).t(); // [r, c] view
+        let got = crate::ops::add(&tt, &tv).to_vec::<f32>();
+        for i in (0..r * c).step_by(613) {
+            let (row, col) = (i / c, i % c);
+            assert_eq!(got[i], m[col * r + row] + v[col]);
+        }
     }
 
     #[test]

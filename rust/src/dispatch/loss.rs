@@ -12,7 +12,7 @@ use crate::ops;
 use crate::tensor::{DType, Tensor};
 use crate::torsk_assert;
 
-use super::{OpCtx, OpDef, Registry};
+use super::{OpCtx, OpDef, Param, Registry};
 
 fn rows_cols(t: &Tensor) -> (usize, usize) {
     torsk_assert!(t.ndim() >= 1, "softmax: needs at least 1 dim");
@@ -114,17 +114,20 @@ fn bw_cross_entropy(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
 }
 
 /// Composite mean-squared-error loss (mean reduction); works for any
-/// float dtype via the generic elementwise/reduce entries.
+/// float dtype via the generic elementwise/reduce entries. The squared
+/// diff folds into the diff's own buffer when not recording (`diff` is
+/// dead after the multiply).
 fn k_mse_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "mse_loss: shape mismatch");
     let diff = ops::sub(pred, target);
-    let sq = ops::mul(&diff, &diff);
+    let sq = super::call_owned("mul", vec![diff.clone(), diff], &[]);
     ops::mean(&sq)
 }
 
 /// Composite binary cross-entropy on probabilities in (0,1), mean
-/// reduction.
+/// reduction. Owned temporaries route through `call_owned` so the chain
+/// reuses its intermediate buffers when not recording.
 fn k_bce_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "bce_loss: shape mismatch");
@@ -132,12 +135,13 @@ fn k_bce_loss(ctx: &OpCtx) -> Tensor {
     let p = ops::clamp(pred, eps, 1.0 - eps);
     // -[t*log(p) + (1-t)*log(1-p)]
     let log_p = ops::log(&p);
-    let one_minus_p = ops::add_scalar(&ops::neg(&p), 1.0);
-    let log_1p = ops::log(&one_minus_p);
-    let one_minus_t = ops::add_scalar(&ops::neg(target), 1.0);
+    let one_minus_p = super::call_owned("add_scalar", vec![ops::neg(&p)], &[Param::F32(1.0)]);
+    let log_1p = super::call_owned("log", vec![one_minus_p], &[]);
+    let one_minus_t = super::call_owned("add_scalar", vec![ops::neg(target)], &[Param::F32(1.0)]);
     let pos = ops::mul(target, &log_p);
-    let neg_term = ops::mul(&one_minus_t, &log_1p);
-    ops::neg(&ops::mean(&ops::add(&pos, &neg_term)))
+    let neg_term = super::call_owned("mul", vec![one_minus_t, log_1p], &[]);
+    let total = super::call_owned("add", vec![pos, neg_term], &[]);
+    super::call_owned("neg", vec![ops::mean(&total)], &[])
 }
 
 pub(crate) fn register(reg: &mut Registry) {

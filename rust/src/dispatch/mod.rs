@@ -18,6 +18,53 @@
 //! [`iter::TensorIter`] helper, so F32, F64 and I64 run through the same
 //! registry entries instead of per-op `f32 only` asserts.
 //!
+//! # Threading and memory model
+//!
+//! The eager hot path is multi-threaded and allocation-light (§5.1/§5.3
+//! "careful and pragmatic implementation of the key components of its
+//! runtime"). The rules, in one place:
+//!
+//! **Grain sizes.** Every TensorIter plan (Fast/Suffix/Strided) and every
+//! reduction splits its index space over `kernels::parallel_for`, staying
+//! serial below [`crate::kernels::SERIAL_GRAIN`] (~32k) elements — below
+//! that, pool wakeups cost more than they save. Suffix/row drivers convert
+//! the grain to rows (`SERIAL_GRAIN / inner`), `sgemm` derives its row
+//! grain from `m` and `kernels::num_threads()` so tall-skinny matmuls
+//! still fill every core. The thread count comes from `PALLAS_NUM_THREADS`
+//! (read once) and can be swept at runtime with
+//! [`crate::kernels::set_num_threads`].
+//!
+//! **Determinism.** Parallel reductions are bit-for-bit identical at every
+//! thread count, by construction rather than by schedule: row/column
+//! reductions give each output element exactly one owning task that folds
+//! serially in index order, and flat reductions (`sum`, losses) use
+//! fixed-width chunks ([`iter::REDUCE_CHUNK`], a constant) whose partials
+//! combine serially in chunk order. Nothing derives a partial-sum boundary
+//! from the thread count. `tests/parallel_determinism.rs` pins this at
+//! `PALLAS_NUM_THREADS` = 1, 2 and 8.
+//!
+//! **Output-stealing.** [`call_owned`] lets an op's output steal a dead
+//! input's storage instead of allocating (PyTorch's `resize_`/`out=`
+//! trick, automated at the dispatch layer). An input is donated only when
+//! (1) the op is registered `reuse_output` (elementwise, index-aligned,
+//! dtype-preserving), (2) no autograd recording will happen, (3) every
+//! live handle to the tensor was moved into the call and nothing else
+//! shares its storage (non-view, offset 0), and (4) all operands are
+//! contiguous with one shape and dtype, so the kernel runs the
+//! index-aligned Fast plan. Owned operator overloads (`a + &b`), the
+//! backward engine's gradient accumulation and the composite loss/norm
+//! kernels all route through it; everything else allocates through the
+//! per-device [`crate::alloc::caching::CachingAllocator`].
+//!
+//! **Reading `BENCH_ops.json`** (emitted by `make bench`, schema
+//! `torsk.bench_ops.v1`): one record per (op, size, threads) with
+//! `ns_per_iter` (wall time), `bytes_allocated` (allocator bytes handed
+//! out per iteration — cache hits included, stolen outputs excluded),
+//! `cache_hit_rate` (host caching-allocator hits over the window) and
+//! `reused_outputs` (storages stolen per iteration). Compare `threads=1`
+//! vs `threads=4` rows at the same size for scaling, and the
+//! `mlp_train_loop` record for the steady-state allocator story.
+//!
 //! # Registering a new op
 //!
 //! A new operator (or a new backend for an existing one) is a registry
@@ -61,12 +108,13 @@ pub(crate) mod views;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::autograd::{self, Function};
 use crate::device::Device;
 use crate::profiler;
-use crate::tensor::{DType, Tensor};
+use crate::tensor::{storage, DType, Tensor};
 use crate::{torsk_assert, torsk_bail};
 
 // ---------------------------------------------------------------------
@@ -304,6 +352,10 @@ pub struct OpDef {
     pub schema: OpSchema,
     kernels: [Option<KernelFn>; NUM_BACKEND_KEYS],
     backward: Option<BackwardFn>,
+    /// Kernel reads input element `i` only to produce output element `i`
+    /// when all operands share the output's shape (the TensorIter Fast
+    /// plan) — the precondition for [`call_owned`]'s output-stealing.
+    reuse_output: bool,
 }
 
 impl OpDef {
@@ -319,7 +371,15 @@ impl OpDef {
             schema: OpSchema { name, min_inputs, max_inputs, dtypes },
             kernels: [None; NUM_BACKEND_KEYS],
             backward: None,
+            reuse_output: false,
         }
+    }
+
+    /// Declare the op safe for output-stealing (see the `reuse_output`
+    /// field): elementwise, index-aligned, dtype-preserving kernels only.
+    pub fn reuse_output(mut self) -> OpDef {
+        self.reuse_output = true;
+        self
     }
 
     /// Attach a kernel for one backend key.
@@ -434,14 +494,25 @@ pub(crate) fn same_device(name: &str, tensors: &[&Tensor]) -> Device {
 /// resolution, per-op profiling and uniform autograd recording live here,
 /// once, instead of in ~40 op bodies.
 pub fn call(name: &str, inputs: &[&Tensor], params: &[Param]) -> Tensor {
+    call_with(resolve(name), name, inputs, params)
+}
+
+/// One registry round-trip: look `name` up or panic with the catalog.
+fn resolve(name: &str) -> OpDef {
     let def = { REGISTRY.read().unwrap().ops.get(name).copied() };
-    let def = match def {
+    match def {
         Some(d) => d,
         None => {
             let known = op_names().join(", ");
             torsk_bail!("no operator named '{name}' is registered (known ops: {known})");
         }
-    };
+    }
+}
+
+/// [`call`] after registry resolution — shared with [`call_owned`], which
+/// needs the `OpDef` up front (for the `reuse_output` flag) and must not
+/// pay a second lock/lookup on the per-op hot path.
+fn call_with(def: OpDef, name: &str, inputs: &[&Tensor], params: &[Param]) -> Tensor {
     torsk_assert!(!inputs.is_empty(), "{name}: ops take at least one tensor input");
     def.schema.check(inputs);
     let device = same_device(name, inputs);
@@ -473,6 +544,96 @@ pub fn call(name: &str, inputs: &[&Tensor], params: &[Param]) -> Tensor {
         profiler::end(s);
     }
     out
+}
+
+// ---------------------------------------------------------------------
+// Output-stealing (allocation-free op outputs)
+// ---------------------------------------------------------------------
+
+static REUSE_ATTEMPTS: AtomicU64 = AtomicU64::new(0);
+static REUSE_HITS: AtomicU64 = AtomicU64::new(0);
+
+/// `(donations armed, outputs that actually stole an input's storage)`
+/// since process start — the "allocation-free outputs" counters reported
+/// in `BENCH_ops.json`.
+pub fn output_reuse_stats() -> (u64, u64) {
+    (REUSE_ATTEMPTS.load(Ordering::Relaxed), REUSE_HITS.load(Ordering::Relaxed))
+}
+
+/// Disarms any unconsumed donation when the op returns (or panics) and
+/// counts a hit when the kernel consumed it.
+struct DonationGuard {
+    armed: bool,
+}
+
+impl Drop for DonationGuard {
+    fn drop(&mut self) {
+        if self.armed && storage::disarm_donation().is_none() {
+            REUSE_HITS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Like [`call`], but takes *ownership* of its tensor inputs, which lets
+/// the dispatcher prove an input dead and let the output steal its
+/// storage — PyTorch's `resize_`/`out=` trick automated at the dispatch
+/// layer, so every `reuse_output` op gets it for free.
+///
+/// An input's buffer is donated only when every condition holds:
+///
+/// 1. the op is registered [`OpDef::reuse_output`] (elementwise,
+///    index-aligned, dtype-preserving kernels);
+/// 2. no autograd recording will happen (`should_record` is false) — a
+///    recorded op may save inputs for backward;
+/// 3. the input is provably dead: moved in by value with no other handle
+///    (`Arc::strong_count == 1`) and no other tensor sharing the storage
+///    (`ref_count == 1`, offset 0) — a caller who still needs a tensor
+///    necessarily holds a clone, which disqualifies it automatically;
+/// 4. all operands are contiguous with the same shape and dtype, so the
+///    kernel runs the Fast plan and writes out[i] only after reading
+///    in[i].
+///
+/// When no input qualifies this degrades to a plain [`call`]; the
+/// borrowed-input shims (`ops::add(&a, &b)`) always clone handles and
+/// therefore never donate.
+pub fn call_owned(name: &str, inputs: Vec<Tensor>, params: &[Param]) -> Tensor {
+    let def = resolve(name);
+    let guard = DonationGuard { armed: maybe_donate(&def, &inputs) };
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let out = call_with(def, name, &refs, params);
+    drop(refs);
+    drop(guard);
+    out
+}
+
+fn maybe_donate(def: &OpDef, inputs: &[Tensor]) -> bool {
+    if !def.reuse_output || inputs.is_empty() {
+        return false;
+    }
+    // should_record, without building a temporary &Tensor slice on the
+    // per-op hot path.
+    if autograd::grad_enabled() && inputs.iter().any(|t| t.requires_grad_flag()) {
+        return false;
+    }
+    let dt = inputs[0].dtype();
+    let shape = inputs[0].shape();
+    if inputs.iter().any(|t| t.dtype() != dt || t.shape() != shape || !t.is_contiguous()) {
+        return false;
+    }
+    for t in inputs {
+        // Dead after the op: every live handle to this tensor is inside
+        // `inputs` (covers `x * x` self-products, where the same impl
+        // appears twice) and nothing else shares the storage.
+        let occurrences = inputs.iter().filter(|u| Arc::ptr_eq(&u.inner, &t.inner)).count();
+        let sole_owner =
+            Arc::strong_count(&t.inner) == occurrences && t.storage().ref_count() == 1;
+        if sole_owner && t.storage_offset() == 0 {
+            storage::arm_donation(t.storage().clone());
+            REUSE_ATTEMPTS.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+    }
+    false
 }
 
 #[cfg(test)]
@@ -551,4 +712,54 @@ mod tests {
         call("relu", &[&idx], &[]);
     }
 
+    #[test]
+    fn call_owned_steals_dead_input_storage() {
+        // Large enough to run the parallel in-place Fast path.
+        let n = 100_000;
+        let a = Tensor::from_vec(vec![1.0f32; n], &[n]);
+        let b = Tensor::from_vec(vec![2.0f32; n], &[n]);
+        let ptr = a.storage().ptr() as usize;
+        let (_, hits_before) = output_reuse_stats();
+        let out = call_owned("add", vec![a, b], &[]);
+        assert_eq!(out.storage().ptr() as usize, ptr, "output must steal a's buffer");
+        let v = out.to_vec::<f32>();
+        assert!(v.iter().all(|&x| x == 3.0));
+        assert!(output_reuse_stats().1 > hits_before);
+    }
+
+    #[test]
+    fn call_owned_never_steals_live_or_recorded_inputs() {
+        let a = Tensor::from_vec(vec![1.0f32; 4096], &[4096]);
+        let keep = a.clone();
+        let b = Tensor::from_vec(vec![2.0f32; 4096], &[4096]);
+        let out = call_owned("add", vec![a, b.clone()], &[]);
+        // `keep` still references `a` and `b` was cloned: neither may be
+        // clobbered, the caller's data stays intact.
+        assert!(!out.shares_storage(&keep) && !out.shares_storage(&b));
+        assert!(keep.to_vec::<f32>().iter().all(|&x| x == 1.0));
+        assert!(out.to_vec::<f32>().iter().all(|&x| x == 3.0));
+
+        // Autograd recording disables stealing even for a moved-in sole
+        // owner (backward may need the input / saved output).
+        let g = Tensor::from_vec(vec![-1.0f32; 4096], &[4096]).requires_grad(true);
+        let out = call_owned("relu", vec![g], &[]);
+        assert!(out.grad_fn().is_some());
+        assert!(out.to_vec::<f32>().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn call_owned_skips_broadcast_and_mixed_dtype() {
+        let a = Tensor::from_vec(vec![1.0f32; 64 * 64], &[64, 64]);
+        let aptr = a.storage().ptr() as usize;
+        let row = Tensor::from_vec(vec![1.0f32; 64], &[64]);
+        let out = call_owned("add", vec![a, row], &[]);
+        assert_ne!(out.storage().ptr() as usize, aptr, "broadcast op must not steal");
+
+        let x = Tensor::from_vec(vec![1.0f32; 256], &[256]);
+        let xptr = x.storage().ptr() as usize;
+        let y = Tensor::from_vec(vec![1.0f64; 256], &[256]);
+        let out = call_owned("add", vec![x, y], &[]);
+        assert_eq!(out.dtype(), DType::F64);
+        assert_ne!(out.storage().ptr() as usize, xptr, "promoting op must not steal");
+    }
 }

@@ -34,7 +34,10 @@ fn k_batch_norm_eval(ctx: &OpCtx) -> Tensor {
         ctx.input(4).detach().reshape(&cshape),
     );
     let centered = ops::sub(input, &mean);
-    let inv_std = ops::pow_scalar(&ops::add_scalar(&var, eps), -0.5);
+    // The add_scalar temp is dead after the pow: in eval mode (no
+    // recording) the 1/sqrt(var+eps) chain computes in one buffer.
+    let inv_std =
+        super::call_owned("pow_scalar", vec![ops::add_scalar(&var, eps)], &[super::Param::F32(-0.5)]);
     let xhat = ops::mul(&centered, &inv_std);
     let g = ctx.input(1).reshape(&cshape);
     let b = ctx.input(2).reshape(&cshape);
@@ -146,10 +149,14 @@ fn k_layer_norm(ctx: &OpCtx) -> Tensor {
     let last = input.ndim() - 1;
     let d = input.size(last);
     torsk_assert!(gamma.shape() == [d] && beta.shape() == [d], "layer_norm: affine shape");
+    // Row statistics run through the deterministic parallel reduction
+    // driver (`iter::run_reduce` behind `mean_dims`): one task per block
+    // of rows, so layer-norm is row-parallel at any size.
     let mean = ops::mean_dims(input, &[last], true);
     let centered = ops::sub(input, &mean);
     let var = ops::mean_dims(&ops::mul(&centered, &centered), &[last], true);
-    let inv_std = ops::pow_scalar(&ops::add_scalar(&var, eps), -0.5);
+    let inv_std =
+        super::call_owned("pow_scalar", vec![ops::add_scalar(&var, eps)], &[super::Param::F32(-0.5)]);
     let xhat = ops::mul(&centered, &inv_std);
     ops::add(&ops::mul(&xhat, gamma), beta)
 }

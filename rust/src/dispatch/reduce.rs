@@ -9,7 +9,7 @@ use crate::tensor::{DType, Element, Tensor};
 use crate::{torsk_assert, torsk_bail};
 
 use super::elementwise::FLOATS;
-use super::iter::linear_suffix;
+use super::iter::{self, linear_suffix};
 use super::{OpCtx, OpDef, Registry};
 
 // ---------------------------------------------------------------------
@@ -29,7 +29,7 @@ pub(crate) fn sum_to_shape(a: &Tensor, target: &[usize]) -> Tensor {
 
 fn sum_to_shape_t<T>(a: &Tensor, target: &[usize]) -> Tensor
 where
-    T: Element + std::ops::AddAssign,
+    T: Element + std::ops::AddAssign + std::ops::Add<Output = T>,
 {
     let a = a.contiguous();
     let src_shape = a.shape().to_vec();
@@ -62,34 +62,97 @@ where
 
     let (ap, op) = (a.data_ptr(), out.data_ptr());
     let on = numel(target);
+
+    // Full reduction to a single element: deterministic fixed-chunk
+    // partials combined in order (see iter::run_reduce_flat) — parallel
+    // at any size, bit-identical at any thread count.
+    if on == 1 {
+        device::dispatch(a.device(), "sum_to", move || {
+            let total = iter::run_reduce_flat::<T, T, _, _>(
+                n,
+                ap,
+                T::default(),
+                |acc, v| acc + v,
+                |x, y| x + y,
+            );
+            unsafe {
+                op.as_mut_slice::<T>(0, 1)[0] = total;
+            }
+        });
+        return out;
+    }
+
     // §Perf: like the elementwise TensorIter, handle a trailing linear run
     // specially — if the output does not advance over the suffix (reduced
     // dims), the inner loop is a vectorizable sum; if it advances
-    // contiguously, it is a vectorizable elementwise accumulate.
+    // contiguously, it is a vectorizable elementwise accumulate. Both run
+    // parallel with thread-count-invariant accumulation order.
     let rank = src_shape.len();
     let src_contig = contiguous_strides(&src_shape);
     let (t, _sa, step_o) = linear_suffix(&src_shape, &src_contig, &ostrides);
     let inner: usize = src_shape[rank - t..].iter().product();
     if t > 0 && inner > 1 {
-        let outer_shape = src_shape[..rank - t].to_vec();
-        let outer_so = ostrides[..rank - t].to_vec();
+        let r = rank - t;
+        let outer: usize = src_shape[..r].iter().product();
+
+        // Row reduction (softmax/layer-norm statistics, sum over trailing
+        // dims): every outer dim is kept, so out[o] is owned by exactly
+        // one task and folded serially in index order.
+        if step_o == 0 && padded[..r] == src_shape[..r] {
+            device::dispatch(a.device(), "sum_to", move || {
+                iter::run_reduce::<T, T, _, _>(
+                    outer,
+                    inner,
+                    ap,
+                    op,
+                    T::default(),
+                    |acc, v| acc + v,
+                    |acc| acc,
+                );
+            });
+            return out;
+        }
+
+        // Column reduction (sum over leading dims): the output advances
+        // contiguously over the suffix while outer steps fold into it.
+        // Parallelize over *columns*: each task owns suffix range
+        // [i0, i1) and walks every outer step serially in odometer order,
+        // so each output element's accumulation order never depends on
+        // the thread count.
+        if step_o == 1 {
+            let outer_shape = src_shape[..r].to_vec();
+            let outer_so = ostrides[..r].to_vec();
+            let grain_cols = (crate::kernels::SERIAL_GRAIN / outer.max(1)).max(1);
+            device::dispatch(a.device(), "sum_to", move || {
+                crate::kernels::parallel_for(inner, grain_cols, |i0, i1| unsafe {
+                    let av = ap.as_slice::<T>(0, n);
+                    let io = StridedIter::new(&outer_shape, &outer_so);
+                    for (step, ooff) in io.enumerate() {
+                        let dst = op.as_mut_slice::<T>(ooff + i0, i1 - i0);
+                        let src = &av[step * inner + i0..step * inner + i1];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v;
+                        }
+                    }
+                });
+            });
+            return out;
+        }
+
+        // Mixed case (suffix reduced but some outer dim reduced too):
+        // rare; serial suffix walk.
+        let outer_shape = src_shape[..r].to_vec();
+        let outer_so = ostrides[..r].to_vec();
         device::dispatch(a.device(), "sum_to", move || unsafe {
             let av = ap.as_slice::<T>(0, n);
             let ov = op.as_mut_slice::<T>(0, on);
             let io = StridedIter::new(&outer_shape, &outer_so);
             for (chunk, ooff) in av.chunks(inner).zip(io) {
-                if step_o == 0 {
-                    let mut acc = T::default();
-                    for &v in chunk {
-                        acc += v;
-                    }
-                    ov[ooff] += acc;
-                } else {
-                    let dst = &mut ov[ooff..ooff + inner];
-                    for (d, &v) in dst.iter_mut().zip(chunk) {
-                        *d += v;
-                    }
+                let mut acc = T::default();
+                for &v in chunk {
+                    acc += v;
                 }
+                ov[ooff] += acc;
             }
         });
         return out;
@@ -182,8 +245,10 @@ fn bw_sum_dims(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
 
 /// Dispatch a full-precision scalar multiply (the `1/n` of a mean): the
 /// factor travels as `Param::F64` so F64 tensors never see an f32 round.
-fn scale_full_precision(t: &Tensor, s: f64) -> Tensor {
-    super::call("mul_scalar", &[t], &[super::Param::F64(s)])
+/// Takes the tensor by value — the intermediate sum is dead after the
+/// scale, so the dispatcher computes the mean in the sum's own buffer.
+fn scale_full_precision(t: Tensor, s: f64) -> Tensor {
+    super::call_owned("mul_scalar", vec![t], &[super::Param::F64(s)])
 }
 
 /// Composite: mean = sum * (1/n). The inner dispatched ops build the
@@ -191,7 +256,7 @@ fn scale_full_precision(t: &Tensor, s: f64) -> Tensor {
 fn k_mean(ctx: &OpCtx) -> Tensor {
     let a = ctx.input(0);
     let n = a.numel().max(1) as f64;
-    scale_full_precision(&crate::ops::sum(a), 1.0 / n)
+    scale_full_precision(crate::ops::sum(a), 1.0 / n)
 }
 
 /// Composite: mean over dims. A 0-sized reduced dim yields zeros (the sum)
@@ -202,7 +267,7 @@ fn k_mean_dims(ctx: &OpCtx) -> Tensor {
     let keepdim = ctx.bool(1);
     let count: usize = dims.iter().map(|&d| a.size(d)).product();
     let s = crate::ops::sum_dims(a, dims, keepdim);
-    scale_full_precision(&s, 1.0 / count.max(1) as f64)
+    scale_full_precision(s, 1.0 / count.max(1) as f64)
 }
 
 fn max_all_t<T: Element>(ctx: &OpCtx, a: &Tensor) -> Tensor {

@@ -8,8 +8,6 @@
 
 use super::parallel_for;
 
-/// Rows of A processed per parallel task.
-const MR_BLOCK: usize = 32;
 /// K-panel size kept hot in cache.
 const KC: usize = 256;
 
@@ -36,9 +34,17 @@ pub fn sgemm(m: usize, n: usize, k: usize, alpha: f32, a: &[f32], b: &[f32], bet
 
     // SAFETY: parallel tasks write disjoint row-ranges of C.
     let c_addr = c.as_mut_ptr() as usize;
+    // Grain: tiny problems run serially; everything else splits into
+    // ceil(m / num_threads())-row tasks. Deriving the grain from `m` and
+    // the thread count — instead of a fixed ROWS_PER_TASK floor — keeps
+    // tall-skinny matmuls (m ≈ thread count) from leaving cores idle.
     let flops = 2 * m * n * k;
-    let grain_rows = (MR_BLOCK).max(m * super::PAR_GRAIN / flops.max(1)).min(m);
-    parallel_for(m, grain_rows.max(1), move |row_start, row_end| {
+    let grain_rows = if flops <= 2 * super::SERIAL_GRAIN {
+        m
+    } else {
+        m.div_ceil(super::num_threads()).max(1)
+    };
+    parallel_for(m, grain_rows, move |row_start, row_end| {
         let c = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f32, m * n) };
         for i in row_start..row_end {
             let crow = &mut c[i * n..(i + 1) * n];
@@ -253,6 +259,20 @@ mod tests {
     fn matches_reference_medium_parallel() {
         check(128, 96, 200, 5);
         check(257, 129, 300, 6); // odd sizes cross block boundaries
+    }
+
+    #[test]
+    fn shape_sweep_tall_skinny_and_odd() {
+        // Tall-skinny / tiny-m shapes the old fixed ROWS_PER_TASK grain
+        // served with a single task; the grain now derives from m and
+        // num_threads(), so every shape must still match the reference.
+        let mut seed = 100;
+        for &m in &[1usize, 2, 3, 4, 7, 8, 9, 15, 16, 31, 33, 100] {
+            for &(n, k) in &[(64usize, 64usize), (33, 129), (256, 16)] {
+                seed += 1;
+                check(m, n, k, seed);
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,24 @@
 //! inline on the host (CPU tensors) or inside a stream worker (simulated
 //! device). A small persistent thread pool parallelizes the heavy ones;
 //! the "basic parallel primitives" of the paper's C++ core (§5.1).
+//!
+//! # Thread-count control
+//!
+//! The pool is sized once, at first use, from (in priority order):
+//!
+//! 1. `PALLAS_NUM_THREADS` — the supported override, mirroring
+//!    `OMP_NUM_THREADS` for the vendor-library pools PyTorch wraps;
+//! 2. `TORSK_KERNEL_THREADS` — legacy alias, kept for compatibility;
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! [`num_threads`] reports the *effective* count used to split
+//! [`parallel_for`] ranges. Tests and benchmarks may lower or raise it at
+//! runtime with [`set_num_threads`]; this changes only how work is
+//! chunked — the spawned workers persist — so it is cheap to sweep thread
+//! counts inside one process. All reduction kernels are written so results
+//! are bit-for-bit identical at every thread count (fixed-size chunks /
+//! one-owner-per-output; see `dispatch` module docs), which makes the
+//! override safe even when tests run concurrently.
 
 pub mod conv;
 pub mod matmul;
@@ -15,6 +33,7 @@ pub mod pool;
 pub mod softmax;
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send>;
@@ -62,7 +81,10 @@ impl ThreadPool {
 
 fn pool() -> &'static ThreadPool {
     static POOL: once_cell::sync::Lazy<ThreadPool> = once_cell::sync::Lazy::new(|| {
-        let n = std::env::var("TORSK_KERNEL_THREADS")
+        // PALLAS_NUM_THREADS is the documented knob (read once, here);
+        // TORSK_KERNEL_THREADS is the legacy alias.
+        let n = std::env::var("PALLAS_NUM_THREADS")
+            .or_else(|_| std::env::var("TORSK_KERNEL_THREADS"))
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or_else(|| {
@@ -74,13 +96,33 @@ fn pool() -> &'static ThreadPool {
     &POOL
 }
 
-/// Number of kernel worker threads.
+/// Runtime override of the effective thread count (0 = pool default).
+static EFFECTIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of kernel threads [`parallel_for`] splits work across: the
+/// `PALLAS_NUM_THREADS`-sized pool, unless overridden by
+/// [`set_num_threads`].
 pub fn num_threads() -> usize {
-    pool().workers
+    match EFFECTIVE_THREADS.load(Ordering::Relaxed) {
+        0 => pool().workers,
+        n => n,
+    }
 }
 
-/// Work below this many "items" runs inline — parallelism has overhead.
-pub const PAR_GRAIN: usize = 16 * 1024;
+/// Test/bench-only hook: override the effective thread count at runtime.
+/// Values are clamped to `[1, 1024]`; `set_num_threads(0)` restores the
+/// pool default. Affects only how ranges are chunked — workers beyond the
+/// pool size are emulated by queueing extra chunks, so sweeping `1, 2, 8`
+/// works on any machine. Process-global; results stay deterministic under
+/// concurrent changes because every reduction is thread-count-invariant.
+pub fn set_num_threads(n: usize) {
+    EFFECTIVE_THREADS.store(n.min(1024), Ordering::Relaxed);
+}
+
+/// Element count below which the TensorIter / reduction drivers stay
+/// serial: splitting ~32k-element loops across the pool costs more in
+/// wakeups than it saves (measured on the elementwise chain bench).
+pub const SERIAL_GRAIN: usize = 32 * 1024;
 
 /// Split `0..n` into chunks and run `f(start, end)` on the pool, blocking
 /// until every chunk completes. `f` must be safe to run concurrently on
@@ -92,7 +134,7 @@ where
     if n == 0 {
         return;
     }
-    let workers = pool().workers;
+    let workers = num_threads();
     if n <= grain || workers <= 1 {
         f(0, n);
         return;
@@ -200,6 +242,25 @@ mod tests {
         });
         let serial: f64 = data.iter().map(|&x| x as f64).sum();
         assert_eq!(*total.lock().unwrap(), serial);
+    }
+
+    #[test]
+    fn set_num_threads_override_roundtrip() {
+        let default = num_threads();
+        assert!(default >= 1);
+        set_num_threads(2);
+        assert_eq!(num_threads(), 2);
+        // Coverage stays exact while the override is active.
+        let n = 50_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 1000, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        set_num_threads(0);
+        assert_eq!(num_threads(), default);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -1,40 +1,49 @@
 //! Fused batch-norm kernels (§Perf): the compositional BN built from
 //! broadcast ops costs ~16 full-tensor passes forward+backward; these
 //! kernels do it in 5 (stats, normalize; bwd: two reductions, one dx pass).
+//!
+//! Reductions parallelize over *channels* (each channel folded serially,
+//! in image order, by exactly one task) and elementwise passes over
+//! (image, channel) blocks — both layouts make results bit-for-bit
+//! identical at every thread count, like the rest of the reduction stack.
+
+use super::{parallel_for, SERIAL_GRAIN};
+
+/// Channels per task so one task covers ~[`SERIAL_GRAIN`] elements.
+fn channel_grain(n: usize, hw: usize) -> usize {
+    (SERIAL_GRAIN / (n * hw).max(1)).max(1)
+}
 
 /// Per-channel mean/var over N,H,W of an NCHW tensor.
 pub fn bn_stats(n: usize, c: usize, hw: usize, x: &[f32], mean: &mut [f32], var: &mut [f32]) {
     let m = (n * hw) as f32;
-    mean.fill(0.0);
-    var.fill(0.0);
-    for img in 0..n {
-        for ch in 0..c {
-            let base = (img * c + ch) * hw;
+    let mean_addr = mean.as_mut_ptr() as usize;
+    let var_addr = var.as_mut_ptr() as usize;
+    parallel_for(c, channel_grain(n, hw), move |c0, c1| {
+        // SAFETY: tasks own disjoint channel ranges of mean/var.
+        let mean = unsafe { std::slice::from_raw_parts_mut(mean_addr as *mut f32, c) };
+        let var = unsafe { std::slice::from_raw_parts_mut(var_addr as *mut f32, c) };
+        for ch in c0..c1 {
             let mut acc = 0f32;
-            for &v in &x[base..base + hw] {
-                acc += v;
+            for img in 0..n {
+                let base = (img * c + ch) * hw;
+                for &v in &x[base..base + hw] {
+                    acc += v;
+                }
             }
-            mean[ch] += acc;
-        }
-    }
-    for v in mean.iter_mut() {
-        *v /= m;
-    }
-    for img in 0..n {
-        for ch in 0..c {
-            let base = (img * c + ch) * hw;
-            let mu = mean[ch];
-            let mut acc = 0f32;
-            for &v in &x[base..base + hw] {
-                let d = v - mu;
-                acc += d * d;
+            let mu = acc / m;
+            let mut vacc = 0f32;
+            for img in 0..n {
+                let base = (img * c + ch) * hw;
+                for &v in &x[base..base + hw] {
+                    let d = v - mu;
+                    vacc += d * d;
+                }
             }
-            var[ch] += acc;
+            mean[ch] = mu;
+            var[ch] = vacc / m;
         }
-    }
-    for v in var.iter_mut() {
-        *v /= m;
-    }
+    });
 }
 
 /// y = (x - mean) * inv_std * gamma + beta, one pass.
@@ -50,16 +59,22 @@ pub fn bn_normalize(
     beta: &[f32],
     y: &mut [f32],
 ) {
-    for img in 0..n {
-        for ch in 0..c {
-            let base = (img * c + ch) * hw;
+    let y_addr = y.as_mut_ptr() as usize;
+    let y_len = y.len();
+    let grain = (SERIAL_GRAIN / hw.max(1)).max(1);
+    parallel_for(n * c, grain, move |b0, b1| {
+        // SAFETY: tasks own disjoint (image, channel) blocks of y.
+        let y = unsafe { std::slice::from_raw_parts_mut(y_addr as *mut f32, y_len) };
+        for b in b0..b1 {
+            let ch = b % c;
+            let base = b * hw;
             let scale = inv_std[ch] * gamma[ch];
             let shift = beta[ch] - mean[ch] * scale;
             for (o, &v) in y[base..base + hw].iter_mut().zip(&x[base..base + hw]) {
                 *o = v * scale + shift;
             }
         }
-    }
+    });
 }
 
 /// Backward: given g = dL/dy, produce dx, dgamma, dbeta.
@@ -79,29 +94,43 @@ pub fn bn_backward(
     dbeta: &mut [f32],
 ) {
     let m = (n * hw) as f32;
-    dgamma.fill(0.0);
-    dbeta.fill(0.0);
-    // Pass 1: per-channel sums of g and g*xhat.
-    for img in 0..n {
-        for ch in 0..c {
-            let base = (img * c + ch) * hw;
+    // Pass 1: per-channel sums of g and g*xhat — channel-parallel, each
+    // channel folded serially in image order (deterministic).
+    let dg_addr = dgamma.as_mut_ptr() as usize;
+    let db_addr = dbeta.as_mut_ptr() as usize;
+    parallel_for(c, channel_grain(n, hw), move |c0, c1| {
+        // SAFETY: tasks own disjoint channel ranges of dgamma/dbeta.
+        let dgamma = unsafe { std::slice::from_raw_parts_mut(dg_addr as *mut f32, c) };
+        let dbeta = unsafe { std::slice::from_raw_parts_mut(db_addr as *mut f32, c) };
+        for ch in c0..c1 {
             let (mu, istd) = (mean[ch], inv_std[ch]);
             let (mut sg, mut sgx) = (0f32, 0f32);
-            for (&gv, &xv) in g[base..base + hw].iter().zip(&x[base..base + hw]) {
-                sg += gv;
-                sgx += gv * (xv - mu) * istd;
+            for img in 0..n {
+                let base = (img * c + ch) * hw;
+                for (&gv, &xv) in g[base..base + hw].iter().zip(&x[base..base + hw]) {
+                    sg += gv;
+                    sgx += gv * (xv - mu) * istd;
+                }
             }
-            dbeta[ch] += sg;
-            dgamma[ch] += sgx;
+            dbeta[ch] = sg;
+            dgamma[ch] = sgx;
         }
-    }
-    // Pass 2: dx.
-    for img in 0..n {
-        for ch in 0..c {
-            let base = (img * c + ch) * hw;
+    });
+    // Pass 2: dx — pure map over (image, channel) blocks.
+    let dx_addr = dx.as_mut_ptr() as usize;
+    let dx_len = dx.len();
+    let dbeta_ro: &[f32] = dbeta;
+    let dgamma_ro: &[f32] = dgamma;
+    let grain = (SERIAL_GRAIN / hw.max(1)).max(1);
+    parallel_for(n * c, grain, move |b0, b1| {
+        // SAFETY: tasks own disjoint (image, channel) blocks of dx.
+        let dx = unsafe { std::slice::from_raw_parts_mut(dx_addr as *mut f32, dx_len) };
+        for b in b0..b1 {
+            let ch = b % c;
+            let base = b * hw;
             let (mu, istd, gam) = (mean[ch], inv_std[ch], gamma[ch]);
-            let k1 = dbeta[ch] / m;
-            let k2 = dgamma[ch] / m;
+            let k1 = dbeta_ro[ch] / m;
+            let k2 = dgamma_ro[ch] / m;
             let scale = gam * istd;
             for ((o, &gv), &xv) in
                 dx[base..base + hw].iter_mut().zip(&g[base..base + hw]).zip(&x[base..base + hw])
@@ -110,7 +139,7 @@ pub fn bn_backward(
                 *o = scale * (gv - k1 - xhat * k2);
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]

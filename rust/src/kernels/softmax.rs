@@ -1,13 +1,23 @@
 //! Row-wise softmax / log-softmax and fused cross-entropy kernels.
-//! Numerically stable (max-subtraction), parallel over rows.
+//! Numerically stable (max-subtraction), parallel over rows. Every row is
+//! processed serially by exactly one task, so results are bit-for-bit
+//! identical at any thread count; the loss accumulation in
+//! [`cross_entropy_forward`] uses fixed-width row chunks for the same
+//! guarantee.
 
-use super::parallel_for;
+use super::{parallel_for, SERIAL_GRAIN};
+
+/// Rows per task such that a task covers ~[`SERIAL_GRAIN`] elements —
+/// serial for small inputs, saturating the pool for ≥1M-element softmax.
+fn row_grain(cols: usize) -> usize {
+    (SERIAL_GRAIN / cols.max(1)).max(1)
+}
 
 /// Softmax over the last dimension: `input`/`out` are [rows, cols].
 pub fn softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
-    parallel_for(rows, 64, move |r0, r1| {
+    parallel_for(rows, row_grain(cols), move |r0, r1| {
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         for r in r0..r1 {
             let x = &input[r * cols..(r + 1) * cols];
@@ -32,7 +42,7 @@ pub fn softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
 pub fn softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f32], grad_in: &mut [f32]) {
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
-    parallel_for(rows, 64, move |r0, r1| {
+    parallel_for(rows, row_grain(cols), move |r0, r1| {
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let yr = &y[r * cols..(r + 1) * cols];
@@ -50,7 +60,7 @@ pub fn softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f3
 pub fn log_softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
-    parallel_for(rows, 64, move |r0, r1| {
+    parallel_for(rows, row_grain(cols), move |r0, r1| {
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         for r in r0..r1 {
             let x = &input[r * cols..(r + 1) * cols];
@@ -73,7 +83,7 @@ pub fn log_softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]
 pub fn log_softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f32], grad_in: &mut [f32]) {
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
-    parallel_for(rows, 64, move |r0, r1| {
+    parallel_for(rows, row_grain(cols), move |r0, r1| {
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let yr = &y[r * cols..(r + 1) * cols];
@@ -98,12 +108,33 @@ pub fn cross_entropy_forward(
     log_probs: &mut [f32],
 ) -> f32 {
     log_softmax_rows(rows, cols, logits, log_probs);
-    let mut loss = 0f64;
-    for r in 0..rows {
-        let t = targets[r];
-        assert!((0..cols as i64).contains(&t), "target {t} out of range 0..{cols}");
-        loss -= log_probs[r * cols + t as usize] as f64;
+    // Validate every target on the caller thread *before* fanning out: a
+    // panic inside a pool-worker chunk would be swallowed by the pool's
+    // unwind handling and turn into a silently wrong loss.
+    for (r, &t) in targets.iter().enumerate().take(rows) {
+        assert!((0..cols as i64).contains(&t), "target {t} (row {r}) out of range 0..{cols}");
     }
+    // Deterministic parallel accumulation: fixed-width row chunks (never a
+    // function of the thread count) summed per-chunk, then combined in
+    // chunk order.
+    const ROW_CHUNK: usize = 4096;
+    let nchunks = rows.div_ceil(ROW_CHUNK).max(1);
+    let mut partials = vec![0f64; nchunks];
+    let pp = partials.as_mut_ptr() as usize;
+    let lp: &[f32] = log_probs;
+    parallel_for(nchunks, 1, move |c0, c1| {
+        for c in c0..c1 {
+            let r0 = c * ROW_CHUNK;
+            let r1 = ((c + 1) * ROW_CHUNK).min(rows);
+            let mut acc = 0f64;
+            for r in r0..r1 {
+                acc -= lp[r * cols + targets[r] as usize] as f64;
+            }
+            // SAFETY: each chunk index is written by exactly one task.
+            unsafe { std::ptr::write((pp as *mut f64).add(c), acc) };
+        }
+    });
+    let loss: f64 = partials.iter().sum();
     (loss / rows as f64) as f32
 }
 
@@ -119,7 +150,7 @@ pub fn cross_entropy_backward(
     let scale = grad_scalar / rows as f32;
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
-    parallel_for(rows, 64, move |r0, r1| {
+    parallel_for(rows, row_grain(cols), move |r0, r1| {
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let lp = &log_probs[r * cols..(r + 1) * cols];

@@ -214,6 +214,74 @@ impl std::ops::Mul<&Tensor> for f32 {
     }
 }
 
+// ------------------------------------------------------------------
+// Owned-operand overloads: `a + b` / `a + &b` where `a: Tensor` moves the
+// operand into `dispatch::call_owned`, proving it dead so the output can
+// steal its storage (allocation-free chains: `(x * 2.0 + &bias).relu()`-
+// style expressions reuse one buffer end to end when not recording).
+// Borrowed operands are cloned, which automatically disqualifies them
+// from donation — semantics are identical to the `&a ⊕ &b` forms.
+// ------------------------------------------------------------------
+
+use crate::dispatch::{call_owned, Param};
+
+macro_rules! owned_binary_overload {
+    ($trait:ident, $method:ident, $op:literal) => {
+        impl std::ops::$trait<Tensor> for Tensor {
+            type Output = Tensor;
+            fn $method(self, rhs: Tensor) -> Tensor {
+                call_owned($op, vec![self, rhs], &[])
+            }
+        }
+        impl std::ops::$trait<&Tensor> for Tensor {
+            type Output = Tensor;
+            fn $method(self, rhs: &Tensor) -> Tensor {
+                call_owned($op, vec![self, rhs.clone()], &[])
+            }
+        }
+    };
+}
+
+owned_binary_overload!(Add, add, "add");
+owned_binary_overload!(Sub, sub, "sub");
+owned_binary_overload!(Mul, mul, "mul");
+owned_binary_overload!(Div, div, "div");
+
+impl std::ops::Neg for Tensor {
+    type Output = Tensor;
+    fn neg(self) -> Tensor {
+        call_owned("neg", vec![self], &[])
+    }
+}
+
+impl std::ops::Add<f32> for Tensor {
+    type Output = Tensor;
+    fn add(self, rhs: f32) -> Tensor {
+        call_owned("add_scalar", vec![self], &[Param::F32(rhs)])
+    }
+}
+
+impl std::ops::Sub<f32> for Tensor {
+    type Output = Tensor;
+    fn sub(self, rhs: f32) -> Tensor {
+        call_owned("add_scalar", vec![self], &[Param::F32(-rhs)])
+    }
+}
+
+impl std::ops::Mul<f32> for Tensor {
+    type Output = Tensor;
+    fn mul(self, rhs: f32) -> Tensor {
+        call_owned("mul_scalar", vec![self], &[Param::F32(rhs)])
+    }
+}
+
+impl std::ops::Div<f32> for Tensor {
+    type Output = Tensor;
+    fn div(self, rhs: f32) -> Tensor {
+        call_owned("mul_scalar", vec![self], &[Param::F32(1.0 / rhs)])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +317,28 @@ mod tests {
         let y = &(&a * &b) + &c;
         assert_eq!(y.to_vec::<f32>(), vec![10.0]);
         y.backward_with(Tensor::ones(&[1]));
+        assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![3.0]);
+    }
+
+    #[test]
+    fn owned_operator_chain_reuses_one_buffer() {
+        let a = Tensor::from_vec(vec![1.0f32; 50_000], &[50_000]);
+        let b = Tensor::from_vec(vec![2.0f32; 50_000], &[50_000]);
+        let ptr = a.storage().ptr() as usize;
+        // Every step moves the chain value in, so the whole expression
+        // computes in a's original buffer.
+        let y = (a * &b + 1.0) * 0.5;
+        assert_eq!(y.storage().ptr() as usize, ptr);
+        assert!(y.to_vec::<f32>().iter().all(|&v| v == 1.5));
+    }
+
+    #[test]
+    fn owned_operators_with_grad_keep_graph_and_values() {
+        let a = Tensor::from_slice(&[2.0f32]).requires_grad(true);
+        let b = Tensor::from_slice(&[3.0f32]);
+        let y = a.clone() * &b + 1.0;
+        assert_eq!(y.to_vec::<f32>(), vec![7.0]);
+        y.backward();
         assert_eq!(a.grad().unwrap().to_vec::<f32>(), vec![3.0]);
     }
 

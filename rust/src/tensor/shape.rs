@@ -131,6 +131,29 @@ impl<'a> StridedIter<'a> {
             remaining: numel(shape),
         }
     }
+
+    /// Iterator over `count` offsets beginning at linear position `start`
+    /// (row-major over `shape`). This is what lets parallel kernels hand
+    /// each worker a disjoint `[start, start+count)` slice of an odometer
+    /// walk without replaying the prefix.
+    pub fn starting_at(shape: &'a [usize], strides: &'a [usize], start: usize, count: usize) -> Self {
+        let mut index = vec![0; shape.len()];
+        let mut lin = start;
+        for i in (0..shape.len()).rev() {
+            let d = shape[i];
+            if d > 0 {
+                index[i] = lin % d;
+                lin /= d;
+            }
+        }
+        StridedIter {
+            shape,
+            strides,
+            index,
+            offset: linear_to_offset(start, shape, strides),
+            remaining: count.min(numel(shape).saturating_sub(start)),
+        }
+    }
 }
 
 impl<'a> Iterator for StridedIter<'a> {
@@ -224,6 +247,24 @@ mod tests {
         let strides = [1usize, 2];
         let offs: Vec<usize> = StridedIter::new(&shape, &strides).collect();
         assert_eq!(offs, vec![0, 2, 4, 1, 3, 5]);
+    }
+
+    #[test]
+    fn starting_at_matches_full_walk_in_chunks() {
+        let shape = [3usize, 4, 5];
+        let strides = [1usize, 15, 3]; // deliberately permuted layout
+        let full: Vec<usize> = StridedIter::new(&shape, &strides).collect();
+        for chunk in [1usize, 7, 16, 60, 100] {
+            let mut got = vec![];
+            let mut s = 0;
+            while s < 60 {
+                got.extend(StridedIter::starting_at(&shape, &strides, s, chunk));
+                s += chunk;
+            }
+            assert_eq!(got, full, "chunk={chunk}");
+        }
+        // Starting past the end yields nothing.
+        assert_eq!(StridedIter::starting_at(&shape, &strides, 60, 5).count(), 0);
     }
 
     #[test]

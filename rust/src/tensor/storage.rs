@@ -16,6 +16,7 @@
 //!   to use it if the version moved — the paper's deliberate
 //!   "user error instead of copy-on-write" tradeoff.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -23,6 +24,44 @@ use crate::alloc::{ArcAllocator, Block, StreamId};
 use crate::ctx;
 use crate::device::Device;
 use crate::tensor::dtype::Element;
+
+// ---------------------------------------------------------------------
+// Output-buffer donation (the dispatcher's output-reuse hook)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// A storage donated by `dispatch::call_owned`: the next
+    /// [`Storage::new`] on this thread requesting exactly this
+    /// (nbytes, device, stream) takes it instead of allocating. Armed only
+    /// for the duration of one dispatched op; see the "Threading and
+    /// memory model" section of `crate::dispatch` for the stealing rules.
+    static DONATED: RefCell<Option<Storage>> = RefCell::new(None);
+}
+
+/// Arm the donation slot with a storage proven dead by ownership
+/// (`dispatch::call_owned` moved the last handle in). Replaces any
+/// previous, unconsumed donation.
+pub(crate) fn arm_donation(s: Storage) {
+    DONATED.with(|d| *d.borrow_mut() = Some(s));
+}
+
+/// Clear the donation slot. Returns the storage if the op did *not*
+/// consume it (`None` therefore means the output stole the buffer).
+pub(crate) fn disarm_donation() -> Option<Storage> {
+    DONATED.with(|d| d.borrow_mut().take())
+}
+
+fn take_donated(nbytes: usize, device: Device, stream: StreamId) -> Option<Storage> {
+    DONATED.with(|d| {
+        let mut slot = d.borrow_mut();
+        match &*slot {
+            Some(s) if s.nbytes() == nbytes && s.device() == device && s.stream() == stream => {
+                slot.take()
+            }
+            _ => None,
+        }
+    })
+}
 
 struct StorageImpl {
     block: Block,
@@ -59,8 +98,14 @@ pub struct Storage {
 
 impl Storage {
     /// Allocate `nbytes` on `device` from that device's current allocator,
-    /// bound to `stream`'s pool.
+    /// bound to `stream`'s pool. If the dispatcher armed a donation of
+    /// exactly this size/device/stream, the donated storage is returned
+    /// instead — zero allocator traffic (the output "steals" a dead
+    /// input's buffer).
     pub fn new(nbytes: usize, device: Device, stream: StreamId) -> Storage {
+        if let Some(s) = take_donated(nbytes, device, stream) {
+            return s;
+        }
         let allocator = ctx::allocator_for(device);
         let block = allocator.allocate(nbytes, stream);
         Storage {
@@ -226,6 +271,7 @@ impl SendPtr {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alloc::Allocator;
 
     #[test]
     fn from_slice_roundtrip() {
@@ -261,6 +307,21 @@ mod tests {
         assert!(alloc.stats().in_use_bytes >= before.in_use_bytes + (1 << 16));
         drop(s2);
         assert_eq!(alloc.stats().in_use_bytes, before.in_use_bytes);
+    }
+
+    #[test]
+    fn donation_taken_only_on_exact_match() {
+        let s = Storage::from_slice(&[1.0f32; 256]); // 1024 bytes
+        let ptr = s.ptr() as usize;
+        arm_donation(s.clone());
+        drop(s);
+        // Mismatched size: not taken.
+        let other = Storage::new(2048, Device::Cpu, StreamId::HOST);
+        assert_ne!(other.ptr() as usize, ptr);
+        // Exact (nbytes, device, stream) match: taken, same memory back.
+        let reused = Storage::new(1024, Device::Cpu, StreamId::HOST);
+        assert_eq!(reused.ptr() as usize, ptr);
+        assert!(disarm_donation().is_none(), "slot must be consumed");
     }
 
     #[test]

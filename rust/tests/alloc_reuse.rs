@@ -1,0 +1,87 @@
+//! Allocator caching + dispatcher output-stealing over real workloads.
+//!
+//! Lives in its own integration binary (its own process) so the host
+//! allocator's counters aren't polluted by unrelated test traffic.
+
+use torsk::alloc::Allocator;
+use torsk::nn::{self, Module};
+use torsk::ops;
+use torsk::optim::{Optimizer, Sgd};
+use torsk::Tensor;
+
+fn train_step(model: &nn::Sequential, x: &Tensor, target: &Tensor, opt: &mut Sgd) {
+    let loss = ops::mse_loss(&model.forward(x), target);
+    opt.zero_grad();
+    loss.backward();
+    opt.step();
+}
+
+#[test]
+fn training_loop_hits_allocator_cache() {
+    torsk::rng::manual_seed(3);
+    let model = nn::Sequential::new()
+        .add(nn::Linear::new(64, 32))
+        .add(nn::ReLU)
+        .add(nn::Linear::new(32, 8));
+    let x = Tensor::randn(&[16, 64]);
+    let target = Tensor::randn(&[16, 8]);
+    let mut opt = Sgd::new(model.parameters(), 0.01);
+
+    // Warm-up steps populate the cache (Figure 2's expensive iteration 1).
+    for _ in 0..5 {
+        train_step(&model, &x, &target, &mut opt);
+    }
+
+    let alloc = torsk::ctx::host_allocator();
+    let before = alloc.stats();
+    for _ in 0..100 {
+        train_step(&model, &x, &target, &mut opt);
+    }
+    let d = alloc.stats().delta(&before);
+
+    assert!(
+        d.cache_hits + d.driver_allocs > 0,
+        "expected allocator traffic during the training loop"
+    );
+    let rate = d.cache_hit_rate();
+    assert!(
+        rate > 0.5,
+        "cache hit rate {rate:.3} <= 50% over 100 training iterations \
+         (hits {}, driver allocs {})",
+        d.cache_hits,
+        d.driver_allocs
+    );
+}
+
+#[test]
+fn inference_chain_steals_output_buffers() {
+    let a = Tensor::rand(&[50_000]);
+    let b = Tensor::rand(&[50_000]);
+    let (_, hits_before) = torsk::dispatch::output_reuse_stats();
+    let iters = 10u64;
+    for _ in 0..iters {
+        // `&a * &b` allocates once; the owned `+` and `* 0.5` both steal
+        // the chain buffer, so the whole expression uses one allocation.
+        let t = &a * &b;
+        let t = t + &a;
+        let y = t * 0.5;
+        std::hint::black_box(&y);
+    }
+    let (_, hits_after) = torsk::dispatch::output_reuse_stats();
+    assert!(
+        hits_after - hits_before >= 2 * iters,
+        "expected >= {} stolen outputs, got {}",
+        2 * iters,
+        hits_after - hits_before
+    );
+}
+
+#[test]
+fn stolen_buffers_produce_correct_values() {
+    // The same chain, checked against the borrowing (never-stealing) path.
+    let a = Tensor::rand(&[10_000]);
+    let b = Tensor::rand(&[10_000]);
+    let reference = ops::mul_scalar(&ops::add(&ops::mul(&a, &b), &a), 0.5);
+    let owned = (&a * &b + &a) * 0.5;
+    assert_eq!(reference.to_vec::<f32>(), owned.to_vec::<f32>());
+}

@@ -1,0 +1,124 @@
+//! Determinism guarantees of the parallel kernel stack: every reduction
+//! must be bit-for-bit identical at `PALLAS_NUM_THREADS` = 1, 2 and 8.
+//!
+//! The guarantee is structural, not a property of a lucky schedule:
+//! row/column reductions give each output element exactly one owner that
+//! folds serially in index order, and flat reductions use fixed-width
+//! chunks (`iter::REDUCE_CHUNK`) combined in chunk order — nothing ever
+//! derives a partial-sum boundary from the thread count. That also makes
+//! `set_num_threads` safe to flip concurrently from other tests: these
+//! assertions compare values, never timings.
+
+use torsk::kernels::set_num_threads;
+use torsk::ops;
+use torsk::Tensor;
+
+/// Run `f` at 1, 2 and 8 effective threads, restoring the default after.
+fn at_threads<T>(f: impl Fn() -> T) -> Vec<T> {
+    let out = [1usize, 2, 8]
+        .iter()
+        .map(|&t| {
+            set_num_threads(t);
+            f()
+        })
+        .collect();
+    set_num_threads(0);
+    out
+}
+
+fn assert_all_equal(results: &[Vec<f32>], what: &str) {
+    assert_eq!(results[0], results[1], "{what}: 1 vs 2 threads differ");
+    assert_eq!(results[0], results[2], "{what}: 1 vs 8 threads differ");
+}
+
+#[test]
+fn sum_dims_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(7);
+    // Trailing-dim reduction (row path) — large enough to actually split.
+    let a = Tensor::randn(&[96, 1539]);
+    let rows = at_threads(|| ops::sum_dims(&a, &[1], false).to_vec::<f32>());
+    assert_all_equal(&rows, "sum_dims rows");
+
+    // Leading-dim reduction (column-accumulate path).
+    let b = Tensor::randn(&[513, 640]);
+    let cols = at_threads(|| ops::sum_dims(&b, &[0], false).to_vec::<f32>());
+    assert_all_equal(&cols, "sum_dims cols");
+}
+
+#[test]
+fn full_sum_and_mean_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(11);
+    // Several REDUCE_CHUNKs plus a ragged tail.
+    let a = Tensor::randn(&[(1 << 20) + 17]);
+    let sums = at_threads(|| ops::sum(&a).to_vec::<f32>());
+    assert_all_equal(&sums, "sum");
+    let means = at_threads(|| ops::mean(&a).to_vec::<f32>());
+    assert_all_equal(&means, "mean");
+}
+
+#[test]
+fn softmax_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(13);
+    let x = Tensor::randn(&[333, 257]);
+    let y = at_threads(|| ops::softmax_last(&x).to_vec::<f32>());
+    assert_all_equal(&y, "softmax");
+    let ly = at_threads(|| ops::log_softmax_last(&x).to_vec::<f32>());
+    assert_all_equal(&ly, "log_softmax");
+}
+
+#[test]
+fn mse_loss_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(17);
+    let pred = Tensor::randn(&[1 << 18]);
+    let target = Tensor::randn(&[1 << 18]);
+    let losses = at_threads(|| ops::mse_loss(&pred, &target).to_vec::<f32>());
+    assert_all_equal(&losses, "mse_loss");
+}
+
+#[test]
+fn cross_entropy_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(19);
+    // More rows than one 4096-row loss chunk, so partials really combine.
+    let logits = Tensor::randn(&[9000, 16]);
+    let targets = Tensor::randint(16, &[9000]);
+    let losses = at_threads(|| ops::cross_entropy(&logits, &targets).to_vec::<f32>());
+    assert_all_equal(&losses, "cross_entropy");
+}
+
+#[test]
+fn layer_norm_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(23);
+    let x = Tensor::randn(&[64, 2048]);
+    let gamma = Tensor::ones(&[2048]);
+    let beta = Tensor::zeros(&[2048]);
+    let y = at_threads(|| ops::layer_norm(&x, &gamma, &beta, 1e-5).to_vec::<f32>());
+    assert_all_equal(&y, "layer_norm");
+}
+
+#[test]
+fn elementwise_and_broadcast_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(29);
+    let a = Tensor::randn(&[200_000]);
+    let b = Tensor::randn(&[200_000]);
+    let y = at_threads(|| ops::mul(&a, &b).to_vec::<f32>());
+    assert_all_equal(&y, "mul");
+    let m = Tensor::randn(&[391, 512]);
+    let v = Tensor::randn(&[512]);
+    let s = at_threads(|| ops::add(&m, &v).to_vec::<f32>());
+    assert_all_equal(&s, "broadcast add");
+}
+
+#[test]
+fn backward_gradients_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(31);
+    let x = Tensor::randn(&[128, 513]);
+    let w = Tensor::randn(&[513]);
+    let grads = at_threads(|| {
+        // Fresh leaf per run (shared data, fresh autograd metadata).
+        let leaf = x.detach().requires_grad(true);
+        let y = ops::mul(&leaf, &w); // broadcast
+        ops::sum(&y).backward();
+        leaf.grad().unwrap().to_vec::<f32>()
+    });
+    assert_all_equal(&grads, "broadcast-mul backward");
+}

@@ -132,6 +132,115 @@ fn main() {
         }
     }
 
+    // ---- fused tape kernels vs their unfused compositions ----
+    // The acceptance shape: at 1e6 elements the fused single-pass kernel
+    // must allocate at most one output buffer and beat the composed chain
+    // on ns_per_iter. `fused:*` vs `unfused:*` rows pair up directly.
+    {
+        let fused_sizes: &[usize] = if smoke { &[1 << 12] } else { &[1 << 20] };
+        for &n in fused_sizes {
+            let x = Tensor::randn(&[n]);
+            let t = Tensor::rand(&[n]);
+            let p = ops::sigmoid(&x);
+            let unfused_bce = |p: &Tensor, t: &Tensor| {
+                let eps = 1e-7f32;
+                let pc = ops::clamp(p, eps, 1.0 - eps);
+                let log_p = ops::log(&pc);
+                let log_1p = ops::log(&ops::add_scalar(&ops::neg(&pc), 1.0));
+                let omt = ops::add_scalar(&ops::neg(t), 1.0);
+                let total = ops::add(&ops::mul(t, &log_p), &ops::mul(&omt, &log_1p));
+                ops::neg(&ops::mean(&total))
+            };
+            for &th in &threads {
+                let reps = reps_for(n, smoke);
+                records.push(measure("fused:sigmoid_bce", n, th, reps, || {
+                    std::hint::black_box(ops::bce_with_logits(&x, &t));
+                }));
+                records.push(measure("unfused:sigmoid_bce", n, th, reps, || {
+                    std::hint::black_box(unfused_bce(&ops::sigmoid(&x), &t));
+                }));
+                records.push(measure("fused:mse", n, th, reps, || {
+                    std::hint::black_box(ops::mse_loss(&x, &t));
+                }));
+                records.push(measure("unfused:mse", n, th, reps, || {
+                    let d = ops::sub(&x, &t);
+                    std::hint::black_box(ops::mean(&ops::mul(&d, &d)));
+                }));
+                records.push(measure("fused:bce", n, th, reps, || {
+                    std::hint::black_box(ops::bce_loss(&p, &t));
+                }));
+                records.push(measure("unfused:bce", n, th, reps, || {
+                    std::hint::black_box(unfused_bce(&p, &t));
+                }));
+                records.push(measure("fused:gelu", n, th, reps, || {
+                    std::hint::black_box(ops::gelu(&x));
+                }));
+                records.push(measure("unfused:gelu", n, th, reps, || {
+                    let a = 0.044_715f32;
+                    let c = 0.797_884_56f32;
+                    let x3 = ops::mul(&ops::mul(&x, &x), &x);
+                    let inner = ops::add(&ops::mul_scalar(&x3, a), &x);
+                    let tt = ops::tanh(&ops::mul_scalar(&inner, c));
+                    std::hint::black_box(ops::mul(
+                        &ops::add_scalar(&tt, 1.0),
+                        &ops::mul_scalar(&x, 0.5),
+                    ));
+                }));
+            }
+        }
+        // Layer-norm tail: [R, D] with per-row stats and [D] affine.
+        let (r, d) = if smoke { (16, 64) } else { (1024, 1024) };
+        let c = Tensor::randn(&[r, d]);
+        let is = ops::add_scalar(&Tensor::rand(&[r, 1]), 0.5);
+        let gamma = Tensor::randn(&[d]);
+        let beta = Tensor::randn(&[d]);
+        for &th in &threads {
+            let reps = reps_for(r * d, smoke);
+            records.push(measure("fused:ln_tail", r * d, th, reps, || {
+                let args: [&Tensor; 4] = [&c, &is, &gamma, &beta];
+                std::hint::black_box(dispatch::call("fused:ln_tail", &args, &[]));
+            }));
+            records.push(measure("unfused:ln_tail", r * d, th, reps, || {
+                std::hint::black_box(ops::add(&ops::mul(&ops::mul(&c, &is), &gamma), &beta));
+            }));
+        }
+        // Fused optimizer step vs the composed update (one param tensor).
+        let n = if smoke { 1 << 12 } else { 1 << 20 };
+        let (lr, b1, b2, eps2, wd) = (1e-3f32, 0.9f32, 0.999f32, 1e-8f32, 0.0f32);
+        let (bc1, bc2) = (1.0 - b1, 1.0 - b2);
+        let p1 = Tensor::randn(&[n]);
+        let g1 = Tensor::randn(&[n]);
+        let m1 = Tensor::zeros(&[n]);
+        let v1 = Tensor::zeros(&[n]);
+        let adam_params = [
+            dispatch::Param::F32(lr),
+            dispatch::Param::F32(b1),
+            dispatch::Param::F32(b2),
+            dispatch::Param::F32(eps2),
+            dispatch::Param::F32(wd),
+            dispatch::Param::F32(bc1),
+            dispatch::Param::F32(bc2),
+        ];
+        for &th in &threads {
+            let reps = reps_for(n, smoke);
+            records.push(measure("fused:adam_step", n, th, reps, || {
+                dispatch::call("fused:adam_step", &[&p1, &g1, &m1, &v1], &adam_params);
+            }));
+            records.push(measure("unfused:adam_step", n, th, reps, || {
+                m1.mul_scalar_(b1);
+                m1.axpy_(1.0 - b1, &g1);
+                let g2 = ops::mul(&g1, &g1);
+                v1.mul_scalar_(b2);
+                v1.axpy_(1.0 - b2, &g2);
+                let mhat = ops::mul_scalar(&m1, 1.0 / bc1);
+                let vhat = ops::mul_scalar(&v1, 1.0 / bc2);
+                let denom = ops::add_scalar(&ops::sqrt(&vhat), eps2);
+                let update = ops::div(&mhat, &denom);
+                p1.axpy_(-lr, &update);
+            }));
+        }
+    }
+
     // ---- broadcast add: [R, C] + [C] (Suffix plan) ----
     {
         let (r, c) = if smoke { (64, 64) } else { (1024, 1024) };
@@ -319,6 +428,19 @@ fn main() {
                 b.threads
             ),
             _ => println!("speedup {op}: skipped (no >=1M multi-thread records in this run)"),
+        }
+    }
+    for op in ["sigmoid_bce", "mse", "bce", "gelu", "ln_tail", "adam_step"] {
+        let f = records.iter().find(|r| r.op == format!("fused:{op}") && r.threads == 1);
+        let u = records.iter().find(|r| r.op == format!("unfused:{op}") && r.threads == 1);
+        if let (Some(f), Some(u)) = (f, u) {
+            println!(
+                "fusion {op} @ {} elems: {:.2}x vs unfused at 1 thread ({} vs {} bytes/iter)",
+                f.size,
+                u.ns_per_iter / f.ns_per_iter,
+                f.bytes_allocated,
+                u.bytes_allocated
+            );
         }
     }
 

@@ -17,24 +17,56 @@
 //! scope, as forward-mode is for the paper).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::{accumulate_grad, no_grad, Edge, Node};
 use crate::profiler;
 use crate::tensor::Tensor;
 
+/// Runtime override of the worker count (0 = environment default); lets
+/// tests/benches sweep backward parallelism inside one process, like
+/// [`crate::kernels::set_num_threads`] does for the kernel pool.
+static BACKWARD_THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the number of backward worker threads at runtime.
+/// `set_backward_threads(0)` restores the environment default.
+pub fn set_backward_threads(n: usize) {
+    BACKWARD_THREADS_OVERRIDE.store(n.min(1024), Ordering::Relaxed);
+}
+
+/// Resolve the worker count from the environment: `PALLAS_NUM_THREADS` is
+/// the primary knob shared with the kernel pool, so one variable sizes
+/// both pools consistently; `TORSK_BACKWARD_THREADS` (the legacy
+/// backward-specific name) still wins when set, which is what lets the CI
+/// thread-matrix vary the two pools independently.
+fn threads_from_env(
+    backward: Option<String>,
+    pallas: Option<String>,
+    fallback: usize,
+) -> usize {
+    backward
+        .and_then(|v| v.parse().ok())
+        .or_else(|| pallas.and_then(|v| v.parse().ok()))
+        .unwrap_or(fallback)
+        .max(1)
+}
+
 /// Number of engine worker threads (including the calling thread).
 fn engine_threads() -> usize {
-    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
-        std::env::var("TORSK_BACKWARD_THREADS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
-            })
-            .max(1)
-    });
-    *N
+    match BACKWARD_THREADS_OVERRIDE.load(Ordering::Relaxed) {
+        0 => {
+            static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+                threads_from_env(
+                    std::env::var("TORSK_BACKWARD_THREADS").ok(),
+                    std::env::var("PALLAS_NUM_THREADS").ok(),
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+                )
+            });
+            *N
+        }
+        n => n,
+    }
 }
 
 struct TaskState {
@@ -164,47 +196,82 @@ fn worker(shared: &Shared) {
             }
         };
 
-        // Route gradients along edges.
+        // Route gradients along edges. A `None` gradient routed to an
+        // `Edge::Node` still satisfies one of that node's dependencies:
+        // without the decrement the count never reaches zero and every
+        // worker parks on the condvar forever (the pre-fix deadlock).
         let mut newly_ready: Vec<Arc<Node>> = vec![];
         for (edge, grad) in node.edges.iter().zip(grads.into_iter()) {
-            let Some(grad) = grad else { continue };
             match edge {
                 Edge::None => {}
-                Edge::Leaf(leaf) => accumulate_grad(leaf, grad),
+                Edge::Leaf(leaf) => {
+                    if let Some(grad) = grad {
+                        accumulate_grad(leaf, grad);
+                    }
+                }
                 Edge::Node(next) => {
                     let mut st = shared.state.lock().unwrap();
-                    let buf = st.buffers.remove(&next.id);
-                    // Both operands are owned and dead after the add, so
-                    // the dispatcher folds the accumulation into one of
-                    // the existing gradient buffers (no allocation).
-                    let acc = match buf {
-                        Some(existing) => {
-                            crate::dispatch::call_owned("add", vec![existing, grad], &[])
-                        }
-                        None => grad,
-                    };
-                    st.buffers.insert(next.id, acc);
+                    if let Some(grad) = grad {
+                        let buf = st.buffers.remove(&next.id);
+                        // Both operands are owned and dead after the add,
+                        // so the dispatcher folds the accumulation into one
+                        // of the existing gradient buffers (no allocation).
+                        let acc = match buf {
+                            Some(existing) => {
+                                crate::dispatch::call_owned("add", vec![existing, grad], &[])
+                            }
+                            None => grad,
+                        };
+                        st.buffers.insert(next.id, acc);
+                    }
                     let dep = st.dependencies.get_mut(&next.id).expect("dep counted");
                     *dep -= 1;
                     if *dep == 0 {
-                        newly_ready.push(next.clone());
+                        if st.buffers.contains_key(&next.id) {
+                            newly_ready.push(next.clone());
+                        } else {
+                            // Every consumer contributed `None`: the node
+                            // has no gradient to run on. Complete it (and
+                            // any subgraph that becomes bufferless the same
+                            // way) without executing its backward.
+                            drop_bufferless(&mut st, next.clone(), &mut newly_ready);
+                        }
                     }
                 }
             }
         }
 
         let mut st = shared.state.lock().unwrap();
-        // Unreachable-gradient edges (grad=None into a Node) still satisfy
-        // a dependency: decrement for None grads routed to nodes.
-        for (edge, _) in node.edges.iter().zip(std::iter::repeat(())) {
-            let _ = edge; // dependency bookkeeping for None grads handled below
-        }
         st.outstanding -= 1;
         for n in newly_ready {
             st.ready.push(n);
         }
         shared.cv.notify_all();
     })
+}
+
+/// Retire `start` — whose dependencies all delivered `None` — without
+/// running it, releasing its own edges' dependencies in turn. Nodes that
+/// hit zero with a buffer become ready; nodes that hit zero with no
+/// buffer retire recursively (iteratively, via a worklist).
+fn drop_bufferless(st: &mut TaskState, start: Arc<Node>, ready_out: &mut Vec<Arc<Node>>) {
+    let mut work = vec![start];
+    while let Some(node) = work.pop() {
+        st.outstanding -= 1;
+        for edge in &node.edges {
+            if let Edge::Node(next) = edge {
+                let dep = st.dependencies.get_mut(&next.id).expect("dep counted");
+                *dep -= 1;
+                if *dep == 0 {
+                    if st.buffers.contains_key(&next.id) {
+                        ready_out.push(next.clone());
+                    } else {
+                        work.push(next.clone());
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -281,5 +348,132 @@ mod tests {
             vec![Edge::None],
         );
         run_backward(node, Tensor::from_slice(&[1.0f32]));
+    }
+
+    /// Run `f` under a watchdog: the engine used to hang forever when a
+    /// `None` gradient was routed to an interior node (its dependency
+    /// counter never decremented), so these regressions must *complete*,
+    /// not merely be correct.
+    fn with_watchdog(what: &str, f: impl FnOnce() + Send + 'static) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            f();
+            let _ = tx.send(());
+        });
+        use std::sync::mpsc::RecvTimeoutError;
+        match rx.recv_timeout(std::time::Duration::from_secs(30)) {
+            Ok(()) => {}
+            Err(RecvTimeoutError::Timeout) => panic!("backward hung: {what}"),
+            // The sender dropped without sending: f() panicked — report
+            // that, not a phantom deadlock.
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("backward panicked (not hung): {what}")
+            }
+        }
+    }
+
+    #[test]
+    fn none_grad_into_interior_node_completes() {
+        // root --None--> interior --> leaf. Pre-fix: interior's dependency
+        // count stays at 1, outstanding never drains, all workers park.
+        let leaf = Tensor::zeros(&[1]).requires_grad(true);
+        let leaf2 = leaf.clone();
+        with_watchdog("None grad to interior node leaked its dependency", move || {
+            let interior = Node::new(
+                ClosureFunction::new("interior", |g| vec![Some(g.clone())]),
+                vec![Edge::Leaf(leaf2)],
+            );
+            let root = Node::new(
+                ClosureFunction::new("root_none", |_| vec![None]),
+                vec![Edge::Node(interior)],
+            );
+            run_backward(root, Tensor::from_slice(&[1.0f32]));
+        });
+        // The dropped subgraph never ran: the leaf keeps no gradient.
+        assert!(leaf.grad().is_none());
+    }
+
+    #[test]
+    fn mixed_none_and_some_grads_accumulate_the_some_path() {
+        // root fans out to (a: None, b: Some) which both feed `shared`;
+        // shared must run exactly once with only b's contribution.
+        let leaf = Tensor::zeros(&[1]).requires_grad(true);
+        let leaf2 = leaf.clone();
+        with_watchdog("mixed None/Some diamond did not complete", move || {
+            let shared = Node::new(
+                ClosureFunction::new("shared", |g| vec![Some(g.clone())]),
+                vec![Edge::Leaf(leaf2)],
+            );
+            let a = Node::new(
+                ClosureFunction::new("a_none", |_| vec![None]),
+                vec![Edge::Node(shared.clone())],
+            );
+            let b = Node::new(
+                ClosureFunction::new("b_five", |g| {
+                    vec![Some(crate::ops::mul_scalar(g, 5.0))]
+                }),
+                vec![Edge::Node(shared.clone())],
+            );
+            let root = Node::new(
+                ClosureFunction::new("root", |g| vec![Some(g.clone()), Some(g.clone())]),
+                vec![Edge::Node(a), Edge::Node(b)],
+            );
+            run_backward(root, Tensor::from_slice(&[1.0f32]));
+        });
+        assert_eq!(leaf.grad().unwrap().to_vec::<f32>(), vec![5.0]);
+    }
+
+    #[test]
+    fn dropped_chain_releases_transitive_dependencies() {
+        // root --None--> n2 --> n1 --> leaf: the whole chain retires
+        // without running (transitive bufferless drop), and the pass ends.
+        let leaf = Tensor::zeros(&[1]).requires_grad(true);
+        let leaf2 = leaf.clone();
+        with_watchdog("transitive bufferless drop hung", move || {
+            let n1 = Node::new(
+                ClosureFunction::new("n1", |g| vec![Some(g.clone())]),
+                vec![Edge::Leaf(leaf2)],
+            );
+            let n2 = Node::new(
+                ClosureFunction::new("n2", |g| vec![Some(g.clone())]),
+                vec![Edge::Node(n1)],
+            );
+            let root = Node::new(
+                ClosureFunction::new("root_none", |_| vec![None]),
+                vec![Edge::Node(n2)],
+            );
+            run_backward(root, Tensor::from_slice(&[1.0f32]));
+        });
+        assert!(leaf.grad().is_none());
+    }
+
+    #[test]
+    fn threads_from_env_prefers_backward_then_pallas() {
+        // PALLAS_NUM_THREADS is the shared primary; the backward-specific
+        // variable still overrides it (the CI matrix relies on this).
+        assert_eq!(threads_from_env(None, None, 6), 6);
+        assert_eq!(threads_from_env(None, Some("3".into()), 6), 3);
+        assert_eq!(threads_from_env(Some("2".into()), Some("3".into()), 6), 2);
+        assert_eq!(threads_from_env(Some("2".into()), None, 6), 2);
+        // Garbage values fall through in order.
+        assert_eq!(threads_from_env(Some("x".into()), Some("3".into()), 6), 3);
+        assert_eq!(threads_from_env(Some("0".into()), None, 6), 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn set_backward_threads_roundtrip() {
+        let default = engine_threads();
+        set_backward_threads(2);
+        assert_eq!(engine_threads(), 2);
+        // A small pass still completes under the override.
+        let leaf = Tensor::zeros(&[1]).requires_grad(true);
+        let node = Node::new(
+            ClosureFunction::new("id", |g| vec![Some(g.clone())]),
+            vec![Edge::Leaf(leaf.clone())],
+        );
+        run_backward(node, Tensor::from_slice(&[2.5f32]));
+        assert_eq!(leaf.grad().unwrap().to_vec::<f32>(), vec![2.5]);
+        set_backward_threads(0);
+        assert_eq!(engine_threads(), default);
     }
 }

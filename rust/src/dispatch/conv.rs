@@ -6,7 +6,7 @@ use crate::kernels::conv::{conv2d_backward_input, conv2d_backward_weight, conv2d
 use crate::tensor::{DType, Tensor};
 use crate::torsk_assert;
 
-use super::{OpCtx, OpDef, Registry};
+use super::{OpCtx, OpDef, OpSample, Param, Registry};
 
 fn conv_args(ctx: &OpCtx) -> Conv2dArgs {
     let (input, weight) = (ctx.input(0), ctx.input(1));
@@ -100,6 +100,29 @@ fn bw_conv2d(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     })
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+fn s_conv2d(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // f32-only im2col kernel
+    }
+    let x = super::sample_uniform(seed, &[1, 2, 4, 4], dt, -1.0, 1.0)?;
+    let w = super::sample_uniform(seed ^ 0x1, &[2, 2, 3, 3], dt, -0.5, 0.5)?;
+    let b = super::sample_uniform(seed ^ 0x2, &[2], dt, -0.5, 0.5)?;
+    Some(OpSample {
+        inputs: vec![x, w, b],
+        params: vec![Param::Usize(1), Param::Usize(1), Param::Usize(1)],
+        grad_inputs: vec![0, 1, 2],
+    })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
-    reg.add(OpDef::new("conv2d", 2, 3, &[DType::F32]).kernel_all(k_conv2d).backward(bw_conv2d));
+    reg.add(
+        OpDef::new("conv2d", 2, 3, &[DType::F32])
+            .kernel_all(k_conv2d)
+            .backward(bw_conv2d)
+            .sample_inputs(s_conv2d),
+    );
 }

@@ -12,7 +12,9 @@ use crate::tensor::{DType, Element, Tensor};
 use crate::{torsk_assert, torsk_bail};
 
 use super::iter::{self, TensorIter};
-use super::{same_device, OpCtx, OpDef, Registry};
+use super::{
+    same_device, sample_away_from_zero, sample_uniform, OpCtx, OpDef, OpSample, Param, Registry,
+};
 
 pub(crate) const FLOATS: &[DType] = &[DType::F32, DType::F64];
 pub(crate) const NUMERIC: &[DType] = &[DType::F32, DType::F64, DType::I64];
@@ -494,6 +496,106 @@ fn bw_cast(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
 }
 
 // ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+/// Second-operand shape: same-shape on even seeds, a row broadcast on odd
+/// seeds, so gradcheck covers the broadcast-reduction backward too.
+fn rhs_shape(seed: u64) -> &'static [usize] {
+    if seed % 2 == 0 {
+        &[2, 5]
+    } else {
+        &[5]
+    }
+}
+
+fn s_binary(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[2, 5], dt, -1.5, 1.5)?;
+    let b = sample_uniform(seed ^ 0xB0B, rhs_shape(seed), dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_div(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[2, 5], dt, -1.5, 1.5)?;
+    // Denominator bounded away from zero.
+    let b = sample_away_from_zero(seed ^ 0xB0B, rhs_shape(seed), dt, 0.5, 1.5)?;
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_maximum(seed: u64, dt: DType) -> Option<OpSample> {
+    // Operands never tie: b = a + (sign * [0.3, 1.3)).
+    let a = sample_uniform(seed, &[2, 5], dt, -1.5, 1.5)?;
+    let d = sample_away_from_zero(seed ^ 0xD1F, &[2, 5], dt, 0.3, 1.0)?;
+    let b = raw_add(&a, &d);
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_eq(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[6], dt, -1.0, 1.0)?;
+    let b = sample_uniform(seed ^ 0xB0B, &[6], dt, -1.0, 1.0)?;
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![] })
+}
+
+fn s_unary_smooth(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    Some(OpSample { inputs: vec![a], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_unary_positive(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, 0.3, 2.5)?;
+    Some(OpSample { inputs: vec![a], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_relu(seed: u64, dt: DType) -> Option<OpSample> {
+    // Away from the kink at zero.
+    let a = sample_away_from_zero(seed, &[3, 4], dt, 0.2, 1.5)?;
+    Some(OpSample { inputs: vec![a], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_add_scalar(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    Some(OpSample { inputs: vec![a], params: vec![Param::F32(0.7)], grad_inputs: vec![0] })
+}
+
+fn s_mul_scalar(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    Some(OpSample { inputs: vec![a], params: vec![Param::F32(-1.3)], grad_inputs: vec![0] })
+}
+
+fn s_pow_scalar(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, 0.3, 2.0)?;
+    Some(OpSample { inputs: vec![a], params: vec![Param::F32(1.7)], grad_inputs: vec![0] })
+}
+
+fn s_clamp(seed: u64, dt: DType) -> Option<OpSample> {
+    // Inside the interval on even seeds, fully clamped on odd — never on
+    // the kinks at the bounds.
+    let a = if seed % 2 == 0 {
+        sample_uniform(seed, &[3, 4], dt, -0.8, 0.8)?
+    } else {
+        sample_away_from_zero(seed, &[3, 4], dt, 1.2, 0.6)?
+    };
+    Some(OpSample {
+        inputs: vec![a],
+        params: vec![Param::F32(-1.0), Param::F32(1.0)],
+        grad_inputs: vec![0],
+    })
+}
+
+fn s_cast(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    // Always cast *up* to F64: the scalarized gradcheck loss then keeps
+    // (at least) the input's precision, so the dtype-tier tolerances
+    // apply. F32 covers the converting path (plus the grad cast back to
+    // f32); F64 covers the same-dtype detach path.
+    Some(OpSample {
+        inputs: vec![a],
+        params: vec![Param::DType(DType::F64)],
+        grad_inputs: vec![0],
+    })
+}
+
+// ---------------------------------------------------------------------
 // Registration
 // ---------------------------------------------------------------------
 
@@ -501,51 +603,127 @@ pub(crate) fn register(reg: &mut Registry) {
     // Every entry below except `cast` is index-aligned and dtype-preserving
     // when operands share a shape, so all are `reuse_output` (the
     // dispatcher may let the output steal a dead input's storage).
-    reg.add(OpDef::new("add", 2, 2, NUMERIC).kernel_all(k_add).backward(bw_add).reuse_output());
-    reg.add(OpDef::new("sub", 2, 2, NUMERIC).kernel_all(k_sub).backward(bw_sub).reuse_output());
-    reg.add(OpDef::new("mul", 2, 2, NUMERIC).kernel_all(k_mul).backward(bw_mul).reuse_output());
-    reg.add(OpDef::new("div", 2, 2, NUMERIC).kernel_all(k_div).backward(bw_div).reuse_output());
+    reg.add(
+        OpDef::new("add", 2, 2, NUMERIC)
+            .kernel_all(k_add)
+            .backward(bw_add)
+            .reuse_output()
+            .sample_inputs(s_binary),
+    );
+    reg.add(
+        OpDef::new("sub", 2, 2, NUMERIC)
+            .kernel_all(k_sub)
+            .backward(bw_sub)
+            .reuse_output()
+            .sample_inputs(s_binary),
+    );
+    reg.add(
+        OpDef::new("mul", 2, 2, NUMERIC)
+            .kernel_all(k_mul)
+            .backward(bw_mul)
+            .reuse_output()
+            .sample_inputs(s_binary),
+    );
+    reg.add(
+        OpDef::new("div", 2, 2, NUMERIC)
+            .kernel_all(k_div)
+            .backward(bw_div)
+            .reuse_output()
+            .sample_inputs(s_div),
+    );
     reg.add(
         OpDef::new("maximum", 2, 2, NUMERIC)
             .kernel_all(k_maximum)
             .backward(bw_maximum)
-            .reuse_output(),
+            .reuse_output()
+            .sample_inputs(s_maximum),
     );
-    reg.add(OpDef::new("eq", 2, 2, NUMERIC).kernel_all(k_eq).reuse_output());
+    reg.add(OpDef::new("eq", 2, 2, NUMERIC).kernel_all(k_eq).reuse_output().sample_inputs(s_eq));
 
-    reg.add(OpDef::new("neg", 1, 1, NUMERIC).kernel_all(k_neg).backward(bw_neg).reuse_output());
-    reg.add(OpDef::new("exp", 1, 1, FLOATS).kernel_all(k_exp).backward(bw_exp).reuse_output());
-    reg.add(OpDef::new("log", 1, 1, FLOATS).kernel_all(k_log).backward(bw_log).reuse_output());
-    reg.add(OpDef::new("sqrt", 1, 1, FLOATS).kernel_all(k_sqrt).backward(bw_sqrt).reuse_output());
-    reg.add(OpDef::new("relu", 1, 1, FLOATS).kernel_all(k_relu).backward(bw_relu).reuse_output());
+    reg.add(
+        OpDef::new("neg", 1, 1, NUMERIC)
+            .kernel_all(k_neg)
+            .backward(bw_neg)
+            .reuse_output()
+            .sample_inputs(s_unary_smooth),
+    );
+    reg.add(
+        OpDef::new("exp", 1, 1, FLOATS)
+            .kernel_all(k_exp)
+            .backward(bw_exp)
+            .reuse_output()
+            .sample_inputs(s_unary_smooth),
+    );
+    reg.add(
+        OpDef::new("log", 1, 1, FLOATS)
+            .kernel_all(k_log)
+            .backward(bw_log)
+            .reuse_output()
+            .sample_inputs(s_unary_positive),
+    );
+    reg.add(
+        OpDef::new("sqrt", 1, 1, FLOATS)
+            .kernel_all(k_sqrt)
+            .backward(bw_sqrt)
+            .reuse_output()
+            .sample_inputs(s_unary_positive),
+    );
+    reg.add(
+        OpDef::new("relu", 1, 1, FLOATS)
+            .kernel_all(k_relu)
+            .backward(bw_relu)
+            .reuse_output()
+            .sample_inputs(s_relu),
+    );
     reg.add(
         OpDef::new("sigmoid", 1, 1, FLOATS)
             .kernel_all(k_sigmoid)
             .backward(bw_sigmoid)
-            .reuse_output(),
+            .reuse_output()
+            .sample_inputs(s_unary_smooth),
     );
-    reg.add(OpDef::new("tanh", 1, 1, FLOATS).kernel_all(k_tanh).backward(bw_tanh).reuse_output());
+    reg.add(
+        OpDef::new("tanh", 1, 1, FLOATS)
+            .kernel_all(k_tanh)
+            .backward(bw_tanh)
+            .reuse_output()
+            .sample_inputs(s_unary_smooth),
+    );
 
     reg.add(
         OpDef::new("add_scalar", 1, 1, FLOATS)
             .kernel_all(k_add_scalar)
             .backward(bw_add_scalar)
-            .reuse_output(),
+            .reuse_output()
+            .sample_inputs(s_add_scalar),
     );
     reg.add(
         OpDef::new("mul_scalar", 1, 1, FLOATS)
             .kernel_all(k_mul_scalar)
             .backward(bw_mul_scalar)
-            .reuse_output(),
+            .reuse_output()
+            .sample_inputs(s_mul_scalar),
     );
     reg.add(
         OpDef::new("pow_scalar", 1, 1, FLOATS)
             .kernel_all(k_pow_scalar)
             .backward(bw_pow_scalar)
-            .reuse_output(),
+            .reuse_output()
+            .sample_inputs(s_pow_scalar),
     );
-    reg.add(OpDef::new("clamp", 1, 1, FLOATS).kernel_all(k_clamp).backward(bw_clamp).reuse_output());
+    reg.add(
+        OpDef::new("clamp", 1, 1, FLOATS)
+            .kernel_all(k_clamp)
+            .backward(bw_clamp)
+            .reuse_output()
+            .sample_inputs(s_clamp),
+    );
 
     // `cast` may change the element size — never steal through it.
-    reg.add(OpDef::new("cast", 1, 1, NUMERIC).kernel_all(k_cast).backward(bw_cast));
+    reg.add(
+        OpDef::new("cast", 1, 1, NUMERIC)
+            .kernel_all(k_cast)
+            .backward(bw_cast)
+            .sample_inputs(s_cast),
+    );
 }

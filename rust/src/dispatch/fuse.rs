@@ -1,0 +1,1359 @@
+//! `dispatch::fuse` — fused elementwise pipelines (§5: keeping eager ops
+//! memory-bandwidth-efficient).
+//!
+//! A fused op is a **micro-op tape**: a tiny stack program (load input /
+//! push constant / unary / binary micro-ops) composed and constant-folded
+//! once, at registration time, and then interpreted *per element* inside a
+//! single TensorIter-style pass. A chain like `sigmoid → clamp → log →
+//! mul → add → mean → neg` that used to run as 7 separately dispatched
+//! passes — re-touching the same buffers every time — becomes ONE parallel
+//! loop that reads each input element once and writes (or reduces into)
+//! one output.
+//!
+//! Design rules:
+//!
+//! * **Bit-for-bit parity with the unfused composition.** Every tape
+//!   mirrors the exact per-element expression the composed `ops::*` chain
+//!   evaluates (same operations, same operand pairs; reordering only where
+//!   IEEE addition/multiplication commute bitwise), and the reduction
+//!   drivers reuse the fixed [`REDUCE_CHUNK`] boundaries of
+//!   [`super::iter::run_reduce_flat`]. `tests/fused_parity.rs` pins
+//!   fused == composed at `PALLAS_NUM_THREADS` = 1/2/8.
+//! * **Parallel + deterministic.** Both drivers split on
+//!   [`crate::kernels::parallel_for`] with the standard
+//!   [`SERIAL_GRAIN`]; map-reduce uses fixed-width chunks combined in
+//!   chunk order, so thread count never changes a result bit.
+//! * **One autograd node.** Fused ops register a [`BackwardFn`] whose
+//!   gradients are themselves tapes (plus the deterministic
+//!   `sum_to_shape` reducers), so the graph records a single fused node
+//!   instead of the 4–8 nodes of the composite chain.
+//!
+//! Registered fused kernels: `fused:gelu`, `fused:mse`, `fused:bce`,
+//! `fused:sigmoid_bce`, `fused:ln_tail` (the layer-norm scale/shift
+//! tail), and the in-place optimizer updates `fused:adam_step` /
+//! `fused:sgd_step` (one pass over each param + state buffer). The
+//! composite wrappers in `dispatch/loss.rs`, `dispatch/norm.rs` and
+//! `optim/` route through these; see the "Fusion" section of the
+//! [`crate::dispatch`] module docs for how to add one.
+
+use once_cell::sync::Lazy;
+
+use crate::autograd::{ClosureFunction, Function, SavedTensor};
+use crate::device;
+use crate::kernels::{parallel_for, SERIAL_GRAIN};
+use crate::tensor::storage::SendPtr;
+use crate::tensor::{DType, FloatElement, Tensor};
+use crate::torsk_assert;
+
+use super::elementwise::{cast_to, promote_pair, FLOATS};
+use super::iter::REDUCE_CHUNK;
+use super::reduce::sum_to_shape;
+use super::{same_device, OpCtx, OpDef, OpSample, Param, Registry};
+
+// ---------------------------------------------------------------------
+// Micro-ops
+// ---------------------------------------------------------------------
+
+/// Unary micro-ops (pop x, push f(x)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnaryK {
+    /// `-x`
+    Neg,
+    /// `exp(x)`
+    Exp,
+    /// `ln(x)`
+    Ln,
+    /// `sqrt(x)`
+    Sqrt,
+    /// `1/x` (evaluated as `ONE / x`, matching the composed `1.0 / y`).
+    Recip,
+    /// `tanh(x)`
+    Tanh,
+}
+
+/// Binary micro-ops (pop y, then x, push f(x, y)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BinaryK {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `max(x, y)`
+    Max,
+    /// `min(x, y)`
+    Min,
+    /// `1` if `x >= y` else `0` (clamp-mask building block).
+    Ge,
+    /// `1` if `x <= y` else `0`.
+    Le,
+}
+
+/// One instruction of a fused per-element program.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MicroOp {
+    /// Push input operand `i`'s element.
+    Load(u8),
+    /// Push a constant (narrowed to the runtime dtype).
+    Const(f64),
+    /// Duplicate the top of stack.
+    Dup,
+    /// Swap the top two stack slots.
+    Swap,
+    Un(UnaryK),
+    Bin(BinaryK),
+}
+
+/// Interpreter stack depth — asserted at build time, so `eval` can use a
+/// fixed array with no bounds checks beyond the array itself.
+const MAX_STACK: usize = 8;
+/// Maximum tape operands (fused kernels are small by design).
+const MAX_ARGS: usize = 6;
+
+#[inline(always)]
+fn apply_un<T: FloatElement>(k: UnaryK, x: T) -> T {
+    match k {
+        UnaryK::Neg => -x,
+        UnaryK::Exp => x.fexp(),
+        UnaryK::Ln => x.fln(),
+        UnaryK::Sqrt => x.fsqrt(),
+        UnaryK::Recip => T::ONE / x,
+        UnaryK::Tanh => x.ftanh(),
+    }
+}
+
+#[inline(always)]
+fn apply_bin<T: FloatElement>(k: BinaryK, x: T, y: T) -> T {
+    match k {
+        BinaryK::Add => x + y,
+        BinaryK::Sub => x - y,
+        BinaryK::Mul => x * y,
+        BinaryK::Div => x / y,
+        BinaryK::Max => x.fmax(y),
+        BinaryK::Min => x.fmin(y),
+        BinaryK::Ge => {
+            if x >= y {
+                T::ONE
+            } else {
+                T::ZERO
+            }
+        }
+        BinaryK::Le => {
+            if x <= y {
+                T::ONE
+            } else {
+                T::ZERO
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tape + builder (with registration-time constant folding)
+// ---------------------------------------------------------------------
+
+/// A compiled fused per-element program.
+#[derive(Clone, Debug)]
+pub struct Tape {
+    ops: Vec<MicroOp>,
+    n_inputs: usize,
+}
+
+impl Tape {
+    /// Start building a tape over `n_inputs` operands.
+    pub fn build(n_inputs: usize) -> TapeBuilder {
+        torsk_assert!(n_inputs <= MAX_ARGS, "fuse: at most {MAX_ARGS} tape inputs");
+        TapeBuilder { ops: Vec::new(), n_inputs, depth: 0, max_depth: 0 }
+    }
+
+    /// Number of micro-ops (after constant folding).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the tape has no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Evaluate the tape for one element. `args` must hold `n_inputs`
+    /// values.
+    #[inline(always)]
+    pub fn eval<T: FloatElement>(&self, args: &[T]) -> T {
+        let mut stack = [T::ZERO; MAX_STACK];
+        let mut sp = 0usize;
+        for op in &self.ops {
+            match *op {
+                MicroOp::Load(i) => {
+                    stack[sp] = args[i as usize];
+                    sp += 1;
+                }
+                MicroOp::Const(c) => {
+                    stack[sp] = T::from_f64(c);
+                    sp += 1;
+                }
+                MicroOp::Dup => {
+                    stack[sp] = stack[sp - 1];
+                    sp += 1;
+                }
+                MicroOp::Swap => stack.swap(sp - 1, sp - 2),
+                MicroOp::Un(k) => stack[sp - 1] = apply_un(k, stack[sp - 1]),
+                MicroOp::Bin(k) => {
+                    sp -= 1;
+                    stack[sp - 1] = apply_bin(k, stack[sp - 1], stack[sp]);
+                }
+            }
+        }
+        debug_assert_eq!(sp, 1);
+        stack[0]
+    }
+}
+
+/// Builder accumulating micro-ops with stack-depth tracking and
+/// constant folding (const-only subexpressions collapse at build time;
+/// folding happens in f64 and narrows at eval exactly like a written
+/// constant would).
+pub struct TapeBuilder {
+    ops: Vec<MicroOp>,
+    n_inputs: usize,
+    depth: usize,
+    max_depth: usize,
+}
+
+impl TapeBuilder {
+    fn push(&mut self, op: MicroOp) {
+        match op {
+            MicroOp::Load(_) | MicroOp::Const(_) | MicroOp::Dup => {
+                self.depth += 1;
+                self.max_depth = self.max_depth.max(self.depth);
+                torsk_assert!(self.max_depth <= MAX_STACK, "fuse: tape exceeds MAX_STACK");
+            }
+            MicroOp::Swap => torsk_assert!(self.depth >= 2, "fuse: swap on short stack"),
+            MicroOp::Un(k) => {
+                torsk_assert!(self.depth >= 1, "fuse: unary on empty stack");
+                // Constant-fold `Un(Const)`.
+                if let Some(MicroOp::Const(c)) = self.ops.last().copied() {
+                    *self.ops.last_mut().unwrap() = MicroOp::Const(apply_un::<f64>(k, c));
+                    return;
+                }
+            }
+            MicroOp::Bin(k) => {
+                torsk_assert!(self.depth >= 2, "fuse: binary on short stack");
+                self.depth -= 1;
+                // Constant-fold `Bin(Const, Const)`.
+                let n = self.ops.len();
+                if n >= 2 {
+                    let (a, b) = (self.ops[n - 2], self.ops[n - 1]);
+                    if let (MicroOp::Const(x), MicroOp::Const(y)) = (a, b) {
+                        self.ops.truncate(n - 2);
+                        self.ops.push(MicroOp::Const(apply_bin::<f64>(k, x, y)));
+                        return;
+                    }
+                }
+            }
+        }
+        if let MicroOp::Load(i) = op {
+            torsk_assert!((i as usize) < self.n_inputs, "fuse: load {i} out of range");
+        }
+        self.ops.push(op);
+    }
+
+    pub fn load(mut self, i: usize) -> Self {
+        self.push(MicroOp::Load(i as u8));
+        self
+    }
+    pub fn c(mut self, v: f64) -> Self {
+        self.push(MicroOp::Const(v));
+        self
+    }
+    pub fn dup(mut self) -> Self {
+        self.push(MicroOp::Dup);
+        self
+    }
+    pub fn swap(mut self) -> Self {
+        self.push(MicroOp::Swap);
+        self
+    }
+    pub fn un(mut self, k: UnaryK) -> Self {
+        self.push(MicroOp::Un(k));
+        self
+    }
+    pub fn bin(mut self, k: BinaryK) -> Self {
+        self.push(MicroOp::Bin(k));
+        self
+    }
+    pub fn neg(self) -> Self {
+        self.un(UnaryK::Neg)
+    }
+    pub fn exp(self) -> Self {
+        self.un(UnaryK::Exp)
+    }
+    pub fn ln(self) -> Self {
+        self.un(UnaryK::Ln)
+    }
+    pub fn recip(self) -> Self {
+        self.un(UnaryK::Recip)
+    }
+    pub fn tanh(self) -> Self {
+        self.un(UnaryK::Tanh)
+    }
+    pub fn add(self) -> Self {
+        self.bin(BinaryK::Add)
+    }
+    pub fn sub(self) -> Self {
+        self.bin(BinaryK::Sub)
+    }
+    pub fn mul(self) -> Self {
+        self.bin(BinaryK::Mul)
+    }
+    pub fn max_(self) -> Self {
+        self.bin(BinaryK::Max)
+    }
+    pub fn min_(self) -> Self {
+        self.bin(BinaryK::Min)
+    }
+    pub fn ge(self) -> Self {
+        self.bin(BinaryK::Ge)
+    }
+    pub fn le(self) -> Self {
+        self.bin(BinaryK::Le)
+    }
+
+    /// Finish; the tape must leave exactly one value on the stack.
+    pub fn done(self) -> Tape {
+        torsk_assert!(self.depth == 1, "fuse: tape leaves {} values on the stack", self.depth);
+        Tape { ops: self.ops, n_inputs: self.n_inputs }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Operand access + drivers
+// ---------------------------------------------------------------------
+
+/// How a tape operand is indexed for output element `i` of a pass whose
+/// trailing dimension is `inner` wide.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Access {
+    /// Same shape as the output: element `i`.
+    Flat,
+    /// One value per row (layer-norm statistics `[.., 1]`): `i / inner`.
+    Row(usize),
+    /// One value per column (affine `[d]`): `i % inner`.
+    Col(usize),
+    /// A 0-dim scalar (loss seeds): element `0`.
+    Scalar,
+}
+
+#[inline(always)]
+fn src_index(acc: Access, i: usize) -> usize {
+    match acc {
+        Access::Flat => i,
+        Access::Row(inner) => i / inner,
+        Access::Col(inner) => i % inner,
+        Access::Scalar => 0,
+    }
+}
+
+fn run_map_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], op: SendPtr, n: usize) {
+    let nargs = srcs.len();
+    parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+        let mut args = [T::ZERO; MAX_ARGS];
+        let po = op.ptr() as *mut T;
+        for i in s..e {
+            for (k, (p, acc)) in srcs.iter().enumerate() {
+                // Raw reads: with output-stealing the out buffer may alias
+                // a Flat input; every arg is read before out[i] is written,
+                // and index-aligned Flat access makes that sound.
+                args[k] = std::ptr::read((p.ptr() as *const T).add(src_index(*acc, i)));
+            }
+            std::ptr::write(po.add(i), tape.eval(&args[..nargs]));
+        }
+    });
+}
+
+fn run_map_sum_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], n: usize) -> T {
+    let nargs = srcs.len();
+    if n == 0 {
+        return T::ZERO;
+    }
+    let gather = |i: usize, args: &mut [T; MAX_ARGS]| unsafe {
+        for (k, (p, acc)) in srcs.iter().enumerate() {
+            args[k] = std::ptr::read((p.ptr() as *const T).add(src_index(*acc, i)));
+        }
+    };
+    let nchunks = n.div_ceil(REDUCE_CHUNK);
+    if nchunks == 1 {
+        let mut args = [T::ZERO; MAX_ARGS];
+        let mut acc = T::ZERO;
+        for i in 0..n {
+            gather(i, &mut args);
+            acc = acc + tape.eval(&args[..nargs]);
+        }
+        return acc;
+    }
+    let mut partials: Vec<T> = vec![T::ZERO; nchunks];
+    let pp = SendPtr::new(partials.as_mut_ptr() as *mut u8);
+    parallel_for(nchunks, 1, |c0, c1| unsafe {
+        let mut args = [T::ZERO; MAX_ARGS];
+        for c in c0..c1 {
+            let s = c * REDUCE_CHUNK;
+            let e = ((c + 1) * REDUCE_CHUNK).min(n);
+            let mut acc = T::ZERO;
+            for i in s..e {
+                gather(i, &mut args);
+                acc = acc + tape.eval(&args[..nargs]);
+            }
+            // SAFETY: each chunk index written by exactly one task.
+            std::ptr::write((pp.ptr() as *mut T).add(c), acc);
+        }
+    });
+    let mut acc = partials[0];
+    for p in &partials[1..] {
+        acc = acc + *p;
+    }
+    acc
+}
+
+/// Materialize tape operands: contiguous handles (kept alive for queued
+/// device closures) plus their pointers with the declared access pattern.
+fn plan_srcs(inputs: &[(&Tensor, Access)]) -> (Vec<Tensor>, Vec<(SendPtr, Access)>) {
+    let keep: Vec<Tensor> = inputs.iter().map(|(t, _)| t.contiguous()).collect();
+    let srcs: Vec<(SendPtr, Access)> =
+        keep.iter().zip(inputs.iter()).map(|(t, (_, a))| (t.data_ptr(), *a)).collect();
+    (keep, srcs)
+}
+
+/// Run `tape` as one elementwise pass producing a tensor of `out_shape`.
+/// All operands must share one float dtype and one device; broadcasts are
+/// expressed via [`Access`], not materialized.
+pub(crate) fn run_map(
+    name: &'static str,
+    tape: &Tape,
+    inputs: &[(&Tensor, Access)],
+    out_shape: &[usize],
+) -> Tensor {
+    torsk_assert!(tape.n_inputs == inputs.len(), "{name}: tape wants {} inputs", tape.n_inputs);
+    let tensors: Vec<&Tensor> = inputs.iter().map(|(t, _)| *t).collect();
+    let dev = same_device(name, &tensors);
+    let dt = tensors[0].dtype();
+    torsk_assert!(
+        tensors.iter().all(|t| t.dtype() == dt) && dt.is_float(),
+        "{name}: fused tapes need one float dtype"
+    );
+    let (keep, srcs) = plan_srcs(inputs);
+    let out = Tensor::empty(out_shape, dt, dev);
+    let n = out.numel();
+    if n == 0 {
+        return out;
+    }
+    let op = out.data_ptr();
+    let tape = tape.clone();
+    device::dispatch(dev, name, move || {
+        match dt {
+            DType::F32 => run_map_t::<f32>(&tape, &srcs, op, n),
+            DType::F64 => run_map_t::<f64>(&tape, &srcs, op, n),
+            DType::I64 => unreachable!("fused tapes are float-only"),
+        }
+        drop(keep);
+    });
+    out
+}
+
+/// Run `tape` as one map-reduce pass: per-element values are summed with
+/// the fixed [`REDUCE_CHUNK`] partial boundaries of the unfused reduction
+/// driver (bit-identical at any thread count), then `finish` maps the
+/// total (mean scaling, final negation) before the 0-dim result is
+/// written.
+pub(crate) fn run_map_sum(
+    name: &'static str,
+    tape: &Tape,
+    inputs: &[(&Tensor, Access)],
+    n: usize,
+    finish: fn(f64, f64) -> f64,
+    finish_arg: f64,
+) -> Tensor {
+    torsk_assert!(tape.n_inputs == inputs.len(), "{name}: tape wants {} inputs", tape.n_inputs);
+    let tensors: Vec<&Tensor> = inputs.iter().map(|(t, _)| *t).collect();
+    let dev = same_device(name, &tensors);
+    let dt = tensors[0].dtype();
+    torsk_assert!(
+        tensors.iter().all(|t| t.dtype() == dt) && dt.is_float(),
+        "{name}: fused tapes need one float dtype"
+    );
+    let (keep, srcs) = plan_srcs(inputs);
+    let out = Tensor::empty(&[], dt, dev);
+    let op = out.data_ptr();
+    let tape = tape.clone();
+    device::dispatch(dev, name, move || {
+        match dt {
+            DType::F32 => {
+                let total = run_map_sum_t::<f32>(&tape, &srcs, n);
+                // `finish` runs at the tensor dtype: its f64 args/result
+                // round-trip exactly for f32 values and scale factors are
+                // narrowed first, mirroring the composed scalar kernels.
+                let v = finish(total as f64, finish_arg) as f32;
+                unsafe { *(op.ptr() as *mut f32) = v };
+            }
+            DType::F64 => {
+                let total = run_map_sum_t::<f64>(&tape, &srcs, n);
+                let v = finish(total, finish_arg);
+                unsafe { *(op.ptr() as *mut f64) = v };
+            }
+            DType::I64 => unreachable!("fused tapes are float-only"),
+        }
+        drop(keep);
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// finish() combinators for map-reduce kernels
+// ---------------------------------------------------------------------
+
+/// `total * rn` — matches the composed `mean = sum * (1/n)` scalar kernel
+/// exactly: for F32 the f64 product of two exactly-widened f32s rounds to
+/// the same f32 the composed `x * sv` kernel computes.
+fn finish_mean(total: f64, rn: f64) -> f64 {
+    scale_like_dtype(total, rn)
+}
+
+/// `-(total * rn)` — BCE's trailing `neg(mean(..))`.
+fn finish_neg_mean(total: f64, rn: f64) -> f64 {
+    -scale_like_dtype(total, rn)
+}
+
+/// One multiply in f64. For F32 callers, both operands are exact f32
+/// widenings, so one f64 multiply + one narrow equals the f32 multiply
+/// (a double-rounding-free product), matching the unfused kernel bitwise.
+fn scale_like_dtype(total: f64, rn: f64) -> f64 {
+    total * rn
+}
+
+/// The mean factor as the runtime dtype would see it: F32 kernels narrow
+/// `1/n` to f32 before multiplying (see `float_scalar!` in elementwise).
+fn mean_factor(n: usize, dt: DType) -> f64 {
+    let rn = 1.0 / n.max(1) as f64;
+    match dt {
+        DType::F32 => rn as f32 as f64,
+        _ => rn,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tape constants + shared subsequences
+// ---------------------------------------------------------------------
+
+/// GELU (tanh approximation) constants; f32 literals so the fused tape and
+/// a composed `mul_scalar` chain see identical values at every dtype.
+pub(crate) const GELU_A: f32 = 0.044_715;
+pub(crate) const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+/// BCE probability clamp (the composite used `clamp(p, 1e-7, 1 - 1e-7)`).
+pub(crate) const BCE_EPS: f32 = 1e-7;
+
+fn bce_hi() -> f64 {
+    (1.0f32 - BCE_EPS) as f64
+}
+
+/// Append `clamp(top, eps, hi)` — `max` then `min`, which equals Rust's
+/// `f32::clamp` for `lo <= hi` and non-NaN inputs (the composed kernel).
+fn clamp01(b: TapeBuilder) -> TapeBuilder {
+    b.c(BCE_EPS as f64).max_().c(bce_hi()).min_()
+}
+
+/// Append `sigmoid(top)` exactly as the composed kernel computes it:
+/// `1.0 / (1.0 + exp(-x))`.
+fn sigmoid_seq(b: TapeBuilder) -> TapeBuilder {
+    b.neg().exp().c(1.0).add().recip()
+}
+
+/// Push `p` for the plain-BCE tapes: a raw `Load(0)`.
+fn load_p(b: TapeBuilder) -> TapeBuilder {
+    b.load(0)
+}
+
+/// Push `p = sigmoid(x)` for the with-logits tapes.
+fn load_sigmoid(b: TapeBuilder) -> TapeBuilder {
+    sigmoid_seq(b.load(0))
+}
+
+// ---------------------------------------------------------------------
+// fused:gelu
+// ---------------------------------------------------------------------
+
+/// `u = C*(x + A*x^3)` sub-sequence; pushes `tanh(u)`.
+fn gelu_t_seq(b: TapeBuilder) -> TapeBuilder {
+    // x*x -> x^3 -> A*x^3 -> + x -> *C -> tanh
+    b.load(0)
+        .load(0)
+        .mul()
+        .load(0)
+        .mul()
+        .c(GELU_A as f64)
+        .mul()
+        .load(0)
+        .add()
+        .c(GELU_C as f64)
+        .mul()
+        .tanh()
+}
+
+static GELU_FWD: Lazy<Tape> = Lazy::new(|| {
+    // y = (0.5*x) * (tanh(u) + 1)
+    gelu_t_seq(Tape::build(1)).c(1.0).add().load(0).c(0.5).mul().mul().done()
+});
+
+static GELU_BWD: Lazy<Tape> = Lazy::new(|| {
+    // inputs [x, g]:
+    // dy/dx = 0.5*(1+t) + ((((0.5*x)*(1-t^2))*C) * (1 + 3A*x^2))
+    // t = tanh(u) is evaluated once and duplicated — bit-identical to
+    // recomputing it, at half the transcendental cost.
+    let b = gelu_t_seq(Tape::build(2)).dup(); // [t, t]
+    let b = b.c(1.0).add().c(0.5).mul().swap(); // [term1, t]
+    let b = b.dup().mul().neg().c(1.0).add(); // [term1, 1-t^2]
+    let b = b.load(0).mul().c(0.5).mul().c(GELU_C as f64).mul(); // [term1, p]
+    let b = b.load(0).dup().mul().c(3.0 * GELU_A as f64).mul().c(1.0).add(); // [term1, p, q]
+    b.mul().add().load(1).mul().done() // g * dy/dx
+});
+
+fn k_gelu(ctx: &OpCtx) -> Tensor {
+    let x = ctx.input(0);
+    run_map("fused:gelu", &GELU_FWD, &[(x, Access::Flat)], x.shape())
+}
+
+fn bw_gelu(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let saved = SavedTensor::save(ctx.input(0));
+    ClosureFunction::new("fused:gelu", move |g| {
+        let x = saved.unpack();
+        let srcs = [(&x, Access::Flat), (g, Access::Flat)];
+        let gx = run_map("fused:gelu_bwd", &GELU_BWD, &srcs, x.shape());
+        vec![Some(gx)]
+    })
+}
+
+// ---------------------------------------------------------------------
+// fused:mse
+// ---------------------------------------------------------------------
+
+static MSE_FWD: Lazy<Tape> =
+    Lazy::new(|| Tape::build(2).load(0).load(1).sub().dup().mul().done());
+
+static MSE_BWD_DP: Lazy<Tape> = Lazy::new(|| {
+    // inputs [p, t, G] where G is the pre-scaled seed g*(1/n) (rn varies
+    // per call, so it cannot be baked into the tape as a constant).
+    // dp = 2 * (G * (p - t))   == (G*d) + (G*d) of the unfused graph.
+    Tape::build(3).load(2).load(0).load(1).sub().mul().c(2.0).mul().done()
+});
+
+static MSE_BWD_DT: Lazy<Tape> =
+    Lazy::new(|| Tape::build(3).load(2).load(0).load(1).sub().mul().c(2.0).mul().neg().done());
+
+fn k_fused_mse(ctx: &OpCtx) -> Tensor {
+    let (pred, target) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(pred.shape() == target.shape(), "fused:mse: shape mismatch");
+    let (pa, pb) = promote_pair(pred, target);
+    let n = pa.numel();
+    run_map_sum(
+        "fused:mse",
+        &MSE_FWD,
+        &[(&pa, Access::Flat), (&pb, Access::Flat)],
+        n,
+        finish_mean,
+        mean_factor(n, pa.dtype()),
+    )
+}
+
+fn bw_fused_mse(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (da, db) = (ctx.input(0).dtype(), ctx.input(1).dtype());
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    let shape = pa.shape().to_vec();
+    let rn = mean_factor(pa.numel(), pa.dtype());
+    let (va, vb) = (SavedTensor::save(&pa), SavedTensor::save(&pb));
+    ClosureFunction::new("fused:mse", move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        // G = g * (1/n), exactly the composed mean-backward scalar.
+        let gs = super::call_owned("mul_scalar", vec![g.clone()], &[Param::F64(rn)]);
+        let dp = run_map(
+            "fused:mse_bwd",
+            &MSE_BWD_DP,
+            &[(&a, Access::Flat), (&b, Access::Flat), (&gs, Access::Scalar)],
+            &shape,
+        );
+        let dt = run_map(
+            "fused:mse_bwd",
+            &MSE_BWD_DT,
+            &[(&a, Access::Flat), (&b, Access::Flat), (&gs, Access::Scalar)],
+            &shape,
+        );
+        vec![Some(cast_to(&dp, da)), Some(cast_to(&dt, db))]
+    })
+}
+
+// ---------------------------------------------------------------------
+// fused:bce / fused:sigmoid_bce
+// ---------------------------------------------------------------------
+
+/// Forward per-element BCE term, mirroring the composite chain
+/// `pc = clamp(p); total = t*ln(pc) + (1-t)*ln(1-pc)` operation for
+/// operation (`1-v` is evaluated as `(-v)+1`, as the composed
+/// `add_scalar(neg(v), 1)` does). `load` selects raw `p` or `sigmoid(x)`.
+fn bce_total_tape(load: fn(TapeBuilder) -> TapeBuilder, n_inputs: usize) -> Tape {
+    let b = clamp01(load(Tape::build(n_inputs))); // [pc]
+    let b = b.dup().neg().c(1.0).add().ln(); // [pc, ln(1-pc)]
+    let b = b.load(1).neg().c(1.0).add().mul(); // [pc, neg_term]
+    let b = b.swap().ln().load(1).mul(); // [neg_term, pos]
+    b.add().done()
+}
+
+/// d/dp tape: `((G*t)*(1/pc) + -( (G*(1-t)) * (1/(1-pc)) )) * mask`.
+/// Input 2 is the pre-scaled seed `G = (-g)*(1/n)` (computed per call by
+/// the backward builder, since `n` is not known at tape-build time).
+fn bce_dp_tape(load: fn(TapeBuilder) -> TapeBuilder, n_inputs: usize) -> Tape {
+    let b = Tape::build(n_inputs).load(2); // [G]
+    let b = b.dup().load(1).neg().c(1.0).add().mul(); // [G, G*(1-t)]
+    let b = clamp01(load(b)); // [G, Gomt, pc]
+    let b = b.neg().c(1.0).add().recip().mul().neg(); // [G, term2]
+    let b = b.swap().load(1).mul(); // [term2, G*t]
+    let b = clamp01(load(b)).recip().mul(); // [term2, term1]
+    let b = b.add(); // [g_pc]
+    let b = load(b).c(BCE_EPS as f64).ge(); // [g_pc, m1]
+    let b = load(b).c(bce_hi()).le().mul(); // [g_pc, mask]
+    b.mul().done()
+}
+
+/// d/dt tape: `(G*ln(pc)) + -(G*ln(1-pc))`; input 2 is `G`, as in
+/// [`bce_dp_tape`].
+fn bce_dt_tape(load: fn(TapeBuilder) -> TapeBuilder, n_inputs: usize) -> Tape {
+    let b = Tape::build(n_inputs).load(2).dup(); // [G, G]
+    let b = clamp01(load(b)).neg().c(1.0).add().ln(); // [G, G, ln(1-pc)]
+    let b = b.mul().neg(); // [G, t2]
+    let b = clamp01(load(b.swap())).ln().mul(); // [t2, t1]
+    b.add().done()
+}
+
+static BCE_FWD: Lazy<Tape> = Lazy::new(|| bce_total_tape(load_p, 2));
+static BCE_DP: Lazy<Tape> = Lazy::new(|| bce_dp_tape(load_p, 3));
+static BCE_DT: Lazy<Tape> = Lazy::new(|| bce_dt_tape(load_p, 3));
+
+static SBCE_FWD: Lazy<Tape> = Lazy::new(|| bce_total_tape(load_sigmoid, 2));
+/// dx = dp-at-sigmoid * (s * (1 - s)), the composed sigmoid backward.
+static SBCE_DX: Lazy<Tape> = Lazy::new(|| {
+    let mut b = bce_dp_tape(load_sigmoid, 3);
+    let tail = sigmoid_seq(Tape::build(3).load(0)).dup().neg().c(1.0).add().mul().done();
+    b.ops.extend_from_slice(&tail.ops);
+    b.ops.push(MicroOp::Bin(BinaryK::Mul));
+    b
+});
+static SBCE_DT: Lazy<Tape> = Lazy::new(|| bce_dt_tape(load_sigmoid, 3));
+
+fn bce_like_forward(name: &'static str, tape: &Tape, ctx: &OpCtx) -> Tensor {
+    let (a, b) = (ctx.input(0), ctx.input(1));
+    torsk_assert!(a.shape() == b.shape(), "{name}: shape mismatch");
+    let (pa, pb) = promote_pair(a, b);
+    let n = pa.numel();
+    run_map_sum(
+        name,
+        tape,
+        &[(&pa, Access::Flat), (&pb, Access::Flat)],
+        n,
+        finish_neg_mean,
+        mean_factor(n, pa.dtype()),
+    )
+}
+
+fn bce_like_backward(
+    name: &'static str,
+    dp: &'static Lazy<Tape>,
+    dt: &'static Lazy<Tape>,
+    ctx: &OpCtx,
+) -> Box<dyn Function> {
+    let (da, db) = (ctx.input(0).dtype(), ctx.input(1).dtype());
+    let (pa, pb) = promote_pair(ctx.input(0), ctx.input(1));
+    let shape = pa.shape().to_vec();
+    let rn = mean_factor(pa.numel(), pa.dtype());
+    let (va, vb) = (SavedTensor::save(&pa), SavedTensor::save(&pb));
+    ClosureFunction::new(name, move |g| {
+        let a = va.unpack();
+        let b = vb.unpack();
+        // G = (-g) * (1/n): the composed `neg` + mean backward scalars.
+        let gneg = super::call_owned("neg", vec![g.clone()], &[]);
+        let gs = super::call_owned("mul_scalar", vec![gneg], &[Param::F64(rn)]);
+        let srcs = [(&a, Access::Flat), (&b, Access::Flat), (&gs, Access::Scalar)];
+        let ga = run_map(name, dp, &srcs, &shape);
+        let gb = run_map(name, dt, &srcs, &shape);
+        vec![Some(cast_to(&ga, da)), Some(cast_to(&gb, db))]
+    })
+}
+
+fn k_fused_bce(ctx: &OpCtx) -> Tensor {
+    bce_like_forward("fused:bce", &BCE_FWD, ctx)
+}
+
+fn bw_fused_bce(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    bce_like_backward("fused:bce", &BCE_DP, &BCE_DT, ctx)
+}
+
+fn k_fused_sigmoid_bce(ctx: &OpCtx) -> Tensor {
+    bce_like_forward("fused:sigmoid_bce", &SBCE_FWD, ctx)
+}
+
+fn bw_fused_sigmoid_bce(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    bce_like_backward("fused:sigmoid_bce", &SBCE_DX, &SBCE_DT, ctx)
+}
+
+// ---------------------------------------------------------------------
+// fused:ln_tail — the layer-norm scale/shift tail
+// ---------------------------------------------------------------------
+
+/// `out = (centered * inv_std) * gamma + beta` in one pass.
+static LN_TAIL_FWD: Lazy<Tape> =
+    Lazy::new(|| Tape::build(4).load(0).load(1).mul().load(2).mul().load(3).add().done());
+/// `dcentered = (g * gamma) * inv_std`.
+static LN_TAIL_DC: Lazy<Tape> =
+    Lazy::new(|| Tape::build(3).load(0).load(1).mul().load(2).mul().done());
+/// Full-size `(g * gamma) * centered` (reduced to inv_std's shape after).
+static LN_TAIL_DIS: Lazy<Tape> =
+    Lazy::new(|| Tape::build(3).load(0).load(1).mul().load(2).mul().done());
+/// Full-size `(centered * inv_std) * g` (reduced to gamma's shape after).
+static LN_TAIL_DG: Lazy<Tape> =
+    Lazy::new(|| Tape::build(3).load(1).load(2).mul().load(0).mul().done());
+
+fn ln_tail_check(ctx: &OpCtx) -> (usize, Vec<usize>) {
+    let (c, is, g, b) = (ctx.input(0), ctx.input(1), ctx.input(2), ctx.input(3));
+    torsk_assert!(c.ndim() >= 1, "fused:ln_tail: needs at least 1 dim");
+    let d = *c.shape().last().unwrap();
+    let mut stat_shape = c.shape().to_vec();
+    *stat_shape.last_mut().unwrap() = 1;
+    torsk_assert!(
+        is.shape() == stat_shape.as_slice(),
+        "fused:ln_tail: inv_std shape {:?} vs {:?}",
+        is.shape(),
+        stat_shape
+    );
+    torsk_assert!(
+        g.shape() == [d] && b.shape() == [d],
+        "fused:ln_tail: affine shape must be [{d}]"
+    );
+    (d, stat_shape)
+}
+
+fn k_ln_tail(ctx: &OpCtx) -> Tensor {
+    let (d, _) = ln_tail_check(ctx);
+    let c = ctx.input(0);
+    run_map(
+        "fused:ln_tail",
+        &LN_TAIL_FWD,
+        &[
+            (c, Access::Flat),
+            (ctx.input(1), Access::Row(d)),
+            (ctx.input(2), Access::Col(d)),
+            (ctx.input(3), Access::Col(d)),
+        ],
+        c.shape(),
+    )
+}
+
+fn bw_ln_tail(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
+    let (d, stat_shape) = ln_tail_check(ctx);
+    let shape = ctx.input(0).shape().to_vec();
+    let vc = SavedTensor::save(ctx.input(0));
+    let vis = SavedTensor::save(ctx.input(1));
+    let vg = SavedTensor::save(ctx.input(2));
+    ClosureFunction::new("fused:ln_tail", move |g| {
+        let c = vc.unpack();
+        let is = vis.unpack();
+        let gamma = vg.unpack();
+        let srcs_dc = [(g, Access::Flat), (&gamma, Access::Col(d)), (&is, Access::Row(d))];
+        let dc = run_map("fused:ln_tail_bwd", &LN_TAIL_DC, &srcs_dc, &shape);
+        let srcs_dis = [(g, Access::Flat), (&gamma, Access::Col(d)), (&c, Access::Flat)];
+        let dis_full = run_map("fused:ln_tail_bwd", &LN_TAIL_DIS, &srcs_dis, &shape);
+        let dis = sum_to_shape(&dis_full, &stat_shape);
+        let srcs_dg = [(g, Access::Flat), (&c, Access::Flat), (&is, Access::Row(d))];
+        let dg_full = run_map("fused:ln_tail_bwd", &LN_TAIL_DG, &srcs_dg, &shape);
+        let dg = sum_to_shape(&dg_full, &[d]);
+        let db = sum_to_shape(g, &[d]);
+        vec![Some(dc), Some(dis), Some(dg), Some(db)]
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fused in-place optimizer updates
+// ---------------------------------------------------------------------
+
+fn check_step_operands(name: &str, ctx: &OpCtx) {
+    let p = ctx.input(0);
+    torsk_assert!(
+        !(crate::autograd::grad_enabled() && p.requires_grad_flag() && p.grad_fn().is_none()),
+        "a leaf tensor that requires grad is being used in an in-place \
+         operation ({name}); wrap the update in no_grad()"
+    );
+    let dt = p.dtype();
+    torsk_assert!(dt.is_float(), "{name}: float params only");
+    for i in 0..ctx.num_inputs() {
+        let t = ctx.input(i);
+        torsk_assert!(t.shape() == p.shape(), "{name}: operand {i} shape mismatch");
+        torsk_assert!(t.dtype() == dt, "{name}: operand {i} dtype mismatch");
+    }
+    torsk_assert!(p.is_contiguous(), "{name}: param must be contiguous");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_step_t<T: FloatElement>(
+    n: usize,
+    pp: SendPtr,
+    gp: SendPtr,
+    mp: SendPtr,
+    vp: SendPtr,
+    lr: T,
+    b1: T,
+    b2: T,
+    eps: T,
+    wd: T,
+    rbc1: T,
+    rbc2: T,
+) {
+    let one_m_b1 = T::ONE - b1;
+    let one_m_b2 = T::ONE - b2;
+    parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+        let p = pp.ptr() as *mut T;
+        let g = gp.ptr() as *const T;
+        let m = mp.ptr() as *mut T;
+        let v = vp.ptr() as *mut T;
+        for i in s..e {
+            let mut gi = std::ptr::read(g.add(i));
+            if wd != T::ZERO {
+                gi = gi + std::ptr::read(p.add(i)) * wd;
+            }
+            // m = b1*m + (1-b1)*g ; v = b2*v + (1-b2)*g^2 — the exact
+            // mul_scalar_/axpy_ composition, one pass instead of five.
+            let mi = std::ptr::read(m.add(i)) * b1 + one_m_b1 * gi;
+            let vi = std::ptr::read(v.add(i)) * b2 + one_m_b2 * (gi * gi);
+            std::ptr::write(m.add(i), mi);
+            std::ptr::write(v.add(i), vi);
+            let mhat = mi * rbc1;
+            let vhat = vi * rbc2;
+            let update = mhat / (vhat.fsqrt() + eps);
+            let pi = std::ptr::read(p.add(i)) + (-lr) * update;
+            std::ptr::write(p.add(i), pi);
+        }
+    });
+}
+
+/// Fused Adam update: inputs [param, grad, m, v] (param/m/v mutated in
+/// place); params [lr, beta1, beta2, eps, weight_decay, bc1, bc2] where
+/// `bc*` are the bias corrections `1 - beta^t`.
+fn k_adam_step(ctx: &OpCtx) -> Tensor {
+    check_step_operands("fused:adam_step", ctx);
+    let (p, m, v) = (ctx.input(0), ctx.input(2), ctx.input(3));
+    torsk_assert!(
+        m.is_contiguous() && v.is_contiguous(),
+        "fused:adam_step: state buffers must be contiguous"
+    );
+    let g = ctx.input(1).contiguous();
+    let (lr, b1, b2, eps) = (ctx.f32(0), ctx.f32(1), ctx.f32(2), ctx.f32(3));
+    let (wd, bc1, bc2) = (ctx.f32(4), ctx.f32(5), ctx.f32(6));
+    // 1/bc in f32 first: that is what the composed `mul_scalar(m, 1/bc1)`
+    // multiplied by.
+    let (rbc1, rbc2) = (1.0f32 / bc1, 1.0f32 / bc2);
+    let n = p.numel();
+    let (pp, gp, mp, vp) = (p.data_ptr(), g.data_ptr(), m.data_ptr(), v.data_ptr());
+    let dt = p.dtype();
+    let dev = ctx.device;
+    device::dispatch(dev, "fused:adam_step", move || {
+        match dt {
+            DType::F32 => adam_step_t::<f32>(n, pp, gp, mp, vp, lr, b1, b2, eps, wd, rbc1, rbc2),
+            DType::F64 => adam_step_t::<f64>(
+                n,
+                pp,
+                gp,
+                mp,
+                vp,
+                lr as f64,
+                b1 as f64,
+                b2 as f64,
+                eps as f64,
+                wd as f64,
+                rbc1 as f64,
+                rbc2 as f64,
+            ),
+            DType::I64 => unreachable!("schema admits floats only"),
+        }
+        drop(g);
+    });
+    for t in [p, m, v] {
+        t.bump_version();
+    }
+    p.clone()
+}
+
+fn sgd_step_t<T: FloatElement>(
+    n: usize,
+    pp: SendPtr,
+    gp: SendPtr,
+    vp: Option<SendPtr>,
+    lr: T,
+    momentum: T,
+    wd: T,
+) {
+    parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+        let p = pp.ptr() as *mut T;
+        let g = gp.ptr() as *const T;
+        for i in s..e {
+            let mut gi = std::ptr::read(g.add(i));
+            if wd != T::ZERO {
+                gi = gi + std::ptr::read(p.add(i)) * wd;
+            }
+            if let Some(vp) = vp {
+                let v = vp.ptr() as *mut T;
+                let vi = std::ptr::read(v.add(i)) * momentum + gi;
+                std::ptr::write(v.add(i), vi);
+                gi = vi;
+            }
+            let pi = std::ptr::read(p.add(i)) + (-lr) * gi;
+            std::ptr::write(p.add(i), pi);
+        }
+    });
+}
+
+/// Fused SGD update: inputs [param, grad] or [param, grad, velocity]
+/// (param and velocity mutated in place); params [lr, momentum,
+/// weight_decay]. A zero-initialized velocity reproduces the composed
+/// first-step `v = g` exactly (`0*mu + g == g`).
+fn k_sgd_step(ctx: &OpCtx) -> Tensor {
+    check_step_operands("fused:sgd_step", ctx);
+    let p = ctx.input(0);
+    let g = ctx.input(1).contiguous();
+    let vel = if ctx.num_inputs() == 3 {
+        let v = ctx.input(2);
+        torsk_assert!(v.is_contiguous(), "fused:sgd_step: velocity must be contiguous");
+        Some(v.clone())
+    } else {
+        None
+    };
+    let (lr, momentum, wd) = (ctx.f32(0), ctx.f32(1), ctx.f32(2));
+    let n = p.numel();
+    let (pp, gp) = (p.data_ptr(), g.data_ptr());
+    let vp = vel.as_ref().map(|v| v.data_ptr());
+    let dt = p.dtype();
+    device::dispatch(ctx.device, "fused:sgd_step", move || {
+        match dt {
+            DType::F32 => sgd_step_t::<f32>(n, pp, gp, vp, lr, momentum, wd),
+            DType::F64 => {
+                sgd_step_t::<f64>(n, pp, gp, vp, lr as f64, momentum as f64, wd as f64)
+            }
+            DType::I64 => unreachable!("schema admits floats only"),
+        }
+        drop(g);
+    });
+    p.bump_version();
+    if let Some(v) = &vel {
+        v.bump_version();
+    }
+    p.clone()
+}
+
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+fn s_gelu(seed: u64, dt: DType) -> Option<OpSample> {
+    let x = super::sample_uniform(seed, &[3, 5], dt, -2.0, 2.0)?;
+    Some(OpSample { inputs: vec![x], params: vec![], grad_inputs: vec![0] })
+}
+
+/// Shared with the `mse_loss` wrapper registration in `dispatch/loss.rs`
+/// so the fused entry and its wrapper always test identical inputs.
+pub(crate) fn s_mse(seed: u64, dt: DType) -> Option<OpSample> {
+    let p = super::sample_uniform(seed, &[2, 6], dt, -1.5, 1.5)?;
+    let t = super::sample_uniform(seed ^ 0x5c5c, &[2, 6], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![p, t], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+/// Probabilities well inside the clamp interval (no mask kinks); shared
+/// with the `bce_loss` wrapper registration.
+pub(crate) fn s_bce(seed: u64, dt: DType) -> Option<OpSample> {
+    let p = super::sample_uniform(seed, &[2, 5], dt, 0.08, 0.92)?;
+    let t = super::sample_uniform(seed ^ 0x7a7a, &[2, 5], dt, 0.1, 0.9)?;
+    Some(OpSample { inputs: vec![p, t], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_sigmoid_bce(seed: u64, dt: DType) -> Option<OpSample> {
+    let x = super::sample_uniform(seed, &[2, 5], dt, -2.5, 2.5)?;
+    let t = super::sample_uniform(seed ^ 0x7a7a, &[2, 5], dt, 0.1, 0.9)?;
+    Some(OpSample { inputs: vec![x, t], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_ln_tail(seed: u64, dt: DType) -> Option<OpSample> {
+    let c = super::sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    let is = super::sample_uniform(seed ^ 0x11, &[3, 1], dt, 0.5, 2.0)?;
+    let g = super::sample_uniform(seed ^ 0x22, &[4], dt, 0.5, 1.5)?;
+    let b = super::sample_uniform(seed ^ 0x33, &[4], dt, -0.5, 0.5)?;
+    Some(OpSample { inputs: vec![c, is, g, b], params: vec![], grad_inputs: vec![0, 1, 2, 3] })
+}
+
+fn s_adam_step(seed: u64, dt: DType) -> Option<OpSample> {
+    let p = super::sample_uniform(seed, &[8], dt, -1.0, 1.0)?;
+    let g = super::sample_uniform(seed ^ 0x44, &[8], dt, -1.0, 1.0)?;
+    let m = super::sample_uniform(seed ^ 0x55, &[8], dt, -0.1, 0.1)?;
+    let v = super::sample_uniform(seed ^ 0x66, &[8], dt, 0.0, 0.1)?;
+    Some(OpSample {
+        inputs: vec![p, g, m, v],
+        params: vec![
+            Param::F32(1e-3),
+            Param::F32(0.9),
+            Param::F32(0.999),
+            Param::F32(1e-8),
+            Param::F32(0.0),
+            Param::F32(0.1),
+            Param::F32(0.001999),
+        ],
+        grad_inputs: vec![],
+    })
+}
+
+fn s_sgd_step(seed: u64, dt: DType) -> Option<OpSample> {
+    let p = super::sample_uniform(seed, &[8], dt, -1.0, 1.0)?;
+    let g = super::sample_uniform(seed ^ 0x44, &[8], dt, -1.0, 1.0)?;
+    let v = super::sample_uniform(seed ^ 0x55, &[8], dt, -0.1, 0.1)?;
+    Some(OpSample {
+        inputs: vec![p, g, v],
+        params: vec![Param::F32(0.01), Param::F32(0.9), Param::F32(0.0)],
+        grad_inputs: vec![],
+    })
+}
+
+// ---------------------------------------------------------------------
+// Registration
+// ---------------------------------------------------------------------
+
+pub(crate) fn register(reg: &mut Registry) {
+    reg.add(
+        OpDef::new("fused:gelu", 1, 1, FLOATS)
+            .kernel_all(k_gelu)
+            .backward(bw_gelu)
+            .reuse_output()
+            .sample_inputs(s_gelu),
+    );
+    reg.add(
+        OpDef::new("fused:mse", 2, 2, FLOATS)
+            .kernel_all(k_fused_mse)
+            .backward(bw_fused_mse)
+            .sample_inputs(s_mse),
+    );
+    reg.add(
+        OpDef::new("fused:bce", 2, 2, FLOATS)
+            .kernel_all(k_fused_bce)
+            .backward(bw_fused_bce)
+            .sample_inputs(s_bce),
+    );
+    reg.add(
+        OpDef::new("fused:sigmoid_bce", 2, 2, FLOATS)
+            .kernel_all(k_fused_sigmoid_bce)
+            .backward(bw_fused_sigmoid_bce)
+            .sample_inputs(s_sigmoid_bce),
+    );
+    reg.add(
+        OpDef::new("fused:ln_tail", 4, 4, FLOATS)
+            .kernel_all(k_ln_tail)
+            .backward(bw_ln_tail)
+            .sample_inputs(s_ln_tail),
+    );
+    reg.add(
+        OpDef::new("fused:adam_step", 4, 4, FLOATS)
+            .kernel_all(k_adam_step)
+            .sample_inputs(s_adam_step),
+    );
+    reg.add(
+        OpDef::new("fused:sgd_step", 2, 3, FLOATS)
+            .kernel_all(k_sgd_step)
+            .sample_inputs(s_sgd_step),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    #[test]
+    fn tape_eval_matches_scalar_reference() {
+        // (x*2 + 1) / (x - 3), via explicit micro-ops.
+        let t = Tape::build(1)
+            .load(0)
+            .c(2.0)
+            .mul()
+            .c(1.0)
+            .add()
+            .load(0)
+            .c(3.0)
+            .sub()
+            .bin(BinaryK::Div)
+            .done();
+        for x in [-1.5f32, 0.0, 2.25, 7.0] {
+            let want = (x * 2.0 + 1.0) / (x - 3.0);
+            assert_eq!(t.eval(&[x]), want);
+        }
+    }
+
+    #[test]
+    fn constant_folding_collapses_const_subtrees() {
+        // exp(1) * 2 is folded into a single constant; one Load survives.
+        let t = Tape::build(1).c(1.0).exp().c(2.0).mul().load(0).mul().done();
+        assert_eq!(t.len(), 3, "tape {:?}", t);
+        assert!(matches!(t.ops[0], MicroOp::Const(c) if (c - 2.0 * 1f64.exp()).abs() < 1e-12));
+        assert_eq!(t.eval(&[3.0f64]), 3.0 * (2.0 * 1f64.exp()));
+    }
+
+    #[test]
+    #[should_panic(expected = "leaves 2 values")]
+    fn unbalanced_tape_panics() {
+        let _ = Tape::build(1).load(0).load(0).done();
+    }
+
+    #[test]
+    fn dup_swap_and_masks() {
+        // |clamp eps..hi mask| at, below, above the interval.
+        let m = Tape::build(1)
+            .load(0)
+            .c(0.25)
+            .ge()
+            .load(0)
+            .c(0.75)
+            .le()
+            .mul()
+            .done();
+        assert_eq!(m.eval(&[0.5f32]), 1.0);
+        assert_eq!(m.eval(&[0.1f32]), 0.0);
+        assert_eq!(m.eval(&[0.9f32]), 0.0);
+        let s = Tape::build(2).load(0).load(1).swap().sub().done(); // b - a
+        assert_eq!(s.eval(&[3.0f32, 10.0]), 7.0);
+        let d = Tape::build(1).load(0).dup().mul().done(); // x^2
+        assert_eq!(d.eval(&[-4.0f32]), 16.0);
+    }
+
+    #[test]
+    fn gelu_forward_matches_composed_unfused() {
+        let x = Tensor::from_slice(&[-2.0f32, -0.3, 0.0, 0.7, 1.9]);
+        let fused = ops::gelu(&x);
+        // The composed chain the tape mirrors, operation for operation.
+        let xx = ops::mul(&x, &x);
+        let x3 = ops::mul(&xx, &x);
+        let inner = ops::add(&ops::mul_scalar(&x3, GELU_A), &x);
+        let t = ops::tanh(&ops::mul_scalar(&inner, GELU_C));
+        let unfused = ops::mul(&ops::add_scalar(&t, 1.0), &ops::mul_scalar(&x, 0.5));
+        // Bitwise: the tape mirrors this chain operation for operation
+        // (tests/fused_parity.rs pins it across thread counts too).
+        assert_eq!(fused.to_vec::<f32>(), unfused.to_vec::<f32>());
+    }
+
+    #[test]
+    fn fused_mse_matches_composite_bitwise() {
+        crate::rng::manual_seed(41);
+        let p = Tensor::randn(&[317]);
+        let t = Tensor::randn(&[317]);
+        let fused = crate::dispatch::call("fused:mse", &[&p, &t], &[]);
+        let diff = ops::sub(&p, &t);
+        let composite = ops::mean(&ops::mul(&diff, &diff));
+        assert_eq!(fused.to_vec::<f32>(), composite.to_vec::<f32>());
+    }
+
+    #[test]
+    fn fused_bce_matches_composite_bitwise() {
+        crate::rng::manual_seed(43);
+        let p = ops::sigmoid(&Tensor::randn(&[253]));
+        let t = Tensor::rand(&[253]);
+        let fused = crate::dispatch::call("fused:bce", &[&p, &t], &[]);
+        let eps = BCE_EPS;
+        let pc = ops::clamp(&p, eps, 1.0 - eps);
+        let log_p = ops::log(&pc);
+        let log_1p = ops::log(&ops::add_scalar(&ops::neg(&pc), 1.0));
+        let omt = ops::add_scalar(&ops::neg(&t), 1.0);
+        let total = ops::add(&ops::mul(&t, &log_p), &ops::mul(&omt, &log_1p));
+        let composite = ops::neg(&ops::mean(&total));
+        assert_eq!(fused.to_vec::<f32>(), composite.to_vec::<f32>());
+    }
+
+    #[test]
+    fn fused_sigmoid_bce_matches_sigmoid_then_bce() {
+        crate::rng::manual_seed(47);
+        let x = Tensor::randn(&[199]);
+        let t = Tensor::rand(&[199]);
+        let fused = ops::bce_with_logits(&x, &t);
+        let composite = ops::bce_loss(&ops::sigmoid(&x), &t);
+        assert_eq!(fused.to_vec::<f32>(), composite.to_vec::<f32>());
+    }
+
+    #[test]
+    fn ln_tail_matches_broadcast_chain_bitwise() {
+        crate::rng::manual_seed(53);
+        let c = Tensor::randn(&[37, 64]);
+        let is = ops::add_scalar(&Tensor::rand(&[37, 1]), 0.5);
+        let g = Tensor::randn(&[64]);
+        let b = Tensor::randn(&[64]);
+        let fused = crate::dispatch::call("fused:ln_tail", &[&c, &is, &g, &b], &[]);
+        let composite = ops::add(&ops::mul(&ops::mul(&c, &is), &g), &b);
+        assert_eq!(fused.to_vec::<f32>(), composite.to_vec::<f32>());
+    }
+
+    #[test]
+    fn fused_sgd_step_matches_composed_update() {
+        let p = Tensor::from_slice(&[1.0f32, -2.0, 0.5]);
+        let g = Tensor::from_slice(&[0.5f32, 0.25, -1.0]);
+        let v = Tensor::zeros(&[3]);
+        let pr = p.detach();
+        crate::dispatch::call(
+            "fused:sgd_step",
+            &[&p, &g, &v],
+            &[Param::F32(0.1), Param::F32(0.9), Param::F32(0.0)],
+        );
+        // First step with zero velocity: v = g, p -= lr*g.
+        assert_eq!(v.to_vec::<f32>(), g.to_vec::<f32>());
+        let expect = ops::add(&pr, &ops::mul_scalar(&g, -0.1));
+        assert_eq!(p.to_vec::<f32>(), expect.to_vec::<f32>());
+    }
+
+    #[test]
+    fn fused_adam_step_first_step_magnitude_is_lr() {
+        let p = Tensor::from_slice(&[0.0f32]);
+        let g = Tensor::from_slice(&[42.0f32]);
+        let m = Tensor::zeros(&[1]);
+        let v = Tensor::zeros(&[1]);
+        crate::dispatch::call(
+            "fused:adam_step",
+            &[&p, &g, &m, &v],
+            &[
+                Param::F32(0.1),
+                Param::F32(0.9),
+                Param::F32(0.999),
+                Param::F32(1e-8),
+                Param::F32(0.0),
+                Param::F32(1.0 - 0.9),
+                Param::F32(1.0 - 0.999),
+            ],
+        );
+        assert!((p.to_vec::<f32>()[0] + 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_reuses_dead_input_storage() {
+        let n = 100_000;
+        let x = Tensor::from_vec(vec![0.5f32; n], &[n]);
+        let ptr = x.storage().ptr() as usize;
+        let y = crate::dispatch::call_owned("fused:gelu", vec![x], &[]);
+        assert_eq!(y.storage().ptr() as usize, ptr, "fused:gelu must steal a dead input");
+        let want = y.to_vec::<f32>()[0];
+        assert!((want - 0.345714).abs() < 1e-4, "gelu(0.5)={want}");
+    }
+
+    #[test]
+    fn fused_ops_emit_fused_spans() {
+        crate::profiler::start();
+        let x = Tensor::from_slice(&[0.1f32, -0.2]);
+        let _ = ops::gelu(&x);
+        let _ = ops::mse_loss(&x, &x);
+        let events = crate::profiler::stop();
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        for want in ["op:fused:gelu", "op:fused:mse"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+    }
+}

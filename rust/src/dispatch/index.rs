@@ -74,9 +74,37 @@ fn k_one_hot(ctx: &OpCtx) -> Tensor {
     Tensor::from_vec(data, &shape).to_device(indices.device())
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+use super::{OpSample, Param};
+
+fn s_embedding(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // f32 weight table
+    }
+    let w = super::sample_uniform(seed, &[5, 3], dt, -1.0, 1.0)?;
+    let idx = super::sample_indices(seed ^ 0x9, &[4], 5);
+    Some(OpSample { inputs: vec![w, idx], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_one_hot(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // canonical sample keyed at F32 (indices are i64)
+    }
+    let idx = super::sample_indices(seed, &[6], 4);
+    Some(OpSample { inputs: vec![idx], params: vec![Param::Usize(4)], grad_inputs: vec![] })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
     reg.add(
-        OpDef::new("embedding", 2, 2, &[DType::F32]).kernel_all(k_embedding).backward(bw_embedding),
+        OpDef::new("embedding", 2, 2, &[DType::F32])
+            .kernel_all(k_embedding)
+            .backward(bw_embedding)
+            .sample_inputs(s_embedding),
     );
-    reg.add(OpDef::new("one_hot", 1, 1, &[DType::I64]).kernel_all(k_one_hot));
+    reg.add(
+        OpDef::new("one_hot", 1, 1, &[DType::I64]).kernel_all(k_one_hot).sample_inputs(s_one_hot),
+    );
 }

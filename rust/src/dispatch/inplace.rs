@@ -165,13 +165,48 @@ fn k_fill_(ctx: &OpCtx) -> Tensor {
     dst.clone()
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples (in-place ops never record — grad_inputs stays empty)
+// ---------------------------------------------------------------------
+
+use super::{sample_uniform, OpSample, Param};
+
+fn s_inplace_binary(seed: u64, dt: DType) -> Option<OpSample> {
+    let dst = sample_uniform(seed, &[3, 4], dt, -1.5, 1.5)?;
+    let src = sample_uniform(seed ^ 0xA, &[3, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![dst, src], params: vec![], grad_inputs: vec![] })
+}
+
+fn s_axpy(seed: u64, dt: DType) -> Option<OpSample> {
+    let dst = sample_uniform(seed, &[3, 4], dt, -1.5, 1.5)?;
+    let src = sample_uniform(seed ^ 0xA, &[3, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![dst, src], params: vec![Param::F32(0.5)], grad_inputs: vec![] })
+}
+
+fn s_inplace_scalar(seed: u64, dt: DType) -> Option<OpSample> {
+    let dst = sample_uniform(seed, &[3, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![dst], params: vec![Param::F32(0.25)], grad_inputs: vec![] })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
-    reg.add(OpDef::new("add_", 2, 2, &[]).kernel_all(k_add_));
-    reg.add(OpDef::new("sub_", 2, 2, &[]).kernel_all(k_sub_));
-    reg.add(OpDef::new("mul_", 2, 2, &[]).kernel_all(k_mul_));
-    reg.add(OpDef::new("copy_", 2, 2, &[]).kernel_all(k_copy_));
-    reg.add(OpDef::new("axpy_", 2, 2, super::elementwise::FLOATS).kernel_all(k_axpy_));
-    reg.add(OpDef::new("mul_scalar_", 1, 1, super::elementwise::FLOATS).kernel_all(k_mul_scalar_));
-    reg.add(OpDef::new("add_scalar_", 1, 1, super::elementwise::FLOATS).kernel_all(k_add_scalar_));
-    reg.add(OpDef::new("fill_", 1, 1, &[]).kernel_all(k_fill_));
+    reg.add(OpDef::new("add_", 2, 2, &[]).kernel_all(k_add_).sample_inputs(s_inplace_binary));
+    reg.add(OpDef::new("sub_", 2, 2, &[]).kernel_all(k_sub_).sample_inputs(s_inplace_binary));
+    reg.add(OpDef::new("mul_", 2, 2, &[]).kernel_all(k_mul_).sample_inputs(s_inplace_binary));
+    reg.add(OpDef::new("copy_", 2, 2, &[]).kernel_all(k_copy_).sample_inputs(s_inplace_binary));
+    reg.add(
+        OpDef::new("axpy_", 2, 2, super::elementwise::FLOATS)
+            .kernel_all(k_axpy_)
+            .sample_inputs(s_axpy),
+    );
+    reg.add(
+        OpDef::new("mul_scalar_", 1, 1, super::elementwise::FLOATS)
+            .kernel_all(k_mul_scalar_)
+            .sample_inputs(s_inplace_scalar),
+    );
+    reg.add(
+        OpDef::new("add_scalar_", 1, 1, super::elementwise::FLOATS)
+            .kernel_all(k_add_scalar_)
+            .sample_inputs(s_inplace_scalar),
+    );
+    reg.add(OpDef::new("fill_", 1, 1, &[]).kernel_all(k_fill_).sample_inputs(s_inplace_scalar));
 }

@@ -180,8 +180,45 @@ fn bw_linear(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     })
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+use super::OpSample;
+
+fn s_matmul(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = super::sample_uniform(seed, &[3, 4], dt, -1.0, 1.0)?;
+    let b = super::sample_uniform(seed ^ 0xB0B, &[4, 2], dt, -1.0, 1.0)?;
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_bmm(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = super::sample_uniform(seed, &[2, 3, 4], dt, -1.0, 1.0)?;
+    let b = super::sample_uniform(seed ^ 0xB0B, &[2, 4, 2], dt, -1.0, 1.0)?;
+    Some(OpSample { inputs: vec![a, b], params: vec![], grad_inputs: vec![0, 1] })
+}
+
+fn s_linear(seed: u64, dt: DType) -> Option<OpSample> {
+    let x = super::sample_uniform(seed, &[3, 4], dt, -1.0, 1.0)?;
+    let w = super::sample_uniform(seed ^ 0xB0B, &[2, 4], dt, -1.0, 1.0)?;
+    let b = super::sample_uniform(seed ^ 0xBEE, &[2], dt, -0.5, 0.5)?;
+    Some(OpSample { inputs: vec![x, w, b], params: vec![], grad_inputs: vec![0, 1, 2] })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
-    reg.add(OpDef::new("matmul", 2, 2, FLOATS).kernel_all(k_matmul).backward(bw_matmul));
-    reg.add(OpDef::new("bmm", 2, 2, FLOATS).kernel_all(k_bmm).backward(bw_bmm));
-    reg.add(OpDef::new("linear", 2, 3, FLOATS).kernel_all(k_linear).backward(bw_linear));
+    reg.add(
+        OpDef::new("matmul", 2, 2, FLOATS)
+            .kernel_all(k_matmul)
+            .backward(bw_matmul)
+            .sample_inputs(s_matmul),
+    );
+    reg.add(
+        OpDef::new("bmm", 2, 2, FLOATS).kernel_all(k_bmm).backward(bw_bmm).sample_inputs(s_bmm),
+    );
+    reg.add(
+        OpDef::new("linear", 2, 3, FLOATS)
+            .kernel_all(k_linear)
+            .backward(bw_linear)
+            .sample_inputs(s_linear),
+    );
 }

@@ -1,6 +1,7 @@
 //! Loss kernels for the dispatcher: fused softmax/log-softmax and
-//! cross-entropy (f32 hot path), plus composite MSE/BCE (any float dtype,
-//! gradient graph built by the inner dispatched ops).
+//! cross-entropy (f32 hot path), plus MSE/BCE wrappers (any float dtype)
+//! that delegate to the single-pass `fused:*` tape kernels in
+//! [`super::fuse`].
 
 use crate::autograd::{ClosureFunction, Function, SavedTensor};
 use crate::device;
@@ -8,11 +9,10 @@ use crate::kernels::softmax::{
     cross_entropy_backward, cross_entropy_forward, log_softmax_backward_rows, log_softmax_rows,
     softmax_backward_rows, softmax_rows,
 };
-use crate::ops;
 use crate::tensor::{DType, Tensor};
 use crate::torsk_assert;
 
-use super::{OpCtx, OpDef, Param, Registry};
+use super::{OpCtx, OpDef, OpSample, Registry};
 
 fn rows_cols(t: &Tensor) -> (usize, usize) {
     torsk_assert!(t.ndim() >= 1, "softmax: needs at least 1 dim");
@@ -113,50 +113,78 @@ fn bw_cross_entropy(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     })
 }
 
-/// Composite mean-squared-error loss (mean reduction); works for any
-/// float dtype via the generic elementwise/reduce entries. The squared
-/// diff folds into the diff's own buffer when not recording (`diff` is
-/// dead after the multiply).
+/// Mean-squared-error loss (mean reduction), any float dtype. Delegates
+/// to the single-pass `fused:mse` tape — the inner dispatched call records
+/// the one fused autograd node, so this wrapper registers no backward.
+/// (The unfused `mean(mul(sub(p, t)))` composition stays available through
+/// the primitive ops; `tests/fused_parity.rs` pins both paths bit-equal.)
 fn k_mse_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "mse_loss: shape mismatch");
-    let diff = ops::sub(pred, target);
-    let sq = super::call_owned("mul", vec![diff.clone(), diff], &[]);
-    ops::mean(&sq)
+    super::call("fused:mse", &[pred, target], &[])
 }
 
-/// Composite binary cross-entropy on probabilities in (0,1), mean
-/// reduction. Owned temporaries route through `call_owned` so the chain
-/// reuses its intermediate buffers when not recording.
+/// Binary cross-entropy on probabilities in (0,1), mean reduction.
+/// Delegates to the single-pass `fused:bce` tape (clamp → logs → blend →
+/// chunked mean → neg in one traversal instead of eight).
 fn k_bce_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "bce_loss: shape mismatch");
-    let eps = 1e-7;
-    let p = ops::clamp(pred, eps, 1.0 - eps);
-    // -[t*log(p) + (1-t)*log(1-p)]
-    let log_p = ops::log(&p);
-    let one_minus_p = super::call_owned("add_scalar", vec![ops::neg(&p)], &[Param::F32(1.0)]);
-    let log_1p = super::call_owned("log", vec![one_minus_p], &[]);
-    let one_minus_t = super::call_owned("add_scalar", vec![ops::neg(target)], &[Param::F32(1.0)]);
-    let pos = ops::mul(target, &log_p);
-    let neg_term = super::call_owned("mul", vec![one_minus_t, log_1p], &[]);
-    let total = super::call_owned("add", vec![pos, neg_term], &[]);
-    super::call_owned("neg", vec![ops::mean(&total)], &[])
+    super::call("fused:bce", &[pred, target], &[])
+}
+
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+fn rows_sample(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // f32-only row kernels
+    }
+    let x = super::sample_uniform(seed, &[3, 5], dt, -2.0, 2.0)?;
+    Some(OpSample { inputs: vec![x], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_cross_entropy(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None;
+    }
+    let logits = super::sample_uniform(seed, &[4, 3], dt, -2.0, 2.0)?;
+    let targets = super::sample_indices(seed ^ 0x7, &[4], 3);
+    Some(OpSample { inputs: vec![logits, targets], params: vec![], grad_inputs: vec![0] })
 }
 
 pub(crate) fn register(reg: &mut Registry) {
+    // The wrappers reuse the fused entries' generators, so wrapper and
+    // fused op always gradcheck identical inputs.
+    use super::fuse::{s_bce, s_mse};
     const F32_ONLY: &[DType] = &[DType::F32];
-    reg.add(OpDef::new("softmax", 1, 1, F32_ONLY).kernel_all(k_softmax).backward(bw_softmax));
+    reg.add(
+        OpDef::new("softmax", 1, 1, F32_ONLY)
+            .kernel_all(k_softmax)
+            .backward(bw_softmax)
+            .sample_inputs(rows_sample),
+    );
     reg.add(
         OpDef::new("log_softmax", 1, 1, F32_ONLY)
             .kernel_all(k_log_softmax)
-            .backward(bw_log_softmax),
+            .backward(bw_log_softmax)
+            .sample_inputs(rows_sample),
     );
     reg.add(
         OpDef::new("cross_entropy", 2, 2, F32_ONLY)
             .kernel_all(k_cross_entropy)
-            .backward(bw_cross_entropy),
+            .backward(bw_cross_entropy)
+            .sample_inputs(s_cross_entropy),
     );
-    reg.add(OpDef::new("mse_loss", 2, 2, super::elementwise::FLOATS).kernel_all(k_mse_loss));
-    reg.add(OpDef::new("bce_loss", 2, 2, super::elementwise::FLOATS).kernel_all(k_bce_loss));
+    reg.add(
+        OpDef::new("mse_loss", 2, 2, super::elementwise::FLOATS)
+            .kernel_all(k_mse_loss)
+            .sample_inputs(s_mse),
+    );
+    reg.add(
+        OpDef::new("bce_loss", 2, 2, super::elementwise::FLOATS)
+            .kernel_all(k_bce_loss)
+            .sample_inputs(s_bce),
+    );
 }

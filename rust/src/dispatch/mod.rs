@@ -65,13 +65,46 @@
 //! vs `threads=4` rows at the same size for scaling, and the
 //! `mlp_train_loop` record for the steady-state allocator story.
 //!
+//! # Fusion
+//!
+//! Composite hot paths (the BCE/MSE loss chains, the layer-norm
+//! scale/shift tail, GELU, optimizer updates) used to run as 4–8
+//! separately dispatched TensorIter passes, re-touching the same buffers
+//! every time. The [`fuse`] module collapses each chain into ONE pass:
+//!
+//! * **Tape format.** A fused kernel is a [`fuse::Tape`] — a constant-
+//!   folded stack program of micro-ops ([`fuse::MicroOp`]: load input /
+//!   push constant / dup / swap / unary / binary) interpreted per element
+//!   inside a single `parallel_for` loop. Tapes are built once, at
+//!   registration time, with [`fuse::Tape::build`]'s builder; stack depth
+//!   and operand arity are checked as the tape is composed. Map-reduce
+//!   tapes (losses) fold their per-element values with the same fixed
+//!   [`iter::REDUCE_CHUNK`]-wide partials as the unfused reduction
+//!   driver, so they stay bit-identical at every thread count.
+//! * **Registering a fused composite.** Declare an `OpDef` named
+//!   `fused:<name>` whose kernel runs the tape via the `fuse` drivers,
+//!   attach a `BackwardFn` whose gradients are tapes too (one fused
+//!   autograd node instead of a chain), and register it like any other
+//!   op. The profiler then emits one `op:fused:<name>` span per call.
+//! * **Fused vs unfused.** The composite wrappers (`mse_loss`,
+//!   `bce_loss`, `layer_norm`, the optimizers) delegate to the fused
+//!   entry whenever the operand shapes/dtypes fit its tape (same-shape
+//!   float operands; `[.., 1]` row stats and `[d]` affine vectors are
+//!   expressed as tape access patterns, not materialized broadcasts).
+//!   Anything else — and user code composing `ops::*` directly — takes
+//!   the generic unfused TensorIter path. Both paths are pinned
+//!   bit-for-bit equal in `tests/fused_parity.rs`.
+//!
 //! # Registering a new op
 //!
 //! A new operator (or a new backend for an existing one) is a registry
-//! entry, not a code audit:
+//! entry, not a code audit. Every op must declare a
+//! [`OpDef::sample_inputs`] generator — the OpInfo machinery
+//! (`tests/opinfo.rs`) uses it to smoke-call and numerically gradcheck
+//! every registered op at F32 and F64; registration panics without one:
 //!
 //! ```no_run
-//! use torsk::dispatch::{self, DispatchKey, OpCtx, OpDef, Param};
+//! use torsk::dispatch::{self, DispatchKey, OpCtx, OpDef, OpSample, Param};
 //! use torsk::tensor::{DType, Tensor};
 //!
 //! // 1. A kernel: host resolves shapes, computes (or queues) the result.
@@ -82,20 +115,28 @@
 //!     torsk::ops::relu(&torsk::ops::add_scalar(x, shift))
 //! }
 //!
-//! // 2. One declaration: schema + per-key kernels (+ optional backward).
+//! // 2. An OpInfo sample: one generated invocation per (seed, dtype).
+//! fn shifted_relu_samples(seed: u64, dt: DType) -> Option<OpSample> {
+//!     let x = dispatch::sample_uniform(seed, &[2, 3], dt, 0.2, 2.0)?;
+//!     Some(OpSample { inputs: vec![x], params: vec![Param::F32(1.0)], grad_inputs: vec![0] })
+//! }
+//!
+//! // 3. One declaration: schema + per-key kernels (+ optional backward).
 //! dispatch::register_op(
 //!     OpDef::new("shifted_relu", 1, 1, &[DType::F32, DType::F64])
 //!         .kernel(DispatchKey::Cpu, shifted_relu)
-//!         .kernel(DispatchKey::Sim, shifted_relu),
+//!         .kernel(DispatchKey::Sim, shifted_relu)
+//!         .sample_inputs(shifted_relu_samples),
 //! );
 //!
-//! // 3. Call it — profiling, device routing and schema checks are free.
+//! // 4. Call it — profiling, device routing and schema checks are free.
 //! let y = dispatch::call("shifted_relu", &[&Tensor::ones(&[4])], &[Param::F32(1.0)]);
 //! assert_eq!(y.shape(), &[4]);
 //! ```
 
 pub(crate) mod conv;
 pub(crate) mod elementwise;
+pub mod fuse;
 pub(crate) mod index;
 pub(crate) mod inplace;
 pub(crate) mod iter;
@@ -307,6 +348,131 @@ pub type KernelFn = fn(&OpCtx) -> Tensor;
 /// yields one gradient per tensor input (in input order).
 pub type BackwardFn = fn(&OpCtx, &Tensor) -> Box<dyn Function>;
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+/// One generated invocation of an op, produced by its
+/// [`OpDef::sample_inputs`] generator: the TorchBench-style OpInfo record
+/// that lets `tests/opinfo.rs` smoke-call and numerically gradcheck every
+/// registered op without per-op test code.
+pub struct OpSample {
+    /// Tensor inputs, in schema order.
+    pub inputs: Vec<Tensor>,
+    /// Scalar params, in kernel order.
+    pub params: Vec<Param>,
+    /// Indices of `inputs` whose gradients are numerically checked.
+    /// Empty = the op is not differentiable (or not via this sample).
+    pub grad_inputs: Vec<usize>,
+}
+
+/// Sample generator: `(seed, dtype)` → one invocation, or `None` when the
+/// op does not support that dtype (f32-only kernels return `None` at F64).
+/// Distinct seeds must yield distinct data so gradcheck covers more than
+/// one point.
+pub type SampleFn = fn(u64, DType) -> Option<OpSample>;
+
+/// Everything `tests/opinfo.rs` needs about one registered op.
+pub struct OpInfo {
+    pub name: &'static str,
+    pub min_inputs: usize,
+    pub max_inputs: usize,
+    /// The op registered a [`BackwardFn`] (composite ops without one can
+    /// still be differentiable through their inner recorded calls — the
+    /// sample's `grad_inputs` is the source of truth for gradcheck).
+    pub has_backward: bool,
+    pub sample: SampleFn,
+}
+
+/// OpInfo metadata for a registered op (None if the name is unknown).
+pub fn op_info(name: &str) -> Option<OpInfo> {
+    let def = { REGISTRY.read().unwrap().ops.get(name).copied() }?;
+    Some(OpInfo {
+        name: def.schema.name,
+        min_inputs: def.schema.min_inputs,
+        max_inputs: def.schema.max_inputs,
+        has_backward: def.backward.is_some(),
+        sample: def.samples.expect("registration enforces samples"),
+    })
+}
+
+fn sample_rng(seed: u64) -> crate::rng::Rng {
+    crate::rng::Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Sample helper: uniform values in `[lo, hi)` at `dt` (`None` for I64 —
+/// float samples only; integer inputs use [`sample_indices`]).
+pub fn sample_uniform(seed: u64, shape: &[usize], dt: DType, lo: f32, hi: f32) -> Option<Tensor> {
+    let mut r = sample_rng(seed);
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| r.uniform_range(lo, hi)).collect();
+    match dt {
+        DType::F32 => Some(Tensor::from_vec(data, shape)),
+        DType::F64 => {
+            Some(Tensor::from_vec(data.into_iter().map(|v| v as f64).collect::<Vec<f64>>(), shape))
+        }
+        DType::I64 => None,
+    }
+}
+
+/// Sample helper: uniform magnitudes in `[margin, margin+span)` with
+/// random signs — keeps gradcheck away from kinks at zero (relu, abs).
+pub fn sample_away_from_zero(
+    seed: u64,
+    shape: &[usize],
+    dt: DType,
+    margin: f32,
+    span: f32,
+) -> Option<Tensor> {
+    let mut r = sample_rng(seed);
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n)
+        .map(|_| {
+            let v = r.uniform_range(margin, margin + span);
+            if r.bernoulli(0.5) {
+                -v
+            } else {
+                v
+            }
+        })
+        .collect();
+    match dt {
+        DType::F32 => Some(Tensor::from_vec(data, shape)),
+        DType::F64 => {
+            Some(Tensor::from_vec(data.into_iter().map(|v| v as f64).collect::<Vec<f64>>(), shape))
+        }
+        DType::I64 => None,
+    }
+}
+
+/// Sample helper: strictly distinct values (max/argmax samples must not
+/// tie, or the finite difference straddles the tie-break).
+pub fn sample_distinct(seed: u64, shape: &[usize], dt: DType) -> Option<Tensor> {
+    let mut r = sample_rng(seed);
+    let n: usize = shape.iter().product();
+    let mut order: Vec<usize> = (0..n).collect();
+    r.shuffle(&mut order);
+    let mut data = vec![0.0f32; n];
+    for (rank, &i) in order.iter().enumerate() {
+        data[i] = rank as f32 * 0.5 + r.uniform_range(0.0, 0.2) - n as f32 * 0.125;
+    }
+    match dt {
+        DType::F32 => Some(Tensor::from_vec(data, shape)),
+        DType::F64 => {
+            Some(Tensor::from_vec(data.into_iter().map(|v| v as f64).collect::<Vec<f64>>(), shape))
+        }
+        DType::I64 => None,
+    }
+}
+
+/// Sample helper: i64 indices in `[0, hi)`.
+pub fn sample_indices(seed: u64, shape: &[usize], hi: usize) -> Tensor {
+    let mut r = sample_rng(seed);
+    let n: usize = shape.iter().product();
+    let data: Vec<i64> = (0..n).map(|_| r.below(hi as u64) as i64).collect();
+    Tensor::from_vec(data, shape)
+}
+
 /// Declared call signature of an op.
 #[derive(Clone, Copy, Debug)]
 pub struct OpSchema {
@@ -356,6 +522,9 @@ pub struct OpDef {
     /// when all operands share the output's shape (the TensorIter Fast
     /// plan) — the precondition for [`call_owned`]'s output-stealing.
     reuse_output: bool,
+    /// OpInfo sample generator — mandatory; registration panics without
+    /// one, so no op can dodge the auto-generated gradcheck suite.
+    samples: Option<SampleFn>,
 }
 
 impl OpDef {
@@ -372,7 +541,14 @@ impl OpDef {
             kernels: [None; NUM_BACKEND_KEYS],
             backward: None,
             reuse_output: false,
+            samples: None,
         }
+    }
+
+    /// Attach the mandatory OpInfo sample generator (see [`OpSample`]).
+    pub fn sample_inputs(mut self, f: SampleFn) -> OpDef {
+        self.samples = Some(f);
+        self
     }
 
     /// Declare the op safe for output-stealing (see the `reuse_output`
@@ -415,9 +591,14 @@ pub struct Registry {
 }
 
 impl Registry {
-    /// Insert an op definition; duplicate names are a bug.
+    /// Insert an op definition; duplicate names and sample-less ops are
+    /// bugs (every op must be reachable by the OpInfo gradcheck suite).
     pub fn add(&mut self, def: OpDef) {
         let name = def.schema.name;
+        torsk_assert!(
+            def.samples.is_some(),
+            "op '{name}' registered without sample_inputs — every op must provide OpInfo samples"
+        );
         torsk_assert!(
             self.ops.insert(name, def).is_none(),
             "op '{name}' registered twice"
@@ -437,12 +618,18 @@ static REGISTRY: once_cell::sync::Lazy<RwLock<Registry>> = once_cell::sync::Lazy
     index::register(&mut r);
     inplace::register(&mut r);
     views::register(&mut r);
+    fuse::register(&mut r);
     RwLock::new(r)
 });
 
 /// Register an additional operator at runtime (new ops, new backends).
+/// Like the built-ins, runtime ops must carry [`OpDef::sample_inputs`].
 pub fn register_op(def: OpDef) {
     let name = def.schema.name;
+    torsk_assert!(
+        def.samples.is_some(),
+        "op '{name}' registered without sample_inputs — every op must provide OpInfo samples"
+    );
     // Check-then-insert without panicking under the lock (a poisoned
     // registry would take every subsequent op call down with it).
     let duplicate = {
@@ -664,10 +851,36 @@ mod tests {
         call("definitely_not_an_op", &[&a], &[]);
     }
 
+    /// Minimal sample generator for runtime-registered test ops.
+    fn test_samples(seed: u64, dt: DType) -> Option<OpSample> {
+        let x = sample_uniform(seed, &[3], dt, -1.0, 1.0)?;
+        Some(OpSample { inputs: vec![x], params: vec![], grad_inputs: vec![] })
+    }
+
     #[test]
     #[should_panic(expected = "registered twice")]
     fn duplicate_registration_panics() {
-        register_op(OpDef::new("add", 2, 2, &[]));
+        register_op(OpDef::new("add", 2, 2, &[]).sample_inputs(test_samples));
+    }
+
+    #[test]
+    #[should_panic(expected = "without sample_inputs")]
+    fn sampleless_registration_panics() {
+        register_op(OpDef::new("test_no_samples", 1, 1, &[]));
+    }
+
+    #[test]
+    fn op_info_exposes_samples_for_every_op() {
+        for name in op_names() {
+            let info = op_info(name).expect("registered op has info");
+            assert_eq!(info.name, name);
+            // Every op yields at least one sample at F32 or (i64-input
+            // ops) declares itself via a canonical F32-keyed sample.
+            let any = (info.sample)(0, DType::F32).is_some()
+                || (info.sample)(0, DType::F64).is_some();
+            assert!(any, "op '{name}' produced no sample at any float dtype");
+        }
+        assert!(op_info("not_an_op").is_none());
     }
 
     #[test]
@@ -688,7 +901,8 @@ mod tests {
         register_op(
             OpDef::new("test_double", 1, 1, &[DType::F32])
                 .kernel(DispatchKey::Cpu, double)
-                .kernel(DispatchKey::Sim, double),
+                .kernel(DispatchKey::Sim, double)
+                .sample_inputs(test_samples),
         );
         let y = call("test_double", &[&Tensor::from_slice(&[1.5f32])], &[]);
         assert_eq!(y.to_vec::<f32>(), vec![3.0]);
@@ -700,7 +914,11 @@ mod tests {
         fn id(ctx: &OpCtx) -> Tensor {
             ctx.input(0).clone()
         }
-        register_op(OpDef::new("test_cpu_only", 1, 1, &[]).kernel(DispatchKey::Cpu, id));
+        register_op(
+            OpDef::new("test_cpu_only", 1, 1, &[])
+                .kernel(DispatchKey::Cpu, id)
+                .sample_inputs(test_samples),
+        );
         let a = Tensor::ones(&[1]).to_sim();
         call("test_cpu_only", &[&a], &[]);
     }

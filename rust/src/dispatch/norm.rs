@@ -141,24 +141,26 @@ fn bw_batch_norm_train(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     })
 }
 
-/// Composite layer normalization over the last dimension.
+/// Layer normalization over the last dimension.
 /// Inputs: [input, gamma, beta]; params: [eps].
+///
+/// Row statistics run through the deterministic parallel reduction driver
+/// (`iter::run_reduce` behind `mean_dims`); the scale/shift tail —
+/// `(centered * inv_std) * gamma + beta`, previously three broadcast
+/// passes — is one `fused:ln_tail` tape pass recording a single autograd
+/// node.
 fn k_layer_norm(ctx: &OpCtx) -> Tensor {
     let (input, gamma, beta) = (ctx.input(0), ctx.input(1), ctx.input(2));
     let eps = ctx.f32(0);
     let last = input.ndim() - 1;
     let d = input.size(last);
     torsk_assert!(gamma.shape() == [d] && beta.shape() == [d], "layer_norm: affine shape");
-    // Row statistics run through the deterministic parallel reduction
-    // driver (`iter::run_reduce` behind `mean_dims`): one task per block
-    // of rows, so layer-norm is row-parallel at any size.
     let mean = ops::mean_dims(input, &[last], true);
     let centered = ops::sub(input, &mean);
     let var = ops::mean_dims(&ops::mul(&centered, &centered), &[last], true);
     let inv_std =
         super::call_owned("pow_scalar", vec![ops::add_scalar(&var, eps)], &[super::Param::F32(-0.5)]);
-    let xhat = ops::mul(&centered, &inv_std);
-    ops::add(&ops::mul(&xhat, gamma), beta)
+    super::call("fused:ln_tail", &[&centered, &inv_std, gamma, beta], &[])
 }
 
 /// Composite inverted dropout. Params: [p, training].
@@ -179,14 +181,80 @@ fn k_dropout(ctx: &OpCtx) -> Tensor {
     ops::mul(input, &super::elementwise::cast_to(&mask, input.dtype()))
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+use super::{sample_uniform, OpSample, Param};
+
+fn bn_sample(seed: u64, dt: DType, train: bool) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // f32-only NCHW kernels
+    }
+    let x = sample_uniform(seed, &[2, 3, 2, 2], dt, -2.0, 2.0)?;
+    let gamma = sample_uniform(seed ^ 0x1, &[3], dt, 0.5, 1.5)?;
+    let beta = sample_uniform(seed ^ 0x2, &[3], dt, -0.5, 0.5)?;
+    let rm = sample_uniform(seed ^ 0x3, &[3], dt, -0.5, 0.5)?;
+    let rv = sample_uniform(seed ^ 0x4, &[3], dt, 0.5, 1.5)?;
+    let params = if train {
+        vec![Param::F32(0.1), Param::F32(1e-5)]
+    } else {
+        vec![Param::F32(1e-5)]
+    };
+    Some(OpSample { inputs: vec![x, gamma, beta, rm, rv], params, grad_inputs: vec![0, 1, 2] })
+}
+
+fn s_batch_norm_eval(seed: u64, dt: DType) -> Option<OpSample> {
+    bn_sample(seed, dt, false)
+}
+
+fn s_batch_norm_train(seed: u64, dt: DType) -> Option<OpSample> {
+    bn_sample(seed, dt, true)
+}
+
+fn s_layer_norm(seed: u64, dt: DType) -> Option<OpSample> {
+    let x = sample_uniform(seed, &[3, 6], dt, -2.0, 2.0)?;
+    let gamma = sample_uniform(seed ^ 0x1, &[6], dt, 0.5, 1.5)?;
+    let beta = sample_uniform(seed ^ 0x2, &[6], dt, -0.5, 0.5)?;
+    Some(OpSample {
+        inputs: vec![x, gamma, beta],
+        params: vec![Param::F32(1e-5)],
+        grad_inputs: vec![0, 1, 2],
+    })
+}
+
+fn s_dropout(seed: u64, dt: DType) -> Option<OpSample> {
+    // training=false: the identity path is the deterministic one a
+    // numeric gradcheck can verify.
+    let x = sample_uniform(seed, &[3, 4], dt, -2.0, 2.0)?;
+    Some(OpSample {
+        inputs: vec![x],
+        params: vec![Param::F32(0.5), Param::Bool(false)],
+        grad_inputs: vec![0],
+    })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
     const F32_ONLY: &[DType] = &[DType::F32];
-    reg.add(OpDef::new("batch_norm", 5, 5, F32_ONLY).kernel_all(k_batch_norm_eval));
+    reg.add(
+        OpDef::new("batch_norm", 5, 5, F32_ONLY)
+            .kernel_all(k_batch_norm_eval)
+            .sample_inputs(s_batch_norm_eval),
+    );
     reg.add(
         OpDef::new("batch_norm_train", 5, 5, F32_ONLY)
             .kernel_all(k_batch_norm_train)
-            .backward(bw_batch_norm_train),
+            .backward(bw_batch_norm_train)
+            .sample_inputs(s_batch_norm_train),
     );
-    reg.add(OpDef::new("layer_norm", 3, 3, super::elementwise::FLOATS).kernel_all(k_layer_norm));
-    reg.add(OpDef::new("dropout", 1, 1, super::elementwise::FLOATS).kernel_all(k_dropout));
+    reg.add(
+        OpDef::new("layer_norm", 3, 3, super::elementwise::FLOATS)
+            .kernel_all(k_layer_norm)
+            .sample_inputs(s_layer_norm),
+    );
+    reg.add(
+        OpDef::new("dropout", 1, 1, super::elementwise::FLOATS)
+            .kernel_all(k_dropout)
+            .sample_inputs(s_dropout),
+    );
 }

@@ -8,7 +8,7 @@ use crate::kernels::pool::{
 use crate::tensor::{DType, Tensor};
 use crate::torsk_assert;
 
-use super::{OpCtx, OpDef, Registry};
+use super::{OpCtx, OpDef, OpSample, Param, Registry};
 
 fn pool_args(ctx: &OpCtx) -> Pool2dArgs {
     let input = ctx.input(0);
@@ -96,11 +96,56 @@ fn k_global_avgpool(ctx: &OpCtx) -> Tensor {
     pooled.reshape(&[n, c])
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+fn pool_params() -> Vec<Param> {
+    vec![Param::Usize(2), Param::Usize(2), Param::Usize(0)]
+}
+
+fn s_maxpool(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None;
+    }
+    // Distinct values: a tied window max makes the subgradient ambiguous.
+    let x = super::sample_distinct(seed, &[1, 2, 4, 4], dt)?;
+    Some(OpSample { inputs: vec![x], params: pool_params(), grad_inputs: vec![0] })
+}
+
+fn s_avgpool(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None;
+    }
+    let x = super::sample_uniform(seed, &[1, 2, 4, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![x], params: pool_params(), grad_inputs: vec![0] })
+}
+
+fn s_global_avgpool(seed: u64, dt: DType) -> Option<OpSample> {
+    if dt != DType::F32 {
+        return None; // composite, but NCHW sample kept canonical at f32
+    }
+    let x = super::sample_uniform(seed, &[2, 3, 3, 3], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![x], params: vec![], grad_inputs: vec![0] })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
     const F32_ONLY: &[DType] = &[DType::F32];
-    reg.add(OpDef::new("maxpool2d", 1, 1, F32_ONLY).kernel_all(k_maxpool2d).backward(bw_maxpool2d));
-    reg.add(OpDef::new("avgpool2d", 1, 1, F32_ONLY).kernel_all(k_avgpool2d).backward(bw_avgpool2d));
     reg.add(
-        OpDef::new("global_avgpool2d", 1, 1, super::elementwise::FLOATS).kernel_all(k_global_avgpool),
+        OpDef::new("maxpool2d", 1, 1, F32_ONLY)
+            .kernel_all(k_maxpool2d)
+            .backward(bw_maxpool2d)
+            .sample_inputs(s_maxpool),
+    );
+    reg.add(
+        OpDef::new("avgpool2d", 1, 1, F32_ONLY)
+            .kernel_all(k_avgpool2d)
+            .backward(bw_avgpool2d)
+            .sample_inputs(s_avgpool),
+    );
+    reg.add(
+        OpDef::new("global_avgpool2d", 1, 1, super::elementwise::FLOATS)
+            .kernel_all(k_global_avgpool)
+            .sample_inputs(s_global_avgpool),
     );
 }

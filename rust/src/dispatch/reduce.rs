@@ -356,12 +356,63 @@ fn k_argmax(ctx: &OpCtx) -> Tensor {
     }
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+use super::{sample_distinct, sample_uniform, OpSample, Param};
+
+fn s_full_reduce(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![a], params: vec![], grad_inputs: vec![0] })
+}
+
+fn dims_params(seed: u64) -> Vec<Param> {
+    // Alternate reduced axis and keepdim across seeds.
+    let dims = vec![(seed % 2) as usize];
+    vec![Param::UsizeList(dims), Param::Bool(seed % 3 == 0)]
+}
+
+fn s_dims_reduce(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_uniform(seed, &[3, 4], dt, -1.5, 1.5)?;
+    Some(OpSample { inputs: vec![a], params: dims_params(seed), grad_inputs: vec![0] })
+}
+
+fn s_max_all(seed: u64, dt: DType) -> Option<OpSample> {
+    // Distinct values: a tied max would put the finite difference on the
+    // winner-switch discontinuity.
+    let a = sample_distinct(seed, &[3, 3], dt)?;
+    Some(OpSample { inputs: vec![a], params: vec![], grad_inputs: vec![0] })
+}
+
+fn s_argmax(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = sample_distinct(seed, &[3, 4], dt)?;
+    Some(OpSample { inputs: vec![a], params: vec![Param::Usize(1)], grad_inputs: vec![] })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
     use super::elementwise::NUMERIC;
-    reg.add(OpDef::new("sum", 1, 1, NUMERIC).kernel_all(k_sum).backward(bw_sum));
-    reg.add(OpDef::new("sum_dims", 1, 1, NUMERIC).kernel_all(k_sum_dims).backward(bw_sum_dims));
-    reg.add(OpDef::new("mean", 1, 1, FLOATS).kernel_all(k_mean));
-    reg.add(OpDef::new("mean_dims", 1, 1, FLOATS).kernel_all(k_mean_dims));
-    reg.add(OpDef::new("max_all", 1, 1, FLOATS).kernel_all(k_max_all).backward(bw_max_all));
-    reg.add(OpDef::new("argmax_dim", 1, 1, &[]).kernel_all(k_argmax));
+    reg.add(
+        OpDef::new("sum", 1, 1, NUMERIC)
+            .kernel_all(k_sum)
+            .backward(bw_sum)
+            .sample_inputs(s_full_reduce),
+    );
+    reg.add(
+        OpDef::new("sum_dims", 1, 1, NUMERIC)
+            .kernel_all(k_sum_dims)
+            .backward(bw_sum_dims)
+            .sample_inputs(s_dims_reduce),
+    );
+    reg.add(OpDef::new("mean", 1, 1, FLOATS).kernel_all(k_mean).sample_inputs(s_full_reduce));
+    reg.add(
+        OpDef::new("mean_dims", 1, 1, FLOATS).kernel_all(k_mean_dims).sample_inputs(s_dims_reduce),
+    );
+    reg.add(
+        OpDef::new("max_all", 1, 1, FLOATS)
+            .kernel_all(k_max_all)
+            .backward(bw_max_all)
+            .sample_inputs(s_max_all),
+    );
+    reg.add(OpDef::new("argmax_dim", 1, 1, &[]).kernel_all(k_argmax).sample_inputs(s_argmax));
 }

@@ -84,6 +84,24 @@ fn bw_cat(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     })
 }
 
+// ---------------------------------------------------------------------
+// OpInfo samples
+// ---------------------------------------------------------------------
+
+use super::{OpSample, Param};
+
+fn s_cat(seed: u64, dt: DType) -> Option<OpSample> {
+    let a = super::sample_uniform(seed, &[2, 3], dt, -1.5, 1.5)?;
+    let b = super::sample_uniform(seed ^ 0xC, &[2, 3], dt, -1.5, 1.5)?;
+    Some(OpSample {
+        inputs: vec![a, b],
+        params: vec![Param::Usize((seed % 2) as usize)],
+        grad_inputs: vec![0, 1],
+    })
+}
+
 pub(crate) fn register(reg: &mut Registry) {
-    reg.add(OpDef::new("cat", 1, usize::MAX, &[]).kernel_all(k_cat).backward(bw_cat));
+    reg.add(
+        OpDef::new("cat", 1, usize::MAX, &[]).kernel_all(k_cat).backward(bw_cat).sample_inputs(s_cat),
+    );
 }

@@ -203,6 +203,17 @@ impl Module for ReLU {
     }
 }
 
+/// GELU as a module (runs the single-pass `fused:gelu` tape kernel).
+pub struct Gelu;
+impl Module for Gelu {
+    fn forward(&self, input: &Tensor) -> Tensor {
+        ops::gelu(input)
+    }
+    fn name(&self) -> &'static str {
+        "Gelu"
+    }
+}
+
 /// Sigmoid as a module.
 pub struct Sigmoid;
 impl Module for Sigmoid {

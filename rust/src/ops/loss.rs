@@ -31,6 +31,15 @@ pub fn bce_loss(pred: &Tensor, target: &Tensor) -> Tensor {
     dispatch::call("bce_loss", &[pred, target], &[])
 }
 
+/// Sigmoid + binary cross-entropy on raw logits, fused into one pass
+/// (`fused:sigmoid_bce`) — the `BCEWithLogits` hot composite: where
+/// `bce_loss(&sigmoid(&x), &t)` dispatched ~9 elementwise/reduction
+/// kernels, this reads `x`/`t` once and reduces in the same traversal.
+/// Bit-identical to the composed form (see `tests/fused_parity.rs`).
+pub fn bce_with_logits(logits: &Tensor, target: &Tensor) -> Tensor {
+    dispatch::call("fused:sigmoid_bce", &[logits, target], &[])
+}
+
 /// Classification accuracy (no grad): logits [N, C] vs i64 targets [N].
 pub fn accuracy(logits: &Tensor, targets: &Tensor) -> f32 {
     let pred = super::argmax_dim(logits, 1);

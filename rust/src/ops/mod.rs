@@ -78,6 +78,9 @@ impl Tensor {
     pub fn relu(&self) -> Tensor {
         relu(self)
     }
+    pub fn gelu(&self) -> Tensor {
+        gelu(self)
+    }
     pub fn sigmoid(&self) -> Tensor {
         sigmoid(self)
     }

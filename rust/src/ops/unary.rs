@@ -24,6 +24,13 @@ pub fn relu(a: &Tensor) -> Tensor {
     dispatch::call("relu", &[a], &[])
 }
 
+/// GELU (tanh approximation), fused: forward and backward each run as a
+/// single micro-op tape pass (`fused:gelu`) instead of the 9-op chain
+/// `0.5*x*(1 + tanh(√(2/π)*(x + 0.044715*x³)))`.
+pub fn gelu(a: &Tensor) -> Tensor {
+    dispatch::call("fused:gelu", &[a], &[])
+}
+
 /// Elementwise logistic sigmoid with autograd.
 pub fn sigmoid(a: &Tensor) -> Tensor {
     dispatch::call("sigmoid", &[a], &[])

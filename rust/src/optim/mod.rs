@@ -1,7 +1,14 @@
 //! Optimizers — "just Python programs" (§4.1): they read `.grad` and apply
 //! in-place updates under `no_grad`, exactly the loop a user could write.
+//!
+//! The updates themselves route through the fused dispatcher kernels
+//! (`fused:sgd_step` / `fused:adam_step`): one pass over each param +
+//! state buffer instead of the 2–7 separately dispatched `mul_scalar_` /
+//! `axpy_` / `sqrt` / `div` passes of the naive composition, with
+//! bit-identical results (pinned by `tests/fused_parity.rs`).
 
 use crate::autograd::no_grad;
+use crate::dispatch::{self, Param};
 use crate::tensor::Tensor;
 
 /// The optimizer interface (`torch.optim.Optimizer`).
@@ -47,29 +54,21 @@ impl Sgd {
 impl Optimizer for Sgd {
     fn step(&mut self) {
         no_grad(|| {
+            let params = [
+                Param::F32(self.learning_rate),
+                Param::F32(self.momentum),
+                Param::F32(self.weight_decay),
+            ];
             for (i, p) in self.params.iter().enumerate() {
                 let Some(g) = p.grad() else { continue };
-                let mut g = g;
-                if self.weight_decay != 0.0 {
-                    let wd = crate::ops::mul_scalar(&p.detach(), self.weight_decay);
-                    g = crate::ops::add(&g, &wd);
-                }
+                let g = g.contiguous();
                 if self.momentum != 0.0 {
-                    let v = match &self.velocity[i] {
-                        Some(v) => {
-                            v.mul_scalar_(self.momentum);
-                            v.add_(&g);
-                            v.clone()
-                        }
-                        None => {
-                            let v = g.contiguous();
-                            self.velocity[i] = Some(v.clone());
-                            v
-                        }
-                    };
-                    p.axpy_(-self.learning_rate, &v);
+                    // Zero-initialized velocity reproduces the classic
+                    // first step (`v = g`) exactly: 0*mu + g == g.
+                    let v = self.velocity[i].get_or_insert_with(|| p.zeros_like()).clone();
+                    dispatch::call("fused:sgd_step", &[p, &g, &v], &params);
                 } else {
-                    p.axpy_(-self.learning_rate, &g);
+                    dispatch::call("fused:sgd_step", &[p, &g], &params);
                 }
             }
         });
@@ -131,27 +130,23 @@ impl Optimizer for Adam {
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         no_grad(|| {
+            let params = [
+                Param::F32(self.learning_rate),
+                Param::F32(self.beta1),
+                Param::F32(self.beta2),
+                Param::F32(self.eps),
+                Param::F32(self.weight_decay),
+                Param::F32(bc1),
+                Param::F32(bc2),
+            ];
             for (i, p) in self.params.iter().enumerate() {
                 let Some(g) = p.grad() else { continue };
-                let mut g = g.contiguous();
-                if self.weight_decay != 0.0 {
-                    g = crate::ops::add(&g, &crate::ops::mul_scalar(&p.detach(), self.weight_decay));
-                }
-                let m = self.m[i].get_or_insert_with(|| Tensor::zeros(g.shape()).to_device(g.device()));
-                let v = self.v[i].get_or_insert_with(|| Tensor::zeros(g.shape()).to_device(g.device()));
-                // m = b1*m + (1-b1)*g
-                m.mul_scalar_(self.beta1);
-                m.axpy_(1.0 - self.beta1, &g);
-                // v = b2*v + (1-b2)*g^2
-                let g2 = crate::ops::mul(&g, &g);
-                v.mul_scalar_(self.beta2);
-                v.axpy_(1.0 - self.beta2, &g2);
-                // p -= lr * (m/bc1) / (sqrt(v/bc2) + eps)
-                let mhat = crate::ops::mul_scalar(m, 1.0 / bc1);
-                let vhat = crate::ops::mul_scalar(v, 1.0 / bc2);
-                let denom = crate::ops::add_scalar(&crate::ops::sqrt(&vhat), self.eps);
-                let update = crate::ops::div(&mhat, &denom);
-                p.axpy_(-self.learning_rate, &update);
+                let g = g.contiguous();
+                let m = self.m[i].get_or_insert_with(|| p.zeros_like()).clone();
+                let v = self.v[i].get_or_insert_with(|| p.zeros_like()).clone();
+                // One fused pass: m/v moment updates, bias correction and
+                // the parameter step — no intermediate tensors at all.
+                dispatch::call("fused:adam_step", &[p, &g, &m, &v], &params);
             }
         });
     }

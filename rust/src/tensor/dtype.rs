@@ -75,6 +75,86 @@ pub trait Element:
     fn to_f64(self) -> f64;
 }
 
+/// Floating [`Element`]s with the transcendental surface the fused
+/// micro-op interpreter ([`crate::dispatch::fuse`]) needs. One generic
+/// tape evaluator monomorphizes over this trait, so fused kernels run
+/// identically (but at native precision) for F32 and F64.
+pub trait FloatElement:
+    Element
+    + std::ops::Neg<Output = Self>
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn fexp(self) -> Self;
+    fn fln(self) -> Self;
+    fn fsqrt(self) -> Self;
+    fn ftanh(self) -> Self;
+    fn fmax(self, o: Self) -> Self;
+    fn fmin(self, o: Self) -> Self;
+}
+
+impl FloatElement for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    #[inline(always)]
+    fn fexp(self) -> f32 {
+        self.exp()
+    }
+    #[inline(always)]
+    fn fln(self) -> f32 {
+        self.ln()
+    }
+    #[inline(always)]
+    fn fsqrt(self) -> f32 {
+        self.sqrt()
+    }
+    #[inline(always)]
+    fn ftanh(self) -> f32 {
+        self.tanh()
+    }
+    #[inline(always)]
+    fn fmax(self, o: f32) -> f32 {
+        self.max(o)
+    }
+    #[inline(always)]
+    fn fmin(self, o: f32) -> f32 {
+        self.min(o)
+    }
+}
+
+impl FloatElement for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    #[inline(always)]
+    fn fexp(self) -> f64 {
+        self.exp()
+    }
+    #[inline(always)]
+    fn fln(self) -> f64 {
+        self.ln()
+    }
+    #[inline(always)]
+    fn fsqrt(self) -> f64 {
+        self.sqrt()
+    }
+    #[inline(always)]
+    fn ftanh(self) -> f64 {
+        self.tanh()
+    }
+    #[inline(always)]
+    fn fmax(self, o: f64) -> f64 {
+        self.max(o)
+    }
+    #[inline(always)]
+    fn fmin(self, o: f64) -> f64 {
+        self.min(o)
+    }
+}
+
 impl Element for f32 {
     const DTYPE: DType = DType::F32;
     #[inline]

@@ -18,7 +18,7 @@ use crate::autograd::{self, AutogradMeta};
 use crate::device::{self, Device};
 use crate::{rng, torsk_assert, torsk_bail};
 
-pub use dtype::{DType, Element};
+pub use dtype::{DType, Element, FloatElement};
 use storage::{SendPtr, Storage};
 
 static NEXT_TENSOR_ID: AtomicU64 = AtomicU64::new(1);

@@ -86,14 +86,22 @@ fn runtime_registration_via_public_api() {
     fn triple(ctx: &OpCtx) -> Tensor {
         ops::mul_scalar(ctx.input(0), 3.0)
     }
+    fn triple_samples(seed: u64, dt: DType) -> Option<dispatch::OpSample> {
+        let x = dispatch::sample_uniform(seed, &[4], dt, -1.0, 1.0)?;
+        Some(dispatch::OpSample { inputs: vec![x], params: vec![], grad_inputs: vec![] })
+    }
     dispatch::register_op(
         OpDef::new("itest_triple", 1, 1, &[DType::F32])
             .kernel(DispatchKey::Cpu, triple)
-            .kernel(DispatchKey::Sim, triple),
+            .kernel(DispatchKey::Sim, triple)
+            .sample_inputs(triple_samples),
     );
     assert!(dispatch::has_op("itest_triple"));
     let y = dispatch::call("itest_triple", &[&Tensor::from_slice(&[2.0f32])], &[Param::F32(0.0)]);
     assert_eq!(y.to_vec::<f32>(), vec![6.0]);
+    // Runtime ops surface through the OpInfo API like built-ins.
+    let info = dispatch::op_info("itest_triple").expect("registered");
+    assert!((info.sample)(0, DType::F32).is_some());
 }
 
 #[test]
@@ -182,7 +190,8 @@ fn registry_is_complete_for_the_public_surface() {
         "softmax", "log_softmax", "cross_entropy", "mse_loss", "bce_loss", "conv2d", "maxpool2d",
         "avgpool2d", "global_avgpool2d", "batch_norm", "batch_norm_train", "layer_norm",
         "dropout", "embedding", "one_hot", "cat", "add_", "sub_", "mul_", "copy_", "axpy_",
-        "mul_scalar_", "add_scalar_", "fill_",
+        "mul_scalar_", "add_scalar_", "fill_", "fused:gelu", "fused:mse", "fused:bce",
+        "fused:sigmoid_bce", "fused:ln_tail", "fused:adam_step", "fused:sgd_step",
     ] {
         assert!(dispatch::has_op(op), "op '{op}' missing from registry");
     }

@@ -9,6 +9,7 @@
 //! `set_num_threads` safe to flip concurrently from other tests: these
 //! assertions compare values, never timings.
 
+use torsk::autograd::engine::set_backward_threads;
 use torsk::kernels::set_num_threads;
 use torsk::ops;
 use torsk::Tensor;
@@ -24,6 +25,29 @@ fn at_threads<T>(f: impl Fn() -> T) -> Vec<T> {
         .collect();
     set_num_threads(0);
     out
+}
+
+/// Run `f` over the full thread matrix: kernel pool 1/2/8 × backward
+/// engine 1/8 (the same axes the CI thread-matrix job sweeps via
+/// `PALLAS_NUM_THREADS` × `TORSK_BACKWARD_THREADS`).
+fn at_thread_matrix<T>(f: impl Fn() -> T) -> Vec<T> {
+    let mut out = Vec::new();
+    for &bw in &[1usize, 8] {
+        set_backward_threads(bw);
+        for &t in &[1usize, 2, 8] {
+            set_num_threads(t);
+            out.push(f());
+        }
+    }
+    set_num_threads(0);
+    set_backward_threads(0);
+    out
+}
+
+fn assert_matrix_equal(results: &[(Vec<f32>, Vec<Vec<f32>>)], what: &str) {
+    for (i, r) in results.iter().enumerate().skip(1) {
+        assert_eq!(&results[0], r, "{what}: thread-matrix cell {i} differs from cell 0");
+    }
 }
 
 fn assert_all_equal(results: &[Vec<f32>], what: &str) {
@@ -106,6 +130,95 @@ fn elementwise_and_broadcast_bitwise_equal_across_thread_counts() {
     let v = Tensor::randn(&[512]);
     let s = at_threads(|| ops::add(&m, &v).to_vec::<f32>());
     assert_all_equal(&s, "broadcast add");
+}
+
+/// Loss + input gradients of `f` on fresh leaves (shared data, fresh
+/// autograd metadata per run).
+fn fwd_bwd(inputs: &[Tensor], f: impl Fn(&[Tensor]) -> Tensor) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let leaves: Vec<Tensor> = inputs.iter().map(|t| t.detach().requires_grad(true)).collect();
+    let loss = f(&leaves);
+    loss.backward();
+    (
+        loss.to_vec::<f32>(),
+        leaves.iter().map(|l| l.grad().expect("grad flows").to_vec::<f32>()).collect(),
+    )
+}
+
+#[test]
+fn fused_losses_fwd_bwd_bitwise_equal_across_thread_matrix() {
+    torsk::rng::manual_seed(37);
+    // Big enough to split across the kernel pool and cross REDUCE_CHUNK.
+    let x = Tensor::randn(&[(1 << 17) + 331]);
+    let t = Tensor::rand(&[(1 << 17) + 331]);
+
+    let inputs = [x.clone(), t.clone()];
+    let mse = at_thread_matrix(|| fwd_bwd(&inputs, |l| ops::mse_loss(&l[0], &l[1])));
+    assert_matrix_equal(&mse, "fused:mse fwd+bwd");
+
+    let sbce = at_thread_matrix(|| fwd_bwd(&inputs, |l| ops::bce_with_logits(&l[0], &l[1])));
+    assert_matrix_equal(&sbce, "fused:sigmoid_bce fwd+bwd");
+
+    let probs = [ops::sigmoid(&x), t.clone()];
+    let bce = at_thread_matrix(|| fwd_bwd(&probs, |l| ops::bce_loss(&l[0], &l[1])));
+    assert_matrix_equal(&bce, "fused:bce fwd+bwd");
+}
+
+#[test]
+fn fused_gelu_fwd_bwd_bitwise_equal_across_thread_matrix() {
+    torsk::rng::manual_seed(41);
+    let x = Tensor::randn(&[(1 << 17) + 77]);
+    let r = at_thread_matrix(|| fwd_bwd(&[x.clone()], |l| ops::sum(&ops::gelu(&l[0]))));
+    assert_matrix_equal(&r, "fused:gelu fwd+bwd");
+}
+
+#[test]
+fn layer_norm_fwd_bwd_bitwise_equal_across_thread_matrix() {
+    // The full layer-norm graph: deterministic row reductions for the
+    // statistics plus the fused:ln_tail node, forward and backward, at
+    // every kernel × backward thread combination.
+    torsk::rng::manual_seed(43);
+    let x = Tensor::randn(&[96, 768]);
+    let gamma = Tensor::randn(&[768]);
+    let beta = Tensor::randn(&[768]);
+    let r = at_thread_matrix(|| {
+        fwd_bwd(&[x.clone(), gamma.clone(), beta.clone()], |l| {
+            ops::sum(&ops::layer_norm(&l[0], &l[1], &l[2], 1e-5))
+        })
+    });
+    assert_matrix_equal(&r, "layer_norm fwd+bwd");
+}
+
+#[test]
+fn optimizer_steps_bitwise_equal_across_thread_matrix() {
+    torsk::rng::manual_seed(47);
+    let w0 = Tensor::randn(&[50_000]);
+    let x = Tensor::randn(&[50_000]);
+    let t = Tensor::randn(&[50_000]);
+    // Two optimization steps end-to-end: forward, backward, fused update.
+    let run = |adam: bool| {
+        // Deep copy: the fused steps mutate the param in place, so each
+        // matrix cell must start from untouched data.
+        let w = Tensor::from_vec(w0.to_vec::<f32>(), w0.shape()).requires_grad(true);
+        let mut sgd = torsk::optim::Sgd::new(vec![w.clone()], 0.05).with_momentum(0.9);
+        let mut ad = torsk::optim::Adam::new(vec![w.clone()], 1e-3);
+        for _ in 0..2 {
+            let loss = ops::mse_loss(&ops::mul(&w, &x), &t);
+            if adam {
+                ad.zero_grad();
+                loss.backward();
+                ad.step();
+            } else {
+                sgd.zero_grad();
+                loss.backward();
+                sgd.step();
+            }
+        }
+        w.detach().to_vec::<f32>()
+    };
+    for adam in [false, true] {
+        let results = at_thread_matrix(|| (run(adam), Vec::<Vec<f32>>::new()));
+        assert_matrix_equal(&results, if adam { "fused:adam_step" } else { "fused:sgd_step" });
+    }
 }
 
 #[test]

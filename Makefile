@@ -4,7 +4,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: check build test fmt fmt-check clippy bench bench-smoke
+.PHONY: check build test fmt fmt-check clippy bench bench-smoke gemm-parity
 
 check: build test fmt-check clippy
 
@@ -29,6 +29,13 @@ clippy:
 bench:
 	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
 
+# Packed-GEMM parity suite: all four trans combos vs the oracle, plus
+# bit-identical-across-threads and zero-materialization pins.
+gemm-parity:
+	cd $(RUST_DIR) && $(CARGO) test -q --test gemm_parity
+
 # One tiny iteration of every benchmark + JSON schema validation (CI).
-bench-smoke:
+# Runs the GEMM parity suite first: the smoke numbers are meaningless if
+# the kernel they time is wrong.
+bench-smoke: gemm-parity
 	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops

@@ -14,7 +14,10 @@
 //! ```
 //!
 //! `bytes_allocated` and `reused_outputs` are per-iteration; the hit rate
-//! covers the measured window of the host caching allocator. Future PRs
+//! covers the measured window of the host caching allocator. The
+//! `gemm:packed:*` / `gemm:unpacked-ref:*` pairs additionally carry a
+//! `gflops` key (2·m·n·k / ns) at threads 1/2/8, and the packed results
+//! are bit-compared across those thread counts before timing. Future PRs
 //! append their numbers next to these — this file is the trajectory to
 //! beat. `BENCH_SMOKE=1` runs one tiny iteration of everything and
 //! validates the JSON schema (wired into CI as `make bench-smoke`).
@@ -37,20 +40,28 @@ struct Record {
     bytes_allocated: u64,
     cache_hit_rate: f64,
     reused_outputs: u64,
+    /// GFLOP/s — set on the `gemm:*` records (2*m*n*k / ns), absent
+    /// elsewhere. An optional extra key on schema torsk.bench_ops.v1.
+    gflops: Option<f64>,
 }
 
 impl Record {
     fn to_json(&self) -> String {
+        let gflops = match self.gflops {
+            Some(g) => format!(", \"gflops\": {g:.2}"),
+            None => String::new(),
+        };
         format!(
             "{{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}, \
-             \"bytes_allocated\": {}, \"cache_hit_rate\": {:.4}, \"reused_outputs\": {}}}",
+             \"bytes_allocated\": {}, \"cache_hit_rate\": {:.4}, \"reused_outputs\": {}{}}}",
             self.op,
             self.size,
             self.threads,
             self.ns_per_iter,
             self.bytes_allocated,
             self.cache_hit_rate,
-            self.reused_outputs
+            self.reused_outputs,
+            gflops
         )
     }
 }
@@ -81,6 +92,7 @@ fn measure(op: &str, size: usize, threads: usize, reps: usize, mut f: impl FnMut
         bytes_allocated: d.allocated_bytes_total / reps as u64,
         cache_hit_rate: d.cache_hit_rate(),
         reused_outputs: (h1 - h0) / reps as u64,
+        gflops: None,
     }
 }
 
@@ -287,6 +299,66 @@ fn main() {
         }
     }
 
+    // ---- packed vs unpacked GEMM: GFLOP/s at threads 1/2/8 ----
+    // Paired `gemm:packed:*` / `gemm:unpacked-ref:*` rows at the four
+    // acceptance shapes (square, tall-skinny, linear-layer, conv-im2col).
+    // The packed results are also bit-compared across thread counts here,
+    // so even the smoke run exercises the determinism contract.
+    {
+        use torsk::kernels::matmul::{sgemm, sgemm_unpacked, Trans};
+        let shapes: &[(&str, usize, usize, usize)] = if smoke {
+            &[
+                ("square", 32, 32, 32),
+                ("tall_skinny", 4, 64, 48),
+                ("linear_layer", 16, 24, 40),
+                ("conv_im2col", 8, 49, 36),
+            ]
+        } else {
+            &[
+                ("square", 256, 256, 256),
+                ("tall_skinny", 8, 1024, 1024),
+                ("linear_layer", 128, 256, 784),
+                ("conv_im2col", 64, 3136, 576),
+            ]
+        };
+        for &(name, m, n, k) in shapes {
+            let a = Tensor::randn(&[m, k]).to_vec::<f32>();
+            let b = Tensor::randn(&[k, n]).to_vec::<f32>();
+            let flop = (2 * m * n * k) as f64;
+            let mut pinned: Option<Vec<f32>> = None;
+            for &t in &[1usize, 2, 8] {
+                // Determinism pin: identical bits at every thread count.
+                torsk::kernels::set_num_threads(t);
+                let mut c = vec![0.0f32; m * n];
+                sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                torsk::kernels::set_num_threads(0);
+                if let Some(p) = &pinned {
+                    if p != &c {
+                        eprintln!("gemm:{name}: packed result differs at {t} threads");
+                        std::process::exit(1);
+                    }
+                } else {
+                    pinned = Some(c);
+                }
+
+                let reps = if smoke { 1 } else { 20 };
+                let mut c = vec![0.0f32; m * n];
+                let mut r = measure(&format!("gemm:packed:{name}"), m * n * k, t, reps, || {
+                    sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                    std::hint::black_box(&c);
+                });
+                r.gflops = Some(flop / r.ns_per_iter);
+                records.push(r);
+                let mut r = measure(&format!("gemm:unpacked-ref:{name}"), m * n * k, t, reps, || {
+                    sgemm_unpacked(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                    std::hint::black_box(&c);
+                });
+                r.gflops = Some(flop / r.ns_per_iter);
+                records.push(r);
+            }
+        }
+    }
+
     // ---- matmul: square and tall-skinny (the grain-fix shape) ----
     {
         let n = if smoke { 32 } else { 256 };
@@ -389,6 +461,7 @@ fn main() {
             bytes_allocated: d.allocated_bytes_total / iters as u64,
             cache_hit_rate: d.cache_hit_rate(),
             reused_outputs: (h1 - h0) / iters as u64,
+            gflops: None,
         });
     }
 
@@ -428,6 +501,25 @@ fn main() {
                 b.threads
             ),
             _ => println!("speedup {op}: skipped (no >=1M multi-thread records in this run)"),
+        }
+    }
+    for shape in ["square", "tall_skinny", "linear_layer", "conv_im2col"] {
+        for &t in &[1usize, 8] {
+            let p = records
+                .iter()
+                .find(|r| r.op == format!("gemm:packed:{shape}") && r.threads == t);
+            let u = records
+                .iter()
+                .find(|r| r.op == format!("gemm:unpacked-ref:{shape}") && r.threads == t);
+            if let (Some(p), Some(u)) = (p, u) {
+                println!(
+                    "gemm {shape} @ {} threads: packed {:.2} GFLOP/s vs unpacked {:.2} ({:.2}x)",
+                    t,
+                    p.gflops.unwrap_or(0.0),
+                    u.gflops.unwrap_or(0.0),
+                    u.ns_per_iter / p.ns_per_iter
+                );
+            }
         }
     }
     for op in ["sigmoid_bce", "mse", "bce", "gelu", "ln_tail", "adam_step"] {
@@ -493,6 +585,10 @@ fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
             if !body.contains(key) {
                 return Err(format!("record {i}: missing {key}"));
             }
+        }
+        // GEMM rows additionally carry throughput.
+        if body.contains("\"op\": \"gemm:") && !body.contains("\"gflops\"") {
+            return Err(format!("record {i}: gemm record missing \"gflops\""));
         }
     }
     Ok(())

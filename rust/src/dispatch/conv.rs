@@ -1,4 +1,10 @@
 //! The conv2d kernel entry for the dispatcher (wraps the im2col kernels).
+//!
+//! The im2col products run on the packed BLIS-style GEMM core
+//! (`kernels::matmul`): forward folds the bias into the GEMM's beta pass,
+//! backward-input consumes `weightᵀ` via a `Trans` flag and
+//! backward-weight consumes `colᵀ` the same way — no materialized
+//! transposes anywhere in the conv path.
 
 use crate::autograd::{ClosureFunction, Function, SavedTensor};
 use crate::device;

@@ -1,17 +1,93 @@
 //! Matrix-multiplication ops for the dispatcher: `matmul`, batched `bmm`,
-//! and the fused `linear` (x @ Wᵀ + b). F32 runs the blocked SGEMM; F64
-//! runs the precision-oriented DGEMM.
+//! and the fused `linear` (x @ Wᵀ + b). F32 runs the packed BLIS-style
+//! SGEMM; F64 the precision-oriented packed DGEMM.
+//!
+//! **Transpose-aware, copy-free.** Every GEMM operand is handed to the
+//! kernels as a raw strided view — `(ptr, row stride, col stride)` read
+//! straight off the tensor — so transposed operands (user-level `x.t()`
+//! views, and every `Gᵀ`/`Bᵀ`/`Aᵀ` the backward formulas need) are packed
+//! in place by the kernel. No forward or backward path in this module
+//! materializes a transpose; [`gemm_materialization_stats`] counts the
+//! (currently unreachable) fallback and `tests/gemm_parity.rs` asserts it
+//! stays zero.
+//!
+//! **Packed-weight cache.** `linear` keeps each weight's packed-Bᵀ panels
+//! in a process-global cache keyed by (tensor id, storage version): the
+//! first forward packs once, every later forward reuses the panels with
+//! zero copies, and any in-place update (an optimizer step bumps the
+//! storage version) repacks lazily on the next forward.
+//! [`packed_weight_stats`] exposes (hits, misses).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::autograd::{ClosureFunction, Function, SavedTensor};
-use crate::device;
-use crate::kernels::matmul::{dgemm, dgemm_batched, sgemm, sgemm_batched};
+use crate::device::{self, Device};
+use crate::kernels::matmul::{
+    dgemm_batched_strided, dgemm_strided, pack_b_strided_f32, sgemm_batched_strided,
+    sgemm_prepacked, sgemm_strided,
+};
+use crate::tensor::storage::SendPtr;
 use crate::tensor::{DType, Tensor};
 use crate::torsk_assert;
 
-use super::elementwise::{raw_add, FLOATS};
 use super::{same_device, OpCtx, OpDef, Registry};
+use crate::dispatch::elementwise::FLOATS;
+
+// ---------------------------------------------------------------------
+// Strided GEMM operands (the no-copy contract)
+// ---------------------------------------------------------------------
+
+static GEMM_MATERIALIZATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of times a linalg op had to *materialize* (copy) an operand
+/// before a GEMM since process start. The packed kernels consume every
+/// 2-D/3-D stride pattern directly, so no registered path increments
+/// this today — it exists so any future fallback copy is counted, and so
+/// tests can assert the transpose-free invariant
+/// (`tests/gemm_parity.rs` pins it at 0 across transposed forward and
+/// backward workloads).
+pub fn gemm_materialization_stats() -> u64 {
+    GEMM_MATERIALIZATIONS.load(Ordering::Relaxed)
+}
+
+/// Smallest slice length covering a strided view (0 for empty shapes).
+fn span(shape: &[usize], strides: &[usize]) -> usize {
+    let mut s = 1usize;
+    for (&d, &st) in shape.iter().zip(strides.iter()) {
+        if d == 0 {
+            return 0;
+        }
+        s += (d - 1) * st;
+    }
+    s
+}
+
+/// Resolve a 2-D tensor into a raw GEMM operand: base pointer, row
+/// stride, col stride, and the slice span — whatever its layout
+/// (contiguous, transposed view, narrowed, stride-0 broadcast).
+fn gemm_operand2(t: &Tensor) -> (SendPtr, usize, usize, usize) {
+    debug_assert_eq!(t.ndim(), 2, "gemm operand must be 2-D");
+    let st = t.strides();
+    (t.data_ptr(), st[0], st[1], span(t.shape(), st))
+}
+
+/// Resolve a 3-D tensor into a batched GEMM operand: base pointer, batch
+/// stride, row stride, col stride, span.
+fn gemm_operand3(t: &Tensor) -> (SendPtr, usize, usize, usize, usize) {
+    debug_assert_eq!(t.ndim(), 3, "bmm operand must be 3-D");
+    let st = t.strides();
+    (t.data_ptr(), st[0], st[1], st[2], span(t.shape(), st))
+}
+
+// ---------------------------------------------------------------------
+// Raw (no-autograd) math — shared by forward kernels and backward closures
+// ---------------------------------------------------------------------
 
 /// Raw 2-D matmul (no autograd) — shared by forward and backward math.
+/// Transposed inputs are consumed as strided views: `matmul_raw(&g.t(),
+/// &x)` packs `g` transposed in place, with zero copies.
 pub(crate) fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
     let dev = same_device("matmul", &[a, b]);
     torsk_assert!(
@@ -29,29 +105,39 @@ pub(crate) fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.size(0), a.size(1));
     let (k2, n) = (b.size(0), b.size(1));
     torsk_assert!(k == k2, "matmul: inner dims {k} vs {k2}");
-    let a = a.contiguous();
-    let b = b.contiguous();
     let dtype = a.dtype();
     let out = Tensor::empty(&[m, n], dtype, dev);
-    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    let (ap, ars, acs, aspan) = gemm_operand2(a);
+    let (bp, brs, bcs, bspan) = gemm_operand2(b);
+    let op = out.data_ptr();
     device::dispatch(dev, "matmul", move || unsafe {
         match dtype {
-            DType::F32 => sgemm(
+            DType::F32 => sgemm_strided(
                 m,
                 n,
                 k,
                 1.0,
-                ap.as_slice::<f32>(0, m * k),
-                bp.as_slice::<f32>(0, k * n),
+                ap.as_slice::<f32>(0, aspan),
+                ars,
+                acs,
+                bp.as_slice::<f32>(0, bspan),
+                brs,
+                bcs,
                 0.0,
                 op.as_mut_slice::<f32>(0, m * n),
             ),
-            DType::F64 => dgemm(
+            DType::F64 => dgemm_strided(
                 m,
                 n,
                 k,
-                ap.as_slice::<f64>(0, m * k),
-                bp.as_slice::<f64>(0, k * n),
+                1.0,
+                ap.as_slice::<f64>(0, aspan),
+                ars,
+                acs,
+                bp.as_slice::<f64>(0, bspan),
+                brs,
+                bcs,
+                0.0,
                 op.as_mut_slice::<f64>(0, m * n),
             ),
             _ => unreachable!("matmul schema admits floats only"),
@@ -72,29 +158,41 @@ fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
         a.shape(),
         b.shape()
     );
-    let a = a.contiguous();
-    let b = b.contiguous();
     let dtype = a.dtype();
     let out = Tensor::empty(&[batch, m, n], dtype, dev);
-    let (ap, bp, op) = (a.data_ptr(), b.data_ptr(), out.data_ptr());
+    let (ap, abs_, ars, acs, aspan) = gemm_operand3(a);
+    let (bp, bbs, brs, bcs, bspan) = gemm_operand3(b);
+    let op = out.data_ptr();
     device::dispatch(dev, "bmm", move || unsafe {
         match dtype {
-            DType::F32 => sgemm_batched(
+            DType::F32 => sgemm_batched_strided(
                 batch,
                 m,
                 n,
                 k,
-                ap.as_slice::<f32>(0, batch * m * k),
-                bp.as_slice::<f32>(0, batch * k * n),
+                ap.as_slice::<f32>(0, aspan),
+                abs_,
+                ars,
+                acs,
+                bp.as_slice::<f32>(0, bspan),
+                bbs,
+                brs,
+                bcs,
                 op.as_mut_slice::<f32>(0, batch * m * n),
             ),
-            DType::F64 => dgemm_batched(
+            DType::F64 => dgemm_batched_strided(
                 batch,
                 m,
                 n,
                 k,
-                ap.as_slice::<f64>(0, batch * m * k),
-                bp.as_slice::<f64>(0, batch * k * n),
+                ap.as_slice::<f64>(0, aspan),
+                abs_,
+                ars,
+                acs,
+                bp.as_slice::<f64>(0, bspan),
+                bbs,
+                brs,
+                bcs,
                 op.as_mut_slice::<f64>(0, batch * m * n),
             ),
             _ => unreachable!("bmm schema admits floats only"),
@@ -102,6 +200,116 @@ fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
     });
     out
 }
+
+// ---------------------------------------------------------------------
+// Packed-weight cache for `linear`
+// ---------------------------------------------------------------------
+
+struct CachedPack {
+    version: u64,
+    in_features: usize,
+    out_features: usize,
+    data: Arc<Vec<f32>>,
+    /// Tick of the last hit/insert — the eviction key. Entries for
+    /// dropped weight tensors can never be hit again, so they age out.
+    last_used: u64,
+}
+
+/// Caps on the packed-weight cache: entry count AND total bytes (a few
+/// large dead packs can dwarf hundreds of small ones). Past either, the
+/// least-recently-used entries are evicted down to half the budget —
+/// live models keep their hot panels while entries for dropped tensors
+/// age out (a model's live Linear weights are bounded, so eviction never
+/// fires in steady state; the caps bound pathological churn like a
+/// construct-and-drop hyperparameter sweep).
+const PACKED_CACHE_CAP: usize = 256;
+const PACKED_CACHE_MAX_BYTES: usize = 256 << 20;
+
+static PACKED_WEIGHTS: once_cell::sync::Lazy<Mutex<HashMap<u64, CachedPack>>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+static PACK_HITS: AtomicU64 = AtomicU64::new(0);
+static PACK_MISSES: AtomicU64 = AtomicU64::new(0);
+static PACK_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// `(hits, misses)` of the linear packed-weight cache since process
+/// start. An inference / repeated-forward loop shows exactly one miss
+/// per weight, ever — the zero-copy steady state. A training loop shows
+/// one miss per weight per optimizer step *by design*: the step mutates
+/// the weight in place (bumping the storage version), so the next
+/// forward must repack — that repack replaces the `w.t().contiguous()`
+/// copy the old kernel paid, it is not a cache defect. Multiple forwards
+/// between steps (grad accumulation, eval passes) all hit.
+pub fn packed_weight_stats() -> (u64, u64) {
+    (PACK_HITS.load(Ordering::Relaxed), PACK_MISSES.load(Ordering::Relaxed))
+}
+
+/// Packed `Wᵀ` panels for `W [out, in]`, cached by (tensor id, storage
+/// version): in-place weight updates bump the version, invalidating the
+/// entry lazily; repacking happens on the next forward.
+///
+/// The key is the *tensor* id, so the cache helps callers that hold a
+/// stable weight handle (`nn::Linear` does). Passing a freshly created
+/// view of the weight each call gets a miss every time — equivalent to
+/// the old per-call transpose copy, never worse; the byte-bounded LRU
+/// keeps such churn from accumulating.
+fn packed_weight(w: &Tensor) -> Arc<Vec<f32>> {
+    let (out_f, in_f) = (w.size(0), w.size(1));
+    let key = w.id();
+    let ver = w.version();
+    let tick = PACK_TICK.fetch_add(1, Ordering::Relaxed) + 1;
+    {
+        let mut cache = PACKED_WEIGHTS.lock().unwrap();
+        if let Some(e) = cache.get_mut(&key) {
+            if e.version == ver && e.in_features == in_f && e.out_features == out_f {
+                e.last_used = tick;
+                PACK_HITS.fetch_add(1, Ordering::Relaxed);
+                return e.data.clone();
+            }
+        }
+    }
+    PACK_MISSES.fetch_add(1, Ordering::Relaxed);
+    // B = Wᵀ is (in, out): B(p, j) = W(j, p), so B's row stride is W's
+    // column stride and vice versa — packed straight from W's layout.
+    let st = w.strides();
+    let wspan = span(w.shape(), st);
+    let data = unsafe { w.data_ptr().as_slice::<f32>(0, wspan) };
+    let packed = Arc::new(pack_b_strided_f32(in_f, out_f, data, st[1], st[0]));
+    let mut cache = PACKED_WEIGHTS.lock().unwrap();
+    let total_bytes: usize = cache.values().map(|e| e.data.len() * 4).sum();
+    if cache.len() >= PACKED_CACHE_CAP || total_bytes + packed.len() * 4 > PACKED_CACHE_MAX_BYTES {
+        // Evict least-recently-used entries down to half of each budget:
+        // dead tensors' entries go first, live weights mostly survive
+        // and avoid a thundering repack.
+        let mut by_age: Vec<(u64, u64, usize)> =
+            cache.iter().map(|(id, e)| (e.last_used, *id, e.data.len() * 4)).collect();
+        by_age.sort_unstable();
+        let mut len = cache.len();
+        let mut bytes = total_bytes;
+        for (_, id, nbytes) in by_age {
+            if len <= PACKED_CACHE_CAP / 2 && bytes <= PACKED_CACHE_MAX_BYTES / 2 {
+                break;
+            }
+            cache.remove(&id);
+            len -= 1;
+            bytes -= nbytes;
+        }
+    }
+    cache.insert(
+        key,
+        CachedPack {
+            version: ver,
+            in_features: in_f,
+            out_features: out_f,
+            data: packed.clone(),
+            last_used: tick,
+        },
+    );
+    packed
+}
+
+// ---------------------------------------------------------------------
+// Kernels + backwards
+// ---------------------------------------------------------------------
 
 fn k_matmul(ctx: &OpCtx) -> Tensor {
     matmul_raw(ctx.input(0), ctx.input(1))
@@ -112,9 +320,9 @@ fn bw_matmul(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     ClosureFunction::new("matmul", move |g| {
         let a = va.unpack();
         let b = vb.unpack();
-        // dA = G @ Bᵀ ; dB = Aᵀ @ G
-        let ga = matmul_raw(g, &b.t().contiguous());
-        let gb = matmul_raw(&a.t().contiguous(), g);
+        // dA = G @ Bᵀ ; dB = Aᵀ @ G — `.t()` views, packed in place.
+        let ga = matmul_raw(g, &b.t());
+        let gb = matmul_raw(&a.t(), g);
         vec![Some(ga), Some(gb)]
     })
 }
@@ -128,14 +336,18 @@ fn bw_bmm(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     ClosureFunction::new("bmm", move |g| {
         let a = va.unpack();
         let b = vb.unpack();
-        let bt = b.transpose(1, 2).contiguous();
-        let at = a.transpose(1, 2).contiguous();
-        vec![Some(bmm_raw(g, &bt)), Some(bmm_raw(&at, g))]
+        // Zero-copy transpose views; the batched kernel reads the strides.
+        vec![
+            Some(bmm_raw(g, &b.transpose(1, 2))),
+            Some(bmm_raw(&a.transpose(1, 2), g)),
+        ]
     })
 }
 
 /// Fused linear layer: `x [N,in] @ Wᵀ [in,out] + b`, PyTorch weight layout
-/// `W [out,in]`. Bias is the optional third input.
+/// `W [out,in]`. Bias is the optional third input, folded into the GEMM's
+/// `beta` pass (the output rows are pre-filled with the bias, then the
+/// product accumulates on top) — no separate add, no extra allocation.
 fn k_linear(ctx: &OpCtx) -> Tensor {
     let (x, w) = (ctx.input(0), ctx.input(1));
     torsk_assert!(x.ndim() == 2 && w.ndim() == 2, "linear: x 2-D, w 2-D");
@@ -145,19 +357,148 @@ fn k_linear(ctx: &OpCtx) -> Tensor {
         x.size(1),
         w.size(1)
     );
-    let wt = w.t().contiguous();
-    let y = matmul_raw(x, &wt);
-    match ctx.num_inputs() {
-        2 => y,
-        _ => {
-            let bias = ctx.input(2);
-            torsk_assert!(
-                bias.shape() == [w.size(0)],
-                "linear: bias shape {:?} for {} out features",
-                bias.shape(),
-                w.size(0)
-            );
-            raw_add(&y, bias)
+    torsk_assert!(
+        x.dtype() == w.dtype(),
+        "linear: dtype mismatch {} x {}",
+        x.dtype(),
+        w.dtype()
+    );
+    let dev = same_device("linear", &[x, w]);
+    let (m, k_in) = (x.size(0), x.size(1));
+    let n_out = w.size(0);
+    let has_bias = ctx.num_inputs() == 3;
+    let bias_info = if has_bias {
+        let bias = ctx.input(2);
+        torsk_assert!(
+            bias.shape() == [n_out],
+            "linear: bias shape {:?} for {n_out} out features",
+            bias.shape()
+        );
+        torsk_assert!(
+            bias.dtype() == x.dtype(),
+            "linear: bias dtype {} vs {}",
+            bias.dtype(),
+            x.dtype()
+        );
+        Some((bias.data_ptr(), bias.strides()[0]))
+    } else {
+        None
+    };
+    let dtype = x.dtype();
+    let out = Tensor::empty(&[m, n_out], dtype, dev);
+    let op = out.data_ptr();
+    let (xp, xs0, xs1, xspan) = gemm_operand2(x);
+
+    match dtype {
+        // The hot path: prepacked Wᵀ panels from the process-global cache
+        // (CPU only — the cache packs eagerly on the host thread, which
+        // must not race queued stream kernels).
+        DType::F32 if dev == Device::Cpu && k_in > 0 && n_out > 0 => {
+            let packed = packed_weight(w);
+            device::dispatch(dev, "linear", move || unsafe {
+                let ov = op.as_mut_slice::<f32>(0, m * n_out);
+                let beta = fill_bias_f32(ov, m, n_out, bias_info);
+                sgemm_prepacked(
+                    m,
+                    n_out,
+                    k_in,
+                    1.0,
+                    xp.as_slice::<f32>(0, xspan),
+                    xs0,
+                    xs1,
+                    &packed,
+                    beta,
+                    ov,
+                );
+            });
+        }
+        DType::F32 => {
+            let (wp, ws0, ws1, wspan) = gemm_operand2(w);
+            device::dispatch(dev, "linear", move || unsafe {
+                let ov = op.as_mut_slice::<f32>(0, m * n_out);
+                let beta = fill_bias_f32(ov, m, n_out, bias_info);
+                // B = Wᵀ: swap W's strides.
+                sgemm_strided(
+                    m,
+                    n_out,
+                    k_in,
+                    1.0,
+                    xp.as_slice::<f32>(0, xspan),
+                    xs0,
+                    xs1,
+                    wp.as_slice::<f32>(0, wspan),
+                    ws1,
+                    ws0,
+                    beta,
+                    ov,
+                );
+            });
+        }
+        DType::F64 => {
+            let (wp, ws0, ws1, wspan) = gemm_operand2(w);
+            device::dispatch(dev, "linear", move || unsafe {
+                let ov = op.as_mut_slice::<f64>(0, m * n_out);
+                let beta = fill_bias_f64(ov, m, n_out, bias_info);
+                dgemm_strided(
+                    m,
+                    n_out,
+                    k_in,
+                    1.0,
+                    xp.as_slice::<f64>(0, xspan),
+                    xs0,
+                    xs1,
+                    wp.as_slice::<f64>(0, wspan),
+                    ws1,
+                    ws0,
+                    beta,
+                    ov,
+                );
+            });
+        }
+        _ => unreachable!("linear schema admits floats only"),
+    }
+    out
+}
+
+/// Pre-fill the output rows with the (possibly strided) bias and return
+/// the GEMM `beta` that preserves it (1.0), or 0.0 without a bias.
+///
+/// # Safety: `bias` must point at `n` elements with the given stride.
+unsafe fn fill_bias_f32(
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    bias: Option<(SendPtr, usize)>,
+) -> f32 {
+    match bias {
+        None => 0.0,
+        Some((bp, bs)) => {
+            for i in 0..m {
+                for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
+                    *v = *bp.as_f32().add(j * bs);
+                }
+            }
+            1.0
+        }
+    }
+}
+
+/// # Safety: as [`fill_bias_f32`].
+unsafe fn fill_bias_f64(
+    out: &mut [f64],
+    m: usize,
+    n: usize,
+    bias: Option<(SendPtr, usize)>,
+) -> f64 {
+    match bias {
+        None => 0.0,
+        Some((bp, bs)) => {
+            for i in 0..m {
+                for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
+                    *v = *(bp.ptr() as *const f64).add(j * bs);
+                }
+            }
+            1.0
         }
     }
 }
@@ -169,9 +510,10 @@ fn bw_linear(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
     ClosureFunction::new("linear", move |g| {
         let x = vx.unpack();
         let w = vw.unpack();
-        // gx = G @ W ; gw = Gᵀ @ x ; gb = sum rows of G
+        // gx = G @ W ; gw = Gᵀ @ x ; gb = sum rows of G. `g.t()` is a
+        // zero-copy view — the kernel packs the transpose in place.
         let gx = matmul_raw(g, &w);
-        let gw = matmul_raw(&g.t().contiguous(), &x);
+        let gw = matmul_raw(&g.t(), &x);
         let mut grads = vec![Some(gx), Some(gw)];
         if has_bias {
             grads.push(Some(super::reduce::sum_to_shape(g, &[bias_cols])));
@@ -221,4 +563,38 @@ pub(crate) fn register(reg: &mut Registry) {
             .backward(bw_linear)
             .sample_inputs(s_linear),
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+    use crate::tensor::assert_close;
+
+    // NOTE: transposed-view vs materialized parity lives in
+    // tests/gemm_parity.rs — this file must stay free of contiguous-copy
+    // calls (a source-level pin there enforces it, tests included).
+
+    #[test]
+    fn linear_bias_beta_fold_matches_composition() {
+        crate::rng::manual_seed(7);
+        let x = Tensor::randn(&[6, 9]);
+        let w = Tensor::randn(&[4, 9]);
+        let b = Tensor::randn(&[4]);
+        let y = ops::linear(&x, &w, Some(&b));
+        let y2 = ops::add(&ops::matmul(&x, &w.t()), &b);
+        assert_close(&y, &y2, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn linear_zero_in_features() {
+        // k == 0 degenerates to broadcast bias (or zeros without one).
+        let x = Tensor::zeros(&[3, 0]);
+        let w = Tensor::zeros(&[2, 0]);
+        let b = Tensor::from_slice(&[1.5f32, -2.0]);
+        let y = ops::linear(&x, &w, Some(&b));
+        assert_eq!(y.to_vec::<f32>(), vec![1.5, -2.0, 1.5, -2.0, 1.5, -2.0]);
+        let y0 = ops::linear(&x, &w, None);
+        assert_eq!(y0.to_vec::<f32>(), vec![0.0; 6]);
+    }
 }

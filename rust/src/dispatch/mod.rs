@@ -28,10 +28,10 @@
 //! reduction splits its index space over `kernels::parallel_for`, staying
 //! serial below [`crate::kernels::SERIAL_GRAIN`] (~32k) elements — below
 //! that, pool wakeups cost more than they save. Suffix/row drivers convert
-//! the grain to rows (`SERIAL_GRAIN / inner`), `sgemm` derives its row
-//! grain from `m` and `kernels::num_threads()` so tall-skinny matmuls
-//! still fill every core. The thread count comes from `PALLAS_NUM_THREADS`
-//! (read once) and can be swept at runtime with
+//! the grain to rows (`SERIAL_GRAIN / inner`); the packed GEMM splits a
+//! 2-D (row block × column block) task grid so tall-skinny *and* wide
+//! matmuls fill every core. The thread count comes from
+//! `PALLAS_NUM_THREADS` (read once) and can be swept at runtime with
 //! [`crate::kernels::set_num_threads`].
 //!
 //! **Determinism.** Parallel reductions are bit-for-bit identical at every
@@ -39,9 +39,12 @@
 //! reductions give each output element exactly one owning task that folds
 //! serially in index order, and flat reductions (`sum`, losses) use
 //! fixed-width chunks ([`iter::REDUCE_CHUNK`], a constant) whose partials
-//! combine serially in chunk order. Nothing derives a partial-sum boundary
-//! from the thread count. `tests/parallel_determinism.rs` pins this at
-//! `PALLAS_NUM_THREADS` = 1, 2 and 8.
+//! combine serially in chunk order. The packed GEMM core follows the same
+//! rule: its tile grid and k-panel walk derive only from `(m, n, k)` and
+//! fixed blocking constants (see "GEMM design" in the `kernels` module
+//! docs). Nothing derives a partial-sum boundary from the thread count.
+//! `tests/parallel_determinism.rs` pins this at `PALLAS_NUM_THREADS` =
+//! 1, 2 and 8.
 //!
 //! **Output-stealing.** [`call_owned`] lets an op's output steal a dead
 //! input's storage instead of allocating (PyTorch's `resize_`/`out=`
@@ -157,6 +160,8 @@ use crate::device::Device;
 use crate::profiler;
 use crate::tensor::{storage, DType, Tensor};
 use crate::{torsk_assert, torsk_bail};
+
+pub use linalg::{gemm_materialization_stats, packed_weight_stats};
 
 // ---------------------------------------------------------------------
 // Keys

@@ -5,7 +5,7 @@
 //!
 //! Layouts: input NCHW, weight [C_out, C_in/groups, KH, KW], output NCHW.
 
-use super::matmul::sgemm;
+use super::matmul::{sgemm, sgemm_serial, Trans};
 use super::parallel_for;
 
 /// Static shape/config descriptor for one conv op.
@@ -156,16 +156,19 @@ pub fn conv2d_forward(args: &Conv2dArgs, input: &[f32], weight: &[f32], bias: Op
                 // weight group: [cg_out, col_rows] @ col [col_rows, cols]
                 let w_slice = &weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
                 let o_slice = &mut out_all[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
-                // Serial gemm per (image, group); parallelism is over batch.
-                gemm_serial(cg_out, cols, col_rows, w_slice, &col, o_slice);
-                if let Some(b) = bias {
-                    for oc in 0..cg_out {
-                        let bv = b[g * cg_out + oc];
-                        for v in o_slice[oc * cols..(oc + 1) * cols].iter_mut() {
-                            *v += bv;
+                // Bias folds into the GEMM: pre-fill the output rows and
+                // accumulate the product on top (beta = 1). Serial packed
+                // gemm per (image, group); parallelism is over batch.
+                let beta = match bias {
+                    Some(b) => {
+                        for oc in 0..cg_out {
+                            o_slice[oc * cols..(oc + 1) * cols].fill(b[g * cg_out + oc]);
                         }
+                        1.0
                     }
-                }
+                    None => 0.0,
+                };
+                sgemm_serial(Trans::N, Trans::N, cg_out, cols, col_rows, 1.0, w_slice, &col, beta, o_slice);
             }
         }
     });
@@ -184,27 +187,17 @@ pub fn conv2d_backward_input(args: &Conv2dArgs, grad_out: &[f32], weight: &[f32]
     grad_in.fill(0.0);
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
-    // Hoist the weight transpose out of the batch loop (§Perf): it is
-    // constant across images.
-    let mut wt_all = vec![0.0f32; args.groups * col_rows * cg_out];
-    for g in 0..args.groups {
-        let w_slice = &weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
-        let wt = &mut wt_all[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
-        for i in 0..cg_out {
-            for j in 0..col_rows {
-                wt[j * cg_out + i] = w_slice[i * col_rows + j];
-            }
-        }
-    }
-    let wt_all = &wt_all;
+    // No materialized weight transpose: the packed GEMM consumes
+    // `weightᵀ` directly via the `Trans::T` flag.
     parallel_for(args.batch, 1, move |n0, n1| {
         let gi_all = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         let mut col = vec![0.0f32; col_rows * cols];
         for n in n0..n1 {
             for g in 0..args.groups {
-                let wt = &wt_all[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
+                let w_slice = &weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
                 let go = &grad_out[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
-                gemm_serial(col_rows, cols, cg_out, wt, go, &mut col);
+                // col = wᵀ [col_rows, cg_out] @ go [cg_out, cols]
+                sgemm_serial(Trans::T, Trans::N, col_rows, cols, cg_out, 1.0, w_slice, go, 0.0, &mut col);
                 let gi = &mut gi_all[n * in_img + g * cg_in * args.h_in * args.w_in
                     ..n * in_img + (g + 1) * cg_in * args.h_in * args.w_in];
                 col2im(args, &col, gi);
@@ -233,28 +226,20 @@ pub fn conv2d_backward_weight(
     if let Some(gb) = grad_bias.as_deref_mut() {
         gb.fill(0.0);
     }
-    // §Perf: accumulate the *transposed* weight gradient gwT [col_rows,
-    // cg_out] = Σ_n col @ goT — transposing go (cg_out x cols, small) per
-    // image instead of col (col_rows x cols, ~kh*kw/cg_out times larger),
-    // and un-transposing gwT once at the end.
+    // No materialized transposes: gw [cg_out, col_rows] += go [cg_out,
+    // cols] @ colᵀ, with colᵀ consumed in place via `Trans::T`. The GEMM
+    // itself parallelizes (we are at top level here); the batch loop is
+    // serial and accumulates via beta = 1, so results stay bit-identical
+    // at every thread count.
     let mut col = vec![0.0f32; col_rows * cols];
-    let mut got = vec![0.0f32; cols * cg_out];
-    let mut gwt = vec![0.0f32; args.groups * col_rows * cg_out];
     for n in 0..args.batch {
         for g in 0..args.groups {
             let in_slice = &input[n * in_img + g * cg_in * args.h_in * args.w_in
                 ..n * in_img + (g + 1) * cg_in * args.h_in * args.w_in];
             im2col(args, in_slice, &mut col);
             let go = &grad_out[n * out_img + g * cg_out * cols..n * out_img + (g + 1) * cg_out * cols];
-            // goT: [cols, cg_out]
-            for i in 0..cg_out {
-                for (j, &v) in go[i * cols..(i + 1) * cols].iter().enumerate() {
-                    got[j * cg_out + i] = v;
-                }
-            }
-            let gw_t = &mut gwt[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
-            // gwT += col [col_rows, cols] @ goT [cols, cg_out]
-            sgemm(col_rows, cg_out, cols, 1.0, &col, &got, 1.0, gw_t);
+            let gw = &mut grad_weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
+            sgemm(Trans::N, Trans::T, cg_out, col_rows, cols, 1.0, go, &col, 1.0, gw);
             if let Some(gb) = grad_bias.as_deref_mut() {
                 for oc in 0..cg_out {
                     let s: f32 = go[oc * cols..(oc + 1) * cols].iter().sum();
@@ -263,22 +248,6 @@ pub fn conv2d_backward_weight(
             }
         }
     }
-    for g in 0..args.groups {
-        let gw = &mut grad_weight[g * cg_out * col_rows..(g + 1) * cg_out * col_rows];
-        let gw_t = &gwt[g * col_rows * cg_out..(g + 1) * col_rows * cg_out];
-        for i in 0..cg_out {
-            for j in 0..col_rows {
-                gw[i * col_rows + j] = gw_t[j * cg_out + i];
-            }
-        }
-    }
-}
-
-/// Small serial gemm (C = A@B) used inside batch-parallel regions;
-/// shares the 8-row microkernel with the main SGEMM (§Perf).
-fn gemm_serial(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    c.fill(0.0);
-    super::matmul::gemm_panel(0, m, n, k, 1.0, a, b, c);
 }
 
 /// Direct (quadruple-loop) reference convolution for tests.

@@ -1,49 +1,908 @@
-//! SGEMM — the workhorse kernel (the cuBLAS stand-in).
+//! The GEMM core — torsk's cuBLAS stand-in: a packed, transpose-aware,
+//! BLIS-style blocked kernel.
 //!
-//! Row-major `C = alpha * A @ B + beta * C` with A `(m,k)`, B `(k,n)`,
-//! C `(m,n)`, all contiguous. Blocked over K for cache locality with an
-//! auto-vectorizable inner loop over N, parallelized across row blocks.
-//! The ops layer materializes any transposed operands contiguously before
-//! calling in (copy cost « gemm cost for the paper's model sizes).
+//! Row-major everywhere. `C = alpha * op(A) @ op(B) + beta * C` with `op`
+//! selected by [`Trans`] flags, or — one level lower — by explicit
+//! `(row, col)` element strides ([`sgemm_strided`]), so transposed (and
+//! narrowed, and stride-0 broadcast) operands are consumed **in place**:
+//! the packing routines read through the strides and nothing is ever
+//! materialized.
+//!
+//! # Blocking and packing (the BLIS decomposition)
+//!
+//! ```text
+//! task grid: (row blocks) x (column blocks)           parallel, disjoint C
+//!   for pc in 0..k step KC                            serial, in k order
+//!     pack A[i0.., pc..] into MR-row panels           (a_pack)
+//!     pack B[pc.., j0..] into NR-column panels        (b_pack)
+//!     for jr, ir: MR x NR register-tiled microkernel
+//! ```
+//!
+//! Block sizes start at the `(MC, NC)` maxima and shrink per shape (see
+//! `pick_blocks`) so skinny matrices still produce a grid wide enough to
+//! fill a pool — block boundaries never affect the computed bits.
+//!
+//! * A panels: `a_pack[ip*kc*MR + p*MR + r] = A(i0 + ip*MR + r, pc + p)`,
+//!   k-major with MR rows interleaved, zero-padded past the `m` edge.
+//! * B panels: `b_pack[jp*kc*NR + p*NR + c] = B(pc + p, j0 + jp*NR + c)`,
+//!   zero-padded past the `n` edge. K is never padded.
+//! * Microkernel: an MR x NR accumulator tile lives in registers across
+//!   the whole KC panel; `alpha` and `beta` apply at tile write-back
+//!   (`beta` on the first k-panel only).
+//!
+//! f32 runs an 8x8 microkernel (the autovectorizer's sweet spot: 8 rows
+//! of one 8-lane vector each), f64 a simpler 4x4 packed path. Blocking
+//! parameters: `MC = 64`, `KC = 256`, `NC = 512` — the A block is 64 KiB
+//! and the B block 512 KiB at f32.
+//!
+//! # Determinism
+//!
+//! Results are bit-for-bit identical at every thread count, by
+//! construction: the tile grid and the k-panel walk derive only from
+//! `(m, n, k)` and the constants above, each C tile has exactly one
+//! writing task, and every tile accumulates its k panels serially in k
+//! order through the microkernel's fixed-order loop. No partial-sum
+//! boundary ever derives from the worker count.
+//! `tests/gemm_parity.rs` and `tests/parallel_determinism.rs` pin this at
+//! 1/2/8 threads.
+//!
+//! # Prepacked weights
+//!
+//! [`pack_b_strided_f32`] emits the full packed-B buffer in exactly the
+//! layout the driver consumes; [`sgemm_prepacked`] then skips B packing
+//! entirely. `dispatch::linalg` caches packed `nn::Linear` weights keyed
+//! by (tensor id, storage version), so steady-state forwards do zero
+//! weight copies or packs.
 
 use super::parallel_for;
 
-/// K-panel size kept hot in cache.
-const KC: usize = 256;
+/// K-panel depth kept hot across a tile row.
+pub const KC: usize = 256;
+/// Rows of A per packed block (a multiple of every MR) — the *maximum*;
+/// [`pick_blocks`] shrinks it for shapes whose natural grid is too coarse.
+pub const MC: usize = 64;
+/// Columns of B per packed block (a multiple of every NR) — the maximum.
+pub const NC: usize = 512;
+/// Minimum task-grid size [`pick_blocks`] aims for. A *constant* (never
+/// the thread count): common model shapes (tall-skinny activations,
+/// linear layers) produce only 1–4 blocks at the full MC x NC sizes,
+/// which would leave most of any pool idle. Values are block-size
+/// independent (see `pick_blocks`), so this is purely a scheduling knob.
+const GRID_TARGET: usize = 32;
 
-/// C(m,n) = alpha * A(m,k) @ B(k,n) + beta * C. Slices must be exactly
-/// m*k, k*n, m*n long.
-pub fn sgemm(m: usize, n: usize, k: usize, alpha: f32, a: &[f32], b: &[f32], beta: f32, c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k, "A size");
-    debug_assert_eq!(b.len(), k * n, "B size");
+const MR_F32: usize = 8;
+const NR_F32: usize = 8;
+const MR_F64: usize = 4;
+const NR_F64: usize = 4;
+
+/// Operand layout flag (BLAS-style). Under `Trans::T` the slice holds the
+/// matrix transposed: for an `(m, k)` A the buffer is a dense row-major
+/// `(k, m)` matrix and `A(i, p) = buf[p*m + i]`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    /// Operand is stored row-major as its logical shape.
+    N,
+    /// Operand is stored row-major transposed.
+    T,
+}
+
+/// Element type the packed core is generic over (f32 / f64).
+pub trait GemmScalar:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + std::ops::Add<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+}
+
+impl GemmScalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+}
+
+impl GemmScalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+}
+
+/// Raw strided matrix operand: `M(i, j) = *base.add(i*rs + j*cs)`. The
+/// base is stored as a `usize` address so closures capturing it are
+/// `Send + Sync` (the `SendPtr` convention).
+#[derive(Clone, Copy)]
+struct MatRef {
+    addr: usize,
+    rs: usize,
+    cs: usize,
+}
+
+impl MatRef {
+    fn new<T>(s: &[T], rs: usize, cs: usize) -> MatRef {
+        MatRef { addr: s.as_ptr() as usize, rs, cs }
+    }
+
+    fn offset<T>(self, elems: usize) -> MatRef {
+        MatRef { addr: self.addr + elems * std::mem::size_of::<T>(), ..self }
+    }
+
+    /// # Safety: caller guarantees `(i, j)` is in bounds of the backing
+    /// allocation for the lifetime of the call.
+    #[inline(always)]
+    unsafe fn at<T: Copy>(&self, i: usize, j: usize) -> T {
+        *(self.addr as *const T).add(i * self.rs + j * self.cs)
+    }
+}
+
+/// Where the driver finds B: a strided matrix packed on the fly, or a
+/// caller-provided buffer already in the canonical packed layout.
+#[derive(Clone, Copy)]
+enum BSrc {
+    Strided(MatRef),
+    Packed { addr: usize },
+}
+
+fn trans_strides_a(ta: Trans, m: usize, k: usize) -> (usize, usize) {
+    match ta {
+        Trans::N => (k, 1),
+        Trans::T => (1, m),
+    }
+}
+
+fn trans_strides_b(tb: Trans, k: usize, n: usize) -> (usize, usize) {
+    match tb {
+        Trans::N => (n, 1),
+        Trans::T => (1, k),
+    }
+}
+
+/// The degenerate-case table, explicit and unit-tested. When `k == 0` or
+/// `alpha == 0` the product term vanishes and `C = beta * C` exactly:
+///
+/// | beta  | action                                          |
+/// |-------|-------------------------------------------------|
+/// | `0`   | `C <- 0` (also clears pre-existing NaN/garbage) |
+/// | `1`   | no-op — C is already the answer                 |
+/// | other | scale C in place                                |
+///
+/// Returns `true` when the caller must skip the product entirely.
+fn degenerate_early_out<T: GemmScalar>(k: usize, alpha: T, beta: T, c: &mut [T]) -> bool {
+    if k != 0 && alpha != T::ZERO {
+        return false;
+    }
+    if beta == T::ZERO {
+        c.fill(T::ZERO);
+    } else if beta != T::ONE {
+        for x in c.iter_mut() {
+            *x = beta * *x;
+        }
+    }
+    true
+}
+
+/// Pack the `mc x kc` block of A at `(i0, p0)` into MR-row panels:
+/// `dst[ip*kc*MR + p*MR + r] = A(i0 + ip*MR + r, p0 + p)`, rows past `mc`
+/// zero-padded so edge tiles run the same microkernel.
+fn pack_a<T: GemmScalar, const MR: usize>(
+    dst: &mut [T],
+    a: MatRef,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    for ip in 0..mc.div_ceil(MR) {
+        let rows = (mc - ip * MR).min(MR);
+        let base = ip * kc * MR;
+        for p in 0..kc {
+            let off = base + p * MR;
+            for (r, d) in dst[off..off + rows].iter_mut().enumerate() {
+                *d = unsafe { a.at(i0 + ip * MR + r, p0 + p) };
+            }
+            for d in dst[off + rows..off + MR].iter_mut() {
+                *d = T::ZERO;
+            }
+        }
+    }
+}
+
+/// Pack the `kc x nc` block of B at `(p0, j0)` into NR-column panels:
+/// `dst[jp*kc*NR + p*NR + c] = B(p0 + p, j0 + jp*NR + c)`, columns past
+/// `nc` zero-padded.
+fn pack_b<T: GemmScalar, const NR: usize>(
+    dst: &mut [T],
+    b: MatRef,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    for jp in 0..nc.div_ceil(NR) {
+        let cols = (nc - jp * NR).min(NR);
+        let base = jp * kc * NR;
+        for p in 0..kc {
+            let off = base + p * NR;
+            for (c, d) in dst[off..off + cols].iter_mut().enumerate() {
+                *d = unsafe { b.at(p0 + p, j0 + jp * NR + c) };
+            }
+            for d in dst[off + cols..off + NR].iter_mut() {
+                *d = T::ZERO;
+            }
+        }
+    }
+}
+
+/// Pack ALL of a strided `k x n` B into the canonical full layout: KC-tall
+/// blocks in k order (block at k offset `p0` starts at element
+/// `p0 * ceil(n/NR)*NR`), each holding every NR panel of that block in
+/// column order. [`sgemm_prepacked`] consumes this directly.
+fn pack_b_full<T: GemmScalar, const NR: usize>(b: MatRef, k: usize, n: usize) -> Vec<T> {
+    let n_padded = n.div_ceil(NR) * NR;
+    let mut out = vec![T::ZERO; k * n_padded];
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        pack_b::<T, NR>(&mut out[p0 * n_padded..(p0 + kc) * n_padded], b, p0, kc, 0, n);
+        p0 += kc;
+    }
+    out
+}
+
+/// Pack a strided f32 `k x n` B (`B(p, j) = b[p*rsb + j*csb]`) for
+/// [`sgemm_prepacked`]. For `W [n, k]` row-major used as `B = Wᵀ`, pass
+/// `rsb = 1, csb = k`.
+pub fn pack_b_strided_f32(k: usize, n: usize, b: &[f32], rsb: usize, csb: usize) -> Vec<f32> {
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    check_span("pack_b B", b, k, rsb, n, csb);
+    pack_b_full::<f32, NR_F32>(MatRef::new(b, rsb, csb), k, n)
+}
+
+/// Dense row-major helper over [`pack_b_strided_f32`] with a layout flag.
+pub fn pack_b_f32(tb: Trans, k: usize, n: usize, b: &[f32]) -> Vec<f32> {
+    let (rsb, csb) = trans_strides_b(tb, k, n);
+    pack_b_strided_f32(k, n, b, rsb, csb)
+}
+
+/// The register-tiled MR x NR microkernel: accumulate the whole `kc`
+/// panel into a register tile in fixed p order, then write back
+/// `beta'*C + alpha*acc` (`beta'` only on the first k panel — `beta` is
+/// `Some` then, `None` on later panels). `mr`/`nr` clip the write to the
+/// valid region of edge tiles; the padded panel rows/columns only feed
+/// the clipped-away accumulators, never the k sum.
+#[inline(always)]
+fn microkernel<T: GemmScalar, const MR: usize, const NR: usize>(
+    kc: usize,
+    alpha: T,
+    a_panel: &[T],
+    b_panel: &[T],
+    c_addr: usize,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    beta: Option<T>,
+) {
+    debug_assert!(a_panel.len() >= kc * MR && b_panel.len() >= kc * NR);
+    let mut acc = [[T::ZERO; NR]; MR];
+    for p in 0..kc {
+        let av = &a_panel[p * MR..p * MR + MR];
+        let bv = &b_panel[p * NR..p * NR + NR];
+        for (acc_i, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (aij, &bj) in acc_i.iter_mut().zip(bv.iter()) {
+                *aij += ai * bj;
+            }
+        }
+    }
+    let cp = c_addr as *mut T;
+    // SAFETY: the caller hands each (task, tile) a disjoint C region.
+    unsafe {
+        match beta {
+            None => {
+                for (i, acc_i) in acc.iter().enumerate().take(mr) {
+                    let row = std::slice::from_raw_parts_mut(cp.add(i * ldc), nr);
+                    for (cj, &aij) in row.iter_mut().zip(acc_i.iter()) {
+                        *cj += alpha * aij;
+                    }
+                }
+            }
+            Some(b0) if b0 == T::ZERO => {
+                for (i, acc_i) in acc.iter().enumerate().take(mr) {
+                    let row = std::slice::from_raw_parts_mut(cp.add(i * ldc), nr);
+                    for (cj, &aij) in row.iter_mut().zip(acc_i.iter()) {
+                        *cj = alpha * aij;
+                    }
+                }
+            }
+            Some(b0) => {
+                for (i, acc_i) in acc.iter().enumerate().take(mr) {
+                    let row = std::slice::from_raw_parts_mut(cp.add(i * ldc), nr);
+                    for (cj, &aij) in row.iter_mut().zip(acc_i.iter()) {
+                        *cj = b0 * *cj + alpha * aij;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pick the `(row, column)` block sizes for the task grid: start at the
+/// `(MC, NC)` maxima (clamped to the matrix) and halve the larger block —
+/// keeping MR/NR multiples — until the grid reaches [`GRID_TARGET`] tasks
+/// or both blocks hit the microkernel floor.
+///
+/// Derived from `(m, n)` and constants only. More fundamentally, block
+/// sizes cannot change results at all: every C element is accumulated by
+/// one microkernel call per KC panel, in a fixed per-panel p order, with
+/// panels applied in k order — which tile or task it lands in never
+/// enters the arithmetic. Only `KC` and the microkernel loop shape the
+/// bits, and both are constants.
+fn pick_blocks<const MR: usize, const NR: usize>(m: usize, n: usize) -> (usize, usize) {
+    let mut mc = MC.min(m.div_ceil(MR) * MR);
+    let mut nc = NC.min(n.div_ceil(NR) * NR);
+    loop {
+        if m.div_ceil(mc) * n.div_ceil(nc) >= GRID_TARGET {
+            return (mc, nc);
+        }
+        let mc2 = ((mc / 2).max(MR)).div_ceil(MR) * MR;
+        let nc2 = ((nc / 2).max(NR)).div_ceil(NR) * NR;
+        let m_gain = m.div_ceil(mc2) > m.div_ceil(mc);
+        let n_gain = n.div_ceil(nc2) > n.div_ceil(nc);
+        if m_gain && (mc >= nc || !n_gain) {
+            mc = mc2;
+        } else if n_gain {
+            nc = nc2;
+        } else {
+            return (mc, nc); // no split can add tasks
+        }
+    }
+}
+
+/// The blocked driver: a 2-D task grid over (row blocks x column blocks,
+/// sized by [`pick_blocks`]); each task walks the shared KC panels of its
+/// block serially in k order, packing its own A (and, unless prepacked,
+/// B) panels. Tasks write disjoint C tiles, so the grid parallelizes
+/// freely without changing a single bit of the result.
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver<T: GemmScalar, const MR: usize, const NR: usize>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: MatRef,
+    b: BSrc,
+    beta: T,
+    c_addr: usize,
+    parallel: bool,
+) {
+    let (mcb, ncb) = pick_blocks::<MR, NR>(m, n);
+    let row_blocks = m.div_ceil(mcb);
+    let col_blocks = n.div_ceil(ncb);
+    let tasks = row_blocks * col_blocks;
+    let n_padded = n.div_ceil(NR) * NR;
+    let kc_max = KC.min(k);
+    let elem = std::mem::size_of::<T>();
+
+    let run_block = move |t: usize| {
+        let i0 = (t / col_blocks) * mcb;
+        let mc = mcb.min(m - i0);
+        let j0 = (t % col_blocks) * ncb;
+        let nc = ncb.min(n - j0);
+        let mut a_pack = vec![T::ZERO; mc.div_ceil(MR) * MR * kc_max];
+        let mut b_pack = match b {
+            BSrc::Strided(_) => vec![T::ZERO; nc.div_ceil(NR) * NR * kc_max],
+            BSrc::Packed { .. } => Vec::new(),
+        };
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            pack_a::<T, MR>(&mut a_pack, a, i0, mc, p0, kc);
+            if let BSrc::Strided(bm) = b {
+                pack_b::<T, NR>(&mut b_pack, bm, p0, kc, j0, nc);
+            }
+            let first = if p0 == 0 { Some(beta) } else { None };
+            for jr in 0..nc.div_ceil(NR) {
+                let jj = j0 + jr * NR;
+                let nr = NR.min(j0 + nc - jj);
+                let b_panel: &[T] = match b {
+                    BSrc::Strided(_) => &b_pack[jr * kc * NR..(jr + 1) * kc * NR],
+                    // Full-layout lookup: block at p0 * n_padded, global
+                    // panel index j0/NR + jr, each panel kc*NR long.
+                    BSrc::Packed { addr } => unsafe {
+                        std::slice::from_raw_parts(
+                            (addr as *const T).add(p0 * n_padded + (j0 / NR + jr) * kc * NR),
+                            kc * NR,
+                        )
+                    },
+                };
+                for ir in 0..mc.div_ceil(MR) {
+                    let ii = i0 + ir * MR;
+                    let mr = MR.min(i0 + mc - ii);
+                    microkernel::<T, MR, NR>(
+                        kc,
+                        alpha,
+                        &a_pack[ir * kc * MR..(ir + 1) * kc * MR],
+                        b_panel,
+                        c_addr + (ii * n + jj) * elem,
+                        n,
+                        mr,
+                        nr,
+                        first,
+                    );
+                }
+            }
+            p0 += kc;
+        }
+    };
+
+    if !parallel || tasks == 1 {
+        for t in 0..tasks {
+            run_block(t);
+        }
+    } else {
+        parallel_for(tasks, 1, move |t0, t1| {
+            for t in t0..t1 {
+                run_block(t);
+            }
+        });
+    }
+}
+
+/// Shared entry: degenerate table, then the blocked driver.
+#[allow(clippy::too_many_arguments)]
+fn gemm_entry<T: GemmScalar, const MR: usize, const NR: usize>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: MatRef,
+    b: BSrc,
+    beta: T,
+    c: &mut [T],
+    parallel: bool,
+) {
     debug_assert_eq!(c.len(), m * n, "C size");
-
     if m == 0 || n == 0 {
         return;
     }
-    if k == 0 || alpha == 0.0 {
-        if beta == 0.0 {
-            c.fill(0.0);
-        } else if beta != 1.0 {
-            for x in c.iter_mut() {
-                *x *= beta;
-            }
-        }
+    if degenerate_early_out(k, alpha, beta, c) {
         return;
     }
+    gemm_driver::<T, MR, NR>(m, n, k, alpha, a, b, beta, c.as_mut_ptr() as usize, parallel);
+}
 
-    // SAFETY: parallel tasks write disjoint row-ranges of C.
+/// Parallelize when the arithmetic dwarfs a pool wakeup (same threshold
+/// family as the TensorIter drivers).
+fn worth_parallelizing(m: usize, n: usize, k: usize) -> bool {
+    m.saturating_mul(n).saturating_mul(k) > super::SERIAL_GRAIN
+}
+
+/// Bounds check for a strided operand: the largest reachable element
+/// must sit inside the slice. Always on (not `debug_assert`): the packed
+/// core reads operands through raw pointers, so this O(1) check is what
+/// turns a caller's bad stride into a panic instead of an out-of-bounds
+/// read — the same guarantee the old safe-indexing kernel gave.
+#[track_caller]
+fn check_span<T>(what: &str, s: &[T], d0: usize, st0: usize, d1: usize, st1: usize) {
+    assert!(
+        d0 == 0 || d1 == 0 || (d0 - 1) * st0 + (d1 - 1) * st1 < s.len(),
+        "{what}: strided operand reaches element {} but the slice has {}",
+        (d0 - 1) * st0 + (d1 - 1) * st1,
+        s.len()
+    );
+}
+
+/// Batched variant of [`check_span`] (adds the batch axis).
+#[track_caller]
+#[allow(clippy::too_many_arguments)]
+fn check_span_batched<T>(
+    what: &str,
+    s: &[T],
+    batch: usize,
+    bs: usize,
+    d0: usize,
+    st0: usize,
+    d1: usize,
+    st1: usize,
+) {
+    assert!(
+        batch == 0
+            || d0 == 0
+            || d1 == 0
+            || (batch - 1) * bs + (d0 - 1) * st0 + (d1 - 1) * st1 < s.len(),
+        "{what}: strided batched operand reaches element {} but the slice has {}",
+        (batch - 1) * bs + (d0 - 1) * st0 + (d1 - 1) * st1,
+        s.len()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Public f32 entries
+// ---------------------------------------------------------------------
+
+/// `C(m,n) = alpha * op(A) @ op(B) + beta * C`, all buffers dense
+/// row-major (`a` is `(m,k)` under `Trans::N`, `(k,m)` under `Trans::T`;
+/// `b` likewise `(k,n)` / `(n,k)`).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "A size");
+    debug_assert_eq!(b.len(), k * n, "B size");
+    let (rsa, csa) = trans_strides_a(ta, m, k);
+    let (rsb, csb) = trans_strides_b(tb, k, n);
+    sgemm_strided(m, n, k, alpha, a, rsa, csa, b, rsb, csb, beta, c);
+}
+
+/// The fully strided f32 entry: `A(i,p) = a[i*rsa + p*csa]`,
+/// `B(p,j) = b[p*rsb + j*csb]`, C dense row-major. Any stride pattern —
+/// transposed views, narrowed slices, stride-0 broadcasts — is packed
+/// directly, never materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_strided(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    rsa: usize,
+    csa: usize,
+    b: &[f32],
+    rsb: usize,
+    csb: usize,
+    beta: f32,
+    c: &mut [f32],
+) {
+    check_span("sgemm A", a, m, rsa, k, csa);
+    check_span("sgemm B", b, k, rsb, n, csb);
+    gemm_entry::<f32, MR_F32, NR_F32>(
+        m,
+        n,
+        k,
+        alpha,
+        MatRef::new(a, rsa, csa),
+        BSrc::Strided(MatRef::new(b, rsb, csb)),
+        beta,
+        c,
+        worth_parallelizing(m, n, k),
+    );
+}
+
+/// [`sgemm`] that never fans out to the pool — for call sites already
+/// inside a `parallel_for` region (the conv im2col loops).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_serial(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "A size");
+    debug_assert_eq!(b.len(), k * n, "B size");
+    let (rsa, csa) = trans_strides_a(ta, m, k);
+    let (rsb, csb) = trans_strides_b(tb, k, n);
+    check_span("sgemm_serial A", a, m, rsa, k, csa);
+    check_span("sgemm_serial B", b, k, rsb, n, csb);
+    gemm_entry::<f32, MR_F32, NR_F32>(
+        m,
+        n,
+        k,
+        alpha,
+        MatRef::new(a, rsa, csa),
+        BSrc::Strided(MatRef::new(b, rsb, csb)),
+        beta,
+        c,
+        false,
+    );
+}
+
+/// GEMM against a B prepacked by [`pack_b_strided_f32`] — the
+/// `nn::Linear` steady-state path (zero copies, zero packing).
+/// Bit-identical to the pack-on-the-fly entries: the packed values and
+/// the tile walk are exactly the same.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_prepacked(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    rsa: usize,
+    csa: usize,
+    packed_b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert!(
+        packed_b.len() >= k * n.div_ceil(NR_F32) * NR_F32,
+        "prepacked B too short for (k={k}, n={n})"
+    );
+    check_span("sgemm_prepacked A", a, m, rsa, k, csa);
+    gemm_entry::<f32, MR_F32, NR_F32>(
+        m,
+        n,
+        k,
+        alpha,
+        MatRef::new(a, rsa, csa),
+        BSrc::Packed { addr: packed_b.as_ptr() as usize },
+        beta,
+        c,
+        worth_parallelizing(m, n, k),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Public f64 entries
+// ---------------------------------------------------------------------
+
+/// f64 `C = alpha * op(A) @ op(B) + beta * C` — the precision-dtype GEMM
+/// behind the dispatcher's F64 entries, on the same packed core with a
+/// simpler 4x4 microkernel.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    b: &[f64],
+    beta: f64,
+    c: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), m * k, "A size");
+    debug_assert_eq!(b.len(), k * n, "B size");
+    let (rsa, csa) = trans_strides_a(ta, m, k);
+    let (rsb, csb) = trans_strides_b(tb, k, n);
+    dgemm_strided(m, n, k, alpha, a, rsa, csa, b, rsb, csb, beta, c);
+}
+
+/// Fully strided f64 entry; see [`sgemm_strided`].
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_strided(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    rsa: usize,
+    csa: usize,
+    b: &[f64],
+    rsb: usize,
+    csb: usize,
+    beta: f64,
+    c: &mut [f64],
+) {
+    check_span("dgemm A", a, m, rsa, k, csa);
+    check_span("dgemm B", b, k, rsb, n, csb);
+    gemm_entry::<f64, MR_F64, NR_F64>(
+        m,
+        n,
+        k,
+        alpha,
+        MatRef::new(a, rsa, csa),
+        BSrc::Strided(MatRef::new(b, rsb, csb)),
+        beta,
+        c,
+        worth_parallelizing(m, n, k),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Batched entries (the bmm kernels)
+// ---------------------------------------------------------------------
+
+/// Shared batched driver: parallel over the batch dim when batches can
+/// fill the pool (one serial packed GEMM per batch element), otherwise a
+/// serial batch loop whose per-matrix GEMMs parallelize internally. Both
+/// schedules produce bit-identical results — the tile decomposition never
+/// depends on the schedule.
+#[allow(clippy::too_many_arguments)]
+fn gemm_batched_driver<T: GemmScalar, const MR: usize, const NR: usize>(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatRef,
+    bsa: usize,
+    b: MatRef,
+    bsb: usize,
+    c: &mut [T],
+) {
+    debug_assert_eq!(c.len(), batch * m * n, "C size");
+    if batch == 0 || m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(T::ZERO);
+        return;
+    }
+    let per_c = m * n;
     let c_addr = c.as_mut_ptr() as usize;
-    // Grain: tiny problems run serially; everything else splits into
-    // ceil(m / num_threads())-row tasks. Deriving the grain from `m` and
-    // the thread count — instead of a fixed ROWS_PER_TASK floor — keeps
-    // tall-skinny matmuls (m ≈ thread count) from leaving cores idle.
-    let flops = 2 * m * n * k;
-    let grain_rows = if flops <= 2 * super::SERIAL_GRAIN {
+    let run_one = move |i: usize, parallel: bool| {
+        // SAFETY: batch element i owns the disjoint C slice [i*per_c ..).
+        let ci = unsafe {
+            std::slice::from_raw_parts_mut((c_addr as *mut T).add(i * per_c), per_c)
+        };
+        gemm_entry::<T, MR, NR>(
+            m,
+            n,
+            k,
+            T::ONE,
+            a.offset::<T>(i * bsa),
+            BSrc::Strided(b.offset::<T>(i * bsb)),
+            T::ZERO,
+            ci,
+            parallel,
+        );
+    };
+    let total_work = batch.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if batch >= super::num_threads() && total_work > super::SERIAL_GRAIN {
+        parallel_for(batch, 1, move |b0, b1| {
+            for i in b0..b1 {
+                run_one(i, false);
+            }
+        });
+    } else {
+        let inner = worth_parallelizing(m, n, k);
+        for i in 0..batch {
+            run_one(i, inner);
+        }
+    }
+}
+
+/// Batched f32 GEMM over dense `[batch, m, k] @ [batch, k, n]`.
+pub fn sgemm_batched(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), batch * m * k);
+    debug_assert_eq!(b.len(), batch * k * n);
+    sgemm_batched_strided(batch, m, n, k, a, m * k, k, 1, b, k * n, n, 1, c)
+}
+
+/// Fully strided batched f32 GEMM: `A_i(r, p) = a[i*bsa + r*rsa + p*csa]`
+/// (likewise B), C dense `[batch, m, n]` — transposed bmm operands are
+/// consumed without materialization.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_batched_strided(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    bsa: usize,
+    rsa: usize,
+    csa: usize,
+    b: &[f32],
+    bsb: usize,
+    rsb: usize,
+    csb: usize,
+    c: &mut [f32],
+) {
+    check_span_batched("sgemm_batched A", a, batch, bsa, m, rsa, k, csa);
+    check_span_batched("sgemm_batched B", b, batch, bsb, k, rsb, n, csb);
+    gemm_batched_driver::<f32, MR_F32, NR_F32>(
+        batch,
+        m,
+        n,
+        k,
+        MatRef::new(a, rsa, csa),
+        bsa,
+        MatRef::new(b, rsb, csb),
+        bsb,
+        c,
+    );
+}
+
+/// Batched f64 GEMM over dense `[batch, m, k] @ [batch, k, n]` — now
+/// batch-parallel through the same driver as the f32 path (it used to be
+/// a serial loop).
+pub fn dgemm_batched(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), batch * m * k);
+    debug_assert_eq!(b.len(), batch * k * n);
+    dgemm_batched_strided(batch, m, n, k, a, m * k, k, 1, b, k * n, n, 1, c)
+}
+
+/// Fully strided batched f64 GEMM; see [`sgemm_batched_strided`].
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_batched_strided(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    bsa: usize,
+    rsa: usize,
+    csa: usize,
+    b: &[f64],
+    bsb: usize,
+    rsb: usize,
+    csb: usize,
+    c: &mut [f64],
+) {
+    check_span_batched("dgemm_batched A", a, batch, bsa, m, rsa, k, csa);
+    check_span_batched("dgemm_batched B", b, batch, bsb, k, rsb, n, csb);
+    gemm_batched_driver::<f64, MR_F64, NR_F64>(
+        batch,
+        m,
+        n,
+        k,
+        MatRef::new(a, rsa, csa),
+        bsa,
+        MatRef::new(b, rsb, csb),
+        bsb,
+        c,
+    );
+}
+
+// ---------------------------------------------------------------------
+// References
+// ---------------------------------------------------------------------
+
+/// The previous streaming kernel (K-blocked 8-row microtile over
+/// unpacked operands), kept verbatim as the `gemm:unpacked-ref` bench
+/// baseline and as an independent implementation for parity tests.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_unpacked(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "A size");
+    debug_assert_eq!(b.len(), k * n, "B size");
+    debug_assert_eq!(c.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if degenerate_early_out(k, alpha, beta, c) {
+        return;
+    }
+    let c_addr = c.as_mut_ptr() as usize;
+    let grain_rows = if m * n * k <= super::SERIAL_GRAIN {
         m
     } else {
         m.div_ceil(super::num_threads()).max(1)
     };
+    // SAFETY: parallel tasks write disjoint row-ranges of C.
     parallel_for(m, grain_rows, move |row_start, row_end| {
         let c = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f32, m * n) };
         for i in row_start..row_end {
@@ -56,51 +915,13 @@ pub fn sgemm(m: usize, n: usize, k: usize, alpha: f32, a: &[f32], b: &[f32], bet
                 }
             }
         }
-        // K-blocked accumulation with an 8-row microkernel: each loaded
-        // B row updates 8 C rows, cutting B-stream bandwidth 8x (§Perf:
-        // 2.0x over the 1-row axpy kernel on the AVX-512 testbed).
-        gemm_panel(row_start, row_end, n, k, alpha, a, b, c);
+        unpacked_panel(row_start, row_end, n, k, alpha, a, b, c);
     });
 }
 
-/// Batched GEMM over leading batch dim: C[b] = A[b] @ B[b].
-pub fn sgemm_batched(
-    batch: usize,
-    m: usize,
-    n: usize,
-    k: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-) {
-    debug_assert_eq!(a.len(), batch * m * k);
-    debug_assert_eq!(b.len(), batch * k * n);
-    debug_assert_eq!(c.len(), batch * m * n);
-    let c_addr = c.as_mut_ptr() as usize;
-    parallel_for(batch, 1, move |b0, b1| {
-        let c_all = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f32, batch * m * n) };
-        for i in b0..b1 {
-            serial_gemm(
-                m,
-                n,
-                k,
-                &a[i * m * k..(i + 1) * m * k],
-                &b[i * k * n..(i + 1) * k * n],
-                &mut c_all[i * m * n..(i + 1) * m * n],
-            );
-        }
-    });
-}
-
-/// Single-threaded gemm used inside already-parallel regions.
-fn serial_gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    c.fill(0.0);
-    gemm_panel(0, m, n, k, 1.0, a, b, c);
-}
-
-/// The shared 8-row microkernel over C rows [row_start, row_end).
-/// C must already hold the beta-scaled values; this accumulates.
-pub(crate) fn gemm_panel(
+/// The unpacked 8-row streaming microkernel over C rows
+/// `[row_start, row_end)`; C must already hold the beta-scaled values.
+fn unpacked_panel(
     row_start: usize,
     row_end: usize,
     n: usize,
@@ -134,7 +955,6 @@ pub(crate) fn gemm_panel(
             }
             i += MR;
         }
-        // Remainder rows: scalar-A axpy.
         while i < row_end {
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut c[i * n..(i + 1) * n];
@@ -154,68 +974,29 @@ pub(crate) fn gemm_panel(
     }
 }
 
-/// Row-major `C = A @ B` in f64 — the precision-dtype GEMM behind the
-/// dispatcher's F64 matmul entries. Parallel over rows with an axpy inner
-/// loop; correctness-oriented (f64 is the gradcheck dtype, not the
-/// throughput one).
-pub fn dgemm(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k, "A size");
-    debug_assert_eq!(b.len(), k * n, "B size");
-    debug_assert_eq!(c.len(), m * n, "C size");
-    if m == 0 || n == 0 {
-        return;
-    }
-    // SAFETY: parallel tasks write disjoint row-ranges of C.
-    let c_addr = c.as_mut_ptr() as usize;
-    parallel_for(m, 8, move |row_start, row_end| {
-        let c = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f64, m * n) };
-        for i in row_start..row_end {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            crow.fill(0.0);
-            for (p, &av) in arow.iter().enumerate() {
-                let brow = &b[p * n..(p + 1) * n];
-                for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
-                    *cj += av * bj;
-                }
-            }
-        }
-    });
+/// Naive f64-accumulating oracle for tests: straightforward triple loop.
+pub fn matmul_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    matmul_ref_t(Trans::N, Trans::N, m, n, k, a, b)
 }
 
-/// Batched f64 GEMM over the leading batch dim: C[b] = A[b] @ B[b].
-pub fn dgemm_batched(
-    batch: usize,
+/// Trans-aware naive oracle (same layout conventions as [`sgemm`]).
+pub fn matmul_ref_t(
+    ta: Trans,
+    tb: Trans,
     m: usize,
     n: usize,
     k: usize,
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-) {
-    debug_assert_eq!(a.len(), batch * m * k);
-    debug_assert_eq!(b.len(), batch * k * n);
-    debug_assert_eq!(c.len(), batch * m * n);
-    for i in 0..batch {
-        dgemm(
-            m,
-            n,
-            k,
-            &a[i * m * k..(i + 1) * m * k],
-            &b[i * k * n..(i + 1) * k * n],
-            &mut c[i * m * n..(i + 1) * m * n],
-        );
-    }
-}
-
-/// Naive reference for tests: straightforward triple loop.
-pub fn matmul_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    a: &[f32],
+    b: &[f32],
+) -> Vec<f32> {
+    let (rsa, csa) = trans_strides_a(ta, m, k);
+    let (rsb, csb) = trans_strides_b(tb, k, n);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
         for j in 0..n {
             let mut acc = 0f64;
             for p in 0..k {
-                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                acc += a[i * rsa + p * csa] as f64 * b[p * rsb + j * csb] as f64;
             }
             c[i * n + j] = acc as f32;
         }
@@ -232,19 +1013,26 @@ mod tests {
         (0..n).map(|_| r.uniform_range(-1.0, 1.0)).collect()
     }
 
-    fn check(m: usize, n: usize, k: usize, seed: u64) {
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&x, &y)) in got.iter().zip(want.iter()).enumerate() {
+            assert!((x - y).abs() <= tol + tol * y.abs(), "{what} idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn check_t(ta: Trans, tb: Trans, m: usize, n: usize, k: usize, seed: u64) {
         let mut r = Rng::new(seed);
         let a = rand_vec(&mut r, m * k);
         let b = rand_vec(&mut r, k * n);
         let mut c = vec![0.0f32; m * n];
-        sgemm(m, n, k, 1.0, &a, &b, 0.0, &mut c);
-        let expect = matmul_ref(m, n, k, &a, &b);
-        for (i, (&x, &y)) in c.iter().zip(expect.iter()).enumerate() {
-            assert!(
-                (x - y).abs() <= 1e-4 + 1e-4 * y.abs(),
-                "({m},{n},{k}) idx {i}: {x} vs {y}"
-            );
-        }
+        sgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+        let expect = matmul_ref_t(ta, tb, m, n, k, &a, &b);
+        let tol = if k > 512 { 1e-3 } else { 1e-4 };
+        assert_close(&c, &expect, tol, &format!("({ta:?},{tb:?}) ({m},{n},{k})"));
+    }
+
+    fn check(m: usize, n: usize, k: usize, seed: u64) {
+        check_t(Trans::N, Trans::N, m, n, k, seed);
     }
 
     #[test]
@@ -262,10 +1050,234 @@ mod tests {
     }
 
     #[test]
+    fn all_trans_combos_match_reference() {
+        let mut seed = 40;
+        for &ta in &[Trans::N, Trans::T] {
+            for &tb in &[Trans::N, Trans::T] {
+                for &(m, n, k) in &[
+                    (1usize, 1usize, 1usize),
+                    (5, 7, 11),
+                    (8, 8, KC + 3),   // KC boundary
+                    (MC + 1, 9, 33),  // MC boundary
+                    (3, NC + 5, 17),  // NC boundary
+                    (2, 65, 300),     // tall-skinny
+                    (100, 1, 7),
+                ] {
+                    seed += 1;
+                    check_t(ta, tb, m, n, k, seed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_operands_match_dense() {
+        // A = every other row of a bigger buffer; B = a transposed view
+        // expressed purely through strides. The kernel must consume both
+        // without any materialization.
+        let (m, n, k) = (6usize, 5usize, 7usize);
+        let mut r = Rng::new(77);
+        let big_a = rand_vec(&mut r, 2 * m * k); // rows interleaved
+        let bt = rand_vec(&mut r, n * k); // holds Bᵀ (n x k) row-major
+        let mut c = vec![0.0f32; m * n];
+        // A(i, p) = big_a[i*2k + p]; B(p, j) = bt[j*k + p].
+        sgemm_strided(m, n, k, 1.0, &big_a, 2 * k, 1, &bt, 1, k, 0.0, &mut c);
+        let a_dense: Vec<f32> =
+            (0..m * k).map(|i| big_a[(i / k) * 2 * k + i % k]).collect();
+        let expect = matmul_ref_t(Trans::N, Trans::T, m, n, k, &a_dense, &bt);
+        assert_close(&c, &expect, 1e-4, "strided");
+    }
+
+    #[test]
+    fn prepacked_matches_strided_bitwise() {
+        let (m, n, k) = (33usize, 129usize, KC + 9);
+        let mut r = Rng::new(21);
+        let a = rand_vec(&mut r, m * k);
+        let b = rand_vec(&mut r, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c1);
+        let packed = pack_b_f32(Trans::N, k, n, &b);
+        let mut c2 = vec![0.0f32; m * n];
+        sgemm_prepacked(m, n, k, 1.0, &a, k, 1, &packed, 0.0, &mut c2);
+        assert_eq!(c1, c2, "prepacked must be bit-identical to on-the-fly packing");
+    }
+
+    #[test]
+    fn bitwise_identical_across_thread_counts() {
+        let (m, n, k) = (MC + 5, NC + 7, KC + 11);
+        let mut r = Rng::new(31);
+        let a = rand_vec(&mut r, m * k);
+        let b = rand_vec(&mut r, k * n);
+        let run = || {
+            let mut c = vec![0.0f32; m * n];
+            sgemm(Trans::N, Trans::T, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            c
+        };
+        crate::kernels::set_num_threads(1);
+        let c1 = run();
+        crate::kernels::set_num_threads(8);
+        let c8 = run();
+        crate::kernels::set_num_threads(0);
+        assert_eq!(c1, c8, "packed gemm must not depend on the thread count");
+    }
+
+    #[test]
+    fn packed_matches_unpacked_reference_kernel() {
+        let (m, n, k) = (57, 83, 129);
+        let mut r = Rng::new(51);
+        let a = rand_vec(&mut r, m * k);
+        let b = rand_vec(&mut r, k * n);
+        let mut c_packed = vec![1.5f32; m * n];
+        sgemm(Trans::N, Trans::N, m, n, k, 0.5, &a, &b, 2.0, &mut c_packed);
+        let mut c_ref = vec![1.5f32; m * n];
+        sgemm_unpacked(m, n, k, 0.5, &a, &b, 2.0, &mut c_ref);
+        assert_close(&c_packed, &c_ref, 1e-4, "packed vs unpacked");
+    }
+
+    #[test]
+    fn alpha_beta_semantics() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let b = vec![1.0f32, 0.0, 0.0, 1.0]; // identity
+        let mut c = vec![10.0f32, 20.0, 30.0, 40.0];
+        sgemm(Trans::N, Trans::N, 2, 2, 2, 2.0, &a, &b, 0.5, &mut c);
+        assert_eq!(c, vec![2.0 + 5.0, 4.0 + 10.0, 6.0 + 15.0, 8.0 + 20.0]);
+    }
+
+    /// The explicit degenerate table: every (alpha, beta, k) combo where
+    /// the product term vanishes must reduce to exactly `C = beta * C`.
+    #[test]
+    fn degenerate_alpha_beta_k_table() {
+        let a = vec![1.0f32; 6];
+        let b = vec![1.0f32; 6];
+        let c0 = vec![3.0f32, -1.0, 0.5, 2.0];
+        for &(alpha, k) in &[(0.0f32, 2usize), (1.0, 0), (0.0, 0), (0.5, 0)] {
+            for &beta in &[0.0f32, 1.0, 0.5] {
+                let mut c = c0.clone();
+                let (al, bl) = (2 * k, 2 * k);
+                sgemm(Trans::N, Trans::N, 2, 2, k, alpha, &a[..al], &b[..bl], beta, &mut c);
+                let expect: Vec<f32> = if beta == 0.0 {
+                    vec![0.0; 4]
+                } else if beta == 1.0 {
+                    c0.clone()
+                } else {
+                    c0.iter().map(|&x| beta * x).collect()
+                };
+                assert_eq!(c, expect, "alpha={alpha} beta={beta} k={k}");
+            }
+        }
+        // Non-degenerate sanity next to the table: k>0, alpha!=0, beta=1
+        // accumulates on top of C.
+        let mut c = c0.clone();
+        sgemm(Trans::N, Trans::N, 2, 2, 2, 1.0, &a[..4], &b[..4], 1.0, &mut c);
+        let expect: Vec<f32> = c0.iter().map(|&x| x + 2.0).collect();
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn degenerate_beta_zero_clears_nan() {
+        let mut c = vec![f32::NAN; 4];
+        sgemm(Trans::N, Trans::N, 2, 2, 0, 1.0, &[], &[], 0.0, &mut c);
+        assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn dgemm_matches_reference_all_trans() {
+        let mut seed = 400;
+        for &ta in &[Trans::N, Trans::T] {
+            for &tb in &[Trans::N, Trans::T] {
+                seed += 1;
+                let (m, n, k) = (7, 5, 9);
+                let mut r = Rng::new(seed);
+                let a32 = rand_vec(&mut r, m * k);
+                let b32 = rand_vec(&mut r, k * n);
+                let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+                let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+                let mut c = vec![0.0f64; m * n];
+                dgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                let expect = matmul_ref_t(ta, tb, m, n, k, &a32, &b32);
+                for (i, (&x, &y)) in c.iter().zip(expect.iter()).enumerate() {
+                    assert!(
+                        (x as f32 - y).abs() <= 1e-4 + 1e-4 * y.abs(),
+                        "({ta:?},{tb:?}) idx {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_loop() {
+        let mut r = Rng::new(9);
+        let (batch, m, n, k) = (4, 6, 5, 7);
+        let a = rand_vec(&mut r, batch * m * k);
+        let b = rand_vec(&mut r, batch * k * n);
+        let mut c = vec![0.0f32; batch * m * n];
+        sgemm_batched(batch, m, n, k, &a, &b, &mut c);
+        for i in 0..batch {
+            let expect =
+                matmul_ref(m, n, k, &a[i * m * k..(i + 1) * m * k], &b[i * k * n..(i + 1) * k * n]);
+            for (j, (&x, &y)) in c[i * m * n..(i + 1) * m * n].iter().zip(expect.iter()).enumerate()
+            {
+                assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(), "batch {i} idx {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dgemm_batched_parallel_matches_loop() {
+        // Batch large enough to take the batch-parallel branch on any
+        // pool size the test host has.
+        let mut r = Rng::new(19);
+        let (batch, m, n, k) = (32, 9, 8, 30);
+        let a32 = rand_vec(&mut r, batch * m * k);
+        let b32 = rand_vec(&mut r, batch * k * n);
+        let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+        let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+        let mut c = vec![0.0f64; batch * m * n];
+        dgemm_batched(batch, m, n, k, &a, &b, &mut c);
+        for i in 0..batch {
+            let expect = matmul_ref(
+                m,
+                n,
+                k,
+                &a32[i * m * k..(i + 1) * m * k],
+                &b32[i * k * n..(i + 1) * k * n],
+            );
+            for (j, (&x, &y)) in c[i * m * n..(i + 1) * m * n].iter().zip(expect.iter()).enumerate()
+            {
+                assert!((x as f32 - y).abs() <= 1e-4 + 1e-4 * y.abs(), "batch {i} idx {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_strided_transposed_operands() {
+        // bmm with B given as its transpose via strides only.
+        let mut r = Rng::new(23);
+        let (batch, m, n, k) = (3, 4, 6, 5);
+        let a = rand_vec(&mut r, batch * m * k);
+        let bt = rand_vec(&mut r, batch * n * k); // [batch, n, k] = Bᵀ per batch
+        let mut c = vec![0.0f32; batch * m * n];
+        sgemm_batched_strided(batch, m, n, k, &a, m * k, k, 1, &bt, n * k, 1, k, &mut c);
+        for i in 0..batch {
+            let expect = matmul_ref_t(
+                Trans::N,
+                Trans::T,
+                m,
+                n,
+                k,
+                &a[i * m * k..(i + 1) * m * k],
+                &bt[i * n * k..(i + 1) * n * k],
+            );
+            for (j, (&x, &y)) in c[i * m * n..(i + 1) * m * n].iter().zip(expect.iter()).enumerate()
+            {
+                assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(), "batch {i} idx {j}");
+            }
+        }
+    }
+
+    #[test]
     fn shape_sweep_tall_skinny_and_odd() {
-        // Tall-skinny / tiny-m shapes the old fixed ROWS_PER_TASK grain
-        // served with a single task; the grain now derives from m and
-        // num_threads(), so every shape must still match the reference.
         let mut seed = 100;
         for &m in &[1usize, 2, 3, 4, 7, 8, 9, 15, 16, 31, 33, 100] {
             for &(n, k) in &[(64usize, 64usize), (33, 129), (256, 16)] {
@@ -282,50 +1294,12 @@ mod tests {
     }
 
     #[test]
-    fn alpha_beta_semantics() {
-        let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
-        let b = vec![1.0f32, 0.0, 0.0, 1.0]; // identity
-        let mut c = vec![10.0f32, 20.0, 30.0, 40.0];
-        sgemm(2, 2, 2, 2.0, &a, &b, 0.5, &mut c);
-        assert_eq!(c, vec![2.0 + 5.0, 4.0 + 10.0, 6.0 + 15.0, 8.0 + 20.0]);
-    }
-
-    #[test]
     fn zero_k_scales_c_by_beta() {
         let mut c = vec![2.0f32; 4];
-        sgemm(2, 2, 0, 1.0, &[], &[], 0.0, &mut c);
+        sgemm(Trans::N, Trans::N, 2, 2, 0, 1.0, &[], &[], 0.0, &mut c);
         assert_eq!(c, vec![0.0; 4]);
-    }
-
-    #[test]
-    fn dgemm_matches_reference() {
-        let mut r = Rng::new(10);
-        let (m, n, k) = (7, 5, 9);
-        let a32 = rand_vec(&mut r, m * k);
-        let b32 = rand_vec(&mut r, k * n);
-        let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
-        let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
-        let mut c = vec![0.0f64; m * n];
-        dgemm(m, n, k, &a, &b, &mut c);
-        let expect = matmul_ref(m, n, k, &a32, &b32);
-        for (i, (&x, &y)) in c.iter().zip(expect.iter()).enumerate() {
-            assert!((x as f32 - y).abs() <= 1e-4 + 1e-4 * y.abs(), "idx {i}: {x} vs {y}");
-        }
-    }
-
-    #[test]
-    fn batched_matches_loop() {
-        let mut r = Rng::new(9);
-        let (batch, m, n, k) = (4, 6, 5, 7);
-        let a = rand_vec(&mut r, batch * m * k);
-        let b = rand_vec(&mut r, batch * k * n);
-        let mut c = vec![0.0f32; batch * m * n];
-        sgemm_batched(batch, m, n, k, &a, &b, &mut c);
-        for i in 0..batch {
-            let expect = matmul_ref(m, n, k, &a[i * m * k..(i + 1) * m * k], &b[i * k * n..(i + 1) * k * n]);
-            for (j, (&x, &y)) in c[i * m * n..(i + 1) * m * n].iter().zip(expect.iter()).enumerate() {
-                assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(), "batch {i} idx {j}");
-            }
-        }
+        let mut c = vec![2.0f32; 4];
+        sgemm(Trans::N, Trans::N, 2, 2, 0, 1.0, &[], &[], 1.0, &mut c);
+        assert_eq!(c, vec![2.0; 4]);
     }
 }

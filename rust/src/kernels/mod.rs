@@ -25,6 +25,42 @@
 //! are bit-for-bit identical at every thread count (fixed-size chunks /
 //! one-owner-per-output; see `dispatch` module docs), which makes the
 //! override safe even when tests run concurrently.
+//!
+//! # GEMM design
+//!
+//! [`matmul`] is a packed, transpose-aware BLIS-style GEMM:
+//!
+//! * **Blocking.** Up to `MC = 64` rows × `KC = 256` depth × `NC = 512`
+//!   columns ([`matmul::MC`]/[`matmul::KC`]/[`matmul::NC`]): the packed A
+//!   block is 64 KiB and the packed B block 512 KiB at f32, sized to live
+//!   in L2 while a KC×NR B panel streams through L1. For shapes whose
+//!   natural grid would be too coarse to fill a pool (tall-skinny
+//!   activations, linear layers), the row/column blocks shrink — derived
+//!   from the shape and constants only; block boundaries never change the
+//!   computed bits.
+//! * **Packing.** A blocks are repacked into `MR`-row panels
+//!   (`a[ip·kc·MR + p·MR + r]`), B blocks into `NR`-column panels
+//!   (`b[jp·kc·NR + p·NR + c]`), zero-padded past the m/n edges (k is
+//!   never padded). The pack routines read operands through arbitrary
+//!   `(row, col)` element strides, which is what makes the API
+//!   transpose-aware: a [`matmul::Trans`] flag — or a raw strided view in
+//!   [`matmul::sgemm_strided`] — turns `Aᵀ`/`Bᵀ` into a stride swap
+//!   instead of a materialized copy. `nn::Linear` goes one step further
+//!   and reuses a cached pre-packed `Wᵀ` ([`matmul::sgemm_prepacked`]).
+//! * **Microkernel.** An MR×NR register-tiled accumulator (8×8 f32, 4×4
+//!   f64) runs the whole KC panel before touching C; `alpha`/`beta` apply
+//!   at tile write-back, `beta` only on the first k panel.
+//! * **Parallelism & determinism.** Work splits as a 2-D task grid (MC
+//!   row blocks × NC column blocks) over [`parallel_for`]; each C tile
+//!   has exactly one writing task and accumulates its k panels serially
+//!   in k order. The grid and panel walk derive only from `(m, n, k)` and
+//!   the constants — never from the worker count — so results are
+//!   bit-for-bit identical at every thread count, batched entries
+//!   included (`sgemm_batched`/`dgemm_batched` parallelize over the batch
+//!   dim with the same property).
+//! * **Degenerate cases.** `k == 0` or `alpha == 0` reduce to the
+//!   explicit `C = beta·C` table (0 → clear, 1 → no-op, else scale),
+//!   unit-tested combo by combo.
 
 pub mod conv;
 pub mod matmul;

@@ -5,6 +5,13 @@ use crate::ops;
 use crate::tensor::Tensor;
 
 /// `y = x @ Wᵀ + b` with `W [out, in]`.
+///
+/// The forward never copies the weight: the dispatcher's `linear` kernel
+/// consumes `Wᵀ` as pre-packed GEMM panels cached per weight (keyed by
+/// tensor id + storage version, so in-place optimizer steps invalidate
+/// lazily), and folds the bias into the GEMM's beta pass. After the first
+/// call a forward is one packed GEMM over `x` — zero weight copies, zero
+/// extra allocations (`dispatch::packed_weight_stats()` observes this).
 pub struct Linear {
     pub weight: Tensor,
     pub bias: Option<Tensor>,

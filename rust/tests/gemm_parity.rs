@@ -1,0 +1,253 @@
+//! Parity and invariants of the packed BLIS-style GEMM core.
+//!
+//! Three guarantees, each pinned here and swept by the CI thread-matrix
+//! job (`make gemm-parity`):
+//!
+//! 1. **Correctness**: the packed kernel matches the naive f64-
+//!    accumulating oracle over all four (TransA, TransB) combos, at odd /
+//!    tall-skinny / blocking-boundary shapes, at 1, 2 and 8 threads.
+//! 2. **Determinism**: packed results are bit-for-bit identical across
+//!    thread counts (the tile grid and k order never depend on workers).
+//! 3. **No materialization**: the dispatch layer feeds transposed
+//!    operands to the kernels as strided views — zero copies, zero
+//!    packed-weight repacks after the first `linear` forward — asserted
+//!    through `dispatch::gemm_materialization_stats` and
+//!    `dispatch::packed_weight_stats`.
+
+use torsk::kernels::matmul::{
+    dgemm, matmul_ref_t, pack_b_f32, sgemm, sgemm_prepacked, Trans, KC, MC, NC,
+};
+use torsk::kernels::set_num_threads;
+use torsk::{dispatch, nn, ops, Tensor};
+
+/// `packed_weight_stats` is process-global; every test that routes
+/// through `ops::linear` takes this lock so the deltas it asserts on
+/// can't interleave with another test's packs.
+static LINEAR_STATS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+    // Simple deterministic LCG — keeps this test free of crate-internal
+    // RNG plumbing.
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        })
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&x, &y)) in got.iter().zip(want.iter()).enumerate() {
+        assert!((x - y).abs() <= tol + tol * y.abs(), "{what} idx {i}: {x} vs {y}");
+    }
+}
+
+/// The acceptance sweep: all four trans combos × odd / tall-skinny /
+/// KC-and-MC/NC-boundary shapes × threads 1/2/8, each cell checked
+/// against the oracle AND bit-compared across thread counts.
+#[test]
+fn packed_gemm_all_trans_shapes_threads() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (5, 7, 11),          // odd
+        (2, 65, 300),        // tall-skinny (m « n, k)
+        (100, 3, 17),        // skinny-n
+        (8, 8, KC + 3),      // KC boundary
+        (MC + 1, 33, 40),    // MC boundary
+        (3, NC + 5, 29),     // NC boundary
+    ];
+    let mut seed = 1000;
+    for &ta in &[Trans::N, Trans::T] {
+        for &tb in &[Trans::N, Trans::T] {
+            for &(m, n, k) in shapes {
+                seed += 1;
+                let a = rand_vec(seed, m * k);
+                let b = rand_vec(seed ^ 0xABCD, k * n);
+                let expect = matmul_ref_t(ta, tb, m, n, k, &a, &b);
+                let mut results: Vec<Vec<f32>> = Vec::new();
+                for &t in &[1usize, 2, 8] {
+                    set_num_threads(t);
+                    let mut c = vec![0.0f32; m * n];
+                    sgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                    results.push(c);
+                }
+                set_num_threads(0);
+                let what = format!("({ta:?},{tb:?}) ({m},{n},{k})");
+                assert_close(&results[0], &expect, 1e-4, &what);
+                assert_eq!(results[0], results[1], "{what}: 1 vs 2 threads differ");
+                assert_eq!(results[0], results[2], "{what}: 1 vs 8 threads differ");
+            }
+        }
+    }
+}
+
+#[test]
+fn dgemm_trans_combos_match_oracle() {
+    let (m, n, k) = (13, 21, 67);
+    let mut seed = 5000;
+    for &ta in &[Trans::N, Trans::T] {
+        for &tb in &[Trans::N, Trans::T] {
+            seed += 1;
+            let a32 = rand_vec(seed, m * k);
+            let b32 = rand_vec(seed ^ 0xF00, k * n);
+            let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+            let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+            let mut c = vec![0.0f64; m * n];
+            dgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            let expect = matmul_ref_t(ta, tb, m, n, k, &a32, &b32);
+            for (i, (&x, &y)) in c.iter().zip(expect.iter()).enumerate() {
+                assert!(
+                    (x as f32 - y).abs() <= 1e-4 + 1e-4 * y.abs(),
+                    "({ta:?},{tb:?}) idx {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prepacked_weight_bit_identical_to_on_the_fly() {
+    let (m, n, k) = (19, NC + 9, KC + 17);
+    let a = rand_vec(7, m * k);
+    let b = rand_vec(8, k * n);
+    let mut c1 = vec![0.0f32; m * n];
+    sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c1);
+    let packed = pack_b_f32(Trans::N, k, n, &b);
+    for &t in &[1usize, 2, 8] {
+        set_num_threads(t);
+        let mut c2 = vec![0.0f32; m * n];
+        sgemm_prepacked(m, n, k, 1.0, &a, k, 1, &packed, 0.0, &mut c2);
+        assert_eq!(c1, c2, "prepacked differs at {t} threads");
+    }
+    set_num_threads(0);
+}
+
+/// Dispatch-level transpose-awareness: matmul / linear / bmm forward and
+/// backward over transposed views must (a) produce the same values as
+/// materialized layouts and (b) never copy an operand —
+/// `gemm_materialization_stats` stays zero.
+#[test]
+fn dispatch_gemm_never_materializes_transposes() {
+    let _guard = LINEAR_STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let before = dispatch::gemm_materialization_stats();
+
+    torsk::rng::manual_seed(17);
+    // matmul fwd+bwd with a transposed left operand.
+    let at = Tensor::randn(&[9, 6]).requires_grad(true); // Aᵀ layout
+    let b = Tensor::randn(&[9, 5]).requires_grad(true);
+    let y = ops::matmul(&at.t(), &b);
+    let y_ref = torsk::autograd::no_grad(|| ops::matmul(&at.t().contiguous(), &b.detach()));
+    torsk::tensor::assert_close(&y, &y_ref, 1e-6, 1e-6);
+    ops::sum(&y).backward();
+    assert!(at.grad().is_some() && b.grad().is_some());
+
+    // linear fwd+bwd (its backward needs Gᵀ @ x).
+    let x = Tensor::randn(&[8, 12]).requires_grad(true);
+    let w = Tensor::randn(&[4, 12]).requires_grad(true);
+    let bias = Tensor::randn(&[4]).requires_grad(true);
+    ops::sum(&ops::linear(&x, &w, Some(&bias))).backward();
+    assert_eq!(w.grad().unwrap().shape(), &[4, 12]);
+
+    // bmm fwd+bwd (its backward needs per-batch transposes), plus value
+    // parity for a transposed 3-D view consumed in place.
+    let p = Tensor::randn(&[3, 4, 6]).requires_grad(true);
+    let q = Tensor::randn(&[3, 6, 2]).requires_grad(true);
+    ops::sum(&ops::bmm(&p, &q)).backward();
+    assert_eq!(p.grad().unwrap().shape(), &[3, 4, 6]);
+    let pt = Tensor::randn(&[3, 6, 4]); // holds Pᵀ per batch
+    let r = Tensor::randn(&[3, 6, 2]);
+    let via_view = ops::bmm(&pt.transpose(1, 2), &r);
+    let via_copy = ops::bmm(&pt.transpose(1, 2).contiguous(), &r);
+    torsk::tensor::assert_close(&via_view, &via_copy, 1e-6, 1e-6);
+
+    assert_eq!(
+        dispatch::gemm_materialization_stats(),
+        before,
+        "a linalg path materialized a GEMM operand"
+    );
+}
+
+/// The counter above only fires if a fallback copy path exists; this
+/// source-level pin makes the invariant impossible to regress silently:
+/// the linalg dispatch module must not call `.contiguous()` at all.
+#[test]
+fn linalg_source_is_copy_free() {
+    let src = include_str!("../src/dispatch/linalg.rs");
+    assert!(
+        !src.contains(".contiguous()"),
+        "dispatch/linalg.rs gained a .contiguous() call — GEMM operands \
+         must be consumed as strided views (or the copy must be counted \
+         by gemm_materialization_stats)"
+    );
+}
+
+/// The `nn::Linear` packed-weight cache: one pack on the first forward,
+/// zero weight copies/packs afterwards; an in-place weight update bumps
+/// the storage version and triggers exactly one repack.
+#[test]
+fn linear_weight_packs_once_then_caches() {
+    use nn::Module;
+    let _guard = LINEAR_STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    torsk::rng::manual_seed(23);
+    let layer = nn::Linear::new(33, 17);
+    let x = Tensor::randn(&[5, 33]);
+
+    let (h0, m0) = dispatch::packed_weight_stats();
+    let y1 = torsk::autograd::no_grad(|| layer.forward(&x));
+    let (h1, m1) = dispatch::packed_weight_stats();
+    assert_eq!(m1 - m0, 1, "first forward must pack the weight exactly once");
+    assert_eq!(h1 - h0, 0);
+
+    let y2 = torsk::autograd::no_grad(|| layer.forward(&x));
+    let (h2, m2) = dispatch::packed_weight_stats();
+    assert_eq!(m2 - m1, 0, "second forward must not repack (zero weight copies)");
+    assert_eq!(h2 - h1, 1, "second forward must hit the cache");
+    assert_eq!(y1.to_vec::<f32>(), y2.to_vec::<f32>());
+
+    // An in-place update (what an optimizer step does) invalidates.
+    torsk::autograd::no_grad(|| layer.weight.mul_scalar_(0.5));
+    let y3 = torsk::autograd::no_grad(|| layer.forward(&x));
+    let (_, m3) = dispatch::packed_weight_stats();
+    assert_eq!(m3 - m2, 1, "weight mutation must trigger exactly one repack");
+    let half: Vec<f32> = y1
+        .to_vec::<f32>()
+        .iter()
+        .zip(layer.bias.as_ref().unwrap().to_vec::<f32>().iter().cycle())
+        .map(|(&y, &b)| (y - b) * 0.5 + b)
+        .collect();
+    torsk::tensor::assert_close(
+        &y3,
+        &Tensor::from_vec(half, y3.shape()),
+        1e-5,
+        1e-5,
+    );
+}
+
+/// Degenerate alpha/beta/k combos — the explicit early-out table — exact
+/// to the bit at the public API.
+#[test]
+fn degenerate_table_is_exact() {
+    let c0 = vec![2.0f32, -3.0, 0.25, 8.0, -1.0, 4.0];
+    for &k in &[0usize, 4] {
+        for &alpha in &[0.0f32, 1.0] {
+            if k != 0 && alpha != 0.0 {
+                continue; // non-degenerate
+            }
+            for &beta in &[0.0f32, 1.0, 0.5] {
+                let a = vec![9.0f32; 2 * k];
+                let b = vec![9.0f32; k * 3];
+                let mut c = c0.clone();
+                sgemm(Trans::N, Trans::N, 2, 3, k, alpha, &a, &b, beta, &mut c);
+                let expect: Vec<f32> = if beta == 0.0 {
+                    vec![0.0; 6]
+                } else if beta == 1.0 {
+                    c0.clone()
+                } else {
+                    c0.iter().map(|&x| beta * x).collect()
+                };
+                assert_eq!(c, expect, "k={k} alpha={alpha} beta={beta}");
+            }
+        }
+    }
+}

@@ -222,6 +222,64 @@ fn optimizer_steps_bitwise_equal_across_thread_matrix() {
 }
 
 #[test]
+fn packed_gemm_bitwise_equal_across_thread_counts() {
+    // The packed BLIS-style GEMM: the tile grid and k-panel order derive
+    // only from (m, n, k) and fixed blocking constants, so every thread
+    // count must produce identical bits. Shape crosses the MC/KC/NC
+    // block boundaries.
+    use torsk::kernels::matmul::{sgemm, Trans, KC, MC, NC};
+    let (m, n, k) = (MC + 13, NC + 21, KC + 7);
+    torsk::rng::manual_seed(53);
+    let a = Tensor::randn(&[m, k]).to_vec::<f32>();
+    let b = Tensor::randn(&[k, n]).to_vec::<f32>();
+    for &(ta, tb) in &[(Trans::N, Trans::N), (Trans::T, Trans::T)] {
+        let run = at_threads(|| {
+            let mut c = vec![0.0f32; m * n];
+            sgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            c
+        });
+        assert_all_equal(&run, "packed sgemm");
+    }
+}
+
+#[test]
+fn matmul_linear_fwd_bwd_bitwise_equal_across_thread_counts() {
+    torsk::rng::manual_seed(59);
+    let x = Tensor::randn(&[96, 130]);
+    let w = Tensor::randn(&[70, 130]);
+    let b = Tensor::randn(&[70]);
+    let inputs = [x, w, b];
+    let lin = at_threads(|| {
+        fwd_bwd(&inputs, |l| ops::sum(&ops::linear(&l[0], &l[1], Some(&l[2]))))
+    });
+    for (i, r) in lin.iter().enumerate().skip(1) {
+        assert_eq!(&lin[0], r, "linear fwd+bwd: thread cell {i} differs");
+    }
+    let mm = at_threads(|| {
+        fwd_bwd(&inputs[..2], |l| ops::sum(&ops::matmul(&l[0], &l[1].t())))
+    });
+    for (i, r) in mm.iter().enumerate().skip(1) {
+        assert_eq!(&mm[0], r, "transposed matmul fwd+bwd: thread cell {i} differs");
+    }
+}
+
+#[test]
+fn batched_gemm_bitwise_equal_across_thread_counts() {
+    // sgemm_batched parallelizes over the batch dim; dgemm_batched now
+    // does too. Both must be schedule-invariant.
+    torsk::rng::manual_seed(61);
+    let a = Tensor::randn(&[16, 24, 40]);
+    let b = Tensor::randn(&[16, 40, 32]);
+    let f32_runs = at_threads(|| ops::bmm(&a, &b).to_vec::<f32>());
+    assert_all_equal(&f32_runs, "bmm f32");
+    let a64 = a.to_dtype(torsk::tensor::DType::F64);
+    let b64 = b.to_dtype(torsk::tensor::DType::F64);
+    let f64_runs = at_threads(|| ops::bmm(&a64, &b64).to_vec::<f64>());
+    assert_eq!(f64_runs[0], f64_runs[1], "bmm f64: 1 vs 2 threads differ");
+    assert_eq!(f64_runs[0], f64_runs[2], "bmm f64: 1 vs 8 threads differ");
+}
+
+#[test]
 fn backward_gradients_bitwise_equal_across_thread_counts() {
     torsk::rng::manual_seed(31);
     let x = Tensor::randn(&[128, 513]);

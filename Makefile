@@ -23,11 +23,13 @@ fmt-check:
 clippy:
 	cd $(RUST_DIR) && $(CARGO) clippy -- -D warnings
 
-# Full sweep; writes BENCH_ops.json at the repo root (the per-PR
-# trajectory — see the "Threading and memory model" docs in
-# rust/src/dispatch/mod.rs for how to read it).
+# Full sweep; writes BENCH_ops.json (per-op records) and BENCH_train.json
+# (end-to-end samples/sec + loader-stall at workers 0/1/4) at the repo
+# root — the per-PR trajectory. See "Threading and memory model" in
+# rust/src/dispatch/mod.rs and "Reading BENCH_train.json" in README.md.
 bench:
 	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
+	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_train.json) $(CARGO) bench --bench train_loop
 
 # Packed-GEMM parity suite: all four trans combos vs the oracle, plus
 # bit-identical-across-threads and zero-materialization pins.
@@ -39,3 +41,4 @@ gemm-parity:
 # the kernel they time is wrong.
 bench-smoke: gemm-parity
 	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
+	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_train.json) $(CARGO) bench --bench train_loop

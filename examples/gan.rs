@@ -5,25 +5,43 @@
 //!
 //! Task: the generator learns to map N(0,1) noise to a 2-D ring
 //! distribution; the discriminator learns to tell ring samples from fakes.
+//! Real samples come from a `Dataset` + prefetching `DataLoader` (two
+//! background workers) instead of a hand-rolled per-step `Vec` loop, so
+//! the real-batch stream is seed-deterministic and its buffers are reused
+//! from the caching allocator across steps.
 //!
 //! Run: `cargo run --release --example gan`
 
+use std::sync::Arc;
+
+use torsk::alloc::Allocator;
+use torsk::data::{DataLoader, Dataset};
 use torsk::nn::{Linear, Module, ReLU, Sequential, Sigmoid, Tanh};
 use torsk::optim::{Adam, Optimizer};
 use torsk::prelude::*;
+use torsk::rng::Rng;
 
-fn real_samples(n: usize) -> Tensor {
-    // Points on a radius-2 ring with small noise.
-    let mut data = Vec::with_capacity(n * 2);
-    torsk::rng::with_rng(|r| {
-        for _ in 0..n {
-            let theta = r.uniform_range(0.0, std::f32::consts::TAU);
-            let rad = 2.0 + 0.1 * r.normal();
-            data.push(rad * theta.cos());
-            data.push(rad * theta.sin());
-        }
-    });
-    Tensor::from_vec(data, &[n, 2])
+/// Points on a radius-2 ring with small noise, deterministic per index.
+struct RingDataset {
+    n: usize,
+    seed: u64,
+}
+
+impl Dataset for RingDataset {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::for_index(self.seed, index as u64);
+        let theta = r.uniform_range(0.0, std::f32::consts::TAU);
+        let rad = 2.0 + 0.1 * r.normal();
+        (
+            Tensor::from_vec(vec![rad * theta.cos(), rad * theta.sin()], &[2]),
+            // The "real" label — batches arrive training-ready.
+            Tensor::from_vec(vec![1.0f32], &[1]),
+        )
+    }
 }
 
 fn get_noise(n: usize, dim: usize) -> Tensor {
@@ -56,43 +74,85 @@ fn main() {
 
     let gen_forward = |noise: &Tensor| generator.forward(noise).mul_scalar(3.0);
 
+    // Real data: 4096 ring points, reshuffled every epoch from one seed,
+    // prefetched by two workers while the GAN steps run.
+    let real_loader = DataLoader::new(Arc::new(RingDataset { n: 4096, seed: 99 }), batch)
+        .shuffle(true)
+        .seed(7)
+        .drop_last(true)
+        .workers(2);
+
     println!("step   errD     errG     D(real)  D(fake)");
     let mut last = (0.0, 0.0, 0.0, 0.0);
-    for step in 0..400 {
-        // ---- (1) Update discriminator -------------------------------
-        opt_d.zero_grad();
-        let real = real_samples(batch);
-        let real_label = Tensor::ones(&[batch, 1]);
-        let fake_label = Tensor::zeros(&[batch, 1]);
+    let mut step = 0;
+    'train: loop {
+        for (real, real_label) in real_loader.iter() {
+            if step >= 400 {
+                break 'train;
+            }
+            let fake_label = Tensor::zeros(&[batch, 1]);
 
-        let d_real = discriminator.forward(&real);
-        let err_d_real = ops::bce_loss(&d_real, &real_label);
-        err_d_real.backward();
+            // ---- (1) Update discriminator ---------------------------
+            opt_d.zero_grad();
+            let d_real = discriminator.forward(&real);
+            let err_d_real = ops::bce_loss(&d_real, &real_label);
+            err_d_real.backward();
 
-        let fake = gen_forward(&get_noise(batch, noise_dim));
-        // The paper's detach(): keep G out of D's backward pass.
-        let d_fake = discriminator.forward(&fake.detach());
-        let err_d_fake = ops::bce_loss(&d_fake, &fake_label);
-        err_d_fake.backward();
-        opt_d.step();
+            let fake = gen_forward(&get_noise(batch, noise_dim));
+            // The paper's detach(): keep G out of D's backward pass.
+            let d_fake = discriminator.forward(&fake.detach());
+            let err_d_fake = ops::bce_loss(&d_fake, &fake_label);
+            err_d_fake.backward();
+            opt_d.step();
 
-        // ---- (2) Update generator -----------------------------------
-        opt_g.zero_grad();
-        let d_fake_for_g = discriminator.forward(&fake);
-        let err_g = ops::bce_loss(&d_fake_for_g, &real_label);
-        err_g.backward();
-        opt_g.step();
+            // ---- (2) Update generator -------------------------------
+            opt_g.zero_grad();
+            let d_fake_for_g = discriminator.forward(&fake);
+            let err_g = ops::bce_loss(&d_fake_for_g, &real_label);
+            err_g.backward();
+            opt_g.step();
 
-        last = (
-            err_d_real.item() + err_d_fake.item(),
-            err_g.item(),
-            d_real.mean().item(),
-            d_fake_for_g.mean().item(),
-        );
-        if step % 50 == 0 {
-            println!("{step:>4}   {:.4}   {:.4}   {:.3}    {:.3}", last.0, last.1, last.2, last.3);
+            last = (
+                err_d_real.item() + err_d_fake.item(),
+                err_g.item(),
+                d_real.mean().item(),
+                d_fake_for_g.mean().item(),
+            );
+            if step % 50 == 0 {
+                println!(
+                    "{step:>4}   {:.4}   {:.4}   {:.3}    {:.3}",
+                    last.0, last.1, last.2, last.3
+                );
+            }
+            step += 1;
         }
     }
+
+    // Steady-state real batches must come from the allocator cache — the
+    // old hand-rolled loop allocated a fresh Vec per step instead. One
+    // epoch of *pure loading* after training isolates the loader's
+    // allocator traffic from the GAN's activations and gradients.
+    let host = torsk::ctx::host_allocator();
+    let (h0, l0) = (host.stats(), real_loader.stats());
+    for (x, _) in real_loader.iter() {
+        std::hint::black_box(&x);
+    }
+    let hd = host.stats().delta(&h0);
+    let ld = real_loader.stats().delta(&l0);
+    let rate = hd.cache_hit_rate();
+    println!(
+        "\nloader: {} real batches, stall {:.2} ms, steady-state buffers {:.0}% from cache",
+        ld.batches,
+        ld.stall_ns as f64 / 1e6,
+        rate * 100.0
+    );
+    assert!(
+        rate > 0.5,
+        "steady-state real batches should hit the buffer cache (rate {rate:.3}, hits {}, \
+         driver allocs {})",
+        hd.cache_hits,
+        hd.driver_allocs
+    );
 
     // Convergence check: generated samples should land near the ring.
     let samples = no_grad(|| gen_forward(&get_noise(512, noise_dim)));

@@ -4,13 +4,17 @@
 //! techniques like Hogwild".
 //!
 //! Task: logistic regression on a planted linearly-separable problem.
-//! Each of 4 forked workers pulls its own minibatches and applies SGD
-//! updates directly into the shared parameter tensors without any locks.
+//! The data side is the real pipeline: a deterministic `Dataset` of
+//! planted examples, and inside each of the 4 forked workers a
+//! `DataLoader` (one prefetch thread, rank-seeded shuffle) that feeds the
+//! lock-free SGD updates into the shared parameter tensors.
 //!
 //! Run: `cargo run --release --example hogwild`
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
+use torsk::data::{DataLoader, Dataset};
 use torsk::multiproc::{fork_workers, SharedTensor};
 use torsk::prelude::*;
 use torsk::rng::Rng;
@@ -25,32 +29,46 @@ fn truth() -> Vec<f32> {
     (0..DIM).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect()
 }
 
-fn make_batch(r: &mut Rng) -> (Tensor, Tensor) {
-    let w = truth();
-    let mut xs = Vec::with_capacity(BATCH * DIM);
-    let mut ys = Vec::with_capacity(BATCH);
-    for _ in 0..BATCH {
-        let x: Vec<f32> = (0..DIM).map(|_| r.normal()).collect();
-        let dot: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
-        ys.push(if dot > 0.0 { 1.0f32 } else { 0.0 });
-        xs.extend(x);
-    }
-    (Tensor::from_vec(xs, &[BATCH, DIM]), Tensor::from_vec(ys, &[BATCH, 1]))
+/// Linearly separable examples, deterministic per index: x ~ N(0,1)^DIM,
+/// y = [w*·x > 0].
+struct Planted {
+    n: usize,
+    seed: u64,
+    w: Vec<f32>,
 }
 
-fn accuracy(w: &Tensor, b: &Tensor, n: usize, seed: u64) -> f32 {
-    let mut r = Rng::new(seed);
+impl Planted {
+    fn new(n: usize, seed: u64) -> Planted {
+        Planted { n, seed, w: truth() }
+    }
+}
+
+impl Dataset for Planted {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::for_index(self.seed, index as u64);
+        let x: Vec<f32> = (0..DIM).map(|_| r.normal()).collect();
+        let dot: f32 = x.iter().zip(&self.w).map(|(a, b)| a * b).sum();
+        let y = if dot > 0.0 { 1.0f32 } else { 0.0 };
+        (Tensor::from_vec(x, &[DIM]), Tensor::from_vec(vec![y], &[1]))
+    }
+}
+
+fn accuracy(w: &Tensor, b: &Tensor, n_batches: usize, seed: u64) -> f32 {
+    let eval = DataLoader::new(Arc::new(Planted::new(n_batches * BATCH, seed)), BATCH);
     let mut correct = 0;
     no_grad(|| {
-        for _ in 0..n {
-            let (x, y) = make_batch(&mut r);
+        for (x, y) in eval.iter() {
             let p = ops::sigmoid(&ops::add(&ops::matmul(&x, &w.reshape(&[DIM, 1])), b));
             let pv = p.to_vec::<f32>();
             let yv = y.to_vec::<f32>();
             correct += pv.iter().zip(&yv).filter(|(p, y)| (**p > 0.5) == (**y > 0.5)).count();
         }
     });
-    correct as f32 / (n * BATCH) as f32
+    correct as f32 / (n_batches * BATCH) as f32
 }
 
 fn shm_dir() -> PathBuf {
@@ -81,9 +99,14 @@ fn main() {
         let sb = SharedTensor::open(&bp).unwrap();
         let w = sw.tensor(); // zero-copy views
         let b = sb.tensor();
-        let mut r = Rng::new(1000 + rank as u64);
-        for _ in 0..STEPS_PER_WORKER {
-            let (x, y) = make_batch(&mut r);
+        // ...and pulls one epoch from its own loader: same planted
+        // dataset, rank-seeded shuffle, one background prefetch thread
+        // (spawned post-fork — children must not inherit parent threads).
+        let loader = DataLoader::new(Arc::new(Planted::new(STEPS_PER_WORKER * BATCH, 1)), BATCH)
+            .shuffle(true)
+            .seed(1000 + rank as u64)
+            .workers(1);
+        for (x, y) in loader.iter() {
             // Manual forward/backward on a *snapshot-free* read of the
             // shared weights (Hogwild reads may be torn; that's the point).
             let w_col = w.detach().reshape(&[DIM, 1]).requires_grad(true);
@@ -103,7 +126,10 @@ fn main() {
     let w = shared_w.tensor();
     let b = shared_b.tensor();
     let acc = accuracy(&w, &b, 20, 777);
-    println!("accuracy after {WORKERS} hogwild workers x {STEPS_PER_WORKER} steps: {:.1}%", acc * 100.0);
+    println!(
+        "accuracy after {WORKERS} hogwild workers x {STEPS_PER_WORKER} steps: {:.1}%",
+        acc * 100.0
+    );
 
     // Learned weights should align with the planted signs.
     let wv = w.to_vec::<f32>();

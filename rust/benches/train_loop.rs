@@ -1,0 +1,272 @@
+//! End-to-end training-loop benchmark: the whole-model view that
+//! `BENCH_ops.json`'s per-op records cannot see (TorchBench's argument —
+//! per-op microbenchmarks miss whole-model behavior).
+//!
+//! Trains one fixed MLP classifier on a synthetic image dataset through
+//! the `data::DataLoader` at **workers = 0, 1 and 4**, and emits
+//! `BENCH_train.json` (override with `BENCH_OUT`; schema
+//! `torsk.bench_train.v1`) with one record per worker count:
+//!
+//! ```json
+//! {"workers": 4, "batches": 48, "samples": 1536, "wall_ns": 123456789,
+//!  "samples_per_sec": 12443.1, "stall_ns": 345678, "stall_fraction": 0.0028,
+//!  "ns_per_batch": 2571974}
+//! ```
+//!
+//! `stall_ns` is time the training thread spent blocked inside the
+//! loader's `next()` — at workers = 0 that is the entire fetch+collate
+//! cost; at workers = 4 it is whatever the prefetch queue failed to hide.
+//! `stall_fraction` (stall / wall) is the headline: the workers=4 row
+//! staying below the workers=0 row is the paper's §4.2 overlap, measured.
+//!
+//! Before any timing, the batch stream itself is pinned: the full first
+//! epoch must be **bitwise identical** across all three worker counts
+//! (ordered reassembly, seed-deterministic sampler) or the bench exits
+//! nonzero. `BENCH_SMOKE=1` runs a tiny config and validates the schema
+//! (wired into CI via `make bench-smoke`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use torsk::data::{DataLoader, SyntheticImages};
+use torsk::nn::{self, Module};
+use torsk::ops;
+use torsk::optim::{Optimizer, Sgd};
+
+struct Config {
+    n: usize,
+    channels: usize,
+    hw: usize,
+    classes: usize,
+    batch: usize,
+    hidden: usize,
+    epochs: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Record {
+    workers: usize,
+    batches: u64,
+    samples: u64,
+    wall_ns: u64,
+    samples_per_sec: f64,
+    stall_ns: u64,
+    stall_fraction: f64,
+    ns_per_batch: f64,
+}
+
+impl Record {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"workers\": {}, \"batches\": {}, \"samples\": {}, \"wall_ns\": {}, \
+             \"samples_per_sec\": {:.1}, \"stall_ns\": {}, \"stall_fraction\": {:.4}, \
+             \"ns_per_batch\": {:.0}}}",
+            self.workers,
+            self.batches,
+            self.samples,
+            self.wall_ns,
+            self.samples_per_sec,
+            self.stall_ns,
+            self.stall_fraction,
+            self.ns_per_batch
+        )
+    }
+}
+
+fn build_loader(cfg: &Config, workers: usize) -> DataLoader {
+    let ds = Arc::new(SyntheticImages::new(cfg.n, cfg.channels, cfg.hw, cfg.hw, cfg.classes));
+    DataLoader::new(ds, cfg.batch).shuffle(true).seed(42).drop_last(true).workers(workers)
+}
+
+fn build_model(cfg: &Config) -> nn::Sequential {
+    // Same weights for every worker count: seed right before construction.
+    torsk::rng::manual_seed(0);
+    let din = cfg.channels * cfg.hw * cfg.hw;
+    nn::Sequential::new()
+        .add(nn::Linear::new(din, cfg.hidden))
+        .add(nn::ReLU)
+        .add(nn::Linear::new(cfg.hidden, cfg.classes))
+}
+
+type Fingerprint = Vec<(Vec<f32>, Vec<i64>)>;
+
+/// The full epoch-0 batch stream as raw bytes-equivalent vectors.
+fn epoch_fingerprint(loader: &DataLoader) -> Fingerprint {
+    loader.set_epoch(0);
+    loader.iter().map(|(x, y)| (x.to_vec::<f32>(), y.to_vec::<i64>())).collect()
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_train.json".to_string());
+    let cfg = if smoke {
+        Config { n: 64, channels: 3, hw: 8, classes: 10, batch: 16, hidden: 16, epochs: 1 }
+    } else {
+        Config { n: 512, channels: 3, hw: 32, classes: 10, batch: 32, hidden: 128, epochs: 3 }
+    };
+    let worker_counts = [0usize, 1, 4];
+
+    // ---- determinism pin: identical batch stream at every worker count --
+    let reference = epoch_fingerprint(&build_loader(&cfg, 0));
+    for &w in &worker_counts[1..] {
+        let got = epoch_fingerprint(&build_loader(&cfg, w));
+        if got != reference {
+            eprintln!("train_loop: batch stream at workers={w} differs from workers=0");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "batch stream pinned: {} batches bitwise-identical at workers 0/1/4",
+        reference.len()
+    );
+    drop(reference);
+
+    // ---- measured training runs ----------------------------------------
+    let mut records: Vec<Record> = Vec::new();
+    for &w in &worker_counts {
+        let loader = build_loader(&cfg, w);
+        let model = build_model(&cfg);
+        let mut opt = Sgd::new(model.parameters(), 0.05).with_momentum(0.9);
+        let din = cfg.channels * cfg.hw * cfg.hw;
+
+        // Warm-up epoch: populate the allocator cache and the packed-
+        // weight cache so the measured window is steady state.
+        let mut last_loss = 0.0f32;
+        for (x, y) in loader.iter() {
+            let logits = model.forward(&x.reshape(&[x.size(0), din]));
+            let loss = ops::cross_entropy(&logits, &y);
+            opt.zero_grad();
+            loss.backward();
+            opt.step();
+            last_loss = loss.item();
+        }
+
+        let s0 = loader.stats();
+        let t0 = Instant::now();
+        let mut samples = 0u64;
+        for _ in 0..cfg.epochs {
+            for (x, y) in loader.iter() {
+                samples += x.size(0) as u64;
+                let logits = model.forward(&x.reshape(&[x.size(0), din]));
+                let loss = ops::cross_entropy(&logits, &y);
+                opt.zero_grad();
+                loss.backward();
+                opt.step();
+                last_loss = loss.item();
+            }
+        }
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        let d = loader.stats().delta(&s0);
+        records.push(Record {
+            workers: w,
+            batches: d.batches,
+            samples,
+            wall_ns,
+            samples_per_sec: samples as f64 / (wall_ns as f64 / 1e9),
+            stall_ns: d.stall_ns,
+            stall_fraction: d.stall_ns as f64 / wall_ns as f64,
+            ns_per_batch: wall_ns as f64 / d.batches.max(1) as f64,
+        });
+        println!(
+            "workers={w}: {:.1} samples/s, stall {:.2}% of wall, final loss {last_loss:.4}",
+            records.last().unwrap().samples_per_sec,
+            records.last().unwrap().stall_fraction * 100.0
+        );
+    }
+
+    // ---- report ---------------------------------------------------------
+    println!("\n== BENCH_train ({}) ==", if smoke { "smoke" } else { "full" });
+    println!(
+        "{:>7} {:>8} {:>8} {:>14} {:>14} {:>8}",
+        "workers", "batches", "samples", "samples/s", "ns/batch", "stall%"
+    );
+    for r in &records {
+        println!(
+            "{:>7} {:>8} {:>8} {:>14.1} {:>14.0} {:>7.2}%",
+            r.workers,
+            r.batches,
+            r.samples,
+            r.samples_per_sec,
+            r.ns_per_batch,
+            r.stall_fraction * 100.0
+        );
+    }
+    let w0 = records.iter().find(|r| r.workers == 0).unwrap();
+    let w4 = records.iter().find(|r| r.workers == 4).unwrap();
+    println!(
+        "\nloader overlap: stall {:.2}% at workers=0 -> {:.2}% at workers=4 \
+         ({:.2}x samples/s)",
+        w0.stall_fraction * 100.0,
+        w4.stall_fraction * 100.0,
+        w4.samples_per_sec / w0.samples_per_sec
+    );
+    if !smoke && w4.stall_fraction >= w0.stall_fraction {
+        println!(
+            "WARNING: workers=4 stall fraction did not drop below workers=0 \
+             (acceptance expects overlap on this config)"
+        );
+    }
+
+    // ---- emit + validate JSON ------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"torsk.bench_train.v1\",\n");
+    json.push_str(&format!(
+        "  \"smoke\": {},\n  \"threads_available\": {},\n  \"model\": \"mlp\",\n  \
+         \"dataset\": {{\"n\": {}, \"channels\": {}, \"hw\": {}, \"classes\": {}}},\n  \
+         \"batch_size\": {},\n  \"epochs\": {},\n  \"records\": [\n",
+        smoke,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        cfg.n,
+        cfg.channels,
+        cfg.hw,
+        cfg.classes,
+        cfg.batch,
+        cfg.epochs
+    ));
+    for (i, r) in records.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(&r.to_json());
+        json.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json).expect("write BENCH_train.json");
+    println!("wrote {out_path}");
+
+    if let Err(e) = validate_schema(&json, records.len()) {
+        eprintln!("BENCH_train.json schema validation FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("schema ok: torsk.bench_train.v1, {} records", records.len());
+}
+
+/// Minimal schema check (no JSON dependency), in the `BENCH_ops.json`
+/// style: the envelope declares the schema id and every record carries all
+/// required keys, one record per benchmarked worker count.
+fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
+    if !json.contains("\"schema\": \"torsk.bench_train.v1\"") {
+        return Err("missing schema id".into());
+    }
+    let recs: Vec<&str> = json.match_indices("{\"workers\": ").map(|(i, _)| &json[i..]).collect();
+    if recs.len() != expected {
+        return Err(format!("expected {expected} records, found {}", recs.len()));
+    }
+    for (i, r) in recs.iter().enumerate() {
+        let end = r.find('}').ok_or_else(|| format!("record {i}: unterminated"))?;
+        let body = &r[..end];
+        for key in [
+            "\"workers\"",
+            "\"batches\"",
+            "\"samples\"",
+            "\"wall_ns\"",
+            "\"samples_per_sec\"",
+            "\"stall_ns\"",
+            "\"stall_fraction\"",
+            "\"ns_per_batch\"",
+        ] {
+            if !body.contains(key) {
+                return Err(format!("record {i}: missing {key}"));
+            }
+        }
+    }
+    Ok(())
+}

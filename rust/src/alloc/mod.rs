@@ -25,6 +25,33 @@
 //!   driver), the baseline for Figure 2 / the Chainer-like mode.
 //! - [`gc`]      — a deferred-reclamation arena used by the §5.5
 //!   refcounting-vs-GC comparison bench.
+//!
+//! # Buffer donation (output-stealing) — who may skip this module
+//!
+//! One layer above, the dispatcher can bypass allocation entirely:
+//! `dispatch::call_owned` lets an elementwise op's output *steal* an
+//! input's storage. The contract an input must meet to be donated:
+//!
+//! 1. **Provably dead by ownership** — every live `Tensor` handle to it
+//!    was moved into the call (`Arc` strong count == its occurrence count
+//!    among the call's operands), its storage is not shared with any
+//!    other tensor (storage refcount 1, non-view, offset 0);
+//! 2. **no autograd recording** — stealing under a recording would
+//!    corrupt saved intermediates;
+//! 3. **layout-compatible** — same shape and dtype as the output, all
+//!    operands contiguous, so the kernel runs the index-aligned Fast plan
+//!    (kernels flagged `reuse_output` handle `out == input` aliasing with
+//!    raw read-then-write loops).
+//!
+//! The donated block travels through a **thread-local slot**: the
+//! dispatcher parks the dying input's storage there, and the next
+//! `Storage::new` on that thread consumes it instead of calling
+//! `allocate`. The counters here therefore *undercount* stolen outputs by
+//! design — `dispatch::output_reuse_stats()` tracks those; everything
+//! that isn't stolen (and every batch buffer the `data` pipeline
+//! collates) is served by the caching allocator below, which is where the
+//! steady-state `cache_hit_rate()` story in `BENCH_ops.json` /
+//! `tests/alloc_reuse.rs` / `tests/data_loader.rs` comes from.
 
 pub mod caching;
 pub mod driver;

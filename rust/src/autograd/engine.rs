@@ -15,6 +15,36 @@
 //!
 //! Workers run with grad recording disabled (double backward is out of
 //! scope, as forward-mode is for the paper).
+//!
+//! # Dependency-counting contract
+//!
+//! Correctness of step 3 rests on one invariant: **every** gradient a
+//! node's backward produces must decrement its consumer's dependency
+//! count — including `None` gradients (a backward that declines to
+//! produce a gradient along an edge). A `None` routed to an interior
+//! `Edge::Node` decrements the counter like any other contribution and
+//! enqueues the node at zero; a node whose dependencies reach zero with
+//! *no* accumulated buffer retires without executing, and its own
+//! consumers are released transitively (a dead subgraph drains instead of
+//! deadlocking the pass — regression-pinned with watchdog tests after the
+//! PR 3 fix). Gradient *accumulation* into a node's input buffer is
+//! order-independent by construction: buffers combine through the same
+//! deterministic reduction drivers as the forward ops, so backward
+//! results are bit-identical at any worker count.
+//!
+//! # Thread-count knobs
+//!
+//! The worker count resolves once, from (highest priority first):
+//!
+//! 1. [`set_backward_threads`] — runtime override, tests/benches only;
+//! 2. `TORSK_BACKWARD_THREADS` — engine-specific env override (what lets
+//!    the CI thread-matrix vary the two pools independently);
+//! 3. `PALLAS_NUM_THREADS` — the shared knob, so one variable sizes both
+//!    the kernel pool and this engine;
+//! 4. `available_parallelism()`, capped at 8.
+//!
+//! The precedence is unit-tested below (`threads_from_env`); the kernel
+//! pool's analogous chain lives in [`crate::kernels`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -1,0 +1,168 @@
+//! Sample → batch assembly (§4.2's pinned-buffer analogue).
+//!
+//! [`Collate`] turns a list of per-example `(input, target)` tensors into
+//! one `(inputs, targets)` batch pair. [`DefaultCollate`] allocates the
+//! batch tensors through the host **caching allocator** and writes each
+//! sample with one contiguous `memcpy` — no per-sample views, no
+//! intermediate `unsqueeze`/`cat` tensors. Because every epoch asks for
+//! the same batch shapes, steady-state batches are served straight from
+//! the allocator cache: the paper reuses pinned staging buffers across
+//! iterations for the same reason, and `tests/data_loader.rs` pins the
+//! cache-hit rate.
+//!
+//! Collation runs on loader worker threads; implementations must be
+//! deterministic (no RNG, no global state) or batch contents would depend
+//! on the worker count.
+
+use crate::device::Device;
+use crate::profiler::{self, Track};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+/// Assemble per-example samples into one batched `(inputs, targets)` pair.
+pub trait Collate: Send + Sync {
+    fn collate(&self, samples: &[(Tensor, Tensor)]) -> (Tensor, Tensor);
+}
+
+/// The standard collation: stack inputs along a new leading dim; stack
+/// targets the same way, except one-element `i64` targets (`[1]`-shaped
+/// classification labels) flatten to a `[N]` vector like scalar ones —
+/// inputs never flatten.
+pub struct DefaultCollate;
+
+impl Collate for DefaultCollate {
+    fn collate(&self, samples: &[(Tensor, Tensor)]) -> (Tensor, Tensor) {
+        torsk_assert!(!samples.is_empty(), "collate: empty batch");
+        let span = profiler::begin(Track::Host, "data:collate");
+        let xs: Vec<&Tensor> = samples.iter().map(|(x, _)| x).collect();
+        let ys: Vec<&Tensor> = samples.iter().map(|(_, y)| y).collect();
+        let x = stack_into_batch(&xs);
+        // Label-style targets: [1]-shaped i64 flattens to [N] (the [N,1]
+        // batch is contiguous, so the reshape is a zero-copy view).
+        let y0 = ys[0];
+        let y = if y0.dtype() == DType::I64 && y0.shape() == [1] {
+            stack_into_batch(&ys).reshape(&[ys.len()])
+        } else {
+            stack_into_batch(&ys)
+        };
+        profiler::end(span);
+        (x, y)
+    }
+}
+
+/// Stack equally-shaped host samples into a freshly allocated batch
+/// tensor (served by the caching allocator) with one `memcpy` per sample.
+///
+/// Shape rule: sample shape `[d...]` → batch `[N, d...]`; scalar samples
+/// (`[]`) → batch `[N]`.
+pub fn stack_into_batch(samples: &[&Tensor]) -> Tensor {
+    torsk_assert!(!samples.is_empty(), "stack_into_batch: empty sample list");
+    let first = samples[0];
+    let dtype = first.dtype();
+    let shape = first.shape().to_vec();
+    let per = first.numel();
+    for s in samples.iter().skip(1) {
+        torsk_assert!(s.dtype() == dtype, "collate: mixed sample dtypes");
+        torsk_assert!(s.shape() == shape.as_slice(), "collate: mixed sample shapes");
+    }
+    let out_shape: Vec<usize> = if shape.is_empty() {
+        vec![samples.len()]
+    } else {
+        let mut s = Vec::with_capacity(shape.len() + 1);
+        s.push(samples.len());
+        s.extend_from_slice(&shape);
+        s
+    };
+    let out = Tensor::empty(&out_shape, dtype, Device::Cpu);
+    let bytes = per * dtype.size();
+    for (i, s) in samples.iter().enumerate() {
+        torsk_assert!(s.device() == Device::Cpu, "collate expects host samples");
+        let src = s.contiguous();
+        // SAFETY: `out` is freshly allocated, contiguous and exclusively
+        // owned; `src` is contiguous with exactly `per` elements of the
+        // same dtype, and slot `i` is a disjoint `bytes`-sized region.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.data_ptr().ptr() as *const u8,
+                out.data_ptr().ptr().add(i * bytes),
+                bytes,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacks_f32_rows() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0, 3.0]);
+        let b = Tensor::from_slice(&[4.0f32, 5.0, 6.0]);
+        let out = stack_into_batch(&[&a, &b]);
+        assert_eq!(out.shape(), &[2, 3]);
+        assert_eq!(out.to_vec::<f32>(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_samples_flatten_to_vector() {
+        let a = Tensor::from_vec(vec![3i64], &[]);
+        let b = Tensor::from_vec(vec![7i64], &[]);
+        let out = stack_into_batch(&[&a, &b]);
+        assert_eq!(out.shape(), &[2]);
+        assert_eq!(out.to_vec::<i64>(), vec![3, 7]);
+    }
+
+    #[test]
+    fn i64_unit_targets_flatten_but_inputs_never_do() {
+        // [1]-shaped i64: a *target* flattens to [N] (classification
+        // labels), an *input* keeps its dim (token ids stay [N,1]).
+        let c = Tensor::from_vec(vec![9i64], &[1]);
+        let d = Tensor::from_vec(vec![2i64], &[1]);
+        assert_eq!(stack_into_batch(&[&c, &d]).shape(), &[2, 1]);
+        let samples = vec![(c.clone(), c.clone()), (d.clone(), d.clone())];
+        let (x, y) = DefaultCollate.collate(&samples);
+        assert_eq!(x.shape(), &[2, 1], "inputs never flatten");
+        assert_eq!(y.shape(), &[2], "unit i64 targets flatten");
+        assert_eq!(y.to_vec::<i64>(), vec![9, 2]);
+    }
+
+    #[test]
+    fn f32_single_element_targets_keep_their_dim() {
+        let a = Tensor::from_vec(vec![0.5f32], &[1]);
+        let b = Tensor::from_vec(vec![1.5f32], &[1]);
+        let out = stack_into_batch(&[&a, &b]);
+        assert_eq!(out.shape(), &[2, 1]);
+        assert_eq!(out.to_vec::<f32>(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn non_contiguous_samples_are_copied_correctly() {
+        let m = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        let col = m.t(); // strided view [[1,3],[2,4]]
+        let out = stack_into_batch(&[&col, &col]);
+        assert_eq!(out.shape(), &[2, 2, 2]);
+        assert_eq!(out.to_vec::<f32>(), vec![1.0, 3.0, 2.0, 4.0, 1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn default_collate_pairs_inputs_and_targets() {
+        let samples = vec![
+            (Tensor::full(&[3], 1.0), Tensor::from_vec(vec![0i64], &[])),
+            (Tensor::full(&[3], 2.0), Tensor::from_vec(vec![1i64], &[])),
+        ];
+        let (x, y) = DefaultCollate.collate(&samples);
+        assert_eq!(x.shape(), &[2, 3]);
+        assert_eq!(y.shape(), &[2]);
+        assert_eq!(y.to_vec::<i64>(), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed sample shapes")]
+    fn mixed_shapes_panic() {
+        let a = Tensor::ones(&[2]);
+        let b = Tensor::ones(&[3]);
+        stack_into_batch(&[&a, &b]);
+    }
+}

@@ -1,0 +1,502 @@
+//! The parallel prefetching [`DataLoader`] (§4.2).
+//!
+//! One epoch is planned entirely on the calling thread — the
+//! [`Sampler`](super::Sampler) computes a seed-deterministic index order,
+//! the [`BatchSampler`](super::BatchSampler) chunks it — and only then do
+//! `num_workers` background threads execute batches: each worker claims
+//! the next unclaimed batch index, fetches its samples from the
+//! [`Dataset`](super::Dataset), collates them, and pushes the result into
+//! a **bounded prefetch queue** (`sync_channel`). The consuming iterator
+//! reassembles results by per-batch sequence number, so the batch stream
+//! is **identical — bitwise — at any worker count**, including 0 (the
+//! serial in-line mode). `tests/data_loader.rs` pins that at workers
+//! 0/1/4.
+//!
+//! Stall accounting: every nanosecond the training thread spends *inside*
+//! `next()` — collating in-line at `workers = 0`, or blocked on the queue
+//! waiting for the next in-order batch — is counted as loader stall
+//! ([`DataLoader::stats`]). The end-to-end bench (`benches/train_loop.rs`
+//! → `BENCH_train.json`) reports that stall as a fraction of wall time:
+//! it is exactly the overlap the paper's worker processes exist to hide.
+//!
+//! Shutdown: the iterator owns its worker `JoinHandle`s. Dropping it
+//! mid-epoch raises a shutdown flag and disconnects the queue — workers
+//! blocked in `send` wake with an error, finish nothing further, and are
+//! joined before `drop` returns. No worker outlives its epoch. A worker
+//! that *panics* (dataset or collate bug) disconnects the channel early;
+//! the consumer detects the missing batch and re-panics on the training
+//! thread, so a bad dataset fails identically at any worker count
+//! instead of silently truncating the epoch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+
+use super::collate::{Collate, DefaultCollate};
+use super::sampler::{BatchSampler, RandomSampler, Sampler, SequentialSampler};
+use super::Dataset;
+
+/// Cumulative loader-side counters, shared between a [`DataLoader`] and
+/// the iterators it hands out.
+#[derive(Default)]
+struct LoaderCounters {
+    /// Nanoseconds the consumer spent blocked inside `next()`.
+    stall_ns: AtomicU64,
+    /// Batches yielded.
+    batches: AtomicU64,
+}
+
+/// A point-in-time snapshot of a loader's counters (see
+/// [`DataLoader::stats`]); `delta` two snapshots around an epoch to get
+/// per-epoch numbers, like [`crate::alloc::AllocStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoaderStats {
+    /// Nanoseconds the training thread spent waiting on the loader.
+    pub stall_ns: u64,
+    /// Batches yielded so far.
+    pub batches: u64,
+}
+
+impl LoaderStats {
+    /// Difference of two snapshots.
+    pub fn delta(&self, earlier: &LoaderStats) -> LoaderStats {
+        LoaderStats {
+            stall_ns: self.stall_ns - earlier.stall_ns,
+            batches: self.batches - earlier.batches,
+        }
+    }
+}
+
+/// Batching, shuffling, parallel-prefetching loader over a [`Dataset`].
+///
+/// ```no_run
+/// # // no_run: rustdoc test binaries don't inherit the xla_extension
+/// # // rpath; the same flow is executed in tests/data_loader.rs.
+/// use std::sync::Arc;
+/// use torsk::data::{DataLoader, SyntheticImages};
+///
+/// let dataset = Arc::new(SyntheticImages::new(512, 3, 32, 32, 10));
+/// let loader = DataLoader::new(dataset, 32)
+///     .shuffle(true)   // RandomSampler: epoch order derives from the seed
+///     .seed(42)
+///     .workers(4);     // 4 background threads over a bounded queue
+/// for (images, labels) in loader.iter() {
+///     assert_eq!(images.shape(), &[32, 3, 32, 32]);
+///     assert_eq!(labels.shape(), &[32]);
+///     // train_step(&images, &labels);
+/// }
+/// // Identical batches would have arrived with .workers(0) — order is
+/// // pinned by sequence-number reassembly, not by thread timing.
+/// let stats = loader.stats();
+/// println!("loader stall: {} ns over {} batches", stats.stall_ns, stats.batches);
+/// ```
+pub struct DataLoader {
+    dataset: Arc<dyn Dataset>,
+    collate: Arc<dyn Collate>,
+    custom_sampler: Option<Arc<dyn Sampler>>,
+    pub batch_size: usize,
+    pub shuffle: bool,
+    pub num_workers: usize,
+    pub drop_last: bool,
+    /// Prefetch-queue capacity; 0 = auto (`2 × workers`, min 2).
+    prefetch: usize,
+    seed: u64,
+    epoch: AtomicUsize,
+    counters: Arc<LoaderCounters>,
+}
+
+impl DataLoader {
+    pub fn new(dataset: Arc<dyn Dataset>, batch_size: usize) -> DataLoader {
+        DataLoader {
+            dataset,
+            collate: Arc::new(DefaultCollate),
+            custom_sampler: None,
+            batch_size,
+            shuffle: false,
+            num_workers: 0,
+            drop_last: false,
+            prefetch: 0,
+            seed: 0,
+            epoch: AtomicUsize::new(0),
+            counters: Arc::new(LoaderCounters::default()),
+        }
+    }
+
+    /// Shuffle with a [`RandomSampler`] (seed-deterministic per epoch).
+    pub fn shuffle(mut self, on: bool) -> DataLoader {
+        self.shuffle = on;
+        self
+    }
+
+    /// Number of background worker threads (0 = collate in-line).
+    pub fn workers(mut self, n: usize) -> DataLoader {
+        self.num_workers = n;
+        self
+    }
+
+    pub fn drop_last(mut self, on: bool) -> DataLoader {
+        self.drop_last = on;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> DataLoader {
+        self.seed = s;
+        self
+    }
+
+    /// Override the prefetch-queue capacity (default `2 × workers`).
+    pub fn prefetch(mut self, depth: usize) -> DataLoader {
+        self.prefetch = depth;
+        self
+    }
+
+    /// Replace the epoch-order policy (wins over [`Self::shuffle`]).
+    pub fn sampler(mut self, s: Arc<dyn Sampler>) -> DataLoader {
+        self.custom_sampler = Some(s);
+        self
+    }
+
+    /// Replace the sample → batch assembly step.
+    pub fn collate(mut self, c: Arc<dyn Collate>) -> DataLoader {
+        self.collate = c;
+        self
+    }
+
+    /// Set the epoch the next [`Self::iter`] call runs (epochs otherwise
+    /// auto-increment per `iter()`); lets resumed training replay the
+    /// exact shuffle schedule.
+    pub fn set_epoch(&self, e: usize) {
+        self.epoch.store(e, Ordering::SeqCst);
+    }
+
+    /// Number of batches per epoch.
+    pub fn num_batches(&self) -> usize {
+        BatchSampler::new(self.batch_size, self.drop_last).num_batches(self.dataset.len())
+    }
+
+    /// Cumulative stall/batch counters across all epochs so far.
+    pub fn stats(&self) -> LoaderStats {
+        LoaderStats {
+            stall_ns: self.counters.stall_ns.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    fn epoch_batches(&self, epoch: usize) -> Vec<Vec<usize>> {
+        let order = match &self.custom_sampler {
+            Some(s) => s.order(self.dataset.len(), epoch),
+            None if self.shuffle => RandomSampler::new(self.seed).order(self.dataset.len(), epoch),
+            None => SequentialSampler.order(self.dataset.len(), epoch),
+        };
+        BatchSampler::new(self.batch_size, self.drop_last).batches(&order)
+    }
+
+    /// Iterate one epoch of `(inputs, targets)` batches.
+    pub fn iter(&self) -> BatchIter {
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
+        let batches = self.epoch_batches(epoch);
+
+        let imp = if self.num_workers == 0 {
+            IterImpl::Serial {
+                dataset: self.dataset.clone(),
+                collate: self.collate.clone(),
+                batches,
+                next: 0,
+            }
+        } else {
+            let cap =
+                if self.prefetch == 0 { (self.num_workers * 2).max(2) } else { self.prefetch };
+            let (tx, rx) = mpsc::sync_channel(cap);
+            let total = batches.len();
+            let claim = Arc::new(AtomicUsize::new(0));
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let batches = Arc::new(batches);
+            let mut handles = Vec::with_capacity(self.num_workers);
+            for w in 0..self.num_workers {
+                let tx = tx.clone();
+                let dataset = self.dataset.clone();
+                let collate = self.collate.clone();
+                let claim = claim.clone();
+                let shutdown = shutdown.clone();
+                let batches = batches.clone();
+                let h = std::thread::Builder::new()
+                    .name(format!("torsk-data-{w}"))
+                    .spawn(move || loop {
+                        if shutdown.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let i = claim.fetch_add(1, Ordering::SeqCst);
+                        if i >= batches.len() {
+                            return;
+                        }
+                        let samples: Vec<(Tensor, Tensor)> =
+                            batches[i].iter().map(|&j| dataset.get(j)).collect();
+                        let b = collate.collate(&samples);
+                        // A send error means the consumer dropped the
+                        // epoch: stop quietly.
+                        if tx.send((i, b)).is_err() {
+                            return;
+                        }
+                    })
+                    .expect("spawn data worker");
+                handles.push(h);
+            }
+            // The iterator holds only the receiver; once every worker
+            // exits, the channel disconnects and `recv` reports the end.
+            IterImpl::Parallel {
+                rx: Some(rx),
+                pending: HashMap::new(),
+                next: 0,
+                total,
+                shutdown,
+                handles,
+            }
+        };
+        BatchIter { imp, counters: self.counters.clone(), stall_ns: 0 }
+    }
+}
+
+enum IterImpl {
+    Serial {
+        dataset: Arc<dyn Dataset>,
+        collate: Arc<dyn Collate>,
+        batches: Vec<Vec<usize>>,
+        next: usize,
+    },
+    Parallel {
+        rx: Option<mpsc::Receiver<(usize, (Tensor, Tensor))>>,
+        /// Out-of-order arrivals awaiting their turn. Workers claim
+        /// indices in order, so this normally holds at most
+        /// `workers + queue capacity` batches; one pathologically slow
+        /// batch can let later ones accumulate here while the consumer
+        /// drains the queue looking for it.
+        pending: HashMap<usize, (Tensor, Tensor)>,
+        next: usize,
+        total: usize,
+        shutdown: Arc<AtomicBool>,
+        handles: Vec<std::thread::JoinHandle<()>>,
+    },
+}
+
+/// One epoch's batch stream; see [`DataLoader::iter`].
+pub struct BatchIter {
+    imp: IterImpl,
+    counters: Arc<LoaderCounters>,
+    stall_ns: u64,
+}
+
+impl BatchIter {
+    /// Nanoseconds this epoch's consumer has spent blocked in `next()`.
+    pub fn stall_ns(&self) -> u64 {
+        self.stall_ns
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = (Tensor, Tensor);
+
+    fn next(&mut self) -> Option<(Tensor, Tensor)> {
+        let (got, stall) = match &mut self.imp {
+            IterImpl::Serial { dataset, collate, batches, next } => {
+                if *next >= batches.len() {
+                    (None, 0)
+                } else {
+                    let t0 = Instant::now();
+                    let samples: Vec<(Tensor, Tensor)> =
+                        batches[*next].iter().map(|&j| dataset.get(j)).collect();
+                    let b = collate.collate(&samples);
+                    *next += 1;
+                    (Some(b), t0.elapsed().as_nanos() as u64)
+                }
+            }
+            IterImpl::Parallel { rx, pending, next, total, .. } => {
+                if *next >= *total {
+                    (None, 0)
+                } else if let Some(b) = pending.remove(next) {
+                    // Already reassembled: the prefetch hid the work.
+                    *next += 1;
+                    (Some(b), 0)
+                } else {
+                    let t0 = Instant::now();
+                    let chan = rx.as_ref().expect("receiver alive while batches remain");
+                    let got = loop {
+                        match chan.recv() {
+                            Ok((i, b)) => {
+                                if i == *next {
+                                    *next += 1;
+                                    break Some(b);
+                                }
+                                pending.insert(i, b);
+                            }
+                            // Workers only exit early by panicking (the
+                            // shutdown flag is raised exclusively in
+                            // `drop`, which never calls `next`). Swallowing
+                            // this would silently truncate the epoch —
+                            // fail as loudly as workers=0 would have.
+                            Err(_) => panic!(
+                                "DataLoader worker thread panicked mid-epoch: batch {} of {} \
+                                 never arrived (see the worker's panic message above)",
+                                *next, *total
+                            ),
+                        }
+                    };
+                    (got, t0.elapsed().as_nanos() as u64)
+                }
+            }
+        };
+        if stall > 0 {
+            self.stall_ns += stall;
+            self.counters.stall_ns.fetch_add(stall, Ordering::Relaxed);
+        }
+        if got.is_some() {
+            self.counters.batches.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+}
+
+impl Drop for BatchIter {
+    fn drop(&mut self) {
+        if let IterImpl::Parallel { rx, shutdown, handles, .. } = &mut self.imp {
+            // Flag first, then disconnect: a worker blocked in `send`
+            // wakes with an error the moment the receiver drops, and any
+            // worker between batches sees the flag before claiming more.
+            shutdown.store(true, Ordering::Release);
+            drop(rx.take());
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Range100;
+    impl Dataset for Range100 {
+        fn len(&self) -> usize {
+            100
+        }
+        fn get(&self, i: usize) -> (Tensor, Tensor) {
+            (Tensor::full(&[2], i as f32), Tensor::from_vec(vec![i as i64], &[]))
+        }
+    }
+
+    #[test]
+    fn serial_loader_covers_dataset_in_order() {
+        let dl = DataLoader::new(Arc::new(Range100), 16);
+        let mut seen = vec![];
+        for (x, y) in dl.iter() {
+            assert_eq!(x.size(1), 2);
+            assert_eq!(x.size(0), y.size(0));
+            seen.extend(y.to_vec::<i64>());
+        }
+        assert_eq!(seen, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn drop_last_trims_partial_batch() {
+        let dl = DataLoader::new(Arc::new(Range100), 16).drop_last(true);
+        assert_eq!(dl.num_batches(), 6);
+        let n: usize = dl.iter().map(|(x, _)| x.size(0)).sum();
+        assert_eq!(n, 96);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation_and_differs_per_epoch() {
+        let dl = DataLoader::new(Arc::new(Range100), 10).shuffle(true).seed(7);
+        let epoch1: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
+        let epoch2: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
+        let mut s1 = epoch1.clone();
+        s1.sort_unstable();
+        assert_eq!(s1, (0..100).collect::<Vec<i64>>());
+        assert_ne!(epoch1, epoch2, "epochs should reshuffle");
+        assert_ne!(epoch1, (0..100).collect::<Vec<i64>>(), "should not be identity");
+    }
+
+    #[test]
+    fn set_epoch_replays_the_same_shuffle() {
+        let dl = DataLoader::new(Arc::new(Range100), 10).shuffle(true).seed(9);
+        let first: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
+        dl.set_epoch(0);
+        let replay: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
+        assert_eq!(first, replay);
+    }
+
+    #[test]
+    fn parallel_loader_matches_serial_order() {
+        let serial: Vec<i64> = DataLoader::new(Arc::new(Range100), 8)
+            .iter()
+            .flat_map(|(_, y)| y.to_vec::<i64>())
+            .collect();
+        let parallel: Vec<i64> = DataLoader::new(Arc::new(Range100), 8)
+            .workers(4)
+            .iter()
+            .flat_map(|(_, y)| y.to_vec::<i64>())
+            .collect();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn collate_f32_targets() {
+        struct Reg;
+        impl Dataset for Reg {
+            fn len(&self) -> usize {
+                4
+            }
+            fn get(&self, i: usize) -> (Tensor, Tensor) {
+                (Tensor::full(&[3], i as f32), Tensor::full(&[1], i as f32 * 2.0))
+            }
+        }
+        let dl = DataLoader::new(Arc::new(Reg), 2);
+        let (x, y) = dl.iter().next().unwrap();
+        assert_eq!(x.shape(), &[2, 3]);
+        assert_eq!(y.shape(), &[2, 1]);
+        assert_eq!(y.to_vec::<f32>(), vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_dataset_yields_no_batches() {
+        struct Empty;
+        impl Dataset for Empty {
+            fn len(&self) -> usize {
+                0
+            }
+            fn get(&self, _: usize) -> (Tensor, Tensor) {
+                unreachable!("empty dataset")
+            }
+        }
+        let dl = DataLoader::new(Arc::new(Empty), 4);
+        assert_eq!(dl.num_batches(), 0);
+        assert!(dl.iter().next().is_none());
+        let dlp = DataLoader::new(Arc::new(Empty), 4).workers(2);
+        assert!(dlp.iter().next().is_none());
+    }
+
+    #[test]
+    fn stall_accounting_counts_batches_and_time() {
+        let dl = DataLoader::new(Arc::new(Range100), 10);
+        let before = dl.stats();
+        let n = dl.iter().count();
+        let d = dl.stats().delta(&before);
+        assert_eq!(n, 10);
+        assert_eq!(d.batches, 10);
+        assert!(d.stall_ns > 0, "serial mode's collate time is all stall");
+    }
+
+    #[test]
+    fn prefetch_capacity_override_still_covers_epoch() {
+        let ys: Vec<i64> = DataLoader::new(Arc::new(Range100), 8)
+            .workers(3)
+            .prefetch(1)
+            .iter()
+            .flat_map(|(_, y)| y.to_vec::<i64>())
+            .collect();
+        assert_eq!(ys, (0..100).collect::<Vec<i64>>());
+    }
+}

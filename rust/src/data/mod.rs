@@ -1,20 +1,60 @@
-//! Data loading (§4.2): `Dataset` behaves like a (possibly lazy) list;
-//! `DataLoader` shuffles, batches, and parallelizes with background worker
-//! threads (the paper's multiprocessing workers — see `crate::multiproc`
-//! for the process-based variant).
+//! The data pipeline (§4.2): datasets, samplers, collation, and the
+//! parallel prefetching loader.
+//!
+//! The paper's observation is operational, not architectural: "one of the
+//! core design principles of PyTorch is that data loading should never
+//! stall the computation" — workers prepare the *next* batch while the
+//! accelerator chews on the current one, staging through reused pinned
+//! buffers. torsk reproduces that shape with four separable pieces:
+//!
+//! | piece | role | determinism contract |
+//! |---|---|---|
+//! | [`Dataset`] | indexed example source (`len` + `get`) | `get(i)` is a pure function of `i` |
+//! | [`Sampler`] / [`BatchSampler`] | epoch visit order, chunked into batches | pure function of `(seed, epoch, len)` |
+//! | [`Collate`] | samples → batched tensors, through the caching allocator | pure function of the samples |
+//! | [`DataLoader`] | N worker threads over a bounded prefetch queue | ordered reassembly by sequence number |
+//!
+//! Because each layer is deterministic and the loader reassembles
+//! completed batches in claim order, **the batch stream is bitwise
+//! identical at any worker count** — `workers(0)` (in-line), `1`, or `4`
+//! produce the same tensors in the same order (`tests/data_loader.rs`).
+//! Worker threads only hide latency; they never change results.
+//!
+//! The loader also *measures* what it hides: time the training thread
+//! spends blocked inside `next()` is recorded as **loader stall**
+//! ([`DataLoader::stats`]), and `benches/train_loop.rs` reports it as a
+//! fraction of end-to-end wall time per worker count in
+//! `BENCH_train.json` — the whole-model view that per-op microbenchmarks
+//! (`BENCH_ops.json`) cannot see.
+//!
+//! Threads, not processes: the paper forks worker *processes* because of
+//! the Python GIL and ships batches through shared memory
+//! ([`crate::multiproc`] reproduces that machinery). A Rust loader has no
+//! GIL to dodge, so workers are plain threads and a batch "ships" as an
+//! `Arc` handoff over a channel — the same overlap, none of the
+//! serialization cost the paper engineers around.
+//!
+//! [`synthetic`] provides the deterministic stand-in datasets for the
+//! Table 1 workloads.
 
+pub mod collate;
+pub mod loader;
+pub mod sampler;
 pub mod synthetic;
 
+pub use collate::{stack_into_batch, Collate, DefaultCollate};
+pub use loader::{BatchIter, DataLoader, LoaderStats};
+pub use sampler::{BatchSampler, RandomSampler, Sampler, SequentialSampler};
 pub use synthetic::{SyntheticImages, SyntheticInteractions, SyntheticSeq2Seq};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
-
-use crate::ops;
-use crate::rng::Rng;
 use crate::tensor::Tensor;
 
 /// An indexed example source: `__getitem__` + `__len__` (§4.2).
+///
+/// `get` must be deterministic per index (and cheap to call from multiple
+/// threads at once): loader workers fetch concurrently, and the
+/// bitwise-reproducibility guarantee of the pipeline rests on the dataset
+/// returning the same bytes for the same index every time.
 pub trait Dataset: Send + Sync {
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
@@ -22,268 +62,4 @@ pub trait Dataset: Send + Sync {
     }
     /// Fetch one example: (input, target).
     fn get(&self, index: usize) -> (Tensor, Tensor);
-}
-
-/// Batching, shuffling, parallel-prefetching loader.
-pub struct DataLoader {
-    dataset: Arc<dyn Dataset>,
-    pub batch_size: usize,
-    pub shuffle: bool,
-    pub num_workers: usize,
-    pub drop_last: bool,
-    seed: u64,
-    epoch: AtomicUsize,
-}
-
-impl DataLoader {
-    pub fn new(dataset: Arc<dyn Dataset>, batch_size: usize) -> DataLoader {
-        DataLoader {
-            dataset,
-            batch_size,
-            shuffle: false,
-            num_workers: 0,
-            drop_last: false,
-            seed: 0,
-            epoch: AtomicUsize::new(0),
-        }
-    }
-
-    pub fn shuffle(mut self, on: bool) -> DataLoader {
-        self.shuffle = on;
-        self
-    }
-
-    pub fn workers(mut self, n: usize) -> DataLoader {
-        self.num_workers = n;
-        self
-    }
-
-    pub fn drop_last(mut self, on: bool) -> DataLoader {
-        self.drop_last = on;
-        self
-    }
-
-    pub fn seed(mut self, s: u64) -> DataLoader {
-        self.seed = s;
-        self
-    }
-
-    /// Number of batches per epoch.
-    pub fn num_batches(&self) -> usize {
-        if self.drop_last {
-            self.dataset.len() / self.batch_size
-        } else {
-            self.dataset.len().div_ceil(self.batch_size)
-        }
-    }
-
-    fn epoch_order(&self, epoch: usize) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..self.dataset.len()).collect();
-        if self.shuffle {
-            let mut r = Rng::new(self.seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9));
-            r.shuffle(&mut order);
-        }
-        order
-    }
-
-    /// Iterate one epoch of batches.
-    pub fn iter(&self) -> BatchIter {
-        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
-        let order = self.epoch_order(epoch);
-        let batches: Vec<Vec<usize>> = order
-            .chunks(self.batch_size)
-            .filter(|c| !self.drop_last || c.len() == self.batch_size)
-            .map(|c| c.to_vec())
-            .collect();
-
-        if self.num_workers == 0 {
-            BatchIter::Serial { dataset: self.dataset.clone(), batches, next: 0 }
-        } else {
-            // Background workers: each claims batch indices round-robin and
-            // sends collated batches through a bounded channel (prefetch
-            // queue), preserving order via per-batch sequence numbers.
-            let (tx, rx) = mpsc::sync_channel(self.num_workers * 2);
-            let counter = Arc::new(AtomicUsize::new(0));
-            let batches = Arc::new(batches);
-            for _ in 0..self.num_workers {
-                let tx = tx.clone();
-                let dataset = self.dataset.clone();
-                let counter = counter.clone();
-                let batches = batches.clone();
-                std::thread::spawn(move || loop {
-                    let i = counter.fetch_add(1, Ordering::SeqCst);
-                    if i >= batches.len() {
-                        return;
-                    }
-                    let b = collate(&*dataset, &batches[i]);
-                    if tx.send((i, b)).is_err() {
-                        return;
-                    }
-                });
-            }
-            BatchIter::Parallel {
-                rx,
-                pending: std::collections::HashMap::new(),
-                next: 0,
-                total: batches.len(),
-            }
-        }
-    }
-}
-
-/// Stack examples into (inputs, targets) batch tensors.
-fn collate(dataset: &dyn Dataset, indices: &[usize]) -> (Tensor, Tensor) {
-    let examples: Vec<(Tensor, Tensor)> = indices.iter().map(|&i| dataset.get(i)).collect();
-    let xs: Vec<&Tensor> = examples.iter().map(|(x, _)| x).collect();
-    let ys: Vec<&Tensor> = examples.iter().map(|(_, y)| y).collect();
-    (ops::stack(&xs, 0), stack_targets(&ys))
-}
-
-fn stack_targets(ys: &[&Tensor]) -> Tensor {
-    // Targets may be i64 scalars (classification) or f32 tensors.
-    match ys[0].dtype() {
-        crate::tensor::DType::I64 => {
-            let mut data = Vec::with_capacity(ys.len());
-            for y in ys {
-                data.extend(y.to_vec::<i64>());
-            }
-            let per = ys[0].numel();
-            if per == 1 {
-                Tensor::from_vec(data, &[ys.len()])
-            } else {
-                let mut shape = vec![ys.len()];
-                shape.extend_from_slice(ys[0].shape());
-                Tensor::from_vec(data, &shape)
-            }
-        }
-        crate::tensor::DType::F32 | crate::tensor::DType::F64 => ops::stack(ys, 0),
-    }
-}
-
-/// Iterator over collated batches.
-pub enum BatchIter {
-    Serial {
-        dataset: Arc<dyn Dataset>,
-        batches: Vec<Vec<usize>>,
-        next: usize,
-    },
-    Parallel {
-        rx: mpsc::Receiver<(usize, (Tensor, Tensor))>,
-        pending: std::collections::HashMap<usize, (Tensor, Tensor)>,
-        next: usize,
-        total: usize,
-    },
-}
-
-impl Iterator for BatchIter {
-    type Item = (Tensor, Tensor);
-
-    fn next(&mut self) -> Option<(Tensor, Tensor)> {
-        match self {
-            BatchIter::Serial { dataset, batches, next } => {
-                if *next >= batches.len() {
-                    return None;
-                }
-                let b = collate(&**dataset, &batches[*next]);
-                *next += 1;
-                Some(b)
-            }
-            BatchIter::Parallel { rx, pending, next, total } => {
-                if *next >= *total {
-                    return None;
-                }
-                loop {
-                    if let Some(b) = pending.remove(next) {
-                        *next += 1;
-                        return Some(b);
-                    }
-                    match rx.recv() {
-                        Ok((i, b)) => {
-                            pending.insert(i, b);
-                        }
-                        Err(_) => return None,
-                    }
-                }
-            }
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    struct Range100;
-    impl Dataset for Range100 {
-        fn len(&self) -> usize {
-            100
-        }
-        fn get(&self, i: usize) -> (Tensor, Tensor) {
-            (Tensor::full(&[2], i as f32), Tensor::from_vec(vec![i as i64], &[]))
-        }
-    }
-
-    #[test]
-    fn serial_loader_covers_dataset_in_order() {
-        let dl = DataLoader::new(Arc::new(Range100), 16);
-        let mut seen = vec![];
-        for (x, y) in dl.iter() {
-            assert_eq!(x.size(1), 2);
-            assert_eq!(x.size(0), y.size(0));
-            seen.extend(y.to_vec::<i64>());
-        }
-        assert_eq!(seen, (0..100).collect::<Vec<i64>>());
-    }
-
-    #[test]
-    fn drop_last_trims_partial_batch() {
-        let dl = DataLoader::new(Arc::new(Range100), 16).drop_last(true);
-        assert_eq!(dl.num_batches(), 6);
-        let n: usize = dl.iter().map(|(x, _)| x.size(0)).sum();
-        assert_eq!(n, 96);
-    }
-
-    #[test]
-    fn shuffle_is_a_permutation_and_differs_per_epoch() {
-        let dl = DataLoader::new(Arc::new(Range100), 10).shuffle(true).seed(7);
-        let epoch1: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
-        let epoch2: Vec<i64> = dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect();
-        let mut s1 = epoch1.clone();
-        s1.sort_unstable();
-        assert_eq!(s1, (0..100).collect::<Vec<i64>>());
-        assert_ne!(epoch1, epoch2, "epochs should reshuffle");
-        assert_ne!(epoch1, (0..100).collect::<Vec<i64>>(), "should not be identity");
-    }
-
-    #[test]
-    fn parallel_loader_matches_serial_order() {
-        let serial: Vec<i64> = DataLoader::new(Arc::new(Range100), 8)
-            .iter()
-            .flat_map(|(_, y)| y.to_vec::<i64>())
-            .collect();
-        let parallel: Vec<i64> = DataLoader::new(Arc::new(Range100), 8)
-            .workers(4)
-            .iter()
-            .flat_map(|(_, y)| y.to_vec::<i64>())
-            .collect();
-        assert_eq!(serial, parallel);
-    }
-
-    #[test]
-    fn collate_f32_targets() {
-        struct Reg;
-        impl Dataset for Reg {
-            fn len(&self) -> usize {
-                4
-            }
-            fn get(&self, i: usize) -> (Tensor, Tensor) {
-                (Tensor::full(&[3], i as f32), Tensor::full(&[1], i as f32 * 2.0))
-            }
-        }
-        let dl = DataLoader::new(Arc::new(Reg), 2);
-        let (x, y) = dl.iter().next().unwrap();
-        assert_eq!(x.shape(), &[2, 3]);
-        assert_eq!(y.shape(), &[2, 1]);
-        assert_eq!(y.to_vec::<f32>(), vec![0.0, 2.0]);
-    }
 }

@@ -1,0 +1,146 @@
+//! Index-order policies for the [`DataLoader`](super::DataLoader) (§4.2).
+//!
+//! A [`Sampler`] decides *which* example indices an epoch visits and in
+//! what order; [`BatchSampler`] groups that order into batches. Keeping
+//! the policy separate from the loader mirrors `torch.utils.data`'s
+//! `Sampler`/`BatchSampler` split and is what makes epoch order
+//! **seed-deterministic**: the order is a pure function of
+//! `(seed, epoch, len)`, computed once on the calling thread — worker
+//! threads only ever *execute* batches, never choose them, so the batch
+//! sequence is identical at any worker count.
+
+use crate::rng::Rng;
+use crate::torsk_assert;
+
+/// An epoch's visit order over a dataset of `len` examples.
+///
+/// Implementations must be pure functions of `(len, epoch)` and their own
+/// configuration (seed): the loader may ask for the same epoch's order
+/// twice and expects identical answers.
+pub trait Sampler: Send + Sync {
+    /// The index order for `epoch`. Every returned index must be `< len`.
+    fn order(&self, len: usize, epoch: usize) -> Vec<usize>;
+}
+
+/// Visit `0..len` in order — the deterministic evaluation-mode sampler.
+pub struct SequentialSampler;
+
+impl Sampler for SequentialSampler {
+    fn order(&self, len: usize, _epoch: usize) -> Vec<usize> {
+        (0..len).collect()
+    }
+}
+
+/// A seed-deterministic random permutation per epoch, driven by the
+/// crate's [`Rng`] (xoshiro256**): epoch `e` shuffles with
+/// `seed ^ e·0x9E37_79B9`, so every epoch reshuffles but the whole
+/// schedule replays exactly from one seed — `torch.manual_seed` for the
+/// data order.
+pub struct RandomSampler {
+    pub seed: u64,
+}
+
+impl RandomSampler {
+    pub fn new(seed: u64) -> RandomSampler {
+        RandomSampler { seed }
+    }
+}
+
+impl Sampler for RandomSampler {
+    fn order(&self, len: usize, epoch: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..len).collect();
+        let mut r = Rng::new(self.seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9));
+        r.shuffle(&mut order);
+        order
+    }
+}
+
+/// Groups a sampler's order into batch index lists.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSampler {
+    pub batch_size: usize,
+    /// Drop the trailing partial batch (fixed-shape training loops).
+    pub drop_last: bool,
+}
+
+impl BatchSampler {
+    pub fn new(batch_size: usize, drop_last: bool) -> BatchSampler {
+        torsk_assert!(batch_size > 0, "BatchSampler: batch_size must be > 0");
+        BatchSampler { batch_size, drop_last }
+    }
+
+    /// Number of batches an epoch over `len` examples yields.
+    pub fn num_batches(&self, len: usize) -> usize {
+        if self.drop_last {
+            len / self.batch_size
+        } else {
+            len.div_ceil(self.batch_size)
+        }
+    }
+
+    /// Chunk an epoch order into per-batch index lists.
+    pub fn batches(&self, order: &[usize]) -> Vec<Vec<usize>> {
+        order
+            .chunks(self.batch_size)
+            .filter(|c| !self.drop_last || c.len() == self.batch_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_is_identity() {
+        assert_eq!(SequentialSampler.order(5, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(SequentialSampler.order(5, 3), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn random_is_a_permutation_and_seed_deterministic() {
+        let s = RandomSampler::new(7);
+        let a = s.order(100, 0);
+        let b = s.order(100, 0);
+        assert_eq!(a, b, "same (seed, epoch) must replay the same order");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<usize>>());
+        assert_ne!(a, (0..100).collect::<Vec<usize>>(), "should not be identity");
+    }
+
+    #[test]
+    fn random_reshuffles_per_epoch_but_not_per_instance() {
+        let s1 = RandomSampler::new(11);
+        let s2 = RandomSampler::new(11);
+        assert_eq!(s1.order(64, 2), s2.order(64, 2));
+        assert_ne!(s1.order(64, 0), s1.order(64, 1), "epochs should reshuffle");
+        let s3 = RandomSampler::new(12);
+        assert_ne!(s1.order(64, 0), s3.order(64, 0), "seeds should differ");
+    }
+
+    #[test]
+    fn batch_sampler_chunks_and_drop_last() {
+        let order: Vec<usize> = (0..10).collect();
+        let keep = BatchSampler::new(4, false);
+        assert_eq!(keep.num_batches(10), 3);
+        assert_eq!(keep.batches(&order), vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        let drop = BatchSampler::new(4, true);
+        assert_eq!(drop.num_batches(10), 2);
+        assert_eq!(drop.batches(&order), vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    }
+
+    #[test]
+    fn batch_sampler_empty_order() {
+        let bs = BatchSampler::new(4, false);
+        assert_eq!(bs.num_batches(0), 0);
+        assert!(bs.batches(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch_size must be > 0")]
+    fn zero_batch_size_panics() {
+        BatchSampler::new(0, false);
+    }
+}

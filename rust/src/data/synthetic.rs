@@ -20,6 +20,12 @@ impl SyntheticImages {
     pub fn new(n: usize, channels: usize, height: usize, width: usize, classes: usize) -> Self {
         SyntheticImages { n, channels, height, width, classes, seed: 0 }
     }
+
+    /// Builder-style seed override (a different deterministic split).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
 }
 
 impl Dataset for SyntheticImages {
@@ -28,7 +34,7 @@ impl Dataset for SyntheticImages {
     }
 
     fn get(&self, index: usize) -> (Tensor, Tensor) {
-        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x2545F491));
+        let mut r = Rng::for_index(self.seed, index as u64);
         let mut img = vec![0.0f32; self.channels * self.height * self.width];
         r.fill_normal(&mut img, 0.0, 1.0);
         let label = r.below(self.classes as u64) as i64;
@@ -53,6 +59,12 @@ impl SyntheticSeq2Seq {
     pub fn new(n: usize, src_len: usize, tgt_len: usize, vocab: usize) -> Self {
         SyntheticSeq2Seq { n, src_len, tgt_len, vocab, seed: 0 }
     }
+
+    /// Builder-style seed override (a different deterministic split).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
 }
 
 impl Dataset for SyntheticSeq2Seq {
@@ -61,7 +73,7 @@ impl Dataset for SyntheticSeq2Seq {
     }
 
     fn get(&self, index: usize) -> (Tensor, Tensor) {
-        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x9E3779B9));
+        let mut r = Rng::for_index(self.seed, index as u64);
         let src: Vec<i64> = (0..self.src_len).map(|_| r.below(self.vocab as u64) as i64).collect();
         let tgt: Vec<i64> = (0..self.tgt_len).map(|_| r.below(self.vocab as u64) as i64).collect();
         (
@@ -83,6 +95,12 @@ impl SyntheticInteractions {
     pub fn new(n: usize, users: usize, items: usize) -> Self {
         SyntheticInteractions { n, users, items, seed: 0 }
     }
+
+    /// Builder-style seed override (a different deterministic split).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
 }
 
 impl Dataset for SyntheticInteractions {
@@ -91,7 +109,7 @@ impl Dataset for SyntheticInteractions {
     }
 
     fn get(&self, index: usize) -> (Tensor, Tensor) {
-        let mut r = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x85EBCA6B));
+        let mut r = Rng::for_index(self.seed, index as u64);
         let user = r.below(self.users as u64) as i64;
         let item = r.below(self.items as u64) as i64;
         // Planted structure: interaction likelihood depends on id parity so

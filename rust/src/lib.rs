@@ -2,7 +2,9 @@
 //!
 //! A Rust reproduction of **"PyTorch: An Imperative Style, High-Performance
 //! Deep Learning Library"** (Paszke et al., NeurIPS 2019) as a three-layer
-//! Rust + JAX + Pallas stack. See `DESIGN.md` for the full system map and
+//! Rust + JAX + Pallas stack. `ARCHITECTURE.md` at the repo root is the
+//! guided tour of the subsystems (with a worked trace of one op from API
+//! call to backward); see `DESIGN.md` for the full system map and
 //! `EXPERIMENTS.md` for the paper-vs-measured results.
 //!
 //! The crate provides:
@@ -18,8 +20,12 @@
 //!   `Tensor` methods and operator overloads (§5.2);
 //! - [`alloc`] — the caching device allocator and its baselines (§5.3);
 //! - [`device`] — streams, events, and the simulated accelerator (§5.2);
-//! - [`nn`], [`optim`], [`data`] — the "just Python programs" model,
-//!   optimizer and data-loading APIs, in Rust (§4.1, §4.2);
+//! - [`nn`], [`optim`] — the "just Python programs" model and optimizer
+//!   APIs, in Rust (§4.1);
+//! - [`data`] — the parallel prefetching data pipeline: samplers,
+//!   collation through the caching allocator, and a worker-thread
+//!   `DataLoader` whose batch stream is bitwise worker-count-invariant
+//!   (§4.2);
 //! - [`multiproc`] — shared-memory tensor transport + Hogwild (§5.4);
 //! - [`runtime`] / [`graph`] — AOT-compiled XLA graph execution via PJRT,
 //!   the static-graph baseline of §6.3;

@@ -18,6 +18,26 @@
 //!   style primitives" users build data-parallel training from;
 //! - Hogwild (lock-free shared-parameter SGD, §5.4's closing example) is
 //!   exercised in `examples/hogwild.rs` and the integration tests.
+//!
+//! # Processes vs. the thread-based `data` loader
+//!
+//! The paper reaches for worker *processes* because Python's GIL makes
+//! threads useless for CPU-bound data preparation; shared memory then
+//! exists to make inter-process tensor transport cheap. torsk has no GIL,
+//! so the [`crate::data::DataLoader`] prefetches with plain threads and
+//! hands batches over a channel — use *this* module when you genuinely
+//! need separate address spaces: Hogwild-style shared parameters,
+//! multi-process data parallelism ([`allreduce_mean`]), or surviving a
+//! worker crash. The two compose: `examples/hogwild.rs` runs a
+//! `DataLoader` inside each forked worker.
+//!
+//! Fork safety: [`fork_workers`] forks without `exec`, so children start
+//! with only the calling thread. Nothing inherited may be relied on —
+//! not the kernel pool, not stream workers, not live prefetch threads.
+//! Threads the child spawns itself (e.g. its own loader workers) are
+//! fine. Keep the parent single-threaded-quiescent at fork time (no
+//! in-flight kernels), or a lock held by a non-forked thread can deadlock
+//! the child.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, Ordering};

@@ -4,9 +4,9 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: check build test fmt fmt-check clippy bench bench-smoke gemm-parity
+.PHONY: check build test fmt fmt-check clippy audit bench bench-smoke gemm-parity
 
-check: build test fmt-check clippy
+check: build test fmt-check clippy audit
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -20,8 +20,18 @@ fmt:
 fmt-check:
 	cd $(RUST_DIR) && $(CARGO) fmt --check
 
+# `--all-targets` covers tests, benches and examples, not just the lib;
+# `--workspace` pulls in tools/pallas-audit so the linter is linted too.
 clippy:
-	cd $(RUST_DIR) && $(CARGO) clippy -- -D warnings
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+# The project's own static-analysis pass (tools/pallas-audit): SAFETY
+# justifications on every unsafe, copy-free GEMM paths, pool-only
+# threading, determinism hazards, mandatory OpInfo samples. Writes
+# audit_report.json at the repo root; exits non-zero on any violation
+# not covered by tools/pallas-audit/allow/.
+audit:
+	$(CARGO) run -q --release -p pallas-audit
 
 # Full sweep; writes BENCH_ops.json (per-op records) and BENCH_train.json
 # (end-to-end samples/sec + loader-stall at workers 0/1/4) at the repo

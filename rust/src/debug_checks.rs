@@ -1,0 +1,162 @@
+//! Runtime sanitizer for the unsafe parallel runtime (`debug-checks`).
+//!
+//! The static half of torsk's safety story is `tools/pallas-audit`: every
+//! `unsafe` site documents an invariant. This module is the dynamic half —
+//! when the crate is built with `--features debug-checks`, the dispatcher
+//! and kernel drivers *re-verify* at runtime the invariants those SAFETY
+//! comments claim:
+//!
+//! - [`verify_disjoint_cover`] — every `kernels::parallel_for` split must
+//!   partition `0..n` into in-bounds, pairwise-disjoint ranges (the
+//!   "chunks write disjoint ranges" claim behind every raw-pointer
+//!   parallel write);
+//! - [`verify_donation_dead`] — a buffer consumed from the donation slot
+//!   must be genuinely dead: exactly the slot's clone plus the moved-in
+//!   input handle may reference it (the `call_owned` output-stealing
+//!   precondition);
+//! - [`verify_output_aliasing`] — an op output aliasing an input's
+//!   storage is legal only for declared in-place ops (the output *is* the
+//!   input handle) or `reuse_output` kernels in the index-aligned Fast
+//!   pattern (same shape/dtype, contiguous, offset 0);
+//! - [`verify_tape`] — a fused micro-op tape must respect interpreter
+//!   bounds (`MAX_STACK` depth, in-range `Load`s, single result), re-run
+//!   at dispatch because tapes can be assembled outside `TapeBuilder`'s
+//!   build-time tracking (e.g. the composed `SBCE_DX` tape);
+//! - [`verify_access_extent`] — each fused-tape operand must cover every
+//!   index its [`Access`](crate::dispatch::fuse) pattern can generate for
+//!   an `n`-element pass.
+//!
+//! All checks panic with a `debug-checks:` message on violation. The
+//! feature is compiled out of release builds; CI runs the test suite once
+//! with it enabled (see `.github/workflows/ci.yml`).
+
+use std::sync::Arc;
+
+use crate::tensor::storage::Storage;
+use crate::tensor::Tensor;
+
+/// Assert that `ranges` partitions `0..n`: every range non-empty and
+/// in-bounds, no two ranges overlapping, and all of `0..n` covered.
+/// `kernels::parallel_for` routes every real split through this before
+/// submitting work.
+pub fn verify_disjoint_cover(n: usize, ranges: &[(usize, usize)]) {
+    let mut sorted: Vec<(usize, usize)> = ranges.to_vec();
+    sorted.sort_unstable();
+    let mut prev_end = 0usize;
+    let mut covered = 0usize;
+    for &(s, e) in &sorted {
+        assert!(s < e, "debug-checks: empty or inverted parallel_for range ({s}, {e})");
+        assert!(e <= n, "debug-checks: parallel_for range ({s}, {e}) exceeds n = {n}");
+        assert!(
+            s >= prev_end,
+            "debug-checks: overlapping parallel_for split — range ({s}, {e}) starts \
+             before the previous range ends at {prev_end}"
+        );
+        covered += e - s;
+        prev_end = e;
+    }
+    assert!(
+        covered == n,
+        "debug-checks: parallel_for split covers {covered} of {n} elements"
+    );
+}
+
+/// Assert that a storage consumed from the donation slot is genuinely
+/// dead. At consumption exactly two references exist: the slot's clone
+/// (`s` here) and the moved-in input handle still held by `call_owned`'s
+/// `inputs` vector. Anything more means a live tensor is about to have
+/// its buffer overwritten.
+pub fn verify_donation_dead(s: &Storage) {
+    let rc = s.ref_count();
+    assert!(
+        rc == 2,
+        "debug-checks: donated buffer is not dead at consumption — storage ref_count \
+         is {rc}, expected 2 (the donation slot + the moved-in input handle)"
+    );
+}
+
+/// Assert that an op output aliasing an input's storage follows a
+/// declared pattern. Called by `dispatch::call_with` after the kernel
+/// returns.
+pub fn verify_output_aliasing(reuse_output: bool, name: &str, inputs: &[&Tensor], out: &Tensor) {
+    if out.numel() == 0 {
+        // Zero-sized storages may share a sentinel block pointer.
+        return;
+    }
+    for t in inputs {
+        if Arc::ptr_eq(&t.inner, &out.inner) {
+            // In-place op returning its input handle: declared aliasing.
+            continue;
+        }
+        if t.storage().ptr() == out.storage().ptr() {
+            assert!(
+                reuse_output,
+                "debug-checks: op '{name}' returned an output aliasing an input's \
+                 storage but is not registered reuse_output"
+            );
+            assert!(
+                out.dtype() == t.dtype()
+                    && out.shape() == t.shape()
+                    && out.is_contiguous()
+                    && t.is_contiguous()
+                    && out.storage_offset() == 0
+                    && t.storage_offset() == 0,
+                "debug-checks: op '{name}' stole an input buffer outside the declared \
+                 Fast-plan pattern (same shape/dtype, contiguous, offset 0)"
+            );
+        }
+    }
+}
+
+/// Assert that a fused-tape operand with `numel` elements covers every
+/// index its access pattern can generate over an `n`-element pass.
+/// `max_index` is the largest source index the pattern produces
+/// (`src_index(acc, n - 1)` for monotone patterns).
+pub fn verify_access_extent(name: &str, operand: usize, numel: usize, max_index: usize) {
+    assert!(
+        max_index < numel,
+        "debug-checks: {name}: fused-tape operand {operand} holds {numel} elements \
+         but its access pattern reaches index {max_index}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_cover_accepts_partition() {
+        verify_disjoint_cover(10, &[(0, 4), (4, 8), (8, 10)]);
+        verify_disjoint_cover(1, &[(0, 1)]);
+        verify_disjoint_cover(0, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping parallel_for split")]
+    fn disjoint_cover_rejects_overlap() {
+        verify_disjoint_cover(10, &[(0, 6), (4, 10)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "covers 8 of 10")]
+    fn disjoint_cover_rejects_gap() {
+        verify_disjoint_cover(10, &[(0, 4), (6, 10)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds n")]
+    fn disjoint_cover_rejects_out_of_bounds() {
+        verify_disjoint_cover(10, &[(0, 12)]);
+    }
+
+    #[test]
+    fn access_extent_bounds() {
+        verify_access_extent("fused:test", 0, 8, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "reaches index 8")]
+    fn access_extent_rejects_short_operand() {
+        verify_access_extent("fused:test", 0, 8, 8);
+    }
+}

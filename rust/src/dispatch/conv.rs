@@ -62,6 +62,12 @@ fn k_conv2d(ctx: &OpCtx) -> Tensor {
     let bp = bias_c.as_ref().map(|b| b.data_ptr());
     let (in_len, w_len, out_len) = (input_c.numel(), weight_c.numel(), out.numel());
     let c_out = args.c_out;
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dev, "conv2d", move || unsafe {
         let iv = ip.as_slice::<f32>(0, in_len);
         let wv = wp.as_slice::<f32>(0, w_len);

@@ -206,6 +206,41 @@ impl Tape {
         debug_assert_eq!(sp, 1);
         stack[0]
     }
+
+    /// Re-verify interpreter bounds on a finished tape: every `Load` in
+    /// range, stack depth within [`MAX_STACK`] and never underflowing,
+    /// exactly one result left. [`TapeBuilder`] enforces all of this
+    /// during construction, but tapes can also be composed by splicing
+    /// `ops` directly (see `SBCE_DX`), bypassing the builder's tracking —
+    /// the `debug-checks` drivers re-run this at dispatch.
+    pub fn verify(&self) {
+        let mut depth = 0usize;
+        for op in &self.ops {
+            match *op {
+                MicroOp::Load(i) => {
+                    torsk_assert!(
+                        (i as usize) < self.n_inputs,
+                        "fuse: tape Load({i}) out of range for {} inputs",
+                        self.n_inputs
+                    );
+                    depth += 1;
+                }
+                MicroOp::Const(_) => depth += 1,
+                MicroOp::Dup => {
+                    torsk_assert!(depth >= 1, "fuse: Dup on empty stack");
+                    depth += 1;
+                }
+                MicroOp::Swap => torsk_assert!(depth >= 2, "fuse: Swap on short stack"),
+                MicroOp::Un(_) => torsk_assert!(depth >= 1, "fuse: unary on empty stack"),
+                MicroOp::Bin(_) => {
+                    torsk_assert!(depth >= 2, "fuse: binary on short stack");
+                    depth -= 1;
+                }
+            }
+            torsk_assert!(depth <= MAX_STACK, "fuse: tape exceeds MAX_STACK at {op:?}");
+        }
+        torsk_assert!(depth == 1, "fuse: tape leaves {depth} values on the stack");
+    }
 }
 
 /// Builder accumulating micro-ops with stack-depth tracking and
@@ -355,6 +390,9 @@ fn src_index(acc: Access, i: usize) -> usize {
 
 fn run_map_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], op: SendPtr, n: usize) {
     let nargs = srcs.len();
+    // SAFETY: plan_srcs sized every source for its Access pattern against
+    // n and the caller keeps the tensors alive across this call; chunks
+    // write disjoint ranges [s, e) of the n-element output.
     parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
         let mut args = [T::ZERO; MAX_ARGS];
         let po = op.ptr() as *mut T;
@@ -375,6 +413,8 @@ fn run_map_sum_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], n: us
     if n == 0 {
         return T::ZERO;
     }
+    // SAFETY: read-only gathers; plan_srcs sized every source for its
+    // Access pattern against n, and src_index stays within that extent.
     let gather = |i: usize, args: &mut [T; MAX_ARGS]| unsafe {
         for (k, (p, acc)) in srcs.iter().enumerate() {
             args[k] = std::ptr::read((p.ptr() as *const T).add(src_index(*acc, i)));
@@ -392,6 +432,9 @@ fn run_map_sum_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], n: us
     }
     let mut partials: Vec<T> = vec![T::ZERO; nchunks];
     let pp = SendPtr::new(partials.as_mut_ptr() as *mut u8);
+    // SAFETY: `partials` outlives the blocking parallel_for; each chunk c
+    // writes only partials[c], and source reads are bounds-safe as in
+    // `gather` above.
     parallel_for(nchunks, 1, |c0, c1| unsafe {
         let mut args = [T::ZERO; MAX_ARGS];
         for c in c0..c1 {
@@ -422,6 +465,32 @@ fn plan_srcs(inputs: &[(&Tensor, Access)]) -> (Vec<Tensor>, Vec<(SendPtr, Access
     (keep, srcs)
 }
 
+/// Sanitizer: re-verify the tape's interpreter bounds and that every
+/// operand covers the largest source index its [`Access`] pattern can
+/// generate over an `n`-element pass (the bound `src_index` relies on).
+#[cfg(feature = "debug-checks")]
+fn verify_plan(name: &str, tape: &Tape, keep: &[Tensor], srcs: &[(SendPtr, Access)], n: usize) {
+    tape.verify();
+    if n == 0 {
+        return;
+    }
+    for (k, (t, (_, acc))) in keep.iter().zip(srcs.iter()).enumerate() {
+        let max_index = match *acc {
+            Access::Flat => n - 1,
+            Access::Row(inner) => {
+                torsk_assert!(inner > 0, "{name}: Row access with inner = 0");
+                (n - 1) / inner
+            }
+            Access::Col(inner) => {
+                torsk_assert!(inner > 0, "{name}: Col access with inner = 0");
+                (n - 1).min(inner - 1)
+            }
+            Access::Scalar => 0,
+        };
+        crate::debug_checks::verify_access_extent(name, k, t.numel(), max_index);
+    }
+}
+
 /// Run `tape` as one elementwise pass producing a tensor of `out_shape`.
 /// All operands must share one float dtype and one device; broadcasts are
 /// expressed via [`Access`], not materialized.
@@ -445,6 +514,8 @@ pub(crate) fn run_map(
     if n == 0 {
         return out;
     }
+    #[cfg(feature = "debug-checks")]
+    verify_plan(name, tape, &keep, &srcs, n);
     let op = out.data_ptr();
     let tape = tape.clone();
     device::dispatch(dev, name, move || {
@@ -480,6 +551,8 @@ pub(crate) fn run_map_sum(
         "{name}: fused tapes need one float dtype"
     );
     let (keep, srcs) = plan_srcs(inputs);
+    #[cfg(feature = "debug-checks")]
+    verify_plan(name, tape, &keep, &srcs, n);
     let out = Tensor::empty(&[], dt, dev);
     let op = out.data_ptr();
     let tape = tape.clone();
@@ -491,11 +564,15 @@ pub(crate) fn run_map_sum(
                 // round-trip exactly for f32 values and scale factors are
                 // narrowed first, mirroring the composed scalar kernels.
                 let v = finish(total as f64, finish_arg) as f32;
+                // SAFETY: `op` is the one-element output's storage; it
+                // stays valid for this queued kernel per the stream FIFO
+                // allocator discipline.
                 unsafe { *(op.ptr() as *mut f32) = v };
             }
             DType::F64 => {
                 let total = run_map_sum_t::<f64>(&tape, &srcs, n);
                 let v = finish(total, finish_arg);
+                // SAFETY: as in the F32 arm.
                 unsafe { *(op.ptr() as *mut f64) = v };
             }
             DType::I64 => unreachable!("fused tapes are float-only"),
@@ -913,6 +990,9 @@ fn adam_step_t<T: FloatElement>(
 ) {
     let one_m_b1 = T::ONE - b1;
     let one_m_b2 = T::ONE - b2;
+    // SAFETY: all four buffers are n-element, same-dtype parameter state
+    // held alive by the caller; chunks touch disjoint index ranges [s, e)
+    // and parallel_for blocks until every chunk completes.
     parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
         let p = pp.ptr() as *mut T;
         let g = gp.ptr() as *const T;
@@ -994,6 +1074,9 @@ fn sgd_step_t<T: FloatElement>(
     momentum: T,
     wd: T,
 ) {
+    // SAFETY: param/grad (and optional momentum) buffers are n-element
+    // state held alive by the caller; chunks touch disjoint index ranges
+    // [s, e) and parallel_for blocks until every chunk completes.
     parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
         let p = pp.ptr() as *mut T;
         let g = gp.ptr() as *const T;

@@ -23,6 +23,12 @@ fn k_embedding(ctx: &OpCtx) -> Tensor {
     let out = Tensor::empty(&out_shape, DType::F32, weight.device());
     {
         let (wp, ip, op) = (w.data_ptr(), idx.data_ptr(), out.data_ptr());
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(weight.device(), "embedding", move || unsafe {
             let wv = wp.as_slice::<f32>(0, v * d);
             let iv = ip.as_slice::<i64>(0, n);

@@ -35,6 +35,12 @@ fn inplace_binary_t<T: Element>(name: &'static str, dst: &Tensor, src: &Tensor, 
     let src = src.contiguous();
     let n = dst.numel();
     let (dp, sp) = (dst.data_ptr(), src.data_ptr());
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dev, name, move || unsafe {
         let d = dp.as_mut_slice::<T>(0, n);
         let s = sp.as_slice::<T>(0, n);
@@ -50,6 +56,12 @@ fn inplace_scalar_t<T: Element>(name: &'static str, dst: &Tensor, s: T, f: fn(T,
     torsk_assert!(dst.is_contiguous(), "{name}: destination must be contiguous");
     let n = dst.numel();
     let dp = dst.data_ptr();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dst.device(), name, move || unsafe {
         let d = dp.as_mut_slice::<T>(0, n);
         for x in d.iter_mut() {
@@ -112,6 +124,12 @@ fn k_axpy_(ctx: &OpCtx) -> Tensor {
     let n = dst.numel();
     let (dp, sp) = (dst.data_ptr(), src_c.data_ptr());
     match dst.dtype() {
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         DType::F32 => device::dispatch(dev, "axpy_", move || unsafe {
             let d = dp.as_mut_slice::<f32>(0, n);
             let s = sp.as_slice::<f32>(0, n);
@@ -121,6 +139,12 @@ fn k_axpy_(ctx: &OpCtx) -> Tensor {
         }),
         DType::F64 => {
             let alpha = alpha as f64;
+            // SAFETY: pointer/length pairs come from shape-checked live tensors
+            // captured at enqueue time. On CPU this closure runs inline while the
+            // caller's handles are alive; on a stream, the one-pool-per-stream
+            // FIFO allocator guarantees freed storage is only reused by kernels
+            // enqueued later on the same stream, so the bytes stay valid (and
+            // writes exclusive) until this kernel completes.
             device::dispatch(dev, "axpy_", move || unsafe {
                 let d = dp.as_mut_slice::<f64>(0, n);
                 let s = sp.as_slice::<f64>(0, n);

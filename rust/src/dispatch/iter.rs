@@ -106,6 +106,9 @@ impl TensorIter {
                 let o = op.ptr() as usize;
                 let aliased = o == ap.ptr() as usize || o == bp.ptr() as usize;
                 if aliased {
+                    // SAFETY: raw reads/writes only (no overlapping
+                    // references); index-aligned in-place traversal, and
+                    // chunks cover disjoint ranges [s, e).
                     parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
                         let (pa, pb) = (ap.ptr() as *const T, bp.ptr() as *const T);
                         let po = op.ptr() as *mut O;
@@ -115,6 +118,9 @@ impl TensorIter {
                         }
                     });
                 } else {
+                    // SAFETY: the dispatcher sized all three buffers to n
+                    // elements and the aliased case was excluded above, so
+                    // the shared input slices never overlap the output.
                     unsafe {
                         let av = ap.as_slice::<T>(0, n);
                         let bv = bp.as_slice::<T>(0, n);
@@ -135,6 +141,10 @@ impl TensorIter {
                 // Each outer step covers `inner` output elements; keep
                 // ~SERIAL_GRAIN elements per task.
                 let grain = (SERIAL_GRAIN / inner.max(1)).max(1);
+                // SAFETY: Suffix plans never alias (broadcast shapes rule
+                // out output stealing); chunks write disjoint outer slabs
+                // [o0*inner, o1*inner), and StridedIter offsets stay
+                // inside the validated input extents.
                 parallel_for(outer, grain, |o0, o1| unsafe {
                     let ov = op.as_mut_slice::<O>(o0 * inner, (o1 - o0) * inner);
                     let ia = StridedIter::starting_at(outer_shape, outer_sa, o0, o1 - o0);
@@ -174,6 +184,10 @@ impl TensorIter {
                 });
             }
             BinMode::Strided { sa, sb } => {
+                // SAFETY: Strided plans never alias (non-contiguous
+                // inputs rule out output stealing); chunks write disjoint
+                // ranges [s, e), and StridedIter offsets stay inside the
+                // validated input extents.
                 parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
                     let ov = op.as_mut_slice::<O>(s, e - s);
                     let ia = StridedIter::starting_at(&self.out_shape, sa, s, e - s);
@@ -204,6 +218,8 @@ where
     }
     if ap.ptr() as usize == op.ptr() as usize {
         // In-place (stolen output storage, same dtype): raw pointers only.
+        // SAFETY: no references over the aliased buffer, each index read
+        // before written, chunks cover disjoint ranges [s, e).
         parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
             let pa = ap.ptr() as *const T;
             let po = op.ptr() as *mut O;
@@ -214,6 +230,9 @@ where
         });
         return;
     }
+    // SAFETY: per this function's contract the input holds n valid Ts and
+    // the output is an exclusive n-element buffer; the in-place case
+    // returned above, so input and output never overlap.
     unsafe {
         let av = ap.as_slice::<T>(0, n);
         parallel_for(n, SERIAL_GRAIN, |s, e| {
@@ -260,6 +279,9 @@ pub(crate) fn run_reduce<T, A, F, G>(
         return;
     }
     let grain = (SERIAL_GRAIN / inner.max(1)).max(1);
+    // SAFETY: input holds outer*inner elements, output holds outer;
+    // reductions never steal their input, and chunks write disjoint
+    // output ranges [o0, o1).
     parallel_for(outer, grain, |o0, o1| unsafe {
         let ov = op.as_mut_slice::<T>(o0, o1 - o0);
         for (k, o) in ov.iter_mut().enumerate() {
@@ -289,6 +311,7 @@ where
     }
     let nchunks = n.div_ceil(REDUCE_CHUNK);
     if nchunks == 1 {
+        // SAFETY: read-only view of the n elements the caller validated.
         let av = unsafe { ap.as_slice::<T>(0, n) };
         let mut acc = init;
         for &v in av {
@@ -298,6 +321,8 @@ where
     }
     let mut partials: Vec<A> = vec![init; nchunks];
     let pp = SendPtr::new(partials.as_mut_ptr() as *mut u8);
+    // SAFETY: `partials` outlives the blocking parallel_for; each chunk c
+    // reads its own input window and writes only partials[c].
     parallel_for(nchunks, 1, |c0, c1| unsafe {
         for c in c0..c1 {
             let s = c * REDUCE_CHUNK;

@@ -110,6 +110,12 @@ pub(crate) fn matmul_raw(a: &Tensor, b: &Tensor) -> Tensor {
     let (ap, ars, acs, aspan) = gemm_operand2(a);
     let (bp, brs, bcs, bspan) = gemm_operand2(b);
     let op = out.data_ptr();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dev, "matmul", move || unsafe {
         match dtype {
             DType::F32 => sgemm_strided(
@@ -163,6 +169,12 @@ fn bmm_raw(a: &Tensor, b: &Tensor) -> Tensor {
     let (ap, abs_, ars, acs, aspan) = gemm_operand3(a);
     let (bp, bbs, brs, bcs, bspan) = gemm_operand3(b);
     let op = out.data_ptr();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dev, "bmm", move || unsafe {
         match dtype {
             DType::F32 => sgemm_batched_strided(
@@ -272,6 +284,8 @@ fn packed_weight(w: &Tensor) -> Arc<Vec<f32>> {
     // column stride and vice versa — packed straight from W's layout.
     let st = w.strides();
     let wspan = span(w.shape(), st);
+    // SAFETY: read-only view over the weight's full strided span; `w` is
+    // a live handle for the duration of the pack.
     let data = unsafe { w.data_ptr().as_slice::<f32>(0, wspan) };
     let packed = Arc::new(pack_b_strided_f32(in_f, out_f, data, st[1], st[0]));
     let mut cache = PACKED_WEIGHTS.lock().unwrap();
@@ -395,6 +409,12 @@ fn k_linear(ctx: &OpCtx) -> Tensor {
         // must not race queued stream kernels).
         DType::F32 if dev == Device::Cpu && k_in > 0 && n_out > 0 => {
             let packed = packed_weight(w);
+            // SAFETY: pointer/length pairs come from shape-checked live tensors
+            // captured at enqueue time. On CPU this closure runs inline while the
+            // caller's handles are alive; on a stream, the one-pool-per-stream
+            // FIFO allocator guarantees freed storage is only reused by kernels
+            // enqueued later on the same stream, so the bytes stay valid (and
+            // writes exclusive) until this kernel completes.
             device::dispatch(dev, "linear", move || unsafe {
                 let ov = op.as_mut_slice::<f32>(0, m * n_out);
                 let beta = fill_bias_f32(ov, m, n_out, bias_info);
@@ -414,6 +434,12 @@ fn k_linear(ctx: &OpCtx) -> Tensor {
         }
         DType::F32 => {
             let (wp, ws0, ws1, wspan) = gemm_operand2(w);
+            // SAFETY: pointer/length pairs come from shape-checked live tensors
+            // captured at enqueue time. On CPU this closure runs inline while the
+            // caller's handles are alive; on a stream, the one-pool-per-stream
+            // FIFO allocator guarantees freed storage is only reused by kernels
+            // enqueued later on the same stream, so the bytes stay valid (and
+            // writes exclusive) until this kernel completes.
             device::dispatch(dev, "linear", move || unsafe {
                 let ov = op.as_mut_slice::<f32>(0, m * n_out);
                 let beta = fill_bias_f32(ov, m, n_out, bias_info);
@@ -436,6 +462,12 @@ fn k_linear(ctx: &OpCtx) -> Tensor {
         }
         DType::F64 => {
             let (wp, ws0, ws1, wspan) = gemm_operand2(w);
+            // SAFETY: pointer/length pairs come from shape-checked live tensors
+            // captured at enqueue time. On CPU this closure runs inline while the
+            // caller's handles are alive; on a stream, the one-pool-per-stream
+            // FIFO allocator guarantees freed storage is only reused by kernels
+            // enqueued later on the same stream, so the bytes stay valid (and
+            // writes exclusive) until this kernel completes.
             device::dispatch(dev, "linear", move || unsafe {
                 let ov = op.as_mut_slice::<f64>(0, m * n_out);
                 let beta = fill_bias_f64(ov, m, n_out, bias_info);
@@ -475,7 +507,8 @@ unsafe fn fill_bias_f32(
         Some((bp, bs)) => {
             for i in 0..m {
                 for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
-                    *v = *bp.as_f32().add(j * bs);
+                    // SAFETY: j*bs < n*stride per this fn's contract.
+                    *v = unsafe { *bp.as_f32().add(j * bs) };
                 }
             }
             1.0
@@ -495,7 +528,8 @@ unsafe fn fill_bias_f64(
         Some((bp, bs)) => {
             for i in 0..m {
                 for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
-                    *v = *(bp.ptr() as *const f64).add(j * bs);
+                    // SAFETY: j*bs < n*stride per this fn's contract.
+                    *v = unsafe { *(bp.ptr() as *const f64).add(j * bs) };
                 }
             }
             1.0

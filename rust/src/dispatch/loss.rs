@@ -27,6 +27,12 @@ fn k_softmax(ctx: &OpCtx) -> Tensor {
     let out = Tensor::empty(x.shape(), DType::F32, x.device());
     let (xp, op) = (x.data_ptr(), out.data_ptr());
     let n = x.numel();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(x.device(), "softmax", move || unsafe {
         softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
     });
@@ -54,6 +60,12 @@ fn k_log_softmax(ctx: &OpCtx) -> Tensor {
     let out = Tensor::empty(x.shape(), DType::F32, x.device());
     let (xp, op) = (x.data_ptr(), out.data_ptr());
     let n = x.numel();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(x.device(), "log_softmax", move || unsafe {
         log_softmax_rows(rows, cols, xp.as_slice::<f32>(0, n), op.as_mut_slice::<f32>(0, n));
     });

@@ -725,6 +725,11 @@ fn call_with(def: OpDef, name: &str, inputs: &[&Tensor], params: &[Param]) -> Te
     let ctx = OpCtx::new(inputs, params, device);
     let out = kernel(&ctx);
 
+    // Sanitizer: output-aliases-input only in the declared patterns
+    // (in-place handle return, or reuse_output in the Fast-plan shape).
+    #[cfg(feature = "debug-checks")]
+    crate::debug_checks::verify_output_aliasing(def.reuse_output, name, inputs, &out);
+
     // The Autograd wrapping key: uniform graph recording.
     if let Some(bw) = def.backward {
         if autograd::should_record(inputs) {

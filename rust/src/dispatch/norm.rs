@@ -65,6 +65,12 @@ fn k_batch_norm_train(ctx: &OpCtx) -> Tensor {
         let (xp, gp, bp, op) = (x.data_ptr(), gamma_c.data_ptr(), beta_c.data_ptr(), out.data_ptr());
         let (mp, ip) = (mean_t.data_ptr(), inv_std_t.data_ptr());
         let len = x.numel();
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(dev, "batch_norm", move || unsafe {
             let xv = xp.as_slice::<f32>(0, len);
             let mean = mp.as_mut_slice::<f32>(0, c);

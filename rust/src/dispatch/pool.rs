@@ -34,6 +34,12 @@ fn k_maxpool2d(ctx: &OpCtx) -> Tensor {
     {
         let (ip, op, xp) = (input_c.data_ptr(), out.data_ptr(), indices.data_ptr());
         let (in_len, out_len) = (input_c.numel(), out.numel());
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(dev, "maxpool2d", move || unsafe {
             maxpool2d_forward(
                 &args,
@@ -69,6 +75,12 @@ fn k_avgpool2d(ctx: &OpCtx) -> Tensor {
     let out = Tensor::empty(&[args.batch, args.channels, args.h_out(), args.w_out()], DType::F32, dev);
     let (ip, op) = (input_c.data_ptr(), out.data_ptr());
     let (in_len, out_len) = (input_c.numel(), out.numel());
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(dev, "avgpool2d", move || unsafe {
         avgpool2d_forward(&args, ip.as_slice::<f32>(0, in_len), op.as_mut_slice::<f32>(0, out_len));
     });

@@ -75,6 +75,8 @@ where
                 |acc, v| acc + v,
                 |x, y| x + y,
             );
+            // SAFETY: `out` is a freshly allocated one-element tensor
+            // whose storage stays alive per the stream FIFO discipline.
             unsafe {
                 op.as_mut_slice::<T>(0, 1)[0] = total;
             }
@@ -124,6 +126,9 @@ where
             let outer_so = ostrides[..r].to_vec();
             let grain_cols = (crate::kernels::SERIAL_GRAIN / outer.max(1)).max(1);
             device::dispatch(a.device(), "sum_to", move || {
+                // SAFETY: tasks own disjoint suffix (column) ranges
+                // [i0, i1) of the output; input reads are bounded by n and
+                // the odometer offsets stay inside the output extent.
                 crate::kernels::parallel_for(inner, grain_cols, |i0, i1| unsafe {
                     let av = ap.as_slice::<T>(0, n);
                     let io = StridedIter::new(&outer_shape, &outer_so);
@@ -143,6 +148,12 @@ where
         // rare; serial suffix walk.
         let outer_shape = src_shape[..r].to_vec();
         let outer_so = ostrides[..r].to_vec();
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(a.device(), "sum_to", move || unsafe {
             let av = ap.as_slice::<T>(0, n);
             let ov = op.as_mut_slice::<T>(0, on);
@@ -157,6 +168,12 @@ where
         });
         return out;
     }
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     device::dispatch(a.device(), "sum_to", move || unsafe {
         let av = ap.as_slice::<T>(0, n);
         let ov = op.as_mut_slice::<T>(0, on);

@@ -18,6 +18,12 @@ fn copy_into_view_t<T: Element>(view: &Tensor, src: &Tensor) {
     let strides = view.strides().to_vec();
     // Keep host sources alive until the (possibly queued) copy runs.
     let keep = src.detach();
+    // SAFETY: pointer/length pairs come from shape-checked live tensors
+    // captured at enqueue time. On CPU this closure runs inline while the
+    // caller's handles are alive; on a stream, the one-pool-per-stream
+    // FIFO allocator guarantees freed storage is only reused by kernels
+    // enqueued later on the same stream, so the bytes stay valid (and
+    // writes exclusive) until this kernel completes.
     crate::device::dispatch(view.device(), "copy_into_view", move || unsafe {
         let sv = sp.as_slice::<T>(0, n);
         let base = vp.ptr() as *mut T;

@@ -146,6 +146,10 @@ pub fn conv2d_forward(args: &Conv2dArgs, input: &[f32], weight: &[f32], bias: Op
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
     parallel_for(args.batch, 1, move |n0, n1| {
+        // SAFETY: `out_addr/out_len` come from the caller's live `&mut out`
+        // borrow, which outlives this closure because parallel_for blocks
+        // until every chunk completes; chunks write disjoint image ranges
+        // [n0*out_img, n1*out_img).
         let out_all = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         let mut col = vec![0.0f32; col_rows * cols];
         for n in n0..n1 {
@@ -190,6 +194,9 @@ pub fn conv2d_backward_input(args: &Conv2dArgs, grad_out: &[f32], weight: &[f32]
     // No materialized weight transpose: the packed GEMM consumes
     // `weightᵀ` directly via the `Trans::T` flag.
     parallel_for(args.batch, 1, move |n0, n1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint image ranges [n0*in_img, n1*in_img).
         let gi_all = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         let mut col = vec![0.0f32; col_rows * cols];
         for n in n0..n1 {

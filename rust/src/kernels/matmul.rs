@@ -134,7 +134,8 @@ impl MatRef {
     /// allocation for the lifetime of the call.
     #[inline(always)]
     unsafe fn at<T: Copy>(&self, i: usize, j: usize) -> T {
-        *(self.addr as *const T).add(i * self.rs + j * self.cs)
+        // SAFETY: in-bounds per this fn's contract.
+        unsafe { *(self.addr as *const T).add(i * self.rs + j * self.cs) }
     }
 }
 
@@ -201,6 +202,8 @@ fn pack_a<T: GemmScalar, const MR: usize>(
         for p in 0..kc {
             let off = base + p * MR;
             for (r, d) in dst[off..off + rows].iter_mut().enumerate() {
+                // SAFETY: the driver clamps the block to mc <= m - i0 and
+                // kc <= k - p0, so the row/col indices stay inside A.
                 *d = unsafe { a.at(i0 + ip * MR + r, p0 + p) };
             }
             for d in dst[off + rows..off + MR].iter_mut() {
@@ -227,6 +230,8 @@ fn pack_b<T: GemmScalar, const NR: usize>(
         for p in 0..kc {
             let off = base + p * NR;
             for (c, d) in dst[off..off + cols].iter_mut().enumerate() {
+                // SAFETY: the driver clamps the block to kc <= k - p0 and
+                // nc <= n - j0, so the row/col indices stay inside B.
                 *d = unsafe { b.at(p0 + p, j0 + jp * NR + c) };
             }
             for d in dst[off + cols..off + NR].iter_mut() {
@@ -412,6 +417,10 @@ fn gemm_driver<T: GemmScalar, const MR: usize, const NR: usize>(
                     BSrc::Strided(_) => &b_pack[jr * kc * NR..(jr + 1) * kc * NR],
                     // Full-layout lookup: block at p0 * n_padded, global
                     // panel index j0/NR + jr, each panel kc*NR long.
+                    // SAFETY: pack_b_full laid out k_padded * n_padded
+                    // elements at `addr`; the caller keeps that buffer
+                    // alive for the whole GEMM, and the panel offset is
+                    // within it by the layout equation above.
                     BSrc::Packed { addr } => unsafe {
                         std::slice::from_raw_parts(
                             (addr as *const T).add(p0 * n_padded + (j0 / NR + jr) * kc * NR),

@@ -178,6 +178,17 @@ where
     let chunks = workers.min(n.div_ceil(grain)).max(1);
     let chunk = n.div_ceil(chunks);
 
+    // Sanitizer: every split must partition 0..n into disjoint ranges —
+    // the invariant all raw-pointer parallel writes rely on.
+    #[cfg(feature = "debug-checks")]
+    {
+        let ranges: Vec<(usize, usize)> = (0..chunks)
+            .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
+            .filter(|&(s, e)| s < e)
+            .collect();
+        crate::debug_checks::verify_disjoint_cover(n, &ranges);
+    }
+
     // Run chunk 0 on the caller; the rest on the pool.
     let done = Arc::new((Mutex::new(0usize), Condvar::new()));
     let nspawned = chunks - 1;

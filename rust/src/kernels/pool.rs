@@ -38,6 +38,10 @@ pub fn maxpool2d_forward(args: &Pool2dArgs, input: &[f32], out: &mut [f32], indi
     let idx_addr = indices.as_mut_ptr() as usize;
     let (out_len, idx_len) = (out.len(), indices.len());
     parallel_for(planes, 4, move |p0, p1| {
+        // SAFETY: both addresses come from the caller's live `&mut out` /
+        // `&mut indices` borrows (parallel_for blocks until all chunks
+        // finish); chunks write disjoint plane ranges [p0*out_plane,
+        // p1*out_plane).
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         let indices = unsafe { std::slice::from_raw_parts_mut(idx_addr as *mut i64, idx_len) };
         for p in p0..p1 {
@@ -81,6 +85,10 @@ pub fn maxpool2d_backward(args: &Pool2dArgs, grad_out: &[f32], indices: &[i64], 
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
     parallel_for(planes, 4, move |p0, p1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // the scatter stays inside plane `p`, and chunks own disjoint
+        // plane ranges [p0, p1).
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for p in p0..p1 {
             let gi = &mut grad_in[p * in_plane..(p + 1) * in_plane];
@@ -105,6 +113,9 @@ pub fn avgpool2d_forward(args: &Pool2dArgs, input: &[f32], out: &mut [f32]) {
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
     parallel_for(planes, 4, move |p0, p1| {
+        // SAFETY: `out_addr/out_len` come from the caller's live `&mut
+        // out` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint plane ranges [p0*out_plane, p1*out_plane).
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         for p in p0..p1 {
             let img = &input[p * in_plane..(p + 1) * in_plane];
@@ -142,6 +153,9 @@ pub fn avgpool2d_backward(args: &Pool2dArgs, grad_out: &[f32], grad_in: &mut [f3
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
     parallel_for(planes, 4, move |p0, p1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint plane ranges [p0*in_plane, p1*in_plane).
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for p in p0..p1 {
             let gi = &mut grad_in[p * in_plane..(p + 1) * in_plane];

@@ -18,6 +18,9 @@ pub fn softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]) {
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
     parallel_for(rows, row_grain(cols), move |r0, r1| {
+        // SAFETY: `out_addr/out_len` come from the caller's live `&mut
+        // out` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint row ranges [r0*cols, r1*cols).
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         for r in r0..r1 {
             let x = &input[r * cols..(r + 1) * cols];
@@ -43,6 +46,9 @@ pub fn softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: &[f3
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
     parallel_for(rows, row_grain(cols), move |r0, r1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint row ranges [r0*cols, r1*cols).
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let yr = &y[r * cols..(r + 1) * cols];
@@ -61,6 +67,9 @@ pub fn log_softmax_rows(rows: usize, cols: usize, input: &[f32], out: &mut [f32]
     let out_addr = out.as_mut_ptr() as usize;
     let out_len = out.len();
     parallel_for(rows, row_grain(cols), move |r0, r1| {
+        // SAFETY: `out_addr/out_len` come from the caller's live `&mut
+        // out` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint row ranges [r0*cols, r1*cols).
         let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
         for r in r0..r1 {
             let x = &input[r * cols..(r + 1) * cols];
@@ -84,6 +93,9 @@ pub fn log_softmax_backward_rows(rows: usize, cols: usize, y: &[f32], grad_out: 
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
     parallel_for(rows, row_grain(cols), move |r0, r1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint row ranges [r0*cols, r1*cols).
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let yr = &y[r * cols..(r + 1) * cols];
@@ -151,6 +163,9 @@ pub fn cross_entropy_backward(
     let gi_addr = grad_in.as_mut_ptr() as usize;
     let gi_len = grad_in.len();
     parallel_for(rows, row_grain(cols), move |r0, r1| {
+        // SAFETY: `gi_addr/gi_len` come from the caller's live `&mut
+        // grad_in` borrow (parallel_for blocks until all chunks finish);
+        // chunks write disjoint row ranges [r0*cols, r1*cols).
         let grad_in = unsafe { std::slice::from_raw_parts_mut(gi_addr as *mut f32, gi_len) };
         for r in r0..r1 {
             let lp = &log_probs[r * cols..(r + 1) * cols];

@@ -51,8 +51,14 @@
 //! assert_eq!(w.grad().unwrap().shape(), &[3, 4]);
 //! ```
 
+// Every unsafe operation inside an unsafe fn must be wrapped in its own
+// `unsafe {}` block with a SAFETY justification (enforced by pallas-audit).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod adoption;
 pub mod alloc;
+#[cfg(feature = "debug-checks")]
+pub mod debug_checks;
 pub mod autograd;
 pub mod cli;
 pub mod ctx;

@@ -62,7 +62,12 @@ pub struct SharedRegion {
     owner: bool,
 }
 
+// SAFETY: the mapping is plain shared memory valid for the region's
+// lifetime; cross-process readers synchronize through the barrier
+// protocol, not through &self, so moving the handle across threads is fine.
 unsafe impl Send for SharedRegion {}
+// SAFETY: see Send above — &self only exposes the raw mapping, and all
+// concurrent access is mediated by the barrier/reduce protocol.
 unsafe impl Sync for SharedRegion {}
 
 impl SharedRegion {
@@ -98,6 +103,8 @@ impl SharedRegion {
     /// Map an existing shared region.
     pub fn open(path: &Path) -> Result<SharedRegion> {
         let cpath = std::ffi::CString::new(path.as_os_str().to_str().unwrap()).unwrap();
+        // SAFETY: standard open/fstat/mmap sequence; every libc return
+        // value is checked before use.
         unsafe {
             let fd = libc::open(cpath.as_ptr(), libc::O_RDWR, 0);
             if fd < 0 {
@@ -336,6 +343,8 @@ pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
                 Ok(()) => 0,
                 Err(_) => 101,
             };
+            // SAFETY: _exit never returns; skipping atexit/Drop is the
+            // point — the forked child must not unwind into parent state.
             unsafe { libc::_exit(code) };
         }
         pids.push(pid);
@@ -343,6 +352,8 @@ pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
     let mut failures = 0;
     for pid in pids {
         let mut status = 0;
+        // SAFETY: plain waitpid on a pid we forked; `status` is a valid
+        // out-pointer for the duration of the call.
         unsafe { libc::waitpid(pid, &mut status, 0) };
         if !libc::WIFEXITED(status) || libc::WEXITSTATUS(status) != 0 {
             failures += 1;

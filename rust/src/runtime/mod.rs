@@ -177,6 +177,8 @@ impl CompiledGraph {
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let t = t.to_cpu().contiguous();
     let bytes = t.numel() * t.dtype().size();
+    // SAFETY: `t` is contiguous (forced above) and alive for this call, so
+    // its storage holds exactly `numel * dtype.size()` initialized bytes.
     let data: &[u8] = unsafe { std::slice::from_raw_parts(t.data_ptr().ptr(), bytes) };
     let ty = match t.dtype() {
         DType::F32 => xla::ElementType::F32,
@@ -213,7 +215,10 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, Arc<CompiledGraph>>>,
 }
 
+// SAFETY: the PJRT client is thread-safe per the XLA FFI contract, and
+// all mutable state (manifest, compile cache) sits behind Mutexes.
 unsafe impl Send for Runtime {}
+// SAFETY: see Send above — shared access goes through the same Mutexes.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

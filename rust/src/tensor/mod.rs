@@ -204,6 +204,12 @@ impl Tensor {
     fn fill_bytes_zero(&self) {
         let ptr = SendPtr::new(unsafe { (self.inner.storage.ptr()).add(self.inner.offset * self.inner.dtype.size()) });
         let nbytes = self.numel() * self.inner.dtype.size();
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(self.device(), "zero_fill", move || unsafe {
             std::ptr::write_bytes(ptr.ptr(), 0, nbytes);
         });
@@ -374,6 +380,8 @@ impl Tensor {
         if self.device().is_async() {
             device::synchronize();
         }
+        // SAFETY: contiguity was asserted, so offset..offset+numel is in
+        // bounds; the device sync above ordered any pending writes.
         let s: &[T] = unsafe { self.inner.storage.slice(self.inner.offset, self.numel()) };
         f(s)
     }
@@ -541,6 +549,9 @@ impl Tensor {
         let st = self.inner.strides.clone();
         let n = self.numel();
         let dtype = self.inner.dtype;
+        // SAFETY: in all three arms `dst` is the fresh n-element output,
+        // `src` offsets walk the validated strided extent of `self`; both
+        // storages stay alive per the stream FIFO discipline.
         device::dispatch(self.device(), "contiguous", move || match dtype {
             DType::F32 => unsafe {
                 let d = dst.as_mut_slice::<f32>(0, n);
@@ -548,12 +559,14 @@ impl Tensor {
                     d[i] = *src.as_f32().add(off);
                 }
             },
+            // SAFETY: see the F32 arm.
             DType::F64 => unsafe {
                 let d = dst.as_mut_slice::<f64>(0, n);
                 for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
                     d[i] = *(src.ptr() as *const f64).add(off);
                 }
             },
+            // SAFETY: see the F32 arm.
             DType::I64 => unsafe {
                 let d = dst.as_mut_slice::<i64>(0, n);
                 for (i, off) in shape::StridedIter::new(&sh, &st).enumerate() {
@@ -592,6 +605,12 @@ impl Tensor {
         // the cross-device hazard the paper says utilities must handle by
         // "carefully inserting additional synchronization".
         let keep_src = src.detach();
+        // SAFETY: pointer/length pairs come from shape-checked live tensors
+        // captured at enqueue time. On CPU this closure runs inline while the
+        // caller's handles are alive; on a stream, the one-pool-per-stream
+        // FIFO allocator guarantees freed storage is only reused by kernels
+        // enqueued later on the same stream, so the bytes stay valid (and
+        // writes exclusive) until this kernel completes.
         device::dispatch(device, "memcpy", move || unsafe {
             std::ptr::copy_nonoverlapping(s.ptr(), d.ptr(), nbytes);
             drop(keep_src);

@@ -56,6 +56,10 @@ fn take_donated(nbytes: usize, device: Device, stream: StreamId) -> Option<Stora
         let mut slot = d.borrow_mut();
         match &*slot {
             Some(s) if s.nbytes() == nbytes && s.device() == device && s.stream() == stream => {
+                // Sanitizer: the buffer the output is about to steal must
+                // be dead (slot clone + moved-in input handle only).
+                #[cfg(feature = "debug-checks")]
+                crate::debug_checks::verify_donation_dead(s);
                 slot.take()
             }
             _ => None,
@@ -200,16 +204,21 @@ impl Storage {
     #[inline]
     pub unsafe fn slice<T: Element>(&self, offset: usize, len: usize) -> &[T] {
         debug_assert!((offset + len) * std::mem::size_of::<T>() <= self.inner.block.size);
-        std::slice::from_raw_parts((self.ptr() as *const T).add(offset), len)
+        // SAFETY: in-bounds and race-free per this fn's contract.
+        unsafe { std::slice::from_raw_parts((self.ptr() as *const T).add(offset), len) }
     }
 
-    /// Mutable typed view. Same safety contract as [`Storage::slice`] plus
-    /// exclusivity of the mutable range.
+    /// Mutable typed view.
+    ///
+    /// # Safety
+    /// Same contract as [`Storage::slice`], plus exclusivity: no other
+    /// reference (shared or mutable) may overlap the returned range.
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut<T: Element>(&self, offset: usize, len: usize) -> &mut [T] {
         debug_assert!((offset + len) * std::mem::size_of::<T>() <= self.inner.block.size);
-        std::slice::from_raw_parts_mut((self.ptr() as *mut T).add(offset), len)
+        // SAFETY: in-bounds, race-free and exclusive per this fn's contract.
+        unsafe { std::slice::from_raw_parts_mut((self.ptr() as *mut T).add(offset), len) }
     }
 }
 
@@ -259,12 +268,14 @@ impl SendPtr {
     /// # Safety: caller guarantees bounds + no data race (stream FIFO).
     #[inline]
     pub unsafe fn as_slice<T: Element>(&self, offset: usize, len: usize) -> &'static [T] {
-        std::slice::from_raw_parts((self.0 as *const T).add(offset), len)
+        // SAFETY: in-bounds and race-free per this fn's contract.
+        unsafe { std::slice::from_raw_parts((self.0 as *const T).add(offset), len) }
     }
     /// # Safety: as `as_slice`, plus exclusivity of the written range.
     #[inline]
     pub unsafe fn as_mut_slice<T: Element>(&self, offset: usize, len: usize) -> &'static mut [T] {
-        std::slice::from_raw_parts_mut((self.0 as *mut T).add(offset), len)
+        // SAFETY: in-bounds, race-free and exclusive per this fn's contract.
+        unsafe { std::slice::from_raw_parts_mut((self.0 as *mut T).add(offset), len) }
     }
 }
 

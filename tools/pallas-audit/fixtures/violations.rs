@@ -1,0 +1,98 @@
+//! Deliberate invariant violations for pallas-audit's negative tests.
+//!
+//! This file is PARSED by the audit library's integration tests — it is
+//! never compiled, so the unresolved names (`Tensor`, `Registry`, ...)
+//! are fine. Every section below must keep firing its lint; the trailing
+//! "clean" section must keep NOT firing. If you edit this file, update
+//! the expected counts in `tests/lints.rs`.
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+// Hidden materialization in a contractually copy-free path.
+pub fn hidden_copy(t: &Tensor) -> Tensor {
+    t.contiguous()
+}
+
+// Unordered iteration feeding an accumulation: result depends on hash
+// order.
+pub fn unordered_sum(m: &HashMap<String, f32>) -> f32 {
+    let mut total = 0.0;
+    for (_k, v) in m.iter() {
+        total += v;
+    }
+    total
+}
+
+// Timing-dependent control flow in a kernel path.
+pub fn timed_cutoff() -> bool {
+    Instant::now().elapsed().as_nanos() % 2 == 0
+}
+
+// Ad-hoc threads instead of kernels::parallel_for.
+pub fn rogue_threads() {
+    std::thread::spawn(|| {});
+    let _ = std::thread::Builder::new().name("rogue".into()).spawn(|| {});
+}
+
+// An unsafe block with no justification anywhere near it.
+pub fn unjustified_write(p: *mut f32) {
+    unsafe {
+        *p = 1.0;
+    }
+}
+
+// An unsafe fn carrying no doc section and no justifying comment.
+// (Keep this comment free of the S-word marker, or it would satisfy
+// the lint's proximity window by accident.)
+pub unsafe fn undocumented_read(p: *const f32) -> f32 {
+    *p
+}
+
+// Registrations that dodge the OpInfo gradcheck suite.
+pub fn sampleless_registrations(reg: &mut Registry) {
+    reg.add(OpDef::new("fixture:bad", 1, 1, &[]).kernel_all(k_bad));
+    register_op(OpDef::new("fixture:bad2", 1, 1, &[]).kernel_all(k_bad));
+}
+
+// ---------------------------------------------------------------------
+// Clean section: none of the following may be flagged.
+// ---------------------------------------------------------------------
+
+pub fn justified_write(p: *mut f32) {
+    // SAFETY: caller hands an exclusive, in-bounds pointer.
+    unsafe {
+        *p = 2.0;
+    }
+}
+
+/// Reads one element.
+///
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn documented_read(p: *const f32) -> f32 {
+    *p
+}
+
+pub fn sampled_registration(reg: &mut Registry) {
+    reg.add(OpDef::new("fixture:good", 1, 1, &[]).kernel_all(k_good).sample_inputs(s_good));
+    register_op(OpDef::new("fixture:good2", 1, 1, &[]).sample_inputs(s_good));
+}
+
+// A counter `.add(..)` is not a registration; nothing to chain.
+pub fn counter_add(c: &AtomicU64) {
+    c.add(1);
+}
+
+#[cfg(test)]
+mod tests {
+    // Test modules may violate invariants on purpose (should_panic
+    // negatives); the walker must skip this entire block.
+    fn deliberate_negatives(reg: &mut Registry, p: *mut f32) {
+        reg.add(OpDef::new("fixture:test_only", 1, 1, &[]));
+        unsafe {
+            *p = 3.0;
+        }
+    }
+}

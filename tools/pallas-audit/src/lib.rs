@@ -1,0 +1,597 @@
+//! `pallas-audit` — a custom static-analysis pass over `rust/src`.
+//!
+//! The torsk runtime is a hand-built unsafe parallel system: ~100 `unsafe`
+//! sites whose soundness rests on documented invariants (disjoint write
+//! ranges, out-aliases-input only on the Fast plan, determinism-safe
+//! iteration order). This crate machine-checks the *source-level* half of
+//! those invariants; the `debug-checks` feature of the `torsk` crate
+//! checks the runtime half. Five lints:
+//!
+//! | lint | scope | rule |
+//! |------|-------|------|
+//! | `safety-comment`   | all of `rust/src`          | every `unsafe` keyword carries a nearby `// SAFETY:` justification (or a `# Safety` doc section) |
+//! | `no-contiguous`    | `dispatch/linalg.rs`, `kernels/` | no `.contiguous()` calls — the GEMM paths are contractually copy-free (generalizes the old `include_str!` source pin in `tests/gemm_parity.rs`) |
+//! | `no-raw-spawn`     | all but `kernels/mod.rs`, `multiproc/` | no `std::thread::spawn` / `thread::Builder` — parallelism goes through `kernels::parallel_for` or the multiproc layer |
+//! | `determinism`      | `kernels/`, `dispatch/`    | no `HashMap`/`HashSet` (iteration-order hazard), `Instant`/`SystemTime` (timing-dependent control flow), or ad-hoc RNG in kernel/dispatch code paths |
+//! | `opinfo-samples`   | all of `rust/src`          | every inline `Registry::add` / `register_op` call chains `.sample_inputs(..)` so no op dodges the OpInfo gradcheck suite |
+//!
+//! Mechanics: each file is parsed with `syn` (so comments, strings and
+//! doc text can never false-positive); AST-shaped rules run as a
+//! `syn::visit` pass, and keyword/ident rules (`unsafe`, `HashMap`, ...)
+//! run over the parsed token stream, which also reaches into
+//! `macro_rules!` bodies that the typed AST hides. `#[cfg(test)]` modules
+//! are excluded: negative tests *deliberately* violate invariants
+//! (should_panic registrations), and test code is exercised by the
+//! compiler, Miri and TSan instead.
+//!
+//! Intentional exceptions live in per-lint allowlist files
+//! (`tools/pallas-audit/allow/<lint>.allow`, one `path — justification`
+//! line each). The pass emits a machine-readable report
+//! (`torsk.pallas_audit.v1` JSON) and exits non-zero on any violation not
+//! covered by an allowlist entry.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use proc_macro2::{TokenStream, TokenTree};
+use quote::ToTokens;
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// Lint identifiers, in report order.
+pub const LINTS: &[&str] =
+    &["safety-comment", "no-contiguous", "no-raw-spawn", "determinism", "opinfo-samples"];
+
+/// How far (in source lines) a `SAFETY` justification may sit from the
+/// `unsafe` keyword it covers: up to [`SAFETY_WINDOW_ABOVE`] lines above
+/// (comment block, possibly separated by attributes) or
+/// [`SAFETY_WINDOW_BELOW`] lines below (first lines inside the block).
+pub const SAFETY_WINDOW_ABOVE: usize = 6;
+pub const SAFETY_WINDOW_BELOW: usize = 2;
+
+/// One finding: a lint, a location, and what the walker saw there.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub lint: &'static str,
+    /// Path relative to the audited root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub message: String,
+    /// `Some(justification)` when an allowlist entry covers this finding.
+    pub allowed: Option<String>,
+}
+
+// ---------------------------------------------------------------------
+// Lint scoping
+// ---------------------------------------------------------------------
+
+/// Per-file lint scope, derived from the path relative to `rust/src`.
+#[derive(Debug, Clone, Copy)]
+pub struct Scope {
+    pub contiguous: bool,
+    pub spawn: bool,
+    pub determinism: bool,
+}
+
+impl Scope {
+    /// The scope for a source file at `rel` (e.g. `dispatch/linalg.rs`).
+    pub fn for_path(rel: &str) -> Scope {
+        let in_kernels = rel.starts_with("kernels/") || rel == "kernels.rs";
+        let in_dispatch = rel.starts_with("dispatch/") || rel == "dispatch.rs";
+        Scope {
+            // The GEMM paths are contractually copy-free: a `.contiguous()`
+            // there is a silent materialization (the bug class the old
+            // include_str! pin guarded against, now for every kernel file).
+            contiguous: rel == "dispatch/linalg.rs" || in_kernels,
+            // The only sanctioned thread sources are the kernel pool and
+            // the multiproc layer (fork-based, own safety contract).
+            spawn: !(rel == "kernels/mod.rs" || rel.starts_with("multiproc/")),
+            determinism: in_kernels || in_dispatch,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-file audit
+// ---------------------------------------------------------------------
+
+/// Audit one source file. `rel` selects the lint scope (see
+/// [`Scope::for_path`]); parse failures surface as `Err`.
+pub fn audit_source(rel: &str, src: &str) -> Result<Vec<Violation>, String> {
+    let file = syn::parse_file(src).map_err(|e| format!("{rel}: parse error: {e}"))?;
+    let lines: Vec<&str> = src.lines().collect();
+    let scope = Scope::for_path(rel);
+
+    let mut w = Walker {
+        rel,
+        scope,
+        out: Vec::new(),
+        test_ranges: Vec::new(),
+    };
+    w.visit_file(&file);
+
+    // Token-level rules: the `unsafe` keyword and determinism-hazard
+    // idents, found wherever they appear — including `macro_rules!`
+    // bodies, which the typed AST exposes only as raw tokens.
+    let mut token_hits: Vec<(usize, &'static str, String)> = Vec::new();
+    scan_tokens(&file.to_token_stream(), scope, &mut token_hits);
+    for (line, lint, message) in token_hits {
+        if lint == "safety-comment" && has_safety_near(&lines, line) {
+            continue;
+        }
+        w.out.push(Violation { lint, file: rel.to_string(), line, message, allowed: None });
+    }
+
+    // Drop findings inside #[cfg(test)] modules: negative tests violate
+    // the invariants on purpose.
+    let ranges = w.test_ranges;
+    let mut out = w.out;
+    out.retain(|v| !ranges.iter().any(|&(s, e)| v.line >= s && v.line <= e));
+    out.sort_by(|a, b| (a.line, a.lint).cmp(&(b.line, b.lint)));
+    Ok(out)
+}
+
+/// Is there a `SAFETY` justification near source line `line` (1-based)?
+/// Accepts `// SAFETY: ...` comments and `# Safety` doc sections,
+/// case-insensitively, within the configured window. The colon / heading
+/// marker is required: a mere identifier containing "safety" (a function
+/// name, a test name) never satisfies the lint.
+fn has_safety_near(lines: &[&str], line: usize) -> bool {
+    let lo = line.saturating_sub(SAFETY_WINDOW_ABOVE + 1); // 0-based index
+    let hi = (line + SAFETY_WINDOW_BELOW).min(lines.len());
+    lines[lo..hi].iter().any(|l| {
+        let l = l.to_ascii_lowercase();
+        l.contains("safety:") || l.contains("# safety")
+    })
+}
+
+/// Recursively scan a token stream for keyword/ident-level lint hits.
+fn scan_tokens(ts: &TokenStream, scope: Scope, out: &mut Vec<(usize, &'static str, String)>) {
+    for tt in ts.clone() {
+        match tt {
+            TokenTree::Ident(id) => {
+                let line = id.span().start().line;
+                let name = id.to_string();
+                match name.as_str() {
+                    "unsafe" => out.push((
+                        line,
+                        "safety-comment",
+                        "`unsafe` without a nearby `// SAFETY:` justification".to_string(),
+                    )),
+                    "HashMap" | "HashSet" if scope.determinism => out.push((
+                        line,
+                        "determinism",
+                        format!("`{name}` in a kernel/dispatch path (iteration order is unordered)"),
+                    )),
+                    "Instant" | "SystemTime" if scope.determinism => out.push((
+                        line,
+                        "determinism",
+                        format!("`{name}` in a kernel/dispatch path (timing-dependent behavior)"),
+                    )),
+                    "thread_rng" | "ThreadRng" | "RandomState" if scope.determinism => out.push((
+                        line,
+                        "determinism",
+                        format!("ad-hoc RNG `{name}` in a kernel/dispatch path (use crate::rng)"),
+                    )),
+                    _ => {}
+                }
+            }
+            TokenTree::Group(g) => scan_tokens(&g.stream(), scope, out),
+            _ => {}
+        }
+    }
+}
+
+struct Walker<'a> {
+    rel: &'a str,
+    scope: Scope,
+    out: Vec<Violation>,
+    /// (start, end) line ranges of `#[cfg(test)]` modules.
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl Walker<'_> {
+    fn push(&mut self, lint: &'static str, line: usize, message: String) {
+        self.out.push(Violation { lint, file: self.rel.to_string(), line, message, allowed: None });
+    }
+
+    /// Does an argument list that builds an `OpDef` also chain
+    /// `.sample_inputs(..)`? Token containment is enough: registration is
+    /// written inline throughout the codebase, and the runtime assert in
+    /// `Registry::add` backstops anything assembled indirectly.
+    fn check_registration(&mut self, line: usize, what: &str, args_tokens: &str) {
+        if args_tokens.contains("OpDef") && !args_tokens.contains("sample_inputs") {
+            self.push(
+                "opinfo-samples",
+                line,
+                format!("{what} builds an OpDef without chaining .sample_inputs(..)"),
+            );
+        }
+    }
+}
+
+fn path_segments(p: &syn::Path) -> Vec<String> {
+    p.segments.iter().map(|s| s.ident.to_string()).collect()
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg") && a.to_token_stream().to_string().contains("test")
+    })
+}
+
+impl<'ast> Visit<'ast> for Walker<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if is_cfg_test(&node.attrs) {
+            let span = node.span();
+            self.test_ranges.push((span.start().line, span.end().line));
+            return; // nothing inside a test module is audited
+        }
+        visit::visit_item_mod(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        let line = node.method.span().start().line;
+        match method.as_str() {
+            "contiguous" if self.scope.contiguous && node.args.is_empty() => self.push(
+                "no-contiguous",
+                line,
+                ".contiguous() in a contractually copy-free GEMM/kernel path".to_string(),
+            ),
+            "spawn" if self.scope.spawn => {
+                let recv = node.receiver.to_token_stream().to_string();
+                if recv.contains("Builder") || recv.contains("thread") {
+                    self.push(
+                        "no-raw-spawn",
+                        line,
+                        "thread spawned outside kernels::parallel_for / multiproc".to_string(),
+                    );
+                }
+            }
+            "add" => {
+                let args = node.args.to_token_stream().to_string();
+                self.check_registration(line, "Registry::add", &args);
+            }
+            _ => {}
+        }
+        visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if let syn::Expr::Path(p) = &*node.func {
+            let segs = path_segments(&p.path);
+            let line = p.span().start().line;
+            if let Some(last) = segs.last() {
+                if last == "spawn"
+                    && segs.iter().any(|s| s == "thread")
+                    && self.scope.spawn
+                {
+                    self.push(
+                        "no-raw-spawn",
+                        line,
+                        "std::thread::spawn outside kernels::parallel_for / multiproc".to_string(),
+                    );
+                }
+                if last == "register_op" {
+                    let args = node.args.to_token_stream().to_string();
+                    self.check_registration(line, "register_op", &args);
+                }
+            }
+        }
+        visit::visit_expr_call(self, node);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------
+
+/// Recursively collect `.rs` files under `root`, sorted for a
+/// deterministic report order.
+pub fn rust_files(root: &Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Audit every `.rs` file under `root`. Parse failures become hard
+/// errors: an unparseable source tree cannot be certified.
+pub fn audit_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    let files = rust_files(root).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    let mut out = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(audit_source(&rel, &src)?);
+    }
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint)));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Allowlists
+// ---------------------------------------------------------------------
+
+/// One intentional exception: a path (file, or `dir/` prefix) plus its
+/// one-line justification.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub path: String,
+    pub justification: String,
+    pub used: bool,
+}
+
+/// Load `allow/<lint>.allow` files from `dir`. Missing files mean "no
+/// exceptions for that lint". Entry lines are
+/// `path — justification` (an `--` separator works too); `#` comments and
+/// blank lines are skipped.
+pub fn load_allowlists(dir: &Path) -> Result<BTreeMap<&'static str, Vec<AllowEntry>>, String> {
+    let mut map = BTreeMap::new();
+    for &lint in LINTS {
+        let path = dir.join(format!("{}.allow", lint.replace('-', "_")));
+        let mut entries = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for (i, raw) in text.lines().enumerate() {
+                let line = raw.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let (p, j) = match line.split_once("—").or_else(|| line.split_once("--")) {
+                    Some((p, j)) => (p.trim(), j.trim()),
+                    None => {
+                        return Err(format!(
+                            "{}:{}: allowlist entry needs `path — justification`",
+                            path.display(),
+                            i + 1
+                        ))
+                    }
+                };
+                if j.is_empty() {
+                    return Err(format!(
+                        "{}:{}: empty justification for '{p}'",
+                        path.display(),
+                        i + 1
+                    ));
+                }
+                entries.push(AllowEntry {
+                    path: p.to_string(),
+                    justification: j.to_string(),
+                    used: false,
+                });
+            }
+        }
+        map.insert(lint, entries);
+    }
+    Ok(map)
+}
+
+/// Mark violations covered by allowlist entries (exact file match, or a
+/// `dir/` prefix entry). Returns the list of entries that matched
+/// nothing — allowlist rot worth surfacing.
+pub fn apply_allowlists(
+    violations: &mut [Violation],
+    allow: &mut BTreeMap<&'static str, Vec<AllowEntry>>,
+) -> Vec<(String, String)> {
+    for v in violations.iter_mut() {
+        if let Some(entries) = allow.get_mut(v.lint) {
+            for e in entries.iter_mut() {
+                let hit = v.file == e.path
+                    || (e.path.ends_with('/') && v.file.starts_with(e.path.as_str()));
+                if hit {
+                    v.allowed = Some(e.justification.clone());
+                    e.used = true;
+                    break;
+                }
+            }
+        }
+    }
+    let mut unused = Vec::new();
+    for (lint, entries) in allow.iter() {
+        for e in entries.iter().filter(|e| !e.used) {
+            unused.push((lint.to_string(), e.path.clone()));
+        }
+    }
+    unused
+}
+
+// ---------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report (`torsk.pallas_audit.v1`).
+pub fn render_report(
+    root: &str,
+    violations: &[Violation],
+    unused_allow: &[(String, String)],
+) -> String {
+    let mut counts: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for &l in LINTS {
+        counts.insert(l, (0, 0));
+    }
+    for v in violations {
+        let c = counts.entry(v.lint).or_insert((0, 0));
+        if v.allowed.is_some() {
+            c.1 += 1;
+        } else {
+            c.0 += 1;
+        }
+    }
+    let blocking: usize = counts.values().map(|c| c.0).sum();
+
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"torsk.pallas_audit.v1\",\n");
+    s.push_str(&format!("  \"root\": \"{}\",\n", json_escape(root)));
+    s.push_str(&format!("  \"clean\": {},\n", blocking == 0));
+    s.push_str("  \"counts\": {\n");
+    let n = counts.len();
+    for (i, (lint, (bad, allowed))) in counts.iter().enumerate() {
+        s.push_str(&format!(
+            "    \"{}\": {{\"violations\": {}, \"allowed\": {}}}{}\n",
+            lint,
+            bad,
+            allowed,
+            if i + 1 < n { "," } else { "" }
+        ));
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"violations\": [\n");
+    for (i, v) in violations.iter().enumerate() {
+        let allowed = match &v.allowed {
+            Some(j) => format!("\"{}\"", json_escape(j)),
+            None => "null".to_string(),
+        };
+        s.push_str(&format!(
+            "    {{\"lint\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \"allowed\": {}}}{}\n",
+            v.lint,
+            json_escape(&v.file),
+            v.line,
+            json_escape(&v.message),
+            allowed,
+            if i + 1 < violations.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"unused_allowlist_entries\": [\n");
+    for (i, (lint, path)) in unused_allow.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"lint\": \"{}\", \"path\": \"{}\"}}{}\n",
+            json_escape(lint),
+            json_escape(path),
+            if i + 1 < unused_allow.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_selection() {
+        let k = Scope::for_path("kernels/matmul.rs");
+        assert!(k.contiguous && k.determinism && k.spawn);
+        let pool = Scope::for_path("kernels/mod.rs");
+        assert!(!pool.spawn, "the kernel pool is the sanctioned spawner");
+        let mp = Scope::for_path("multiproc/mod.rs");
+        assert!(!mp.spawn && !mp.determinism);
+        let lin = Scope::for_path("dispatch/linalg.rs");
+        assert!(lin.contiguous && lin.determinism);
+        let data = Scope::for_path("data/loader.rs");
+        assert!(data.spawn && !data.contiguous && !data.determinism);
+    }
+
+    #[test]
+    fn safety_comment_windows() {
+        let ok = "fn f() {\n    // SAFETY: exclusive buffer.\n    unsafe { work() };\n}\n";
+        assert!(audit_source("x.rs", ok).unwrap().is_empty());
+        let inside = "fn f() {\n    unsafe {\n        // SAFETY: bounds checked above.\n        work()\n    };\n}\n";
+        assert!(audit_source("x.rs", inside).unwrap().is_empty());
+        let bad = "fn f() {\n    unsafe { work() };\n}\n";
+        let v = audit_source("x.rs", bad).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "safety-comment");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_fn_doc_section_counts() {
+        let src = "/// Reads raw memory.\n///\n/// # Safety\n/// Caller upholds bounds.\npub unsafe fn f() {}\n";
+        assert!(audit_source("x.rs", src).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unsafe_inside_macro_rules_is_seen() {
+        let src = "macro_rules! m {\n    () => {\n        unsafe { work() }\n    };\n}\n";
+        let v = audit_source("x.rs", src).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].lint, "safety-comment");
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        unsafe { work() };\n        let m: HashMap<u8, u8> = Default::default();\n    }\n}\n";
+        assert!(audit_source("kernels/x.rs", src).unwrap().is_empty());
+    }
+
+    #[test]
+    fn allowlist_round_trip() {
+        let mut v = vec![Violation {
+            lint: "determinism",
+            file: "dispatch/mod.rs".to_string(),
+            line: 3,
+            message: "m".to_string(),
+            allowed: None,
+        }];
+        let mut allow: BTreeMap<&'static str, Vec<AllowEntry>> = BTreeMap::new();
+        allow.insert(
+            "determinism",
+            vec![
+                AllowEntry {
+                    path: "dispatch/mod.rs".to_string(),
+                    justification: "keyed lookups only".to_string(),
+                    used: false,
+                },
+                AllowEntry {
+                    path: "dispatch/other.rs".to_string(),
+                    justification: "stale".to_string(),
+                    used: false,
+                },
+            ],
+        );
+        let unused = apply_allowlists(&mut v, &mut allow);
+        assert_eq!(v[0].allowed.as_deref(), Some("keyed lookups only"));
+        assert_eq!(unused, vec![("determinism".to_string(), "dispatch/other.rs".to_string())]);
+    }
+
+    #[test]
+    fn report_is_valid_shape() {
+        let v = vec![Violation {
+            lint: "no-contiguous",
+            file: "kernels/conv.rs".to_string(),
+            line: 7,
+            message: "\"quoted\"".to_string(),
+            allowed: None,
+        }];
+        let r = render_report("rust/src", &v, &[]);
+        assert!(r.contains("\"schema\": \"torsk.pallas_audit.v1\""));
+        assert!(r.contains("\\\"quoted\\\""));
+        assert!(r.contains("\"clean\": false"));
+    }
+}

@@ -1,0 +1,99 @@
+//! `pallas-audit` CLI — run the project lints over `rust/src`.
+//!
+//! ```text
+//! cargo run -p pallas-audit [--release] -- \
+//!     [--src rust/src] [--allow tools/pallas-audit/allow] \
+//!     [--report audit_report.json] [--quiet]
+//! ```
+//!
+//! Exit codes: `0` clean (allowlisted findings included), `2` unallowed
+//! violations, `1` operational error (unreadable tree, parse failure,
+//! malformed allowlist). Unused allowlist entries are surfaced in the
+//! report and on stderr but do not fail the run.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_audit::{apply_allowlists, audit_tree, load_allowlists, render_report};
+
+struct Args {
+    src: PathBuf,
+    allow: PathBuf,
+    report: PathBuf,
+    quiet: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        src: PathBuf::from("rust/src"),
+        allow: PathBuf::from("tools/pallas-audit/allow"),
+        report: PathBuf::from("audit_report.json"),
+        quiet: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut value = |name: &str| it.next().ok_or(format!("{name} needs a value"));
+        match a.as_str() {
+            "--src" => args.src = PathBuf::from(value("--src")?),
+            "--allow" => args.allow = PathBuf::from(value("--allow")?),
+            "--report" => args.report = PathBuf::from(value("--report")?),
+            "--quiet" => args.quiet = true,
+            other => return Err(format!("unknown argument '{other}'")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-audit: {e}");
+            return ExitCode::from(1);
+        }
+    };
+
+    let mut violations = match audit_tree(&args.src) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("pallas-audit: {e}");
+            return ExitCode::from(1);
+        }
+    };
+    let mut allow = match load_allowlists(&args.allow) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-audit: {e}");
+            return ExitCode::from(1);
+        }
+    };
+    let unused = apply_allowlists(&mut violations, &mut allow);
+
+    let report = render_report(&args.src.display().to_string(), &violations, &unused);
+    if let Err(e) = std::fs::write(&args.report, &report) {
+        eprintln!("pallas-audit: writing {}: {e}", args.report.display());
+        return ExitCode::from(1);
+    }
+
+    let blocking: Vec<_> = violations.iter().filter(|v| v.allowed.is_none()).collect();
+    let allowed = violations.len() - blocking.len();
+    if !args.quiet {
+        for v in &blocking {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.lint, v.message);
+        }
+        for (lint, path) in &unused {
+            eprintln!("warning: unused allowlist entry [{lint}] {path}");
+        }
+        eprintln!(
+            "pallas-audit: {} violation(s), {} allowlisted, report at {}",
+            blocking.len(),
+            allowed,
+            args.report.display()
+        );
+    }
+    if blocking.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(2)
+    }
+}

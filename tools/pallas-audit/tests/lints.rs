@@ -1,0 +1,120 @@
+//! Negative-fixture coverage: every lint must stay *live* — able to fire
+//! on a real violation — and every clean idiom must stay quiet. The
+//! fixture is parsed, never compiled; see `fixtures/violations.rs`.
+
+use std::collections::BTreeMap;
+
+use pallas_audit::{
+    apply_allowlists, audit_source, audit_tree, render_report, AllowEntry, Violation,
+};
+
+const FIXTURE: &str = include_str!("../fixtures/violations.rs");
+
+fn count(violations: &[Violation], lint: &str) -> usize {
+    violations.iter().filter(|v| v.lint == lint).count()
+}
+
+#[test]
+fn every_lint_fires_on_the_fixture() {
+    // Scanned as a kernel-path file: all scopes active.
+    let v = audit_source("kernels/fixture.rs", FIXTURE).expect("fixture parses");
+    assert_eq!(count(&v, "no-contiguous"), 1, "{v:#?}");
+    assert_eq!(count(&v, "no-raw-spawn"), 2, "spawn call + Builder chain: {v:#?}");
+    // `use HashMap` + the parameter type, `use Instant` + `Instant::now`.
+    assert_eq!(count(&v, "determinism"), 4, "{v:#?}");
+    // `unjustified_write`'s block + `undocumented_read`'s unsafe fn; the
+    // justified/documented pair and the #[cfg(test)] block stay clean.
+    assert_eq!(count(&v, "safety-comment"), 2, "{v:#?}");
+    // One `reg.add`, one `register_op`, both sample-less; the chained
+    // `.sample_inputs` pair and the bare counter `.add(1)` stay clean.
+    assert_eq!(count(&v, "opinfo-samples"), 2, "{v:#?}");
+}
+
+#[test]
+fn violations_carry_usable_locations() {
+    let v = audit_source("kernels/fixture.rs", FIXTURE).expect("fixture parses");
+    for violation in &v {
+        assert_eq!(violation.file, "kernels/fixture.rs");
+        assert!(violation.line > 0 && violation.line <= FIXTURE.lines().count());
+        assert!(!violation.message.is_empty());
+    }
+    // Spot-check one location: the `.contiguous()` call sits on the line
+    // that contains it in the fixture source.
+    let contig = v.iter().find(|x| x.lint == "no-contiguous").unwrap();
+    let line_text = FIXTURE.lines().nth(contig.line - 1).unwrap();
+    assert!(line_text.contains(".contiguous()"), "line {}: {line_text}", contig.line);
+}
+
+#[test]
+fn scoping_limits_path_lints() {
+    // Outside kernel/dispatch paths: contiguous + determinism lints are
+    // off, spawn + safety + opinfo stay on.
+    let v = audit_source("data/fixture.rs", FIXTURE).expect("fixture parses");
+    assert_eq!(count(&v, "no-contiguous"), 0);
+    assert_eq!(count(&v, "determinism"), 0);
+    assert_eq!(count(&v, "no-raw-spawn"), 2);
+    assert_eq!(count(&v, "safety-comment"), 2);
+    assert_eq!(count(&v, "opinfo-samples"), 2);
+
+    // The multiproc layer may manage its own processes/threads.
+    let v = audit_source("multiproc/fixture.rs", FIXTURE).expect("fixture parses");
+    assert_eq!(count(&v, "no-raw-spawn"), 0);
+}
+
+#[test]
+fn allowlist_suppresses_and_reports_rot() {
+    let mut v = audit_source("kernels/fixture.rs", FIXTURE).expect("fixture parses");
+    let mut allow: BTreeMap<&'static str, Vec<AllowEntry>> = BTreeMap::new();
+    allow.insert(
+        "no-raw-spawn",
+        vec![
+            AllowEntry {
+                path: "kernels/fixture.rs".to_string(),
+                justification: "fixture".to_string(),
+                used: false,
+            },
+            AllowEntry {
+                path: "kernels/gone.rs".to_string(),
+                justification: "stale entry".to_string(),
+                used: false,
+            },
+        ],
+    );
+    let unused = apply_allowlists(&mut v, &mut allow);
+    assert!(v.iter().filter(|x| x.lint == "no-raw-spawn").all(|x| x.allowed.is_some()));
+    assert!(v.iter().filter(|x| x.lint != "no-raw-spawn").all(|x| x.allowed.is_none()));
+    assert_eq!(unused, vec![("no-raw-spawn".to_string(), "kernels/gone.rs".to_string())]);
+}
+
+#[test]
+fn end_to_end_tree_walk_and_report() {
+    // Build a tiny source tree in a temp dir and run the full pipeline.
+    let root = std::env::temp_dir().join(format!("pallas-audit-e2e-{}", std::process::id()));
+    let kernels = root.join("kernels");
+    std::fs::create_dir_all(&kernels).unwrap();
+    std::fs::write(kernels.join("bad.rs"), "pub fn f(t: &Tensor) -> Tensor { t.contiguous() }\n")
+        .unwrap();
+    std::fs::write(
+        root.join("clean.rs"),
+        "pub fn g(p: *mut f32) {\n    // SAFETY: exclusive pointer from the caller.\n    unsafe { *p = 0.0 };\n}\n",
+    )
+    .unwrap();
+
+    let v = audit_tree(&root).expect("tree audits");
+    assert_eq!(v.len(), 1, "{v:#?}");
+    assert_eq!(v[0].lint, "no-contiguous");
+    assert_eq!(v[0].file, "kernels/bad.rs");
+
+    let report = render_report("tmp", &v, &[]);
+    assert!(report.contains("\"schema\": \"torsk.pallas_audit.v1\""));
+    assert!(report.contains("\"clean\": false"));
+    assert!(report.contains("kernels/bad.rs"));
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn unparseable_source_is_a_hard_error() {
+    let err = audit_source("kernels/broken.rs", "fn f( {").unwrap_err();
+    assert!(err.contains("parse error"), "{err}");
+}

@@ -1,0 +1,134 @@
+//! Kill-and-resume training with `torsk::serialize` (ARCHITECTURE.md §7).
+//!
+//! Trains a small regression MLP for 3 epochs, then simulates a crash:
+//! the run is killed mid-epoch-1 right after saving a checkpoint, every
+//! in-memory object is dropped, and a "new process" rebuilds the model,
+//! optimizer, and loader from scratch, restores them from the checkpoint
+//! file, and finishes the run. The resumed parameters are compared
+//! **bitwise** against an uninterrupted reference run — the same pin
+//! `tests/chaos.rs` enforces in CI.
+//!
+//! Run: `cargo run --release --example checkpoint_resume`
+
+use std::sync::Arc;
+
+use torsk::data::{DataLoader, Dataset};
+use torsk::optim::Adam;
+use torsk::prelude::*;
+use torsk::rng::Rng;
+use torsk::serialize::{Checkpoint, LoaderState};
+
+const IN: usize = 8;
+const OUT: usize = 4;
+const N: usize = 128;
+const BATCH: usize = 16;
+const EPOCHS: usize = 3;
+const KILL_AT: (usize, usize) = (1, 4); // crash after batch 4 of epoch 1
+
+/// Deterministic per-index regression pairs: any worker, any order, the
+/// same bytes.
+struct Synth;
+
+impl Dataset for Synth {
+    fn len(&self) -> usize {
+        N
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::for_index(0xC0FFEE, index as u64);
+        let x: Vec<f32> = (0..IN).map(|_| r.normal()).collect();
+        let y: Vec<f32> = (0..OUT).map(|_| r.normal()).collect();
+        (Tensor::from_vec(x, &[IN]), Tensor::from_vec(y, &[OUT]))
+    }
+}
+
+fn build() -> (nn::Sequential, Adam, DataLoader) {
+    let model = nn::Sequential::new()
+        .add(nn::Linear::new(IN, 32))
+        .add(nn::ReLU)
+        .add(nn::Linear::new(32, OUT));
+    let opt = Adam::new(model.parameters(), 1e-2);
+    let loader = DataLoader::new(Arc::new(Synth), BATCH).shuffle(true).seed(17).workers(2);
+    (model, opt, loader)
+}
+
+fn train_step(model: &nn::Sequential, opt: &mut Adam, x: &Tensor, y: &Tensor) -> f32 {
+    opt.zero_grad();
+    let loss = model.forward(x).mse_loss(y);
+    loss.backward();
+    opt.step();
+    loss.to_vec::<f32>()[0]
+}
+
+fn param_bits(model: &nn::Sequential) -> Vec<u32> {
+    model
+        .state_dict()
+        .values()
+        .flat_map(|t| t.to_vec::<f32>().into_iter().map(f32::to_bits))
+        .collect()
+}
+
+fn main() {
+    let ckpt_path =
+        std::env::temp_dir().join(format!("torsk_resume_{}.ckpt", std::process::id()));
+
+    // ---- Reference: 3 uninterrupted epochs. ----
+    torsk::rng::manual_seed(42);
+    let (model, mut opt, loader) = build();
+    let mut last = 0.0;
+    for _ in 0..EPOCHS {
+        for (x, y) in loader.iter() {
+            last = train_step(&model, &mut opt, &x, &y);
+        }
+    }
+    let expected = param_bits(&model);
+    println!("uninterrupted run: final loss {last:.6}");
+
+    // ---- Interrupted run, identical init. ----
+    torsk::rng::manual_seed(42);
+    let (model, mut opt, loader) = build();
+    for (x, y) in loader.iter() {
+        train_step(&model, &mut opt, &x, &y); // epoch 0
+    }
+    {
+        let mut epoch1 = loader.iter();
+        for _ in 0..KILL_AT.1 {
+            let (x, y) = epoch1.next().expect("epoch is longer than the kill point");
+            train_step(&model, &mut opt, &x, &y);
+        }
+        Checkpoint::new(model.state_dict())
+            .with_optimizer(&opt)
+            .with_loader(LoaderState {
+                seed: loader.seed_value(),
+                epoch: KILL_AT.0 as u64,
+                next_batch: KILL_AT.1 as u64,
+            })
+            .save(&ckpt_path)
+            .expect("save checkpoint");
+        println!("checkpoint saved at epoch {} batch {}; crashing now", KILL_AT.0, KILL_AT.1);
+        // The iterator dies here mid-epoch: its workers are shut down and
+        // joined, exactly as a crash + supervisor restart would leave us.
+    }
+    drop((model, opt, loader));
+
+    // ---- "New process": restore everything from the file. ----
+    let ck = Checkpoint::load(&ckpt_path).expect("load checkpoint");
+    torsk::rng::manual_seed(ck.global_seed);
+    let (model, mut opt, loader) = build();
+    model.load_state_dict(&ck.model);
+    opt.load_state_dict(ck.optim.as_ref().expect("checkpoint carries optimizer state"));
+    let ls = ck.loader.expect("checkpoint carries the loader coordinate");
+    assert_eq!(ls.seed, loader.seed_value(), "loader must be rebuilt with the saved seed");
+    loader.resume(ls.epoch as usize, ls.next_batch as usize);
+    for (x, y) in loader.iter() {
+        last = train_step(&model, &mut opt, &x, &y); // rest of epoch 1
+    }
+    for (x, y) in loader.iter() {
+        last = train_step(&model, &mut opt, &x, &y); // epoch 2
+    }
+    println!("resumed run:       final loss {last:.6}");
+
+    assert_eq!(param_bits(&model), expected, "resume must be bitwise identical");
+    std::fs::remove_file(&ckpt_path).ok();
+    println!("resumed parameters are bitwise identical to the uninterrupted run — OK");
+}

@@ -93,7 +93,7 @@ fn main() {
     println!("accuracy before training: {:.1}%", acc0 * 100.0);
 
     let (wp, bp) = (wpath.clone(), bpath.clone());
-    fork_workers(WORKERS, move |rank| {
+    let forked = fork_workers(WORKERS, move |rank| {
         // Each worker maps the same shared parameters...
         let sw = SharedTensor::open(&wp).unwrap();
         let sb = SharedTensor::open(&bp).unwrap();
@@ -120,8 +120,17 @@ fn main() {
                 b.axpy_(-0.1, &b_leaf.grad().unwrap());
             });
         }
-    })
-    .expect("hogwild workers");
+    });
+    // A dead rank means the shared parameters only saw a fraction of the
+    // planned updates — evaluating them anyway would silently bless a
+    // partial run. fork_workers names each failed rank (exit status or
+    // signal); clean up the shared files, then refuse to continue.
+    if let Err(e) = forked {
+        shared_w.unlink();
+        shared_b.unlink();
+        eprintln!("hogwild: aborting, not evaluating a partial run: {e}");
+        std::process::exit(1);
+    }
 
     let w = shared_w.tensor();
     let b = shared_b.tensor();

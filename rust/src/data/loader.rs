@@ -27,13 +27,29 @@
 //! the consumer detects the missing batch and re-panics on the training
 //! thread, so a bad dataset fails identically at any worker count
 //! instead of silently truncating the epoch.
+//!
+//! The drop-time join is **bounded**: a worker wedged inside a buggy
+//! `Dataset::get` or `Collate` (blocked on a lock, an FD, a remote call)
+//! would otherwise hang `drop` forever. After
+//! [`DataLoader::join_timeout_ms`] (default 30 s, env override
+//! `TORSK_LOADER_JOIN_TIMEOUT_MS`) the drop names each stuck worker and
+//! its last claimed batch index on stderr, records the event in
+//! [`LoaderStats::join_timeouts`] / [`DataLoader::last_join_timeout`],
+//! and detaches the threads instead of hanging the training process.
+//!
+//! Resume: [`DataLoader::resume`] pins the next `iter()` to a given
+//! `(epoch, next_batch)` coordinate. Because the sampler order is a pure
+//! function of `(seed, epoch, len)`, the resumed iterator re-plans the
+//! epoch and skips the first `next_batch` batches, yielding exactly the
+//! remaining schedule — bitwise, at any worker count (`tests/chaos.rs`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
+use crate::torsk_assert;
 
 use super::collate::{Collate, DefaultCollate};
 use super::sampler::{BatchSampler, RandomSampler, Sampler, SequentialSampler};
@@ -47,7 +63,61 @@ struct LoaderCounters {
     stall_ns: AtomicU64,
     /// Batches yielded.
     batches: AtomicU64,
+    /// Times a drop-time worker join hit its timeout and detached.
+    join_timeouts: AtomicU64,
+    /// Human-readable diagnostic from the most recent join timeout.
+    last_join_timeout: Mutex<Option<String>>,
 }
+
+/// Counts live (not-yet-exited) workers so `drop` can wait for *thread
+/// exit* with a timeout — `JoinHandle::join` alone cannot be bounded.
+/// Each worker holds a [`Departing`] guard; the count drops even if the
+/// worker panics.
+struct ExitLatch {
+    live: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ExitLatch {
+    fn new(n: usize) -> Arc<ExitLatch> {
+        Arc::new(ExitLatch { live: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    fn depart(&self) {
+        let mut live = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        *live -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Wait until every worker has exited; `false` on timeout.
+    fn wait_all_exited(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut live = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        while *live > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) =
+                self.cv.wait_timeout(live, deadline - now).unwrap_or_else(|e| e.into_inner());
+            live = guard;
+        }
+        true
+    }
+}
+
+/// Drop guard a worker thread holds for its whole life: unwinding out of
+/// a panicking `Dataset::get` still signals the latch.
+struct Departing(Arc<ExitLatch>);
+
+impl Drop for Departing {
+    fn drop(&mut self) {
+        self.0.depart();
+    }
+}
+
+/// Sentinel in the per-worker claim table: no batch currently claimed.
+const NO_BATCH: usize = usize::MAX;
 
 /// A point-in-time snapshot of a loader's counters (see
 /// [`DataLoader::stats`]); `delta` two snapshots around an epoch to get
@@ -58,6 +128,10 @@ pub struct LoaderStats {
     pub stall_ns: u64,
     /// Batches yielded so far.
     pub batches: u64,
+    /// Drop-time worker joins that timed out and detached (see
+    /// [`DataLoader::join_timeout_ms`]). Nonzero means a dataset or
+    /// collate wedged; [`DataLoader::last_join_timeout`] names it.
+    pub join_timeouts: u64,
 }
 
 impl LoaderStats {
@@ -66,6 +140,7 @@ impl LoaderStats {
         LoaderStats {
             stall_ns: self.stall_ns - earlier.stall_ns,
             batches: self.batches - earlier.batches,
+            join_timeouts: self.join_timeouts - earlier.join_timeouts,
         }
     }
 }
@@ -105,7 +180,19 @@ pub struct DataLoader {
     prefetch: usize,
     seed: u64,
     epoch: AtomicUsize,
+    /// First batch index the next `iter()` yields (one-shot; see
+    /// [`Self::resume`]).
+    start_batch: AtomicUsize,
+    join_timeout: Duration,
     counters: Arc<LoaderCounters>,
+}
+
+fn default_join_timeout() -> Duration {
+    let ms = std::env::var("TORSK_LOADER_JOIN_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(30_000);
+    Duration::from_millis(ms)
 }
 
 impl DataLoader {
@@ -121,6 +208,8 @@ impl DataLoader {
             prefetch: 0,
             seed: 0,
             epoch: AtomicUsize::new(0),
+            start_batch: AtomicUsize::new(0),
+            join_timeout: default_join_timeout(),
             counters: Arc::new(LoaderCounters::default()),
         }
     }
@@ -165,11 +254,43 @@ impl DataLoader {
         self
     }
 
+    /// Bound the `Drop`-time worker join (default 30 s, or the
+    /// `TORSK_LOADER_JOIN_TIMEOUT_MS` env var): past the timeout, stuck
+    /// workers are named (with their last claimed batch index) on stderr
+    /// and detached instead of hanging the process.
+    pub fn join_timeout_ms(mut self, ms: u64) -> DataLoader {
+        self.join_timeout = Duration::from_millis(ms);
+        self
+    }
+
     /// Set the epoch the next [`Self::iter`] call runs (epochs otherwise
     /// auto-increment per `iter()`); lets resumed training replay the
     /// exact shuffle schedule.
     pub fn set_epoch(&self, e: usize) {
         self.epoch.store(e, Ordering::SeqCst);
+    }
+
+    /// Resume mid-epoch from a checkpoint coordinate: the next
+    /// [`Self::iter`] call runs `epoch` and yields batches from
+    /// `next_batch` onward. Because the sampler order is a pure function
+    /// of `(seed, epoch, len)`, the resumed stream is bitwise identical
+    /// to the tail an uninterrupted run of `epoch` would have produced.
+    /// One-shot: later `iter()` calls start their epochs from batch 0.
+    pub fn resume(&self, epoch: usize, next_batch: usize) {
+        self.epoch.store(epoch, Ordering::SeqCst);
+        self.start_batch.store(next_batch, Ordering::SeqCst);
+    }
+
+    /// The sampler seed (recorded in checkpoints so a resumed loader can
+    /// be rebuilt identically).
+    pub fn seed_value(&self) -> u64 {
+        self.seed
+    }
+
+    /// Diagnostic from the most recent drop-time join timeout, naming
+    /// the stuck worker(s) and their last claimed batch index.
+    pub fn last_join_timeout(&self) -> Option<String> {
+        self.counters.last_join_timeout.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Number of batches per epoch.
@@ -182,6 +303,7 @@ impl DataLoader {
         LoaderStats {
             stall_ns: self.counters.stall_ns.load(Ordering::Relaxed),
             batches: self.counters.batches.load(Ordering::Relaxed),
+            join_timeouts: self.counters.join_timeouts.load(Ordering::Relaxed),
         }
     }
 
@@ -197,7 +319,16 @@ impl DataLoader {
     /// Iterate one epoch of `(inputs, targets)` batches.
     pub fn iter(&self) -> BatchIter {
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
-        let batches = self.epoch_batches(epoch);
+        let start = self.start_batch.swap(0, Ordering::SeqCst);
+        let mut batches = self.epoch_batches(epoch);
+        torsk_assert!(
+            start <= batches.len(),
+            "DataLoader::resume: next_batch {start} exceeds the {} batches of epoch {epoch}",
+            batches.len()
+        );
+        // Resume skip: plan the full epoch (same sampler stream), then
+        // drop the batches the interrupted run already consumed.
+        let batches = batches.split_off(start);
 
         let imp = if self.num_workers == 0 {
             IterImpl::Serial {
@@ -214,6 +345,9 @@ impl DataLoader {
             let claim = Arc::new(AtomicUsize::new(0));
             let shutdown = Arc::new(AtomicBool::new(false));
             let batches = Arc::new(batches);
+            let latch = ExitLatch::new(self.num_workers);
+            let claims: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..self.num_workers).map(|_| AtomicUsize::new(NO_BATCH)).collect());
             let mut handles = Vec::with_capacity(self.num_workers);
             for w in 0..self.num_workers {
                 let tx = tx.clone();
@@ -222,23 +356,35 @@ impl DataLoader {
                 let claim = claim.clone();
                 let shutdown = shutdown.clone();
                 let batches = batches.clone();
+                let departing = Departing(latch.clone());
+                let claims = claims.clone();
                 let h = std::thread::Builder::new()
                     .name(format!("torsk-data-{w}"))
-                    .spawn(move || loop {
-                        if shutdown.load(Ordering::Acquire) {
-                            return;
-                        }
-                        let i = claim.fetch_add(1, Ordering::SeqCst);
-                        if i >= batches.len() {
-                            return;
-                        }
-                        let samples: Vec<(Tensor, Tensor)> =
-                            batches[i].iter().map(|&j| dataset.get(j)).collect();
-                        let b = collate.collate(&samples);
-                        // A send error means the consumer dropped the
-                        // epoch: stop quietly.
-                        if tx.send((i, b)).is_err() {
-                            return;
+                    .spawn(move || {
+                        // Held for the thread's whole life; dropping it
+                        // (return *or* panic) signals the exit latch.
+                        let _departing = departing;
+                        loop {
+                            if shutdown.load(Ordering::Acquire) {
+                                return;
+                            }
+                            let i = claim.fetch_add(1, Ordering::SeqCst);
+                            if i >= batches.len() {
+                                claims[w].store(NO_BATCH, Ordering::Release);
+                                return;
+                            }
+                            // Published so a timed-out drop can name the
+                            // batch this worker is wedged on.
+                            claims[w].store(i, Ordering::Release);
+                            let samples: Vec<(Tensor, Tensor)> =
+                                batches[i].iter().map(|&j| dataset.get(j)).collect();
+                            let b = collate.collate(&samples);
+                            // A send error means the consumer dropped the
+                            // epoch: stop quietly.
+                            if tx.send((i, b)).is_err() {
+                                claims[w].store(NO_BATCH, Ordering::Release);
+                                return;
+                            }
                         }
                     })
                     .expect("spawn data worker");
@@ -253,6 +399,9 @@ impl DataLoader {
                 total,
                 shutdown,
                 handles,
+                latch,
+                claims,
+                join_timeout: self.join_timeout,
             }
         };
         BatchIter { imp, counters: self.counters.clone(), stall_ns: 0 }
@@ -278,6 +427,10 @@ enum IterImpl {
         total: usize,
         shutdown: Arc<AtomicBool>,
         handles: Vec<std::thread::JoinHandle<()>>,
+        latch: Arc<ExitLatch>,
+        /// Per-worker last claimed batch index ([`NO_BATCH`] = none).
+        claims: Arc<Vec<AtomicUsize>>,
+        join_timeout: Duration,
     },
 }
 
@@ -360,14 +513,54 @@ impl Iterator for BatchIter {
 
 impl Drop for BatchIter {
     fn drop(&mut self) {
-        if let IterImpl::Parallel { rx, shutdown, handles, .. } = &mut self.imp {
+        if let IterImpl::Parallel { rx, shutdown, handles, latch, claims, join_timeout, .. } =
+            &mut self.imp
+        {
             // Flag first, then disconnect: a worker blocked in `send`
             // wakes with an error the moment the receiver drops, and any
             // worker between batches sees the flag before claiming more.
             shutdown.store(true, Ordering::Release);
             drop(rx.take());
-            for h in handles.drain(..) {
-                let _ = h.join();
+            // Bounded join: only a worker wedged *inside* `Dataset::get`
+            // or `Collate` can still be running at this point, and it
+            // may never come back.
+            let stuck: Vec<String> = if latch.wait_all_exited(*join_timeout) {
+                Vec::new()
+            } else {
+                handles
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| !h.is_finished())
+                    .map(|(w, h)| {
+                        let name = h.thread().name().unwrap_or("torsk-data-?").to_string();
+                        match claims[w].load(Ordering::Acquire) {
+                            NO_BATCH => format!("{name} (no batch claimed)"),
+                            b => format!("{name} (last claimed batch {b})"),
+                        }
+                    })
+                    .collect()
+            };
+            if stuck.is_empty() {
+                // Every worker has exited (or did so while we enumerated
+                // the stragglers): reap them, surfacing no panics — the
+                // consumer already re-panicked on missing batches.
+                for h in handles.drain(..) {
+                    let _ = h.join();
+                }
+            } else {
+                let msg = format!(
+                    "DataLoader drop: {} worker(s) still running after {:?} — {} — \
+                     detaching; the dataset or collate is wedged",
+                    stuck.len(),
+                    join_timeout,
+                    stuck.join(", ")
+                );
+                eprintln!("torsk: {msg}");
+                self.counters.join_timeouts.fetch_add(1, Ordering::Relaxed);
+                *self.counters.last_join_timeout.lock().unwrap_or_else(|e| e.into_inner()) =
+                    Some(msg);
+                // Dropping the handles detaches the stuck threads.
+                handles.clear();
             }
         }
     }
@@ -487,6 +680,47 @@ mod tests {
         assert_eq!(n, 10);
         assert_eq!(d.batches, 10);
         assert!(d.stall_ns > 0, "serial mode's collate time is all stall");
+    }
+
+    #[test]
+    fn resume_yields_exactly_the_remaining_batches() {
+        let dl = DataLoader::new(Arc::new(Range100), 10).shuffle(true).seed(5);
+        let full: Vec<Vec<i64>> = dl.iter().map(|(_, y)| y.to_vec::<i64>()).collect();
+        dl.resume(0, 4);
+        let tail: Vec<Vec<i64>> = dl.iter().map(|(_, y)| y.to_vec::<i64>()).collect();
+        assert_eq!(tail, full[4..], "resumed epoch must replay the exact remaining schedule");
+        // One-shot: the next iter() runs epoch 1 in full.
+        let next: Vec<Vec<i64>> = dl.iter().map(|(_, y)| y.to_vec::<i64>()).collect();
+        assert_eq!(next.len(), 10);
+        assert_ne!(next, full, "epoch 1 reshuffles");
+    }
+
+    #[test]
+    fn resumed_tail_is_identical_at_any_worker_count() {
+        let run = |workers: usize| -> Vec<i64> {
+            let dl = DataLoader::new(Arc::new(Range100), 8).shuffle(true).seed(3).workers(workers);
+            dl.resume(2, 5);
+            dl.iter().flat_map(|(_, y)| y.to_vec::<i64>()).collect()
+        };
+        let serial = run(0);
+        assert_eq!(serial.len(), 100 - 5 * 8);
+        assert_eq!(serial, run(1));
+        assert_eq!(serial, run(4));
+    }
+
+    #[test]
+    fn resume_at_epoch_end_yields_nothing() {
+        let dl = DataLoader::new(Arc::new(Range100), 10);
+        dl.resume(0, 10);
+        assert!(dl.iter().next().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 10 batches")]
+    fn resume_past_the_epoch_is_a_loud_error() {
+        let dl = DataLoader::new(Arc::new(Range100), 10);
+        dl.resume(0, 11);
+        let _ = dl.iter();
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! complicated cases result in a user error"). Runtime failures that a
 //! caller can reasonably handle (I/O, PJRT, IPC) are `Result`-based.
 
+use std::path::PathBuf;
+
 use thiserror::Error;
 
 /// Errors surfaced through `Result` on fallible torsk APIs.
@@ -22,9 +24,40 @@ pub enum TorskError {
     #[error("multiprocessing error: {0}")]
     Multiproc(String),
 
-    /// I/O error (artifact files, corpora, traces).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failure with context: which operation, on which path. The
+    /// underlying `std::io::Error` is source-chained so callers (and
+    /// `{:#}`-style reports) see the OS-level cause.
+    #[error("{op} {}: {source}", path.display())]
+    Io {
+        /// What was being attempted ("write checkpoint", "read checkpoint").
+        op: &'static str,
+        /// The file involved.
+        path: PathBuf,
+        /// The OS-level error.
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// A file failed structural validation on load: bad magic, truncated
+    /// payload, checksum mismatch. Carries enough context (path, byte
+    /// offset, expected vs found) to diagnose torn writes and bit rot
+    /// without a hex dump.
+    #[error(
+        "corrupt file {}: {what} at byte {offset} (expected {expected:#x}, found {found:#x})",
+        path.display()
+    )]
+    Corrupt {
+        /// The file that failed validation.
+        path: PathBuf,
+        /// Byte offset at which the problem was detected.
+        offset: u64,
+        /// What check failed ("bad magic", "checksum mismatch", ...).
+        what: String,
+        /// The expected value (checksum, magic, length...).
+        expected: u64,
+        /// The value actually found.
+        found: u64,
+    },
 
     /// A saved-for-backward tensor was mutated in place before the backward
     /// pass ran (§4.3's tensor versioning system).
@@ -43,6 +76,15 @@ pub enum TorskError {
 impl From<anyhow::Error> for TorskError {
     fn from(e: anyhow::Error) -> Self {
         TorskError::Xla(format!("{e:#}"))
+    }
+}
+
+impl TorskError {
+    /// Wrap an `std::io::Error` with operation + path context. There is
+    /// deliberately no bare `From<std::io::Error>`: every I/O failure must
+    /// say what it was doing and to which file.
+    pub fn io(op: &'static str, path: impl Into<PathBuf>, source: std::io::Error) -> TorskError {
+        TorskError::Io { op, path: path.into(), source }
     }
 }
 
@@ -83,6 +125,36 @@ mod tests {
     fn msg_error_displays_inner() {
         let e = TorskError::Msg("bad config".into());
         assert_eq!(e.to_string(), "bad config");
+    }
+
+    #[test]
+    fn io_error_names_op_path_and_chains_source() {
+        use std::error::Error as _;
+        let e = TorskError::io(
+            "write checkpoint",
+            "/tmp/model.ckpt",
+            std::io::Error::new(std::io::ErrorKind::PermissionDenied, "denied"),
+        );
+        let s = e.to_string();
+        assert!(s.contains("write checkpoint"), "{s}");
+        assert!(s.contains("/tmp/model.ckpt"), "{s}");
+        assert!(e.source().is_some(), "io::Error must be source-chained");
+    }
+
+    #[test]
+    fn corrupt_error_reports_offset_and_checksums() {
+        let e = TorskError::Corrupt {
+            path: "/tmp/model.ckpt".into(),
+            offset: 12,
+            what: "checksum mismatch".into(),
+            expected: 0xCBF4_3926,
+            found: 0xDEAD_BEEF,
+        };
+        let s = e.to_string();
+        assert!(s.contains("checksum mismatch"), "{s}");
+        assert!(s.contains("byte 12"), "{s}");
+        assert!(s.contains("0xcbf43926"), "{s}");
+        assert!(s.contains("0xdeadbeef"), "{s}");
     }
 
     #[test]

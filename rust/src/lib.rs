@@ -27,6 +27,9 @@
 //!   `DataLoader` whose batch stream is bitwise worker-count-invariant
 //!   (§4.2);
 //! - [`multiproc`] — shared-memory tensor transport + Hogwild (§5.4);
+//! - [`serialize`] — versioned, checksummed training checkpoints with
+//!   atomic writes and bitwise resume (model + optimizer + RNG + loader
+//!   coordinates);
 //! - [`runtime`] / [`graph`] — AOT-compiled XLA graph execution via PJRT,
 //!   the static-graph baseline of §6.3;
 //! - [`models`] — the six Table 1 benchmark models;
@@ -76,6 +79,7 @@ pub mod optim;
 pub mod profiler;
 pub mod rng;
 pub mod runtime;
+pub mod serialize;
 pub mod tensor;
 pub mod testing;
 

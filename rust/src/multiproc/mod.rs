@@ -349,18 +349,34 @@ pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
         }
         pids.push(pid);
     }
-    let mut failures = 0;
-    for pid in pids {
+    let mut failures: Vec<String> = Vec::new();
+    for (rank, pid) in pids.into_iter().enumerate() {
         let mut status = 0;
         // SAFETY: plain waitpid on a pid we forked; `status` is a valid
         // out-pointer for the duration of the call.
-        unsafe { libc::waitpid(pid, &mut status, 0) };
-        if !libc::WIFEXITED(status) || libc::WEXITSTATUS(status) != 0 {
-            failures += 1;
+        let r = unsafe { libc::waitpid(pid, &mut status, 0) };
+        // Name each failed rank and *how* it died — a silently merged
+        // partial run (one dead rank, N-1 good ones) is the worst outcome.
+        if r < 0 {
+            failures.push(format!("rank {rank} (pid {pid}): waitpid failed"));
+        } else if libc::WIFSIGNALED(status) {
+            let sig = libc::WTERMSIG(status);
+            failures.push(format!("rank {rank} (pid {pid}): killed by signal {sig}"));
+        } else if libc::WIFEXITED(status) {
+            let code = libc::WEXITSTATUS(status);
+            if code != 0 {
+                failures.push(format!("rank {rank} (pid {pid}): exited with status {code}"));
+            }
+        } else {
+            failures.push(format!("rank {rank} (pid {pid}): stopped without exiting"));
         }
     }
-    if failures > 0 {
-        return Err(TorskError::Multiproc(format!("{failures} workers failed")));
+    if !failures.is_empty() {
+        return Err(TorskError::Multiproc(format!(
+            "{} of {n} worker(s) failed: {}",
+            failures.len(),
+            failures.join("; ")
+        )));
     }
     Ok(())
 }
@@ -506,7 +522,12 @@ mod tests {
                 panic!("worker bug");
             }
         });
-        assert!(r.is_err());
+        // The error must name the failed rank and how it died (a panicking
+        // child _exits with 101), not just count failures.
+        let err = r.unwrap_err().to_string();
+        assert!(err.contains("1 of 2 worker(s) failed"), "{err}");
+        assert!(err.contains("rank 1"), "{err}");
+        assert!(err.contains("exited with status 101"), "{err}");
     }
 
     #[test]

@@ -7,9 +7,56 @@
 //! `axpy_` / `sqrt` / `div` passes of the naive composition, with
 //! bit-identical results (pinned by `tests/fused_parity.rs`).
 
+use std::collections::BTreeMap;
+
 use crate::autograd::no_grad;
 use crate::dispatch::{self, Param};
 use crate::tensor::Tensor;
+use crate::{torsk_assert, torsk_bail};
+
+/// Serializable optimizer state: step count, hyper-parameters, and the
+/// per-parameter state tensors (momentum/Adam moments) — the optimizer
+/// half of a training checkpoint (`torch.optim.Optimizer.state_dict`).
+///
+/// Tensor values are *copies* (checkpoint semantics, like
+/// [`crate::nn::Module::state_dict`]): later fused in-place `step`s do not
+/// mutate a saved state dict. Keys are positional (`velocity.3`, `m.0`),
+/// matching the optimizer's parameter order; a parameter whose state was
+/// never created (no grad seen yet) is simply absent.
+pub struct OptimStateDict {
+    /// Which optimizer produced this ("sgd", "adam") — load is strict.
+    pub kind: String,
+    /// Step count (Adam's bias-correction `t`; 0 for SGD).
+    pub step: u64,
+    /// Scalar hyper-parameters by name (lr, momentum, betas, ...).
+    pub hypers: BTreeMap<String, f32>,
+    /// Per-parameter state tensors by positional key.
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+/// Deep-copy a state tensor for checkpointing (contiguous, detached, own
+/// storage — `.contiguous()` alone would alias an already-dense tensor).
+fn snapshot(t: &Tensor) -> Tensor {
+    let copy = Tensor::empty(t.shape(), t.dtype(), t.device());
+    no_grad(|| copy.copy_(&t.detach().contiguous()));
+    copy
+}
+
+/// Restore one positional state slot from a state dict: absent key →
+/// `None`, present key → fresh buffer shaped like `param` (the fused
+/// in-place step kernels then mutate that private buffer, never the
+/// checkpoint's).
+fn restore_slot(sd: &OptimStateDict, key: &str, param: &Tensor) -> Option<Tensor> {
+    sd.tensors.get(key).map(|src| {
+        torsk_assert!(
+            src.shape() == param.shape(),
+            "optimizer load_state_dict: shape mismatch for '{key}': {:?} vs param {:?}",
+            src.shape(),
+            param.shape()
+        );
+        snapshot(src)
+    })
+}
 
 /// The optimizer interface (`torch.optim.Optimizer`).
 pub trait Optimizer {
@@ -23,6 +70,26 @@ pub trait Optimizer {
     fn lr(&self) -> f32;
     /// Set the learning rate (schedulers are user code too).
     fn set_lr(&mut self, lr: f32);
+    /// Snapshot all optimizer state for checkpointing.
+    fn state_dict(&self) -> OptimStateDict;
+    /// Restore state saved by [`Optimizer::state_dict`]. Strict: the kind
+    /// must match, every stored tensor must fit its parameter, and
+    /// unexpected keys are errors.
+    fn load_state_dict(&mut self, sd: &OptimStateDict);
+}
+
+/// Strict-key check shared by the optimizers: every stored tensor key must
+/// be one this optimizer would itself produce.
+fn check_no_unexpected_keys(sd: &OptimStateDict, prefixes: &[&str], n_params: usize) {
+    for key in sd.tensors.keys() {
+        let ok = prefixes.iter().any(|p| {
+            key.strip_prefix(p)
+                .and_then(|rest| rest.strip_prefix('.'))
+                .and_then(|idx| idx.parse::<usize>().ok())
+                .is_some_and(|i| i < n_params)
+        });
+        torsk_assert!(ok, "optimizer load_state_dict: unexpected key '{key}'");
+    }
 }
 
 /// SGD with optional momentum and weight decay.
@@ -90,6 +157,39 @@ impl Optimizer for Sgd {
 
     fn set_lr(&mut self, lr: f32) {
         self.learning_rate = lr;
+    }
+
+    fn state_dict(&self) -> OptimStateDict {
+        let mut hypers = BTreeMap::new();
+        hypers.insert("lr".to_string(), self.learning_rate);
+        hypers.insert("momentum".to_string(), self.momentum);
+        hypers.insert("weight_decay".to_string(), self.weight_decay);
+        let mut tensors = BTreeMap::new();
+        for (i, v) in self.velocity.iter().enumerate() {
+            if let Some(v) = v {
+                tensors.insert(format!("velocity.{i}"), snapshot(v));
+            }
+        }
+        OptimStateDict { kind: "sgd".to_string(), step: 0, hypers, tensors }
+    }
+
+    fn load_state_dict(&mut self, sd: &OptimStateDict) {
+        if sd.kind != "sgd" {
+            torsk_bail!("Sgd::load_state_dict: state dict is for '{}'", sd.kind);
+        }
+        check_no_unexpected_keys(sd, &["velocity"], self.params.len());
+        if let Some(&lr) = sd.hypers.get("lr") {
+            self.learning_rate = lr;
+        }
+        if let Some(&m) = sd.hypers.get("momentum") {
+            self.momentum = m;
+        }
+        if let Some(&wd) = sd.hypers.get("weight_decay") {
+            self.weight_decay = wd;
+        }
+        for (i, p) in self.params.iter().enumerate() {
+            self.velocity[i] = restore_slot(sd, &format!("velocity.{i}"), p);
+        }
     }
 }
 
@@ -167,6 +267,54 @@ impl Optimizer for Adam {
 
     fn set_lr(&mut self, lr: f32) {
         self.learning_rate = lr;
+    }
+
+    fn state_dict(&self) -> OptimStateDict {
+        let mut hypers = BTreeMap::new();
+        hypers.insert("lr".to_string(), self.learning_rate);
+        hypers.insert("beta1".to_string(), self.beta1);
+        hypers.insert("beta2".to_string(), self.beta2);
+        hypers.insert("eps".to_string(), self.eps);
+        hypers.insert("weight_decay".to_string(), self.weight_decay);
+        let mut tensors = BTreeMap::new();
+        for (i, m) in self.m.iter().enumerate() {
+            if let Some(m) = m {
+                tensors.insert(format!("m.{i}"), snapshot(m));
+            }
+        }
+        for (i, v) in self.v.iter().enumerate() {
+            if let Some(v) = v {
+                tensors.insert(format!("v.{i}"), snapshot(v));
+            }
+        }
+        OptimStateDict { kind: "adam".to_string(), step: self.t, hypers, tensors }
+    }
+
+    fn load_state_dict(&mut self, sd: &OptimStateDict) {
+        if sd.kind != "adam" {
+            torsk_bail!("Adam::load_state_dict: state dict is for '{}'", sd.kind);
+        }
+        check_no_unexpected_keys(sd, &["m", "v"], self.params.len());
+        if let Some(&lr) = sd.hypers.get("lr") {
+            self.learning_rate = lr;
+        }
+        if let Some(&b1) = sd.hypers.get("beta1") {
+            self.beta1 = b1;
+        }
+        if let Some(&b2) = sd.hypers.get("beta2") {
+            self.beta2 = b2;
+        }
+        if let Some(&eps) = sd.hypers.get("eps") {
+            self.eps = eps;
+        }
+        if let Some(&wd) = sd.hypers.get("weight_decay") {
+            self.weight_decay = wd;
+        }
+        self.t = sd.step;
+        for (i, p) in self.params.iter().enumerate() {
+            self.m[i] = restore_slot(sd, &format!("m.{i}"), p);
+            self.v[i] = restore_slot(sd, &format!("v.{i}"), p);
+        }
     }
 }
 
@@ -251,5 +399,116 @@ mod tests {
         let mut opt = Sgd::new(vec![w.clone()], 0.1);
         opt.step(); // no grad set
         assert_eq!(w.to_vec::<f32>(), vec![1.0]);
+    }
+
+    #[test]
+    fn state_dict_at_step_zero_is_empty() {
+        let w = Tensor::from_slice(&[1.0f32, 2.0]).requires_grad(true);
+        let sgd = Sgd::new(vec![w.clone()], 0.1).with_momentum(0.9);
+        let sd = sgd.state_dict();
+        assert_eq!(sd.kind, "sgd");
+        assert_eq!(sd.step, 0);
+        assert!(sd.tensors.is_empty(), "no step taken => no velocity");
+        let adam = Adam::new(vec![w], 0.1);
+        let sd = adam.state_dict();
+        assert_eq!(sd.kind, "adam");
+        assert_eq!(sd.step, 0);
+        assert!(sd.tensors.is_empty());
+    }
+
+    #[test]
+    fn state_dict_is_a_deep_copy() {
+        let w = Tensor::from_slice(&[1.0f32]).requires_grad(true);
+        let mut opt = Sgd::new(vec![w.clone()], 0.1).with_momentum(0.9);
+        w.set_grad(Some(Tensor::from_slice(&[1.0f32])));
+        opt.step();
+        let sd = opt.state_dict();
+        let before = sd.tensors["velocity.0"].to_vec::<f32>();
+        // More steps mutate the live velocity in place via the fused kernel;
+        // the snapshot must not move.
+        w.set_grad(Some(Tensor::from_slice(&[1.0f32])));
+        opt.step();
+        assert_eq!(sd.tensors["velocity.0"].to_vec::<f32>(), before);
+        assert_ne!(opt.velocity[0].as_ref().unwrap().to_vec::<f32>(), before);
+    }
+
+    /// Run `steps` optimizer steps of f(w) = (w - 3)^2, returning bit
+    /// patterns of the final weights.
+    fn train_bits(opt: &mut dyn Optimizer, w: &Tensor, steps: usize) -> Vec<u32> {
+        for _ in 0..steps {
+            opt.zero_grad();
+            let diff = ops::add_scalar(w, -3.0);
+            let loss = ops::mul(&diff, &diff).sum();
+            loss.backward();
+            opt.step();
+        }
+        w.to_vec::<f32>().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn sgd_resume_from_state_dict_is_bitwise() {
+        // Uninterrupted: 10 steps.
+        let w_full = Tensor::from_slice(&[0.0f32, 5.0]).requires_grad(true);
+        let mut full = Sgd::new(vec![w_full.clone()], 0.05).with_momentum(0.9);
+        let expected = train_bits(&mut full, &w_full, 10);
+
+        // Interrupted: 6 steps, checkpoint, rebuild everything, 4 more.
+        let w = Tensor::from_slice(&[0.0f32, 5.0]).requires_grad(true);
+        let mut opt = Sgd::new(vec![w.clone()], 0.05).with_momentum(0.9);
+        train_bits(&mut opt, &w, 6);
+        let sd = opt.state_dict();
+        let mid: Vec<f32> = w.to_vec::<f32>();
+
+        let w2 = Tensor::from_slice(&mid).requires_grad(true);
+        let mut opt2 = Sgd::new(vec![w2.clone()], 0.05).with_momentum(0.9);
+        opt2.load_state_dict(&sd);
+        let resumed = train_bits(&mut opt2, &w2, 4);
+        assert_eq!(expected, resumed, "resume must be bitwise identical");
+    }
+
+    #[test]
+    fn adam_resume_from_state_dict_is_bitwise() {
+        let w_full = Tensor::from_slice(&[0.0f32, 5.0]).requires_grad(true);
+        let mut full = Adam::new(vec![w_full.clone()], 0.1);
+        let expected = train_bits(&mut full, &w_full, 10);
+
+        let w = Tensor::from_slice(&[0.0f32, 5.0]).requires_grad(true);
+        let mut opt = Adam::new(vec![w.clone()], 0.1);
+        train_bits(&mut opt, &w, 6);
+        let sd = opt.state_dict();
+        assert_eq!(sd.step, 6, "Adam step count rides along for bias correction");
+        let mid: Vec<f32> = w.to_vec::<f32>();
+
+        let w2 = Tensor::from_slice(&mid).requires_grad(true);
+        let mut opt2 = Adam::new(vec![w2.clone()], 0.1);
+        opt2.load_state_dict(&sd);
+        let resumed = train_bits(&mut opt2, &w2, 4);
+        assert_eq!(expected, resumed, "resume must be bitwise identical");
+    }
+
+    #[test]
+    #[should_panic(expected = "state dict is for 'adam'")]
+    fn load_rejects_kind_mismatch() {
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let sd = Adam::new(vec![w.clone()], 0.1).state_dict();
+        Sgd::new(vec![w], 0.1).load_state_dict(&sd);
+    }
+
+    #[test]
+    #[should_panic(expected = "unexpected key 'velocity.9'")]
+    fn load_rejects_unexpected_keys() {
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let mut sd = Sgd::new(vec![w.clone()], 0.1).state_dict();
+        sd.tensors.insert("velocity.9".to_string(), Tensor::zeros(&[1]));
+        Sgd::new(vec![w], 0.1).load_state_dict(&sd);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch for 'velocity.0'")]
+    fn load_rejects_shape_mismatch() {
+        let w = Tensor::from_slice(&[0.0f32]).requires_grad(true);
+        let mut sd = Sgd::new(vec![w.clone()], 0.1).state_dict();
+        sd.tensors.insert("velocity.0".to_string(), Tensor::zeros(&[3]));
+        Sgd::new(vec![w], 0.1).load_state_dict(&sd);
     }
 }

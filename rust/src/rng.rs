@@ -139,6 +139,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// The full generator state (checkpointing). Restoring via
+    /// [`Rng::from_state`] resumes the stream at exactly this position:
+    /// `from_state(r.state())` produces the same outputs `r` would have.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a saved [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Deterministic per-index stream: the one audited recipe for
     /// `Dataset::get(i)`-style generation (mix `index` into `seed`
     /// through splitmix64 so adjacent indices get uncorrelated streams).
@@ -162,6 +174,12 @@ thread_local! {
 pub fn manual_seed(seed: u64) {
     GLOBAL_SEED.store(seed, Ordering::SeqCst);
     SEED_EPOCH.fetch_add(1, Ordering::SeqCst);
+}
+
+/// The current global seed (the last [`manual_seed`] value, or the boot
+/// default). Checkpoints record it so a resumed run can re-seed identically.
+pub fn global_seed() -> u64 {
+    GLOBAL_SEED.load(Ordering::SeqCst)
 }
 
 /// Run a closure with the calling thread's global-derived generator.
@@ -273,6 +291,8 @@ mod tests {
         manual_seed(43);
         let c = with_rng(|r| r.next_u64());
         assert_ne!(a, c);
+        // global_seed() observes the last manual_seed (checkpoints save it).
+        assert_eq!(global_seed(), 43);
     }
 
     #[test]
@@ -297,6 +317,19 @@ mod tests {
         let mut w = Rng::for_index(7, 3);
         let same_seed = (0..64).filter(|_| z.next_u64() == w.next_u64()).count();
         assert!(same_seed < 4);
+    }
+
+    #[test]
+    fn state_round_trip_resumes_the_stream() {
+        let mut a = Rng::new(99);
+        for _ in 0..17 {
+            a.next_u64(); // advance to an arbitrary mid-stream position
+        }
+        let snapshot = a.state();
+        let expected: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snapshot);
+        let resumed: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_eq!(expected, resumed, "from_state must resume mid-stream exactly");
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! The checkpoint wire format: a hand-rolled little-endian binary
+//! encoding (no serde in the offline crate set, mirroring the hand-rolled
+//! bench JSON schemas) plus the CRC-32 used for torn-write detection.
+//!
+//! Primitives: `u8`/`u32`/`u64` little-endian; `f32` as its IEEE-754 bit
+//! pattern (`to_bits`), so values — including NaNs — round-trip bitwise;
+//! strings as `u64` length + UTF-8 bytes; tensors as
+//! `[dtype tag u8][rank u64][dims u64…][elements LE]`. Non-contiguous
+//! tensors are materialized on encode (`to_vec` walks the strides), so a
+//! transposed parameter view saves and restores as its logical contents.
+//!
+//! [`Reader`] never panics on malformed input: every decode failure is a
+//! typed [`TorskError::Corrupt`] carrying the file path and the absolute
+//! byte offset where validation failed.
+
+use std::path::Path;
+
+use crate::error::{Result, TorskError};
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+/// Rank cap for decoded tensors — no torsk workload exceeds it, and it
+/// bounds the damage a corrupt rank field can do.
+const MAX_RANK: usize = 8;
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected), the same checksum as
+/// gzip/zlib: cheap, and torn writes — the failure it exists to catch —
+/// are truncations or zero runs, which it detects reliably.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F64 => 1,
+        DType::I64 => 2,
+    }
+}
+
+/// Append-only payload encoder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Store the IEEE-754 bit pattern: bitwise round-trip, NaNs included.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Encode a host tensor; non-contiguous views are materialized here
+    /// (`to_vec` walks the strides), so what is stored is the logical
+    /// row-major contents.
+    pub fn put_tensor(&mut self, t: &Tensor) {
+        torsk_assert!(
+            t.device() == crate::device::Device::Cpu,
+            "serialize: checkpoint tensors must live on the host"
+        );
+        self.put_u8(dtype_tag(t.dtype()));
+        self.put_u64(t.ndim() as u64);
+        for &d in t.shape() {
+            self.put_u64(d as u64);
+        }
+        match t.dtype() {
+            DType::F32 => {
+                for v in t.to_vec::<f32>() {
+                    self.buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::F64 => {
+                for v in t.to_vec::<f64>() {
+                    self.buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::I64 => {
+                for v in t.to_vec::<i64>() {
+                    self.buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Payload decoder with positioned, typed failure: every error is a
+/// [`TorskError::Corrupt`] naming the file and the absolute byte offset.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+    /// File offset of `buf[0]` (the payload sits after the header), so
+    /// reported offsets are absolute file positions.
+    base: u64,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8], path: &'a Path, base: u64) -> Reader<'a> {
+        Reader { buf, pos: 0, path, base }
+    }
+
+    /// A [`TorskError::Corrupt`] at the current position.
+    pub fn corrupt(&self, what: &str, expected: u64, found: u64) -> TorskError {
+        TorskError::Corrupt {
+            path: self.path.to_path_buf(),
+            offset: self.base + self.pos as u64,
+            what: what.to_string(),
+            expected,
+            found,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(self.corrupt("truncated record", n as u64, self.remaining() as u64));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| {
+            self.corrupt("invalid utf-8 in string", 0, e.utf8_error().valid_up_to() as u64)
+        })
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor> {
+        let tag = self.u8()?;
+        let dtype = match tag {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I64,
+            other => return Err(self.corrupt("unknown dtype tag", 2, other as u64)),
+        };
+        let ndim = self.u64()? as usize;
+        if ndim > MAX_RANK {
+            return Err(self.corrupt("implausible tensor rank", MAX_RANK as u64, ndim as u64));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel: usize = 1;
+        for _ in 0..ndim {
+            let d = self.u64()? as usize;
+            match numel.checked_mul(d) {
+                Some(n) => numel = n,
+                None => return Err(self.corrupt("tensor shape overflows", u64::MAX, d as u64)),
+            }
+            shape.push(d);
+        }
+        // Bounds-check the element count against the bytes actually
+        // present *before* allocating: a corrupt dim must not trigger a
+        // multi-gigabyte allocation.
+        let nbytes = match numel.checked_mul(dtype.size()) {
+            Some(n) => n,
+            None => return Err(self.corrupt("tensor size overflows", u64::MAX, numel as u64)),
+        };
+        let bytes = self.take(nbytes)?;
+        Ok(match dtype {
+            DType::F32 => {
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_vec(data, &shape)
+            }
+            DType::F64 => {
+                let data: Vec<f64> = bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                    .collect();
+                Tensor::from_vec(data, &shape)
+            }
+            DType::I64 => {
+                let data: Vec<i64> = bytes
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                    .collect();
+                Tensor::from_vec(data, &shape)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+
+    fn path() -> PathBuf {
+        PathBuf::from("/test/fake.ckpt")
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard check vector for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flips_and_truncation() {
+        let data = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let good = crc32(&data);
+        let mut flipped = data.clone();
+        flipped[7] ^= 0x10;
+        assert_ne!(crc32(&flipped), good);
+        assert_ne!(crc32(&data[..data.len() - 1]), good);
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.0);
+        w.put_f32(f32::NAN);
+        w.put_str("velocity.3");
+        w.put_str("");
+        let bytes = w.into_bytes();
+        let p = path();
+        let mut r = Reader::new(&bytes, &p, 0);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        // Bitwise round-trip: -0.0 keeps its sign bit, NaN its payload.
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f32().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "velocity.3");
+        assert_eq!(r.str().unwrap(), "");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn tensors_round_trip_across_dtypes() {
+        let p = path();
+        for t in [
+            Tensor::from_vec(vec![1.5f32, -2.0, 3.25, 0.0], &[2, 2]),
+            Tensor::from_vec(vec![1.5f64, f64::MIN_POSITIVE, -7.0], &[3]),
+            Tensor::from_vec(vec![i64::MIN, 0, i64::MAX], &[3, 1]),
+            Tensor::from_vec(vec![42.0f32], &[]),
+        ] {
+            let mut w = Writer::new();
+            w.put_tensor(&t);
+            let bytes = w.into_bytes();
+            let back = Reader::new(&bytes, &p, 0).tensor().unwrap();
+            assert_eq!(back.dtype(), t.dtype());
+            assert_eq!(back.shape(), t.shape());
+            match t.dtype() {
+                DType::F32 => assert_eq!(
+                    back.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                ),
+                DType::F64 => assert_eq!(
+                    back.to_vec::<f64>().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.to_vec::<f64>().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                ),
+                DType::I64 => assert_eq!(back.to_vec::<i64>(), t.to_vec::<i64>()),
+            }
+        }
+    }
+
+    #[test]
+    fn non_contiguous_views_materialize_on_encode() {
+        let m = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let view = m.t(); // [3, 2] strided view
+        let mut w = Writer::new();
+        w.put_tensor(&view);
+        let bytes = w.into_bytes();
+        let p = path();
+        let back = Reader::new(&bytes, &p, 0).tensor().unwrap();
+        assert_eq!(back.shape(), &[3, 2]);
+        assert_eq!(back.to_vec::<f32>(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn truncated_input_is_a_typed_corrupt_error() {
+        let mut w = Writer::new();
+        w.put_tensor(&Tensor::from_vec(vec![1.0f32, 2.0], &[2]));
+        let bytes = w.into_bytes();
+        let p = path();
+        let err = Reader::new(&bytes[..bytes.len() - 3], &p, 100).tensor().unwrap_err();
+        match err {
+            TorskError::Corrupt { offset, ref what, .. } => {
+                assert!(what.contains("truncated"), "{what}");
+                // Offsets are absolute: base 100 + position within payload.
+                assert!(offset >= 100, "offset={offset}");
+            }
+            other => panic!("expected Corrupt, got {other}"),
+        }
+    }
+
+    #[test]
+    fn bad_dtype_tag_is_rejected() {
+        let p = path();
+        let err = Reader::new(&[9u8], &p, 0).tensor().unwrap_err();
+        assert!(matches!(err, TorskError::Corrupt { found: 9, .. }), "{err}");
+    }
+
+    #[test]
+    fn huge_corrupt_shape_fails_without_allocating() {
+        let mut w = Writer::new();
+        w.put_u8(0); // f32
+        w.put_u64(2);
+        w.put_u64(u64::MAX / 2); // absurd dim
+        w.put_u64(4);
+        let bytes = w.into_bytes();
+        let p = path();
+        let err = Reader::new(&bytes, &p, 0).tensor().unwrap_err();
+        assert!(matches!(err, TorskError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn implausible_rank_is_rejected() {
+        let mut w = Writer::new();
+        w.put_u8(0);
+        w.put_u64(1000); // rank 1000
+        let bytes = w.into_bytes();
+        let p = path();
+        let err = Reader::new(&bytes, &p, 0).tensor().unwrap_err();
+        match err {
+            TorskError::Corrupt { ref what, found, .. } => {
+                assert!(what.contains("rank"), "{what}");
+                assert_eq!(found, 1000);
+            }
+            other => panic!("expected Corrupt, got {other}"),
+        }
+    }
+}

@@ -1,0 +1,521 @@
+//! Durable training checkpoints (ARCHITECTURE.md §7).
+//!
+//! A [`Checkpoint`] captures everything a training loop needs to resume
+//! *bitwise*: the model's `state_dict` tensors, the optimizer's state
+//! dict ([`crate::optim::OptimStateDict`] — momenta, Adam step count),
+//! the RNG coordinates (the global seed plus an optional explicit
+//! [`Rng`](crate::rng::Rng) stream position), and the [`DataLoader`]
+//! replay coordinate `(seed, epoch, next batch)`. Resume wiring:
+//! `Module::load_state_dict` + `Optimizer::load_state_dict` +
+//! `rng::manual_seed` + [`crate::data::DataLoader::resume`], after which
+//! the remaining batch schedule replays exactly — `tests/chaos.rs` pins
+//! kill-and-resume runs bitwise against uninterrupted ones.
+//!
+//! On-disk layout (all little-endian):
+//!
+//! ```text
+//! [magic u32][version u32][payload_len u64][payload crc32 u32][payload]
+//! ```
+//!
+//! Durability protocol: [`Checkpoint::save`] writes a sibling temp file
+//! (`<name>.tmp.<pid>`), fsyncs it, renames it over the target, then
+//! fsyncs the directory — readers see the old file or the new file,
+//! never a partial one, and a failed save cleans up its temp file.
+//! [`Checkpoint::load`] verifies magic, version, length, and CRC before
+//! decoding; anything off is a typed [`TorskError::Corrupt`] with the
+//! byte offset, never a panic and never a silently short state dict.
+
+pub mod format;
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, TorskError};
+use crate::optim::{OptimStateDict, Optimizer};
+use crate::tensor::Tensor;
+use crate::testing::chaos;
+use crate::torsk_bail;
+
+use format::{crc32, Reader, Writer};
+
+/// `b"TSK1"` as a little-endian u32.
+const MAGIC: u32 = u32::from_le_bytes(*b"TSK1");
+const VERSION: u32 = 1;
+/// magic + version + payload_len + crc.
+const HEADER_LEN: usize = 4 + 4 + 8 + 4;
+
+/// Chaos fault point: arm [`chaos::Fault::FailWriteAfter`] here to make
+/// [`Checkpoint::save`] fail after writing N bytes of the temp file.
+pub const FAULT_WRITE: &str = "checkpoint:write";
+
+/// Where a [`DataLoader`] was when the checkpoint was taken: re-planning
+/// the epoch from `(seed, epoch)` and skipping `next_batch` batches
+/// replays the exact remaining schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoaderState {
+    /// The loader's sampler seed.
+    pub seed: u64,
+    /// The epoch being iterated when the checkpoint was taken.
+    pub epoch: u64,
+    /// Index of the first batch the resumed run should yield.
+    pub next_batch: u64,
+}
+
+/// A complete, resumable training snapshot. Build with [`Checkpoint::new`]
+/// plus the `with_*` methods, persist with [`Checkpoint::save`], restore
+/// with [`Checkpoint::load`].
+pub struct Checkpoint {
+    /// Model parameters and buffers (`Module::state_dict`).
+    pub model: BTreeMap<String, Tensor>,
+    /// Optimizer state, if an optimizer rides along.
+    pub optim: Option<OptimStateDict>,
+    /// The global RNG seed at save time (`rng::global_seed`); restore
+    /// with `rng::manual_seed`.
+    pub global_seed: u64,
+    /// An explicit RNG stream position ([`crate::rng::Rng::state`]), for
+    /// loops that thread their own generator.
+    pub rng_stream: Option<[u64; 4]>,
+    /// DataLoader replay coordinate.
+    pub loader: Option<LoaderState>,
+}
+
+impl Checkpoint {
+    /// Start a checkpoint from a model state dict; captures the current
+    /// global seed.
+    pub fn new(model: BTreeMap<String, Tensor>) -> Checkpoint {
+        Checkpoint {
+            model,
+            optim: None,
+            global_seed: crate::rng::global_seed(),
+            rng_stream: None,
+            loader: None,
+        }
+    }
+
+    /// Snapshot `opt`'s state into the checkpoint.
+    pub fn with_optimizer(mut self, opt: &dyn Optimizer) -> Checkpoint {
+        self.optim = Some(opt.state_dict());
+        self
+    }
+
+    /// Record the loader replay coordinate.
+    pub fn with_loader(mut self, state: LoaderState) -> Checkpoint {
+        self.loader = Some(state);
+        self
+    }
+
+    /// Record an explicit RNG stream position.
+    pub fn with_rng_stream(mut self, state: [u64; 4]) -> Checkpoint {
+        self.rng_stream = Some(state);
+        self
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        // Model section.
+        w.put_u64(self.model.len() as u64);
+        for (name, t) in &self.model {
+            w.put_str(name);
+            w.put_tensor(t);
+        }
+        // Optimizer section.
+        match &self.optim {
+            None => w.put_u8(0),
+            Some(sd) => {
+                w.put_u8(1);
+                w.put_str(&sd.kind);
+                w.put_u64(sd.step);
+                w.put_u64(sd.hypers.len() as u64);
+                for (name, &v) in &sd.hypers {
+                    w.put_str(name);
+                    w.put_f32(v);
+                }
+                w.put_u64(sd.tensors.len() as u64);
+                for (name, t) in &sd.tensors {
+                    w.put_str(name);
+                    w.put_tensor(t);
+                }
+            }
+        }
+        // RNG section.
+        w.put_u64(self.global_seed);
+        match self.rng_stream {
+            None => w.put_u8(0),
+            Some(s) => {
+                w.put_u8(1);
+                for v in s {
+                    w.put_u64(v);
+                }
+            }
+        }
+        // Loader section.
+        match self.loader {
+            None => w.put_u8(0),
+            Some(ls) => {
+                w.put_u8(1);
+                w.put_u64(ls.seed);
+                w.put_u64(ls.epoch);
+                w.put_u64(ls.next_batch);
+            }
+        }
+        w.into_bytes()
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Checkpoint> {
+        let n_model = r.u64()? as usize;
+        let mut model = BTreeMap::new();
+        for _ in 0..n_model {
+            let name = r.str()?;
+            let t = r.tensor()?;
+            model.insert(name, t);
+        }
+        let optim = if r.u8()? != 0 {
+            let kind = r.str()?;
+            let step = r.u64()?;
+            let n_hypers = r.u64()? as usize;
+            let mut hypers = BTreeMap::new();
+            for _ in 0..n_hypers {
+                let name = r.str()?;
+                let v = r.f32()?;
+                hypers.insert(name, v);
+            }
+            let n_tensors = r.u64()? as usize;
+            let mut tensors = BTreeMap::new();
+            for _ in 0..n_tensors {
+                let name = r.str()?;
+                let t = r.tensor()?;
+                tensors.insert(name, t);
+            }
+            Some(OptimStateDict { kind, step, hypers, tensors })
+        } else {
+            None
+        };
+        let global_seed = r.u64()?;
+        let rng_stream = if r.u8()? != 0 {
+            Some([r.u64()?, r.u64()?, r.u64()?, r.u64()?])
+        } else {
+            None
+        };
+        let loader = if r.u8()? != 0 {
+            Some(LoaderState { seed: r.u64()?, epoch: r.u64()?, next_batch: r.u64()? })
+        } else {
+            None
+        };
+        if !r.is_empty() {
+            return Err(r.corrupt("trailing bytes after checkpoint", 0, r.remaining() as u64));
+        }
+        Ok(Checkpoint { model, optim, global_seed, rng_stream, loader })
+    }
+
+    /// Serialize to `path` atomically: temp file → fsync → rename →
+    /// directory fsync. On any failure the temp file is removed and the
+    /// previous checkpoint at `path` (if any) is left untouched.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let payload = self.encode();
+        let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        atomic_write(path, &bytes)
+    }
+
+    /// Load and fully validate a checkpoint. Returns
+    /// [`TorskError::Io`] if the file cannot be read and
+    /// [`TorskError::Corrupt`] (with byte offset) on any structural
+    /// failure: bad magic, version skew, torn payload, checksum mismatch.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path).map_err(|e| TorskError::io("read checkpoint", path, e))?;
+        let corrupt = |offset: u64, what: &str, expected: u64, found: u64| TorskError::Corrupt {
+            path: path.to_path_buf(),
+            offset,
+            what: what.to_string(),
+            expected,
+            found,
+        };
+        if bytes.len() < HEADER_LEN {
+            return Err(corrupt(0, "truncated header", HEADER_LEN as u64, bytes.len() as u64));
+        }
+        let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        if magic != MAGIC {
+            return Err(corrupt(0, "bad magic", MAGIC as u64, magic as u64));
+        }
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        if version != VERSION {
+            return Err(corrupt(4, "unsupported version", VERSION as u64, version as u64));
+        }
+        let payload_len = u64::from_le_bytes([
+            bytes[8], bytes[9], bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15],
+        ]);
+        let stored_crc = u32::from_le_bytes([bytes[16], bytes[17], bytes[18], bytes[19]]);
+        let payload = &bytes[HEADER_LEN..];
+        if payload.len() as u64 != payload_len {
+            // A torn write truncates here: the header promises more
+            // payload than survived.
+            return Err(corrupt(8, "payload length mismatch", payload_len, payload.len() as u64));
+        }
+        let computed = crc32(payload);
+        if computed != stored_crc {
+            return Err(corrupt(16, "checksum mismatch", stored_crc as u64, computed as u64));
+        }
+        let mut r = Reader::new(payload, path, HEADER_LEN as u64);
+        Checkpoint::decode(&mut r)
+    }
+}
+
+/// Write `bytes` to `path` atomically via a sibling temp file. The
+/// [`FAULT_WRITE`] chaos point can truncate the write partway to model a
+/// crash or disk-full mid-save.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = match path.file_name() {
+        Some(n) => n.to_string_lossy().into_owned(),
+        None => torsk_bail!("checkpoint path has no file name: {}", path.display()),
+    };
+    // Same directory as the target: rename(2) is only atomic within a
+    // filesystem. The pid suffix keeps concurrent savers from colliding.
+    let tmp = path.with_file_name(format!("{name}.tmp.{}", std::process::id()));
+    let result = write_and_rename(&tmp, path, bytes);
+    if result.is_err() {
+        // Best-effort cleanup: never leave a partial temp file behind.
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn write_and_rename(tmp: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f =
+        File::create(tmp).map_err(|e| TorskError::io("create checkpoint temp file", tmp, e))?;
+    if let Some(budget) = chaos::write_fault(FAULT_WRITE) {
+        // Injected torn write: emit at most `budget` bytes, then fail as
+        // a disk-full would.
+        let partial = &bytes[..budget.min(bytes.len())];
+        f.write_all(partial).map_err(|e| TorskError::io("write checkpoint", tmp, e))?;
+        let _ = f.sync_all();
+        return Err(TorskError::io(
+            "write checkpoint",
+            tmp,
+            std::io::Error::other(format!("chaos: write failed after {} bytes", partial.len())),
+        ));
+    }
+    f.write_all(bytes).map_err(|e| TorskError::io("write checkpoint", tmp, e))?;
+    // fsync before rename: otherwise the rename can land while the data
+    // has not, and a crash leaves a valid-looking empty file.
+    f.sync_all().map_err(|e| TorskError::io("sync checkpoint", tmp, e))?;
+    drop(f);
+    std::fs::rename(tmp, path)
+        .map_err(|e| TorskError::io("rename checkpoint into place", tmp, e))?;
+    // fsync the directory so the rename itself is durable.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static NEXT_FILE: AtomicUsize = AtomicUsize::new(0);
+
+    /// A unique scratch path per call (tests run concurrently in one
+    /// process, and the suite may share a machine with another run).
+    fn scratch(tag: &str) -> PathBuf {
+        let n = NEXT_FILE.fetch_add(1, Ordering::SeqCst);
+        std::env::temp_dir().join(format!("torsk-ckpt-{}-{n}-{tag}.bin", std::process::id()))
+    }
+
+    fn sample_model() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::from_vec(vec![1.0f32, -2.5, 3.25, 0.5], &[2, 2]));
+        m.insert("b64".to_string(), Tensor::from_vec(vec![0.1f64, 0.2], &[2]));
+        m.insert("steps".to_string(), Tensor::from_vec(vec![7i64], &[1]));
+        m
+    }
+
+    fn assert_bitwise_eq(a: &Tensor, b: &Tensor) {
+        assert_eq!(a.dtype(), b.dtype());
+        assert_eq!(a.shape(), b.shape());
+        match a.dtype() {
+            crate::tensor::DType::F32 => assert_eq!(
+                a.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            crate::tensor::DType::F64 => assert_eq!(
+                a.to_vec::<f64>().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.to_vec::<f64>().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            crate::tensor::DType::I64 => assert_eq!(a.to_vec::<i64>(), b.to_vec::<i64>()),
+        }
+    }
+
+    #[test]
+    fn full_checkpoint_round_trips_bitwise() {
+        let path = scratch("full");
+        let mut rng = Rng::new(31);
+        for _ in 0..5 {
+            rng.next_u64();
+        }
+        let mut hypers = BTreeMap::new();
+        hypers.insert("lr".to_string(), 1e-3);
+        let mut tensors = BTreeMap::new();
+        tensors.insert("m.0".to_string(), Tensor::from_vec(vec![0.25f32, -0.5], &[2]));
+        let optim = OptimStateDict { kind: "adam".to_string(), step: 12, hypers, tensors };
+
+        let ckpt = Checkpoint {
+            model: sample_model(),
+            optim: Some(optim),
+            global_seed: 0xFEED,
+            rng_stream: Some(rng.state()),
+            loader: Some(LoaderState { seed: 9, epoch: 3, next_batch: 4 }),
+        };
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+
+        assert_eq!(back.model.len(), 3);
+        for (name, t) in &ckpt.model {
+            assert_bitwise_eq(t, &back.model[name]);
+        }
+        let bo = back.optim.as_ref().unwrap();
+        assert_eq!(bo.kind, "adam");
+        assert_eq!(bo.step, 12);
+        assert_eq!(bo.hypers["lr"], 1e-3);
+        assert_bitwise_eq(&ckpt.optim.as_ref().unwrap().tensors["m.0"], &bo.tensors["m.0"]);
+        assert_eq!(back.global_seed, 0xFEED);
+        // The restored stream continues exactly where the saved one was.
+        let mut resumed = Rng::from_state(back.rng_stream.unwrap());
+        assert_eq!(resumed.next_u64(), rng.next_u64());
+        assert_eq!(back.loader, Some(LoaderState { seed: 9, epoch: 3, next_batch: 4 }));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn minimal_checkpoint_round_trips() {
+        // Step-0 shape: no optimizer state, no loader, no explicit stream.
+        let path = scratch("minimal");
+        let ckpt = Checkpoint::new(sample_model());
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.optim.is_none());
+        assert!(back.rng_stream.is_none());
+        assert!(back.loader.is_none());
+        assert_eq!(back.global_seed, ckpt.global_seed);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_overwrites_atomically() {
+        let path = scratch("overwrite");
+        let mut m1 = BTreeMap::new();
+        m1.insert("w".to_string(), Tensor::from_vec(vec![1.0f32], &[1]));
+        Checkpoint::new(m1).save(&path).unwrap();
+        let mut m2 = BTreeMap::new();
+        m2.insert("w".to_string(), Tensor::from_vec(vec![2.0f32], &[1]));
+        Checkpoint::new(m2).save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.model["w"].to_vec::<f32>(), vec![2.0]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_of_missing_file_is_io_error() {
+        let err = Checkpoint::load(Path::new("/nonexistent/torsk.ckpt")).unwrap_err();
+        assert!(matches!(err, TorskError::Io { op: "read checkpoint", .. }), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_byte_fails_checksum() {
+        let path = scratch("bitrot");
+        Checkpoint::new(sample_model()).save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        match err {
+            TorskError::Corrupt { offset, ref what, .. } => {
+                assert_eq!(what, "checksum mismatch");
+                assert_eq!(offset, 16, "checksum lives at byte 16 of the header");
+            }
+            other => panic!("expected Corrupt, got {other}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_reports_payload_length_mismatch() {
+        let path = scratch("torn");
+        Checkpoint::new(sample_model()).save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(err, TorskError::Corrupt { ref what, .. }
+                if what == "payload length mismatch"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn wrong_magic_is_rejected_before_any_decode() {
+        let path = scratch("magic");
+        std::fs::write(&path, b"definitely not a torsk checkpoint, but long enough").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(err, TorskError::Corrupt { offset: 0, ref what, .. } if what == "bad magic"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let path = scratch("version");
+        Checkpoint::new(sample_model()).save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // version field
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(err, TorskError::Corrupt { offset: 4, ref what, .. }
+                if what == "unsupported version"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn injected_write_failure_leaves_no_partial_file() {
+        let path = scratch("chaos-write");
+        // A prior good checkpoint must survive the failed save.
+        Checkpoint::new(sample_model()).save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        chaos::arm(FAULT_WRITE, chaos::Fault::FailWriteAfter(10));
+        let err = Checkpoint::new(sample_model()).save(&path).unwrap_err();
+        chaos::disarm(FAULT_WRITE);
+        assert!(matches!(err, TorskError::Io { .. }), "{err}");
+
+        // Target intact, temp file cleaned up.
+        assert_eq!(std::fs::read(&path).unwrap(), good);
+        let dir = path.parent().unwrap();
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(&name) && n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "partial temp files left behind: {leftovers:?}");
+        // The surviving checkpoint still loads cleanly.
+        Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+}

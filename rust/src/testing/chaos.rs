@@ -1,0 +1,323 @@
+//! Fault injection for the chaos suite (`tests/chaos.rs`).
+//!
+//! Production code exposes *named fault points* (e.g. the checkpoint
+//! writer's `"checkpoint:write"`); a test arms a [`Fault`] at a point,
+//! runs the scenario, and asserts the failure surfaced the contracted way
+//! — a typed error, a loud panic, never silent truncation. When nothing
+//! is armed (always, outside tests) the hooks cost one relaxed atomic
+//! load and inject nothing.
+//!
+//! Registry faults are **thread-scoped**: they fire only on the thread
+//! that armed them. Tests run concurrently in one process, and an armed
+//! `"checkpoint:write"` must not fail some *other* test's save. Faults
+//! that must cross threads (a loader worker dying in `Dataset::get`) use
+//! the instance-scoped wrappers below instead, which inject only into
+//! the pipeline that holds them.
+//!
+//! The module also ships deterministic misbehaving pipeline pieces —
+//! [`ChaosDataset`] (panic or stall at a chosen index) and
+//! [`PanickingCollate`] — plus a [`Gate`] for stalls, so "worker wedged
+//! in `Dataset::get`" is a blocked condvar the test controls, not a
+//! `sleep` and a prayer. No threads are spawned here: faults run on
+//! whatever thread hits the fault point.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::data::{Collate, Dataset};
+use crate::tensor::Tensor;
+
+/// What an armed fault point does when execution reaches it.
+#[derive(Clone, Debug)]
+pub enum Fault {
+    /// Panic with this message (a crashed worker, a dataset bug).
+    Panic(String),
+    /// For write-style points: let the first `n` bytes through, then fail
+    /// the write (a torn checkpoint — kill -9 or disk-full mid-write).
+    FailWriteAfter(usize),
+}
+
+struct Armed {
+    fault: Fault,
+    hits: usize,
+    /// Only this thread observes the fault (see module docs).
+    thread: std::thread::ThreadId,
+}
+
+/// Number of currently armed points — the fast path: [`fire`] and
+/// [`write_fault`] skip the registry lock entirely when this is zero.
+static ARMED_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+static REGISTRY: Mutex<BTreeMap<String, Armed>> = Mutex::new(BTreeMap::new());
+
+/// Lock the registry, tolerating poison: a `Fault::Panic` unwinding out of
+/// [`fire`] must not wedge every later test in the process.
+fn registry() -> std::sync::MutexGuard<'static, BTreeMap<String, Armed>> {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm `fault` at the named point for the **calling thread** (replacing
+/// any previous arming of that point).
+pub fn arm(point: &str, fault: Fault) {
+    let mut reg = registry();
+    let armed = Armed { fault, hits: 0, thread: std::thread::current().id() };
+    if reg.insert(point.to_string(), armed).is_none() {
+        ARMED_COUNT.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Disarm the named point (no-op if it was not armed).
+pub fn disarm(point: &str) {
+    let mut reg = registry();
+    if reg.remove(point).is_some() {
+        ARMED_COUNT.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Disarm everything (test teardown).
+pub fn reset() {
+    let mut reg = registry();
+    let n = reg.len();
+    reg.clear();
+    ARMED_COUNT.fetch_sub(n, Ordering::SeqCst);
+}
+
+/// How many times the named point has fired since it was armed.
+pub fn hits(point: &str) -> usize {
+    registry().get(point).map_or(0, |a| a.hits)
+}
+
+/// Production-side hook for panic-style faults: if `point` is armed with
+/// [`Fault::Panic`], record the hit and panic with its message. Free when
+/// nothing is armed.
+pub fn fire(point: &str) {
+    if ARMED_COUNT.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let msg = {
+        let mut reg = registry();
+        match reg.get_mut(point) {
+            Some(a) if a.thread == std::thread::current().id() => {
+                a.hits += 1;
+                match &a.fault {
+                    Fault::Panic(msg) => Some(msg.clone()),
+                    Fault::FailWriteAfter(_) => None,
+                }
+            }
+            _ => None,
+        }
+    };
+    // Panic only after the registry lock is released.
+    if let Some(msg) = msg {
+        panic!("chaos[{point}]: {msg}");
+    }
+}
+
+/// Production-side hook for write-style points: if `point` is armed with
+/// [`Fault::FailWriteAfter`], record the hit and return `Some(n)` — the
+/// caller must write at most `n` bytes and then fail with an I/O error.
+/// Free when nothing is armed.
+pub fn write_fault(point: &str) -> Option<usize> {
+    if ARMED_COUNT.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let mut reg = registry();
+    match reg.get_mut(point) {
+        Some(a) if a.thread == std::thread::current().id() => {
+            if let Fault::FailWriteAfter(n) = a.fault {
+                a.hits += 1;
+                Some(n)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// A reusable open/closed latch for stall faults: threads block in
+/// [`Gate::wait`] until the test calls [`Gate::open`]. Cloning shares the
+/// gate.
+#[derive(Clone)]
+pub struct Gate {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Gate {
+    /// A new, closed gate.
+    pub fn new() -> Gate {
+        Gate { inner: Arc::new((Mutex::new(false), Condvar::new())) }
+    }
+
+    /// Open the gate, releasing every current and future [`Gate::wait`].
+    pub fn open(&self) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        cv.notify_all();
+    }
+
+    /// Block until the gate is opened (returns immediately if it already
+    /// was).
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut open = lock.lock().unwrap_or_else(|e| e.into_inner());
+        while !*open {
+            open = cv.wait(open).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl Default for Gate {
+    fn default() -> Gate {
+        Gate::new()
+    }
+}
+
+/// A [`Dataset`] wrapper that misbehaves at chosen indices: panic (a
+/// crashed worker) or block on a [`Gate`] (a wedged worker). All other
+/// indices pass through unchanged, so the surviving batches stay bitwise
+/// identical to the clean run.
+pub struct ChaosDataset {
+    inner: Arc<dyn Dataset>,
+    panic_at: Option<usize>,
+    stall_at: Option<(usize, Gate)>,
+    stalled: Gate,
+}
+
+impl ChaosDataset {
+    pub fn new(inner: Arc<dyn Dataset>) -> ChaosDataset {
+        ChaosDataset { inner, panic_at: None, stall_at: None, stalled: Gate::new() }
+    }
+
+    /// Panic when `get(index)` is called.
+    pub fn panic_at(mut self, index: usize) -> ChaosDataset {
+        self.panic_at = Some(index);
+        self
+    }
+
+    /// Block on `gate` when `get(index)` is called, until the test opens
+    /// it.
+    pub fn stall_at(mut self, index: usize, gate: Gate) -> ChaosDataset {
+        self.stall_at = Some((index, gate));
+        self
+    }
+
+    /// A gate that opens the moment a stalled `get` begins waiting — lets a
+    /// test block until the worker is provably wedged instead of sleeping.
+    pub fn stalled(&self) -> Gate {
+        self.stalled.clone()
+    }
+}
+
+impl Dataset for ChaosDataset {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        if self.panic_at == Some(index) {
+            panic!("chaos: dataset panic injected at index {index}");
+        }
+        if let Some((i, gate)) = &self.stall_at {
+            if *i == index {
+                self.stalled.open();
+                gate.wait();
+            }
+        }
+        self.inner.get(index)
+    }
+}
+
+/// A [`Collate`] that panics on its `after`-th call (0-based), modeling a
+/// collation bug that only a particular batch triggers.
+pub struct PanickingCollate {
+    inner: crate::data::DefaultCollate,
+    after: usize,
+    calls: AtomicUsize,
+}
+
+impl PanickingCollate {
+    pub fn new(after: usize) -> PanickingCollate {
+        PanickingCollate { inner: crate::data::DefaultCollate, after, calls: AtomicUsize::new(0) }
+    }
+}
+
+impl Collate for PanickingCollate {
+    fn collate(&self, samples: &[(Tensor, Tensor)]) -> (Tensor, Tensor) {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n == self.after {
+            panic!("chaos: collate panic injected on call {n}");
+        }
+        self.inner.collate(samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; these tests use distinct point names
+    // so they can run concurrently with each other.
+
+    #[test]
+    fn unarmed_points_are_free_and_silent() {
+        fire("chaos-test:never-armed");
+        assert_eq!(write_fault("chaos-test:never-armed"), None);
+        assert_eq!(hits("chaos-test:never-armed"), 0);
+    }
+
+    #[test]
+    fn armed_write_fault_reports_budget_and_hits() {
+        arm("chaos-test:w", Fault::FailWriteAfter(12));
+        assert_eq!(write_fault("chaos-test:w"), Some(12));
+        assert_eq!(write_fault("chaos-test:w"), Some(12));
+        assert_eq!(hits("chaos-test:w"), 2);
+        disarm("chaos-test:w");
+        assert_eq!(write_fault("chaos-test:w"), None);
+    }
+
+    #[test]
+    fn panic_fault_fires_with_point_name() {
+        arm("chaos-test:p", Fault::Panic("boom".into()));
+        let r = std::panic::catch_unwind(|| fire("chaos-test:p"));
+        disarm("chaos-test:p");
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("chaos[chaos-test:p]: boom"), "{msg}");
+    }
+
+    #[test]
+    fn gate_releases_waiters_on_open() {
+        let gate = Gate::new();
+        let g2 = gate.clone();
+        gate.open();
+        g2.wait(); // already open: returns immediately
+    }
+
+    #[test]
+    fn chaos_dataset_passes_through_and_panics_on_target() {
+        struct One;
+        impl Dataset for One {
+            fn len(&self) -> usize {
+                4
+            }
+            fn get(&self, i: usize) -> (Tensor, Tensor) {
+                (Tensor::full(&[1], i as f32), Tensor::from_vec(vec![i as i64], &[]))
+            }
+        }
+        let ds = ChaosDataset::new(Arc::new(One)).panic_at(2);
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.get(1).0.to_vec::<f32>(), vec![1.0]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ds.get(2)));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn panicking_collate_counts_calls() {
+        let c = PanickingCollate::new(1);
+        let samples = vec![(Tensor::ones(&[2]), Tensor::from_vec(vec![0i64], &[]))];
+        let _ = c.collate(&samples); // call 0: fine
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.collate(&samples)));
+        assert!(r.is_err(), "call 1 must panic");
+    }
+}

@@ -4,6 +4,8 @@
 
 use crate::rng::Rng;
 
+pub mod chaos;
+
 /// Run `prop` against `cases` generated inputs; panics with the seed of
 /// the first failing case so it can be replayed.
 pub fn for_all<T, G, P>(name: &str, cases: usize, mut generate: G, mut prop: P)

@@ -1,0 +1,297 @@
+//! Chaos suite: every injected fault must end in **verified recovery**
+//! (a resumed run reproduces the uninterrupted one bitwise) or a **loud,
+//! typed failure** with state intact (a panic or `TorskError`, never a
+//! silently truncated epoch, never a partial checkpoint file).
+//!
+//! Faults injected here, via `torsk::testing::chaos`:
+//! - kill a training run mid-epoch and resume from its checkpoint;
+//! - panic inside `Dataset::get` on a loader worker thread;
+//! - panic inside `Collate`;
+//! - wedge a worker forever inside `Dataset::get` (bounded drop-join);
+//! - fail a checkpoint write after N bytes (torn write);
+//! - corrupt a checkpoint on disk.
+//!
+//! No test sleeps to "give threads time": stalls are condvar [`Gate`]s
+//! the test controls, and recovery is asserted by bitwise comparison.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use torsk::data::{DataLoader, Dataset};
+use torsk::nn::{Linear, Module, ReLU, Sequential};
+use torsk::optim::{Adam, Optimizer};
+use torsk::rng::Rng;
+use torsk::serialize::{Checkpoint, LoaderState, FAULT_WRITE};
+use torsk::tensor::Tensor;
+use torsk::testing::chaos::{self, ChaosDataset, Gate, PanickingCollate};
+use torsk::TorskError;
+
+/// Serializes the tests that call `manual_seed` (the seed epoch is
+/// process-global, and tests in one binary run concurrently).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+static NEXT_FILE: AtomicUsize = AtomicUsize::new(0);
+
+fn scratch(tag: &str) -> PathBuf {
+    let n = NEXT_FILE.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!("torsk-chaos-{}-{n}-{tag}.ckpt", std::process::id()))
+}
+
+const IN: usize = 8;
+const OUT: usize = 4;
+const N: usize = 64;
+const BATCH: usize = 8; // 8 batches per epoch
+
+/// Regression pairs, deterministic per index (`Rng::for_index`), so any
+/// worker can fetch any sample and the bytes never depend on scheduling.
+struct Synth;
+
+impl Dataset for Synth {
+    fn len(&self) -> usize {
+        N
+    }
+
+    fn get(&self, index: usize) -> (Tensor, Tensor) {
+        let mut r = Rng::for_index(0xDA7A, index as u64);
+        let x: Vec<f32> = (0..IN).map(|_| r.normal()).collect();
+        let y: Vec<f32> = (0..OUT).map(|_| r.normal()).collect();
+        (Tensor::from_vec(x, &[IN]), Tensor::from_vec(y, &[OUT]))
+    }
+}
+
+fn fresh_model_and_opt(init_seed: u64) -> (Sequential, Adam) {
+    torsk::rng::manual_seed(init_seed);
+    let model = Sequential::new().add(Linear::new(IN, 16)).add(ReLU).add(Linear::new(16, OUT));
+    let opt = Adam::new(model.parameters(), 1e-2);
+    (model, opt)
+}
+
+fn loader(workers: usize) -> DataLoader {
+    DataLoader::new(Arc::new(Synth), BATCH).shuffle(true).seed(11).workers(workers)
+}
+
+fn train_step(model: &Sequential, opt: &mut Adam, x: &Tensor, y: &Tensor) {
+    opt.zero_grad();
+    let loss = model.forward(x).mse_loss(y);
+    loss.backward();
+    opt.step();
+}
+
+/// All model parameters as exact bit patterns.
+fn param_bits(model: &Sequential) -> Vec<u32> {
+    model
+        .state_dict()
+        .values()
+        .flat_map(|t| t.to_vec::<f32>().into_iter().map(f32::to_bits))
+        .collect()
+}
+
+/// Kill-and-resume determinism, the tentpole pin: a run checkpointed at
+/// (epoch 1, batch 4), killed mid-epoch (iterator dropped, workers wound
+/// down), and resumed from disk in a "fresh process" (new model, new
+/// optimizer, new loader) must finish with parameters **bitwise equal**
+/// to an uninterrupted 3-epoch run. Exercised serial and parallel; CI
+/// re-runs this suite across `PALLAS_NUM_THREADS` 1/2/8.
+#[test]
+fn kill_and_resume_matches_uninterrupted_run_bitwise() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    for workers in [0, 4] {
+        // Uninterrupted reference: 3 full epochs.
+        let (model, mut opt) = fresh_model_and_opt(42);
+        let dl = loader(workers);
+        for _ in 0..3 {
+            for (x, y) in dl.iter() {
+                train_step(&model, &mut opt, &x, &y);
+            }
+        }
+        let expected = param_bits(&model);
+
+        // Interrupted run, same init: epoch 0 in full, then 4 batches of
+        // epoch 1, checkpoint, and a mid-epoch kill.
+        let path = scratch(&format!("resume-w{workers}"));
+        let (model, mut opt) = fresh_model_and_opt(42);
+        let dl = loader(workers);
+        for (x, y) in dl.iter() {
+            train_step(&model, &mut opt, &x, &y);
+        }
+        {
+            let mut epoch1 = dl.iter();
+            for _ in 0..4 {
+                let (x, y) = epoch1.next().expect("epoch has 8 batches");
+                train_step(&model, &mut opt, &x, &y);
+            }
+            Checkpoint::new(model.state_dict())
+                .with_optimizer(&opt)
+                .with_loader(LoaderState { seed: dl.seed_value(), epoch: 1, next_batch: 4 })
+                .save(&path)
+                .unwrap();
+            // Kill: the epoch-1 iterator dies here with 4 batches unread;
+            // its workers are shut down and joined by the drop.
+        }
+        drop((model, opt, dl));
+
+        // "New process": rebuild everything with a *different* init so
+        // only the checkpoint can explain a bitwise match.
+        let (model, mut opt) = fresh_model_and_opt(999);
+        let ck = Checkpoint::load(&path).unwrap();
+        model.load_state_dict(&ck.model);
+        opt.load_state_dict(ck.optim.as_ref().unwrap());
+        let ls = ck.loader.unwrap();
+        let dl = loader(workers);
+        assert_eq!(ls.seed, dl.seed_value(), "loader must be rebuilt with the saved seed");
+        dl.resume(ls.epoch as usize, ls.next_batch as usize);
+        for (x, y) in dl.iter() {
+            // The remaining 4 batches of epoch 1.
+            train_step(&model, &mut opt, &x, &y);
+        }
+        for (x, y) in dl.iter() {
+            // Epoch 2.
+            train_step(&model, &mut opt, &x, &y);
+        }
+        assert_eq!(
+            param_bits(&model),
+            expected,
+            "resumed run (workers={workers}) must be bitwise identical"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// A worker killed by a panicking `Dataset::get` must not truncate the
+/// epoch: the consumer detects the missing batch and re-panics loudly on
+/// the training thread.
+#[test]
+#[should_panic(expected = "DataLoader worker thread panicked")]
+fn worker_death_mid_epoch_fails_loudly() {
+    let ds = ChaosDataset::new(Arc::new(Synth)).panic_at(21);
+    let dl = DataLoader::new(Arc::new(ds), BATCH).workers(2);
+    let n = dl.iter().count(); // must not complete silently
+    panic!("epoch silently yielded {n} batches past a dead worker");
+}
+
+/// Same contract when the panic is in `Collate` rather than the dataset.
+#[test]
+#[should_panic(expected = "DataLoader worker thread panicked")]
+fn collate_panic_mid_epoch_fails_loudly() {
+    let dl = DataLoader::new(Arc::new(Synth), BATCH)
+        .collate(Arc::new(PanickingCollate::new(3)))
+        .workers(2);
+    let n = dl.iter().count();
+    panic!("epoch silently yielded {n} batches past a dead collate");
+}
+
+/// At `workers = 0` the same collate bug panics in-line — the contract
+/// (loud failure, identical at any worker count) holds trivially.
+#[test]
+#[should_panic(expected = "chaos: collate panic injected")]
+fn collate_panic_is_equally_loud_in_serial_mode() {
+    let dl = DataLoader::new(Arc::new(Synth), BATCH).collate(Arc::new(PanickingCollate::new(3)));
+    let _ = dl.iter().count();
+}
+
+/// A worker wedged forever inside `Dataset::get` must not hang the
+/// training thread's `drop`: the bounded join times out, names the stuck
+/// worker and its last claimed batch, and detaches.
+#[test]
+fn wedged_worker_is_named_and_detached_on_drop() {
+    let release = Gate::new();
+    // Batch 3 holds indices 12..16 (sequential sampler): the worker that
+    // claims batch 3 blocks inside get(12) until `release` opens.
+    let ds = Arc::new(ChaosDataset::new(Arc::new(Synth)).stall_at(12, release.clone()));
+    let stalled = ds.stalled();
+    let dl = DataLoader::new(ds, 4).workers(2).join_timeout_ms(100);
+    let before = dl.stats();
+    let it = dl.iter();
+    // Provably wedged — the stalled gate opens from inside get(12) — so
+    // the drop below *must* take the timeout path; no timing assumptions.
+    stalled.wait();
+    drop(it);
+    let d = dl.stats().delta(&before);
+    assert_eq!(d.join_timeouts, 1, "drop must record the timed-out join");
+    let msg = dl.last_join_timeout().expect("diagnostic recorded");
+    assert!(msg.contains("torsk-data-"), "must name the stuck worker thread: {msg}");
+    assert!(msg.contains("last claimed batch 3"), "must name the wedged batch: {msg}");
+    // Release the detached thread so it exits cleanly (its send fails on
+    // the disconnected queue and it returns).
+    release.open();
+}
+
+/// A save that dies mid-write (disk full, kill -9) must surface a typed
+/// I/O error and leave the previous checkpoint byte-for-byte intact, with
+/// no partial or temp files.
+#[test]
+fn torn_checkpoint_write_keeps_the_previous_checkpoint() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let path = scratch("torn-write");
+    let (model, opt) = fresh_model_and_opt(7);
+    Checkpoint::new(model.state_dict()).with_optimizer(&opt).save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    chaos::arm(FAULT_WRITE, chaos::Fault::FailWriteAfter(64));
+    let err = Checkpoint::new(model.state_dict()).save(&path).unwrap_err();
+    chaos::disarm(FAULT_WRITE);
+    assert!(matches!(err, TorskError::Io { op: "write checkpoint", .. }), "{err}");
+
+    assert_eq!(std::fs::read(&path).unwrap(), good, "previous checkpoint must survive");
+    let stem = path.file_name().unwrap().to_string_lossy().into_owned();
+    let leftovers: Vec<String> = std::fs::read_dir(path.parent().unwrap())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with(&stem) && n.contains(".tmp."))
+        .collect();
+    assert!(leftovers.is_empty(), "no partial files may remain: {leftovers:?}");
+    Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// A corrupted checkpoint (bit rot, torn copy) must fail with a typed
+/// `Corrupt` error naming the failure — never load a wrong state dict.
+#[test]
+fn corrupted_checkpoint_is_a_typed_error() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let path = scratch("bitrot");
+    let (model, _) = fresh_model_and_opt(7);
+    Checkpoint::new(model.state_dict()).save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err();
+    assert!(
+        matches!(err, TorskError::Corrupt { ref what, .. } if what == "checksum mismatch"),
+        "{err}"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// The resumed batch stream itself (no training in the loop) is bitwise
+/// identical to the tail of an uninterrupted epoch, at any worker count.
+#[test]
+fn resumed_batch_stream_is_bitwise_identical_to_the_tail() {
+    let fingerprint = |dl: &DataLoader| -> Vec<(Vec<u32>, Vec<u32>)> {
+        dl.iter()
+            .map(|(x, y)| {
+                (
+                    x.to_vec::<f32>().into_iter().map(f32::to_bits).collect(),
+                    y.to_vec::<f32>().into_iter().map(f32::to_bits).collect(),
+                )
+            })
+            .collect()
+    };
+    let full = {
+        let dl = loader(0);
+        dl.set_epoch(5);
+        fingerprint(&dl)
+    };
+    for workers in [0, 4] {
+        let dl = loader(workers);
+        dl.resume(5, 3);
+        assert_eq!(
+            fingerprint(&dl),
+            full[3..],
+            "resumed tail at workers={workers} must match the uninterrupted epoch"
+        );
+    }
+}

@@ -17,15 +17,21 @@
 //! covers the measured window of the host caching allocator. The
 //! `gemm:packed:*` / `gemm:unpacked-ref:*` pairs additionally carry a
 //! `gflops` key (2·m·n·k / ns) at threads 1/2/8, and the packed results
-//! are bit-compared across those thread counts before timing. Future PRs
-//! append their numbers next to these — this file is the trajectory to
-//! beat. `BENCH_SMOKE=1` runs one tiny iteration of everything and
-//! validates the JSON schema (wired into CI as `make bench-smoke`).
+//! are bit-compared across those thread counts before timing. The
+//! `gemm:packed:*` and `fused:*` rows come in **simd pairs** — one record
+//! with the runtime-detected vector path active (`"simd": true`) and one
+//! forced scalar (`"simd": false`, the `PALLAS_SIMD=0` path) — and the
+//! packed GEMM results are bit-compared between the two modes before
+//! timing. Future PRs append their numbers next to these — this file is
+//! the trajectory to beat. `BENCH_SMOKE=1` runs one tiny iteration of
+//! everything and validates the JSON schema (wired into CI as
+//! `make bench-smoke`).
 
 use std::time::Instant;
 
 use torsk::alloc::Allocator;
 use torsk::dispatch;
+use torsk::kernels::simd::set_force_scalar;
 use torsk::nn::{self, Module};
 use torsk::ops;
 use torsk::optim::{Optimizer, Sgd};
@@ -43,6 +49,11 @@ struct Record {
     /// GFLOP/s — set on the `gemm:*` records (2*m*n*k / ns), absent
     /// elsewhere. An optional extra key on schema torsk.bench_ops.v1.
     gflops: Option<f64>,
+    /// Whether the runtime-detected vector path was allowed for this
+    /// record (`false` = forced scalar, the `PALLAS_SIMD=0` path). Set on
+    /// the paired `gemm:packed:*` / `fused:*` rows, absent elsewhere. An
+    /// optional extra key on schema torsk.bench_ops.v1.
+    simd: Option<bool>,
 }
 
 impl Record {
@@ -51,9 +62,13 @@ impl Record {
             Some(g) => format!(", \"gflops\": {g:.2}"),
             None => String::new(),
         };
+        let simd = match self.simd {
+            Some(s) => format!(", \"simd\": {s}"),
+            None => String::new(),
+        };
         format!(
             "{{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}, \
-             \"bytes_allocated\": {}, \"cache_hit_rate\": {:.4}, \"reused_outputs\": {}{}}}",
+             \"bytes_allocated\": {}, \"cache_hit_rate\": {:.4}, \"reused_outputs\": {}{}{}}}",
             self.op,
             self.size,
             self.threads,
@@ -61,7 +76,8 @@ impl Record {
             self.bytes_allocated,
             self.cache_hit_rate,
             self.reused_outputs,
-            gflops
+            gflops,
+            simd
         )
     }
 }
@@ -93,7 +109,30 @@ fn measure(op: &str, size: usize, threads: usize, reps: usize, mut f: impl FnMut
         cache_hit_rate: d.cache_hit_rate(),
         reused_outputs: (h1 - h0) / reps as u64,
         gflops: None,
+        simd: None,
     }
+}
+
+/// Measure `f` twice — vector path active, then forced scalar (what
+/// `PALLAS_SIMD=0` gives every call) — producing the paired records the
+/// SIMD work is graded on. The two records share op/size/threads and
+/// differ only in the `simd` key. On hosts where detection lands on
+/// scalar anyway, the pair still exists and the rows simply coincide.
+fn measure_simd_pair(
+    op: &str,
+    size: usize,
+    threads: usize,
+    reps: usize,
+    mut f: impl FnMut(),
+) -> [Record; 2] {
+    set_force_scalar(false);
+    let mut on = measure(op, size, threads, reps, &mut f);
+    on.simd = Some(true);
+    set_force_scalar(true);
+    let mut off = measure(op, size, threads, reps, &mut f);
+    off.simd = Some(false);
+    set_force_scalar(false);
+    [on, off]
 }
 
 fn thread_sweep() -> Vec<usize> {
@@ -165,26 +204,26 @@ fn main() {
             };
             for &th in &threads {
                 let reps = reps_for(n, smoke);
-                records.push(measure("fused:sigmoid_bce", n, th, reps, || {
+                records.extend(measure_simd_pair("fused:sigmoid_bce", n, th, reps, || {
                     std::hint::black_box(ops::bce_with_logits(&x, &t));
                 }));
                 records.push(measure("unfused:sigmoid_bce", n, th, reps, || {
                     std::hint::black_box(unfused_bce(&ops::sigmoid(&x), &t));
                 }));
-                records.push(measure("fused:mse", n, th, reps, || {
+                records.extend(measure_simd_pair("fused:mse", n, th, reps, || {
                     std::hint::black_box(ops::mse_loss(&x, &t));
                 }));
                 records.push(measure("unfused:mse", n, th, reps, || {
                     let d = ops::sub(&x, &t);
                     std::hint::black_box(ops::mean(&ops::mul(&d, &d)));
                 }));
-                records.push(measure("fused:bce", n, th, reps, || {
+                records.extend(measure_simd_pair("fused:bce", n, th, reps, || {
                     std::hint::black_box(ops::bce_loss(&p, &t));
                 }));
                 records.push(measure("unfused:bce", n, th, reps, || {
                     std::hint::black_box(unfused_bce(&p, &t));
                 }));
-                records.push(measure("fused:gelu", n, th, reps, || {
+                records.extend(measure_simd_pair("fused:gelu", n, th, reps, || {
                     std::hint::black_box(ops::gelu(&x));
                 }));
                 records.push(measure("unfused:gelu", n, th, reps, || {
@@ -208,7 +247,7 @@ fn main() {
         let beta = Tensor::randn(&[d]);
         for &th in &threads {
             let reps = reps_for(r * d, smoke);
-            records.push(measure("fused:ln_tail", r * d, th, reps, || {
+            records.extend(measure_simd_pair("fused:ln_tail", r * d, th, reps, || {
                 let args: [&Tensor; 4] = [&c, &is, &gamma, &beta];
                 std::hint::black_box(dispatch::call("fused:ln_tail", &args, &[]));
             }));
@@ -235,7 +274,7 @@ fn main() {
         ];
         for &th in &threads {
             let reps = reps_for(n, smoke);
-            records.push(measure("fused:adam_step", n, th, reps, || {
+            records.extend(measure_simd_pair("fused:adam_step", n, th, reps, || {
                 dispatch::call("fused:adam_step", &[&p1, &g1, &m1, &v1], &adam_params);
             }));
             records.push(measure("unfused:adam_step", n, th, reps, || {
@@ -327,11 +366,21 @@ fn main() {
             let flop = (2 * m * n * k) as f64;
             let mut pinned: Option<Vec<f32>> = None;
             for &t in &[1usize, 2, 8] {
-                // Determinism pin: identical bits at every thread count.
+                // Determinism pin: identical bits at every thread count,
+                // and identical bits between the vector path and forced
+                // scalar (the PALLAS_SIMD=0 contract).
                 torsk::kernels::set_num_threads(t);
                 let mut c = vec![0.0f32; m * n];
                 sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                let mut c_scalar = vec![0.0f32; m * n];
+                set_force_scalar(true);
+                sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c_scalar);
+                set_force_scalar(false);
                 torsk::kernels::set_num_threads(0);
+                if c_scalar != c {
+                    eprintln!("gemm:{name}: simd and forced-scalar bits differ at {t} threads");
+                    std::process::exit(1);
+                }
                 if let Some(p) = &pinned {
                     if p != &c {
                         eprintln!("gemm:{name}: packed result differs at {t} threads");
@@ -343,12 +392,15 @@ fn main() {
 
                 let reps = if smoke { 1 } else { 20 };
                 let mut c = vec![0.0f32; m * n];
-                let mut r = measure(&format!("gemm:packed:{name}"), m * n * k, t, reps, || {
-                    sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c);
-                    std::hint::black_box(&c);
-                });
-                r.gflops = Some(flop / r.ns_per_iter);
-                records.push(r);
+                let mut pair =
+                    measure_simd_pair(&format!("gemm:packed:{name}"), m * n * k, t, reps, || {
+                        sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                        std::hint::black_box(&c);
+                    });
+                for r in &mut pair {
+                    r.gflops = Some(flop / r.ns_per_iter);
+                }
+                records.extend(pair);
                 let mut r = measure(&format!("gemm:unpacked-ref:{name}"), m * n * k, t, reps, || {
                     sgemm_unpacked(m, n, k, 1.0, &a, &b, 0.0, &mut c);
                     std::hint::black_box(&c);
@@ -462,6 +514,7 @@ fn main() {
             cache_hit_rate: d.cache_hit_rate(),
             reused_outputs: (h1 - h0) / iters as u64,
             gflops: None,
+            simd: None,
         });
     }
 
@@ -535,6 +588,16 @@ fn main() {
             );
         }
     }
+    for op in ["gemm:packed:square", "fused:sigmoid_bce", "fused:ln_tail"] {
+        let on = records.iter().find(|r| r.op == op && r.threads == 1 && r.simd == Some(true));
+        let off = records.iter().find(|r| r.op == op && r.threads == 1 && r.simd == Some(false));
+        if let (Some(on), Some(off)) = (on, off) {
+            println!(
+                "simd {op}: {:.2}x vs forced scalar at 1 thread",
+                off.ns_per_iter / on.ns_per_iter
+            );
+        }
+    }
 
     // ---- emit + validate JSON ----
     let mut json = String::new();
@@ -589,6 +652,13 @@ fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
         // GEMM rows additionally carry throughput.
         if body.contains("\"op\": \"gemm:") && !body.contains("\"gflops\"") {
             return Err(format!("record {i}: gemm record missing \"gflops\""));
+        }
+        // The vectorized rows come in simd/scalar pairs — each record
+        // must say which half of the pair it is.
+        if (body.contains("\"op\": \"gemm:packed:") || body.contains("\"op\": \"fused:"))
+            && !body.contains("\"simd\"")
+        {
+            return Err(format!("record {i}: paired record missing \"simd\""));
         }
     }
     Ok(())

@@ -50,6 +50,8 @@ use super::iter::REDUCE_CHUNK;
 use super::reduce::sum_to_shape;
 use super::{same_device, OpCtx, OpDef, OpSample, Param, Registry};
 
+mod simd;
+
 // ---------------------------------------------------------------------
 // Micro-ops
 // ---------------------------------------------------------------------
@@ -394,6 +396,12 @@ fn run_map_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], op: SendP
     // n and the caller keeps the tensors alive across this call; chunks
     // write disjoint ranges [s, e) of the n-element output.
     parallel_for(n, SERIAL_GRAIN, |s, e| unsafe {
+        // Vector fast path: the same instruction sequence per element,
+        // over lane blocks (see `fuse/simd.rs` for the bitwise-parity
+        // argument); declines when no vector unit is active.
+        if simd::map_range::<T>(tape, srcs, op, s, e) {
+            return;
+        }
         let mut args = [T::ZERO; MAX_ARGS];
         let po = op.ptr() as *mut T;
         for i in s..e {
@@ -420,15 +428,27 @@ fn run_map_sum_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], n: us
             args[k] = std::ptr::read((p.ptr() as *const T).add(src_index(*acc, i)));
         }
     };
-    let nchunks = n.div_ceil(REDUCE_CHUNK);
-    if nchunks == 1 {
+    // Sum one chunk `[s, e)` from zero in ascending index order. The
+    // vector path evaluates the identical addition chain over lane
+    // blocks (see `fuse/simd.rs`) and declines when no vector unit is
+    // active, so both branches produce the same bits.
+    // SAFETY: read-only gathers within the planned extents, as in
+    // `gather` above (the vector path inherits the same contract).
+    let chunk_sum = |s: usize, e: usize| unsafe {
+        if let Some(v) = simd::sum_range::<T>(tape, srcs, s, e) {
+            return v;
+        }
         let mut args = [T::ZERO; MAX_ARGS];
         let mut acc = T::ZERO;
-        for i in 0..n {
+        for i in s..e {
             gather(i, &mut args);
             acc = acc + tape.eval(&args[..nargs]);
         }
-        return acc;
+        acc
+    };
+    let nchunks = n.div_ceil(REDUCE_CHUNK);
+    if nchunks == 1 {
+        return chunk_sum(0, n);
     }
     let mut partials: Vec<T> = vec![T::ZERO; nchunks];
     let pp = SendPtr::new(partials.as_mut_ptr() as *mut u8);
@@ -436,15 +456,10 @@ fn run_map_sum_t<T: FloatElement>(tape: &Tape, srcs: &[(SendPtr, Access)], n: us
     // writes only partials[c], and source reads are bounds-safe as in
     // `gather` above.
     parallel_for(nchunks, 1, |c0, c1| unsafe {
-        let mut args = [T::ZERO; MAX_ARGS];
         for c in c0..c1 {
             let s = c * REDUCE_CHUNK;
             let e = ((c + 1) * REDUCE_CHUNK).min(n);
-            let mut acc = T::ZERO;
-            for i in s..e {
-                gather(i, &mut args);
-                acc = acc + tape.eval(&args[..nargs]);
-            }
+            let acc = chunk_sum(s, e);
             // SAFETY: each chunk index written by exactly one task.
             std::ptr::write((pp.ptr() as *mut T).add(c), acc);
         }

@@ -1,0 +1,998 @@
+//! SIMD block evaluation for the fused micro-op tapes.
+//!
+//! [`map_range`]/[`sum_range`] are the vector twins of the scalar loops
+//! in `run_map_t`/`run_map_sum_t`: they interpret the *same* tape, but
+//! over a block of `LANES` consecutive output elements at a time, with a
+//! vector stack replacing the scalar stack. The drivers fall back to the
+//! scalar interpreter (returning `false`/`None`) whenever
+//! [`crate::kernels::simd::level`] reports no vector unit — including
+//! under `PALLAS_SIMD=0` and `set_force_scalar`.
+//!
+//! # Why the bits cannot change
+//!
+//! Lanes are *independent output elements*. Every micro-op maps to a
+//! per-lane-exact vector operation (add/sub/mul/div/sqrt are IEEE
+//! correctly rounded per lane; Neg is the sign-bit flip; Ge/Le are
+//! ordered-quiet compares masked to 1.0, which a NaN fails exactly like
+//! the scalar branch), and the ops whose vector semantics differ from
+//! Rust's scalar semantics — `exp`/`ln`/`tanh` (libm) and `max`/`min`
+//! (NaN/±0 rules) — are evaluated lane-by-lane with the *same scalar
+//! function* the scalar interpreter calls. So lane `l` of a block at `i`
+//! performs exactly the instruction sequence `Tape::eval` performs for
+//! element `i + l`: same operations, same operand pairs, same rounding.
+//! The sum driver folds a block's lanes back into the accumulator in
+//! ascending index order, which is precisely the scalar chunk's
+//! `acc = acc + v[i]` chain — so [`super::REDUCE_CHUNK`] partials are
+//! bitwise unchanged too.
+
+use crate::tensor::storage::SendPtr;
+use crate::tensor::FloatElement;
+
+use super::{Access, Tape};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::{src_index, BinaryK, MicroOp, UnaryK, MAX_ARGS, MAX_STACK};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::kernels::simd::{self, SimdLevel};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::tensor::DType;
+
+/// Run the `run_map_t` inner loop for `[s, e)` with vector blocks.
+/// Returns `false` — having touched nothing — when no vector path is
+/// active for this dtype/arch, and the caller's scalar loop runs.
+///
+/// # Safety: same contract as `run_map_t`'s `parallel_for` body — every
+/// source sized for its `Access` pattern against the pass length, `out`
+/// valid for `[s, e)`, disjoint across chunks; `out` may alias a `Flat`
+/// source (output stealing) because reads and writes stay index-aligned.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(super) unsafe fn map_range<T: FloatElement>(
+    tape: &Tape,
+    srcs: &[(SendPtr, Access)],
+    out: SendPtr,
+    s: usize,
+    e: usize,
+) -> bool {
+    match (T::DTYPE, simd::level()) {
+        #[cfg(target_arch = "x86_64")]
+        (DType::F32, SimdLevel::Avx2) => {
+            // SAFETY: AVX2 per the cached probe; buffer contract forwarded.
+            unsafe { drivers::map_f32(tape, srcs, out, s, e) };
+            true
+        }
+        #[cfg(target_arch = "x86_64")]
+        (DType::F64, SimdLevel::Avx2) => {
+            // SAFETY: AVX2 per the cached probe; buffer contract forwarded.
+            unsafe { drivers::map_f64(tape, srcs, out, s, e) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        (DType::F32, SimdLevel::Neon) => {
+            // SAFETY: NEON is baseline on aarch64; contract forwarded.
+            unsafe { drivers::map_f32(tape, srcs, out, s, e) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        (DType::F64, SimdLevel::Neon) => {
+            // SAFETY: NEON is baseline on aarch64; contract forwarded.
+            unsafe { drivers::map_f64(tape, srcs, out, s, e) };
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Architectures with no vector path: always decline.
+///
+/// # Safety: never dereferences anything (trivially satisfies the
+/// `run_map_t` chunk contract it inherits).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(super) unsafe fn map_range<T: FloatElement>(
+    _tape: &Tape,
+    _srcs: &[(SendPtr, Access)],
+    _out: SendPtr,
+    _s: usize,
+    _e: usize,
+) -> bool {
+    false
+}
+
+/// Sum one `REDUCE_CHUNK`-bounded range `[s, e)` of tape values, from
+/// zero, in ascending index order — the exact scalar chunk chain.
+/// `None` when no vector path is active (caller runs the scalar loop).
+///
+/// # Safety: same read-only contract as `run_map_sum_t`'s gathers —
+/// every source sized for its `Access` pattern against the pass length.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(super) unsafe fn sum_range<T: FloatElement>(
+    tape: &Tape,
+    srcs: &[(SendPtr, Access)],
+    s: usize,
+    e: usize,
+) -> Option<T> {
+    match (T::DTYPE, simd::level()) {
+        #[cfg(target_arch = "x86_64")]
+        (DType::F32, SimdLevel::Avx2) => {
+            // SAFETY: AVX2 per the cached probe; read contract forwarded.
+            // f32 -> f64 -> T (= f32 in this arm at runtime) round-trips
+            // exactly.
+            Some(T::from_f64(unsafe { drivers::sum_f32(tape, srcs, s, e) } as f64))
+        }
+        #[cfg(target_arch = "x86_64")]
+        (DType::F64, SimdLevel::Avx2) => {
+            // SAFETY: AVX2 per the cached probe; read contract forwarded.
+            Some(T::from_f64(unsafe { drivers::sum_f64(tape, srcs, s, e) }))
+        }
+        #[cfg(target_arch = "aarch64")]
+        (DType::F32, SimdLevel::Neon) => {
+            // SAFETY: NEON is baseline on aarch64; contract forwarded.
+            Some(T::from_f64(unsafe { drivers::sum_f32(tape, srcs, s, e) } as f64))
+        }
+        #[cfg(target_arch = "aarch64")]
+        (DType::F64, SimdLevel::Neon) => {
+            // SAFETY: NEON is baseline on aarch64; contract forwarded.
+            Some(T::from_f64(unsafe { drivers::sum_f64(tape, srcs, s, e) }))
+        }
+        _ => None,
+    }
+}
+
+/// Architectures with no vector path: always decline.
+///
+/// # Safety: never dereferences anything.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(super) unsafe fn sum_range<T: FloatElement>(
+    _tape: &Tape,
+    _srcs: &[(SendPtr, Access)],
+    _s: usize,
+    _e: usize,
+) -> Option<T> {
+    None
+}
+
+// ---------------------------------------------------------------------
+// Generic vector interpreter (monomorphized per arch × dtype below)
+// ---------------------------------------------------------------------
+
+/// Widest lane count any [`Lanes`] impl uses (AVX2 f32); sizes the
+/// fixed spill buffers.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const MAX_LANES: usize = 8;
+
+/// A vector of `N` consecutive elements. Implementations promise that
+/// `add`/`sub`/`mul`/`div`/`sqrt`/`neg`/`ge_mask`/`le_mask` are
+/// per-lane bitwise identical to the corresponding scalar `FloatElement`
+/// operation (the module-level contract).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+trait Lanes: Copy {
+    type Elem: FloatElement;
+    const N: usize;
+
+    fn splat(x: Self::Elem) -> Self;
+    /// # Safety: `p` must be valid for reads of `N` elements.
+    unsafe fn load(p: *const Self::Elem) -> Self;
+    /// # Safety: `p` must be valid for writes of `N` elements.
+    unsafe fn store(self, p: *mut Self::Elem);
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn div(self, o: Self) -> Self;
+    fn sqrt(self) -> Self;
+    fn neg(self) -> Self;
+    /// `1.0` where `self >= o`, else `0.0` (NaN compares false).
+    fn ge_mask(self, o: Self) -> Self;
+    /// `1.0` where `self <= o`, else `0.0` (NaN compares false).
+    fn le_mask(self, o: Self) -> Self;
+
+    /// Spill the lanes into the head of a fixed buffer.
+    fn write(self, dst: &mut [Self::Elem; MAX_LANES]) {
+        // SAFETY: `MAX_LANES >= N` for every impl, so the store stays
+        // inside `dst`.
+        unsafe { self.store(dst.as_mut_ptr()) }
+    }
+
+    /// Reload lanes from the head of a fixed buffer.
+    fn read(src: &[Self::Elem; MAX_LANES]) -> Self {
+        // SAFETY: `MAX_LANES >= N` for every impl.
+        unsafe { Self::load(src.as_ptr()) }
+    }
+}
+
+/// Apply a scalar function to every lane — the escape hatch for ops with
+/// no bitwise-safe vector form (libm transcendentals, `fmax`/`fmin`).
+/// Per lane it is literally the scalar interpreter's call.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn map_lanes<V: Lanes>(x: V, f: impl Fn(V::Elem) -> V::Elem) -> V {
+    let mut buf = [V::Elem::ZERO; MAX_LANES];
+    x.write(&mut buf);
+    for v in buf[..V::N].iter_mut() {
+        *v = f(*v);
+    }
+    V::read(&buf)
+}
+
+/// Two-operand lane-by-lane escape hatch (`fmax`/`fmin`).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn map2_lanes<V: Lanes>(x: V, y: V, f: impl Fn(V::Elem, V::Elem) -> V::Elem) -> V {
+    let mut bx = [V::Elem::ZERO; MAX_LANES];
+    let mut by = [V::Elem::ZERO; MAX_LANES];
+    x.write(&mut bx);
+    y.write(&mut by);
+    for (a, &b) in bx[..V::N].iter_mut().zip(by[..V::N].iter()) {
+        *a = f(*a, b);
+    }
+    V::read(&bx)
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn apply_un_v<V: Lanes>(k: UnaryK, x: V) -> V {
+    match k {
+        UnaryK::Neg => x.neg(),
+        UnaryK::Exp => map_lanes(x, V::Elem::fexp),
+        UnaryK::Ln => map_lanes(x, V::Elem::fln),
+        UnaryK::Sqrt => x.sqrt(),
+        UnaryK::Recip => V::splat(V::Elem::ONE).div(x),
+        UnaryK::Tanh => map_lanes(x, V::Elem::ftanh),
+    }
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn apply_bin_v<V: Lanes>(k: BinaryK, x: V, y: V) -> V {
+    match k {
+        BinaryK::Add => x.add(y),
+        BinaryK::Sub => x.sub(y),
+        BinaryK::Mul => x.mul(y),
+        BinaryK::Div => x.div(y),
+        // `fmax`/`fmin` keep Rust's NaN/±0 semantics (maxps/vmaxq
+        // differ), so they run per lane through the scalar fn.
+        BinaryK::Max => map2_lanes(x, y, V::Elem::fmax),
+        BinaryK::Min => map2_lanes(x, y, V::Elem::fmin),
+        BinaryK::Ge => x.ge_mask(y),
+        BinaryK::Le => x.le_mask(y),
+    }
+}
+
+/// Gather one operand for lanes `[i, i + N)`, honoring its [`Access`]
+/// pattern. Fast paths: `Flat` is one contiguous load, `Scalar` a
+/// splat, an in-row `Row` block a splat of that row's value, an in-row
+/// `Col` block a contiguous load of the column slice; blocks that cross
+/// a row boundary gather lane-by-lane through `src_index`.
+///
+/// # Safety: `p` must be sized for its `Access` pattern over the pass
+/// (the `plan_srcs` contract), with `i + N` within the pass length.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn load_operand<V: Lanes>(src: &(SendPtr, Access), i: usize) -> V {
+    let (p, access) = *src;
+    let base = p.ptr() as *const V::Elem;
+    // SAFETY: every index read below is `src_index(access, j)` for some
+    // j in [i, i+N), which the plan bounds to the operand's extent; the
+    // Flat/Col contiguous loads read exactly those indices.
+    unsafe {
+        match access {
+            Access::Flat => V::load(base.add(i)),
+            Access::Scalar => V::splat(*base),
+            Access::Row(inner) => {
+                if i % inner + V::N <= inner {
+                    V::splat(*base.add(i / inner))
+                } else {
+                    gather::<V>(base, access, i)
+                }
+            }
+            Access::Col(inner) => {
+                let col = i % inner;
+                if col + V::N <= inner {
+                    V::load(base.add(col))
+                } else {
+                    gather::<V>(base, access, i)
+                }
+            }
+        }
+    }
+}
+
+/// Lane-by-lane gather through `src_index` — the slow generic path for
+/// blocks that straddle a row boundary.
+///
+/// # Safety: as in [`load_operand`].
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn gather<V: Lanes>(base: *const V::Elem, access: Access, i: usize) -> V {
+    let mut buf = [V::Elem::ZERO; MAX_LANES];
+    for (l, slot) in buf[..V::N].iter_mut().enumerate() {
+        // SAFETY: src_index stays within the operand extent per the
+        // caller's contract.
+        *slot = unsafe { *base.add(src_index(access, i + l)) };
+    }
+    V::read(&buf)
+}
+
+/// Evaluate the tape for lanes `[i, i + N)`: instruction-for-instruction
+/// the scalar `Tape::eval`, with a vector stack.
+///
+/// # Safety: as in [`load_operand`]; `Load` indices are tape-verified
+/// against `srcs.len()` at build time.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn eval_block<V: Lanes>(tape: &Tape, srcs: &[(SendPtr, Access)], i: usize) -> V {
+    let mut stack = [V::splat(V::Elem::ZERO); MAX_STACK];
+    let mut sp = 0usize;
+    for op in &tape.ops {
+        match *op {
+            MicroOp::Load(k) => {
+                // SAFETY: operand extents per this fn's contract.
+                stack[sp] = unsafe { load_operand::<V>(&srcs[k as usize], i) };
+                sp += 1;
+            }
+            MicroOp::Const(c) => {
+                stack[sp] = V::splat(V::Elem::from_f64(c));
+                sp += 1;
+            }
+            MicroOp::Dup => {
+                stack[sp] = stack[sp - 1];
+                sp += 1;
+            }
+            MicroOp::Swap => stack.swap(sp - 1, sp - 2),
+            MicroOp::Un(k) => stack[sp - 1] = apply_un_v(k, stack[sp - 1]),
+            MicroOp::Bin(k) => {
+                sp -= 1;
+                stack[sp - 1] = apply_bin_v(k, stack[sp - 1], stack[sp]);
+            }
+        }
+    }
+    debug_assert_eq!(sp, 1);
+    stack[0]
+}
+
+/// Whole-block map driver: vector blocks over `[s, e)`, scalar
+/// interpreter for the tail.
+///
+/// # Safety: the `run_map_t` chunk contract (see [`map_range`]).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn map_blocks<V: Lanes>(
+    tape: &Tape,
+    srcs: &[(SendPtr, Access)],
+    out: SendPtr,
+    s: usize,
+    e: usize,
+) {
+    let po = out.ptr() as *mut V::Elem;
+    let nargs = srcs.len();
+    let mut i = s;
+    // SAFETY: each block reads all its lanes' args before storing
+    // out[i..i+N) — the same per-index read-then-write order as the
+    // scalar loop, so index-aligned Flat aliasing (output stealing)
+    // stays sound; the tail is literally the scalar loop.
+    unsafe {
+        while i + V::N <= e {
+            let v = eval_block::<V>(tape, srcs, i);
+            v.store(po.add(i));
+            i += V::N;
+        }
+        let mut args = [V::Elem::ZERO; MAX_ARGS];
+        for j in i..e {
+            for (k, (p, acc)) in srcs.iter().enumerate() {
+                args[k] = std::ptr::read((p.ptr() as *const V::Elem).add(src_index(*acc, j)));
+            }
+            std::ptr::write(po.add(j), tape.eval(&args[..nargs]));
+        }
+    }
+}
+
+/// Whole-range sum driver: fold each block's lanes into the accumulator
+/// in ascending index order, scalar tail — the exact scalar chunk chain.
+///
+/// # Safety: the `run_map_sum_t` read contract (see [`sum_range`]).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn sum_blocks<V: Lanes>(
+    tape: &Tape,
+    srcs: &[(SendPtr, Access)],
+    s: usize,
+    e: usize,
+) -> V::Elem {
+    let nargs = srcs.len();
+    let mut acc = V::Elem::ZERO;
+    let mut buf = [V::Elem::ZERO; MAX_LANES];
+    let mut i = s;
+    // SAFETY: read-only gathers within the planned extents; lane values
+    // fold in ascending index order, so every addition happens in the
+    // scalar chunk's order.
+    unsafe {
+        while i + V::N <= e {
+            eval_block::<V>(tape, srcs, i).write(&mut buf);
+            for &x in &buf[..V::N] {
+                acc = acc + x;
+            }
+            i += V::N;
+        }
+        let mut args = [V::Elem::ZERO; MAX_ARGS];
+        for j in i..e {
+            for (k, (p, a)) in srcs.iter().enumerate() {
+                args[k] = std::ptr::read((p.ptr() as *const V::Elem).add(src_index(*a, j)));
+            }
+            acc = acc + tape.eval(&args[..nargs]);
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// Lane types + concrete drivers per architecture
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod lanes_impl {
+    use core::arch::x86_64::*;
+
+    use super::Lanes;
+
+    /// 8 × f32 in a `__m256`. Intrinsic calls carry the feature-presence
+    /// obligation; the drivers only run after `level()` reported AVX2.
+    #[derive(Clone, Copy)]
+    pub(super) struct F32x8(__m256);
+
+    impl Lanes for F32x8 {
+        type Elem = f32;
+        const N: usize = 8;
+
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            // SAFETY: AVX2 presence established by the cached probe
+            // before any vector driver runs; register-only op.
+            F32x8(unsafe { _mm256_set1_ps(x) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            // SAFETY: AVX2 per the cached probe; `p` valid for 8 reads
+            // per this fn's contract (unaligned load).
+            F32x8(unsafe { _mm256_loadu_ps(p) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            // SAFETY: AVX2 per the cached probe; `p` valid for 8 writes
+            // per this fn's contract (unaligned store).
+            unsafe { _mm256_storeu_ps(p, self.0) }
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F32x8(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F32x8(unsafe { _mm256_sub_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F32x8(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F32x8(unsafe { _mm256_div_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op
+            // (vsqrtps is IEEE correctly rounded, like scalar sqrt).
+            F32x8(unsafe { _mm256_sqrt_ps(self.0) })
+        }
+
+        #[inline(always)]
+        fn neg(self) -> Self {
+            // SAFETY: AVX2 per the cached probe. XOR with -0.0 flips
+            // exactly the sign bit — the scalar `-x` on every payload,
+            // NaNs included.
+            F32x8(unsafe { _mm256_xor_ps(self.0, _mm256_set1_ps(-0.0)) })
+        }
+
+        #[inline(always)]
+        fn ge_mask(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe. `_CMP_GE_OQ` (ordered,
+            // quiet) is all-ones where x >= y and zero otherwise — NaN
+            // compares false, matching the scalar branch — then masking
+            // with 1.0 yields exactly {1.0, 0.0}.
+            F32x8(unsafe {
+                _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(self.0, o.0), _mm256_set1_ps(1.0))
+            })
+        }
+
+        #[inline(always)]
+        fn le_mask(self, o: Self) -> Self {
+            // SAFETY: as in `ge_mask`, with `_CMP_LE_OQ`.
+            F32x8(unsafe {
+                _mm256_and_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(self.0, o.0), _mm256_set1_ps(1.0))
+            })
+        }
+    }
+
+    /// 4 × f64 in a `__m256d`; the f64 twin of [`F32x8`].
+    #[derive(Clone, Copy)]
+    pub(super) struct F64x4(__m256d);
+
+    impl Lanes for F64x4 {
+        type Elem = f64;
+        const N: usize = 4;
+
+        #[inline(always)]
+        fn splat(x: f64) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_set1_pd(x) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f64) -> Self {
+            // SAFETY: AVX2 per the cached probe; `p` valid for 4 reads
+            // per this fn's contract (unaligned load).
+            F64x4(unsafe { _mm256_loadu_pd(p) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f64) {
+            // SAFETY: AVX2 per the cached probe; `p` valid for 4 writes
+            // per this fn's contract (unaligned store).
+            unsafe { _mm256_storeu_pd(p, self.0) }
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_add_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_sub_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_mul_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_div_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            // SAFETY: AVX2 per the cached probe; register-only op.
+            F64x4(unsafe { _mm256_sqrt_pd(self.0) })
+        }
+
+        #[inline(always)]
+        fn neg(self) -> Self {
+            // SAFETY: AVX2 per the cached probe; sign-bit XOR, exactly
+            // the scalar `-x`.
+            F64x4(unsafe { _mm256_xor_pd(self.0, _mm256_set1_pd(-0.0)) })
+        }
+
+        #[inline(always)]
+        fn ge_mask(self, o: Self) -> Self {
+            // SAFETY: AVX2 per the cached probe; ordered-quiet compare
+            // masked to 1.0, as in F32x8::ge_mask.
+            F64x4(unsafe {
+                _mm256_and_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(self.0, o.0), _mm256_set1_pd(1.0))
+            })
+        }
+
+        #[inline(always)]
+        fn le_mask(self, o: Self) -> Self {
+            // SAFETY: as in `ge_mask`, with `_CMP_LE_OQ`.
+            F64x4(unsafe {
+                _mm256_and_pd(_mm256_cmp_pd::<_CMP_LE_OQ>(self.0, o.0), _mm256_set1_pd(1.0))
+            })
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod lanes_impl {
+    use core::arch::aarch64::*;
+
+    use super::Lanes;
+
+    /// 4 × f32 in a `float32x4_t` (NEON is baseline on aarch64).
+    #[derive(Clone, Copy)]
+    pub(super) struct F32x4(float32x4_t);
+
+    impl Lanes for F32x4 {
+        type Elem = f32;
+        const N: usize = 4;
+
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            // SAFETY: NEON is baseline on aarch64; register-only op.
+            F32x4(unsafe { vdupq_n_f32(x) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            // SAFETY: NEON baseline; `p` valid for 4 reads per contract.
+            F32x4(unsafe { vld1q_f32(p) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            // SAFETY: NEON baseline; `p` valid for 4 writes per contract.
+            unsafe { vst1q_f32(p, self.0) }
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F32x4(unsafe { vaddq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F32x4(unsafe { vsubq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F32x4(unsafe { vmulq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op (A64 vdivq is
+            // IEEE correctly rounded, like scalar division).
+            F32x4(unsafe { vdivq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            // SAFETY: NEON baseline; vsqrtq is correctly rounded.
+            F32x4(unsafe { vsqrtq_f32(self.0) })
+        }
+
+        #[inline(always)]
+        fn neg(self) -> Self {
+            // SAFETY: NEON baseline; vnegq is the sign-bit flip, the
+            // scalar `-x` on every payload.
+            F32x4(unsafe { vnegq_f32(self.0) })
+        }
+
+        #[inline(always)]
+        fn ge_mask(self, o: Self) -> Self {
+            // SAFETY: NEON baseline. vcgeq is all-ones where x >= y and
+            // zero otherwise (NaN compares false, like the scalar
+            // branch); AND with the bit pattern of 1.0 yields {1.0, 0.0}.
+            F32x4(unsafe {
+                vreinterpretq_f32_u32(vandq_u32(
+                    vcgeq_f32(self.0, o.0),
+                    vreinterpretq_u32_f32(vdupq_n_f32(1.0)),
+                ))
+            })
+        }
+
+        #[inline(always)]
+        fn le_mask(self, o: Self) -> Self {
+            // SAFETY: as in `ge_mask`, with vcleq.
+            F32x4(unsafe {
+                vreinterpretq_f32_u32(vandq_u32(
+                    vcleq_f32(self.0, o.0),
+                    vreinterpretq_u32_f32(vdupq_n_f32(1.0)),
+                ))
+            })
+        }
+    }
+
+    /// 2 × f64 in a `float64x2_t`; the f64 twin of [`F32x4`].
+    #[derive(Clone, Copy)]
+    pub(super) struct F64x2(float64x2_t);
+
+    impl Lanes for F64x2 {
+        type Elem = f64;
+        const N: usize = 2;
+
+        #[inline(always)]
+        fn splat(x: f64) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F64x2(unsafe { vdupq_n_f64(x) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f64) -> Self {
+            // SAFETY: NEON baseline; `p` valid for 2 reads per contract.
+            F64x2(unsafe { vld1q_f64(p) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f64) {
+            // SAFETY: NEON baseline; `p` valid for 2 writes per contract.
+            unsafe { vst1q_f64(p, self.0) }
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F64x2(unsafe { vaddq_f64(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F64x2(unsafe { vsubq_f64(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F64x2(unsafe { vmulq_f64(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; register-only op.
+            F64x2(unsafe { vdivq_f64(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            // SAFETY: NEON baseline; vsqrtq is correctly rounded.
+            F64x2(unsafe { vsqrtq_f64(self.0) })
+        }
+
+        #[inline(always)]
+        fn neg(self) -> Self {
+            // SAFETY: NEON baseline; sign-bit flip, the scalar `-x`.
+            F64x2(unsafe { vnegq_f64(self.0) })
+        }
+
+        #[inline(always)]
+        fn ge_mask(self, o: Self) -> Self {
+            // SAFETY: NEON baseline; compare-then-mask as in F32x4.
+            F64x2(unsafe {
+                vreinterpretq_f64_u64(vandq_u64(
+                    vcgeq_f64(self.0, o.0),
+                    vreinterpretq_u64_f64(vdupq_n_f64(1.0)),
+                ))
+            })
+        }
+
+        #[inline(always)]
+        fn le_mask(self, o: Self) -> Self {
+            // SAFETY: as in `ge_mask`, with vcleq.
+            F64x2(unsafe {
+                vreinterpretq_f64_u64(vandq_u64(
+                    vcleq_f64(self.0, o.0),
+                    vreinterpretq_u64_f64(vdupq_n_f64(1.0)),
+                ))
+            })
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod drivers {
+    use super::lanes_impl::{F32x8, F64x4};
+    use super::{map_blocks, sum_blocks, Access, SendPtr, Tape};
+
+    /// # Safety: AVX2 must be present; the `run_map_t` chunk contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn map_f32(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        out: SendPtr,
+        s: usize,
+        e: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { map_blocks::<F32x8>(tape, srcs, out, s, e) }
+    }
+
+    /// # Safety: AVX2 must be present; the `run_map_t` chunk contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn map_f64(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        out: SendPtr,
+        s: usize,
+        e: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { map_blocks::<F64x4>(tape, srcs, out, s, e) }
+    }
+
+    /// # Safety: AVX2 must be present; the `run_map_sum_t` read contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum_f32(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        s: usize,
+        e: usize,
+    ) -> f32 {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { sum_blocks::<F32x8>(tape, srcs, s, e) }
+    }
+
+    /// # Safety: AVX2 must be present; the `run_map_sum_t` read contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum_f64(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        s: usize,
+        e: usize,
+    ) -> f64 {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { sum_blocks::<F64x4>(tape, srcs, s, e) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod drivers {
+    use super::lanes_impl::{F32x4, F64x2};
+    use super::{map_blocks, sum_blocks, Access, SendPtr, Tape};
+
+    /// # Safety: the `run_map_t` chunk contract (NEON is baseline).
+    pub(super) unsafe fn map_f32(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        out: SendPtr,
+        s: usize,
+        e: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { map_blocks::<F32x4>(tape, srcs, out, s, e) }
+    }
+
+    /// # Safety: the `run_map_t` chunk contract (NEON is baseline).
+    pub(super) unsafe fn map_f64(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        out: SendPtr,
+        s: usize,
+        e: usize,
+    ) {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { map_blocks::<F64x2>(tape, srcs, out, s, e) }
+    }
+
+    /// # Safety: the `run_map_sum_t` read contract (NEON is baseline).
+    pub(super) unsafe fn sum_f32(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        s: usize,
+        e: usize,
+    ) -> f32 {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { sum_blocks::<F32x4>(tape, srcs, s, e) }
+    }
+
+    /// # Safety: the `run_map_sum_t` read contract (NEON is baseline).
+    pub(super) unsafe fn sum_f64(
+        tape: &Tape,
+        srcs: &[(SendPtr, Access)],
+        s: usize,
+        e: usize,
+    ) -> f64 {
+        // SAFETY: contract forwarded verbatim.
+        unsafe { sum_blocks::<F64x2>(tape, srcs, s, e) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::super::{src_index, BinaryK, Tape, UnaryK};
+
+    // A tape exercising every micro-op class over 4 operands with mixed
+    // access patterns: max(x*w + b, s) fed through dup/swap and a few
+    // unaries, kept within MAX_STACK.
+    fn test_tape() -> Tape {
+        Tape::build(4)
+            .load(0) // x        (Flat)
+            .load(1) // w        (Col)
+            .mul()
+            .load(2) // b        (Row)
+            .add()
+            .dup()
+            .un(UnaryK::Neg)
+            .swap()
+            .bin(BinaryK::Max)
+            .c(0.75)
+            .bin(BinaryK::Ge)
+            .load(3) // s        (Scalar)
+            .add()
+            .un(UnaryK::Sqrt)
+            .tanh()
+            .c(1.0)
+            .swap()
+            .un(UnaryK::Recip)
+            .bin(BinaryK::Sub)
+            .done()
+    }
+
+    fn scalar_args(srcs: &[(SendPtr, Access)], i: usize) -> Vec<f32> {
+        srcs.iter()
+            .map(|(p, a)| {
+                // SAFETY: test buffers sized for their access patterns.
+                unsafe { *(p.ptr() as *const f32).add(src_index(*a, i)) }
+            })
+            .collect()
+    }
+
+    fn test_operands(n: usize, inner: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let w: Vec<f32> = (0..inner).map(|i| 0.5 + (i as f32) * 0.125).collect();
+        let b: Vec<f32> = (0..n.div_ceil(inner)).map(|i| (i as f32) - 1.5).collect();
+        let s = vec![2.0f32];
+        (x, w, b, s)
+    }
+
+    #[test]
+    fn vector_map_matches_scalar_eval_bitwise() {
+        let tape = test_tape();
+        // inner = 7 forces Row/Col blocks that straddle row boundaries
+        // (the gather slow path) as well as in-row fast paths.
+        let (n, inner) = (93usize, 7usize);
+        let (x, w, b, s) = test_operands(n, inner);
+        let mut out = vec![0.0f32; n];
+        let srcs = [
+            (SendPtr::new(x.as_ptr() as *mut u8), Access::Flat),
+            (SendPtr::new(w.as_ptr() as *mut u8), Access::Col(inner)),
+            (SendPtr::new(b.as_ptr() as *mut u8), Access::Row(inner)),
+            (SendPtr::new(s.as_ptr() as *mut u8), Access::Scalar),
+        ];
+        // SAFETY: every buffer above is sized for its access pattern
+        // over n elements and outlives the call; out is disjoint.
+        let used = unsafe {
+            map_range::<f32>(&tape, &srcs, SendPtr::new(out.as_mut_ptr() as *mut u8), 0, n)
+        };
+        if !used {
+            // Scalar-only config (PALLAS_SIMD=0, Miri, no AVX2): the
+            // fallback path is the scalar interpreter itself.
+            return;
+        }
+        for (i, &got) in out.iter().enumerate() {
+            let want = tape.eval::<f32>(&scalar_args(&srcs, i));
+            assert_eq!(got.to_bits(), want.to_bits(), "element {i} diverged");
+        }
+    }
+
+    #[test]
+    fn vector_sum_matches_scalar_chain_bitwise() {
+        let tape = test_tape();
+        let (n, inner) = (121usize, 11usize);
+        let (x, w, b, s) = test_operands(n, inner);
+        let srcs = [
+            (SendPtr::new(x.as_ptr() as *mut u8), Access::Flat),
+            (SendPtr::new(w.as_ptr() as *mut u8), Access::Col(inner)),
+            (SendPtr::new(b.as_ptr() as *mut u8), Access::Row(inner)),
+            (SendPtr::new(s.as_ptr() as *mut u8), Access::Scalar),
+        ];
+        // SAFETY: read-only, buffers sized as above.
+        let got = unsafe { sum_range::<f32>(&tape, &srcs, 0, n) };
+        let Some(got) = got else {
+            return; // scalar-only config
+        };
+        let mut want = 0.0f32;
+        for i in 0..n {
+            want += tape.eval::<f32>(&scalar_args(&srcs, i));
+        }
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+}

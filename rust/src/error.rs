@@ -20,9 +20,31 @@ pub enum TorskError {
     #[error("xla runtime error: {0}")]
     Xla(String),
 
+    /// An XLA/PJRT entry point was called in a build without the `aot`
+    /// feature — the `xla` dependency is compiled out, so artifacts can
+    /// neither be compiled nor executed.
+    #[error("{what}: torsk was built without the `aot` feature (rebuild with `--features aot`)")]
+    AotDisabled {
+        /// What was attempted ("load artifact `mlp_step`").
+        what: String,
+    },
+
     /// Shared-memory / multiprocessing failure.
     #[error("multiprocessing error: {0}")]
     Multiproc(String),
+
+    /// One or more forked workers failed. Each entry names the rank, its
+    /// pid, and *how* it died ([`crate::multiproc::RankExit`]) — a
+    /// silently merged partial run (one dead rank, N-1 good ones) is the
+    /// worst outcome, so callers get typed per-rank diagnostics rather
+    /// than a prejoined string.
+    #[error("{} of {total} worker(s) failed: {}", failed.len(), join_rank_failures(failed))]
+    Workers {
+        /// How many workers were forked.
+        total: usize,
+        /// The workers that did not exit cleanly, in rank order.
+        failed: Vec<crate::multiproc::RankFailure>,
+    },
 
     /// I/O failure with context: which operation, on which path. The
     /// underlying `std::io::Error` is source-chained so callers (and
@@ -73,6 +95,12 @@ pub enum TorskError {
     Msg(String),
 }
 
+/// Join per-rank failures for the [`TorskError::Workers`] Display impl.
+fn join_rank_failures(failed: &[crate::multiproc::RankFailure]) -> String {
+    let parts: Vec<String> = failed.iter().map(|f| f.to_string()).collect();
+    parts.join("; ")
+}
+
 impl From<anyhow::Error> for TorskError {
     fn from(e: anyhow::Error) -> Self {
         TorskError::Xla(format!("{e:#}"))
@@ -85,6 +113,12 @@ impl TorskError {
     /// say what it was doing and to which file.
     pub fn io(op: &'static str, path: impl Into<PathBuf>, source: std::io::Error) -> TorskError {
         TorskError::Io { op, path: path.into(), source }
+    }
+
+    /// The typed "built without aot" error: `what` names the attempted
+    /// operation. Returned by every stubbed PJRT/AOT entry point.
+    pub fn aot_disabled(what: impl Into<String>) -> TorskError {
+        TorskError::AotDisabled { what: what.into() }
     }
 }
 
@@ -119,6 +153,32 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("inplace"));
         assert!(s.contains("expected version 3"));
+    }
+
+    #[test]
+    fn aot_disabled_error_names_operation_and_fix() {
+        let e = TorskError::aot_disabled("load artifact `mlp_step`");
+        let s = e.to_string();
+        assert!(s.contains("load artifact `mlp_step`"), "{s}");
+        assert!(s.contains("--features aot"), "{s}");
+    }
+
+    #[test]
+    fn workers_error_joins_per_rank_failures() {
+        use crate::multiproc::{RankExit, RankFailure};
+        let e = TorskError::Workers {
+            total: 4,
+            failed: vec![
+                RankFailure { rank: 1, pid: 4242, exit: RankExit::Signaled(9) },
+                RankFailure { rank: 3, pid: 4244, exit: RankExit::Exited(101) },
+            ],
+        };
+        let s = e.to_string();
+        assert_eq!(
+            s,
+            "2 of 4 worker(s) failed: rank 1 (pid 4242): killed by signal 9; \
+             rank 3 (pid 4244): exited with status 101"
+        );
     }
 
     #[test]

@@ -99,16 +99,31 @@ pub trait GemmScalar:
 {
     const ZERO: Self;
     const ONE: Self;
+
+    /// Vectorized whole-panel tile accumulation
+    /// ([`crate::kernels::simd`]): accumulate the `kc`-deep panels into
+    /// the flattened MR×NR `acc` tile, bit-identically to the scalar
+    /// loop. Returns `false` (leaving `acc` untouched) when no vector
+    /// path is active — the microkernel then runs its scalar loop.
+    fn simd_acc(kc: usize, a_panel: &[Self], b_panel: &[Self], acc: &mut [Self]) -> bool;
 }
 
 impl GemmScalar for f32 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+
+    fn simd_acc(kc: usize, a_panel: &[f32], b_panel: &[f32], acc: &mut [f32]) -> bool {
+        super::simd::gemm_acc_f32(kc, a_panel, b_panel, acc)
+    }
 }
 
 impl GemmScalar for f64 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+
+    fn simd_acc(kc: usize, a_panel: &[f64], b_panel: &[f64], acc: &mut [f64]) -> bool {
+        super::simd::gemm_acc_f64(kc, a_panel, b_panel, acc)
+    }
 }
 
 /// Raw strided matrix operand: `M(i, j) = *base.add(i*rs + j*cs)`. The
@@ -294,12 +309,18 @@ fn microkernel<T: GemmScalar, const MR: usize, const NR: usize>(
 ) {
     debug_assert!(a_panel.len() >= kc * MR && b_panel.len() >= kc * NR);
     let mut acc = [[T::ZERO; NR]; MR];
-    for p in 0..kc {
-        let av = &a_panel[p * MR..p * MR + MR];
-        let bv = &b_panel[p * NR..p * NR + NR];
-        for (acc_i, &ai) in acc.iter_mut().zip(av.iter()) {
-            for (aij, &bj) in acc_i.iter_mut().zip(bv.iter()) {
-                *aij += ai * bj;
+    // Vector fast path: same per-element k order (acc[i][j] accumulates
+    // a[i]*b[j] for p ascending, mul and add rounded separately), so the
+    // bits match the scalar loop exactly; declines to it when no vector
+    // unit is active (see kernels/simd.rs).
+    if !T::simd_acc(kc, &a_panel[..kc * MR], &b_panel[..kc * NR], acc.as_flattened_mut()) {
+        for p in 0..kc {
+            let av = &a_panel[p * MR..p * MR + MR];
+            let bv = &b_panel[p * NR..p * NR + NR];
+            for (acc_i, &ai) in acc.iter_mut().zip(av.iter()) {
+                for (aij, &bj) in acc_i.iter_mut().zip(bv.iter()) {
+                    *aij += ai * bj;
+                }
             }
         }
     }

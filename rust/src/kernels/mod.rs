@@ -66,6 +66,7 @@ pub mod conv;
 pub mod matmul;
 pub mod norm;
 pub mod pool;
+pub mod simd;
 pub mod softmax;
 
 use std::collections::VecDeque;
@@ -154,6 +155,11 @@ pub fn num_threads() -> usize {
 pub fn set_num_threads(n: usize) {
     EFFECTIVE_THREADS.store(n.min(1024), Ordering::Relaxed);
 }
+
+// `simd` is the sibling runtime knob to the thread-count override: the
+// vector level is detected once ([`simd::level`]), `PALLAS_SIMD=0` or
+// [`simd::set_force_scalar`] forces the scalar kernels, and every vector
+// path is bit-identical to its scalar reference (see simd.rs module docs).
 
 /// Element count below which the TensorIter / reduction drivers stay
 /// serial: splitting ~32k-element loops across the pool costs more in

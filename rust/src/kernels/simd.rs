@@ -1,0 +1,464 @@
+//! Runtime-dispatched SIMD microkernels — the abstraction layer between
+//! the scalar reference kernels and `core::arch` intrinsics.
+//!
+//! # Dispatch model
+//!
+//! The vector level is detected **once**, at first use, and cached for
+//! the life of the process ([`level`]): `PALLAS_SIMD=0` forces the
+//! scalar paths, otherwise x86-64 probes AVX2 with
+//! `is_x86_feature_detected!` (the single allowlisted detection site —
+//! see `tools/pallas-audit/allow/determinism.allow`) and aarch64 uses
+//! NEON, which is baseline for the architecture. Kernels read the cached
+//! level; there is no per-call CPUID. Tests and benches can force the
+//! scalar paths at runtime with [`set_force_scalar`] (the same
+//! process-global-override idiom as [`super::set_num_threads`] — safe
+//! under concurrent toggling precisely because both paths produce
+//! identical bits).
+//!
+//! # Bitwise parity contract
+//!
+//! Every vector kernel in this module (and in `dispatch/fuse/simd.rs`)
+//! must produce results **bit-for-bit identical** to its scalar
+//! reference. The trick is lane orientation: vectors run across
+//! *independent* output elements (the NR columns of a GEMM tile, a block
+//! of elementwise outputs), so each element's chain of IEEE operations —
+//! order, operand pairing, rounding — is exactly the scalar chain. Under
+//! that rule only per-lane-exact operations are allowed:
+//!
+//! * add/sub/mul/div/sqrt — IEEE-754 correctly rounded, one instruction
+//!   per lane, bit-identical to the scalar op;
+//! * **no FMA**: `a*b + c` fused rounds once where the scalar kernel
+//!   rounds twice, so multiply-add stays two instructions;
+//! * **no horizontal operations**: reductions fold lanes back in plain
+//!   ascending index order (see the fuse sum driver).
+//!
+//! Anything whose vector semantics differ from the Rust scalar semantics
+//! (libm `exp`/`ln`/`tanh`, `f32::max`'s NaN handling vs `maxps`) is
+//! evaluated lane-by-lane with the *same scalar function* the reference
+//! interpreter calls.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use once_cell::sync::Lazy;
+
+/// The vector instruction set selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No vector path: scalar reference kernels only.
+    Scalar,
+    /// x86-64 AVX2 (8×f32 / 4×f64 per vector).
+    Avx2,
+    /// aarch64 NEON (4×f32 / 2×f64 per vector) — baseline on aarch64.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (bench records, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// One-shot detection: env knob first, then the architecture probe.
+/// Cached in a `Lazy` so the process does exactly one CPUID.
+static DETECTED: Lazy<SimdLevel> = Lazy::new(detect);
+
+fn detect() -> SimdLevel {
+    // PALLAS_SIMD=0 is the documented force-scalar knob (read once,
+    // here; everything else reads the cached level).
+    if std::env::var("PALLAS_SIMD").map(|v| v == "0").unwrap_or(false) {
+        return SimdLevel::Scalar;
+    }
+    // Miri has no CPUID and no vector codegen to check against; the
+    // scalar interpreter is the semantics being verified there anyway.
+    #[cfg(miri)]
+    {
+        SimdLevel::Scalar
+    }
+    #[cfg(all(not(miri), target_arch = "x86_64"))]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Scalar
+        }
+    }
+    #[cfg(all(not(miri), target_arch = "aarch64"))]
+    {
+        SimdLevel::Neon
+    }
+    #[cfg(all(not(miri), not(target_arch = "x86_64"), not(target_arch = "aarch64")))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+/// Runtime force-scalar override ([`set_force_scalar`]).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Test/bench-only hook: force the scalar kernels at runtime, without
+/// re-detecting anything. Process-global, like
+/// [`super::set_num_threads`]; concurrent toggling is harmless because
+/// the vector and scalar paths are bitwise identical by contract (the
+/// parity suites assert exactly that).
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// The level the hardware probe selected (ignores the runtime override;
+/// reported in bench envelopes).
+pub fn detected_level() -> SimdLevel {
+    *DETECTED
+}
+
+/// The level kernels dispatch on right now: [`detected_level`] unless
+/// [`set_force_scalar`] is active.
+pub fn level() -> SimdLevel {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        SimdLevel::Scalar
+    } else {
+        *DETECTED
+    }
+}
+
+// ---------------------------------------------------------------------
+// GEMM microkernel accumulation
+// ---------------------------------------------------------------------
+//
+// The packed GEMM's inner loop accumulates an MR×NR register tile over a
+// KC panel: `acc[i][j] += a[p*MR + i] * b[p*NR + j]` for p ascending.
+// The vector versions below keep that loop shape exactly — one vector
+// holds `acc[i][j..j+L]` (a row chunk of the tile), every p step does a
+// broadcast-multiply-add with separate mul and add instructions — so
+// each `acc[i][j]` sees the same multiplications and additions, in the
+// same order, with the same intermediate roundings as the scalar loop.
+// Panels are zero-padded past the m/n edges by the packers, so the full
+// MR×NR tile is always valid to compute.
+
+/// f32 8×8 tile accumulation over a `kc`-deep panel pair. `acc` is the
+/// row-major flattened `[ [f32; 8]; 8 ]` tile. Returns `false` (leaving
+/// `acc` untouched) when no vector path is active or the buffers do not
+/// match the expected panel layout — the caller then runs the scalar
+/// loop.
+pub(crate) fn gemm_acc_f32(kc: usize, a_panel: &[f32], b_panel: &[f32], acc: &mut [f32]) -> bool {
+    if a_panel.len() < kc * 8 || b_panel.len() < kc * 8 {
+        return false;
+    }
+    let Ok(tile) = <&mut [f32; 64]>::try_from(acc) else {
+        return false;
+    };
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: AVX2 presence was established by the one-shot
+            // probe behind `level()`; panel lengths checked above.
+            unsafe { x86::gemm_acc_f32(kc, a_panel, b_panel, tile) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            // SAFETY: NEON is baseline on aarch64; panel lengths
+            // checked above.
+            unsafe { arm::gemm_acc_f32(kc, a_panel, b_panel, tile) };
+            true
+        }
+        _ => false,
+    }
+}
+
+/// f64 4×4 tile accumulation over a `kc`-deep panel pair; the f64 twin
+/// of [`gemm_acc_f32`] (`acc` is the flattened `[ [f64; 4]; 4 ]` tile).
+pub(crate) fn gemm_acc_f64(kc: usize, a_panel: &[f64], b_panel: &[f64], acc: &mut [f64]) -> bool {
+    if a_panel.len() < kc * 4 || b_panel.len() < kc * 4 {
+        return false;
+    }
+    let Ok(tile) = <&mut [f64; 16]>::try_from(acc) else {
+        return false;
+    };
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: AVX2 presence was established by the one-shot
+            // probe behind `level()`; panel lengths checked above.
+            unsafe { x86::gemm_acc_f64(kc, a_panel, b_panel, tile) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            // SAFETY: NEON is baseline on aarch64; panel lengths
+            // checked above.
+            unsafe { arm::gemm_acc_f64(kc, a_panel, b_panel, tile) };
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// AVX2 f32 8×8 accumulate: row i of the tile is one `__m256`
+    /// (`acc[i][0..8]`); each p step broadcasts `a[p*8+i]` and does a
+    /// separate mul + add (no FMA), the exact scalar chain per lane.
+    ///
+    /// # Safety
+    /// AVX2 must be available, `a`/`b` must hold at least `kc * 8`
+    /// elements each.
+    #[target_feature(enable = "avx2")]
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn gemm_acc_f32(kc: usize, a: &[f32], b: &[f32], acc: &mut [f32; 64]) {
+        // SAFETY: AVX2 per this fn's contract; every load/store stays
+        // inside the length-checked `a`/`b`/`acc` buffers.
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut rows = [_mm256_setzero_ps(); 8];
+            for (i, r) in rows.iter_mut().enumerate() {
+                *r = _mm256_loadu_ps(acc.as_ptr().add(i * 8));
+            }
+            for p in 0..kc {
+                let bv = _mm256_loadu_ps(bp.add(p * 8));
+                for (i, r) in rows.iter_mut().enumerate() {
+                    let ai = _mm256_set1_ps(*ap.add(p * 8 + i));
+                    *r = _mm256_add_ps(*r, _mm256_mul_ps(ai, bv));
+                }
+            }
+            for (i, r) in rows.iter().enumerate() {
+                _mm256_storeu_ps(acc.as_mut_ptr().add(i * 8), *r);
+            }
+        }
+    }
+
+    /// AVX2 f64 4×4 accumulate: row i is one `__m256d`.
+    ///
+    /// # Safety
+    /// AVX2 must be available, `a`/`b` must hold at least `kc * 4`
+    /// elements each.
+    #[target_feature(enable = "avx2")]
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn gemm_acc_f64(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; 16]) {
+        // SAFETY: AVX2 per this fn's contract; every load/store stays
+        // inside the length-checked `a`/`b`/`acc` buffers.
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut rows = [_mm256_setzero_pd(); 4];
+            for (i, r) in rows.iter_mut().enumerate() {
+                *r = _mm256_loadu_pd(acc.as_ptr().add(i * 4));
+            }
+            for p in 0..kc {
+                let bv = _mm256_loadu_pd(bp.add(p * 4));
+                for (i, r) in rows.iter_mut().enumerate() {
+                    let ai = _mm256_set1_pd(*ap.add(p * 4 + i));
+                    *r = _mm256_add_pd(*r, _mm256_mul_pd(ai, bv));
+                }
+            }
+            for (i, r) in rows.iter().enumerate() {
+                _mm256_storeu_pd(acc.as_mut_ptr().add(i * 4), *r);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    /// NEON f32 8×8 accumulate: row i is a `float32x4_t` pair
+    /// (`acc[i][0..4]` / `acc[i][4..8]`); separate `vmulq`+`vaddq`
+    /// (never `vfmaq`) keeps the per-lane rounding identical to scalar.
+    ///
+    /// # Safety
+    /// `a`/`b` must hold at least `kc * 8` elements each (NEON itself is
+    /// baseline on aarch64).
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn gemm_acc_f32(kc: usize, a: &[f32], b: &[f32], acc: &mut [f32; 64]) {
+        // SAFETY: every load/store stays inside the length-checked
+        // `a`/`b`/`acc` buffers.
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut lo = [vdupq_n_f32(0.0); 8];
+            let mut hi = [vdupq_n_f32(0.0); 8];
+            for (i, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                *l = vld1q_f32(acc.as_ptr().add(i * 8));
+                *h = vld1q_f32(acc.as_ptr().add(i * 8 + 4));
+            }
+            for p in 0..kc {
+                let b0 = vld1q_f32(bp.add(p * 8));
+                let b1 = vld1q_f32(bp.add(p * 8 + 4));
+                for (i, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                    let ai = vdupq_n_f32(*ap.add(p * 8 + i));
+                    *l = vaddq_f32(*l, vmulq_f32(ai, b0));
+                    *h = vaddq_f32(*h, vmulq_f32(ai, b1));
+                }
+            }
+            for (i, (l, h)) in lo.iter().zip(hi.iter()).enumerate() {
+                vst1q_f32(acc.as_mut_ptr().add(i * 8), *l);
+                vst1q_f32(acc.as_mut_ptr().add(i * 8 + 4), *h);
+            }
+        }
+    }
+
+    /// NEON f64 4×4 accumulate: row i is a `float64x2_t` pair.
+    ///
+    /// # Safety
+    /// `a`/`b` must hold at least `kc * 4` elements each.
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn gemm_acc_f64(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; 16]) {
+        // SAFETY: every load/store stays inside the length-checked
+        // `a`/`b`/`acc` buffers.
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut lo = [vdupq_n_f64(0.0); 4];
+            let mut hi = [vdupq_n_f64(0.0); 4];
+            for (i, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                *l = vld1q_f64(acc.as_ptr().add(i * 4));
+                *h = vld1q_f64(acc.as_ptr().add(i * 4 + 2));
+            }
+            for p in 0..kc {
+                let b0 = vld1q_f64(bp.add(p * 4));
+                let b1 = vld1q_f64(bp.add(p * 4 + 2));
+                for (i, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                    let ai = vdupq_n_f64(*ap.add(p * 4 + i));
+                    *l = vaddq_f64(*l, vmulq_f64(ai, b0));
+                    *h = vaddq_f64(*h, vmulq_f64(ai, b1));
+                }
+            }
+            for (i, (l, h)) in lo.iter().zip(hi.iter()).enumerate() {
+                vst1q_f64(acc.as_mut_ptr().add(i * 4), *l);
+                vst1q_f64(acc.as_mut_ptr().add(i * 4 + 2), *h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Deterministic pseudo-random fill (same LCG family as the parity
+    // suites).
+    fn lcg_fill(seed: u64, out: &mut [f32]) {
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        for v in out.iter_mut() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *v = ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+        }
+    }
+
+    fn scalar_acc_f32(kc: usize, a: &[f32], b: &[f32], acc: &mut [f32; 64]) {
+        for p in 0..kc {
+            for i in 0..8 {
+                let ai = a[p * 8 + i];
+                for j in 0..8 {
+                    acc[i * 8 + j] += ai * b[p * 8 + j];
+                }
+            }
+        }
+    }
+
+    fn scalar_acc_f64(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; 16]) {
+        for p in 0..kc {
+            for i in 0..4 {
+                let ai = a[p * 4 + i];
+                for j in 0..4 {
+                    acc[i * 4 + j] += ai * b[p * 4 + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_cached_and_consistent() {
+        let a = detected_level();
+        let b = detected_level();
+        assert_eq!(a, b);
+        assert!(matches!(a, SimdLevel::Scalar | SimdLevel::Avx2 | SimdLevel::Neon));
+    }
+
+    #[test]
+    fn gemm_acc_f32_matches_scalar_bitwise() {
+        // Odd kc exercises a non-trivial panel walk.
+        let kc = 37;
+        let mut a = vec![0.0f32; kc * 8];
+        let mut b = vec![0.0f32; kc * 8];
+        lcg_fill(11, &mut a);
+        lcg_fill(23, &mut b);
+        let mut init = [0.0f32; 64];
+        lcg_fill(47, &mut init);
+
+        let mut vec_tile = init;
+        let used = gemm_acc_f32(kc, &a, &b, &mut vec_tile);
+        let mut ref_tile = init;
+        scalar_acc_f32(kc, &a, &b, &mut ref_tile);
+        if used {
+            for (v, r) in vec_tile.iter().zip(ref_tile.iter()) {
+                assert_eq!(v.to_bits(), r.to_bits(), "vector lane diverged from scalar");
+            }
+        } else {
+            // No vector path on this host/config: the tile must be
+            // untouched so the caller's scalar loop runs from init.
+            assert_eq!(vec_tile, init);
+        }
+    }
+
+    #[test]
+    fn gemm_acc_f64_matches_scalar_bitwise() {
+        let kc = 53;
+        let mut af = vec![0.0f32; kc * 4];
+        let mut bf = vec![0.0f32; kc * 4];
+        lcg_fill(5, &mut af);
+        lcg_fill(7, &mut bf);
+        let a: Vec<f64> = af.iter().map(|&x| x as f64).collect();
+        let b: Vec<f64> = bf.iter().map(|&x| x as f64).collect();
+        let mut initf = [0.0f32; 16];
+        lcg_fill(9, &mut initf);
+        let mut init = [0.0f64; 16];
+        for (d, s) in init.iter_mut().zip(initf.iter()) {
+            *d = *s as f64;
+        }
+
+        let mut vec_tile = init;
+        let used = gemm_acc_f64(kc, &a, &b, &mut vec_tile);
+        let mut ref_tile = init;
+        scalar_acc_f64(kc, &a, &b, &mut ref_tile);
+        if used {
+            for (v, r) in vec_tile.iter().zip(ref_tile.iter()) {
+                assert_eq!(v.to_bits(), r.to_bits(), "vector lane diverged from scalar");
+            }
+        } else {
+            assert_eq!(vec_tile, init);
+        }
+    }
+
+    #[test]
+    fn force_scalar_roundtrip() {
+        // The only in-crate test that toggles the override (the
+        // cross-mode sweeps live in the integration suites, each in its
+        // own process), so the restore below cannot race another test.
+        let before = level();
+        set_force_scalar(true);
+        assert_eq!(level(), SimdLevel::Scalar);
+        // Forced-scalar must make the vector entry points decline.
+        let mut tile = [1.0f32; 64];
+        assert!(!gemm_acc_f32(4, &[0.5; 32], &[0.25; 32], &mut tile));
+        assert_eq!(tile, [1.0f32; 64]);
+        set_force_scalar(false);
+        assert_eq!(level(), before);
+    }
+
+    #[test]
+    fn wrong_tile_size_declines() {
+        let mut tile = vec![0.0f32; 63];
+        assert!(!gemm_acc_f32(4, &[0.0; 32], &[0.0; 32], &mut tile));
+        let mut short_panels = [0.0f32; 64];
+        assert!(!gemm_acc_f32(9, &[0.0; 32], &[0.0; 32], &mut short_panels));
+    }
+}

@@ -31,7 +31,10 @@
 //!   atomic writes and bitwise resume (model + optimizer + RNG + loader
 //!   coordinates);
 //! - [`runtime`] / [`graph`] — AOT-compiled XLA graph execution via PJRT,
-//!   the static-graph baseline of §6.3;
+//!   the static-graph baseline of §6.3. The XLA/PJRT half lives behind
+//!   the `aot` Cargo feature (off by default — the `xla` git dependency
+//!   needs network + a local `xla_extension`); default builds get
+//!   API-compatible stubs returning [`TorskError::AotDisabled`];
 //! - [`models`] — the six Table 1 benchmark models;
 //! - [`profiler`] — the Figure 1/2 instrumentation;
 //! - [`adoption`] — the Figure 3 mention-counting pipeline.

@@ -39,6 +39,7 @@
 //! in-flight kernels), or a lock held by a non-forked thread can deadlock
 //! the child.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
@@ -323,8 +324,56 @@ impl ShmBarrier {
     }
 }
 
+/// How a forked worker terminated, decoded from its `waitpid` status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankExit {
+    /// Killed by a signal (SIGKILL, SIGSEGV, OOM-killer's SIGKILL, ...).
+    Signaled(i32),
+    /// Exited voluntarily with a non-zero status code (a panicking worker
+    /// `_exit`s with 101).
+    Exited(i32),
+    /// `waitpid` reported a status that is neither an exit nor a signal
+    /// (e.g. the child is stopped, not dead).
+    Stopped,
+    /// `waitpid` itself failed, so the child's fate is unknown.
+    WaitFailed,
+}
+
+impl fmt::Display for RankExit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RankExit::Signaled(sig) => write!(f, "killed by signal {sig}"),
+            RankExit::Exited(code) => write!(f, "exited with status {code}"),
+            RankExit::Stopped => write!(f, "stopped without exiting"),
+            RankExit::WaitFailed => write!(f, "waitpid failed"),
+        }
+    }
+}
+
+/// One failed worker: which rank, which pid, and how it died. Carried by
+/// [`TorskError::Workers`] so callers can react per rank (retry the rank,
+/// map a signal to an infra problem) instead of parsing a joined string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankFailure {
+    /// The worker's rank in `0..n`.
+    pub rank: usize,
+    /// The forked process id.
+    pub pid: i32,
+    /// How it terminated.
+    pub exit: RankExit,
+}
+
+impl fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank {} (pid {}): {}", self.rank, self.pid, self.exit)
+    }
+}
+
 /// Fork `n` worker processes running `f(rank)`; returns once all exit.
-/// Exit status != 0 in any child is reported as an error.
+/// Any child that does not exit cleanly with status 0 is reported in a
+/// typed [`TorskError::Workers`] naming every failed rank, its pid, and
+/// its [`RankExit`] — the parent always reaps all `n` children first, so
+/// a crashed rank can neither hang the parent nor leak zombies.
 ///
 /// Note: `fork` without `exec` — children must not rely on threads from
 /// the parent (stream workers, kernel pool) and should stick to compute +
@@ -349,7 +398,7 @@ pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
         }
         pids.push(pid);
     }
-    let mut failures: Vec<String> = Vec::new();
+    let mut failed: Vec<RankFailure> = Vec::new();
     for (rank, pid) in pids.into_iter().enumerate() {
         let mut status = 0;
         // SAFETY: plain waitpid on a pid we forked; `status` is a valid
@@ -357,26 +406,26 @@ pub fn fork_workers(n: usize, f: impl Fn(usize)) -> Result<()> {
         let r = unsafe { libc::waitpid(pid, &mut status, 0) };
         // Name each failed rank and *how* it died — a silently merged
         // partial run (one dead rank, N-1 good ones) is the worst outcome.
-        if r < 0 {
-            failures.push(format!("rank {rank} (pid {pid}): waitpid failed"));
+        let exit = if r < 0 {
+            Some(RankExit::WaitFailed)
         } else if libc::WIFSIGNALED(status) {
-            let sig = libc::WTERMSIG(status);
-            failures.push(format!("rank {rank} (pid {pid}): killed by signal {sig}"));
+            Some(RankExit::Signaled(libc::WTERMSIG(status)))
         } else if libc::WIFEXITED(status) {
             let code = libc::WEXITSTATUS(status);
             if code != 0 {
-                failures.push(format!("rank {rank} (pid {pid}): exited with status {code}"));
+                Some(RankExit::Exited(code))
+            } else {
+                None
             }
         } else {
-            failures.push(format!("rank {rank} (pid {pid}): stopped without exiting"));
+            Some(RankExit::Stopped)
+        };
+        if let Some(exit) = exit {
+            failed.push(RankFailure { rank, pid, exit });
         }
     }
-    if !failures.is_empty() {
-        return Err(TorskError::Multiproc(format!(
-            "{} of {n} worker(s) failed: {}",
-            failures.len(),
-            failures.join("; ")
-        )));
+    if !failed.is_empty() {
+        return Err(TorskError::Workers { total: n, failed });
     }
     Ok(())
 }
@@ -522,12 +571,24 @@ mod tests {
                 panic!("worker bug");
             }
         });
-        // The error must name the failed rank and how it died (a panicking
-        // child _exits with 101), not just count failures.
-        let err = r.unwrap_err().to_string();
-        assert!(err.contains("1 of 2 worker(s) failed"), "{err}");
-        assert!(err.contains("rank 1"), "{err}");
-        assert!(err.contains("exited with status 101"), "{err}");
+        // The failure must be typed — rank, pid, and exit mode as data —
+        // and its Display must still name the failed rank and how it died
+        // (a panicking child _exits with 101), not just count failures.
+        let err = r.unwrap_err();
+        match &err {
+            TorskError::Workers { total, failed } => {
+                assert_eq!(*total, 2);
+                assert_eq!(failed.len(), 1);
+                assert_eq!(failed[0].rank, 1);
+                assert!(failed[0].pid > 0);
+                assert_eq!(failed[0].exit, RankExit::Exited(101));
+            }
+            other => panic!("expected TorskError::Workers, got: {other}"),
+        }
+        let s = err.to_string();
+        assert!(s.contains("1 of 2 worker(s) failed"), "{s}");
+        assert!(s.contains("rank 1"), "{s}");
+        assert!(s.contains("exited with status 101"), "{s}");
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //! - panic inside `Collate`;
 //! - wedge a worker forever inside `Dataset::get` (bounded drop-join);
 //! - fail a checkpoint write after N bytes (torn write);
-//! - corrupt a checkpoint on disk.
+//! - corrupt a checkpoint on disk;
+//! - SIGKILL a forked hogwild worker mid-run (typed per-rank diagnostics
+//!   from `fork_workers`, surviving ranks' shared state intact).
 //!
 //! No test sleeps to "give threads time": stalls are condvar [`Gate`]s
 //! the test controls, and recovery is asserted by bitwise comparison.
+//! (The SIGKILL test polls for the victim's pid file — the victim is a
+//! separate *process*, so no in-process gate can cross — but the poll is
+//! deadline-bounded and its outcome is asserted, never assumed.)
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -294,4 +299,103 @@ fn resumed_batch_stream_is_bitwise_identical_to_the_tail() {
             "resumed tail at workers={workers} must match the uninterrupted epoch"
         );
     }
+}
+
+/// A hogwild worker killed mid-run (SIGKILL — the shape of an OOM kill or
+/// an operator `kill -9`) must surface as a typed per-rank diagnostic from
+/// `fork_workers`: the parent reaps every rank (no hang, no zombie), the
+/// error names the dead rank, its pid, and `killed by signal 9`, and the
+/// surviving ranks' shared-memory updates are intact. The victim's loop is
+/// deadline-bounded and exits 0 if never killed, so a failed kill shows up
+/// as a loud "expected Err, got Ok" — never a silent success.
+#[test]
+fn killed_hogwild_worker_is_reported_per_rank() {
+    use std::time::{Duration, Instant};
+
+    use torsk::multiproc::{fork_workers, RankExit, SharedTensor};
+    use torsk::tensor::DType;
+
+    let shm = PathBuf::from("/dev/shm");
+    let shm_dir = if shm.exists() { shm } else { std::env::temp_dir() };
+    let tag = std::process::id();
+    let params_path = shm_dir.join(format!("torsk_chaos_hogwild_{tag}"));
+    let pid_path = std::env::temp_dir().join(format!("torsk_chaos_victim_pid_{tag}"));
+    let _ = std::fs::remove_file(&pid_path);
+
+    // One parameter slot per rank: survivors' totals stay deterministic
+    // even though every write is lock-free.
+    let params = SharedTensor::create(&params_path, &[3], DType::F32).unwrap();
+
+    // Killer thread: poll for the victim's pid file (written atomically by
+    // rank 1 via rename), then SIGKILL it. Polling is the only option — the
+    // victim is another process, so no condvar can cross; the loop is
+    // bounded by the same deadline as the victim itself.
+    let pid_path_killer = pid_path.clone();
+    let killer = std::thread::spawn(move || -> Option<i32> {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while Instant::now() < deadline {
+            if let Ok(s) = std::fs::read_to_string(&pid_path_killer) {
+                if let Ok(pid) = s.trim().parse::<i32>() {
+                    // SAFETY: plain kill(2) on the pid the victim just
+                    // published; worst case the pid is already reaped and
+                    // kill returns ESRCH, which we ignore.
+                    unsafe { libc::kill(pid, libc::SIGKILL) };
+                    return Some(pid);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        None
+    });
+
+    let p = params_path.clone();
+    let pid_pub = pid_path.clone();
+    let result = fork_workers(3, move |rank| {
+        let st = SharedTensor::open(&p).unwrap();
+        let slot = st.tensor().narrow(0, rank, 1);
+        let delta = Tensor::full(&[1], 1.0);
+        if rank == 1 {
+            // Victim: publish our pid (write + atomic rename so the killer
+            // never reads a torn file), then keep updating until killed —
+            // or until the deadline, in which case exit 0 and let the
+            // parent's `unwrap_err` below fail the test loudly.
+            let tmp = pid_pub.with_extension("tmp");
+            std::fs::write(&tmp, format!("{}", std::process::id())).unwrap();
+            std::fs::rename(&tmp, &pid_pub).unwrap();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while Instant::now() < deadline {
+                slot.add_(&delta);
+            }
+        } else {
+            // Survivors: a short burst of updates, then a clean exit.
+            for _ in 0..100 {
+                slot.add_(&delta);
+            }
+        }
+    });
+
+    let killed_pid = killer.join().unwrap().expect("killer never saw the victim's pid file");
+    let err = result.unwrap_err();
+    match &err {
+        TorskError::Workers { total, failed } => {
+            assert_eq!(*total, 3);
+            assert_eq!(failed.len(), 1, "only rank 1 was killed: {failed:?}");
+            assert_eq!(failed[0].rank, 1);
+            assert_eq!(failed[0].pid, killed_pid);
+            assert_eq!(failed[0].exit, RankExit::Signaled(libc::SIGKILL));
+        }
+        other => panic!("expected TorskError::Workers, got: {other}"),
+    }
+    let s = err.to_string();
+    assert!(s.contains("1 of 3 worker(s) failed"), "{s}");
+    assert!(s.contains(&format!("rank 1 (pid {killed_pid}): killed by signal 9")), "{s}");
+
+    // The survivors' slots are exactly 100.0 — rank 1's death neither tore
+    // nor clobbered the shared state the other ranks produced.
+    let final_params = params.tensor().to_vec::<f32>();
+    assert_eq!(final_params[0], 100.0, "{final_params:?}");
+    assert_eq!(final_params[2], 100.0, "{final_params:?}");
+
+    params.unlink();
+    let _ = std::fs::remove_file(&pid_path);
 }

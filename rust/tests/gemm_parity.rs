@@ -18,6 +18,7 @@ use torsk::kernels::matmul::{
     dgemm, matmul_ref_t, pack_b_f32, sgemm, sgemm_prepacked, Trans, KC, MC, NC,
 };
 use torsk::kernels::set_num_threads;
+use torsk::kernels::simd::{detected_level, set_force_scalar, SimdLevel};
 use torsk::{dispatch, nn, ops, Tensor};
 
 /// `packed_weight_stats` is process-global; every test that routes
@@ -80,6 +81,82 @@ fn packed_gemm_all_trans_shapes_threads() {
             }
         }
     }
+}
+
+/// The tentpole invariant: the vector microkernel path and the forced-
+/// scalar path produce identical bits for every trans combo × shape, and
+/// the threads 1/2/8 pins hold in both modes. Runs under any detected
+/// level — when the probe reports Scalar (no AVX2, Miri, or the process
+/// was started with `PALLAS_SIMD=0`), both "modes" are the scalar
+/// interpreter and the comparison is trivially (but still) checked.
+#[test]
+fn simd_and_forced_scalar_gemm_bitwise_identical() {
+    if detected_level() == SimdLevel::Scalar {
+        eprintln!("note: no vector unit active; scalar-vs-scalar run");
+    }
+    let shapes: &[(usize, usize, usize)] = &[
+        (5, 7, 11),
+        (2, 65, 300),
+        (8, 8, KC + 3),
+        (MC + 1, 33, 40),
+        (3, NC + 5, 29),
+    ];
+    let mut seed = 9000;
+    for &ta in &[Trans::N, Trans::T] {
+        for &tb in &[Trans::N, Trans::T] {
+            for &(m, n, k) in shapes {
+                seed += 1;
+                let a = rand_vec(seed, m * k);
+                let b = rand_vec(seed ^ 0x5A5A, k * n);
+                let what = format!("({ta:?},{tb:?}) ({m},{n},{k})");
+                let mut per_mode: Vec<Vec<u32>> = Vec::new();
+                for &force_scalar in &[false, true] {
+                    set_force_scalar(force_scalar);
+                    let mode = if force_scalar { "scalar" } else { "simd" };
+                    let mut per_thread: Vec<Vec<u32>> = Vec::new();
+                    for &t in &[1usize, 2, 8] {
+                        set_num_threads(t);
+                        let mut c = vec![0.0f32; m * n];
+                        sgemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                        per_thread.push(c.iter().map(|x| x.to_bits()).collect());
+                    }
+                    set_num_threads(0);
+                    assert_eq!(per_thread[0], per_thread[1], "{what} [{mode}]: 1 vs 2 threads");
+                    assert_eq!(per_thread[0], per_thread[2], "{what} [{mode}]: 1 vs 8 threads");
+                    per_mode.push(per_thread.swap_remove(0));
+                }
+                set_force_scalar(false);
+                assert_eq!(per_mode[0], per_mode[1], "{what}: simd and scalar bits differ");
+            }
+        }
+    }
+}
+
+/// f64 twin of the cross-mode pin (4×4 `__m256d`/`float64x2_t` tiles),
+/// plus the prepacked-B entry point, which shares the microkernel.
+#[test]
+fn simd_and_forced_scalar_dgemm_and_prepacked_identical() {
+    let (m, n, k) = (MC + 3, NC + 7, KC + 5);
+    let a32 = rand_vec(41, m * k);
+    let b32 = rand_vec(42, k * n);
+    let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+    let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+    let packed = pack_b_f32(Trans::N, k, n, &b32);
+
+    let mut d_modes: Vec<Vec<u64>> = Vec::new();
+    let mut p_modes: Vec<Vec<u32>> = Vec::new();
+    for &force_scalar in &[false, true] {
+        set_force_scalar(force_scalar);
+        let mut c = vec![0.0f64; m * n];
+        dgemm(Trans::N, Trans::T, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+        d_modes.push(c.iter().map(|x| x.to_bits()).collect());
+        let mut cp = vec![0.0f32; m * n];
+        sgemm_prepacked(m, n, k, 1.0, &a32, k, 1, &packed, 0.0, &mut cp);
+        p_modes.push(cp.iter().map(|x| x.to_bits()).collect());
+    }
+    set_force_scalar(false);
+    assert_eq!(d_modes[0], d_modes[1], "dgemm: simd and scalar bits differ");
+    assert_eq!(p_modes[0], p_modes[1], "sgemm_prepacked: simd and scalar bits differ");
 }
 
 #[test]

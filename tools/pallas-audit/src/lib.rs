@@ -12,7 +12,7 @@
 //! | `safety-comment`   | all of `rust/src`          | every `unsafe` keyword carries a nearby `// SAFETY:` justification (or a `# Safety` doc section) |
 //! | `no-contiguous`    | `dispatch/linalg.rs`, `kernels/` | no `.contiguous()` calls — the GEMM paths are contractually copy-free (generalizes the old `include_str!` source pin in `tests/gemm_parity.rs`) |
 //! | `no-raw-spawn`     | all but `kernels/mod.rs`, `multiproc/` | no `std::thread::spawn` / `thread::Builder` — parallelism goes through `kernels::parallel_for` or the multiproc layer |
-//! | `determinism`      | `kernels/`, `dispatch/`    | no `HashMap`/`HashSet` (iteration-order hazard), `Instant`/`SystemTime` (timing-dependent control flow), or ad-hoc RNG in kernel/dispatch code paths |
+//! | `determinism`      | `kernels/`, `dispatch/`    | no `HashMap`/`HashSet` (iteration-order hazard), `Instant`/`SystemTime` (timing-dependent control flow), ad-hoc RNG, or per-call CPU-feature probes (`is_x86_feature_detected!`/CPUID — the one cached-at-init site in `kernels/simd.rs` is allowlisted) in kernel/dispatch code paths |
 //! | `opinfo-samples`   | all of `rust/src`          | every inline `Registry::add` / `register_op` call chains `.sample_inputs(..)` so no op dodges the OpInfo gradcheck suite |
 //!
 //! Mechanics: each file is parsed with `syn` (so comments, strings and
@@ -174,6 +174,20 @@ fn scan_tokens(ts: &TokenStream, scope: Scope, out: &mut Vec<(usize, &'static st
                         "determinism",
                         format!("ad-hoc RNG `{name}` in a kernel/dispatch path (use crate::rng)"),
                     )),
+                    "is_x86_feature_detected" | "is_aarch64_feature_detected" | "__cpuid"
+                    | "__cpuid_count"
+                        if scope.determinism =>
+                    {
+                        out.push((
+                            line,
+                            "determinism",
+                            format!(
+                                "CPU-feature probe `{name}` in a kernel/dispatch path — \
+                                 detection must happen once, at the cached init site in \
+                                 kernels/simd.rs"
+                            ),
+                        ))
+                    }
                     _ => {}
                 }
             }
@@ -548,6 +562,23 @@ mod tests {
     fn cfg_test_modules_are_skipped() {
         let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        unsafe { work() };\n        let m: HashMap<u8, u8> = Default::default();\n    }\n}\n";
         assert!(audit_source("kernels/x.rs", src).unwrap().is_empty());
+    }
+
+    #[test]
+    fn feature_probe_flagged_in_kernel_scope_only() {
+        let probe = "fn f() -> bool {\n    std::is_x86_feature_detected!(\"avx2\")\n}\n";
+        let v = audit_source("kernels/other.rs", probe).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].lint, "determinism");
+        assert!(v[0].message.contains("is_x86_feature_detected"), "{}", v[0].message);
+        assert!(audit_source("data/loader.rs", probe).unwrap().is_empty());
+
+        let cpuid = "fn f() {\n    let r = unsafe { core::arch::x86_64::__cpuid(1) };\n    let _ = r;\n}\n";
+        let v = audit_source("dispatch/fuse.rs", cpuid).unwrap();
+        assert!(
+            v.iter().any(|v| v.lint == "determinism" && v.message.contains("__cpuid")),
+            "{v:?}"
+        );
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! with the runtime-detected vector path active (`"simd": true`) and one
 //! forced scalar (`"simd": false`, the `PALLAS_SIMD=0` path) — and the
 //! packed GEMM results are bit-compared between the two modes before
+//! timing. The `eager:mlp_block` / `captured:mlp_block` pair times the
+//! same op chain plain vs replayed through a `GraphCapture` session
+//! (schema torsk.bench_ops.v2), with the two modes bit-compared before
 //! timing. Future PRs append their numbers next to these — this file is
 //! the trajectory to beat. `BENCH_SMOKE=1` runs one tiny iteration of
 //! everything and validates the JSON schema (wired into CI as
@@ -47,12 +50,12 @@ struct Record {
     cache_hit_rate: f64,
     reused_outputs: u64,
     /// GFLOP/s — set on the `gemm:*` records (2*m*n*k / ns), absent
-    /// elsewhere. An optional extra key on schema torsk.bench_ops.v1.
+    /// elsewhere. An optional extra key since schema torsk.bench_ops.v1.
     gflops: Option<f64>,
     /// Whether the runtime-detected vector path was allowed for this
     /// record (`false` = forced scalar, the `PALLAS_SIMD=0` path). Set on
     /// the paired `gemm:packed:*` / `fused:*` rows, absent elsewhere. An
-    /// optional extra key on schema torsk.bench_ops.v1.
+    /// optional extra key since schema torsk.bench_ops.v1.
     simd: Option<bool>,
 }
 
@@ -452,6 +455,45 @@ fn main() {
         }
     }
 
+    // ---- graph capture: the same MLP op chain, eager vs replayed ----
+    // Paired rows: `eager:mlp_block` runs the chain through the normal
+    // dispatcher; `captured:mlp_block` replays the fused/planned graph a
+    // `GraphCapture` session compiled from it. The two modes are
+    // bit-compared before timing — a divergence aborts the whole run.
+    {
+        let (batch, din, dh, dout) = if smoke { (8, 32, 16, 4) } else { (128, 784, 256, 10) };
+        let w1 = Tensor::randn(&[dh, din]);
+        let b1 = Tensor::randn(&[dh]);
+        let w2 = Tensor::randn(&[dout, dh]);
+        let b2 = Tensor::randn(&[dout]);
+        let x = Tensor::randn(&[batch, din]);
+        let target = Tensor::randn(&[batch, dout]);
+        let block = |ins: &[&Tensor]| {
+            let h = ops::relu(&ops::linear(ins[0], &w1, Some(&b1)));
+            let y = ops::linear(&h, &w2, Some(&b2));
+            ops::mse_loss(&y, &target)
+        };
+        let sess = dispatch::GraphCapture::new("bench:mlp_block");
+        let eager_bits: Vec<u32> =
+            block(&[&x]).to_vec::<f32>().iter().map(|v| v.to_bits()).collect();
+        let _trace = sess.run(&[&x], block);
+        let replay_bits: Vec<u32> =
+            sess.run(&[&x], block).to_vec::<f32>().iter().map(|v| v.to_bits()).collect();
+        if eager_bits != replay_bits {
+            eprintln!("mlp_block: captured replay bits differ from eager");
+            std::process::exit(1);
+        }
+        for &t in &threads {
+            let reps = if smoke { 1 } else { 40 };
+            records.push(measure("eager:mlp_block", batch * din, t, reps, || {
+                std::hint::black_box(block(&[&x]));
+            }));
+            records.push(measure("captured:mlp_block", batch * din, t, reps, || {
+                std::hint::black_box(sess.run(&[&x], block));
+            }));
+        }
+    }
+
     // ---- conv residual block forward+backward ----
     {
         let (n, c, hw) = if smoke { (1, 4, 8) } else { (4, 16, 16) };
@@ -588,6 +630,19 @@ fn main() {
             );
         }
     }
+    {
+        let e = records.iter().find(|r| r.op == "eager:mlp_block" && r.threads == 1);
+        let c = records.iter().find(|r| r.op == "captured:mlp_block" && r.threads == 1);
+        if let (Some(e), Some(c)) = (e, c) {
+            println!(
+                "capture mlp_block @ {} elems: {:.2}x vs eager at 1 thread ({} vs {} bytes/iter)",
+                e.size,
+                e.ns_per_iter / c.ns_per_iter,
+                c.bytes_allocated,
+                e.bytes_allocated
+            );
+        }
+    }
     for op in ["gemm:packed:square", "fused:sigmoid_bce", "fused:ln_tail"] {
         let on = records.iter().find(|r| r.op == op && r.threads == 1 && r.simd == Some(true));
         let off = records.iter().find(|r| r.op == op && r.threads == 1 && r.simd == Some(false));
@@ -601,7 +656,7 @@ fn main() {
 
     // ---- emit + validate JSON ----
     let mut json = String::new();
-    json.push_str("{\n  \"schema\": \"torsk.bench_ops.v1\",\n");
+    json.push_str("{\n  \"schema\": \"torsk.bench_ops.v2\",\n");
     json.push_str(&format!(
         "  \"threads_available\": {},\n  \"smoke\": {},\n  \"records\": [\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -620,14 +675,21 @@ fn main() {
         eprintln!("BENCH_ops.json schema validation FAILED: {e}");
         std::process::exit(1);
     }
-    println!("schema ok: torsk.bench_ops.v1, {} records", records.len());
+    println!("schema ok: torsk.bench_ops.v2, {} records", records.len());
 }
 
 /// Minimal schema check (no JSON dependency): the envelope declares the
-/// schema id and every record carries all six required keys.
+/// schema id, every record carries all six required keys, and the v2
+/// capture rows come as a complete eager/captured pair.
 fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
-    if !json.contains("\"schema\": \"torsk.bench_ops.v1\"") {
+    if !json.contains("\"schema\": \"torsk.bench_ops.v2\"") {
         return Err("missing schema id".into());
+    }
+    // v2: the graph-capture benchmark emits paired mode rows.
+    for op in ["\"op\": \"eager:mlp_block\"", "\"op\": \"captured:mlp_block\""] {
+        if !json.contains(op) {
+            return Err(format!("v2 capture pair incomplete: missing {op}"));
+        }
     }
     let recs: Vec<&str> = json.match_indices("{\"op\": ").map(|(i, _)| &json[i..]).collect();
     if recs.len() != expected {

@@ -5,12 +5,16 @@
 //! Trains one fixed MLP classifier on a synthetic image dataset through
 //! the `data::DataLoader` at **workers = 0, 1 and 4**, and emits
 //! `BENCH_train.json` (override with `BENCH_OUT`; schema
-//! `torsk.bench_train.v1`) with one record per worker count:
+//! `torsk.bench_train.v2`) with one record per worker count plus a
+//! `"mode": "captured"` row that runs the same loop with the forward +
+//! loss replayed through a `dispatch::GraphCapture` session (the eager
+//! and captured per-step losses are bit-compared before timing; a
+//! divergence exits nonzero):
 //!
 //! ```json
-//! {"workers": 4, "batches": 48, "samples": 1536, "wall_ns": 123456789,
-//!  "samples_per_sec": 12443.1, "stall_ns": 345678, "stall_fraction": 0.0028,
-//!  "ns_per_batch": 2571974}
+//! {"mode": "eager", "workers": 4, "batches": 48, "samples": 1536,
+//!  "wall_ns": 123456789, "samples_per_sec": 12443.1, "stall_ns": 345678,
+//!  "stall_fraction": 0.0028, "ns_per_batch": 2571974}
 //! ```
 //!
 //! `stall_ns` is time the training thread spent blocked inside the
@@ -45,6 +49,9 @@ struct Config {
 
 #[derive(Clone, Debug)]
 struct Record {
+    /// "eager" = normal dispatch; "captured" = forward + loss replayed
+    /// through a `GraphCapture` session. New in schema v2.
+    mode: &'static str,
     workers: usize,
     batches: u64,
     samples: u64,
@@ -58,9 +65,10 @@ struct Record {
 impl Record {
     fn to_json(&self) -> String {
         format!(
-            "{{\"workers\": {}, \"batches\": {}, \"samples\": {}, \"wall_ns\": {}, \
-             \"samples_per_sec\": {:.1}, \"stall_ns\": {}, \"stall_fraction\": {:.4}, \
-             \"ns_per_batch\": {:.0}}}",
+            "{{\"mode\": \"{}\", \"workers\": {}, \"batches\": {}, \"samples\": {}, \
+             \"wall_ns\": {}, \"samples_per_sec\": {:.1}, \"stall_ns\": {}, \
+             \"stall_fraction\": {:.4}, \"ns_per_batch\": {:.0}}}",
+            self.mode,
             self.workers,
             self.batches,
             self.samples,
@@ -158,6 +166,7 @@ fn main() {
         let wall_ns = t0.elapsed().as_nanos() as u64;
         let d = loader.stats().delta(&s0);
         records.push(Record {
+            mode: "eager",
             workers: w,
             batches: d.batches,
             samples,
@@ -174,15 +183,88 @@ fn main() {
         );
     }
 
+    // ---- captured-mode run: same loop through a GraphCapture session ----
+    // The optimizer updates parameters in place, so the session's
+    // captured externals (the weight handles) track every step; only the
+    // batch tensors are session inputs. The first batch is run through
+    // both modes with identical weights and the loss bits compared —
+    // eager semantics are the contract, so any divergence is fatal.
+    {
+        let loader = build_loader(&cfg, 0);
+        let model = build_model(&cfg);
+        let mut opt = Sgd::new(model.parameters(), 0.05).with_momentum(0.9);
+        let din = cfg.channels * cfg.hw * cfg.hw;
+        let sess = torsk::dispatch::GraphCapture::new("bench:train_step");
+        let fwd = |ins: &[&torsk::Tensor]| ops::cross_entropy(&model.forward(ins[0]), ins[1]);
+
+        // Cross-mode bitwise pin before any timing.
+        {
+            let (x0, y0) = loader.iter().next().expect("empty loader");
+            let x0r = x0.reshape(&[x0.size(0), din]);
+            let eager_loss = ops::cross_entropy(&model.forward(&x0r), &y0);
+            let _trace = sess.run(&[&x0r, &y0], fwd);
+            let replayed = sess.run(&[&x0r, &y0], fwd);
+            if eager_loss.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+                != replayed.to_vec::<f32>().iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+            {
+                eprintln!("train_loop: captured replay loss bits differ from eager");
+                std::process::exit(1);
+            }
+        }
+
+        let mut last_loss = 0.0f32;
+        // Warm-up epoch (steady-state caches, like the eager runs).
+        for (x, y) in loader.iter() {
+            let xr = x.reshape(&[x.size(0), din]);
+            let loss = sess.run(&[&xr, &y], fwd);
+            opt.zero_grad();
+            loss.backward();
+            opt.step();
+            last_loss = loss.item();
+        }
+        let s0 = loader.stats();
+        let t0 = Instant::now();
+        let mut samples = 0u64;
+        for _ in 0..cfg.epochs {
+            for (x, y) in loader.iter() {
+                samples += x.size(0) as u64;
+                let xr = x.reshape(&[x.size(0), din]);
+                let loss = sess.run(&[&xr, &y], fwd);
+                opt.zero_grad();
+                loss.backward();
+                opt.step();
+                last_loss = loss.item();
+            }
+        }
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        let d = loader.stats().delta(&s0);
+        records.push(Record {
+            mode: "captured",
+            workers: 0,
+            batches: d.batches,
+            samples,
+            wall_ns,
+            samples_per_sec: samples as f64 / (wall_ns as f64 / 1e9),
+            stall_ns: d.stall_ns,
+            stall_fraction: d.stall_ns as f64 / wall_ns as f64,
+            ns_per_batch: wall_ns as f64 / d.batches.max(1) as f64,
+        });
+        println!(
+            "captured: {:.1} samples/s, final loss {last_loss:.4}",
+            records.last().unwrap().samples_per_sec
+        );
+    }
+
     // ---- report ---------------------------------------------------------
     println!("\n== BENCH_train ({}) ==", if smoke { "smoke" } else { "full" });
     println!(
-        "{:>7} {:>8} {:>8} {:>14} {:>14} {:>8}",
-        "workers", "batches", "samples", "samples/s", "ns/batch", "stall%"
+        "{:>9} {:>7} {:>8} {:>8} {:>14} {:>14} {:>8}",
+        "mode", "workers", "batches", "samples", "samples/s", "ns/batch", "stall%"
     );
     for r in &records {
         println!(
-            "{:>7} {:>8} {:>8} {:>14.1} {:>14.0} {:>7.2}%",
+            "{:>9} {:>7} {:>8} {:>8} {:>14.1} {:>14.0} {:>7.2}%",
+            r.mode,
             r.workers,
             r.batches,
             r.samples,
@@ -191,8 +273,8 @@ fn main() {
             r.stall_fraction * 100.0
         );
     }
-    let w0 = records.iter().find(|r| r.workers == 0).unwrap();
-    let w4 = records.iter().find(|r| r.workers == 4).unwrap();
+    let w0 = records.iter().find(|r| r.mode == "eager" && r.workers == 0).unwrap();
+    let w4 = records.iter().find(|r| r.mode == "eager" && r.workers == 4).unwrap();
     println!(
         "\nloader overlap: stall {:.2}% at workers=0 -> {:.2}% at workers=4 \
          ({:.2}x samples/s)",
@@ -206,10 +288,18 @@ fn main() {
              (acceptance expects overlap on this config)"
         );
     }
+    if let Some(cap) = records.iter().find(|r| r.mode == "captured") {
+        println!(
+            "graph capture: {:.0} ns/batch captured vs {:.0} eager at workers=0 ({:.2}x)",
+            cap.ns_per_batch,
+            w0.ns_per_batch,
+            w0.ns_per_batch / cap.ns_per_batch
+        );
+    }
 
     // ---- emit + validate JSON ------------------------------------------
     let mut json = String::new();
-    json.push_str("{\n  \"schema\": \"torsk.bench_train.v1\",\n");
+    json.push_str("{\n  \"schema\": \"torsk.bench_train.v2\",\n");
     json.push_str(&format!(
         "  \"smoke\": {},\n  \"threads_available\": {},\n  \"model\": \"mlp\",\n  \
          \"dataset\": {{\"n\": {}, \"channels\": {}, \"hw\": {}, \"classes\": {}}},\n  \
@@ -236,14 +326,14 @@ fn main() {
         eprintln!("BENCH_train.json schema validation FAILED: {e}");
         std::process::exit(1);
     }
-    println!("schema ok: torsk.bench_train.v1, {} records", records.len());
+    println!("schema ok: torsk.bench_train.v2, {} records", records.len());
 }
 
 /// Minimal schema check (no JSON dependency), in the `BENCH_ops.json`
 /// style: the envelope declares the schema id and every record carries all
 /// required keys, one record per benchmarked worker count.
 fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
-    if !json.contains("\"schema\": \"torsk.bench_train.v1\"") {
+    if !json.contains("\"schema\": \"torsk.bench_train.v2\"") {
         return Err("missing schema id".into());
     }
     let recs: Vec<&str> = json.match_indices("{\"workers\": ").map(|(i, _)| &json[i..]).collect();

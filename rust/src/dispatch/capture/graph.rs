@@ -1,0 +1,813 @@
+//! Captured-graph IR and the three optimizer passes: dead-code
+//! elimination, automatic elementwise fusion (graph regions compiled to
+//! [`fuse::Tape`] programs with fused backward tapes), and buffer
+//! planning (donation of interior storages that die inside the graph).
+//!
+//! The bitwise contract: every tape emitted here mirrors, operation for
+//! operation, the exact per-element expression the traced eager chain
+//! evaluated — same micro-op arithmetic as the composed kernels, operand
+//! pairing preserved, reordering only where IEEE addition/multiplication
+//! commute bitwise (`x + y == y + x`, `x + x == 2 * x`,
+//! `x - y == x + (-y)`). Regions that cannot meet the contract (stack
+//! overflow, too many operands, a value feeding more than two consuming
+//! slots, a broadcast operand feeding more than one) simply stay eager:
+//! declining a fusion is always correct.
+
+use std::collections::BTreeMap;
+
+use crate::dispatch::fuse::{Access, BinaryK, MicroOp, Tape, UnaryK, MAX_ARGS, MAX_STACK};
+use crate::dispatch::Param;
+use crate::tensor::{DType, Tensor};
+
+/// Longest tape the auto-fuser will emit; longer programs decline.
+const MAX_TAPE_LEN: usize = 512;
+
+/// One traced op invocation (a leaf: composite kernels record their
+/// primitive streams, not themselves).
+#[derive(Clone, Debug)]
+pub(crate) struct Node {
+    pub name: String,
+    pub inputs: Vec<usize>,
+    pub output: usize,
+    pub params: Vec<Param>,
+}
+
+/// One SSA value: a session input (`0..n_session_inputs`), an external
+/// captured by handle (weights, constants), or a node output.
+#[derive(Clone)]
+pub(crate) struct ValueInfo {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// `Some` for externals: the traced handle, re-read at every replay
+    /// (in-place updates between replays are seen, like eager).
+    pub external: Option<Tensor>,
+}
+
+/// The raw trace, before optimization.
+pub(crate) struct Graph {
+    pub nodes: Vec<Node>,
+    pub values: Vec<ValueInfo>,
+    pub n_session_inputs: usize,
+    pub output: usize,
+}
+
+// ---------------------------------------------------------------------
+// Fusible-op classification
+// ---------------------------------------------------------------------
+
+/// The elementwise ops the auto-fuser understands, each mapped to the
+/// exact micro-op sequence its eager kernel evaluates per element.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FuseKind {
+    Bin(BinaryK),
+    Un(UnaryK),
+    Relu,
+    Sigmoid,
+    AddScalar,
+    MulScalar,
+    Clamp,
+}
+
+fn fusible_kind(name: &str) -> Option<FuseKind> {
+    Some(match name {
+        "add" => FuseKind::Bin(BinaryK::Add),
+        "sub" => FuseKind::Bin(BinaryK::Sub),
+        "mul" => FuseKind::Bin(BinaryK::Mul),
+        "div" => FuseKind::Bin(BinaryK::Div),
+        "neg" => FuseKind::Un(UnaryK::Neg),
+        "exp" => FuseKind::Un(UnaryK::Exp),
+        "log" => FuseKind::Un(UnaryK::Ln),
+        "sqrt" => FuseKind::Un(UnaryK::Sqrt),
+        "tanh" => FuseKind::Un(UnaryK::Tanh),
+        "relu" => FuseKind::Relu,
+        "sigmoid" => FuseKind::Sigmoid,
+        "add_scalar" => FuseKind::AddScalar,
+        "mul_scalar" => FuseKind::MulScalar,
+        "clamp" => FuseKind::Clamp,
+        _ => return None,
+    })
+}
+
+/// Ops that must survive DCE even when nothing consumes their output:
+/// every in-place op (the `_` suffix convention) plus kernels with
+/// side effects or RNG draws.
+fn is_impure(name: &str) -> bool {
+    name.ends_with('_')
+        || matches!(name, "fused:sgd_step" | "fused:adam_step" | "dropout" | "batch_norm_train")
+}
+
+fn param_f64(p: &Param) -> Option<f64> {
+    match *p {
+        Param::F32(v) => Some(v as f64),
+        Param::F64(v) => Some(v),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Optimized plan
+// ---------------------------------------------------------------------
+
+/// A fused region: consecutive elementwise nodes collapsed into one
+/// forward tape (optionally with a `sum` / `sum → mul_scalar` reduce
+/// tail) plus one backward tape per external operand.
+pub(crate) struct FusedRegion {
+    pub fwd: Tape,
+    /// One gradient tape per external, args `[externals.., G]` (the
+    /// whole region declines if any gradient tape fails to emit).
+    pub bwds: Vec<Tape>,
+    /// Value ids of the external operands, in tape-arg order.
+    pub exts: Vec<usize>,
+    pub access: Vec<Access>,
+    pub ext_shapes: Vec<Vec<usize>>,
+    pub out: usize,
+    /// Shape of the elementwise map (the reduce tail, when present,
+    /// collapses it to a 0-dim scalar).
+    pub map_shape: Vec<usize>,
+    pub reduce: Option<ReduceTail>,
+    /// Eager ops this region subsumed (the `ops_fused` stat).
+    pub n_ops: usize,
+}
+
+/// A `sum` (and optional trailing `mul_scalar`) folded into the region
+/// via the deterministic chunked map-reduce driver.
+pub(crate) struct ReduceTail {
+    /// The raw `mul_scalar` parameter (`None` for a bare `sum`); the
+    /// replay narrows it per dtype exactly like the eager scalar kernel.
+    pub scale: Option<f64>,
+}
+
+pub(crate) enum Step {
+    Op {
+        name: String,
+        inputs: Vec<usize>,
+        /// Per input: replay may donate the slot's storage (interior
+        /// value at its last use, appearing once in this op).
+        donate: Vec<bool>,
+        params: Vec<Param>,
+        out: usize,
+    },
+    Fused(FusedRegion),
+}
+
+pub(crate) struct PlannedGraph {
+    pub steps: Vec<Step>,
+    /// `(value id, handle)` for every external, bound at replay.
+    pub externals: Vec<(usize, Tensor)>,
+    pub n_session_inputs: usize,
+    pub n_values: usize,
+    pub output: usize,
+    /// Per step: interior values whose last use is this step (slots are
+    /// cleared after the step so dead storages return to the allocator).
+    pub drop_after: Vec<Vec<usize>>,
+    /// Static pass results, folded into the process-wide counters once
+    /// per capture.
+    pub ops_fused: u64,
+    pub buffers_planned: u64,
+}
+
+// ---------------------------------------------------------------------
+// Tape emitter (fallible; declining a region keeps it eager)
+// ---------------------------------------------------------------------
+
+struct Emitter {
+    ops: Vec<MicroOp>,
+    depth: usize,
+    max_depth: usize,
+    ok: bool,
+}
+
+impl Emitter {
+    fn new() -> Emitter {
+        Emitter { ops: Vec::new(), depth: 0, max_depth: 0, ok: true }
+    }
+
+    fn push(&mut self, op: MicroOp) {
+        if !self.ok {
+            return;
+        }
+        match op {
+            MicroOp::Load(_) | MicroOp::Const(_) | MicroOp::Dup => {
+                self.depth += 1;
+                self.max_depth = self.max_depth.max(self.depth);
+            }
+            MicroOp::Swap => {}
+            MicroOp::Un(_) => {}
+            MicroOp::Bin(_) => {
+                if self.depth < 2 {
+                    self.ok = false;
+                    return;
+                }
+                self.depth -= 1;
+            }
+        }
+        if self.max_depth > MAX_STACK || self.ops.len() >= MAX_TAPE_LEN {
+            self.ok = false;
+            return;
+        }
+        self.ops.push(op);
+    }
+
+    fn finish(self, n_inputs: usize) -> Option<Tape> {
+        if self.ok && self.depth == 1 {
+            Some(Tape::from_ops(self.ops, n_inputs))
+        } else {
+            None
+        }
+    }
+}
+
+/// Everything the recursive emitters need about one candidate region.
+struct RegionCtx<'a> {
+    graph: &'a Graph,
+    /// Node indices (into `graph.nodes`) forming the region, in order.
+    nodes: &'a [usize],
+    /// value id -> tape arg slot, for externals.
+    ext_slot: BTreeMap<usize, usize>,
+    /// value id -> position in `nodes`, for interior values.
+    producer: BTreeMap<usize, usize>,
+    /// value id -> consuming (node position, input slot) pairs within
+    /// the region.
+    consumers: BTreeMap<usize, Vec<(usize, usize)>>,
+}
+
+impl<'a> RegionCtx<'a> {
+    fn node(&self, pos: usize) -> &Node {
+        &self.graph.nodes[self.nodes[pos]]
+    }
+}
+
+/// Emit the forward expression for `v` — exactly the arithmetic the
+/// eager chain evaluated, with shared subexpressions recomputed (the
+/// recomputation is deterministic, so the bits cannot differ).
+fn emit_value(ctx: &RegionCtx, e: &mut Emitter, v: usize) {
+    if let Some(&slot) = ctx.ext_slot.get(&v) {
+        e.push(MicroOp::Load(slot as u8));
+        return;
+    }
+    let pos = ctx.producer[&v];
+    let node = ctx.node(pos);
+    let kind = fusible_kind(&node.name).expect("region nodes are fusible");
+    match kind {
+        FuseKind::Bin(k) => {
+            emit_value(ctx, e, node.inputs[0]);
+            emit_value(ctx, e, node.inputs[1]);
+            e.push(MicroOp::Bin(k));
+        }
+        FuseKind::Un(k) => {
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Un(k));
+        }
+        FuseKind::Relu => {
+            // Eager: `x.max(0.0)`.
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Const(0.0));
+            e.push(MicroOp::Bin(BinaryK::Max));
+        }
+        FuseKind::Sigmoid => {
+            // Eager: `1 / (1 + exp(-x))`, the `sigmoid_seq` sequence.
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Un(UnaryK::Neg));
+            e.push(MicroOp::Un(UnaryK::Exp));
+            e.push(MicroOp::Const(1.0));
+            e.push(MicroOp::Bin(BinaryK::Add));
+            e.push(MicroOp::Un(UnaryK::Recip));
+        }
+        FuseKind::AddScalar | FuseKind::MulScalar => {
+            // `Const` narrows to the runtime dtype at eval, exactly like
+            // the eager `float_scalar!` kernels narrow their parameter.
+            let s = param_f64(&node.params[0]).expect("scalar param");
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Const(s));
+            e.push(MicroOp::Bin(if kind == FuseKind::AddScalar {
+                BinaryK::Add
+            } else {
+                BinaryK::Mul
+            }));
+        }
+        FuseKind::Clamp => {
+            // Eager `x.clamp(lo, hi)` == `max(lo) then min(hi)` for
+            // `lo <= hi` and non-NaN inputs (checked at region scan).
+            let lo = param_f64(&node.params[0]).expect("clamp lo");
+            let hi = param_f64(&node.params[1]).expect("clamp hi");
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Const(lo));
+            e.push(MicroOp::Bin(BinaryK::Max));
+            e.push(MicroOp::Const(hi));
+            e.push(MicroOp::Bin(BinaryK::Min));
+        }
+    }
+}
+
+/// Emit the gradient expression flowing into value `v`: the sum of the
+/// per-consumer contributions (at most two — region precondition — and
+/// IEEE addition commutes bitwise, so contribution order is free).
+/// `g_slot` is the tape arg carrying the region output's upstream grad.
+fn emit_grad(ctx: &RegionCtx, e: &mut Emitter, v: usize, out_value: usize, g_slot: usize) {
+    if v == out_value {
+        e.push(MicroOp::Load(g_slot as u8));
+        return;
+    }
+    let cons = match ctx.consumers.get(&v) {
+        Some(c) if !c.is_empty() => c,
+        _ => {
+            // No consumer inside the region: dead value, zero gradient.
+            e.push(MicroOp::Const(0.0));
+            return;
+        }
+    };
+    for (i, &(pos, slot)) in cons.iter().enumerate() {
+        emit_contribution(ctx, e, pos, slot, out_value, g_slot);
+        if i > 0 {
+            e.push(MicroOp::Bin(BinaryK::Add));
+        }
+    }
+}
+
+/// The gradient one consuming (node, input slot) contributes, mirroring
+/// that op's eager backward formula with saved tensors replaced by
+/// bitwise-identical recomputation from the region externals.
+fn emit_contribution(
+    ctx: &RegionCtx,
+    e: &mut Emitter,
+    pos: usize,
+    slot: usize,
+    out_value: usize,
+    g_slot: usize,
+) {
+    let node = ctx.node(pos);
+    let kind = fusible_kind(&node.name).expect("region nodes are fusible");
+    let y = node.output;
+    // Closure-free helpers: G = upstream grad of this node's output.
+    macro_rules! g {
+        () => {
+            emit_grad(ctx, e, y, out_value, g_slot)
+        };
+    }
+    match kind {
+        FuseKind::Bin(BinaryK::Add) => g!(), // both slots: g
+        FuseKind::Bin(BinaryK::Sub) => {
+            g!();
+            if slot == 1 {
+                e.push(MicroOp::Un(UnaryK::Neg));
+            }
+        }
+        FuseKind::Bin(BinaryK::Mul) => {
+            // ga = g * b ; gb = g * a.
+            g!();
+            emit_value(ctx, e, node.inputs[1 - slot]);
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Bin(BinaryK::Div) => {
+            if slot == 0 {
+                // ga = g / b.
+                g!();
+                emit_value(ctx, e, node.inputs[1]);
+                e.push(MicroOp::Bin(BinaryK::Div));
+            } else {
+                // gb = -(g * (a / (b*b))).
+                g!();
+                emit_value(ctx, e, node.inputs[0]);
+                emit_value(ctx, e, node.inputs[1]);
+                emit_value(ctx, e, node.inputs[1]);
+                e.push(MicroOp::Bin(BinaryK::Mul));
+                e.push(MicroOp::Bin(BinaryK::Div));
+                e.push(MicroOp::Bin(BinaryK::Mul));
+                e.push(MicroOp::Un(UnaryK::Neg));
+            }
+        }
+        FuseKind::Bin(_) => unreachable!("non-differentiable Bin kinds never enter a region"),
+        FuseKind::Un(UnaryK::Neg) => {
+            g!();
+            e.push(MicroOp::Un(UnaryK::Neg));
+        }
+        FuseKind::Un(UnaryK::Exp) => {
+            // dydx = y (the saved output, recomputed bitwise).
+            g!();
+            emit_value(ctx, e, y);
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Un(UnaryK::Ln) => {
+            // dydx = 1/x.
+            g!();
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Un(UnaryK::Recip));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Un(UnaryK::Sqrt) => {
+            // dydx = 0.5 / y.
+            g!();
+            e.push(MicroOp::Const(0.5));
+            emit_value(ctx, e, y);
+            e.push(MicroOp::Bin(BinaryK::Div));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Un(UnaryK::Tanh) => {
+            // dydx = 1 - y*y, evaluated as (-(y*y)) + 1 (== bitwise).
+            g!();
+            emit_value(ctx, e, y);
+            e.push(MicroOp::Dup);
+            e.push(MicroOp::Bin(BinaryK::Mul));
+            e.push(MicroOp::Un(UnaryK::Neg));
+            e.push(MicroOp::Const(1.0));
+            e.push(MicroOp::Bin(BinaryK::Add));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Un(_) => unreachable!("Recip never appears as a traced op"),
+        FuseKind::Relu => {
+            // dydx = [y > 0] (strict), as 1 - [y <= 0].
+            g!();
+            emit_value(ctx, e, y);
+            e.push(MicroOp::Const(0.0));
+            e.push(MicroOp::Bin(BinaryK::Le));
+            e.push(MicroOp::Un(UnaryK::Neg));
+            e.push(MicroOp::Const(1.0));
+            e.push(MicroOp::Bin(BinaryK::Add));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Sigmoid => {
+            // dydx = y * (1 - y).
+            g!();
+            emit_value(ctx, e, y);
+            e.push(MicroOp::Dup);
+            e.push(MicroOp::Un(UnaryK::Neg));
+            e.push(MicroOp::Const(1.0));
+            e.push(MicroOp::Bin(BinaryK::Add));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::AddScalar => g!(),
+        FuseKind::MulScalar => {
+            let s = param_f64(&node.params[0]).expect("scalar param");
+            g!();
+            e.push(MicroOp::Const(s));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+        FuseKind::Clamp => {
+            // dydx = [x >= lo] * [x <= hi].
+            let lo = param_f64(&node.params[0]).expect("clamp lo");
+            let hi = param_f64(&node.params[1]).expect("clamp hi");
+            g!();
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Const(lo));
+            e.push(MicroOp::Bin(BinaryK::Ge));
+            emit_value(ctx, e, node.inputs[0]);
+            e.push(MicroOp::Const(hi));
+            e.push(MicroOp::Bin(BinaryK::Le));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+            e.push(MicroOp::Bin(BinaryK::Mul));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Region scanning + fusion
+// ---------------------------------------------------------------------
+
+/// Classify how an external of `shape` is read per output element of a
+/// map over `out_shape` (trailing dim `inner`): the same patterns the
+/// hand-registered fused kernels express via [`Access`].
+fn classify_access(shape: &[usize], out_shape: &[usize]) -> Option<Access> {
+    if shape == out_shape {
+        return Some(Access::Flat);
+    }
+    let numel: usize = shape.iter().product();
+    if numel == 1 {
+        return Some(Access::Scalar);
+    }
+    let inner = *out_shape.last()?;
+    if inner == 0 {
+        return None;
+    }
+    // `[.., 1]` row statistics (layer-norm mean / inv_std).
+    if shape.len() == out_shape.len()
+        && shape[..shape.len() - 1] == out_shape[..out_shape.len() - 1]
+        && *shape.last().unwrap() == 1
+    {
+        return Some(Access::Row(inner));
+    }
+    // `[d]` affine vectors broadcast over rows.
+    if shape == [inner] {
+        return Some(Access::Col(inner));
+    }
+    None
+}
+
+/// Can `nodes[lo..hi]` (indices into the live node list) fuse into one
+/// map region producing `graph.nodes[order[hi-1]].output`? Returns the
+/// built region on success.
+fn try_region(
+    graph: &Graph,
+    order: &[usize],
+    lo: usize,
+    hi: usize,
+    consumed_later: &dyn Fn(usize, usize) -> bool,
+) -> Option<FusedRegion> {
+    let span = &order[lo..hi];
+    if hi - lo < 2 {
+        return None;
+    }
+    let out_value = graph.nodes[span[hi - lo - 1]].output;
+    let out_shape = graph.values[out_value].shape.clone();
+    let dt = graph.values[out_value].dtype;
+    if !dt.is_float() || out_shape.iter().product::<usize>() == 0 {
+        return None;
+    }
+
+    let mut producer: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut ext_slot: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut exts: Vec<usize> = Vec::new();
+    let mut access: Vec<Access> = Vec::new();
+    let mut consumers: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+    let mut slots: BTreeMap<usize, usize> = BTreeMap::new();
+
+    for (pos, &ni) in span.iter().enumerate() {
+        let node = &graph.nodes[ni];
+        let kind = fusible_kind(&node.name)?;
+        // Interior values carry the region's map shape and dtype.
+        let vo = &graph.values[node.output];
+        if vo.shape != out_shape || vo.dtype != dt {
+            return None;
+        }
+        if kind == FuseKind::Clamp {
+            let lo_p = param_f64(&node.params[0])?;
+            let hi_p = param_f64(&node.params[1])?;
+            // max-then-min == clamp only for an ordered, NaN-free interval.
+            if lo_p.is_nan() || hi_p.is_nan() || lo_p > hi_p {
+                return None;
+            }
+        }
+        if matches!(kind, FuseKind::AddScalar | FuseKind::MulScalar)
+            && param_f64(&node.params[0]).is_none()
+        {
+            return None;
+        }
+        for (slot, &iv) in node.inputs.iter().enumerate() {
+            consumers.entry(iv).or_default().push((pos, slot));
+            *slots.entry(iv).or_insert(0) += 1;
+            if producer.contains_key(&iv) || ext_slot.contains_key(&iv) {
+                continue;
+            }
+            let info = &graph.values[iv];
+            let acc = classify_access(&info.shape, &out_shape)?;
+            if info.dtype != dt {
+                return None;
+            }
+            ext_slot.insert(iv, exts.len());
+            exts.push(iv);
+            access.push(acc);
+        }
+        producer.insert(node.output, pos);
+    }
+
+    // One backward arg slot is reserved for the upstream grad G.
+    if exts.len() > MAX_ARGS - 1 {
+        return None;
+    }
+
+    // Bitwise-parity preconditions on the gradient side:
+    // * at most two consuming slots per value — a two-way IEEE add (and
+    //   `x + x`) reassociates bitwise; three-way sums would not;
+    // * broadcast (non-Flat) externals feed exactly one slot, because
+    //   `sum_to_shape` does not distribute over addition bitwise;
+    // * interior values stay inside the region (single live output).
+    for (v, &n) in &slots {
+        if n > 2 {
+            return None;
+        }
+        if let Some(&slot) = ext_slot.get(v) {
+            if !matches!(access[slot], Access::Flat) && n != 1 {
+                return None;
+            }
+        }
+    }
+    let region_last = span[span.len() - 1];
+    for &v in producer.keys() {
+        if v == out_value {
+            continue;
+        }
+        if v == graph.output || consumed_later(v, region_last) {
+            return None;
+        }
+    }
+    // The region output must not also be consumed as a *broadcast* by
+    // itself (it is Flat by construction), and externals must not be
+    // session inputs of zero extent — covered above.
+
+    let ctx = RegionCtx { graph, nodes: span, ext_slot, producer, consumers };
+
+    let mut fe = Emitter::new();
+    emit_value(&ctx, &mut fe, out_value);
+    let fwd = fe.finish(exts.len())?;
+
+    let g_slot = exts.len();
+    let mut bwds: Vec<Tape> = Vec::with_capacity(exts.len());
+    for &ev in &exts {
+        let mut be = Emitter::new();
+        emit_grad(&ctx, &mut be, ev, out_value, g_slot);
+        bwds.push(be.finish(exts.len() + 1)?);
+    }
+
+    let ext_shapes = exts.iter().map(|&v| graph.values[v].shape.clone()).collect();
+    Some(FusedRegion {
+        fwd,
+        bwds,
+        exts,
+        access,
+        ext_shapes,
+        out: out_value,
+        map_shape: out_shape,
+        reduce: None,
+        n_ops: hi - lo,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Graph::optimize — DCE, fusion, buffer planning
+// ---------------------------------------------------------------------
+
+impl Graph {
+    /// Run the three passes and lower to an executable plan.
+    pub(crate) fn optimize(&self) -> PlannedGraph {
+        // ---- Pass 1: dead-code elimination. A node is live when its
+        // output is (transitively) needed by the graph output or it is
+        // impure. Backward sweep so consumers decide before producers.
+        let n_nodes = self.nodes.len();
+        let mut needed = vec![false; self.values.len()];
+        needed[self.output] = true;
+        let mut live = vec![false; n_nodes];
+        for i in (0..n_nodes).rev() {
+            let node = &self.nodes[i];
+            if needed[node.output] || is_impure(&node.name) {
+                live[i] = true;
+                for &iv in &node.inputs {
+                    needed[iv] = true;
+                }
+            }
+        }
+        let order: Vec<usize> = (0..n_nodes).filter(|&i| live[i]).collect();
+
+        // Consumption map over the LIVE graph (for single-live-output
+        // checks and buffer planning).
+        let mut last_use: BTreeMap<usize, usize> = BTreeMap::new(); // value -> node idx
+        let mut use_count: BTreeMap<usize, usize> = BTreeMap::new();
+        for &i in &order {
+            for &iv in &self.nodes[i].inputs {
+                last_use.insert(iv, i);
+                *use_count.entry(iv).or_insert(0) += 1;
+            }
+        }
+        let consumed_later = |v: usize, after_node: usize| -> bool {
+            match last_use.get(&v) {
+                Some(&n) => n > after_node,
+                None => false,
+            }
+        };
+
+        // ---- Pass 2: automatic fusion. Greedy maximal regions: at each
+        // start, take the longest consecutive fusible span that builds.
+        let mut steps: Vec<Step> = Vec::new();
+        let mut ops_fused: u64 = 0;
+        let mut pos = 0usize;
+        while pos < order.len() {
+            let ni = self.nodes[order[pos]].clone();
+            if fusible_kind(&ni.name).is_some() {
+                // Longest fusible run starting here.
+                let mut run = pos;
+                while run < order.len()
+                    && fusible_kind(&self.nodes[order[run]].name).is_some()
+                {
+                    run += 1;
+                }
+                let mut built: Option<(FusedRegion, usize)> = None;
+                let mut hi = run;
+                while hi > pos + 1 && built.is_none() {
+                    if let Some(mut region) =
+                        try_region(self, &order, pos, hi, &consumed_later)
+                    {
+                        // Reduce tail: region output consumed ONLY by a
+                        // `sum` (then optionally only by a `mul_scalar`),
+                        // both immediately following.
+                        let mut consumed = hi;
+                        if use_count.get(&region.out) == Some(&1)
+                            && hi < order.len()
+                            && self.nodes[order[hi]].name == "sum"
+                            && self.nodes[order[hi]].inputs == [region.out]
+                            && self.values[self.nodes[order[hi]].output].shape.is_empty()
+                        {
+                            let sum_out = self.nodes[order[hi]].output;
+                            let mut scale = None;
+                            let mut tail_end = hi + 1;
+                            if use_count.get(&sum_out) == Some(&1)
+                                && hi + 1 < order.len()
+                                && self.nodes[order[hi + 1]].name == "mul_scalar"
+                                && self.nodes[order[hi + 1]].inputs == [sum_out]
+                            {
+                                if let Some(s) = param_f64(&self.nodes[order[hi + 1]].params[0])
+                                {
+                                    scale = Some(s);
+                                    tail_end = hi + 2;
+                                }
+                            }
+                            if sum_out != self.output || tail_end == hi + 1 {
+                                let final_out =
+                                    self.nodes[order[tail_end - 1]].output;
+                                region.n_ops += tail_end - hi;
+                                region.out = final_out;
+                                region.reduce = Some(ReduceTail { scale });
+                                consumed = tail_end;
+                            }
+                        }
+                        ops_fused += region.n_ops as u64;
+                        built = Some((region, consumed));
+                    } else {
+                        hi -= 1;
+                    }
+                }
+                if let Some((region, consumed)) = built {
+                    steps.push(Step::Fused(region));
+                    pos = consumed;
+                    continue;
+                }
+            }
+            steps.push(Step::Op {
+                name: ni.name.clone(),
+                inputs: ni.inputs.clone(),
+                donate: Vec::new(),
+                params: ni.params.clone(),
+                out: ni.output,
+            });
+            pos += 1;
+        }
+
+        // ---- Pass 3: buffer planning. Recompute liveness over the
+        // final step sequence: a value produced by a step and last used
+        // at a later step is dropped right after that use; plain-op
+        // inputs at their last use that appear once are donation
+        // candidates for `call_owned`'s output-stealing.
+        let mut produced_at: BTreeMap<usize, usize> = BTreeMap::new();
+        for (si, s) in steps.iter().enumerate() {
+            match s {
+                Step::Op { out, .. } => produced_at.insert(*out, si),
+                Step::Fused(r) => produced_at.insert(r.out, si),
+            };
+        }
+        let step_inputs = |s: &Step| -> Vec<usize> {
+            match s {
+                Step::Op { inputs, .. } => inputs.clone(),
+                Step::Fused(r) => r.exts.clone(),
+            }
+        };
+        let mut last_step: BTreeMap<usize, usize> = BTreeMap::new();
+        for (si, s) in steps.iter().enumerate() {
+            for iv in step_inputs(s) {
+                last_step.insert(iv, si);
+            }
+        }
+        let interior = |v: usize| -> bool {
+            v != self.output
+                && produced_at.contains_key(&v)
+                && self.values[v].external.is_none()
+                && v >= self.n_session_inputs
+        };
+        let mut buffers_planned: u64 = 0;
+        let mut drop_after: Vec<Vec<usize>> = vec![Vec::new(); steps.len()];
+        for (si, s) in steps.iter_mut().enumerate() {
+            let ins = step_inputs(s);
+            if let Step::Op { inputs, donate, .. } = s {
+                *donate = inputs
+                    .iter()
+                    .map(|&iv| {
+                        interior(iv)
+                            && last_step.get(&iv) == Some(&si)
+                            && inputs.iter().filter(|&&x| x == iv).count() == 1
+                    })
+                    .collect();
+                buffers_planned += donate.iter().filter(|&&d| d).count() as u64;
+            }
+            for iv in ins {
+                if interior(iv) && last_step.get(&iv) == Some(&si) {
+                    drop_after[si].push(iv);
+                }
+            }
+        }
+
+        let externals: Vec<(usize, Tensor)> = self
+            .values
+            .iter()
+            .enumerate()
+            .filter_map(|(i, v)| v.external.as_ref().map(|t| (i, t.clone())))
+            .collect();
+
+        PlannedGraph {
+            steps,
+            externals,
+            n_session_inputs: self.n_session_inputs,
+            n_values: self.values.len(),
+            output: self.output,
+            drop_after,
+            ops_fused,
+            buffers_planned,
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! `dispatch::capture` — the tracing DispatchKey: graph capture from
+//! unmodified eager code, compile-style optimization, cached replay
+//! (§PyTorch-2 / TorchDynamo direction; eager semantics, compiled speed).
+//!
+//! A [`GraphCapture`] session wraps a block of eager code. The first
+//! time a given input signature is seen, the block runs **eagerly** —
+//! correct by construction — while the dispatcher's choke point records
+//! every *leaf* op invocation (composite kernels record their primitive
+//! streams, not themselves) into a [`graph::Graph`]. The graph is then
+//! optimized — dead-code elimination, automatic fusion of elementwise
+//! chains into `fuse` micro-op tapes (with emitted backward tapes, ONE
+//! autograd node per region), and buffer planning over the donation
+//! protocol — and cached under a **guard key** derived from the session
+//! inputs' shapes/dtypes/strides (never tensor *data*; pallas-audit's
+//! `no-data-hash` lint enforces this). Later calls with the same
+//! signature **replay** the optimized plan through the normal kernels;
+//! a shape change misses the guard table and recaptures. The table is
+//! LRU-bounded like the packed-weight cache.
+//!
+//! Replay is **bitwise identical** to eager at every thread count and
+//! SIMD mode (`tests/capture_parity.rs` pins forward + backward), so
+//! capture is a pure performance knob, never a semantics knob.
+//!
+//! Scope and caveats (the standard tracing contract):
+//! * Keep data-dependent control flow out of the captured block — the
+//!   trace bakes in the branch taken at capture time. Shapes are
+//!   guarded; Rust-side branches on tensor *values* are not.
+//! * Tensors read by the block but not passed as session inputs
+//!   (weights, constants) are captured as **externals** by handle:
+//!   replay re-reads their current storage, so in-place optimizer
+//!   updates between steps behave exactly as in eager mode.
+//! * Run `backward()` *outside* the captured block.
+//! * A block whose result does not depend on every session input (e.g.
+//!   an input consumed only through a pre-computed view) is refused and
+//!   permanently runs eager — the safety net against stale closures.
+//!
+//! `PALLAS_CAPTURE=0` is the kill switch: sessions stop capturing and
+//! every `run` degrades to plain eager execution.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use once_cell::sync::Lazy;
+
+use crate::tensor::Tensor;
+
+use super::Param;
+
+mod graph;
+mod replay;
+
+use graph::{Graph, Node, PlannedGraph, ValueInfo};
+
+/// Guard-table bound per session (LRU eviction beyond this).
+const MAX_GRAPHS: usize = 8;
+
+// ---------------------------------------------------------------------
+// Process-wide stats (satellite: dispatch::capture_stats())
+// ---------------------------------------------------------------------
+
+static GRAPHS_CAPTURED: AtomicU64 = AtomicU64::new(0);
+static GUARD_HITS: AtomicU64 = AtomicU64::new(0);
+static GUARD_MISSES: AtomicU64 = AtomicU64::new(0);
+static OPS_FUSED: AtomicU64 = AtomicU64::new(0);
+static BUFFERS_PLANNED: AtomicU64 = AtomicU64::new(0);
+
+/// Counters for the capture subsystem since process start, alongside
+/// [`crate::dispatch::output_reuse_stats`] and
+/// [`crate::dispatch::packed_weight_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CaptureStats {
+    /// Graphs captured and compiled (guard misses that produced a plan).
+    pub graphs_captured: u64,
+    /// Session calls served by a cached plan (or cached eager verdict).
+    pub guard_hits: u64,
+    /// Session calls that had to (re)trace.
+    pub guard_misses: u64,
+    /// Eager ops subsumed into fused regions, summed over captures.
+    pub ops_fused: u64,
+    /// Interior buffers the planner marked for donation, summed over
+    /// captures.
+    pub buffers_planned: u64,
+}
+
+/// Snapshot the capture counters.
+pub fn capture_stats() -> CaptureStats {
+    CaptureStats {
+        graphs_captured: GRAPHS_CAPTURED.load(Ordering::Relaxed),
+        guard_hits: GUARD_HITS.load(Ordering::Relaxed),
+        guard_misses: GUARD_MISSES.load(Ordering::Relaxed),
+        ops_fused: OPS_FUSED.load(Ordering::Relaxed),
+        buffers_planned: BUFFERS_PLANNED.load(Ordering::Relaxed),
+    }
+}
+
+/// `PALLAS_CAPTURE` kill switch, read once: unset or any value but "0"
+/// leaves capture available to sessions that opt in.
+static ENABLED: Lazy<bool> =
+    Lazy::new(|| std::env::var("PALLAS_CAPTURE").map(|v| v != "0").unwrap_or(true));
+
+// ---------------------------------------------------------------------
+// Thread-local trace state (the tracing DispatchKey)
+// ---------------------------------------------------------------------
+
+struct TraceState {
+    nodes: Vec<Node>,
+    values: Vec<ValueInfo>,
+    /// tensor id -> value id (rebound on in-place mutation: the op's
+    /// output handle renames the value, SSA-style).
+    by_tensor: BTreeMap<u64, usize>,
+    n_session_inputs: usize,
+}
+
+impl TraceState {
+    /// The value id feeding `t` into a node: a known value, or a fresh
+    /// external captured by handle.
+    fn value_of(&mut self, t: &Tensor) -> usize {
+        if let Some(&v) = self.by_tensor.get(&t.id()) {
+            return v;
+        }
+        let v = self.values.len();
+        self.values.push(ValueInfo {
+            shape: t.shape().to_vec(),
+            dtype: t.dtype(),
+            external: Some(t.clone()),
+        });
+        self.by_tensor.insert(t.id(), v);
+        v
+    }
+}
+
+thread_local! {
+    static TRACE: RefCell<Option<TraceState>> = RefCell::new(None);
+}
+
+/// Is a capture trace active on this thread? Composite wrappers
+/// (`loss.rs`, `norm.rs`) consult this to route through primitive
+/// compositions the auto-fuser can recapture.
+pub fn tracing_active() -> bool {
+    TRACE.with(|c| c.borrow().is_some())
+}
+
+/// Trace-node count before a kernel runs; [`trace_op`] records the op
+/// only when the count is unchanged after (i.e. the kernel dispatched
+/// no nested ops — it is a primitive leaf, not a composite).
+#[inline]
+pub(crate) fn trace_mark() -> usize {
+    TRACE.with(|c| c.borrow().as_ref().map_or(0, |s| s.nodes.len()))
+}
+
+/// The dispatcher's capture hook: record one leaf op invocation into
+/// the active trace (no-op when no session is tracing on this thread).
+pub(crate) fn trace_op(
+    name: &str,
+    inputs: &[&Tensor],
+    out: &Tensor,
+    params: &[Param],
+    mark: usize,
+) {
+    TRACE.with(|cell| {
+        let mut borrow = cell.borrow_mut();
+        let st = match borrow.as_mut() {
+            Some(s) => s,
+            None => return,
+        };
+        if st.nodes.len() != mark {
+            // Nested ops were recorded while this kernel ran: this is a
+            // composite frame; its primitive leaves already traced.
+            return;
+        }
+        let ivs: Vec<usize> = inputs.iter().map(|t| st.value_of(t)).collect();
+        let out_id = st.values.len();
+        st.values.push(ValueInfo {
+            shape: out.shape().to_vec(),
+            dtype: out.dtype(),
+            external: None,
+        });
+        st.by_tensor.insert(out.id(), out_id);
+        st.nodes.push(Node {
+            name: name.to_string(),
+            inputs: ivs,
+            output: out_id,
+            params: params.to_vec(),
+        });
+    });
+}
+
+/// Clears the thread's trace on scope exit (including panics mid-trace,
+/// so a failed capture never poisons later dispatches).
+struct TraceGuard;
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        TRACE.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Guard keys
+// ---------------------------------------------------------------------
+
+/// The recapture guard: shapes, dtypes, strides and the grad-mode bit —
+/// metadata only. Tensor *data* must never feed a cache key (enforced
+/// by pallas-audit's `no-data-hash` lint over this module).
+fn guard_key(inputs: &[&Tensor]) -> String {
+    let mut key = String::new();
+    for t in inputs {
+        let _ = write!(key, "{:?}|{:?}|{:?};", t.shape(), t.dtype(), t.strides());
+    }
+    if crate::autograd::grad_enabled() {
+        key.push('G');
+    }
+    key
+}
+
+// ---------------------------------------------------------------------
+// The session
+// ---------------------------------------------------------------------
+
+enum Compiled {
+    Plan(Box<PlannedGraph>),
+    /// The traced block failed a capture precondition; this signature
+    /// permanently runs eager (correctness first).
+    Eager,
+}
+
+struct Entry {
+    compiled: Compiled,
+    last_use: u64,
+}
+
+/// A capture session: a guard table mapping input signatures to
+/// optimized, replayable graphs. One session per traced block (e.g. one
+/// per model forward); sessions are single-threaded like the modules
+/// they wrap.
+pub struct GraphCapture {
+    name: &'static str,
+    graphs: RefCell<BTreeMap<String, Entry>>,
+    tick: Cell<u64>,
+}
+
+impl GraphCapture {
+    /// New, empty session. `name` labels profiler spans and errors.
+    pub fn new(name: &'static str) -> GraphCapture {
+        GraphCapture { name, graphs: RefCell::new(BTreeMap::new()), tick: Cell::new(0) }
+    }
+
+    /// Number of compiled graphs currently cached.
+    pub fn cached_graphs(&self) -> usize {
+        self.graphs
+            .borrow()
+            .values()
+            .filter(|e| matches!(e.compiled, Compiled::Plan(_)))
+            .count()
+    }
+
+    /// Run `f` under this session. First call per input signature traces
+    /// eagerly (and returns that eager result); later calls replay the
+    /// optimized graph. `f` receives exactly the `inputs` slice and must
+    /// derive its result from those tensors (plus captured externals).
+    pub fn run<F>(&self, inputs: &[&Tensor], f: F) -> Tensor
+    where
+        F: FnOnce(&[&Tensor]) -> Tensor,
+    {
+        if !*ENABLED || tracing_active() || inputs.is_empty() {
+            return f(inputs);
+        }
+        let key = guard_key(inputs);
+        let tick = self.tick.get() + 1;
+        self.tick.set(tick);
+
+        // Guard hit: replay the plan (or honor a cached eager verdict).
+        {
+            let mut graphs = self.graphs.borrow_mut();
+            if let Some(entry) = graphs.get_mut(&key) {
+                entry.last_use = tick;
+                GUARD_HITS.fetch_add(1, Ordering::Relaxed);
+                match &entry.compiled {
+                    Compiled::Plan(plan) => return replay::replay(plan, inputs),
+                    Compiled::Eager => {}
+                }
+                drop(graphs);
+                return f(inputs);
+            }
+        }
+
+        // Guard miss: trace one eager run.
+        GUARD_MISSES.fetch_add(1, Ordering::Relaxed);
+        let _guard = TraceGuard;
+        TRACE.with(|c| {
+            let mut values = Vec::with_capacity(inputs.len());
+            let mut by_tensor = BTreeMap::new();
+            for (i, t) in inputs.iter().enumerate() {
+                values.push(ValueInfo {
+                    shape: t.shape().to_vec(),
+                    dtype: t.dtype(),
+                    external: None,
+                });
+                by_tensor.insert(t.id(), i);
+            }
+            *c.borrow_mut() = Some(TraceState {
+                nodes: Vec::new(),
+                values,
+                by_tensor,
+                n_session_inputs: inputs.len(),
+            });
+        });
+        let result = f(inputs);
+        let state = TRACE.with(|c| c.borrow_mut().take()).expect("trace state vanished");
+        drop(_guard);
+
+        let compiled = match self.compile(state, &result) {
+            Some(plan) => {
+                GRAPHS_CAPTURED.fetch_add(1, Ordering::Relaxed);
+                OPS_FUSED.fetch_add(plan.ops_fused, Ordering::Relaxed);
+                BUFFERS_PLANNED.fetch_add(plan.buffers_planned, Ordering::Relaxed);
+                Compiled::Plan(Box::new(plan))
+            }
+            None => Compiled::Eager,
+        };
+        let mut graphs = self.graphs.borrow_mut();
+        if graphs.len() >= MAX_GRAPHS {
+            // LRU eviction, like the packed-weight cache.
+            if let Some(oldest) =
+                graphs.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| k.clone())
+            {
+                graphs.remove(&oldest);
+            }
+        }
+        graphs.insert(key, Entry { compiled, last_use: tick });
+        result
+    }
+
+    /// Lower a finished trace to an optimized plan, or `None` when a
+    /// capture precondition fails (this signature then stays eager).
+    fn compile(&self, state: TraceState, result: &Tensor) -> Option<PlannedGraph> {
+        let _ = self.name;
+        if state.nodes.is_empty() {
+            return None;
+        }
+        // The block's result must be a traced op output.
+        let output = *state.by_tensor.get(&result.id())?;
+        if output < state.n_session_inputs {
+            return None;
+        }
+        // Safety net: every session input must actually feed the trace —
+        // an unreferenced input means the closure computed from something
+        // else (e.g. a stale pre-reshaped view), which guards cannot see.
+        let mut used = vec![false; state.n_session_inputs];
+        for node in &state.nodes {
+            for &iv in &node.inputs {
+                if iv < state.n_session_inputs {
+                    used[iv] = true;
+                }
+            }
+        }
+        if used.iter().any(|u| !u) {
+            return None;
+        }
+        let g = Graph {
+            nodes: state.nodes,
+            values: state.values,
+            n_session_inputs: state.n_session_inputs,
+            output,
+        };
+        Some(g.optimize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    fn mse_block(inputs: &[&Tensor]) -> Tensor {
+        let d = ops::sub(inputs[0], inputs[1]);
+        ops::mean(&ops::mul(&d, &d))
+    }
+
+    #[test]
+    fn capture_replay_matches_eager_bitwise() {
+        crate::rng::manual_seed(71);
+        let sess = GraphCapture::new("test:mse");
+        let p = Tensor::randn(&[257]);
+        let t = Tensor::randn(&[257]);
+        let eager = mse_block(&[&p, &t]);
+        let first = sess.run(&[&p, &t], mse_block); // traced eager run
+        let second = sess.run(&[&p, &t], mse_block); // replayed plan
+        assert_eq!(first.to_vec::<f32>(), eager.to_vec::<f32>());
+        assert_eq!(second.to_vec::<f32>(), eager.to_vec::<f32>());
+    }
+
+    #[test]
+    fn guard_recaptures_on_shape_change_and_stats_move() {
+        let before = capture_stats();
+        let sess = GraphCapture::new("test:guard");
+        let f = |ins: &[&Tensor]| ops::relu(&ops::add(ins[0], ins[0]));
+        let a = Tensor::ones(&[16]);
+        let r1 = sess.run(&[&a], f);
+        let r2 = sess.run(&[&a], f);
+        assert_eq!(r1.to_vec::<f32>(), r2.to_vec::<f32>());
+        let b = Tensor::ones(&[32]);
+        let _ = sess.run(&[&b], f);
+        let after = capture_stats();
+        // Stats are process-global and tests run concurrently: assert
+        // this test's own contribution as a lower bound.
+        assert!(after.guard_misses >= before.guard_misses + 2, "shape change must re-trace");
+        assert!(after.guard_hits >= before.guard_hits + 1);
+        assert!(after.graphs_captured >= before.graphs_captured + 2);
+        assert!(after.ops_fused >= before.ops_fused + 4, "add+relu fuse in both captures");
+        assert_eq!(sess.cached_graphs(), 2);
+    }
+
+    #[test]
+    fn dce_drops_dead_ops_and_planner_donates_interiors() {
+        crate::rng::manual_seed(73);
+        let before = capture_stats();
+        let sess = GraphCapture::new("test:dce");
+        let f = |ins: &[&Tensor]| {
+            let _dead = ops::exp(ins[0]); // never consumed: DCE'd
+            ops::relu(&ops::matmul(ins[0], ins[0]))
+        };
+        let x = Tensor::randn(&[8, 8]);
+        let eager = ops::relu(&ops::matmul(&x, &x));
+        let _first = sess.run(&[&x], f);
+        let second = sess.run(&[&x], f);
+        assert_eq!(second.to_vec::<f32>(), eager.to_vec::<f32>());
+        let after = capture_stats();
+        // The matmul intermediate dies at the relu: planned for donation.
+        assert!(after.buffers_planned >= before.buffers_planned + 1);
+    }
+
+    #[test]
+    fn unreferenced_session_input_refuses_capture() {
+        let sess = GraphCapture::new("test:refuse");
+        let x = Tensor::ones(&[4]);
+        let y = Tensor::ones(&[4]);
+        // The closure ignores its inputs entirely: capture must refuse
+        // (and keep refusing) rather than replay a stale constant.
+        let g = ops::add(&x, &x);
+        let r1 = sess.run(&[&y], |_| ops::relu(&g));
+        let r2 = sess.run(&[&y], |_| ops::relu(&g));
+        assert_eq!(sess.cached_graphs(), 0, "stale-closure captures must be refused");
+        assert_eq!(r1.to_vec::<f32>(), r2.to_vec::<f32>());
+    }
+}

@@ -1,0 +1,157 @@
+//! Replay of an optimized captured graph.
+//!
+//! Plain steps re-dispatch through [`crate::dispatch::call_owned`] — same
+//! kernels, same TensorIter plans, same autograd recording — with
+//! buffer-planned operands passed in owned so the donation protocol can
+//! steal dying interior storages. Fused regions run through the `fuse`
+//! drivers and record ONE autograd node whose gradients are the region's
+//! emitted backward tapes; both paths are bitwise identical to the eager
+//! trace at every thread count and SIMD mode (pinned by
+//! `tests/capture_parity.rs`).
+
+use crate::autograd::{self, ClosureFunction, SavedTensor};
+use crate::dispatch::fuse::{self, Access};
+use crate::dispatch::reduce::sum_to_shape;
+use crate::dispatch::Param;
+use crate::tensor::{DType, Tensor};
+use crate::torsk_assert;
+
+use super::graph::{FusedRegion, PlannedGraph, Step};
+
+/// Execute `plan` against fresh session `inputs` (guard-checked by the
+/// caller to match the captured shapes/dtypes).
+pub(crate) fn replay(plan: &PlannedGraph, inputs: &[&Tensor]) -> Tensor {
+    torsk_assert!(inputs.len() == plan.n_session_inputs, "capture: replay arity mismatch");
+    let mut slots: Vec<Option<Tensor>> = vec![None; plan.n_values];
+    for (i, t) in inputs.iter().enumerate() {
+        slots[i] = Some((*t).clone());
+    }
+    for (vid, t) in &plan.externals {
+        slots[*vid] = Some(t.clone());
+    }
+
+    for (si, step) in plan.steps.iter().enumerate() {
+        match step {
+            Step::Op { name, inputs: ivs, donate, params, out } => {
+                let owned: Vec<Tensor> = ivs
+                    .iter()
+                    .zip(donate.iter())
+                    .map(|(&iv, &d)| {
+                        if d {
+                            // Last use of an interior value: move the only
+                            // handle in, arming the donation protocol.
+                            slots[iv].take().expect("capture: donated slot not live")
+                        } else {
+                            slots[iv].as_ref().expect("capture: slot not live").clone()
+                        }
+                    })
+                    .collect();
+                let y = crate::dispatch::call_owned(name, owned, params);
+                slots[*out] = Some(y);
+            }
+            Step::Fused(region) => {
+                let y = run_region(region, &slots);
+                slots[region.out] = Some(y);
+            }
+        }
+        for &v in &plan.drop_after[si] {
+            slots[v] = None;
+        }
+    }
+    slots[plan.output].clone().expect("capture: graph output not produced")
+}
+
+/// Execute one fused region: forward through the map / map-reduce tape
+/// driver, then record a single autograd node whose gradients run the
+/// emitted backward tapes (mirroring the hand-registered fused kernels'
+/// backward structure exactly).
+fn run_region(region: &FusedRegion, slots: &[Option<Tensor>]) -> Tensor {
+    let exts: Vec<Tensor> = region
+        .exts
+        .iter()
+        .map(|&v| slots[v].as_ref().expect("capture: region operand not live").clone())
+        .collect();
+    let srcs: Vec<(&Tensor, Access)> =
+        exts.iter().zip(region.access.iter()).map(|(t, &a)| (t, a)).collect();
+
+    let n: usize = region.map_shape.iter().product();
+    let dt = exts[0].dtype();
+    let out = match &region.reduce {
+        None => fuse::run_map("captured:fuse", &region.fwd, &srcs, &region.map_shape),
+        Some(tail) => {
+            // The trailing `mul_scalar` parameter as the runtime dtype
+            // sees it (F32 kernels narrow first), exactly like
+            // `mean_factor` does for the hand-fused losses; a bare `sum`
+            // finishes with an exact `* 1.0`.
+            let factor = match tail.scale {
+                Some(s) if dt == DType::F32 => (s as f32) as f64,
+                Some(s) => s,
+                None => 1.0,
+            };
+            fuse::run_map_sum(
+                "captured:fuse_sum",
+                &region.fwd,
+                &srcs,
+                n,
+                fuse::finish_mean,
+                factor,
+            )
+        }
+    };
+
+    let ext_refs: Vec<&Tensor> = exts.iter().collect();
+    if autograd::should_record(&ext_refs) {
+        let bwds = region.bwds.clone();
+        let access = region.access.clone();
+        let ext_shapes = region.ext_shapes.clone();
+        let map_shape = region.map_shape.clone();
+        let scale = region.reduce.as_ref().map(|t| t.scale);
+        let saved: Vec<SavedTensor> = exts.iter().map(SavedTensor::save).collect();
+        autograd::record(&ext_refs, &out, || {
+            ClosureFunction::new("captured:fuse", move |g| {
+                let held: Vec<Tensor> = saved.iter().map(|s| s.unpack()).collect();
+                // For reduce regions the upstream scalar grad is
+                // prescaled by the folded `mul_scalar`'s backward —
+                // the same dispatched op the eager chain ran — and read
+                // with Scalar access (== the eager `broadcast_to`).
+                let gs;
+                let g_access;
+                match scale {
+                    Some(Some(s)) => {
+                        gs = crate::dispatch::call_owned(
+                            "mul_scalar",
+                            vec![g.clone()],
+                            &[Param::F64(s)],
+                        );
+                        g_access = Access::Scalar;
+                    }
+                    Some(None) => {
+                        gs = g.clone();
+                        g_access = Access::Scalar;
+                    }
+                    None => {
+                        gs = g.clone();
+                        g_access = Access::Flat;
+                    }
+                }
+                let mut srcs: Vec<(&Tensor, Access)> =
+                    held.iter().zip(access.iter()).map(|(t, &a)| (t, a)).collect();
+                srcs.push((&gs, g_access));
+                let mut grads: Vec<Option<Tensor>> = Vec::with_capacity(bwds.len());
+                for (k, tape) in bwds.iter().enumerate() {
+                    let full = fuse::run_map("captured:fuse_bwd", tape, &srcs, &map_shape);
+                    let gk = if ext_shapes[k] == map_shape {
+                        full
+                    } else {
+                        // Broadcast operand: reduce exactly like the
+                        // eager engine's `grad_to` does.
+                        sum_to_shape(&full, &ext_shapes[k])
+                    };
+                    grads.push(Some(gk));
+                }
+                grads
+            })
+        });
+    }
+    out
+}

@@ -107,9 +107,9 @@ pub enum MicroOp {
 
 /// Interpreter stack depth — asserted at build time, so `eval` can use a
 /// fixed array with no bounds checks beyond the array itself.
-const MAX_STACK: usize = 8;
+pub(crate) const MAX_STACK: usize = 8;
 /// Maximum tape operands (fused kernels are small by design).
-const MAX_ARGS: usize = 6;
+pub(crate) const MAX_ARGS: usize = 6;
 
 #[inline(always)]
 fn apply_un<T: FloatElement>(k: UnaryK, x: T) -> T {
@@ -209,12 +209,24 @@ impl Tape {
         stack[0]
     }
 
-    /// Re-verify interpreter bounds on a finished tape: every `Load` in
+    /// Construct a tape from raw micro-ops, verifying interpreter bounds
+    /// once here (the capture auto-fuser emits ops without going through
+    /// [`TapeBuilder`]'s incremental tracking). Panics on an unbalanced or
+    /// out-of-range program — the same checks [`Tape::verify`] runs.
+    pub(crate) fn from_ops(ops: Vec<MicroOp>, n_inputs: usize) -> Tape {
+        let t = Tape { ops, n_inputs };
+        t.verify();
+        t
+    }
+
+    /// Verify interpreter bounds on a finished tape: every `Load` in
     /// range, stack depth within [`MAX_STACK`] and never underflowing,
     /// exactly one result left. [`TapeBuilder`] enforces all of this
-    /// during construction, but tapes can also be composed by splicing
-    /// `ops` directly (see `SBCE_DX`), bypassing the builder's tracking —
-    /// the `debug-checks` drivers re-run this at dispatch.
+    /// during construction; tapes composed by splicing `ops` directly
+    /// (see `SBCE_DX`) or emitted by the capture auto-fuser run this
+    /// ONCE at assembly time — per-call dispatch only re-checks the
+    /// cheap operand-extent bounds (see `verify_plan`), not the whole
+    /// program, since tapes are immutable after construction.
     pub fn verify(&self) {
         let mut depth = 0usize;
         for op in &self.ops {
@@ -480,12 +492,15 @@ fn plan_srcs(inputs: &[(&Tensor, Access)]) -> (Vec<Tensor>, Vec<(SendPtr, Access
     (keep, srcs)
 }
 
-/// Sanitizer: re-verify the tape's interpreter bounds and that every
-/// operand covers the largest source index its [`Access`] pattern can
-/// generate over an `n`-element pass (the bound `src_index` relies on).
+/// Sanitizer: verify that every operand covers the largest source index
+/// its [`Access`] pattern can generate over an `n`-element pass (the
+/// bound `src_index` relies on). Tape program bounds are NOT re-checked
+/// here: tapes are immutable and verified once at build/capture time
+/// ([`Tape::from_ops`] / the `SBCE_DX` splice), so per-call work stays
+/// proportional to the operand count, not the program length.
 #[cfg(feature = "debug-checks")]
 fn verify_plan(name: &str, tape: &Tape, keep: &[Tensor], srcs: &[(SendPtr, Access)], n: usize) {
-    tape.verify();
+    let _ = tape;
     if n == 0 {
         return;
     }
@@ -604,12 +619,12 @@ pub(crate) fn run_map_sum(
 /// `total * rn` — matches the composed `mean = sum * (1/n)` scalar kernel
 /// exactly: for F32 the f64 product of two exactly-widened f32s rounds to
 /// the same f32 the composed `x * sv` kernel computes.
-fn finish_mean(total: f64, rn: f64) -> f64 {
+pub(crate) fn finish_mean(total: f64, rn: f64) -> f64 {
     scale_like_dtype(total, rn)
 }
 
 /// `-(total * rn)` — BCE's trailing `neg(mean(..))`.
-fn finish_neg_mean(total: f64, rn: f64) -> f64 {
+pub(crate) fn finish_neg_mean(total: f64, rn: f64) -> f64 {
     -scale_like_dtype(total, rn)
 }
 
@@ -622,7 +637,7 @@ fn scale_like_dtype(total: f64, rn: f64) -> f64 {
 
 /// The mean factor as the runtime dtype would see it: F32 kernels narrow
 /// `1/n` to f32 before multiplying (see `float_scalar!` in elementwise).
-fn mean_factor(n: usize, dt: DType) -> f64 {
+pub(crate) fn mean_factor(n: usize, dt: DType) -> f64 {
     let rn = 1.0 / n.max(1) as f64;
     match dt {
         DType::F32 => rn as f32 as f64,
@@ -833,6 +848,9 @@ static SBCE_DX: Lazy<Tape> = Lazy::new(|| {
     let tail = sigmoid_seq(Tape::build(3).load(0)).dup().neg().c(1.0).add().mul().done();
     b.ops.extend_from_slice(&tail.ops);
     b.ops.push(MicroOp::Bin(BinaryK::Mul));
+    // The splice bypassed TapeBuilder's depth tracking: verify the
+    // composed program once here, at assembly time.
+    b.verify();
     b
 });
 static SBCE_DT: Lazy<Tape> = Lazy::new(|| bce_dt_tape(load_sigmoid, 3));

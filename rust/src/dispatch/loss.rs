@@ -133,6 +133,13 @@ fn bw_cross_entropy(ctx: &OpCtx, _out: &Tensor) -> Box<dyn Function> {
 fn k_mse_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "mse_loss: shape mismatch");
+    if super::capture::tracing_active() {
+        // Under graph capture, trace the primitive chain instead so the
+        // graph optimizer re-fuses it; `tests/capture_parity.rs` pins the
+        // auto-fused tape bitwise against `fused:mse`.
+        let d = crate::ops::sub(pred, target);
+        return crate::ops::mean(&crate::ops::mul(&d, &d));
+    }
     super::call("fused:mse", &[pred, target], &[])
 }
 
@@ -142,6 +149,19 @@ fn k_mse_loss(ctx: &OpCtx) -> Tensor {
 fn k_bce_loss(ctx: &OpCtx) -> Tensor {
     let (pred, target) = (ctx.input(0), ctx.input(1));
     torsk_assert!(pred.shape() == target.shape(), "bce_loss: shape mismatch");
+    if super::capture::tracing_active() {
+        // Primitive composition under capture (same chain the fused tape
+        // encodes); the optimizer folds it back into one map-reduce region.
+        use crate::ops;
+        use super::fuse::BCE_EPS;
+        let pc = ops::clamp(pred, BCE_EPS, 1.0 - BCE_EPS);
+        let pos = ops::mul(target, &ops::log(&pc));
+        let neg = ops::mul(
+            &ops::add_scalar(&ops::neg(target), 1.0),
+            &ops::log(&ops::add_scalar(&ops::neg(&pc), 1.0)),
+        );
+        return ops::neg(&ops::mean(&ops::add(&pos, &neg)));
+    }
     super::call("fused:bce", &[pred, target], &[])
 }
 

@@ -137,6 +137,7 @@
 //! assert_eq!(y.shape(), &[4]);
 //! ```
 
+pub mod capture;
 pub(crate) mod conv;
 pub(crate) mod elementwise;
 pub mod fuse;
@@ -161,6 +162,7 @@ use crate::profiler;
 use crate::tensor::{storage, DType, Tensor};
 use crate::{torsk_assert, torsk_bail};
 
+pub use capture::{capture_stats, CaptureStats, GraphCapture};
 pub use linalg::{gemm_materialization_stats, packed_weight_stats};
 
 // ---------------------------------------------------------------------
@@ -722,6 +724,12 @@ fn call_with(def: OpDef, name: &str, inputs: &[&Tensor], params: &[Param]) -> Te
         None
     };
 
+    // Graph capture (tracing DispatchKey): remember how many trace nodes
+    // exist before the kernel runs, so composite kernels that dispatch
+    // nested ops record only their primitive leaves (the nested calls bump
+    // the count, and `trace_op` then declines the composite frame).
+    let mark = capture::trace_mark();
+
     let ctx = OpCtx::new(inputs, params, device);
     let out = kernel(&ctx);
 
@@ -736,6 +744,8 @@ fn call_with(def: OpDef, name: &str, inputs: &[&Tensor], params: &[Param]) -> Te
             autograd::record(inputs, &out, || bw(&ctx, &out));
         }
     }
+
+    capture::trace_op(name, inputs, &out, params, mark);
 
     if let Some(s) = span {
         profiler::end(s);

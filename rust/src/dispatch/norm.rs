@@ -166,6 +166,12 @@ fn k_layer_norm(ctx: &OpCtx) -> Tensor {
     let var = ops::mean_dims(&ops::mul(&centered, &centered), &[last], true);
     let inv_std =
         super::call_owned("pow_scalar", vec![ops::add_scalar(&var, eps)], &[super::Param::F32(-0.5)]);
+    if super::capture::tracing_active() {
+        // Under graph capture, trace the scale/shift tail as primitives so
+        // the optimizer re-fuses them; `tests/capture_parity.rs` pins the
+        // auto-fused tape bitwise against `fused:ln_tail`.
+        return ops::add(&ops::mul(&ops::mul(&centered, &inv_std), gamma), beta);
+    }
     super::call("fused:ln_tail", &[&centered, &inv_std, gamma, beta], &[])
 }
 

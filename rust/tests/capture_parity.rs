@@ -1,0 +1,297 @@
+//! Graph capture vs eager parity: replaying a captured (fused, DCE'd,
+//! buffer-planned) graph must match the plain eager run **bit for bit**
+//! — forward and backward — at `PALLAS_NUM_THREADS` = 1, 2 and 8, in
+//! both the vectorized and forced-scalar SIMD modes.
+//!
+//! The replay path re-dispatches plain steps through the same kernels
+//! and runs fused regions through the same fixed-chunk tape drivers the
+//! hand-registered `fused:*` ops use, so equality here is structural,
+//! not a tolerance. The whole file also runs under `--features
+//! debug-checks` in CI, which validates every donated/dropped buffer
+//! the planner produces.
+
+use torsk::dispatch::{self, GraphCapture};
+use torsk::kernels::set_num_threads;
+use torsk::kernels::simd::set_force_scalar;
+use torsk::ops;
+use torsk::testing::{for_all, gen_vec};
+use torsk::Tensor;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn bits(v: Vec<f32>) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Forward bits + per-leaf gradient bits of `f(leaves)` run plain eager.
+fn eager_fwd_bwd(inputs: &[Tensor], f: impl Fn(&[Tensor]) -> Tensor) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let leaves: Vec<Tensor> = inputs.iter().map(|t| t.detach().requires_grad(true)).collect();
+    let out = f(&leaves);
+    ops::sum(&out).backward();
+    let grads = leaves
+        .iter()
+        .map(|l| bits(l.grad().expect("grad flows").to_vec::<f32>()))
+        .collect();
+    (bits(out.to_vec::<f32>()), grads)
+}
+
+/// Same computation through a capture session: the first `run` traces
+/// (discarded, no backward), the second replays the optimized plan; the
+/// replay's forward and backward bits are returned. Panics if nothing
+/// was actually captured — a silent eager fallback would make the
+/// parity assertions vacuous.
+fn captured_fwd_bwd(
+    inputs: &[Tensor],
+    f: impl Fn(&[&Tensor]) -> Tensor,
+) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let leaves: Vec<Tensor> = inputs.iter().map(|t| t.detach().requires_grad(true)).collect();
+    let refs: Vec<&Tensor> = leaves.iter().collect();
+    let sess = GraphCapture::new("test:capture_parity");
+    let _trace = sess.run(&refs, &f);
+    assert!(sess.cached_graphs() >= 1, "capture refused; parity test would be vacuous");
+    let out = sess.run(&refs, &f);
+    ops::sum(&out).backward();
+    let grads = leaves
+        .iter()
+        .map(|l| bits(l.grad().expect("grad flows").to_vec::<f32>()))
+        .collect();
+    (bits(out.to_vec::<f32>()), grads)
+}
+
+/// Assert captured == eager across the full thread × SIMD matrix.
+fn parity_sweep(
+    inputs: &[Tensor],
+    eager: impl Fn(&[Tensor]) -> Tensor,
+    captured: impl Fn(&[&Tensor]) -> Tensor,
+) -> bool {
+    let mut ok = true;
+    for &th in THREADS.iter() {
+        for &scalar in &[false, true] {
+            set_num_threads(th);
+            set_force_scalar(scalar);
+            let e = eager_fwd_bwd(inputs, &eager);
+            let c = captured_fwd_bwd(inputs, &captured);
+            ok &= e == c;
+        }
+    }
+    set_force_scalar(false);
+    set_num_threads(0);
+    ok
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: MLP and conv blocks, full thread × SIMD matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn mlp_block_capture_replay_bitwise_across_threads_and_simd() {
+    for_all(
+        "captured MLP block == eager, fwd+bwd",
+        3,
+        |r| {
+            let b = 1 + r.below(6) as usize;
+            let (din, dh, dout) = (5, 7, 3);
+            (
+                b,
+                gen_vec(r, b * din, -2.0, 2.0),
+                gen_vec(r, dh * din, -1.0, 1.0),
+                gen_vec(r, dh, -0.5, 0.5),
+                gen_vec(r, dout * dh, -1.0, 1.0),
+                gen_vec(r, dout, -0.5, 0.5),
+                gen_vec(r, b * dout, -1.0, 1.0),
+            )
+        },
+        |(b, xv, w1v, b1v, w2v, b2v, tv)| {
+            let (din, dh, dout) = (5, 7, 3);
+            let inputs = [
+                Tensor::from_vec(xv.clone(), &[*b, din]),
+                Tensor::from_vec(w1v.clone(), &[dh, din]),
+                Tensor::from_vec(b1v.clone(), &[dh]),
+                Tensor::from_vec(w2v.clone(), &[dout, dh]),
+                Tensor::from_vec(b2v.clone(), &[dout]),
+                Tensor::from_vec(tv.clone(), &[*b, dout]),
+            ];
+            let mlp_loss = |x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor, t: &Tensor| {
+                let h = ops::relu(&ops::linear(x, w1, Some(b1)));
+                let y = ops::linear(&h, w2, Some(b2));
+                ops::mse_loss(&y, t)
+            };
+            parity_sweep(
+                &inputs,
+                |l| mlp_loss(&l[0], &l[1], &l[2], &l[3], &l[4], &l[5]),
+                |l| mlp_loss(l[0], l[1], l[2], l[3], l[4], l[5]),
+            )
+        },
+    );
+}
+
+#[test]
+fn conv_block_capture_replay_bitwise_across_threads_and_simd() {
+    for_all(
+        "captured conv block == eager, fwd+bwd",
+        3,
+        |r| {
+            let n = 1 + r.below(2) as usize;
+            let hw = 4 + r.below(5) as usize;
+            (
+                n,
+                hw,
+                gen_vec(r, n * 4 * hw * hw, -2.0, 2.0),
+                gen_vec(r, 4 * 4 * 9, -0.5, 0.5),
+                gen_vec(r, 4, -0.2, 0.2),
+            )
+        },
+        |(n, hw, xv, wv, bv)| {
+            let inputs = [
+                Tensor::from_vec(xv.clone(), &[*n, 4, *hw, *hw]),
+                Tensor::from_vec(wv.clone(), &[4, 4, 3, 3]),
+                Tensor::from_vec(bv.clone(), &[4]),
+            ];
+            // conv → relu → residual add: the relu/add pair auto-fuses
+            // into one region (one autograd node), conv stays a plain
+            // replayed step.
+            let block = |x: &Tensor, w: &Tensor, b: &Tensor| {
+                let y = ops::conv2d(x, w, Some(b), 1, 1, 1);
+                ops::add(&ops::relu(&y), x)
+            };
+            parity_sweep(
+                &inputs,
+                |l| block(&l[0], &l[1], &l[2]),
+                |l| block(l[0], l[1], l[2]),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Guard behavior: shape change recaptures, both graphs replay bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn guard_recaptures_on_shape_change_both_replay_bitwise() {
+    let sess = GraphCapture::new("test:guard");
+    let f = |ins: &[&Tensor]| ops::mul(&ops::relu(&ops::add(ins[0], ins[0])), ins[0]);
+    for &n in &[64usize, 96] {
+        let xv = gen_vec(&mut torsk::rng::Rng::new(7 + n as u64), n, -2.0, 2.0);
+        let x = Tensor::from_vec(xv, &[n]);
+        let eager = bits(f(&[&x]).to_vec::<f32>());
+        let traced = bits(sess.run(&[&x], f).to_vec::<f32>());
+        let replayed = bits(sess.run(&[&x], f).to_vec::<f32>());
+        assert_eq!(eager, traced, "trace run diverged at n={n}");
+        assert_eq!(eager, replayed, "replay diverged at n={n}");
+    }
+    assert_eq!(sess.cached_graphs(), 2, "each shape compiles its own graph");
+}
+
+// ---------------------------------------------------------------------
+// Satellite: auto-fused composite wrappers vs hand-registered tapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn auto_fused_mse_matches_hand_registered_fused_mse() {
+    for_all(
+        "captured mse_loss == fused:mse, fwd+bwd",
+        4,
+        |r| {
+            let n = 1 + r.below(70_000) as usize;
+            (gen_vec(r, n, -2.0, 2.0), gen_vec(r, n, -2.0, 2.0))
+        },
+        |(pv, tv)| {
+            let inputs = [
+                Tensor::from_vec(pv.clone(), &[pv.len()]),
+                Tensor::from_vec(tv.clone(), &[tv.len()]),
+            ];
+            // Eager side dispatches the hand-registered fused:mse tape;
+            // the captured side traces the primitive chain and re-fuses
+            // it automatically. Both must agree bitwise.
+            parity_sweep(
+                &inputs,
+                |l| ops::mse_loss(&l[0], &l[1]),
+                |l| ops::mse_loss(l[0], l[1]),
+            )
+        },
+    );
+}
+
+#[test]
+fn auto_fused_bce_matches_hand_registered_fused_bce() {
+    for_all(
+        "captured bce_loss == fused:bce, fwd+bwd",
+        4,
+        |r| {
+            let n = 1 + r.below(70_000) as usize;
+            (gen_vec(r, n, 0.01, 0.99), gen_vec(r, n, 0.0, 1.0))
+        },
+        |(pv, tv)| {
+            let inputs = [
+                Tensor::from_vec(pv.clone(), &[pv.len()]),
+                Tensor::from_vec(tv.clone(), &[tv.len()]),
+            ];
+            parity_sweep(
+                &inputs,
+                |l| ops::bce_loss(&l[0], &l[1]),
+                |l| ops::bce_loss(l[0], l[1]),
+            )
+        },
+    );
+}
+
+#[test]
+fn auto_fused_layer_norm_matches_hand_registered_ln_tail() {
+    for_all(
+        "captured layer_norm == fused:ln_tail path, fwd+bwd",
+        4,
+        |r| {
+            let rows = 1 + r.below(24) as usize;
+            let d = 1 + r.below(192) as usize;
+            (
+                rows,
+                d,
+                gen_vec(r, rows * d, -2.0, 2.0),
+                gen_vec(r, d, 0.5, 1.5),
+                gen_vec(r, d, -0.5, 0.5),
+            )
+        },
+        |(rows, d, xv, gv, bv)| {
+            let inputs = [
+                Tensor::from_vec(xv.clone(), &[*rows, *d]),
+                Tensor::from_vec(gv.clone(), &[*d]),
+                Tensor::from_vec(bv.clone(), &[*d]),
+            ];
+            parity_sweep(
+                &inputs,
+                |l| ops::layer_norm(&l[0], &l[1], &l[2], 1e-5),
+                |l| ops::layer_norm(l[0], l[1], l[2], 1e-5),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Optimizer passes: DCE'd + buffer-planned graphs replay clean
+// (run under --features debug-checks in CI to validate every donation)
+// ---------------------------------------------------------------------
+
+#[test]
+fn dce_and_buffer_planning_replay_matches_eager() {
+    let before = dispatch::capture_stats();
+    let sess = GraphCapture::new("test:dce_plan");
+    // `dead` is never used by the result: DCE must drop it. The second
+    // matmul consumes the first's dying output, so the planner donates
+    // that buffer; relu + mul_scalar re-fuse into one region.
+    let f = |ins: &[&Tensor]| {
+        let _dead = ops::exp(ins[0]);
+        let y = ops::matmul(ins[0], ins[0]);
+        let z = ops::matmul(&y, ins[0]);
+        ops::mul_scalar(&ops::relu(&z), 0.5)
+    };
+    let x = Tensor::from_vec(gen_vec(&mut torsk::rng::Rng::new(23), 36, -1.5, 1.5), &[6, 6]);
+    let eager = bits(f(&[&x]).to_vec::<f32>());
+    let _ = sess.run(&[&x], f);
+    assert_eq!(sess.cached_graphs(), 1);
+    let replayed = bits(sess.run(&[&x], f).to_vec::<f32>());
+    assert_eq!(eager, replayed, "optimized replay diverged from eager");
+    let after = dispatch::capture_stats();
+    assert!(after.graphs_captured > before.graphs_captured);
+    assert!(after.buffers_planned > before.buffers_planned, "planner found no donations");
+}

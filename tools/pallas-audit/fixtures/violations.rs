@@ -56,6 +56,13 @@ pub fn sampleless_registrations(reg: &mut Registry) {
     register_op(OpDef::new("fixture:bad2", 1, 1, &[]).kernel_all(k_bad));
 }
 
+// A graph-cache guard key built from tensor *data*: fires `no-data-hash`
+// when this file is scanned under dispatch/capture/ (capture guards must
+// key on shapes/dtypes/strides only).
+pub fn poisoned_guard_key(t: &Tensor) -> String {
+    format!("{:?}", t.to_vec())
+}
+
 // ---------------------------------------------------------------------
 // Clean section: none of the following may be flagged.
 // ---------------------------------------------------------------------
@@ -83,6 +90,16 @@ pub fn sampled_registration(reg: &mut Registry) {
 // A counter `.add(..)` is not a registration; nothing to chain.
 pub fn counter_add(c: &AtomicU64) {
     c.add(1);
+}
+
+// A metadata-only key builder, and a data read outside any key/guard
+// function: both legal everywhere, including dispatch/capture/.
+pub fn honest_guard_key(t: &Tensor) -> String {
+    format!("{:?}|{:?}|{:?}", t.shape(), t.dtype(), t.strides())
+}
+
+pub fn replay_reads_data(t: &Tensor) -> Vec<f32> {
+    t.to_vec()
 }
 
 #[cfg(test)]

@@ -5,15 +5,16 @@
 //! ranges, out-aliases-input only on the Fast plan, determinism-safe
 //! iteration order). This crate machine-checks the *source-level* half of
 //! those invariants; the `debug-checks` feature of the `torsk` crate
-//! checks the runtime half. Five lints:
+//! checks the runtime half. Six lints:
 //!
 //! | lint | scope | rule |
 //! |------|-------|------|
 //! | `safety-comment`   | all of `rust/src`          | every `unsafe` keyword carries a nearby `// SAFETY:` justification (or a `# Safety` doc section) |
 //! | `no-contiguous`    | `dispatch/linalg.rs`, `kernels/` | no `.contiguous()` calls — the GEMM paths are contractually copy-free (generalizes the old `include_str!` source pin in `tests/gemm_parity.rs`) |
 //! | `no-raw-spawn`     | all but `kernels/mod.rs`, `multiproc/` | no `std::thread::spawn` / `thread::Builder` — parallelism goes through `kernels::parallel_for` or the multiproc layer |
-//! | `determinism`      | `kernels/`, `dispatch/`    | no `HashMap`/`HashSet` (iteration-order hazard), `Instant`/`SystemTime` (timing-dependent control flow), ad-hoc RNG, or per-call CPU-feature probes (`is_x86_feature_detected!`/CPUID — the one cached-at-init site in `kernels/simd.rs` is allowlisted) in kernel/dispatch code paths |
+//! | `determinism`      | `kernels/`, `dispatch/` (incl. `dispatch/capture/`) | no `HashMap`/`HashSet` (iteration-order hazard), `Instant`/`SystemTime` (timing-dependent control flow), ad-hoc RNG, or per-call CPU-feature probes (`is_x86_feature_detected!`/CPUID — the one cached-at-init site in `kernels/simd.rs` is allowlisted) in kernel/dispatch code paths |
 //! | `opinfo-samples`   | all of `rust/src`          | every inline `Registry::add` / `register_op` call chains `.sample_inputs(..)` so no op dodges the OpInfo gradcheck suite |
+//! | `no-data-hash`     | `dispatch/capture/`        | graph-cache key/guard builders (`fn` names containing `key` or `guard`) never read tensor *data* (`.to_vec`, `.item`, `.data_ptr`, `.as_slice`, `.storage`) — capture guards key on shapes/dtypes/strides only, so a data read is either a correctness bug (stale hit on changed values) or an O(numel) hash on the hot path |
 //!
 //! Mechanics: each file is parsed with `syn` (so comments, strings and
 //! doc text can never false-positive); AST-shaped rules run as a
@@ -39,8 +40,14 @@ use syn::spanned::Spanned;
 use syn::visit::{self, Visit};
 
 /// Lint identifiers, in report order.
-pub const LINTS: &[&str] =
-    &["safety-comment", "no-contiguous", "no-raw-spawn", "determinism", "opinfo-samples"];
+pub const LINTS: &[&str] = &[
+    "safety-comment",
+    "no-contiguous",
+    "no-raw-spawn",
+    "determinism",
+    "opinfo-samples",
+    "no-data-hash",
+];
 
 /// How far (in source lines) a `SAFETY` justification may sit from the
 /// `unsafe` keyword it covers: up to [`SAFETY_WINDOW_ABOVE`] lines above
@@ -72,6 +79,7 @@ pub struct Scope {
     pub contiguous: bool,
     pub spawn: bool,
     pub determinism: bool,
+    pub data_hash: bool,
 }
 
 impl Scope {
@@ -87,7 +95,11 @@ impl Scope {
             // The only sanctioned thread sources are the kernel pool and
             // the multiproc layer (fork-based, own safety contract).
             spawn: !(rel == "kernels/mod.rs" || rel.starts_with("multiproc/")),
+            // The dispatch/ prefix deliberately includes dispatch/capture/:
+            // graph tracing, compilation and replay are dispatch-path code.
             determinism: in_kernels || in_dispatch,
+            // Graph-capture guard keys must be O(rank), data-independent.
+            data_hash: rel.starts_with("dispatch/capture/"),
         }
     }
 }
@@ -108,6 +120,7 @@ pub fn audit_source(rel: &str, src: &str) -> Result<Vec<Violation>, String> {
         scope,
         out: Vec::new(),
         test_ranges: Vec::new(),
+        keyed_fn_depth: 0,
     };
     w.visit_file(&file);
 
@@ -203,7 +216,19 @@ struct Walker<'a> {
     out: Vec<Violation>,
     /// (start, end) line ranges of `#[cfg(test)]` modules.
     test_ranges: Vec<(usize, usize)>,
+    /// >0 while visiting the body of a cache-key/guard builder (a `fn`
+    /// whose name contains `key` or `guard`) in `data_hash` scope.
+    keyed_fn_depth: usize,
 }
+
+/// Is `name` a cache-key/guard builder the `no-data-hash` lint covers?
+fn is_keyed_fn_name(name: &str) -> bool {
+    let n = name.to_ascii_lowercase();
+    n.contains("key") || n.contains("guard")
+}
+
+/// Tensor methods that read element data — forbidden in key builders.
+const DATA_READS: &[&str] = &["to_vec", "item", "data_ptr", "as_slice", "storage"];
 
 impl Walker<'_> {
     fn push(&mut self, lint: &'static str, line: usize, message: String) {
@@ -245,9 +270,41 @@ impl<'ast> Visit<'ast> for Walker<'_> {
         visit::visit_item_mod(self, node);
     }
 
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        let keyed = self.scope.data_hash && is_keyed_fn_name(&node.sig.ident.to_string());
+        if keyed {
+            self.keyed_fn_depth += 1;
+        }
+        visit::visit_item_fn(self, node);
+        if keyed {
+            self.keyed_fn_depth -= 1;
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        let keyed = self.scope.data_hash && is_keyed_fn_name(&node.sig.ident.to_string());
+        if keyed {
+            self.keyed_fn_depth += 1;
+        }
+        visit::visit_impl_item_fn(self, node);
+        if keyed {
+            self.keyed_fn_depth -= 1;
+        }
+    }
+
     fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
         let method = node.method.to_string();
         let line = node.method.span().start().line;
+        if self.keyed_fn_depth > 0 && DATA_READS.contains(&method.as_str()) {
+            self.push(
+                "no-data-hash",
+                line,
+                format!(
+                    ".{method}() reads tensor data inside a cache-key/guard builder — \
+                     capture keys hash shapes/dtypes/strides only"
+                ),
+            );
+        }
         match method.as_str() {
             "contiguous" if self.scope.contiguous && node.args.is_empty() => self.push(
                 "no-contiguous",
@@ -526,9 +583,30 @@ mod tests {
         let mp = Scope::for_path("multiproc/mod.rs");
         assert!(!mp.spawn && !mp.determinism);
         let lin = Scope::for_path("dispatch/linalg.rs");
-        assert!(lin.contiguous && lin.determinism);
+        assert!(lin.contiguous && lin.determinism && !lin.data_hash);
         let data = Scope::for_path("data/loader.rs");
-        assert!(data.spawn && !data.contiguous && !data.determinism);
+        assert!(data.spawn && !data.contiguous && !data.determinism && !data.data_hash);
+        let cap = Scope::for_path("dispatch/capture/mod.rs");
+        assert!(cap.determinism && cap.data_hash && !cap.contiguous);
+    }
+
+    #[test]
+    fn data_reads_flagged_only_in_capture_key_builders() {
+        let keyed = "fn guard_key(t: &Tensor) -> String {\n    format!(\"{:?}\", t.to_vec())\n}\n";
+        let v = audit_source("dispatch/capture/mod.rs", keyed).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].lint, "no-data-hash");
+        assert!(v[0].message.contains("to_vec"), "{}", v[0].message);
+
+        // Same source outside dispatch/capture/: out of scope.
+        assert!(audit_source("dispatch/fuse.rs", keyed).unwrap().is_empty());
+
+        // Metadata-only key builders stay clean, and data reads outside
+        // key/guard functions are the normal, legal case.
+        let clean = "fn guard_key(t: &Tensor) -> String {\n    \
+                     format!(\"{:?}|{:?}|{:?}\", t.shape(), t.dtype(), t.strides())\n}\n\
+                     fn run(t: &Tensor) -> Vec<f32> {\n    t.to_vec()\n}\n";
+        assert!(audit_source("dispatch/capture/mod.rs", clean).unwrap().is_empty());
     }
 
     #[test]

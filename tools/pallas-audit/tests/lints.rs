@@ -28,6 +28,21 @@ fn every_lint_fires_on_the_fixture() {
     // One `reg.add`, one `register_op`, both sample-less; the chained
     // `.sample_inputs` pair and the bare counter `.add(1)` stay clean.
     assert_eq!(count(&v, "opinfo-samples"), 2, "{v:#?}");
+    // The data-hash lint is scoped to dispatch/capture/ only.
+    assert_eq!(count(&v, "no-data-hash"), 0, "{v:#?}");
+}
+
+#[test]
+fn data_hash_lint_fires_under_capture_scope() {
+    // Scanned as a capture-path file: the guard-key data read fires, the
+    // metadata-only key builder and the non-key data read stay clean.
+    let v = audit_source("dispatch/capture/fixture.rs", FIXTURE).expect("fixture parses");
+    assert_eq!(count(&v, "no-data-hash"), 1, "{v:#?}");
+    let hit = v.iter().find(|x| x.lint == "no-data-hash").unwrap();
+    let line_text = FIXTURE.lines().nth(hit.line - 1).unwrap();
+    assert!(line_text.contains("t.to_vec()"), "line {}: {line_text}", hit.line);
+    // The determinism lint covers dispatch/capture/ like any dispatch path.
+    assert_eq!(count(&v, "determinism"), 4, "{v:#?}");
 }
 
 #[test]

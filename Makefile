@@ -33,13 +33,16 @@ clippy:
 audit:
 	$(CARGO) run -q --release -p pallas-audit
 
-# Full sweep; writes BENCH_ops.json (per-op records) and BENCH_train.json
-# (end-to-end samples/sec + loader-stall at workers 0/1/4) at the repo
-# root — the per-PR trajectory. See "Threading and memory model" in
-# rust/src/dispatch/mod.rs and "Reading BENCH_train.json" in README.md.
+# Full sweep; writes BENCH_ops.json (per-op records), BENCH_train.json
+# (end-to-end samples/sec + loader-stall at workers 0/1/4) and
+# BENCH_serve.json (serving p50/p99 + req/s over the max_batch × clients
+# grid) at the repo root — the per-PR trajectory. See "Threading and
+# memory model" in rust/src/dispatch/mod.rs and "Reading
+# BENCH_train.json" in README.md.
 bench:
 	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
 	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_train.json) $(CARGO) bench --bench train_loop
+	cd $(RUST_DIR) && BENCH_OUT=$(abspath BENCH_serve.json) $(CARGO) bench --bench serve_loop
 
 # Packed-GEMM parity suite: all four trans combos vs the oracle, plus
 # bit-identical-across-threads and zero-materialization pins.
@@ -52,3 +55,4 @@ gemm-parity:
 bench-smoke: gemm-parity
 	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_ops.json) $(CARGO) bench --bench micro_ops
 	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_train.json) $(CARGO) bench --bench train_loop
+	cd $(RUST_DIR) && BENCH_SMOKE=1 BENCH_OUT=$(abspath BENCH_serve.json) $(CARGO) bench --bench serve_loop

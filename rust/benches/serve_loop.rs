@@ -1,0 +1,379 @@
+//! End-to-end serving benchmark: the request's-eye view that
+//! `BENCH_train.json`'s training-loop rows cannot see. Loads a
+//! checkpointed MLP with `serve::Server::from_checkpoint`, drives it
+//! with concurrent client threads, and emits `BENCH_serve.json`
+//! (override with `BENCH_OUT`; schema `torsk.bench_serve.v1`) with one
+//! record per (max_batch × clients) grid cell:
+//!
+//! ```json
+//! {"max_batch": 8, "clients": 4, "requests": 256, "batches": 41,
+//!  "mean_batch_size": 6.24, "padded_rows": 31, "wall_ns": 12345678,
+//!  "throughput_rps": 20737.1, "p50_total_ns": 131072,
+//!  "p99_total_ns": 1048576, "p50_queue_ns": 65536, "p99_queue_ns": 524288}
+//! ```
+//!
+//! Latency quantiles come straight from the server's lock-free log2
+//! histograms (`ServeStats`), so a quantile is the upper edge of its
+//! bucket — at most 2x the true value, monotone across rows.
+//!
+//! Before any timing, two pins (each exits nonzero on failure):
+//! - **serving parity**: a burst served through dynamic batches must be
+//!   bitwise identical to serial one-at-a-time inference on the same
+//!   checkpoint — batching must be invisible in the served bits;
+//! - **coalescing**: the pinned concurrent run must show mean batch
+//!   size > 1 — the batcher demonstrably batches under load (the
+//!   acceptance headline), not just forwards singletons.
+//!
+//! `BENCH_SMOKE=1` runs a tiny config and validates the schema (wired
+//! into CI via `make bench-smoke`).
+
+use std::time::{Duration, Instant};
+
+use torsk::data::stack_into_batch;
+use torsk::nn::{self, Module};
+use torsk::rng::Rng;
+use torsk::serialize::Checkpoint;
+use torsk::serve::{ServeConfig, Server};
+use torsk::Tensor;
+
+struct Config {
+    din: usize,
+    hidden: usize,
+    classes: usize,
+    /// Requests per client per grid cell (split into bursts).
+    reqs_per_client: usize,
+    /// Requests a client submits before waiting on any of them — the
+    /// concurrency each client keeps in flight.
+    burst: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Record {
+    max_batch: usize,
+    clients: usize,
+    requests: u64,
+    batches: u64,
+    mean_batch_size: f64,
+    padded_rows: u64,
+    wall_ns: u64,
+    throughput_rps: f64,
+    p50_total_ns: u64,
+    p99_total_ns: u64,
+    p50_queue_ns: u64,
+    p99_queue_ns: u64,
+}
+
+impl Record {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"batches\": {}, \
+             \"mean_batch_size\": {:.2}, \"padded_rows\": {}, \"wall_ns\": {}, \
+             \"throughput_rps\": {:.1}, \"p50_total_ns\": {}, \"p99_total_ns\": {}, \
+             \"p50_queue_ns\": {}, \"p99_queue_ns\": {}}}",
+            self.max_batch,
+            self.clients,
+            self.requests,
+            self.batches,
+            self.mean_batch_size,
+            self.padded_rows,
+            self.wall_ns,
+            self.throughput_rps,
+            self.p50_total_ns,
+            self.p99_total_ns,
+            self.p50_queue_ns,
+            self.p99_queue_ns,
+        )
+    }
+}
+
+fn build_arch_for(cfg: &'static Config) -> Box<dyn Module> {
+    Box::new(
+        nn::Sequential::new()
+            .add(nn::Linear::new(cfg.din, cfg.hidden))
+            .add(nn::ReLU)
+            .add(nn::Linear::new(cfg.hidden, cfg.classes)),
+    )
+}
+
+/// Deterministic request input for logical index `i` — the same stream
+/// every run and every grid cell, independent of the global seed state.
+fn req_input(cfg: &Config, i: u64) -> Tensor {
+    let mut r = Rng::for_index(0xBE_5E57E, i);
+    let x: Vec<f32> = (0..cfg.din).map(|_| r.normal()).collect();
+    Tensor::from_vec(x, &[cfg.din])
+}
+
+fn bits(v: Vec<f32>) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One grid cell: serve `clients x reqs_per_client` requests from
+/// `clients` threads (bursts of `cfg.burst`), return the measured row.
+fn run_cell(
+    cfg: &'static Config,
+    ckpt: &std::path::Path,
+    max_batch: usize,
+    clients: usize,
+) -> Record {
+    let scfg = ServeConfig::new(&[cfg.din])
+        .with_max_batch(max_batch)
+        .with_max_delay(Duration::from_millis(2))
+        .with_workers(2)
+        .with_queue_depth(256);
+    let server =
+        Server::from_checkpoint(ckpt, move || build_arch_for(cfg), scfg).expect("serve checkpoint");
+    let handle = server.handle();
+
+    // Warm-up burst: trace the capture buckets and fill the allocator
+    // cache so the measured window replays steady state.
+    let warm: Vec<_> = (0..max_batch as u64)
+        .map(|i| handle.submit(req_input(cfg, i)).unwrap())
+        .collect();
+    for p in warm {
+        p.wait().expect("warm-up served");
+    }
+    let warm_stats = server.stats();
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let handle = handle.clone();
+            s.spawn(move || {
+                let base = (c * cfg.reqs_per_client) as u64;
+                let mut done = 0;
+                while done < cfg.reqs_per_client {
+                    let take = cfg.burst.min(cfg.reqs_per_client - done);
+                    let pend: Vec<_> = (0..take)
+                        .map(|k| handle.submit(req_input(cfg, base + (done + k) as u64)).unwrap())
+                        .collect();
+                    done += take;
+                    for p in pend {
+                        p.wait().expect("served");
+                    }
+                }
+            });
+        }
+    });
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let d = server.stats().delta(&warm_stats);
+    let report = server.shutdown();
+    if report.timed_out {
+        eprintln!("serve_loop: shutdown timed out at max_batch={max_batch} clients={clients}");
+        std::process::exit(1);
+    }
+    let requests = (clients * cfg.reqs_per_client) as u64;
+    assert_eq!(d.completed, requests, "every request must be served: {d:?}");
+    Record {
+        max_batch,
+        clients,
+        requests,
+        batches: d.batches,
+        mean_batch_size: d.mean_batch_size(),
+        padded_rows: d.padded_rows,
+        wall_ns,
+        throughput_rps: requests as f64 / (wall_ns as f64 / 1e9),
+        p50_total_ns: d.total.p50_ns,
+        p99_total_ns: d.total.p99_ns,
+        p50_queue_ns: d.queue.p50_ns,
+        p99_queue_ns: d.queue.p99_ns,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    // 'static so worker-thread model factories can borrow it freely.
+    let cfg: &'static Config = if smoke {
+        &Config { din: 8, hidden: 16, classes: 4, reqs_per_client: 32, burst: 4 }
+    } else {
+        &Config { din: 64, hidden: 128, classes: 10, reqs_per_client: 256, burst: 8 }
+    };
+    let batch_grid: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 8, 16] };
+    let client_grid: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 8] };
+
+    // The checkpoint is the model: save once, every server (and the
+    // serial reference) loads identical weights from the file.
+    torsk::rng::manual_seed(0xBE7C_5E12);
+    let reference = build_arch_for(cfg);
+    let ckpt = std::env::temp_dir()
+        .join(format!("torsk-bench-serve-{}.ckpt", std::process::id()));
+    Checkpoint::new(reference.state_dict()).save(&ckpt).expect("save bench checkpoint");
+
+    // ---- pin 1: serving parity (batched == serial, bitwise) -------------
+    // ---- pin 2: coalescing (mean batch size > 1 under load) -------------
+    let n_pin = 16u64;
+    let expect: Vec<Vec<u32>> = (0..n_pin)
+        .map(|i| {
+            torsk::autograd::no_grad(|| {
+                let b = stack_into_batch(&[&req_input(cfg, i)]);
+                bits(reference.forward(&b).select(0, 0).contiguous().to_vec::<f32>())
+            })
+        })
+        .collect();
+    {
+        let scfg = ServeConfig::new(&[cfg.din])
+            .with_max_batch(8)
+            .with_max_delay(Duration::from_millis(20))
+            .with_workers(1);
+        let server = Server::from_checkpoint(&ckpt, move || build_arch_for(cfg), scfg)
+            .expect("serve checkpoint");
+        let handle = server.handle();
+        // Submit the whole burst before waiting so the batcher coalesces.
+        let pend: Vec<_> = (0..n_pin).map(|i| handle.submit(req_input(cfg, i)).unwrap()).collect();
+        for (i, p) in pend.into_iter().enumerate() {
+            let got = bits(p.wait().expect("served").to_vec::<f32>());
+            if got != expect[i] {
+                eprintln!("serve_loop: request {i} served bits differ from serial inference");
+                std::process::exit(1);
+            }
+        }
+        let stats = server.stats();
+        if stats.mean_batch_size() <= 1.0 {
+            eprintln!(
+                "serve_loop: no coalescing under concurrent load (mean batch size {:.2})",
+                stats.mean_batch_size()
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "pins ok: {n_pin} batched requests bitwise == serial; mean batch size {:.2} \
+             over {} batches ({} padded rows)",
+            stats.mean_batch_size(),
+            stats.batches,
+            stats.padded_rows
+        );
+        let report = server.shutdown();
+        assert!(!report.timed_out, "{report}");
+    }
+
+    // ---- measured grid ---------------------------------------------------
+    let mut records: Vec<Record> = Vec::new();
+    for &mb in batch_grid {
+        for &clients in client_grid {
+            let r = run_cell(cfg, &ckpt, mb, clients);
+            println!(
+                "max_batch={mb} clients={clients}: {:.1} req/s, mean batch {:.2}, \
+                 p50 {:.3} ms, p99 {:.3} ms",
+                r.throughput_rps,
+                r.mean_batch_size,
+                r.p50_total_ns as f64 / 1e6,
+                r.p99_total_ns as f64 / 1e6
+            );
+            records.push(r);
+        }
+    }
+    let _ = std::fs::remove_file(&ckpt);
+
+    // ---- report ----------------------------------------------------------
+    println!("\n== BENCH_serve ({}) ==", if smoke { "smoke" } else { "full" });
+    println!(
+        "{:>9} {:>8} {:>9} {:>8} {:>10} {:>12} {:>11} {:>11}",
+        "max_batch", "clients", "requests", "batches", "mean_batch", "req/s", "p50(ms)", "p99(ms)"
+    );
+    for r in &records {
+        println!(
+            "{:>9} {:>8} {:>9} {:>8} {:>10.2} {:>12.1} {:>11.3} {:>11.3}",
+            r.max_batch,
+            r.clients,
+            r.requests,
+            r.batches,
+            r.mean_batch_size,
+            r.throughput_rps,
+            r.p50_total_ns as f64 / 1e6,
+            r.p99_total_ns as f64 / 1e6
+        );
+    }
+    let global = torsk::serve::serve_stats();
+    println!(
+        "\nprocess totals: {} requests, {} batches, {} graphs captured, {} guard hits",
+        global.requests, global.batches, global.graphs_captured, global.guard_hits
+    );
+    report_batching_win(&records);
+
+    // ---- emit + validate JSON --------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"torsk.bench_serve.v1\",\n");
+    json.push_str(&format!(
+        "  \"smoke\": {},\n  \"threads_available\": {},\n  \"model\": \"mlp\",\n  \
+         \"dims\": {{\"din\": {}, \"hidden\": {}, \"classes\": {}}},\n  \
+         \"workers\": 2,\n  \"records\": [\n",
+        smoke,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        cfg.din,
+        cfg.hidden,
+        cfg.classes,
+    ));
+    for (i, r) in records.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(&r.to_json());
+        json.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json).expect("write BENCH_serve.json");
+    println!("wrote {out_path}");
+
+    if let Err(e) = validate_schema(&json, records.len()) {
+        eprintln!("BENCH_serve.json schema validation FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("schema ok: torsk.bench_serve.v1, {} records", records.len());
+}
+
+/// The headline comparison: at max concurrency, throughput with real
+/// batching headroom vs the forced-singleton (`max_batch = 1`) server.
+fn report_batching_win(records: &[Record]) {
+    let max_clients = records.iter().map(|r| r.clients).max().unwrap_or(1);
+    let singleton = records.iter().find(|r| r.max_batch == 1 && r.clients == max_clients);
+    let batched = records
+        .iter()
+        .filter(|r| r.clients == max_clients)
+        .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
+    if let (Some(s), Some(b)) = (singleton, batched) {
+        println!(
+            "dynamic batching at {} clients: {:.1} req/s (max_batch={}) vs {:.1} \
+             singleton ({:.2}x)",
+            max_clients,
+            b.throughput_rps,
+            b.max_batch,
+            s.throughput_rps,
+            b.throughput_rps / s.throughput_rps
+        );
+    }
+}
+
+/// Minimal schema check (no JSON dependency), in the `BENCH_train.json`
+/// style: the envelope declares the schema id and every record carries
+/// all required keys, one record per grid cell.
+fn validate_schema(json: &str, expected: usize) -> Result<(), String> {
+    if !json.contains("\"schema\": \"torsk.bench_serve.v1\"") {
+        return Err("missing schema id".into());
+    }
+    let recs: Vec<&str> =
+        json.match_indices("{\"max_batch\": ").map(|(i, _)| &json[i..]).collect();
+    if recs.len() != expected {
+        return Err(format!("expected {expected} records, found {}", recs.len()));
+    }
+    for (i, r) in recs.iter().enumerate() {
+        let end = r.find('}').ok_or_else(|| format!("record {i}: unterminated"))?;
+        let body = &r[..end];
+        for key in [
+            "\"max_batch\"",
+            "\"clients\"",
+            "\"requests\"",
+            "\"batches\"",
+            "\"mean_batch_size\"",
+            "\"padded_rows\"",
+            "\"wall_ns\"",
+            "\"throughput_rps\"",
+            "\"p50_total_ns\"",
+            "\"p99_total_ns\"",
+            "\"p50_queue_ns\"",
+            "\"p99_queue_ns\"",
+        ] {
+            if !body.contains(key) {
+                return Err(format!("record {i}: missing {key}"));
+            }
+        }
+    }
+    Ok(())
+}

@@ -84,6 +84,20 @@ pub struct CaptureStats {
     pub buffers_planned: u64,
 }
 
+/// Per-session counters (the instance-scoped slice of [`CaptureStats`]):
+/// what *this* [`GraphCapture`] did, unpolluted by concurrent sessions.
+/// The serve workers diff these snapshots to attribute guard activity to
+/// one server's metrics; process-wide totals stay in [`capture_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Session calls served by a cached plan (or cached eager verdict).
+    pub guard_hits: u64,
+    /// Session calls that had to (re)trace.
+    pub guard_misses: u64,
+    /// Graphs this session captured and compiled.
+    pub graphs_captured: u64,
+}
+
 /// Snapshot the capture counters.
 pub fn capture_stats() -> CaptureStats {
     CaptureStats {
@@ -239,12 +253,30 @@ pub struct GraphCapture {
     name: &'static str,
     graphs: RefCell<BTreeMap<String, Entry>>,
     tick: Cell<u64>,
+    stats: Cell<SessionStats>,
 }
 
 impl GraphCapture {
     /// New, empty session. `name` labels profiler spans and errors.
     pub fn new(name: &'static str) -> GraphCapture {
-        GraphCapture { name, graphs: RefCell::new(BTreeMap::new()), tick: Cell::new(0) }
+        GraphCapture {
+            name,
+            graphs: RefCell::new(BTreeMap::new()),
+            tick: Cell::new(0),
+            stats: Cell::new(SessionStats::default()),
+        }
+    }
+
+    /// This session's own guard counters (the process-global view is
+    /// [`capture_stats`]).
+    pub fn session_stats(&self) -> SessionStats {
+        self.stats.get()
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut SessionStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
     }
 
     /// Number of compiled graphs currently cached.
@@ -277,6 +309,7 @@ impl GraphCapture {
             if let Some(entry) = graphs.get_mut(&key) {
                 entry.last_use = tick;
                 GUARD_HITS.fetch_add(1, Ordering::Relaxed);
+                self.bump(|s| s.guard_hits += 1);
                 match &entry.compiled {
                     Compiled::Plan(plan) => return replay::replay(plan, inputs),
                     Compiled::Eager => {}
@@ -288,6 +321,7 @@ impl GraphCapture {
 
         // Guard miss: trace one eager run.
         GUARD_MISSES.fetch_add(1, Ordering::Relaxed);
+        self.bump(|s| s.guard_misses += 1);
         let _guard = TraceGuard;
         TRACE.with(|c| {
             let mut values = Vec::with_capacity(inputs.len());
@@ -314,6 +348,7 @@ impl GraphCapture {
         let compiled = match self.compile(state, &result) {
             Some(plan) => {
                 GRAPHS_CAPTURED.fetch_add(1, Ordering::Relaxed);
+                self.bump(|s| s.graphs_captured += 1);
                 OPS_FUSED.fetch_add(plan.ops_fused, Ordering::Relaxed);
                 BUFFERS_PLANNED.fetch_add(plan.buffers_planned, Ordering::Relaxed);
                 Compiled::Plan(Box::new(plan))
@@ -430,6 +465,24 @@ mod tests {
         let after = capture_stats();
         // The matmul intermediate dies at the relu: planned for donation.
         assert!(after.buffers_planned >= before.buffers_planned + 1);
+    }
+
+    #[test]
+    fn session_stats_are_instance_scoped() {
+        let a = GraphCapture::new("test:sess-a");
+        let b = GraphCapture::new("test:sess-b");
+        let f = |ins: &[&Tensor]| ops::relu(&ops::add(ins[0], ins[0]));
+        let x = Tensor::ones(&[8]);
+        let _ = a.run(&[&x], f); // miss + capture
+        let _ = a.run(&[&x], f); // hit
+        let _ = a.run(&[&x], f); // hit
+        assert_eq!(
+            a.session_stats(),
+            SessionStats { guard_hits: 2, guard_misses: 1, graphs_captured: 1 },
+        );
+        // Session b saw nothing — unlike the process-global counters,
+        // which tests running concurrently also move.
+        assert_eq!(b.session_stats(), SessionStats::default());
     }
 
     #[test]

@@ -162,7 +162,7 @@ use crate::profiler;
 use crate::tensor::{storage, DType, Tensor};
 use crate::{torsk_assert, torsk_bail};
 
-pub use capture::{capture_stats, CaptureStats, GraphCapture};
+pub use capture::{capture_stats, CaptureStats, GraphCapture, SessionStats};
 pub use linalg::{gemm_materialization_stats, packed_weight_stats};
 
 // ---------------------------------------------------------------------

@@ -30,6 +30,10 @@
 //! - [`serialize`] — versioned, checksummed training checkpoints with
 //!   atomic writes and bitwise resume (model + optimizer + RNG + loader
 //!   coordinates);
+//! - [`serve`] — inference serving: concurrent requests coalesced into
+//!   dynamic batches (size-or-deadline), bucket-padded so the capture
+//!   guard cache replays compiled graphs, with live lock-free latency
+//!   telemetry (`serve_stats()`);
 //! - [`runtime`] / [`graph`] — AOT-compiled XLA graph execution via PJRT,
 //!   the static-graph baseline of §6.3. The XLA/PJRT half lives behind
 //!   the `aot` Cargo feature (off by default — the `xla` git dependency
@@ -83,6 +87,7 @@ pub mod profiler;
 pub mod rng;
 pub mod runtime;
 pub mod serialize;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 

@@ -6,10 +6,23 @@
 //! paper's timeline from these spans; `to_chrome_trace` exports the same
 //! data for chrome://tracing.
 //!
+//! Spans are buffered **per thread**: each recording thread appends to
+//! its own buffer (registered globally on first use), and [`stop`] /
+//! [`snapshot`] merge every buffer — including those of threads that
+//! have since exited — into one report ordered by start time. Two things
+//! follow: recording never contends on a process-wide lock (the serving
+//! hot path has many worker threads profiling concurrently), and a span
+//! recorded on *any* thread — a serve worker, a loader prefetcher —
+//! always appears in the merged report (pinned by the
+//! `spans_from_worker_threads_appear_in_one_merged_report` test).
+//! [`op_totals`] folds a report into per-op `{count, total_ns}` rows —
+//! the aggregation `serve::ServeStats::op_totals` exposes live.
+//!
 //! Disabled (the default) it costs one relaxed atomic load per op.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Which timeline row a span belongs to.
@@ -37,20 +50,63 @@ impl TraceEvent {
     }
 }
 
-struct ProfilerState {
+/// One thread's span buffer. The owner pushes; merges read from other
+/// threads — the Mutex is all but uncontended (owner-only until a merge).
+struct ThreadBuf {
     events: Mutex<Vec<TraceEvent>>,
-    epoch: Mutex<Instant>,
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Events recorded since [`start`], across all threads (approximate
+/// under races, which only matters within a few events of the cap).
+static EVENT_COUNT: AtomicUsize = AtomicUsize::new(0);
 /// Cap so a forgotten profiler can't eat all memory.
 const MAX_EVENTS: usize = 2_000_000;
 
-static STATE: once_cell::sync::Lazy<ProfilerState> = once_cell::sync::Lazy::new(|| ProfilerState {
-    events: Mutex::new(Vec::new()),
-    epoch: Mutex::new(Instant::now()),
-});
+/// Every live-or-exited thread buffer. An `Arc` keeps a buffer (and its
+/// recorded spans) alive after its thread exits, until the next
+/// [`start`] prunes it — a worker that records and dies before `stop`
+/// still shows up in the merged report.
+static REGISTRY: once_cell::sync::Lazy<Mutex<Vec<Arc<ThreadBuf>>>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(Vec::new()));
+
+static EPOCH: once_cell::sync::Lazy<Mutex<Instant>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(Instant::now()));
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = {
+        let buf = Arc::new(ThreadBuf { events: Mutex::new(Vec::new()) });
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(buf.clone());
+        buf
+    };
+}
+
+fn push(event: TraceEvent) {
+    if EVENT_COUNT.load(Ordering::Relaxed) >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    EVENT_COUNT.fetch_add(1, Ordering::Relaxed);
+    LOCAL.with(|buf| buf.events.lock().unwrap_or_else(|e| e.into_inner()).push(event));
+}
+
+/// Merge every thread's buffer into one report, ordered by start time
+/// (`take` empties the buffers — the [`stop`] path).
+fn merged(take: bool) -> Vec<TraceEvent> {
+    let registry = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for buf in registry.iter() {
+        let mut events = buf.events.lock().unwrap_or_else(|e| e.into_inner());
+        if take {
+            out.append(&mut events);
+        } else {
+            out.extend(events.iter().cloned());
+        }
+    }
+    out.sort_by(|a, b| (a.start_ns, a.end_ns).cmp(&(b.start_ns, b.end_ns)));
+    out
+}
 
 /// An in-flight span returned by [`begin`]; finish it with [`end`].
 pub struct Span {
@@ -59,19 +115,31 @@ pub struct Span {
     start_ns: u64,
 }
 
-/// Start profiling (clears previously recorded events).
+/// Start profiling (clears previously recorded events on every thread).
 pub fn start() {
-    let mut ev = STATE.events.lock().unwrap();
-    ev.clear();
-    *STATE.epoch.lock().unwrap() = Instant::now();
+    ENABLED.store(false, Ordering::SeqCst);
+    {
+        let mut registry = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        for buf in registry.iter() {
+            buf.events.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+        // Buffers owned only by the registry belong to exited threads;
+        // now that they're cleared they carry nothing — prune them.
+        registry.retain(|buf| Arc::strong_count(buf) > 1);
+    }
+    *EPOCH.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
     DROPPED.store(0, Ordering::Relaxed);
+    EVENT_COUNT.store(0, Ordering::Relaxed);
     ENABLED.store(true, Ordering::SeqCst);
 }
 
-/// Stop profiling and return the recorded events.
+/// Stop profiling and return the merged, start-ordered events from
+/// every recording thread.
 pub fn stop() -> Vec<TraceEvent> {
     ENABLED.store(false, Ordering::SeqCst);
-    std::mem::take(&mut *STATE.events.lock().unwrap())
+    let events = merged(true);
+    EVENT_COUNT.store(0, Ordering::Relaxed);
+    events
 }
 
 /// Whether the profiler is currently recording.
@@ -80,7 +148,7 @@ pub fn enabled() -> bool {
 }
 
 fn now_ns() -> u64 {
-    STATE.epoch.lock().unwrap().elapsed().as_nanos() as u64
+    EPOCH.lock().unwrap_or_else(|e| e.into_inner()).elapsed().as_nanos() as u64
 }
 
 /// Begin a span on `track`. Cheap no-op when the profiler is off.
@@ -100,12 +168,7 @@ pub fn end(span: Span) {
         return;
     }
     let end_ns = now_ns();
-    let mut ev = STATE.events.lock().unwrap();
-    if ev.len() >= MAX_EVENTS {
-        DROPPED.fetch_add(1, Ordering::Relaxed);
-        return;
-    }
-    ev.push(TraceEvent { track: span.track, name, start_ns: span.start_ns, end_ns });
+    push(TraceEvent { track: span.track, name, start_ns: span.start_ns, end_ns });
 }
 
 /// Record a closed span directly (used by subsystems that time themselves).
@@ -113,15 +176,12 @@ pub fn record(track: Track, name: &str, start_ns: u64, end_ns: u64) {
     if !enabled() {
         return;
     }
-    let mut ev = STATE.events.lock().unwrap();
-    if ev.len() < MAX_EVENTS {
-        ev.push(TraceEvent { track, name: name.to_string(), start_ns, end_ns });
-    }
+    push(TraceEvent { track, name: name.to_string(), start_ns, end_ns });
 }
 
-/// Events recorded so far without stopping.
+/// Events recorded so far without stopping, merged across threads.
 pub fn snapshot() -> Vec<TraceEvent> {
-    STATE.events.lock().unwrap().clone()
+    merged(false)
 }
 
 /// Aggregate statistics per track for a set of events.
@@ -162,6 +222,29 @@ pub fn track_stats(events: &[TraceEvent], track: Track) -> TrackStats {
         st.first_start_ns = 0;
     }
     st
+}
+
+/// Per-op aggregate over a merged report: how often the op ran and its
+/// cumulative time, regardless of which thread recorded the spans.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpTotal {
+    /// Spans with this name.
+    pub count: u64,
+    /// Summed span durations (ns).
+    pub total_ns: u64,
+}
+
+/// Fold events into per-op totals by span name — the cross-thread
+/// aggregation the serving metrics surface live
+/// (`serve::ServeStats::op_totals`).
+pub fn op_totals(events: &[TraceEvent]) -> BTreeMap<String, OpTotal> {
+    let mut out: BTreeMap<String, OpTotal> = BTreeMap::new();
+    for e in events {
+        let t = out.entry(e.name.clone()).or_default();
+        t.count += 1;
+        t.total_ns += e.dur_ns();
+    }
+    out
 }
 
 /// Render the paper's Figure-1-style two-row ASCII timeline: host on top,
@@ -258,6 +341,66 @@ mod tests {
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].name, "alpha");
         assert!(evs[0].dur_ns() >= 1_000_000);
+    }
+
+    /// The cross-thread aggregation contract: spans recorded on worker
+    /// threads (serve workers, loader prefetchers) must appear in one
+    /// merged report — even when the threads exit before `stop()`.
+    #[test]
+    fn spans_from_worker_threads_appear_in_one_merged_report() {
+        let _g = GUARD.lock().unwrap();
+        start();
+        let workers: Vec<_> = ["thread-a", "thread-b"]
+            .into_iter()
+            .map(|name| {
+                std::thread::spawn(move || {
+                    let s = begin(Track::Host, name);
+                    end(s);
+                    let s = begin(Track::Host, name);
+                    end(s);
+                })
+            })
+            .collect();
+        for t in workers {
+            t.join().unwrap();
+        }
+        let s = begin(Track::Host, "main-thread");
+        end(s);
+        let evs = stop();
+        let totals = op_totals(&evs);
+        assert_eq!(totals.get("thread-a").map(|t| t.count), Some(2), "{totals:?}");
+        assert_eq!(totals.get("thread-b").map(|t| t.count), Some(2), "{totals:?}");
+        assert_eq!(totals.get("main-thread").map(|t| t.count), Some(1));
+        // Merged report is ordered by start time.
+        assert!(evs.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+    }
+
+    #[test]
+    fn start_clears_other_threads_buffers() {
+        let _g = GUARD.lock().unwrap();
+        start();
+        std::thread::spawn(|| {
+            let s = begin(Track::Host, "stale");
+            end(s);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(snapshot().len(), 1);
+        start(); // must clear the (exited) worker's buffer too
+        assert!(snapshot().is_empty());
+        let _ = stop();
+    }
+
+    #[test]
+    fn op_totals_sums_counts_and_durations() {
+        let evs = vec![
+            TraceEvent { track: Track::Host, name: "add".into(), start_ns: 0, end_ns: 10 },
+            TraceEvent { track: Track::Stream(0), name: "add".into(), start_ns: 5, end_ns: 25 },
+            TraceEvent { track: Track::Host, name: "mul".into(), start_ns: 1, end_ns: 2 },
+        ];
+        let totals = op_totals(&evs);
+        assert_eq!(totals["add"], OpTotal { count: 2, total_ns: 30 });
+        assert_eq!(totals["mul"], OpTotal { count: 1, total_ns: 1 });
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! The batcher thread: drains the request queue, closes dynamic batches
+//! at `max_batch` requests or `max_delay` after the batch opener arrived
+//! — the classic size-or-deadline policy. A lone request under light
+//! load pays at most `max_delay` of extra latency; under heavy load
+//! batches fill before the deadline and the deadline never fires.
+//!
+//! The batcher never touches tensors beyond moving them: stacking,
+//! padding and inference all happen on the worker pool so a slow model
+//! can't stop batches from *forming* (it only backpressures the bounded
+//! batch queue).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::time::Instant;
+
+use super::{Batch, Msg, Request, ServeError, ServeShared};
+
+/// What ended the fill loop of one batch.
+enum Close {
+    /// Size or deadline: keep serving.
+    Normal,
+    /// Shutdown sentinel seen mid-fill.
+    Shutdown,
+    /// Every sender is gone.
+    Disconnected,
+}
+
+pub(crate) fn run(rx: Receiver<Msg>, batch_tx: SyncSender<Batch>, shared: &ServeShared) {
+    loop {
+        // Block (no deadline) for the request that opens the next batch.
+        let first = match rx.recv() {
+            Ok(Msg::Request(r)) => r,
+            Ok(Msg::Shutdown) => {
+                drain_and_fail(&rx, shared);
+                return;
+            }
+            Err(_) => return,
+        };
+        // The budget runs from batch open, not from submit: under a
+        // backlog (opener already waited in queue) closing instantly
+        // would degrade to batches of one exactly when batching matters.
+        let deadline = Instant::now() + shared.cfg.max_delay;
+        let mut members = vec![first];
+        let mut close = Close::Normal;
+        while members.len() < shared.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Request(r)) => members.push(r),
+                Ok(Msg::Shutdown) => {
+                    close = Close::Shutdown;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    close = Close::Disconnected;
+                    break;
+                }
+            }
+        }
+
+        dispatch(members, &batch_tx, shared);
+
+        match close {
+            Close::Normal => {}
+            Close::Shutdown => {
+                drain_and_fail(&rx, shared);
+                return;
+            }
+            Close::Disconnected => return,
+        }
+    }
+    // Returning drops `batch_tx`: the workers' recv disconnects and the
+    // pool winds down after finishing what's queued.
+}
+
+/// Book a closed batch and hand it to the worker pool.
+fn dispatch(members: Vec<Request>, batch_tx: &SyncSender<Batch>, shared: &ServeShared) {
+    let closed_at = Instant::now();
+    for m in &members {
+        let queued = closed_at.saturating_duration_since(m.submitted);
+        shared.record_queue(queued.as_nanos() as u64);
+    }
+    shared.add(|m| &m.batches, 1);
+    shared.add(|m| &m.batched_requests, members.len() as u64);
+    if let Err(e) = batch_tx.send(Batch { members }) {
+        // Worker pool already gone (only possible once shutdown or drop
+        // is underway): fail the batch loudly rather than dropping it.
+        for m in e.0.members {
+            m.fail(ServeError::Shutdown, shared);
+        }
+    }
+}
+
+/// Post-sentinel drain: everything still queued is failed with a typed
+/// [`ServeError::Shutdown`] — a queued request must never just vanish.
+/// Racing submits that enqueue *after* this drain observes Empty have
+/// already seen `closed == true` and fail their own slot (see
+/// `ClientHandle::submit`).
+fn drain_and_fail(rx: &Receiver<Msg>, shared: &ServeShared) {
+    loop {
+        match rx.try_recv() {
+            Ok(Msg::Request(r)) => r.fail(ServeError::Shutdown, shared),
+            Ok(Msg::Shutdown) => {}
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return,
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Live serving telemetry: lock-free latency histograms and request
+//! counters (ROADMAP Open item 2's "export the profiler's spans as live
+//! metrics instead of post-hoc JSON").
+//!
+//! Every counter here is a relaxed atomic and every histogram bucket is
+//! one `fetch_add` — recording a latency never takes a lock, so client
+//! threads, the batcher, and the inference workers all write concurrently
+//! without serializing the hot path (the post-hoc profiler, by contrast,
+//! buffers full spans; see [`crate::profiler`] — [`ServeStats::op_totals`]
+//! bridges the two by folding the profiler's per-op spans, recorded on
+//! any worker thread, into one per-op table).
+//!
+//! Latencies land in [`Histogram`]s with power-of-two bucket edges:
+//! `record(ns)` increments the bucket holding `ns`, and quantiles read
+//! back the **upper edge** of the bucket where the cumulative count
+//! crosses the rank — a deterministic ≤2× overestimate, which is the
+//! right trade for a lock-free fixed-size structure (the bench headline
+//! is p50/p99 *trajectory*, not nanosecond exactness).
+//!
+//! Two scopes, like the dispatcher's counters: every [`Server`]
+//! (`crate::serve::Server`) owns an instance [`Metrics`] snapshotted by
+//! `Server::stats()`, and the same events also feed a process-global
+//! instance read by [`serve_stats`] (the `capture_stats()` analogue).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use once_cell::sync::Lazy;
+
+/// Number of power-of-two latency buckets: bucket `i` holds durations in
+/// `[2^(i-1), 2^i)` ns (bucket 0 holds 0–1 ns), so 48 buckets cover up to
+/// ~78 hours — every latency a server could plausibly observe.
+const N_BUCKETS: usize = 48;
+
+/// A lock-free log2 latency histogram. `record` is one relaxed
+/// `fetch_add` per counter; snapshots fold the buckets in order.
+pub struct Histogram {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        // 0 → 0; otherwise 1 + floor(log2(ns)), capped at the last bucket.
+        ((64 - ns.leading_zeros()) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Record one duration. Lock-free; safe from any thread.
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// The upper bucket edge (in ns) at quantile `q` in `[0, 1]`: the
+    /// smallest power-of-two edge below which at least `q` of the
+    /// recorded durations fall. 0 when nothing was recorded.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        // ceil(q * total), clamped to [1, total]: the rank to reach.
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return if i == 0 { 1 } else { 1u64 << i };
+            }
+        }
+        1u64 << (N_BUCKETS - 1)
+    }
+
+    /// Exact mean of recorded durations (sum and count are exact; only
+    /// the quantiles are bucketed). 0 when nothing was recorded.
+    pub fn mean_ns(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) / n
+        }
+    }
+
+    /// Fold into the plain-data snapshot used by [`ServeStats`].
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile_ns(0.50),
+            p99_ns: self.quantile_ns(0.99),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Plain-data view of one [`Histogram`] at a point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    /// Exact mean (ns).
+    pub mean_ns: u64,
+    /// Upper bucket edge at p50 (ns) — a ≤2× overestimate by design.
+    pub p50_ns: u64,
+    /// Upper bucket edge at p99 (ns).
+    pub p99_ns: u64,
+}
+
+/// The full serving counter set. One instance per [`crate::serve::Server`]
+/// plus one process-global instance behind [`serve_stats`]; all writes are
+/// relaxed atomics.
+pub struct Metrics {
+    /// Requests accepted into the queue (`submit` returned a `Pending`).
+    pub requests: AtomicU64,
+    /// Requests answered with an output tensor.
+    pub completed: AtomicU64,
+    /// Requests answered with a typed error (handler panic, shutdown).
+    pub failed: AtomicU64,
+    /// Requests refused at `submit` (shape mismatch, closed server).
+    pub rejected: AtomicU64,
+    /// Deliveries whose `Pending` had already been dropped — the client
+    /// walked away; the batcher delivered into the slot and moved on.
+    pub abandoned: AtomicU64,
+    /// Batches dispatched to the worker pool.
+    pub batches: AtomicU64,
+    /// Real (non-padding) requests summed over dispatched batches;
+    /// `batched_requests / batches` is the mean batch size — the
+    /// "coalescing actually happens" number.
+    pub batched_requests: AtomicU64,
+    /// Padding rows added to round batches up to their bucket shape.
+    pub padded_rows: AtomicU64,
+    /// Batches whose handler panicked (before isolation retry).
+    pub handler_panics: AtomicU64,
+    /// Guard-cache hits summed over the workers' capture sessions.
+    pub guard_hits: AtomicU64,
+    /// Guard-cache misses (traced eager runs) summed over sessions.
+    pub guard_misses: AtomicU64,
+    /// Graphs captured and compiled, summed over sessions.
+    pub graphs_captured: AtomicU64,
+    /// Submit → batch-closed, per request.
+    pub queue: Histogram,
+    /// Batch-dispatch → output ready, per batch.
+    pub compute: Histogram,
+    /// Submit → response delivered, per request.
+    pub total: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            handler_panics: AtomicU64::new(0),
+            guard_hits: AtomicU64::new(0),
+            guard_misses: AtomicU64::new(0),
+            graphs_captured: AtomicU64::new(0),
+            queue: Histogram::new(),
+            compute: Histogram::new(),
+            total: Histogram::new(),
+        }
+    }
+
+    /// Snapshot every counter into plain data.
+    pub fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            abandoned: self.abandoned.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            handler_panics: self.handler_panics.load(Ordering::Relaxed),
+            guard_hits: self.guard_hits.load(Ordering::Relaxed),
+            guard_misses: self.guard_misses.load(Ordering::Relaxed),
+            graphs_captured: self.graphs_captured.load(Ordering::Relaxed),
+            queue: self.queue.snapshot(),
+            compute: self.compute.snapshot(),
+            total: self.total.snapshot(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+/// Point-in-time view of a server's (or the process's) serving counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub abandoned: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub padded_rows: u64,
+    pub handler_panics: u64,
+    pub guard_hits: u64,
+    pub guard_misses: u64,
+    pub graphs_captured: u64,
+    pub queue: LatencySnapshot,
+    pub compute: LatencySnapshot,
+    pub total: LatencySnapshot,
+}
+
+impl ServeStats {
+    /// Mean real requests per dispatched batch — > 1 means dynamic
+    /// batching is actually coalescing concurrent traffic.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Counter deltas since an earlier snapshot (histograms are deltas of
+    /// count/mean only in spirit: quantiles are re-read, counts subtract).
+    pub fn delta(&self, earlier: &ServeStats) -> ServeStats {
+        ServeStats {
+            requests: self.requests - earlier.requests,
+            completed: self.completed - earlier.completed,
+            failed: self.failed - earlier.failed,
+            rejected: self.rejected - earlier.rejected,
+            abandoned: self.abandoned - earlier.abandoned,
+            batches: self.batches - earlier.batches,
+            batched_requests: self.batched_requests - earlier.batched_requests,
+            padded_rows: self.padded_rows - earlier.padded_rows,
+            handler_panics: self.handler_panics - earlier.handler_panics,
+            guard_hits: self.guard_hits - earlier.guard_hits,
+            guard_misses: self.guard_misses - earlier.guard_misses,
+            graphs_captured: self.graphs_captured - earlier.graphs_captured,
+            queue: self.queue,
+            compute: self.compute,
+            total: self.total,
+        }
+    }
+
+    /// The profiler bridge: fold currently recorded profiler spans —
+    /// including spans recorded on serve worker threads (the profiler
+    /// merges its per-thread buffers; see
+    /// [`crate::profiler::op_totals`]) — into one per-op `{count,
+    /// total_ns}` table. Empty when the profiler is not recording.
+    pub fn op_totals() -> BTreeMap<String, crate::profiler::OpTotal> {
+        crate::profiler::op_totals(&crate::profiler::snapshot())
+    }
+}
+
+/// The process-global metrics instance behind [`serve_stats`].
+static GLOBAL: Lazy<Metrics> = Lazy::new(Metrics::new);
+
+/// The global instance: every server records into its own [`Metrics`]
+/// *and* this one.
+pub(crate) fn global() -> &'static Metrics {
+    &GLOBAL
+}
+
+/// Cumulative serving counters for the whole process since start — the
+/// [`crate::dispatch::capture_stats`] analogue for the serving layer.
+pub fn serve_stats() -> ServeStats {
+    GLOBAL.snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2_and_reads_upper_edges() {
+        let h = Histogram::new();
+        for ns in [3u64, 3, 3, 3, 3, 3, 3, 3, 3, 1000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 10);
+        // p50 over 9×3ns + 1×1000ns: rank 5 lands in the [2,4) bucket.
+        assert_eq!(h.quantile_ns(0.50), 4);
+        // p99: rank 10 is the 1000 ns outlier; its bucket's edge is 1024.
+        assert_eq!(h.quantile_ns(0.99), 1024);
+        assert_eq!(h.mean_ns(), (9 * 3 + 1000) / 10);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0);
+        assert_eq!(h.snapshot(), LatencySnapshot::default());
+    }
+
+    #[test]
+    fn zero_and_huge_durations_stay_in_range() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile_ns(0.01), 1, "0 ns lands in the first bucket");
+        assert_eq!(h.quantile_ns(1.0), 1u64 << (N_BUCKETS - 1), "clamped to the last bucket");
+    }
+
+    #[test]
+    fn mean_batch_size_needs_batches() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().mean_batch_size(), 0.0);
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert!((m.snapshot().mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_delta_subtracts_counters() {
+        let m = Metrics::new();
+        m.requests.store(5, Ordering::Relaxed);
+        let s0 = m.snapshot();
+        m.requests.store(9, Ordering::Relaxed);
+        m.completed.store(7, Ordering::Relaxed);
+        let d = m.snapshot().delta(&s0);
+        assert_eq!(d.requests, 4);
+        assert_eq!(d.completed, 7);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000, "every concurrent record must land");
+    }
+}

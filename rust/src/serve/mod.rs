@@ -1,0 +1,653 @@
+//! `serve` — inference serving with dynamic batching (ROADMAP Open
+//! item 2: the north star says millions of users; this is the subsystem
+//! that answers a request).
+//!
+//! The shape is the DataLoader turned inside out: the loader coalesces a
+//! *known* index stream into batches ahead of a consumer, while a server
+//! coalesces an *unknown* request stream into batches behind an SLO.
+//! Many client threads [`ClientHandle::submit`] single-sample tensors
+//! into one bounded `sync_channel` (backpressure, like the loader's
+//! prefetch queue); a dedicated **batcher** thread drains it, closing
+//! each batch at `max_batch` requests or `max_delay` after the batch's
+//! first arrival, whichever comes first; a **worker pool** stacks each
+//! batch (padding the row count up to a power-of-two bucket so the
+//! [`crate::dispatch::GraphCapture`] guard cache replays a compiled
+//! graph instead of recapturing per batch size), runs the model under
+//! [`crate::autograd::no_grad`], and scatters per-request output rows
+//! back through oneshot [`Pending`] slots.
+//!
+//! Contracts, pinned by `tests/serve_parity.rs` / `tests/serve_chaos.rs`:
+//! * **Batching is invisible**: a request's output is bitwise identical
+//!   whether it was served alone or coalesced with seven strangers, at
+//!   every thread count and SIMD mode. This rests on the same invariant
+//!   the GEMM suite pins — row blocking never changes a row's bits.
+//! * **Failure is loud and scoped**: a panicking handler fails *that
+//!   request* with a typed [`ServeError::HandlerPanic`] (co-batched
+//!   requests are re-run alone — poison isolation); an abandoned client
+//!   (dropped [`Pending`]) never wedges the batcher; [`Server::shutdown`]
+//!   joins **bounded** and names any wedged in-flight request by seq.
+//! * **Telemetry is live**: every stage records into lock-free
+//!   [`metrics::Histogram`] counters readable mid-flight via
+//!   [`Server::stats`] / [`serve_stats`] — not a post-hoc JSON dump.
+//!
+//! ```no_run
+//! # // no_run: doc-test binaries skip the multi-thread setup; the same
+//! # // flow is executed end-to-end in tests/serve_parity.rs.
+//! use torsk::serve::{ServeConfig, Server};
+//! use torsk::nn::Linear;
+//!
+//! let cfg = ServeConfig::new(&[16]).with_workers(2);
+//! let server = Server::new(|| Box::new(Linear::new(16, 4)), cfg);
+//! let handle = server.handle();
+//! let pending = handle.submit(torsk::Tensor::randn(&[16])).unwrap();
+//! let output = pending.wait().unwrap(); // shape [4]
+//! # let _ = output;
+//! let report = server.shutdown();
+//! assert!(!report.timed_out);
+//! ```
+
+mod batcher;
+pub mod metrics;
+mod worker;
+
+pub use metrics::{serve_stats, Histogram, LatencySnapshot, Metrics, ServeStats};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::nn::Module;
+use crate::serialize::Checkpoint;
+use crate::tensor::Tensor;
+use crate::testing::chaos::RequestFaults;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Typed per-request failures. Serving errors are always scoped to one
+/// request — the server itself keeps running (chaos contract).
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+pub enum ServeError {
+    /// The model panicked while computing this request. The panic was
+    /// caught on the worker; the payload rides along so the client sees
+    /// *why*, loudly, instead of a hung `wait`.
+    #[error("request {seq} failed: handler panicked: {msg}")]
+    HandlerPanic {
+        /// The failed request's sequence number.
+        seq: u64,
+        /// The panic payload (stringified).
+        msg: String,
+    },
+
+    /// The submitted tensor does not match the server's configured
+    /// sample shape — rejected at `submit`, before queueing.
+    #[error("request shape {found:?} does not match serve sample shape {expected:?}")]
+    ShapeMismatch {
+        /// The configured [`ServeConfig::sample_shape`].
+        expected: Vec<usize>,
+        /// The submitted tensor's shape.
+        found: Vec<usize>,
+    },
+
+    /// The server is shutting down (or already gone); the request was
+    /// not served.
+    #[error("server is shut down; request not served")]
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Serving knobs. `PALLAS_SERVE_MAX_BATCH` / `PALLAS_SERVE_MAX_DELAY_MS`
+/// seed the defaults (README env table); the builder methods override
+/// per server.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Shape of one request tensor (no batch dimension — the server owns
+    /// batching). Enforced at [`ClientHandle::submit`].
+    pub sample_shape: Vec<usize>,
+    /// Close a batch once it holds this many requests
+    /// (`PALLAS_SERVE_MAX_BATCH`, default 8). Also the padding-bucket
+    /// cap.
+    pub max_batch: usize,
+    /// Close a batch this long after its *first* request arrived, full
+    /// or not (`PALLAS_SERVE_MAX_DELAY_MS`, default 2 ms) — the
+    /// max-latency budget traded against batch size.
+    pub max_delay: Duration,
+    /// Inference worker threads, each with its own model replica and
+    /// capture session (default 1).
+    pub workers: usize,
+    /// Bound of the request queue; `submit` blocks (backpressure) when
+    /// full (default 64).
+    pub queue_depth: usize,
+    /// How long [`Server::shutdown`] waits for threads to exit before
+    /// naming the wedged requests and detaching (default 30 s).
+    pub join_timeout: Duration,
+    /// Request-scoped fault injection for the chaos suite; `None`
+    /// (always, outside tests) injects nothing.
+    pub chaos: Option<RequestFaults>,
+}
+
+impl ServeConfig {
+    /// Defaults for a given per-request sample shape.
+    pub fn new(sample_shape: &[usize]) -> ServeConfig {
+        ServeConfig {
+            sample_shape: sample_shape.to_vec(),
+            max_batch: env_u64("PALLAS_SERVE_MAX_BATCH", 8).max(1) as usize,
+            max_delay: Duration::from_millis(env_u64("PALLAS_SERVE_MAX_DELAY_MS", 2)),
+            workers: 1,
+            queue_depth: 64,
+            join_timeout: Duration::from_secs(30),
+            chaos: None,
+        }
+    }
+
+    pub fn with_max_batch(mut self, n: usize) -> ServeConfig {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    pub fn with_max_delay(mut self, d: Duration) -> ServeConfig {
+        self.max_delay = d;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> ServeConfig {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, n: usize) -> ServeConfig {
+        self.queue_depth = n.max(1);
+        self
+    }
+
+    pub fn with_join_timeout(mut self, d: Duration) -> ServeConfig {
+        self.join_timeout = d;
+        self
+    }
+
+    /// Install request-scoped chaos faults (tests only).
+    pub fn with_chaos(mut self, faults: RequestFaults) -> ServeConfig {
+        self.chaos = Some(faults);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Oneshot slots
+// ---------------------------------------------------------------------
+
+/// The oneshot response slot a request and its [`Pending`] share.
+/// First-writer-wins: during shutdown both the batcher (draining) and
+/// the submitting client (racing `closed`) may try to fail the same
+/// request — exactly one delivery counts, and a real result can never be
+/// overwritten by a late shutdown error (or vice versa).
+pub(crate) struct Slot {
+    cell: Mutex<Option<Result<Tensor, ServeError>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Arc<Slot> {
+        Arc::new(Slot { cell: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// Deliver a response; `true` iff this call won (the slot was empty).
+    pub(crate) fn deliver(&self, r: Result<Tensor, ServeError>) -> bool {
+        let mut cell = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        if cell.is_some() {
+            return false;
+        }
+        *cell = Some(r);
+        self.cv.notify_all();
+        true
+    }
+
+    fn wait(&self) -> Result<Tensor, ServeError> {
+        let mut cell = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(r) = cell.take() {
+                return r;
+            }
+            cell = self.cv.wait(cell).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// A submitted request's future response. Dropping it abandons the
+/// request: the server still computes (the batch was already formed) but
+/// delivery becomes a no-op — pinned by the chaos suite to never wedge
+/// the batcher.
+pub struct Pending {
+    seq: u64,
+    slot: Arc<Slot>,
+}
+
+impl Pending {
+    /// This request's sequence number (the id chaos faults and shutdown
+    /// reports refer to).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Block until the server answers: the output row (shape =
+    /// the model's per-sample output shape) or a typed error.
+    pub fn wait(self) -> Result<Tensor, ServeError> {
+        self.slot.wait()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Queue plumbing shared by batcher/worker
+// ---------------------------------------------------------------------
+
+/// One queued request.
+pub(crate) struct Request {
+    pub(crate) seq: u64,
+    pub(crate) input: Tensor,
+    pub(crate) slot: Arc<Slot>,
+    pub(crate) submitted: Instant,
+}
+
+impl Request {
+    /// Fail this request (first-writer-wins), keeping the books.
+    pub(crate) fn fail(self, err: ServeError, m: &ServeShared) {
+        if Arc::strong_count(&self.slot) == 1 {
+            m.bump_abandoned();
+        }
+        if self.slot.deliver(Err(err)) {
+            m.bump_failed();
+        }
+    }
+}
+
+/// What flows through the request channel.
+pub(crate) enum Msg {
+    Request(Request),
+    /// Shutdown sentinel: flush the forming batch, fail the drain, exit.
+    Shutdown,
+}
+
+/// A closed batch on its way to a worker.
+pub(crate) struct Batch {
+    pub(crate) members: Vec<Request>,
+}
+
+/// State every serve thread shares: config + the two metrics sinks
+/// (per-server instance and the process-global one — every event lands
+/// in both, mirroring how capture keeps session and global counters).
+pub(crate) struct ServeShared {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) metrics: Arc<Metrics>,
+}
+
+impl ServeShared {
+    fn both(&self, f: impl Fn(&Metrics)) {
+        f(&self.metrics);
+        f(metrics::global());
+    }
+    pub(crate) fn bump_failed(&self) {
+        self.both(|m| {
+            m.failed.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    pub(crate) fn bump_abandoned(&self) {
+        self.both(|m| {
+            m.abandoned.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    pub(crate) fn add(&self, field: fn(&Metrics) -> &AtomicU64, n: u64) {
+        self.both(|m| {
+            field(m).fetch_add(n, Ordering::Relaxed);
+        });
+    }
+    pub(crate) fn record_queue(&self, ns: u64) {
+        self.both(|m| m.queue.record(ns));
+    }
+    pub(crate) fn record_compute(&self, ns: u64) {
+        self.both(|m| m.compute.record(ns));
+    }
+    pub(crate) fn record_total(&self, ns: u64) {
+        self.both(|m| m.total.record(ns));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded join (the DataLoader's ExitLatch pattern)
+// ---------------------------------------------------------------------
+
+/// Counts live serve threads so shutdown can wait for *thread exit* with
+/// a timeout — `JoinHandle::join` alone cannot be bounded. Same pattern
+/// as the DataLoader's drop-time join.
+struct ExitLatch {
+    live: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ExitLatch {
+    fn new(n: usize) -> Arc<ExitLatch> {
+        Arc::new(ExitLatch { live: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    fn depart(&self) {
+        let mut live = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        *live -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Wait until every thread has exited; `false` on timeout.
+    fn wait_all_exited(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut live = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        while *live > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) =
+                self.cv.wait_timeout(live, deadline - now).unwrap_or_else(|e| e.into_inner());
+            live = guard;
+        }
+        true
+    }
+}
+
+/// Drop guard each serve thread holds for its whole life: unwinding out
+/// of a panicking exec still signals the latch.
+struct Departing(Arc<ExitLatch>);
+
+impl Drop for Departing {
+    fn drop(&mut self) {
+        self.0.depart();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client handle
+// ---------------------------------------------------------------------
+
+/// A cloneable client endpoint. Each client thread clones one and calls
+/// [`ClientHandle::submit`]; handles stay valid across (and report
+/// [`ServeError::Shutdown`] after) server shutdown.
+#[derive(Clone)]
+pub struct ClientHandle {
+    tx: SyncSender<Msg>,
+    closed: Arc<AtomicBool>,
+    next_seq: Arc<AtomicU64>,
+    shared: Arc<ServeShared>,
+}
+
+impl ClientHandle {
+    /// Enqueue one request tensor (shape must equal the configured
+    /// sample shape). Blocks only when the request queue is full
+    /// (backpressure). Returns a [`Pending`] to wait on.
+    pub fn submit(&self, input: Tensor) -> Result<Pending, ServeError> {
+        if input.shape() != &self.shared.cfg.sample_shape[..] {
+            self.shared.add(|m| &m.rejected, 1);
+            return Err(ServeError::ShapeMismatch {
+                expected: self.shared.cfg.sample_shape.clone(),
+                found: input.shape().to_vec(),
+            });
+        }
+        if self.closed.load(Ordering::SeqCst) {
+            self.shared.add(|m| &m.rejected, 1);
+            return Err(ServeError::Shutdown);
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let slot = Slot::new();
+        let req =
+            Request { seq, input, slot: slot.clone(), submitted: Instant::now() };
+        if self.tx.send(Msg::Request(req)).is_err() {
+            // Batcher gone entirely (server dropped): fail immediately.
+            self.shared.add(|m| &m.rejected, 1);
+            return Err(ServeError::Shutdown);
+        }
+        self.shared.add(|m| &m.requests, 1);
+        // Shutdown race: `closed` is set *before* the sentinel is sent,
+        // so if we still read false here our message was enqueued ahead
+        // of the sentinel (channel FIFO) and the batcher will see it. If
+        // we read true, the batcher's drain may already be past us —
+        // self-fail the slot; first-writer-wins dedupes against a drain
+        // that did see it.
+        if self.closed.load(Ordering::SeqCst)
+            && Arc::strong_count(&slot) > 1
+            && slot.deliver(Err(ServeError::Shutdown))
+        {
+            self.shared.bump_failed();
+        }
+        Ok(Pending { seq, slot })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shutdown report
+// ---------------------------------------------------------------------
+
+/// One worker that failed to exit within the shutdown budget, with the
+/// requests it held in flight — so "it hung" comes with names attached.
+#[derive(Clone, Debug)]
+pub struct WedgedWorker {
+    /// Worker index (0-based).
+    pub worker: usize,
+    /// Sequence numbers of the requests the worker was executing.
+    pub seqs: Vec<u64>,
+}
+
+/// The outcome of [`Server::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ShutdownReport {
+    /// `true` when the join budget elapsed with threads still live; the
+    /// stragglers were detached, not leaked into a hang.
+    pub timed_out: bool,
+    /// Workers still live at timeout, with their in-flight request seqs.
+    pub wedged: Vec<WedgedWorker>,
+}
+
+impl std::fmt::Display for ShutdownReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.timed_out {
+            return write!(f, "serve shutdown: clean");
+        }
+        write!(f, "serve shutdown: join timed out;")?;
+        if self.wedged.is_empty() {
+            write!(f, " no worker holds an in-flight request")?;
+        }
+        for w in &self.wedged {
+            write!(f, " worker {} wedged on request(s) {:?};", w.worker, w.seqs)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------
+
+/// A running inference server: one batcher thread + `cfg.workers`
+/// inference threads, each owning a private model replica (the
+/// [`Module`] trait is `Send` but not `Sync`) and a private
+/// [`crate::dispatch::GraphCapture`] session.
+pub struct Server {
+    tx: Option<SyncSender<Msg>>,
+    closed: Arc<AtomicBool>,
+    next_seq: Arc<AtomicU64>,
+    shared: Arc<ServeShared>,
+    latch: Arc<ExitLatch>,
+    /// Per-worker in-flight request seqs, for the shutdown report.
+    inflight: Vec<Arc<Mutex<Vec<u64>>>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server. `make_model` is called once per worker thread to
+    /// build that worker's private replica — for a checkpointed model
+    /// use [`Server::from_checkpoint`], which wires the state-dict load
+    /// into the factory.
+    pub fn new<F>(make_model: F, mut cfg: ServeConfig) -> Server
+    where
+        F: Fn() -> Box<dyn Module> + Send + Sync + 'static,
+    {
+        // The builder methods clamp these, but the fields are pub: a
+        // zero here would mean a server that can never answer.
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.workers = cfg.workers.max(1);
+        cfg.queue_depth = cfg.queue_depth.max(1);
+        let shared = Arc::new(ServeShared { metrics: Arc::new(Metrics::new()), cfg });
+        let cfg = &shared.cfg;
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        // Small bound: a deep batch queue would hide queue latency from
+        // the batcher's own budget accounting.
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let latch = ExitLatch::new(cfg.workers + 1);
+        let make_model = Arc::new(make_model);
+
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        let mut inflight = Vec::with_capacity(cfg.workers);
+
+        {
+            let shared = shared.clone();
+            let guard = Departing(latch.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("torsk-serve-batcher".into())
+                    .spawn(move || {
+                        let _guard = guard;
+                        batcher::run(rx, batch_tx, &shared);
+                    })
+                    .expect("spawn serve batcher"),
+            );
+        }
+
+        for idx in 0..cfg.workers {
+            let inf = Arc::new(Mutex::new(Vec::new()));
+            inflight.push(inf.clone());
+            let shared = shared.clone();
+            let batch_rx = batch_rx.clone();
+            let make_model = make_model.clone();
+            let guard = Departing(latch.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("torsk-serve-worker-{idx}"))
+                    .spawn(move || {
+                        let _guard = guard;
+                        let model = make_model();
+                        worker::run(model, batch_rx, &shared, &inf);
+                    })
+                    .expect("spawn serve worker"),
+            );
+        }
+
+        Server {
+            tx: Some(tx),
+            closed: Arc::new(AtomicBool::new(false)),
+            next_seq: Arc::new(AtomicU64::new(0)),
+            shared,
+            latch,
+            inflight,
+            threads,
+        }
+    }
+
+    /// Load a [`Checkpoint`] and serve it: `build_arch` constructs the
+    /// (architecture-matching) module, then each worker's replica gets
+    /// the checkpoint's state dict loaded — so the *file* defines the
+    /// served weights, not the builder's init.
+    pub fn from_checkpoint<F>(
+        path: &Path,
+        build_arch: F,
+        cfg: ServeConfig,
+    ) -> crate::Result<Server>
+    where
+        F: Fn() -> Box<dyn Module> + Send + Sync + 'static,
+    {
+        let ckpt = Checkpoint::load(path)?;
+        let sd: Arc<BTreeMap<String, Tensor>> = Arc::new(ckpt.model);
+        Ok(Server::new(
+            move || {
+                let model = build_arch();
+                model.load_state_dict(&sd);
+                model
+            },
+            cfg,
+        ))
+    }
+
+    /// A new client endpoint (cheap; clone freely across threads).
+    pub fn handle(&self) -> ClientHandle {
+        ClientHandle {
+            tx: self.tx.as_ref().expect("server already shut down").clone(),
+            closed: self.closed.clone(),
+            next_seq: self.next_seq.clone(),
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Live snapshot of this server's counters (the process-global view
+    /// is [`serve_stats`]).
+    pub fn stats(&self) -> ServeStats {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop accepting requests, flush what's queued (queued requests are
+    /// *failed* with [`ServeError::Shutdown`], not silently dropped),
+    /// and join every thread — **bounded** by `cfg.join_timeout`. On
+    /// timeout the report names each wedged worker's in-flight request
+    /// seqs and the stragglers are detached, never awaited forever.
+    pub fn shutdown(mut self) -> ShutdownReport {
+        // Order matters: closed first, then the sentinel — submit's
+        // post-send double-check relies on it (see ClientHandle::submit).
+        self.closed.store(true, Ordering::SeqCst);
+        if let Some(tx) = self.tx.take() {
+            // try_send: a full queue in front of a wedged batcher must
+            // not turn shutdown into the very hang it bounds. The drain
+            // path fails queued requests either way; a missing sentinel
+            // only means we take the timeout branch below.
+            match tx.try_send(Msg::Shutdown) {
+                Ok(()) | Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+        let clean = self.latch.wait_all_exited(self.shared.cfg.join_timeout);
+        let mut report = ShutdownReport::default();
+        if clean {
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
+        } else {
+            report.timed_out = true;
+            for (idx, inf) in self.inflight.iter().enumerate() {
+                let seqs = inf.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                if !seqs.is_empty() {
+                    report.wedged.push(WedgedWorker { worker: idx, seqs });
+                }
+            }
+            // Detach: dropping the handles leaves the wedged threads to
+            // the OS instead of leaving the caller in an unbounded join.
+            self.threads.clear();
+        }
+        report
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // A dropped (not shut down) server still signals its threads;
+        // it never blocks in drop — threads exit once clients' handles
+        // go away and the channels disconnect.
+        self.closed.store(true, Ordering::SeqCst);
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.try_send(Msg::Shutdown);
+        }
+        self.threads.clear();
+    }
+}

@@ -1,0 +1,171 @@
+//! The inference workers: each owns a private model replica ([`Module`]
+//! is `Send` but not `Sync` — replicas, not sharing) and a private
+//! [`GraphCapture`] session, pulls closed batches from the shared
+//! bounded queue, stacks them into a **padded bucket shape**, runs the
+//! model under `no_grad`, and scatters output rows back to the waiting
+//! clients.
+//!
+//! Bucket padding is what makes capture pay: batch row-counts are
+//! whatever traffic produced (3, then 5, then 2, ...), and every new
+//! shape would miss the capture guard and re-trace. Rounding the row
+//! count up to the next power of two (capped at `max_batch`) collapses
+//! all sizes onto `log2(max_batch)+1` shapes, so after a short warmup
+//! every batch **replays** a compiled graph — `capture_stats()` shows
+//! guard hits, not recaptures, under steady traffic (pinned by
+//! `tests/serve_parity.rs`). Padding rows duplicate a real row and are
+//! sliced off before scatter; they change no served bits because row
+//! blocking never changes a row's bits (the GEMM parity invariant).
+//!
+//! A panicking model fails only the requests it was computing: the
+//! unwind is caught, the batch is re-run one request at a time (poison
+//! isolation), and the guilty request gets a typed
+//! [`ServeError::HandlerPanic`] while its co-batched neighbours get
+//! their real outputs. The worker thread itself never dies with work on
+//! its queue.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::data::stack_into_batch;
+use crate::dispatch::{GraphCapture, SessionStats};
+use crate::nn::Module;
+use crate::profiler;
+use crate::tensor::Tensor;
+
+use super::{Batch, ServeError, ServeShared};
+
+/// The padding bucket for a batch of `n` real rows: next power of two,
+/// capped at the configured maximum. `max_batch` itself is always a
+/// bucket even when it is not a power of two.
+fn bucket_for(n: usize, max_batch: usize) -> usize {
+    n.next_power_of_two().min(max_batch).max(n)
+}
+
+pub(crate) fn run(
+    model: Box<dyn Module>,
+    batch_rx: Arc<Mutex<Receiver<Batch>>>,
+    shared: &ServeShared,
+    inflight: &Mutex<Vec<u64>>,
+) {
+    // The session lives (and is only touched) on this worker thread;
+    // its guard table accumulates one graph per warm bucket shape.
+    let sess = GraphCapture::new("serve:forward");
+    let mut seen = SessionStats::default();
+    loop {
+        // Hold the receiver lock only for the handoff, never during
+        // inference — a wedged exec must not block sibling workers.
+        let batch = {
+            let rx = batch_rx.lock().unwrap_or_else(|e| e.into_inner());
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone and queue drained
+            }
+        };
+        *inflight.lock().unwrap_or_else(|e| e.into_inner()) =
+            batch.members.iter().map(|m| m.seq).collect();
+        exec(model.as_ref(), &sess, batch, shared);
+        inflight.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        // Fold this session's guard activity into the serve counters as
+        // deltas (sessions are per-worker; the metrics are per-server).
+        let now = sess.session_stats();
+        shared.add(|m| &m.guard_hits, now.guard_hits - seen.guard_hits);
+        shared.add(|m| &m.guard_misses, now.guard_misses - seen.guard_misses);
+        shared.add(|m| &m.graphs_captured, now.graphs_captured - seen.graphs_captured);
+        seen = now;
+    }
+}
+
+/// Execute one batch end-to-end: pad, stack, forward, scatter. Called
+/// recursively (singleton batches) for poison isolation after a panic.
+fn exec(model: &dyn Module, sess: &GraphCapture, batch: Batch, shared: &ServeShared) {
+    let n = batch.members.len();
+    debug_assert!(n > 0, "batcher never closes an empty batch");
+    let bucket = bucket_for(n, shared.cfg.max_batch);
+    shared.add(|m| &m.padded_rows, (bucket - n) as u64);
+    let rows: Vec<&Tensor> = batch
+        .members
+        .iter()
+        .map(|r| &r.input)
+        .chain(std::iter::repeat(&batch.members[n - 1].input).take(bucket - n))
+        .collect();
+    let stacked = stack_into_batch(&rows);
+
+    let chaos = shared.cfg.chaos.clone();
+    let members = &batch.members;
+    let t0 = Instant::now();
+    let span = profiler::begin(profiler::Track::Host, "serve:batch");
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(faults) = &chaos {
+            for m in members {
+                faults.fire(m.seq);
+            }
+        }
+        crate::autograd::no_grad(|| sess.run(&[&stacked], |ins| model.forward(ins[0])))
+    }));
+    profiler::end(span);
+
+    match out {
+        Ok(out) => {
+            shared.record_compute(t0.elapsed().as_nanos() as u64);
+            for (i, m) in batch.members.into_iter().enumerate() {
+                // Padding rows sit past index n-1 and are never scattered.
+                let row = out.select(0, i).contiguous();
+                if Arc::strong_count(&m.slot) == 1 {
+                    // Client dropped its Pending: deliver into the void
+                    // (a no-op write) and count the abandonment.
+                    shared.bump_abandoned();
+                }
+                if m.slot.deliver(Ok(row)) {
+                    shared.add(|mm| &mm.completed, 1);
+                    shared.record_total(m.submitted.elapsed().as_nanos() as u64);
+                }
+            }
+        }
+        Err(payload) => {
+            shared.add(|m| &m.handler_panics, 1);
+            let msg = panic_msg(payload);
+            if n == 1 {
+                let m = batch.members.into_iter().next().expect("n == 1");
+                let seq = m.seq;
+                m.fail(ServeError::HandlerPanic { seq, msg }, shared);
+            } else {
+                // Poison isolation: one bad request must not fail its
+                // co-batched neighbours. Re-run each alone; the guilty
+                // one panics again (n == 1 branch) and fails typed.
+                for m in batch.members {
+                    exec(model, sess, Batch { members: vec![m] }, shared);
+                }
+            }
+        }
+    }
+}
+
+/// Stringify a caught panic payload (the common `&str`/`String` cases).
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_powers_of_two_capped_at_max() {
+        assert_eq!(bucket_for(1, 8), 1);
+        assert_eq!(bucket_for(2, 8), 2);
+        assert_eq!(bucket_for(3, 8), 4);
+        assert_eq!(bucket_for(5, 8), 8);
+        assert_eq!(bucket_for(8, 8), 8);
+        // Non-power-of-two cap: the cap itself is a bucket.
+        assert_eq!(bucket_for(5, 6), 6);
+        assert_eq!(bucket_for(6, 6), 6);
+        assert_eq!(bucket_for(4, 6), 4);
+    }
+}

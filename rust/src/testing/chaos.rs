@@ -174,6 +174,80 @@ impl Default for Gate {
     }
 }
 
+/// Request-scoped fault injection for the serving chaos suite
+/// (`tests/serve_chaos.rs`). Instance-scoped like [`ChaosDataset`], not
+/// registry-scoped: serve workers execute requests on their own threads,
+/// where a thread-scoped arming could never fire. A test clones one of
+/// these into `serve::ServeConfig::with_chaos`, arms faults by request
+/// **sequence number**, and the worker fires them at the top of the
+/// handler (inside its panic-isolation `catch_unwind`).
+///
+/// Faults stay armed after firing on purpose: the worker's poison
+/// isolation re-runs a panicking batch one request at a time, and the
+/// guilty request must panic *again* when alone to be failed typed.
+#[derive(Clone, Default)]
+pub struct RequestFaults {
+    inner: Arc<RequestFaultsInner>,
+}
+
+#[derive(Default)]
+struct RequestFaultsInner {
+    panics: Mutex<std::collections::BTreeSet<u64>>,
+    stalls: Mutex<BTreeMap<u64, Gate>>,
+    stalled: Gate,
+    hits: AtomicUsize,
+}
+
+impl RequestFaults {
+    pub fn new() -> RequestFaults {
+        RequestFaults::default()
+    }
+
+    /// Panic the handler whenever it executes request `seq`.
+    pub fn panic_on(&self, seq: u64) {
+        self.inner.panics.lock().unwrap_or_else(|e| e.into_inner()).insert(seq);
+    }
+
+    /// Block the handler on `gate` whenever it executes request `seq`
+    /// (a wedged worker the test controls — no sleeps).
+    pub fn stall_on(&self, seq: u64, gate: Gate) {
+        self.inner.stalls.lock().unwrap_or_else(|e| e.into_inner()).insert(seq, gate);
+    }
+
+    /// A gate that opens the moment a stalled handler begins waiting —
+    /// the test can block until the worker is *provably* wedged.
+    pub fn stalled(&self) -> Gate {
+        self.inner.stalled.clone()
+    }
+
+    /// Total times any armed fault fired.
+    pub fn hits(&self) -> usize {
+        self.inner.hits.load(Ordering::SeqCst)
+    }
+
+    /// Production-side hook (called by the serve worker per batch
+    /// member): panic or stall if `seq` is armed. Free when nothing is.
+    pub fn fire(&self, seq: u64) {
+        let panics = {
+            let set = self.inner.panics.lock().unwrap_or_else(|e| e.into_inner());
+            set.contains(&seq)
+        };
+        if panics {
+            self.inner.hits.fetch_add(1, Ordering::SeqCst);
+            panic!("chaos[request {seq}]: injected handler panic");
+        }
+        let gate = {
+            let stalls = self.inner.stalls.lock().unwrap_or_else(|e| e.into_inner());
+            stalls.get(&seq).cloned()
+        };
+        if let Some(gate) = gate {
+            self.inner.hits.fetch_add(1, Ordering::SeqCst);
+            self.inner.stalled.open();
+            gate.wait();
+        }
+    }
+}
+
 /// A [`Dataset`] wrapper that misbehaves at chosen indices: panic (a
 /// crashed worker) or block on a [`Gate`] (a wedged worker). All other
 /// indices pass through unchanged, so the surviving batches stay bitwise
@@ -310,6 +384,31 @@ mod tests {
         assert_eq!(ds.get(1).0.to_vec::<f32>(), vec![1.0]);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ds.get(2)));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn request_faults_panic_and_stay_armed() {
+        let faults = RequestFaults::new();
+        faults.panic_on(3);
+        faults.fire(2); // unarmed seq: silent
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| faults.fire(3)));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("chaos[request 3]"), "{msg}");
+        // Still armed: the isolation re-run must panic again.
+        let r2 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| faults.fire(3)));
+        assert!(r2.is_err());
+        assert_eq!(faults.hits(), 2);
+    }
+
+    #[test]
+    fn request_faults_stall_opens_stalled_gate() {
+        let faults = RequestFaults::new();
+        let release = Gate::new();
+        faults.stall_on(7, release.clone());
+        release.open(); // pre-open so this test's fire returns at once
+        faults.fire(7);
+        assert_eq!(faults.hits(), 1);
+        faults.stalled().wait(); // opened by the fire
     }
 
     #[test]

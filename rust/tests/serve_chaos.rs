@@ -1,0 +1,197 @@
+//! Serving chaos suite: every injected serving fault must surface the
+//! contracted way — a typed [`ServeError`] scoped to ONE request, a
+//! server that keeps serving everyone else, and a shutdown that joins
+//! **bounded** and names what it could not join. Never a silent drop,
+//! never an unbounded hang.
+//!
+//! Faults injected here, via `testing::chaos::RequestFaults`
+//! (request-scoped, instance-held — serve workers execute on their own
+//! threads, where the thread-scoped registry could never fire):
+//! - panic the handler on a chosen request **while it is co-batched**:
+//!   the victim fails with [`ServeError::HandlerPanic`], its neighbours
+//!   get their real outputs (poison isolation re-runs them alone);
+//! - abandon a request (drop its `Pending` mid-flight): delivery
+//!   becomes a no-op write, counted, and the batcher never wedges;
+//! - wedge a worker forever: `shutdown` returns within its budget with
+//!   the wedged request named by seq, and the straggler is detached.
+//!
+//! No test sleeps to "give threads time": stalls are condvar [`Gate`]s
+//! the test controls, and the only timeouts exercised are the bounded
+//! waits under test themselves.
+
+use std::time::Duration;
+
+use torsk::nn::{Linear, Module, ReLU, Sequential};
+use torsk::serve::{serve_stats, ServeConfig, ServeError, Server};
+use torsk::tensor::Tensor;
+use torsk::testing::chaos::{Gate, RequestFaults};
+
+const IN: usize = 8;
+const OUT: usize = 4;
+
+fn build_arch() -> Box<dyn Module> {
+    Box::new(Sequential::new().add(Linear::new(IN, 16)).add(ReLU).add(Linear::new(16, OUT)))
+}
+
+fn input() -> Tensor {
+    Tensor::ones(&[IN])
+}
+
+/// Stall request 0 so requests 1..=3 deterministically coalesce into one
+/// batch; request 2 is armed to panic. The group run panics, poison
+/// isolation re-runs the three alone: 1 and 3 are served, 2 fails with a
+/// typed error naming it — and the server keeps serving afterwards.
+#[test]
+fn panicking_handler_fails_that_request_typed_while_neighbours_survive() {
+    let faults = RequestFaults::new();
+    let release = Gate::new();
+    faults.stall_on(0, release.clone());
+    faults.panic_on(2);
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(8)
+        .with_max_delay(Duration::from_millis(100))
+        .with_workers(1)
+        .with_chaos(faults.clone());
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+
+    let p0 = handle.submit(input()).unwrap();
+    faults.stalled().wait(); // worker provably wedged on request 0
+    let p1 = handle.submit(input()).unwrap();
+    let p2 = handle.submit(input()).unwrap();
+    let p3 = handle.submit(input()).unwrap();
+    assert_eq!((p1.seq(), p2.seq(), p3.seq()), (1, 2, 3));
+    release.open();
+
+    assert_eq!(p0.wait().expect("request 0 served").shape(), &[OUT]);
+    assert_eq!(p1.wait().expect("innocent neighbour 1 served").shape(), &[OUT]);
+    match p2.wait() {
+        Err(ServeError::HandlerPanic { seq: 2, msg }) => {
+            assert!(msg.contains("chaos[request 2]"), "panic payload rides along: {msg}");
+        }
+        other => panic!("request 2 must fail typed, got {other:?}"),
+    }
+    assert_eq!(p3.wait().expect("innocent neighbour 3 served").shape(), &[OUT]);
+
+    // The server keeps serving after the panic.
+    let p4 = handle.submit(input()).unwrap();
+    assert_eq!(p4.wait().expect("served after panic").shape(), &[OUT]);
+
+    let stats = server.stats();
+    assert_eq!(stats.completed, 4, "{stats:?}");
+    assert_eq!(stats.failed, 1, "{stats:?}");
+    // Exactly two panicking executions: the {1,2,3} group, then 2 alone.
+    assert_eq!(stats.handler_panics, 2, "{stats:?}");
+    // Fault fired thrice: the stall, the group panic, the solo panic.
+    assert_eq!(faults.hits(), 3);
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+}
+
+/// A client that walks away (drops its `Pending`) must not wedge
+/// anything: the worker's delivery is a counted no-op and every other
+/// request keeps flowing.
+#[test]
+fn abandoned_client_never_wedges_the_batcher() {
+    let faults = RequestFaults::new();
+    let release = Gate::new();
+    faults.stall_on(0, release.clone());
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(4)
+        .with_max_delay(Duration::from_millis(20))
+        .with_workers(1)
+        .with_chaos(faults.clone());
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+
+    let p0 = handle.submit(input()).unwrap();
+    faults.stalled().wait();
+    drop(p0); // abandon while the request is provably in flight
+    release.open();
+
+    // Everything after the abandonment is served normally.
+    for _ in 0..3 {
+        let p = handle.submit(input()).unwrap();
+        assert_eq!(p.wait().expect("served past the abandonment").shape(), &[OUT]);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.abandoned, 1, "{stats:?}");
+    assert_eq!(stats.completed, 4, "delivery into the void still completes: {stats:?}");
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+}
+
+/// Shutdown with a wedged worker: returns within the configured budget
+/// (never an unbounded join) and the report names the wedged in-flight
+/// request by seq and worker. The straggler is detached — and once the
+/// test releases it, it still finishes its request and exits.
+#[test]
+fn shutdown_joins_bounded_and_names_the_wedged_request() {
+    let faults = RequestFaults::new();
+    let release = Gate::new();
+    faults.stall_on(0, release.clone());
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(4)
+        .with_max_delay(Duration::from_millis(10))
+        .with_workers(1)
+        .with_join_timeout(Duration::from_millis(200))
+        .with_chaos(faults.clone());
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+
+    let p0 = handle.submit(input()).unwrap();
+    faults.stalled().wait(); // wedged before shutdown begins — no race
+
+    let report = server.shutdown();
+    assert!(report.timed_out, "worker is wedged; the join must time out: {report}");
+    assert_eq!(report.wedged.len(), 1, "{report}");
+    assert_eq!(report.wedged[0].worker, 0);
+    assert_eq!(report.wedged[0].seqs, vec![0], "the wedged request is named by seq");
+    let text = format!("{report}");
+    assert!(text.contains("worker 0") && text.contains("[0]"), "{text}");
+
+    // New submissions are refused typed after shutdown.
+    match handle.submit(input()) {
+        Err(ServeError::Shutdown) => {}
+        other => panic!("post-shutdown submit must fail typed, got {other:?}"),
+    }
+
+    // Release the detached worker: it finishes its request and exits.
+    release.open();
+    assert_eq!(p0.wait().expect("detached worker still answers").shape(), &[OUT]);
+}
+
+/// The reject paths are typed and counted: a wrong-shape tensor never
+/// reaches the queue, and the process-global `serve_stats()` aggregate
+/// observes this server's traffic.
+#[test]
+fn bad_shape_is_rejected_typed_and_global_stats_observe_traffic() {
+    let global_before = serve_stats();
+    let cfg = ServeConfig::new(&[IN]).with_max_delay(Duration::from_millis(5));
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+
+    match handle.submit(Tensor::ones(&[IN + 1])) {
+        Err(ServeError::ShapeMismatch { expected, found }) => {
+            assert_eq!(expected, vec![IN]);
+            assert_eq!(found, vec![IN + 1]);
+        }
+        other => panic!("shape mismatch must be typed, got {other:?}"),
+    }
+
+    let p = handle.submit(input()).unwrap();
+    assert_eq!(p.wait().expect("served").shape(), &[OUT]);
+
+    let stats = server.stats();
+    assert_eq!(stats.rejected, 1, "{stats:?}");
+    assert_eq!(stats.completed, 1);
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+
+    // Global counters are cumulative across servers (and concurrent
+    // tests), so assert this test's contribution as a lower bound.
+    let global_after = serve_stats();
+    assert!(global_after.requests >= global_before.requests + 1);
+    assert!(global_after.rejected >= global_before.rejected + 1);
+    assert!(global_after.completed >= global_before.completed + 1);
+}

@@ -1,0 +1,268 @@
+//! Serving parity: dynamic batching must be **invisible** in the served
+//! bits. N concurrent requests coalesced into dynamic batches produce
+//! outputs bitwise identical to serial one-request-at-a-time inference,
+//! across `PALLAS_NUM_THREADS` 1/2/8 × SIMD on/off × batch budgets
+//! {1, 4, max} — the same matrix the GEMM/fused/capture parity suites
+//! pin, because serving parity *rests on* those invariants (row
+//! blocking never changes a row's bits).
+//!
+//! Also pinned here:
+//! - the checkpoint is the source of truth: every worker replica is
+//!   differently (randomly) initialized and then overwritten by
+//!   `Server::from_checkpoint`, so matching bits prove the *file*
+//!   defined the weights;
+//! - bucket padding makes the capture guard cache converge: across any
+//!   batch split the worker sees at most `log2(max_batch)+1` shapes, so
+//!   guard misses (and captured graphs) are bounded by the bucket count
+//!   while every later batch is a **hit** — no recapture under steady
+//!   traffic, regardless of how timing split the batches;
+//! - coalescing provably happens (mean batch size > 1) without timing
+//!   sleeps, by wedging the single worker on a chaos [`Gate`] while
+//!   requests pile into one batch;
+//! - profiler spans recorded on serve worker threads appear in the
+//!   merged cross-thread report (`serve:batch` + per-op spans).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use torsk::data::stack_into_batch;
+use torsk::kernels::set_num_threads;
+use torsk::kernels::simd::set_force_scalar;
+use torsk::nn::{Linear, Module, ReLU, Sequential};
+use torsk::rng::Rng;
+use torsk::serialize::Checkpoint;
+use torsk::serve::{ServeConfig, Server};
+use torsk::tensor::Tensor;
+use torsk::testing::chaos::{Gate, RequestFaults};
+
+/// Serializes tests that touch process-global knobs (seed epoch, kernel
+/// thread count, forced-scalar mode, the profiler).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+static NEXT_FILE: AtomicUsize = AtomicUsize::new(0);
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let n = NEXT_FILE.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!("torsk-serve-{}-{n}-{tag}.ckpt", std::process::id()))
+}
+
+const IN: usize = 8;
+const HID: usize = 16;
+const OUT: usize = 4;
+/// 3 client threads × 8 requests.
+const N_REQ: usize = 24;
+
+fn build_arch() -> Box<dyn Module> {
+    Box::new(Sequential::new().add(Linear::new(IN, HID)).add(ReLU).add(Linear::new(HID, OUT)))
+}
+
+/// Request input for logical request `i`, deterministic per index so
+/// every matrix cell serves the identical workload.
+fn req_input(i: usize) -> Tensor {
+    let mut r = Rng::for_index(0x5E57E, i as u64);
+    let x: Vec<f32> = (0..IN).map(|_| r.normal()).collect();
+    Tensor::from_vec(x, &[IN])
+}
+
+fn bits(v: Vec<f32>) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Serial reference: one request per forward, batch dimension of 1 —
+/// exactly what a `max_batch = 1` server computes per request.
+fn forward_one(model: &dyn Module, x: &Tensor) -> Vec<u32> {
+    torsk::autograd::no_grad(|| {
+        let b = stack_into_batch(&[x]);
+        bits(model.forward(&b).select(0, 0).contiguous().to_vec::<f32>())
+    })
+}
+
+#[test]
+fn batched_equals_serial_bitwise_across_matrix() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let path = scratch("parity");
+    torsk::rng::manual_seed(0x5E12_7E57);
+    let reference = build_arch();
+    Checkpoint::new(reference.state_dict()).save(&path).expect("save serve checkpoint");
+
+    let inputs: Vec<Tensor> = (0..N_REQ).map(req_input).collect();
+    let expect: Vec<Vec<u32>> =
+        inputs.iter().map(|x| forward_one(reference.as_ref(), x)).collect();
+
+    for &threads in &[1usize, 2, 8] {
+        for &scalar in &[false, true] {
+            for &budget in &[1usize, 4, 8] {
+                set_num_threads(threads);
+                set_force_scalar(scalar);
+                let cfg = ServeConfig::new(&[IN])
+                    .with_max_batch(budget)
+                    .with_max_delay(Duration::from_millis(20))
+                    .with_workers(2);
+                let server = Server::from_checkpoint(&path, build_arch, cfg)
+                    .expect("serve from checkpoint");
+                let handle = server.handle();
+                let got: Vec<(usize, Vec<u32>)> = std::thread::scope(|s| {
+                    let join: Vec<_> = (0..3)
+                        .map(|c| {
+                            let handle = handle.clone();
+                            let inputs = &inputs;
+                            s.spawn(move || {
+                                // Submit the whole burst before waiting so
+                                // the batcher has something to coalesce.
+                                let pend: Vec<_> = (0..8)
+                                    .map(|k| {
+                                        let i = c * 8 + k;
+                                        (i, handle.submit(inputs[i].clone()).unwrap())
+                                    })
+                                    .collect();
+                                pend.into_iter()
+                                    .map(|(i, p)| {
+                                        (i, bits(p.wait().expect("served").to_vec::<f32>()))
+                                    })
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect();
+                    join.into_iter().flat_map(|j| j.join().unwrap()).collect()
+                });
+                assert_eq!(got.len(), N_REQ);
+                for (i, out) in got {
+                    assert_eq!(
+                        out, expect[i],
+                        "request {i} diverged from serial inference at \
+                         threads={threads} scalar={scalar} budget={budget}"
+                    );
+                }
+                let stats = server.stats();
+                assert_eq!(stats.completed, N_REQ as u64);
+                assert_eq!(stats.failed, 0);
+                if budget == 1 {
+                    // A budget of 1 *is* serial inference: one request
+                    // per batch, by construction.
+                    assert_eq!(stats.batches, N_REQ as u64);
+                }
+                let report = server.shutdown();
+                assert!(!report.timed_out, "{report}");
+            }
+        }
+    }
+    set_force_scalar(false);
+    set_num_threads(0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bucketed_batches_replay_without_recapture() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    if std::env::var("PALLAS_CAPTURE").map(|v| v == "0").unwrap_or(false) {
+        return; // kill switch on: there is no guard cache to assert over
+    }
+    // One worker = one capture session, so the counters below are exact.
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(8)
+        .with_max_delay(Duration::from_millis(20))
+        .with_workers(1);
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+    // Three rounds of bursts in assorted sizes. However timing splits
+    // these into batches, every batch's row count pads to a bucket in
+    // {1, 2, 4, 8} — so misses are bounded by the bucket count and
+    // repeats MUST be guard hits.
+    let mut sent = 0u64;
+    for _round in 0..3 {
+        for &k in &[1usize, 2, 3, 4, 5, 8] {
+            let pend: Vec<_> = (0..k)
+                .map(|_| handle.submit(req_input(sent as usize % N_REQ)).unwrap())
+                .collect();
+            sent += k as u64;
+            for p in pend {
+                p.wait().expect("served");
+            }
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, sent);
+    assert!(stats.batches >= 18, "one batch per burst at minimum");
+    // The no-recapture pin: at most one trace per bucket shape, every
+    // other batch replays. Holds for ANY batch split timing produced.
+    assert!(
+        stats.guard_misses <= 4,
+        "more guard misses than bucket shapes: {stats:?}"
+    );
+    assert!(stats.graphs_captured <= 4 && stats.graphs_captured >= 1, "{stats:?}");
+    assert_eq!(
+        stats.guard_hits,
+        stats.batches - stats.guard_misses,
+        "every repeated bucket shape must replay, not recapture: {stats:?}"
+    );
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+}
+
+#[test]
+fn coalescing_happens_and_pads_to_buckets() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Wedge the only worker on request 0 (chaos gate, no sleeps): the
+    // next three requests must coalesce into ONE batch of 3, padded to
+    // the 4-bucket — mean batch size 2.0 and padded_rows 1, exactly.
+    let faults = RequestFaults::new();
+    let release = Gate::new();
+    faults.stall_on(0, release.clone());
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(8)
+        .with_max_delay(Duration::from_millis(100))
+        .with_workers(1)
+        .with_chaos(faults.clone());
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+
+    let p0 = handle.submit(req_input(0)).unwrap();
+    assert_eq!(p0.seq(), 0);
+    faults.stalled().wait(); // worker is provably wedged on request 0
+    let pend: Vec<_> = (1..=3).map(|i| handle.submit(req_input(i)).unwrap()).collect();
+    release.open();
+    assert_eq!(p0.wait().expect("stalled request still served").shape(), &[OUT]);
+    for p in pend {
+        assert_eq!(p.wait().expect("served").shape(), &[OUT]);
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.batches, 2, "{stats:?}"); // {0} and {1,2,3}
+    assert_eq!(stats.batched_requests, 4);
+    assert!((stats.mean_batch_size() - 2.0).abs() < 1e-12);
+    assert_eq!(stats.padded_rows, 1, "batch of 3 pads to the 4-bucket");
+    assert_eq!(stats.completed, 4);
+    assert!(stats.queue.count >= 4 && stats.total.count >= 4 && stats.compute.count >= 2);
+    assert!(stats.total.p99_ns >= stats.total.p50_ns);
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+}
+
+#[test]
+fn worker_thread_spans_reach_the_merged_profile() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = ServeConfig::new(&[IN])
+        .with_max_batch(4)
+        .with_max_delay(Duration::from_millis(10))
+        .with_workers(2);
+    let server = Server::new(build_arch, cfg);
+    let handle = server.handle();
+    torsk::profiler::start();
+    let pend: Vec<_> = (0..8).map(|i| handle.submit(req_input(i)).unwrap()).collect();
+    for p in pend {
+        p.wait().expect("served");
+    }
+    // The live aggregation the serve metrics expose: per-op totals over
+    // the merged snapshot, while the profiler is still recording.
+    let totals = torsk::serve::ServeStats::op_totals();
+    let _ = torsk::profiler::stop();
+    let batch_spans = totals.get("serve:batch").copied().unwrap_or_default();
+    assert!(
+        batch_spans.count >= 1,
+        "serve worker spans must survive into the merged report: {totals:?}"
+    );
+    assert!(batch_spans.total_ns > 0);
+    let report = server.shutdown();
+    assert!(!report.timed_out, "{report}");
+}
